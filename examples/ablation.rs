@@ -1,0 +1,56 @@
+//! Table-2 ablation driver: which part of CTC-drafter buys what?
+//!
+//!   row 1 — linear heads + CE loss (Medusa draft module), Medusa verify
+//!   row 2 — transformer head + CTC loss, Medusa verify (CTC transform OFF:
+//!           raw candidates keep blanks/repeats, spoiling draft quality
+//!           exactly as the paper reports: β 3.56→3.02, γ 2.78→2.25)
+//!   row 3 — transformer head + CTC loss, CTC verify (the full method)
+//!
+//! Run: `cargo run --release --example ablation [-- --full]`
+
+use anyhow::Result;
+use ctcdraft::bench::eval::{engine_for, run_workload};
+use ctcdraft::bench::eval_scale;
+use ctcdraft::config::Method;
+use ctcdraft::util::{cli::Cli, render_table};
+use ctcdraft::workload;
+
+fn main() -> Result<()> {
+    let cli = Cli::new("ablation", "Table-2 model-structure ablation")
+        .opt("model", "model to evaluate", Some("vic-tiny"))
+        .flag("full", "paper-scale evaluation");
+    let args = cli.parse().unwrap_or_else(|u| {
+        println!("{u}");
+        std::process::exit(2)
+    });
+    let model = args.get_or("model", "vic-tiny").to_string();
+    let (per_cat, max_new) = eval_scale();
+    let qs = workload::mtbench(per_cat, 11);
+
+    let artifacts = ctcdraft::default_artifacts_dir();
+    let mut engine = engine_for(&artifacts, &model, Method::Vanilla)?;
+
+    // vanilla reference for γ
+    let vanilla = run_workload(&mut engine, &qs, max_new)?.summary;
+
+    let variants: [(&str, Method, bool); 3] = [
+        ("linear + CE (Medusa), Medusa verify", Method::Medusa, true),
+        ("transformer + CTC, Medusa verify (no transform)", Method::Ctc, false),
+        ("transformer + CTC, CTC verify (full)", Method::Ctc, true),
+    ];
+    let mut rows = Vec::new();
+    for (label, method, transform) in variants {
+        engine.set_method(method, transform);
+        let s = run_workload(&mut engine, &qs, max_new)?.summary;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2}x", s.gamma_vs(&vanilla)),
+            format!("{:.2}", s.beta()),
+        ]);
+    }
+    println!("Table-2 ablation on {model} ({} questions):\n", qs.len());
+    print!("{}", render_table(&["draft module + verify", "γ", "β"], &rows));
+    println!("\npaper: medusa 2.13x/2.58 · ctc-head+medusa-verify 2.25x/3.02 \
+              · full ctc 2.78x/3.56");
+    Ok(())
+}

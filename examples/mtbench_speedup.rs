@@ -1,0 +1,68 @@
+//! End-to-end validation driver (DESIGN.md "E2E"): serve the full MT-bench
+//! analog through the whole stack — tokenizer → chunked prefill → CTC draft
+//! → CTC transform → tree verify → accept — for every speculation method,
+//! and report the paper's Table-1 metrics (β, γ, tok/s) plus latency.
+//!
+//! Run:  cargo run --release --example mtbench_speedup -- --model vic-tiny
+//! Full: add `--full` for the paper-scale 80-question set.
+
+use anyhow::Result;
+use ctcdraft::bench::eval::{engine_for, run_workload};
+use ctcdraft::bench::{eval_scale, full_mode};
+use ctcdraft::config::Method;
+use ctcdraft::metrics::RunSummary;
+use ctcdraft::util::{cli::Cli, render_table};
+use ctcdraft::workload;
+
+fn main() -> Result<()> {
+    let cli = Cli::new("mtbench_speedup", "Table-1-style MT-bench evaluation")
+        .opt("model", "model to evaluate", Some("vic-tiny"))
+        .flag("full", "paper-scale 80 questions / 128 tokens");
+    let args = cli.parse().unwrap_or_else(|u| {
+        println!("{u}");
+        std::process::exit(2)
+    });
+    let model = args.get_or("model", "vic-tiny").to_string();
+    let (per_cat, max_new) = eval_scale();
+    let qs = workload::mtbench(per_cat, 7);
+    println!(
+        "MT-bench analog: {} questions × ≤{max_new} tokens on {model} \
+         ({} mode)\n",
+        qs.len(),
+        if full_mode() { "full" } else { "quick — pass --full for paper scale" }
+    );
+
+    let artifacts = ctcdraft::default_artifacts_dir();
+    let mut engine = engine_for(&artifacts, &model, Method::Vanilla)?;
+
+    let mut rows = Vec::new();
+    let mut vanilla: Option<RunSummary> = None;
+    for method in [Method::Vanilla, Method::Medusa, Method::Hydra, Method::Ctc] {
+        engine.set_method(method, true);
+        let t0 = std::time::Instant::now();
+        let outcome = run_workload(&mut engine, &qs, max_new)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let s = outcome.summary;
+        let gamma = vanilla.as_ref().map(|v| s.gamma_vs(v)).unwrap_or(1.0);
+        let gamma_wall = vanilla.as_ref().map(|v| s.gamma_wall_vs(v)).unwrap_or(1.0);
+        rows.push(vec![
+            method.name().to_string(),
+            format!("{:.2}x", gamma),
+            format!("{:.2}", s.beta()),
+            format!("{:.2}x", gamma_wall),
+            format!("{:.1}", s.total_tokens as f64 / wall),
+            format!("{}", s.total_tokens),
+            format!("{wall:.1}s"),
+        ]);
+        if method == Method::Vanilla {
+            vanilla = Some(s);
+        }
+    }
+    print!("{}", render_table(
+        &["method", "γ (device)", "β (tok/step)", "γ_wall (1-core)",
+          "tok/s", "tokens", "wall"],
+        &rows));
+    println!("\npaper (Vicuna-7B, Table 1): vanilla 1.00x/1.00, medusa \
+              2.13x/2.58, hydra 2.36x/3.04, ctc-drafter 2.78x/3.56");
+    Ok(())
+}

@@ -1,0 +1,84 @@
+//! Serving demo: start the TCP JSON-lines server in-process, fire a small
+//! concurrent client load at it, and report latency/throughput — the
+//! serving-paper E2E path (router → engine workers → PJRT).
+//!
+//! Run: `cargo run --release --example serve_and_query`
+
+use std::time::Instant;
+
+use anyhow::Result;
+use ctcdraft::config::{EngineConfig, Method};
+use ctcdraft::server::{Client, Server, ServerConfig};
+use ctcdraft::util::cli::Cli;
+use ctcdraft::workload;
+
+fn main() -> Result<()> {
+    let cli = Cli::new("serve_and_query", "server round-trip demo")
+        .opt("model", "model to serve", Some("vic-tiny"))
+        .opt("clients", "concurrent client threads", Some("3"))
+        .opt("requests", "requests per client", Some("2"))
+        .opt("max-new", "tokens per request", Some("32"));
+    let args = cli.parse().unwrap_or_else(|u| {
+        println!("{u}");
+        std::process::exit(2)
+    });
+    let n_clients = args.usize("clients", 3);
+    let per_client = args.usize("requests", 2);
+    let max_new = args.usize("max-new", 32);
+
+    let server = Server::start(ServerConfig {
+        addr: "127.0.0.1:0".into(), // pick a free port
+        workers: 1,
+        artifacts: ctcdraft::default_artifacts_dir(),
+        engine: EngineConfig {
+            model: args.get_or("model", "vic-tiny").to_string(),
+            method: Method::Ctc,
+            ..EngineConfig::default()
+        },
+    })?;
+    let addr = server.local_addr.to_string();
+    println!("server on {addr}; {n_clients} clients × {per_client} requests");
+
+    let questions = workload::mtbench(2, 42);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let qs: Vec<String> = (0..per_client)
+            .map(|r| questions[(c * per_client + r) % questions.len()].text.clone())
+            .collect();
+        handles.push(std::thread::spawn(move || -> Result<Vec<(usize, f64)>> {
+            let mut client = Client::connect(&addr)?;
+            client.ping()?;
+            let mut out = Vec::new();
+            for (i, q) in qs.iter().enumerate() {
+                let reply = client.generate((c * 100 + i) as i64, q, max_new)?;
+                out.push((reply.tokens, reply.ms));
+            }
+            Ok(out)
+        }));
+    }
+
+    let mut total_tokens = 0usize;
+    let mut latencies = Vec::new();
+    for h in handles {
+        for (tokens, ms) in h.join().expect("client thread")? {
+            total_tokens += tokens;
+            latencies.push(ms);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let p50 = latencies[latencies.len() / 2];
+    let p95 = latencies[(latencies.len() * 95 / 100).min(latencies.len() - 1)];
+
+    println!("\n{} requests, {} tokens in {:.1}s", latencies.len(), total_tokens, wall);
+    println!("throughput: {:.1} tok/s   latency p50 {:.0}ms  p95 {:.0}ms",
+             total_tokens as f64 / wall, p50, p95);
+
+    let mut client = Client::connect(&addr)?;
+    println!("router inflight after drain: {:?}", client.stats()?);
+    server.stop();
+    println!("server stopped cleanly");
+    Ok(())
+}

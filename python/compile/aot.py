@@ -1,0 +1,351 @@
+"""AOT driver: corpus → tokenizer → train → lower → artifacts/.
+
+Python runs exactly once (``make artifacts``); the rust coordinator is
+self-contained afterwards. Incremental: per-model checkpoints are reused on
+rebuild, and manifest.json is rewritten after every model so the rust side
+can start as soon as the first model lands.
+
+Usage:
+  python -m compile.aot --out ../artifacts [--models vic-tiny,lc2-small|all]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import constants as C
+from . import corpus as corpus_mod
+from . import heads as H
+from . import model as M
+from . import train as T
+from . import tokenizer as tok_mod
+from .export import arg_spec, to_hlo_text, write_manifest, write_tensors
+from .kernels.ctc_loss import ctc_neg_logp
+
+CTC_SCORE_BATCH = 16
+
+
+def log(msg: str) -> None:
+    print(f"[aot] {msg}", flush=True)
+    sys.stdout.flush()
+
+
+# ----------------------------------------------------------------- lowering
+def lower_step_graphs(cfg: dict, out_dir: str, model_name: str) -> dict:
+    graphs = {}
+    layers, h, dh, d = cfg["layers"], cfg["n_heads"], C.HEAD_DIM, cfg["d_model"]
+    fn, names = M.make_step_fn(cfg)
+    shapes = M.param_shapes(cfg)
+    for b in C.BATCH_SIZES:
+        for n in C.STEP_NS:
+            specs = [jax.ShapeDtypeStruct(shapes[nm], jnp.float32)
+                     for nm in names]
+            specs += [
+                jax.ShapeDtypeStruct((layers, b, C.LMAX, h, dh), jnp.float32),
+                jax.ShapeDtypeStruct((layers, b, C.LMAX, h, dh), jnp.float32),
+                jax.ShapeDtypeStruct((b, n), jnp.int32),
+                jax.ShapeDtypeStruct((b, n), jnp.int32),
+                jax.ShapeDtypeStruct((b, n, C.LMAX + n), jnp.float32),
+            ]
+            gname = f"step_b{b}_n{n}"
+            fname = f"{model_name}.{gname}.hlo.txt"
+            text = to_hlo_text(jax.jit(fn).lower(*specs))
+            open(os.path.join(out_dir, fname), "w").write(text)
+            graphs[gname] = {
+                "file": fname, "batch": b, "n": n,
+                "args": [arg_spec("weights", [len(names)], "list")] + [
+                    arg_spec("kcache", (layers, b, C.LMAX, h, dh), "f32"),
+                    arg_spec("vcache", (layers, b, C.LMAX, h, dh), "f32"),
+                    arg_spec("tokens", (b, n), "i32"),
+                    arg_spec("pos", (b, n), "i32"),
+                    arg_spec("bias", (b, n, C.LMAX + n), "f32"),
+                ],
+                "outputs": [
+                    arg_spec("logits", (b, n, C.VOCAB_SIZE), "f32"),
+                    arg_spec("k_new", (layers, b, n, h, dh), "f32"),
+                    arg_spec("v_new", (layers, b, n, h, dh), "f32"),
+                    arg_spec("hidden", (b, n, d), "f32"),
+                ],
+            }
+            log(f"  lowered {gname} ({len(text)} chars)")
+    return graphs
+
+
+def lower_head_graphs(cfg: dict, out_dir: str, model_name: str) -> dict:
+    d = cfg["d_model"]
+    graphs = {}
+    # ---- CTC draft head
+    fn, names = H.make_ctc_draft_fn(cfg)
+    hshapes = H.ctc_head_shapes(cfg)
+    for b in C.BATCH_SIZES:
+        specs = [jax.ShapeDtypeStruct(hshapes[nm], jnp.float32) for nm in names]
+        specs += [
+            jax.ShapeDtypeStruct((C.VOCAB_SIZE, d), jnp.float32),   # emb
+            jax.ShapeDtypeStruct((b, C.HIDDEN_WIN, d), jnp.float32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ]
+        gname = f"draft_ctc_b{b}"
+        fname = f"{model_name}.{gname}.hlo.txt"
+        open(os.path.join(out_dir, fname), "w").write(
+            to_hlo_text(jax.jit(fn).lower(*specs)))
+        graphs[gname] = {
+            "file": fname, "batch": b, "head": "ctc",
+            "args": [arg_spec("head_weights", [len(names)], "list"),
+                     arg_spec("emb", (C.VOCAB_SIZE, d), "f32"),
+                     arg_spec("window", (b, C.HIDDEN_WIN, d), "f32"),
+                     arg_spec("win_len", (b,), "i32")],
+            "outputs": [arg_spec("slot_logp",
+                                 (b, C.DRAFT_SLOTS, C.DRAFT_VOCAB), "f32")],
+        }
+        log(f"  lowered {gname}")
+    # ---- Medusa head
+    fn, names = H.make_medusa_draft_fn(cfg)
+    hshapes = H.medusa_head_shapes(cfg)
+    for b in C.BATCH_SIZES:
+        specs = [jax.ShapeDtypeStruct(hshapes[nm], jnp.float32) for nm in names]
+        specs += [jax.ShapeDtypeStruct((C.VOCAB_SIZE, d), jnp.float32),
+                  jax.ShapeDtypeStruct((b, d), jnp.float32)]
+        gname = f"draft_medusa_b{b}"
+        fname = f"{model_name}.{gname}.hlo.txt"
+        open(os.path.join(out_dir, fname), "w").write(
+            to_hlo_text(jax.jit(fn).lower(*specs)))
+        graphs[gname] = {
+            "file": fname, "batch": b, "head": "medusa",
+            "args": [arg_spec("head_weights", [len(names)], "list"),
+                     arg_spec("emb", (C.VOCAB_SIZE, d), "f32"),
+                     arg_spec("hidden", (b, d), "f32")],
+            "outputs": [arg_spec("logits",
+                                 (b, C.MEDUSA_HEADS, C.VOCAB_SIZE), "f32")],
+        }
+        log(f"  lowered {gname}")
+    # ---- Hydra head (in-graph beam expansion)
+    fn, names = H.make_hydra_draft_fn(cfg)
+    hshapes = H.hydra_head_shapes(cfg)
+    for b in C.BATCH_SIZES:
+        specs = [jax.ShapeDtypeStruct(hshapes[nm], jnp.float32) for nm in names]
+        specs += [jax.ShapeDtypeStruct((C.VOCAB_SIZE, d), jnp.float32),
+                  jax.ShapeDtypeStruct((b, d), jnp.float32),
+                  jax.ShapeDtypeStruct((b,), jnp.int32)]
+        gname = f"draft_hydra_b{b}"
+        fname = f"{model_name}.{gname}.hlo.txt"
+        open(os.path.join(out_dir, fname), "w").write(
+            to_hlo_text(jax.jit(fn).lower(*specs)))
+        graphs[gname] = {
+            "file": fname, "batch": b, "head": "hydra",
+            "args": [arg_spec("head_weights", [len(names)], "list"),
+                     arg_spec("emb", (C.VOCAB_SIZE, d), "f32"),
+                     arg_spec("hidden", (b, d), "f32"),
+                     arg_spec("base_tok", (b,), "i32")],
+            "outputs": [
+                arg_spec("beam_tokens",
+                         (b, C.HYDRA_BEAMS, C.HYDRA_STEPS), "i32"),
+                arg_spec("beam_logp", (b, C.HYDRA_BEAMS), "f32")],
+        }
+        log(f"  lowered {gname}")
+    return graphs
+
+
+def lower_ctc_score(out_dir: str) -> dict:
+    """Standalone Pallas CTC α-DP artifact (candidate rescoring)."""
+    b = CTC_SCORE_BATCH
+
+    def fn(logp, targets, tgt_len):
+        return (ctc_neg_logp(logp, targets, tgt_len, C.BLANK_ID),)
+
+    specs = [
+        jax.ShapeDtypeStruct((b, C.DRAFT_SLOTS, C.DRAFT_VOCAB), jnp.float32),
+        jax.ShapeDtypeStruct((b, C.CTC_TARGET_U), jnp.int32),
+        jax.ShapeDtypeStruct((b,), jnp.int32),
+    ]
+    gname = f"ctc_score_b{b}"
+    fname = f"{gname}.hlo.txt"
+    open(os.path.join(out_dir, fname), "w").write(
+        to_hlo_text(jax.jit(fn).lower(*specs)))
+    log(f"  lowered {gname}")
+    return {gname: {
+        "file": fname, "batch": b,
+        "args": [arg_spec("logp", (b, C.DRAFT_SLOTS, C.DRAFT_VOCAB), "f32"),
+                 arg_spec("targets", (b, C.CTC_TARGET_U), "i32"),
+                 arg_spec("tgt_len", (b,), "i32")],
+        "outputs": [arg_spec("nll", (b,), "f32")],
+    }}
+
+
+# ----------------------------------------------------------------- checkpoints
+def ckpt_path(out_dir, name):
+    return os.path.join(out_dir, f"ckpt-{name}.npz")
+
+
+def save_ckpt(out_dir, name, params):
+    np.savez(ckpt_path(out_dir, name),
+             **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_ckpt(out_dir, name):
+    path = ckpt_path(out_dir, name)
+    if not os.path.exists(path):
+        return None
+    data = np.load(path)
+    return {k: jnp.asarray(data[k]) for k in data.files}
+
+
+# ----------------------------------------------------------------- per-model build
+def build_model(model_name: str, out_dir: str, tokens_by_family: dict,
+                manifest: dict) -> None:
+    cfg = dict(C.MODELS[model_name])
+    tokens = tokens_by_family[cfg["family"]]
+    log(f"=== {model_name} (analog {cfg['analog']}) ===")
+
+    params = load_ckpt(out_dir, model_name)
+    if params is None:
+        t0 = time.time()
+        params, losses = T.train_base(
+            cfg, tokens, seed=zlib.crc32(model_name.encode()) % 2 ** 16,
+            log=log)
+        log(f"base trained in {time.time() - t0:.0f}s "
+            f"(loss {losses[0]:.3f} -> {losses[-1]:.3f})")
+        save_ckpt(out_dir, model_name, params)
+    else:
+        log("base checkpoint reused")
+
+    head_params = {}
+    for kind in ("ctc", "medusa", "hydra"):
+        hname = f"{model_name}.head-{kind}"
+        hp = load_ckpt(out_dir, hname)
+        if hp is None:
+            t0 = time.time()
+            hp, losses = T.train_head(
+                kind, cfg, params, tokens,
+                seed=zlib.crc32(hname.encode()) % 2 ** 16, log=log)
+            log(f"{kind} head trained in {time.time() - t0:.0f}s "
+                f"(loss {losses[0]:.3f} -> {losses[-1]:.3f})")
+            save_ckpt(out_dir, hname, hp)
+        else:
+            log(f"{kind} head checkpoint reused")
+        head_params[kind] = hp
+
+    # ---- weights
+    worder = M.weight_names(cfg)
+    wfile = f"{model_name}.tensors.bin"
+    write_tensors(os.path.join(out_dir, wfile),
+                  {k: np.asarray(v, np.float32) for k, v in params.items()},
+                  worder)
+    heads_meta = {}
+    head_orders = {"ctc": H.ctc_head_names(), "medusa": H.medusa_head_names(),
+                   "hydra": H.hydra_head_names()}
+    for kind, hp in head_params.items():
+        hfile = f"{model_name}.head-{kind}.tensors.bin"
+        write_tensors(os.path.join(out_dir, hfile),
+                      {k: np.asarray(v, np.float32) for k, v in hp.items()},
+                      head_orders[kind])
+        heads_meta[kind] = {"weights": hfile, "weight_order": head_orders[kind]}
+
+    # ---- graphs
+    graphs = {}
+    graphs.update(lower_step_graphs(cfg, out_dir, model_name))
+    graphs.update(lower_head_graphs(cfg, out_dir, model_name))
+
+    manifest["models"][model_name] = {
+        "config": cfg,
+        "weights": wfile,
+        "weight_order": worder,
+        "heads": heads_meta,
+        "graphs": graphs,
+    }
+
+
+# ----------------------------------------------------------------- main
+def base_manifest() -> dict:
+    return {
+        "version": C.MANIFEST_VERSION,
+        "constants": {
+            "vocab_size": C.VOCAB_SIZE, "blank_id": C.BLANK_ID,
+            "pad_id": C.PAD_ID, "bos_id": C.BOS_ID, "eos_id": C.EOS_ID,
+            "lmax": C.LMAX, "tree_n": C.TREE_N, "prefill_n": C.PREFILL_N,
+            "draft_slots": C.DRAFT_SLOTS, "ctc_target_u": C.CTC_TARGET_U,
+            "hidden_win": C.HIDDEN_WIN, "medusa_heads": C.MEDUSA_HEADS,
+            "hydra_steps": C.HYDRA_STEPS, "hydra_beams": C.HYDRA_BEAMS,
+            "head_dim": C.HEAD_DIM, "batch_sizes": list(C.BATCH_SIZES),
+            "step_ns": list(C.STEP_NS),
+            "ctc_score_batch": CTC_SCORE_BATCH,
+        },
+        "tokenizer": "vocab.json",
+        "chat_templates": {k: list(v) for k, v in C.CHAT_TEMPLATES.items()},
+        "models": {},
+        "kernels": {},
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="all",
+                    help="comma list or 'all'")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+
+    model_names = (list(C.MODELS) if args.models == "all"
+                   else args.models.split(","))
+    for m in model_names:
+        assert m in C.MODELS, m
+
+    # corpus + tokenizer (shared across families)
+    corpora = {}
+    for fam in ("vic", "lc2"):
+        cpath = os.path.join(out_dir, f"corpus-{fam}.txt")
+        if os.path.exists(cpath):
+            corpora[fam] = open(cpath).read()
+        else:
+            log(f"building corpus for family {fam}")
+            corpora[fam] = corpus_mod.build_corpus(fam, seed=0)
+            open(cpath, "w").write(corpora[fam])
+
+    vocab_path = os.path.join(out_dir, "vocab.json")
+    if os.path.exists(vocab_path):
+        bpe = tok_mod.ByteBpe.load(vocab_path)
+        log("tokenizer reused")
+    else:
+        log("training byte-BPE tokenizer")
+        bpe = tok_mod.train_bpe(corpora["vic"] + corpora["lc2"])
+        bpe.save(vocab_path)
+        log(f"tokenizer trained: vocab {bpe.vocab_size}")
+
+    tokens_by_family = {
+        fam: np.asarray(bpe.encode(text), np.int32)
+        for fam, text in corpora.items()
+    }
+    for fam, toks in tokens_by_family.items():
+        log(f"family {fam}: {len(toks)} tokens")
+
+    mpath = os.path.join(out_dir, "manifest.json")
+    manifest = base_manifest()
+    # keep already-built models when re-running with a subset
+    if os.path.exists(mpath):
+        old = json.load(open(mpath))
+        if old.get("version") == C.MANIFEST_VERSION:
+            manifest["models"].update(old.get("models", {}))
+            manifest["kernels"].update(old.get("kernels", {}))
+
+    manifest["kernels"].update(lower_ctc_score(out_dir))
+    write_manifest(mpath, manifest)
+
+    for m in model_names:
+        build_model(m, out_dir, tokens_by_family, manifest)
+        write_manifest(mpath, manifest)
+        log(f"manifest updated with {m}")
+
+    log("done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Shared constants for the CTC-drafter build pipeline.
+
+Everything in this file is mirrored into ``artifacts/manifest.json`` so the
+rust coordinator never has to hard-code a shape. Keep this the single source
+of truth on the python side.
+"""
+
+# ---------------------------------------------------------------- tokenizer
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+N_SPECIAL = 3
+N_BYTES = 256
+VOCAB_SIZE = 512  # specials + 256 byte tokens + BPE merges
+N_MERGES = VOCAB_SIZE - N_SPECIAL - N_BYTES  # 253
+
+# CTC blank lives *outside* the base vocabulary: the draft head predicts over
+# VOCAB_SIZE + 1 symbols, the base model only ever sees VOCAB_SIZE.
+BLANK_ID = VOCAB_SIZE
+DRAFT_VOCAB = VOCAB_SIZE + 1
+
+# ---------------------------------------------------------------- serving shapes
+LMAX = 384          # KV-cache capacity per sequence (tokens)
+TREE_N = 32         # token-tree nodes verified per speculative step
+PREFILL_N = 64      # chunked-prefill width (tokens per step-graph call)
+DRAFT_SLOTS = 8     # CTC alignment length T' (draft positions incl. blanks)
+CTC_TARGET_U = 6    # max collapsed target length used in the CTC loss
+HIDDEN_WIN = 16     # trailing hidden-state window fed to the CTC draft module
+MEDUSA_HEADS = 4    # offsets predicted by the Medusa baseline head
+HYDRA_STEPS = 4     # sequential depth of the Hydra baseline head
+HYDRA_BEAMS = 8     # beam width of the in-graph Hydra expansion
+BATCH_SIZES = (1, 4)
+STEP_NS = (1, TREE_N, PREFILL_N)
+
+# ---------------------------------------------------------------- training
+TRAIN_SEQ = 96      # training sequence length
+TRAIN_BATCH = 8
+LR_BASE = 3e-4
+LR_HEAD = 3e-4      # paper uses 3e-5 on a pretrained 7B; our from-scratch
+                    # models want a larger step. Grad-clip matches the paper.
+GRAD_CLIP = 0.5     # paper: "setting the clipping threshold to 0.5"
+ROPE_THETA = 10000.0
+
+# ---------------------------------------------------------------- model zoo
+# Analogs for the paper's base models (see DESIGN.md §2). All head_dim=32.
+MODELS = {
+    "vic-tiny": dict(family="vic", analog="Vicuna-7B", layers=2, d_model=128,
+                     n_heads=4, d_ff=384, act="swiglu"),
+    "vic-small": dict(family="vic", analog="Vicuna-13B", layers=4, d_model=160,
+                      n_heads=5, d_ff=480, act="swiglu"),
+    "vic-base": dict(family="vic", analog="Vicuna-33B", layers=6, d_model=192,
+                     n_heads=6, d_ff=576, act="swiglu"),
+    "lc2-tiny": dict(family="lc2", analog="LLaMA-2-Chat-7B", layers=2,
+                     d_model=128, n_heads=4, d_ff=384, act="gelu"),
+    "lc2-small": dict(family="lc2", analog="LLaMA-2-Chat-13B", layers=4,
+                      d_model=160, n_heads=5, d_ff=480, act="gelu"),
+}
+HEAD_DIM = 32
+
+# Chat templates per family (the "distinct inference paradigms" of Fig 4).
+CHAT_TEMPLATES = {
+    "vic": ("USER: {q}\nASSISTANT: {a}\n", "USER: {q}\nASSISTANT:"),
+    "lc2": ("[INST] {q} [/INST] {a}\n", "[INST] {q} [/INST]"),
+}
+
+MTBENCH_CATEGORIES = (
+    "writing", "roleplay", "reasoning", "math",
+    "coding", "extraction", "stem", "humanities",
+)
+
+MANIFEST_VERSION = 1
+TENSORS_MAGIC = b"CTCW"

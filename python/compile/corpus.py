@@ -1,0 +1,219 @@
+"""Training-corpus construction.
+
+The paper trains draft heads on ShareGPT (multi-turn chat). We have no
+network access, so the corpus is built from two real local sources plus a
+seeded synthetic dialogue generator whose question distribution matches the
+rust-side evaluation workload (``rust/src/workload``):
+
+  1. prose harvested from the python stdlib (docstrings — real English text),
+  2. real code snippets from the stdlib (feeds the "coding" category),
+  3. synthetic multi-turn Q/A dialogues across the 8 MT-bench categories,
+     chat-templated per model family ("vic" vs "lc2").
+
+Everything is deterministic given the seed.
+"""
+
+from __future__ import annotations
+
+import ast
+import glob
+import os
+import random
+import sysconfig
+
+from . import constants as C
+
+# Words banks for template expansion; deliberately small so a ~1M-param model
+# can actually learn the distribution (that is the point: acceptance-rate
+# dynamics need a base model whose argmax a small head can imitate).
+_TOPICS = ["the ocean", "a small village", "the night sky", "an old library",
+           "a mountain trail", "the harvest season", "a river crossing",
+           "the city market", "a winter storm", "an ancient map"]
+_QUALITIES = ["quiet", "bright", "ancient", "restless", "gentle", "vast",
+              "hidden", "familiar", "distant", "golden"]
+_ROLES = ["a ship captain", "a museum guide", "a village doctor",
+          "a night watchman", "a railway engineer", "a lighthouse keeper"]
+_FACTS = {
+    "stem": [("why is the sky blue",
+              "Sunlight scatters off air molecules, and blue light scatters "
+              "more strongly than red light, so the sky appears blue."),
+             ("what causes tides",
+              "Tides are caused by the gravitational pull of the moon and "
+              "the sun on the ocean."),
+             ("how do plants make food",
+              "Plants use photosynthesis: they turn sunlight, water and "
+              "carbon dioxide into sugar and oxygen."),
+             ("what is an atom",
+              "An atom is the smallest unit of matter, made of protons, "
+              "neutrons and electrons."),
+             ("why do seasons change",
+              "Seasons change because the earth's axis is tilted as it "
+              "orbits the sun.")],
+    "humanities": [("who writes history",
+                    "History is written by historians who study documents, "
+                    "objects and accounts from the past."),
+                   ("what is a myth",
+                    "A myth is a traditional story that explains the beliefs "
+                    "or customs of a people."),
+                   ("why do cities form near rivers",
+                    "Rivers provide water, food and transport, so early "
+                    "cities grew along their banks."),
+                   ("what is a constitution",
+                    "A constitution is the set of basic rules by which a "
+                    "country is governed.")],
+}
+
+
+def _sentence(rng: random.Random) -> str:
+    t = rng.choice(_TOPICS)
+    q = rng.choice(_QUALITIES)
+    forms = [
+        f"The {q} light settled over {t}.",
+        f"People spoke of {t} as something {q}.",
+        f"In the morning, {t} seemed {q} and still.",
+        f"Nothing about {t} felt {q} that day.",
+        f"She remembered {t}, {q} as ever.",
+    ]
+    return rng.choice(forms)
+
+
+def _gen_writing(rng):
+    t = rng.choice(_TOPICS)
+    q = f"Write a short paragraph about {t}."
+    a = " ".join(_sentence(rng) for _ in range(rng.randint(3, 5)))
+    return q, a
+
+
+def _gen_roleplay(rng):
+    r = rng.choice(_ROLES)
+    q = f"Pretend you are {r}. Introduce yourself."
+    a = (f"Greetings. I am {r}, and I have held this post for many years. "
+         f"Ask me anything about my work and I will answer plainly.")
+    return q, a
+
+
+def _gen_reasoning(rng):
+    a1, a2 = rng.randint(2, 9), rng.randint(2, 9)
+    q = (f"If a box holds {a1} red balls and {a2} blue balls, "
+         f"how many balls are in the box?")
+    a = (f"There are {a1} red balls and {a2} blue balls, "
+         f"so the box holds {a1} + {a2} = {a1 + a2} balls in total.")
+    return q, a
+
+
+def _gen_math(rng):
+    kind = rng.randrange(3)
+    if kind == 0:
+        x, y = rng.randint(10, 99), rng.randint(10, 99)
+        q = f"What is {x} + {y}?"
+        a = f"{x} + {y} = {x + y}."
+    elif kind == 1:
+        x, y = rng.randint(2, 12), rng.randint(2, 12)
+        q = f"What is {x} times {y}?"
+        a = f"{x} times {y} is {x * y}."
+    else:
+        n, p = rng.randint(3, 9), rng.randint(2, 9)
+        total = n * p
+        q = (f"A farmer packs {total} apples into boxes of {p}. "
+             f"How many boxes does he fill?")
+        a = (f"Each box holds {p} apples, so he fills "
+             f"{total} / {p} = {n} boxes.")
+    return q, a
+
+
+def _gen_coding(rng):
+    fn = rng.choice(["add", "double", "square", "negate", "half"])
+    body = {
+        "add": "def add(a, b):\n    return a + b",
+        "double": "def double(x):\n    return x * 2",
+        "square": "def square(x):\n    return x * x",
+        "negate": "def negate(x):\n    return -x",
+        "half": "def half(x):\n    return x / 2",
+    }[fn]
+    q = f"Write a python function named {fn}."
+    a = f"Here is the function:\n```python\n{body}\n```"
+    return q, a
+
+
+def _gen_extraction(rng):
+    name = rng.choice(["Ada", "Bruno", "Clara", "Daniel", "Elena"])
+    city = rng.choice(["Lisbon", "Oslo", "Kyoto", "Quito", "Cairo"])
+    year = rng.randint(1990, 2020)
+    q = (f"Extract the name, city and year from: '{name} moved to {city} "
+         f"in {year} to study music.'")
+    a = f"Name: {name}. City: {city}. Year: {year}."
+    return q, a
+
+
+def _gen_fact(rng, cat):
+    q, a = rng.choice(_FACTS[cat])
+    return q.capitalize() + "?", a
+
+
+_GENERATORS = {
+    "writing": _gen_writing,
+    "roleplay": _gen_roleplay,
+    "reasoning": _gen_reasoning,
+    "math": _gen_math,
+    "coding": _gen_coding,
+    "extraction": _gen_extraction,
+    "stem": lambda rng: _gen_fact(rng, "stem"),
+    "humanities": lambda rng: _gen_fact(rng, "humanities"),
+}
+
+
+def gen_dialogue(rng: random.Random, category: str) -> tuple[str, str]:
+    """One (question, answer) pair for an MT-bench-style category."""
+    return _GENERATORS[category](rng)
+
+
+def harvest_stdlib_prose(max_bytes: int = 150_000) -> str:
+    """Docstring prose from the python stdlib — real English text."""
+    std = sysconfig.get_paths()["stdlib"]
+    out, total = [], 0
+    for path in sorted(glob.glob(os.path.join(std, "*.py"))):
+        try:
+            tree = ast.parse(open(path, encoding="utf-8", errors="ignore").read())
+        except SyntaxError:
+            continue
+        doc = ast.get_docstring(tree)
+        if doc:
+            doc = " ".join(doc.split())
+            out.append(doc)
+            total += len(doc)
+        if total >= max_bytes:
+            break
+    return "\n".join(out)[:max_bytes]
+
+
+def harvest_stdlib_code(max_bytes: int = 60_000) -> str:
+    """Short real code snippets (defs) from small stdlib modules."""
+    std = sysconfig.get_paths()["stdlib"]
+    picks = ["bisect.py", "heapq.py", "keyword.py", "stat.py", "token.py"]
+    out, total = [], 0
+    for name in picks:
+        path = os.path.join(std, name)
+        if not os.path.exists(path):
+            continue
+        text = open(path, encoding="utf-8", errors="ignore").read()
+        out.append(text)
+        total += len(text)
+        if total >= max_bytes:
+            break
+    return "\n".join(out)[:max_bytes]
+
+
+def build_corpus(family: str, seed: int = 0, target_bytes: int = 600_000) -> str:
+    """Full training corpus for one model family, chat-templated."""
+    tmpl, _ = C.CHAT_TEMPLATES[family]
+    rng = random.Random(seed * 7919 + (13 if family == "lc2" else 0))
+    parts = [harvest_stdlib_prose(), harvest_stdlib_code()]
+    total = sum(len(p) for p in parts)
+    cats = list(C.MTBENCH_CATEGORIES)
+    while total < target_bytes:
+        cat = rng.choice(cats)
+        q, a = gen_dialogue(rng, cat)
+        d = tmpl.format(q=q, a=a)
+        parts.append(d)
+        total += len(d)
+    return "\n".join(parts)

@@ -1,0 +1,90 @@
+"""Artifact writers: tensors.bin, vocab.json, manifest.json, HLO text.
+
+tensors.bin layout (little-endian), mirrored by ``rust/src/runtime/weights.rs``
+and by ``read_tensors`` below (used in tests):
+
+  magic  b"CTCW" | u32 version | u32 tensor_count
+  per tensor:
+    u16 name_len | name (utf-8)
+    u8 dtype (0 = f32, 1 = i32)
+    u8 ndim | u32 dims[ndim]
+    u64 payload_bytes | payload (raw LE)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import struct
+from typing import Dict, List
+
+import numpy as np
+
+from . import constants as C
+
+DTYPE_CODES = {np.dtype(np.float32): 0, np.dtype(np.int32): 1}
+CODE_DTYPES = {0: np.float32, 1: np.int32}
+
+
+def write_tensors(path: str, tensors: Dict[str, np.ndarray],
+                  order: List[str]) -> None:
+    assert set(order) == set(tensors), (sorted(order), sorted(tensors))
+    with open(path, "wb") as f:
+        f.write(C.TENSORS_MAGIC)
+        f.write(struct.pack("<II", 1, len(order)))
+        for name in order:
+            arr = np.ascontiguousarray(tensors[name])
+            code = DTYPE_CODES[arr.dtype]
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", code, arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            payload = arr.tobytes()
+            f.write(struct.pack("<Q", len(payload)))
+            f.write(payload)
+
+
+def read_tensors(path: str) -> Dict[str, np.ndarray]:
+    """Python mirror of the rust loader — used by tests to validate files."""
+    out: Dict[str, np.ndarray] = {}
+    with open(path, "rb") as f:
+        magic = f.read(4)
+        assert magic == C.TENSORS_MAGIC, magic
+        version, count = struct.unpack("<II", f.read(8))
+        assert version == 1
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", f.read(2))
+            name = f.read(nlen).decode("utf-8")
+            code, ndim = struct.unpack("<BB", f.read(2))
+            dims = struct.unpack(f"<{ndim}I", f.read(4 * ndim)) if ndim else ()
+            (nbytes,) = struct.unpack("<Q", f.read(8))
+            data = np.frombuffer(f.read(nbytes), dtype=CODE_DTYPES[code])
+            out[name] = data.reshape(dims)
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """HLO *text* interchange (not .serialize(); see DESIGN.md §1)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def arg_spec(name: str, shape, dtype: str) -> dict:
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+def write_manifest(path: str, manifest: dict) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    os.replace(tmp, path)
+
+
+def load_manifest(path: str) -> dict:
+    return json.load(open(path))

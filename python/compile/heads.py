@@ -1,0 +1,231 @@
+"""Draft modules (Layer 2): CTC-drafter head + Medusa/Hydra baselines.
+
+CTC head (the paper's contribution, §3.1): ONE transformer layer whose
+queries are learned "slot" embeddings (one per alignment position, S=8) that
+cross-attend to the trailing window of base-model hidden states. Output
+distributions live over V+1 symbols (base vocab + blank, blank LAST) and are
+trained with the sequence-level CTC loss.
+
+Medusa head (baseline, Cai et al.): K independent residual-SiLU linear
+heads, offset i predicts the token i+1 steps ahead. Token-level CE loss.
+
+Hydra head (baseline, Ankner et al.): a sequentially-dependent MLP that
+consumes the previous draft token's embedding; the AOT graph runs the beam
+expansion *inside* JAX so the rust hot path gets whole candidate beams in
+one call.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import constants as C
+from .kernels.ref import NEG_INF, attention_ref
+from .kernels.tree_attention import tree_attention
+from .model import rmsnorm
+
+Params = Dict[str, jax.Array]
+
+
+# ================================================================= CTC head
+def ctc_head_names() -> List[str]:
+    return ["slot_emb", "ln_q", "wq", "wk", "wv", "wo",
+            "ln2", "w_up", "w_down", "ln_f", "w_blank"]
+
+
+def init_ctc_head(cfg: dict, key) -> Params:
+    d = cfg["d_model"]
+    f = 2 * d
+    ks = jax.random.split(key, 8)
+
+    def dense(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    return {
+        "slot_emb": jax.random.normal(ks[0], (C.DRAFT_SLOTS, d)) * 0.02,
+        "ln_q": jnp.ones((d,)),
+        "wq": dense(ks[1], d, (d, d)),
+        "wk": dense(ks[2], d, (d, d)),
+        "wv": dense(ks[3], d, (d, d)),
+        "wo": dense(ks[4], d, (d, d)),
+        "ln2": jnp.ones((d,)),
+        "w_up": dense(ks[5], d, (d, f)),
+        "w_down": dense(ks[6], f, (f, d)),
+        "ln_f": jnp.ones((d,)),
+        "w_blank": dense(ks[7], d, (d,)),
+    }
+
+
+def ctc_head_shapes(cfg: dict) -> Dict[str, tuple]:
+    d = cfg["d_model"]
+    return {"slot_emb": (C.DRAFT_SLOTS, d), "ln_q": (d,), "wq": (d, d),
+            "wk": (d, d), "wv": (d, d), "wo": (d, d), "ln2": (d,),
+            "w_up": (d, 2 * d), "w_down": (2 * d, d), "ln_f": (d,),
+            "w_blank": (d,)}
+
+
+def ctc_head_forward(hp: Params, emb, cfg: dict, window, win_len,
+                     use_kernel: bool = False):
+    """window [B, W, D] (right-aligned: the last win_len rows are valid,
+    window[:, -1] is the hidden state of the newest accepted token).
+    Returns slot log-probs [B, S, V+1] (blank last).
+    """
+    b, w, d = window.shape
+    h_heads, dh = cfg["n_heads"], C.HEAD_DIM
+    s = C.DRAFT_SLOTS
+    h_last = window[:, -1]
+    x0 = hp["slot_emb"][None] + h_last[:, None, :]          # [B, S, D]
+    hn = rmsnorm(x0, hp["ln_q"])
+    q = (hn @ hp["wq"]).reshape(b, s, h_heads, dh)
+    k = (window @ hp["wk"]).reshape(b, w, h_heads, dh)
+    v = (window @ hp["wv"]).reshape(b, w, h_heads, dh)
+    # right-aligned validity mask
+    j = jnp.arange(w)[None, :]
+    valid = j >= (w - win_len[:, None])
+    bias = jnp.where(valid, 0.0, NEG_INF)[:, None, :]        # [B, 1, W]
+    bias = jnp.broadcast_to(bias, (b, s, w))
+    attn = tree_attention if use_kernel else attention_ref
+    att = attn(q, k, v, bias).reshape(b, s, d)
+    x = x0 + att @ hp["wo"]
+    x = x + jax.nn.silu(rmsnorm(x, hp["ln2"]) @ hp["w_up"]) @ hp["w_down"]
+    h = rmsnorm(x, hp["ln_f"])
+    logit_v = h @ emb.T                                       # [B, S, V]
+    logit_b = (h @ hp["w_blank"])[..., None]                  # [B, S, 1]
+    return jax.nn.log_softmax(jnp.concatenate([logit_v, logit_b], -1), -1)
+
+
+def make_ctc_draft_fn(cfg: dict, use_kernel: bool = True):
+    """Flat-arg AOT wrapper: (head w..., emb, window, win_len) -> logp."""
+    names = ctc_head_names()
+
+    def fn(*args):
+        hp = dict(zip(names, args[: len(names)]))
+        emb, window, win_len = args[len(names):]
+        return (ctc_head_forward(hp, emb, cfg, window, win_len,
+                                 use_kernel=use_kernel),)
+
+    return fn, names
+
+
+# ================================================================= Medusa head
+def medusa_head_names() -> List[str]:
+    return ["w1"]
+
+
+def init_medusa_head(cfg: dict, key) -> Params:
+    d = cfg["d_model"]
+    # residual blocks initialized near-zero so head starts as identity
+    return {"w1": jax.random.normal(key, (C.MEDUSA_HEADS, d, d)) * 0.01}
+
+
+def medusa_head_shapes(cfg: dict) -> Dict[str, tuple]:
+    d = cfg["d_model"]
+    return {"w1": (C.MEDUSA_HEADS, d, d)}
+
+
+def medusa_head_forward(hp: Params, emb, hidden):
+    """hidden [B, D] -> logits [B, K, V] (head i predicts offset i+1)."""
+    h = hidden[:, None, :] + jax.nn.silu(
+        jnp.einsum("bd,kde->bke", hidden, hp["w1"]))
+    return h @ emb.T
+
+
+def make_medusa_draft_fn(cfg: dict):
+    names = medusa_head_names()
+
+    def fn(*args):
+        hp = dict(zip(names, args[: len(names)]))
+        emb, hidden = args[len(names):]
+        return (medusa_head_forward(hp, emb, hidden),)
+
+    return fn, names
+
+
+# ================================================================= Hydra head
+def hydra_head_names() -> List[str]:
+    return ["w1", "w2"]
+
+
+def init_hydra_head(cfg: dict, key) -> Params:
+    d = cfg["d_model"]
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": jax.random.normal(k1, (2 * d, d)) / jnp.sqrt(2 * d),
+        "w2": jax.random.normal(k2, (d, d)) * 0.01,
+    }
+
+
+def hydra_head_shapes(cfg: dict) -> Dict[str, tuple]:
+    d = cfg["d_model"]
+    return {"w1": (2 * d, d), "w2": (d, d)}
+
+
+def topk_manual(x, k):
+    """top-k via iterated argmax — `lax.top_k` lowers to an HLO `topk` op
+    (with a `largest` attribute) that xla_extension 0.5.1's text parser
+    rejects, so draft graphs roll their own. x [..., n] -> (vals, idxs)."""
+    vals, idxs = [], []
+    cur = x
+    n = x.shape[-1]
+    for _ in range(k):
+        i = jnp.argmax(cur, axis=-1)
+        v = jnp.take_along_axis(cur, i[..., None], axis=-1)[..., 0]
+        vals.append(v)
+        idxs.append(i)
+        mask = jax.nn.one_hot(i, n, dtype=bool)
+        cur = jnp.where(mask, -jnp.inf, cur)
+    return jnp.stack(vals, -1), jnp.stack(idxs, -1)
+
+
+def hydra_step(hp: Params, emb, state, tok):
+    """state [..., D], tok [...] int -> (new_state, logits [..., V])."""
+    inp = jnp.concatenate([state, emb[tok]], axis=-1)
+    u = state + jax.nn.silu(inp @ hp["w1"]) @ hp["w2"]
+    return u, u @ emb.T
+
+
+def hydra_beam_forward(hp: Params, emb, hidden, base_tok):
+    """In-graph beam expansion.
+
+    hidden [B, D] (state at the newest accepted token), base_tok [B] (that
+    token's id). Returns (beam_tokens [B, K, S], beam_logp [B, K]) — K beams
+    of S sequentially-drafted tokens.
+    """
+    b, d = hidden.shape
+    k_beams, steps = C.HYDRA_BEAMS, C.HYDRA_STEPS
+    state, logits = hydra_step(hp, emb, hidden, base_tok)
+    logp = jax.nn.log_softmax(logits, -1)                   # [B, V]
+    top_lp, top_tok = topk_manual(logp, k_beams)            # [B, K]
+    states = jnp.broadcast_to(state[:, None, :], (b, k_beams, d))
+    toks = jnp.zeros((b, k_beams, steps), jnp.int32)
+    toks = toks.at[:, :, 0].set(top_tok)
+    beam_lp = top_lp
+    for step_i in range(1, steps):
+        prev_tok = toks[:, :, step_i - 1]
+        states, logits = hydra_step(hp, emb, states, prev_tok)  # [B,K,V]
+        lp = jax.nn.log_softmax(logits, -1)
+        cand = beam_lp[:, :, None] + lp                     # [B, K, V]
+        v = cand.shape[-1]
+        flat = cand.reshape(b, k_beams * v)
+        beam_lp, idx = topk_manual(flat, k_beams)           # [B, K]
+        parent = idx // v
+        tok = (idx % v).astype(jnp.int32)
+        toks = jnp.take_along_axis(toks, parent[:, :, None], axis=1)
+        toks = toks.at[:, :, step_i].set(tok)
+        states = jnp.take_along_axis(states, parent[:, :, None], axis=1)
+    return toks, beam_lp
+
+
+def make_hydra_draft_fn(cfg: dict):
+    names = hydra_head_names()
+
+    def fn(*args):
+        hp = dict(zip(names, args[: len(names)]))
+        emb, hidden, base_tok = args[len(names):]
+        toks, lp = hydra_beam_forward(hp, emb, hidden, base_tok)
+        return (toks, lp)
+
+    return fn, names

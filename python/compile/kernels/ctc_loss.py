@@ -1,0 +1,113 @@
+"""Pallas CTC forward (α-recursion) kernel — Layer 1.
+
+The sequence-level CTC objective (paper Eq. 6–8) sums the probability of
+every alignment that collapses to the target. The α-recursion DP over the
+blank-extended target lattice computes that sum in O(T·S).
+
+Two consumers:
+  * training uses the autodiff-able jnp reference (kernels/ref.py); this
+    kernel is asserted equal to it by pytest/hypothesis,
+  * the standalone ``ctc_score`` artifact (see aot.py) exposes the kernel to
+    the rust coordinator for draft-candidate rescoring and for the
+    micro-benchmarks.
+
+The lattice dimension S = 2U+1 is tiny (13 for U=6); the kernel therefore
+tiles over the *batch* and keeps the whole lattice in registers/VMEM, with
+the T-step scan as the sequential dimension — the same structure a Mosaic
+lowering would pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import ctc_extend_targets
+
+NEG_INF = -1e9
+
+
+def _ctc_kernel(logp_ref, ext_ref, vlen_ref, out_ref):
+    """One batch element per grid step.
+
+    logp_ref: [T, V+1] log-probs
+    ext_ref:  [S] blank-extended targets (S = 2U+1)
+    vlen_ref: [1] valid lattice length (2*tgt_len+1)
+    out_ref:  [1] nll
+    """
+    t_steps = logp_ref.shape[0]
+    s = ext_ref.shape[0]
+    ext = ext_ref[...]
+    valid_s = vlen_ref[0]
+    idx = jax.lax.iota(jnp.int32, s)
+
+    blank = logp_ref.shape[1] - 1  # blank is always the last symbol
+    skip_ok = jnp.concatenate([
+        jnp.zeros((2,), dtype=bool),
+        (ext[2:] != blank) & (ext[2:] != ext[:-2]),
+    ])
+
+    lp0 = logp_ref[0, :]
+    alpha = jnp.where(idx == 0, lp0[ext[0]], NEG_INF)
+    alpha = jnp.where((idx == 1) & (valid_s > 1), lp0[ext[1]], alpha)
+
+    def step(t, alpha):
+        lp_t = logp_ref[t, :][ext]                       # gather [S]
+        prev1 = jnp.concatenate([jnp.full((1,), NEG_INF), alpha[:-1]])
+        prev2 = jnp.concatenate([jnp.full((2,), NEG_INF), alpha[:-2]])
+        prev2 = jnp.where(skip_ok, prev2, NEG_INF)
+        m = jnp.maximum(alpha, jnp.maximum(prev1, prev2))
+        m_safe = jnp.maximum(m, NEG_INF / 2)
+        tot = (jnp.exp(alpha - m_safe) + jnp.exp(prev1 - m_safe)
+               + jnp.exp(prev2 - m_safe))
+        new = m_safe + jnp.log(jnp.maximum(tot, 1e-30)) + lp_t
+        new = jnp.where(idx < valid_s, new, NEG_INF)
+        return new
+
+    alpha = jax.lax.fori_loop(1, t_steps, step, alpha)
+
+    last_i = jnp.maximum(valid_s - 1, 0)
+    last = jnp.sum(jnp.where(idx == last_i, alpha, 0.0))
+    last_ok = jnp.sum(jnp.where(idx == last_i, 1.0, 0.0)) > 0
+    last = jnp.where(last_ok, last, NEG_INF)
+    prev_i = valid_s - 2
+    prev = jnp.sum(jnp.where(idx == prev_i, alpha, 0.0))
+    prev = jnp.where(valid_s >= 2, prev, NEG_INF)
+    m = jnp.maximum(last, prev)
+    m_safe = jnp.maximum(m, NEG_INF / 2)
+    ll = m_safe + jnp.log(jnp.maximum(
+        jnp.exp(last - m_safe) + jnp.exp(prev - m_safe), 1e-30))
+    out_ref[0] = -ll
+
+
+@functools.partial(jax.jit, static_argnames=("blank_id", "interpret"))
+def ctc_neg_logp(logp, targets, tgt_len, blank_id, interpret=True):
+    """Batched CTC nll via the Pallas kernel.
+
+    logp:    [B, T, V+1] log-probabilities (blank must be the LAST column)
+    targets: [B, U] target ids
+    tgt_len: [B] valid target lengths
+    returns  [B] nll
+    """
+    assert blank_id == logp.shape[-1] - 1, "kernel expects blank last"
+    b, t_steps, _ = logp.shape
+    ext = ctc_extend_targets(targets.astype(jnp.int32), blank_id)  # [B, S]
+    s = ext.shape[-1]
+    vlen = (2 * tgt_len.astype(jnp.int32) + 1).reshape(b, 1)
+
+    out = pl.pallas_call(
+        _ctc_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, t_steps, logp.shape[-1]), lambda i: (i, 0, 0)),
+            pl.BlockSpec((None, s), lambda i: (i, 0)),
+            pl.BlockSpec((None, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, 1), jnp.float32),
+        interpret=interpret,
+    )(logp.astype(jnp.float32), ext, vlen)
+    return out[:, 0]

@@ -1,0 +1,122 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: pytest/hypothesis sweep shapes and
+assert the Pallas (interpret=True) kernels match these to float tolerance.
+They are also what the training graphs use when autodiff is needed.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e9
+
+
+def attention_ref(q, k, v, bias, scale=None):
+    """Masked multi-head attention, the oracle for tree_attention.
+
+    q:    [B, N, H, Dh]
+    k, v: [B, M, H, Dh]
+    bias: [B, N, M] additive mask (-1e9 for masked)
+    out:  [B, N, H, Dh]
+    """
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = jnp.einsum("bnhd,bmhd->bhnm", q, k) * scale
+    scores = scores + bias[:, None, :, :]
+    # safe softmax: rows that are fully masked produce zeros, not NaN
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    m = jnp.maximum(m, NEG_INF / 2)
+    e = jnp.exp(scores - m)
+    e = jnp.where(scores <= NEG_INF / 2, 0.0, e)
+    denom = jnp.sum(e, axis=-1, keepdims=True)
+    p = e / jnp.maximum(denom, 1e-30)
+    return jnp.einsum("bhnm,bmhd->bnhd", p, v)
+
+
+def ctc_extend_targets(targets, blank_id):
+    """Interleave blanks: y_1..y_U -> (eps, y_1, eps, ..., y_U, eps)."""
+    u = targets.shape[-1]
+    ext = jnp.full(targets.shape[:-1] + (2 * u + 1,), blank_id,
+                   dtype=targets.dtype)
+    return ext.at[..., 1::2].set(targets)
+
+
+def ctc_neg_logp_ref(logp, targets, tgt_len, blank_id):
+    """CTC negative log-likelihood (Graves et al. 2006), single example.
+
+    logp:    [T, V+1] log-probabilities per alignment slot
+    targets: [U] collapsed target ids (padded arbitrarily past tgt_len)
+    tgt_len: scalar int, number of valid targets (may be 0)
+    Returns scalar nll = -log sum_{a in beta^-1(y)} p(a).
+    """
+    u = targets.shape[0]
+    ext = ctc_extend_targets(targets, blank_id)       # [2U+1]
+    s = 2 * u + 1
+    valid_s = 2 * tgt_len + 1
+
+    ext_lp = logp[:, ext]                              # [T, S]
+
+    # can we skip from s-2 to s (only when ext[s] != blank and != ext[s-2])
+    skip_ok = jnp.concatenate([
+        jnp.zeros((2,), dtype=bool),
+        (ext[2:] != blank_id) & (ext[2:] != ext[:-2]),
+    ])
+
+    neg = jnp.float32(NEG_INF)
+    idx = jnp.arange(s)
+    alpha = jnp.where(idx == 0, ext_lp[0, 0], neg)
+    alpha = jnp.where((idx == 1) & (valid_s > 1), ext_lp[0, 1], alpha)
+
+    def step(alpha, lp_t):
+        prev1 = jnp.concatenate([jnp.array([neg]), alpha[:-1]])
+        prev2 = jnp.concatenate([jnp.array([neg, neg]), alpha[:-2]])
+        prev2 = jnp.where(skip_ok, prev2, neg)
+        stacked = jnp.stack([alpha, prev1, prev2])
+        new = jax.nn.logsumexp(stacked, axis=0) + lp_t
+        new = jnp.where(idx < valid_s, new, neg)
+        return new, None
+
+    alpha, _ = jax.lax.scan(step, alpha, ext_lp[1:])
+    # final prob mass sits on the last two lattice states
+    last = alpha[jnp.maximum(valid_s - 1, 0)]
+    last2 = jnp.where(valid_s >= 2, alpha[jnp.maximum(valid_s - 2, 0)], neg)
+    ll = jnp.logaddexp(last, last2)
+    return -ll
+
+
+def ctc_neg_logp_batch_ref(logp, targets, tgt_len, blank_id):
+    """vmapped oracle: logp [B,T,V+1], targets [B,U], tgt_len [B] -> [B]."""
+    return jax.vmap(lambda a, b, c: ctc_neg_logp_ref(a, b, c, blank_id))(
+        logp, targets, tgt_len)
+
+
+def ctc_brute_force_neg_logp(logp, targets, blank_id):
+    """Exponential enumeration of all alignments — tiny cases only.
+
+    Ground truth for testing the DP: sums p(a) over every alignment a of
+    length T whose collapse equals `targets`.
+    """
+    import itertools
+
+    import numpy as np
+
+    logp = np.asarray(logp)
+    t_steps, vocab = logp.shape
+    tgt = [int(x) for x in targets]
+
+    def collapse(seq):
+        out, prev = [], None
+        for s in seq:
+            if s != prev and s != blank_id:
+                out.append(s)
+            prev = s
+        return out
+
+    total = -np.inf
+    for a in itertools.product(range(vocab), repeat=t_steps):
+        if collapse(list(a)) == tgt:
+            lp = sum(logp[t, s] for t, s in enumerate(a))
+            total = np.logaddexp(total, lp)
+    return -total

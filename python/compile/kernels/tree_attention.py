@@ -1,0 +1,130 @@
+"""Pallas tree-attention kernel — the verification hot spot (Layer 1).
+
+Computes multi-head attention of N query tokens (the token-tree nodes, or a
+prefill chunk) against M = cache + tree key/value positions, under an
+arbitrary additive attention bias. The bias is where the paper's *CTC
+Transform* lands: the rust coordinator collapses raw candidate sequences
+(removing repeats/blanks) and patches exactly this mask so removed positions
+become invisible during verification.
+
+TPU mapping (see DESIGN.md §6): the grid iterates (batch, head, q-block);
+each step streams K/V in KBLK-sized tiles HBM→VMEM and maintains a running
+(flash-style) softmax so the full [N, M] score matrix never materializes.
+On CPU we execute with interpret=True; the BlockSpec structure is what a
+real Mosaic lowering would pipeline.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e9
+KBLK = 64  # key/value tile (lanes-friendly on TPU: multiple of 128 bytes f32)
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, bias_ref, o_ref, *, scale, kblk):
+    """One (b, h, q-block) grid step.
+
+    q_ref:    [QBLK, Dh]
+    k_ref:    [M, Dh]       (full rows for this (b,h); tiled by the loop)
+    v_ref:    [M, Dh]
+    bias_ref: [QBLK, M]
+    o_ref:    [QBLK, Dh]
+    """
+    qblk, dh = q_ref.shape
+    m_total = k_ref.shape[0]
+    n_kblk = m_total // kblk
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    def body(i, carry):
+        acc, row_max, row_sum = carry
+        k = pl.load(k_ref, (pl.ds(i * kblk, kblk), slice(None)))
+        v = pl.load(v_ref, (pl.ds(i * kblk, kblk), slice(None)))
+        b = pl.load(bias_ref, (slice(None), pl.ds(i * kblk, kblk)))
+        s = q @ k.T + b                                   # [QBLK, KBLK]
+        new_max = jnp.maximum(row_max, jnp.max(s, axis=-1))
+        # guard fully-masked rows: keep the running max finite
+        new_max = jnp.maximum(new_max, NEG_INF / 2)
+        correction = jnp.exp(row_max - new_max)
+        p = jnp.exp(s - new_max[:, None])
+        p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+        acc = acc * correction[:, None] + p @ v
+        row_sum = row_sum * correction + jnp.sum(p, axis=-1)
+        return acc, new_max, row_sum
+
+    acc0 = jnp.zeros((qblk, dh), jnp.float32)
+    max0 = jnp.full((qblk,), NEG_INF, jnp.float32)
+    sum0 = jnp.zeros((qblk,), jnp.float32)
+    acc, _, row_sum = jax.lax.fori_loop(0, n_kblk, body, (acc0, max0, sum0))
+    o_ref[...] = (acc / jnp.maximum(row_sum, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tree_attention(q, k, v, bias, interpret=True):
+    """Masked attention via the Pallas kernel.
+
+    q:    [B, N, H, Dh]
+    k, v: [B, M, H, Dh]
+    bias: [B, N, M] additive (-1e9 = masked)
+    out:  [B, N, H, Dh]
+    """
+    b, n, h, dh = q.shape
+    m = k.shape[1]
+    scale = 1.0 / (dh ** 0.5)
+
+    # pad M to a KBLK multiple; padded keys are masked by the padded bias
+    m_pad = (m + KBLK - 1) // KBLK * KBLK
+    if m_pad != m:
+        pad = m_pad - m
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, 0), (0, pad)),
+                       constant_values=NEG_INF)
+
+    qblk = n if n <= 32 else 32
+    assert n % qblk == 0, (n, qblk)
+    grid = (b, h, n // qblk)
+
+    # layout: put heads in front of seq so each grid step reads a contiguous row
+    qt = q.transpose(0, 2, 1, 3)   # [B, H, N, Dh]
+    kt = k.transpose(0, 2, 1, 3)   # [B, H, M, Dh]
+    vt = v.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale, kblk=KBLK),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, None, qblk, dh), lambda bi, hi, qi: (bi, hi, qi, 0)),
+            pl.BlockSpec((None, None, m_pad, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, None, m_pad, dh), lambda bi, hi, qi: (bi, hi, 0, 0)),
+            pl.BlockSpec((None, qblk, m_pad), lambda bi, hi, qi: (bi, qi, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, qblk, dh),
+                               lambda bi, hi, qi: (bi, hi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, n, dh), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt, bias)
+    return out.transpose(0, 2, 1, 3)  # back to [B, N, H, Dh]
+
+
+def vmem_report(n, m, dh, qblk=None, kblk=KBLK):
+    """Static VMEM-footprint estimate for DESIGN.md §Perf (bytes, f32).
+
+    What a real Mosaic lowering would hold resident per grid step:
+    q tile + 2 double-buffered k/v tiles + bias tile + accumulator.
+    """
+    qblk = qblk or (n if n <= 32 else 32)
+    q_tile = qblk * dh * 4
+    kv_tiles = 2 * 2 * kblk * dh * 4          # k+v, double-buffered
+    bias_tile = qblk * kblk * 4
+    acc = qblk * dh * 4 + 2 * qblk * 4
+    total = q_tile + kv_tiles + bias_tile + acc
+    # MXU utilization proxy: fraction of the 128x128 systolic array covered
+    mxu = min(qblk, 128) * min(dh, 128) / (128 * 128)
+    return {"vmem_bytes": total, "mxu_tile_cover": mxu,
+            "grid_steps_per_bh": (m + kblk - 1) // kblk}

@@ -1,0 +1,202 @@
+"""Layer 2 — the base LLM as a JAX compute graph.
+
+Decoder-only transformer (RoPE, RMSNorm, tied LM head; SwiGLU for the "vic"
+family, GeLU for "lc2") with two forward entry points:
+
+  * ``lm_forward``   — full-sequence causal forward for training/distill.
+  * ``step_forward`` — the serving graph: processes N new tokens against a
+    fixed-capacity KV cache under an arbitrary additive attention bias.
+    One graph shape serves chunked prefill (N=64), tree verification (N=32,
+    bias = the CTC-transformed tree mask) and vanilla decode (N=1).
+
+Weights are *graph parameters* (never baked as constants) in the order given
+by ``weight_names`` — the same order is pinned into manifest.json and
+tensors.bin for the rust runtime.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from . import constants as C
+from .kernels.ref import NEG_INF, attention_ref
+from .kernels.tree_attention import tree_attention
+
+Params = Dict[str, jax.Array]
+
+# exported step graphs route attention through the Pallas kernel by default;
+# training always uses the jnp reference (autodiff + interpret-mode speed).
+USE_KERNEL_ATTN = os.environ.get("CTCD_KERNEL_ATTN", "1") == "1"
+
+
+# ----------------------------------------------------------------- building blocks
+def rmsnorm(x, w, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def rope_cos_sin(pos, dh, theta=C.ROPE_THETA):
+    """pos [...,] int -> cos/sin [..., dh/2]."""
+    half = dh // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, pos):
+    """x [B, T, H, Dh], pos [B, T] -> rotated x."""
+    dh = x.shape[-1]
+    cos, sin = rope_cos_sin(pos, dh)          # [B, T, dh/2]
+    cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    x1, x2 = x[..., : dh // 2], x[..., dh // 2:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+
+
+def mlp(x, p, i, act):
+    up = x @ p[f"layer{i}.w_up"]
+    if act == "swiglu":
+        gate = x @ p[f"layer{i}.w_gate"]
+        h = jax.nn.silu(gate) * up
+    else:
+        h = jax.nn.gelu(up)
+    return h @ p[f"layer{i}.w_down"]
+
+
+# ----------------------------------------------------------------- params
+def weight_names(cfg: dict) -> List[str]:
+    """Deterministic weight ordering shared with tensors.bin/manifest."""
+    names = ["emb"]
+    for i in range(cfg["layers"]):
+        names += [f"layer{i}.ln1", f"layer{i}.wq", f"layer{i}.wk",
+                  f"layer{i}.wv", f"layer{i}.wo", f"layer{i}.ln2"]
+        if cfg["act"] == "swiglu":
+            names.append(f"layer{i}.w_gate")
+        names += [f"layer{i}.w_up", f"layer{i}.w_down"]
+    names.append("ln_f")
+    return names
+
+
+def init_params(cfg: dict, key) -> Params:
+    d, f, layers = cfg["d_model"], cfg["d_ff"], cfg["layers"]
+    h = cfg["n_heads"] * C.HEAD_DIM
+    assert h == d, "model dims assume n_heads * head_dim == d_model"
+    p: Params = {}
+    keys = jax.random.split(key, 8 * layers + 2)
+    ki = iter(keys)
+
+    def dense(k, fan_in, shape):
+        return jax.random.normal(k, shape, jnp.float32) / jnp.sqrt(fan_in)
+
+    # N(0, 0.02) embedding like GPT; LM head is tied to it
+    p["emb"] = jax.random.normal(next(ki), (C.VOCAB_SIZE, d), jnp.float32) * 0.02
+    for i in range(layers):
+        p[f"layer{i}.ln1"] = jnp.ones((d,))
+        p[f"layer{i}.wq"] = dense(next(ki), d, (d, d))
+        p[f"layer{i}.wk"] = dense(next(ki), d, (d, d))
+        p[f"layer{i}.wv"] = dense(next(ki), d, (d, d))
+        p[f"layer{i}.wo"] = dense(next(ki), d, (d, d)) / jnp.sqrt(2 * layers)
+        p[f"layer{i}.ln2"] = jnp.ones((d,))
+        if cfg["act"] == "swiglu":
+            p[f"layer{i}.w_gate"] = dense(next(ki), d, (d, f))
+        p[f"layer{i}.w_up"] = dense(next(ki), d, (d, f))
+        p[f"layer{i}.w_down"] = dense(next(ki), f, (f, d)) / jnp.sqrt(2 * layers)
+    p["ln_f"] = jnp.ones((d,))
+    return p
+
+
+def param_shapes(cfg: dict) -> Dict[str, tuple]:
+    d, f = cfg["d_model"], cfg["d_ff"]
+    shapes = {"emb": (C.VOCAB_SIZE, d), "ln_f": (d,)}
+    for i in range(cfg["layers"]):
+        shapes[f"layer{i}.ln1"] = (d,)
+        shapes[f"layer{i}.wq"] = (d, d)
+        shapes[f"layer{i}.wk"] = (d, d)
+        shapes[f"layer{i}.wv"] = (d, d)
+        shapes[f"layer{i}.wo"] = (d, d)
+        shapes[f"layer{i}.ln2"] = (d,)
+        if cfg["act"] == "swiglu":
+            shapes[f"layer{i}.w_gate"] = (d, f)
+        shapes[f"layer{i}.w_up"] = (d, f)
+        shapes[f"layer{i}.w_down"] = (f, d)
+    return shapes
+
+
+# ----------------------------------------------------------------- training forward
+def lm_forward(p: Params, cfg: dict, tokens):
+    """Causal full-sequence forward. tokens [B, T] -> (logits, hidden)."""
+    b, t = tokens.shape
+    h_heads, dh = cfg["n_heads"], C.HEAD_DIM
+    pos = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+    x = p["emb"][tokens]
+    causal = jnp.where(jnp.tril(jnp.ones((t, t), bool)), 0.0, NEG_INF)
+    bias = jnp.broadcast_to(causal[None], (b, t, t))
+    for i in range(cfg["layers"]):
+        hn = rmsnorm(x, p[f"layer{i}.ln1"])
+        q = apply_rope((hn @ p[f"layer{i}.wq"]).reshape(b, t, h_heads, dh), pos)
+        k = apply_rope((hn @ p[f"layer{i}.wk"]).reshape(b, t, h_heads, dh), pos)
+        v = (hn @ p[f"layer{i}.wv"]).reshape(b, t, h_heads, dh)
+        att = attention_ref(q, k, v, bias).reshape(b, t, -1)
+        x = x + att @ p[f"layer{i}.wo"]
+        x = x + mlp(rmsnorm(x, p[f"layer{i}.ln2"]), p, i, cfg["act"])
+    hidden = rmsnorm(x, p["ln_f"])
+    logits = hidden @ p["emb"].T
+    return logits, hidden
+
+
+# ----------------------------------------------------------------- serving forward
+def step_forward(p: Params, cfg: dict, kcache, vcache, tokens, pos, bias,
+                 use_kernel: bool | None = None):
+    """The unified serving graph.
+
+    kcache/vcache: [L, B, Lmax, H, Dh]  (keys stored post-RoPE)
+    tokens:        [B, N] int32
+    pos:           [B, N] int32 absolute positions (tree nodes carry their
+                   CTC-collapsed depth)
+    bias:          [B, N, Lmax+N] additive attention bias, built by the rust
+                   coordinator: cache-length masking, causal structure for
+                   prefill, or the CTC-transformed tree mask for verify.
+    returns (logits [B,N,V], k_new [L,B,N,H,Dh], v_new, hidden [B,N,D])
+    """
+    if use_kernel is None:
+        use_kernel = USE_KERNEL_ATTN
+    attn = tree_attention if use_kernel else attention_ref
+    b, n = tokens.shape
+    h_heads, dh = cfg["n_heads"], C.HEAD_DIM
+    x = p["emb"][tokens]
+    k_news, v_news = [], []
+    for i in range(cfg["layers"]):
+        hn = rmsnorm(x, p[f"layer{i}.ln1"])
+        q = apply_rope((hn @ p[f"layer{i}.wq"]).reshape(b, n, h_heads, dh), pos)
+        k = apply_rope((hn @ p[f"layer{i}.wk"]).reshape(b, n, h_heads, dh), pos)
+        v = (hn @ p[f"layer{i}.wv"]).reshape(b, n, h_heads, dh)
+        k_full = jnp.concatenate([kcache[i], k], axis=1)   # [B, Lmax+N, H, Dh]
+        v_full = jnp.concatenate([vcache[i], v], axis=1)
+        att = attn(q, k_full, v_full, bias).reshape(b, n, -1)
+        x = x + att @ p[f"layer{i}.wo"]
+        x = x + mlp(rmsnorm(x, p[f"layer{i}.ln2"]), p, i, cfg["act"])
+        k_news.append(k)
+        v_news.append(v)
+    hidden = rmsnorm(x, p["ln_f"])
+    logits = hidden @ p["emb"].T
+    return (logits, jnp.stack(k_news), jnp.stack(v_news), hidden)
+
+
+def make_step_fn(cfg: dict, use_kernel: bool | None = None):
+    """Flat-argument wrapper for AOT lowering: (w_0..w_k, kc, vc, tok, pos, bias)."""
+    names = weight_names(cfg)
+
+    def fn(*args):
+        p = dict(zip(names, args[: len(names)]))
+        kcache, vcache, tokens, pos, bias = args[len(names):]
+        return step_forward(p, cfg, kcache, vcache, tokens, pos, bias,
+                            use_kernel=use_kernel)
+
+    return fn, names
+
+
+def flat_params(p: Params, cfg: dict) -> List[jax.Array]:
+    return [p[n] for n in weight_names(cfg)]

@@ -1,0 +1,138 @@
+"""Byte-level BPE tokenizer.
+
+Trained once at build time over the corpus; ``vocab.json`` (merge table +
+per-id byte strings) is the interchange with the rust encoder/decoder
+(``rust/src/tokenizer``), which reimplements exactly this merge procedure so
+both sides produce identical token streams.
+
+Id layout (see constants.py): 0=<pad> 1=<bos> 2=<eos>, 3..258 = raw bytes,
+259.. = merges in rank order.
+"""
+
+from __future__ import annotations
+
+import collections
+import json
+
+from . import constants as C
+
+
+class ByteBpe:
+    def __init__(self, merges: list[tuple[int, int]]):
+        assert len(merges) <= C.N_MERGES
+        self.merges = merges
+        # token id -> bytes
+        self.token_bytes: list[bytes] = [b"", b"", b""]
+        self.token_bytes += [bytes([i]) for i in range(C.N_BYTES)]
+        for a, b in merges:
+            self.token_bytes.append(self.token_bytes[a] + self.token_bytes[b])
+        # (a, b) -> merged id, in rank order
+        self.ranks = {pair: C.N_SPECIAL + C.N_BYTES + i
+                      for i, pair in enumerate(merges)}
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.token_bytes)
+
+    # ------------------------------------------------------------- encode
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> list[int]:
+        ids = [C.N_SPECIAL + b for b in text.encode("utf-8")]
+        # repeatedly apply the lowest-rank merge present (classic BPE)
+        while len(ids) >= 2:
+            best, best_rank = None, None
+            for i in range(len(ids) - 1):
+                r = self.ranks.get((ids[i], ids[i + 1]))
+                if r is not None and (best_rank is None or r < best_rank):
+                    best, best_rank = i, r
+            if best is None:
+                break
+            merged = self.ranks[(ids[best], ids[best + 1])]
+            # merge *all* occurrences of this pair left-to-right
+            out, i = [], 0
+            while i < len(ids):
+                if (i + 1 < len(ids)
+                        and ids[i] == ids[best] and ids[i + 1] == ids[best + 1]):
+                    out.append(merged)
+                    i += 2
+                else:
+                    out.append(ids[i])
+                    i += 1
+            ids = out
+        if bos:
+            ids = [C.BOS_ID] + ids
+        if eos:
+            ids = ids + [C.EOS_ID]
+        return ids
+
+    # ------------------------------------------------------------- decode
+    def decode(self, ids: list[int]) -> str:
+        buf = b"".join(self.token_bytes[i] for i in ids
+                       if 0 <= i < len(self.token_bytes))
+        return buf.decode("utf-8", errors="replace")
+
+    # ------------------------------------------------------------- io
+    def to_json(self) -> dict:
+        return {
+            "version": 1,
+            "vocab_size": self.vocab_size,
+            "specials": {"pad": C.PAD_ID, "bos": C.BOS_ID, "eos": C.EOS_ID},
+            "n_bytes": C.N_BYTES,
+            "merges": [[a, b] for a, b in self.merges],
+            # redundancy for the rust decoder: bytes of every token id
+            "token_bytes": [list(b) for b in self.token_bytes],
+        }
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_json(), f)
+
+    @classmethod
+    def load(cls, path: str) -> "ByteBpe":
+        data = json.load(open(path))
+        return cls([tuple(m) for m in data["merges"]])
+
+
+def train_bpe(text: str, n_merges: int = C.N_MERGES) -> ByteBpe:
+    """Classic BPE training: repeatedly merge the most frequent adjacent pair.
+
+    Runs on word-ish chunks (split on whitespace, whitespace kept attached to
+    the following chunk) to keep counting fast while still allowing merges
+    across letters/punctuation inside a chunk.
+    """
+    # chunk -> count, chunks as tuples of ids
+    words: collections.Counter = collections.Counter()
+    chunk: list[int] = []
+    data = text.encode("utf-8")
+    for byte in data:
+        tid = C.N_SPECIAL + byte
+        if byte in (0x20, 0x0A) and chunk:  # space / newline end a chunk
+            chunk.append(tid)
+            words[tuple(chunk)] += 1
+            chunk = []
+        else:
+            chunk.append(tid)
+    if chunk:
+        words[tuple(chunk)] += 1
+
+    merges: list[tuple[int, int]] = []
+    word_list = [(list(w), c) for w, c in words.items()]
+    for rank in range(n_merges):
+        pairs: collections.Counter = collections.Counter()
+        for w, c in word_list:
+            for i in range(len(w) - 1):
+                pairs[(w[i], w[i + 1])] += c
+        if not pairs:
+            break
+        (a, b), cnt = pairs.most_common(1)[0]
+        if cnt < 2:
+            break
+        new_id = C.N_SPECIAL + C.N_BYTES + rank
+        merges.append((a, b))
+        for w, _ in word_list:
+            i = 0
+            while i < len(w) - 1:
+                if w[i] == a and w[i + 1] == b:
+                    w[i:i + 2] = [new_id]
+                else:
+                    i += 1
+    return ByteBpe(merges)

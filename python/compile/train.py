@@ -1,0 +1,264 @@
+"""Build-time training: base LMs and draft heads.
+
+Pipeline per model (paper §3.2):
+  1. train the base LM (CE, AdamW hand-rolled, grad-clip 0.5, cosine LR),
+  2. distill: teacher greedy argmax over the corpus gives Y_distill
+     (Eq. 3–5) — computed on the fly per batch, base frozen,
+  3. train heads on the frozen base's hidden states:
+       CTC head    — sequence-level CTC loss over the next-U distilled
+                     tokens at every position (Eq. 6–8),
+       Medusa head — per-offset CE,
+       Hydra head  — teacher-forced sequential CE.
+
+Step counts come from env (CTCD_STEPS_BASE / CTCD_STEPS_HEAD) so tests run
+in seconds and the full build is reproducible; EXPERIMENTS.md records the
+counts used for the shipped artifacts.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import constants as C
+from . import heads as H
+from . import model as M
+from .kernels.ref import ctc_neg_logp_batch_ref
+
+STEPS_BASE = int(os.environ.get("CTCD_STEPS_BASE", "220"))
+STEPS_HEAD = int(os.environ.get("CTCD_STEPS_HEAD", "160"))
+
+
+# ----------------------------------------------------------------- optimizer
+def adamw_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(jax.tree.map(lambda g: jnp.sum(g * g), tree))
+    return jnp.sqrt(sum(leaves))
+
+
+def adamw_update(params, grads, state, lr, clip=C.GRAD_CLIP,
+                 b1=0.9, b2=0.95, eps=1e-8, wd=0.01):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip / jnp.maximum(gn, 1e-9))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    t = state["t"] + 1
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2) * g * g, state["v"], grads)
+    bc1, bc2 = 1 - b1 ** t, 1 - b2 ** t
+
+    def upd(p, mm, vv):
+        step = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+        return p - lr * (step + wd * p)
+
+    params = jax.tree.map(upd, params, m, v)
+    return params, {"m": m, "v": v, "t": t}
+
+
+def cosine_lr(step, total, base_lr, warmup=20):
+    warm = base_lr * (step + 1) / warmup
+    prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ----------------------------------------------------------------- data
+class Batcher:
+    """Deterministic sampler of [B, T+1] windows from a token stream."""
+
+    def __init__(self, tokens: np.ndarray, batch: int, seq: int, seed: int):
+        assert len(tokens) > seq + 1, "corpus too small"
+        self.tokens = tokens
+        self.batch, self.seq = batch, seq
+        self.rng = np.random.default_rng(seed)
+
+    def next(self) -> np.ndarray:
+        starts = self.rng.integers(0, len(self.tokens) - self.seq - 1,
+                                   size=self.batch)
+        return np.stack([self.tokens[s:s + self.seq + 1] for s in starts])
+
+
+# ----------------------------------------------------------------- base LM
+def make_base_loss(cfg):
+    def loss_fn(params, batch):
+        x, y = batch[:, :-1], batch[:, 1:]
+        logits, _ = M.lm_forward(params, cfg, x)
+        lp = jax.nn.log_softmax(logits, -1)
+        nll = -jnp.take_along_axis(lp, y[..., None], -1)[..., 0]
+        return jnp.mean(nll)
+    return loss_fn
+
+
+def train_base(cfg: dict, tokens: np.ndarray, seed: int = 0,
+               steps: int | None = None, log: Callable = print):
+    steps = steps or STEPS_BASE
+    key = jax.random.PRNGKey(seed)
+    params = M.init_params(cfg, key)
+    opt = adamw_init(params)
+    loss_fn = make_base_loss(cfg)
+
+    @jax.jit
+    def train_step(params, opt, batch, step):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = cosine_lr(step, steps, C.LR_BASE)
+        params, opt = adamw_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    batcher = Batcher(tokens, C.TRAIN_BATCH, C.TRAIN_SEQ, seed + 1)
+    losses, t0 = [], time.time()
+    for step in range(steps):
+        batch = jnp.asarray(batcher.next())
+        params, opt, loss = train_step(params, opt, batch, step)
+        losses.append(float(loss))
+        if step % 25 == 0 or step == steps - 1:
+            log(f"  base step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return params, losses
+
+
+# ----------------------------------------------------------------- distill + windows
+def make_teacher_fn(cfg):
+    @jax.jit
+    def teacher(params, x):
+        logits, hidden = M.lm_forward(params, cfg, x)
+        return jnp.argmax(logits, -1).astype(jnp.int32), hidden
+    return teacher
+
+
+def hidden_windows(hidden):
+    """hidden [B, T, D] -> right-aligned windows [B, T, W, D].
+
+    window[b, t, W-1-j] = hidden[b, t-j] (zeros before the sequence start);
+    matches the rust coordinator's ring buffer layout exactly.
+    """
+    b, t, d = hidden.shape
+    w = C.HIDDEN_WIN
+    pad = jnp.pad(hidden, ((0, 0), (w - 1, 0), (0, 0)))
+    idx = jnp.arange(t)[:, None] + jnp.arange(w)[None, :]   # [T, W]
+    return pad[:, idx, :]                                    # [B, T, W, D]
+
+
+def next_token_targets(labels, u=C.CTC_TARGET_U):
+    """labels [B, T] (teacher argmax = token at t+1 under teacher forcing).
+
+    The draft module predicts tokens *after* the base token (paper §3.3:
+    "probability distributions of different positions after base token").
+    labels[t] IS the base token at position t+1, so the CTC target for
+    position t starts one further: labels[t+1], ..., labels[t+u].
+    Returns (targets [B, T, U], tgt_len [B, T]).
+    """
+    b, t = labels.shape
+    pad = jnp.pad(labels, ((0, 0), (0, u + 1)), constant_values=C.PAD_ID)
+    idx = jnp.arange(t)[:, None] + 1 + jnp.arange(u)[None, :]
+    targets = pad[:, idx]                                    # [B, T, U]
+    tgt_len = jnp.clip(t - 1 - jnp.arange(t), 0, u)          # [T]
+    tgt_len = jnp.broadcast_to(tgt_len[None], (b, t))
+    return targets.astype(jnp.int32), tgt_len.astype(jnp.int32)
+
+
+# ----------------------------------------------------------------- CTC head training
+def make_ctc_head_loss(cfg):
+    def loss_fn(hp, emb, hidden, labels):
+        b, t, d = hidden.shape
+        wins = hidden_windows(hidden)                        # [B, T, W, D]
+        win_len = jnp.minimum(jnp.arange(t) + 1, C.HIDDEN_WIN)
+        win_len = jnp.broadcast_to(win_len[None], (b, t))
+        flat_w = wins.reshape(b * t, C.HIDDEN_WIN, d)
+        flat_l = win_len.reshape(b * t)
+        logp = H.ctc_head_forward(hp, emb, cfg, flat_w, flat_l)  # [BT, S, V+1]
+        targets, tgt_len = next_token_targets(labels)
+        nll = ctc_neg_logp_batch_ref(
+            logp, targets.reshape(b * t, -1), tgt_len.reshape(b * t),
+            C.BLANK_ID)
+        # exclude positions with no target, and positions whose target cannot
+        # be aligned at all (too many adjacent repeats for T'=S slots ->
+        # nll ~ 1e9) — they carry no learning signal, only blow up the loss
+        weight = ((tgt_len.reshape(b * t) > 0) & (nll < 1e6)).astype(jnp.float32)
+        return jnp.sum(nll * weight) / jnp.maximum(jnp.sum(weight), 1.0)
+    return loss_fn
+
+
+def make_medusa_head_loss(cfg):
+    def loss_fn(hp, emb, hidden, labels):
+        b, t, d = hidden.shape
+        logits = H.medusa_head_forward(hp, emb, hidden.reshape(b * t, d))
+        logits = logits.reshape(b, t, C.MEDUSA_HEADS, -1)
+        lp = jax.nn.log_softmax(logits, -1)
+        total, denom = 0.0, 0.0
+        for i in range(C.MEDUSA_HEADS):
+            # head i predicts the token (i+2) ahead of input t: labels[t+1+i]
+            off = i + 1
+            tgt = labels[:, off:]
+            pred = lp[:, : t - off, i, :]
+            nll = -jnp.take_along_axis(pred, tgt[..., None], -1)[..., 0]
+            total = total + jnp.sum(nll)
+            denom = denom + nll.size
+        return total / denom
+    return loss_fn
+
+
+def make_hydra_head_loss(cfg):
+    def loss_fn(hp, emb, hidden, labels):
+        # teacher-forced chain: state_0 = hidden[t], tok_0 = labels[t]
+        # (the base token), predict labels[t+i] for i=1..HYDRA_STEPS.
+        b, t, d = hidden.shape
+        state = hidden
+        tok = labels
+        total, denom = 0.0, 0.0
+        for i in range(1, C.HYDRA_STEPS + 1):
+            state, logits = H.hydra_step(hp, emb, state, tok)
+            lp = jax.nn.log_softmax(logits, -1)
+            tgt = labels[:, i:]
+            nll = -jnp.take_along_axis(lp[:, : t - i], tgt[..., None], -1)[..., 0]
+            total = total + jnp.sum(nll)
+            denom = denom + nll.size
+            tok = jnp.pad(labels[:, i:], ((0, 0), (0, i)))  # next teacher tok
+        return total / denom
+    return loss_fn
+
+
+HEAD_KINDS = {
+    "ctc": (H.init_ctc_head, make_ctc_head_loss),
+    "medusa": (H.init_medusa_head, make_medusa_head_loss),
+    "hydra": (H.init_hydra_head, make_hydra_head_loss),
+}
+
+
+def train_head(kind: str, cfg: dict, base_params, tokens: np.ndarray,
+               seed: int = 0, steps: int | None = None, log: Callable = print):
+    steps = steps or STEPS_HEAD
+    init_fn, loss_maker = HEAD_KINDS[kind]
+    hp = init_fn(cfg, jax.random.PRNGKey(seed + 100))
+    opt = adamw_init(hp)
+    loss_fn = loss_maker(cfg)
+    teacher = make_teacher_fn(cfg)
+    emb = base_params["emb"]
+
+    @jax.jit
+    def train_step(hp, opt, hidden, labels, step):
+        loss, grads = jax.value_and_grad(loss_fn)(hp, emb, hidden, labels)
+        lr = cosine_lr(step, steps, C.LR_HEAD)
+        hp, opt = adamw_update(hp, grads, opt, lr, wd=0.0)
+        return hp, opt, loss
+
+    batcher = Batcher(tokens, C.TRAIN_BATCH, C.TRAIN_SEQ, seed + 2)
+    losses, t0 = [], time.time()
+    for step in range(steps):
+        batch = jnp.asarray(batcher.next())
+        x = batch[:, :-1]
+        labels, hidden = teacher(base_params, x)   # Y_distill (Eq. 5)
+        hp, opt, loss = train_step(hp, opt, hidden, labels, step)
+        losses.append(float(loss))
+        if step % 25 == 0 or step == steps - 1:
+            log(f"  {kind}-head step {step:4d} loss {float(loss):.4f} "
+                f"({time.time() - t0:.0f}s)")
+    return hp, losses

@@ -1,0 +1,37 @@
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# keep test-time training fast
+os.environ.setdefault("CTCD_STEPS_BASE", "6")
+os.environ.setdefault("CTCD_STEPS_HEAD", "4")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(1234)
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """A scaled-down config so model tests run in seconds."""
+    return dict(family="vic", analog="test", layers=2, d_model=64,
+                n_heads=2, d_ff=128, act="swiglu")
+
+
+@pytest.fixture(scope="session")
+def gelu_cfg():
+    return dict(family="lc2", analog="test", layers=2, d_model=64,
+                n_heads=2, d_ff=128, act="gelu")
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_cfg):
+    import jax
+
+    from compile import model as M
+    return M.init_params(tiny_cfg, jax.random.PRNGKey(7))

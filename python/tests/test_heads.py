@@ -1,0 +1,132 @@
+"""Draft heads: shapes, masking invariants, beam properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import constants as C
+from compile import heads as H
+
+
+@pytest.fixture(scope="module")
+def ctc_head(tiny_cfg):
+    return H.init_ctc_head(tiny_cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def emb(tiny_params):
+    return tiny_params["emb"]
+
+
+class TestCtcHead:
+    def test_output_is_log_distribution(self, ctc_head, emb, tiny_cfg, rng):
+        win = jnp.asarray(rng.normal(size=(2, C.HIDDEN_WIN,
+                                           tiny_cfg["d_model"])), jnp.float32)
+        lp = H.ctc_head_forward(ctc_head, emb, tiny_cfg, win,
+                                jnp.array([4, C.HIDDEN_WIN]))
+        assert lp.shape == (2, C.DRAFT_SLOTS, C.DRAFT_VOCAB)
+        sums = np.asarray(jnp.exp(lp).sum(-1))
+        np.testing.assert_allclose(sums, 1.0, rtol=1e-5)
+
+    def test_invalid_window_rows_are_ignored(self, ctc_head, emb, tiny_cfg, rng):
+        d = tiny_cfg["d_model"]
+        w = C.HIDDEN_WIN
+        tail = rng.normal(size=(1, 5, d)).astype(np.float32)
+        win1 = np.zeros((1, w, d), np.float32)
+        win1[:, -5:] = tail
+        win2 = rng.normal(size=(1, w, d)).astype(np.float32)  # garbage front
+        win2[:, -5:] = tail
+        lp1 = H.ctc_head_forward(ctc_head, emb, tiny_cfg,
+                                 jnp.asarray(win1), jnp.array([5]))
+        lp2 = H.ctc_head_forward(ctc_head, emb, tiny_cfg,
+                                 jnp.asarray(win2), jnp.array([5]))
+        np.testing.assert_allclose(np.asarray(lp1), np.asarray(lp2),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_kernel_and_ref_paths_agree(self, ctc_head, emb, tiny_cfg, rng):
+        win = jnp.asarray(rng.normal(size=(1, C.HIDDEN_WIN,
+                                           tiny_cfg["d_model"])), jnp.float32)
+        wl = jnp.array([C.HIDDEN_WIN])
+        a = H.ctc_head_forward(ctc_head, emb, tiny_cfg, win, wl,
+                               use_kernel=False)
+        b = H.ctc_head_forward(ctc_head, emb, tiny_cfg, win, wl,
+                               use_kernel=True)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMedusaHead:
+    def test_shapes(self, tiny_cfg, emb, rng):
+        hp = H.init_medusa_head(tiny_cfg, jax.random.PRNGKey(1))
+        h = jnp.asarray(rng.normal(size=(3, tiny_cfg["d_model"])), jnp.float32)
+        logits = H.medusa_head_forward(hp, emb, h)
+        assert logits.shape == (3, C.MEDUSA_HEADS, C.VOCAB_SIZE)
+
+    def test_near_zero_init_predicts_like_lm_head(self, tiny_cfg, emb, rng):
+        # w1 ~ 0.01 => head i output ~ hidden @ emb.T for all i
+        hp = {"w1": jnp.zeros((C.MEDUSA_HEADS,) + (tiny_cfg["d_model"],) * 2)}
+        h = jnp.asarray(rng.normal(size=(2, tiny_cfg["d_model"])), jnp.float32)
+        logits = H.medusa_head_forward(hp, emb, h)
+        expect = np.asarray(h @ emb.T)
+        for i in range(C.MEDUSA_HEADS):
+            np.testing.assert_allclose(np.asarray(logits[:, i]), expect,
+                                       rtol=1e-5, atol=1e-5)
+
+
+class TestHydraHead:
+    @pytest.fixture(scope="class")
+    def hp(self, tiny_cfg):
+        return H.init_hydra_head(tiny_cfg, jax.random.PRNGKey(2))
+
+    def test_beam_shapes_and_order(self, hp, emb, tiny_cfg, rng):
+        h = jnp.asarray(rng.normal(size=(2, tiny_cfg["d_model"])), jnp.float32)
+        toks, lp = H.hydra_beam_forward(hp, emb, h, jnp.array([5, 6]))
+        assert toks.shape == (2, C.HYDRA_BEAMS, C.HYDRA_STEPS)
+        assert lp.shape == (2, C.HYDRA_BEAMS)
+        assert bool(jnp.all(lp[:, :-1] >= lp[:, 1:])), "beams must be sorted"
+        assert bool(jnp.all(lp <= 0.0))
+
+    def test_beams_are_distinct(self, hp, emb, tiny_cfg, rng):
+        h = jnp.asarray(rng.normal(size=(1, tiny_cfg["d_model"])), jnp.float32)
+        toks, _ = H.hydra_beam_forward(hp, emb, h, jnp.array([5]))
+        paths = {tuple(np.asarray(toks[0, i])) for i in range(C.HYDRA_BEAMS)}
+        assert len(paths) == C.HYDRA_BEAMS
+
+    def test_top_beam_is_greedy_chain(self, hp, emb, tiny_cfg, rng):
+        """With beam width K the best path must dominate the greedy chain."""
+        h = jnp.asarray(rng.normal(size=(1, tiny_cfg["d_model"])), jnp.float32)
+        toks, lp = H.hydra_beam_forward(hp, emb, h, jnp.array([5]))
+        # greedy rollout
+        state, tok = h, jnp.array([5])
+        greedy_lp = 0.0
+        greedy = []
+        for _ in range(C.HYDRA_STEPS):
+            state, logits = H.hydra_step(hp, emb, state, tok)
+            lsm = jax.nn.log_softmax(logits, -1)
+            tok = jnp.argmax(lsm, -1)
+            greedy_lp += float(lsm[0, tok[0]])
+            greedy.append(int(tok[0]))
+        assert float(lp[0, 0]) >= greedy_lp - 1e-4
+
+
+class TestNames:
+    def test_head_name_lists_match_inits(self, tiny_cfg):
+        assert set(H.ctc_head_names()) == set(
+            H.init_ctc_head(tiny_cfg, jax.random.PRNGKey(0)))
+        assert set(H.medusa_head_names()) == set(
+            H.init_medusa_head(tiny_cfg, jax.random.PRNGKey(0)))
+        assert set(H.hydra_head_names()) == set(
+            H.init_hydra_head(tiny_cfg, jax.random.PRNGKey(0)))
+
+    def test_shape_tables_match_inits(self, tiny_cfg):
+        for shapes, init in [
+            (H.ctc_head_shapes(tiny_cfg),
+             H.init_ctc_head(tiny_cfg, jax.random.PRNGKey(0))),
+            (H.medusa_head_shapes(tiny_cfg),
+             H.init_medusa_head(tiny_cfg, jax.random.PRNGKey(0))),
+            (H.hydra_head_shapes(tiny_cfg),
+             H.init_hydra_head(tiny_cfg, jax.random.PRNGKey(0))),
+        ]:
+            for k, v in init.items():
+                assert tuple(v.shape) == shapes[k], k

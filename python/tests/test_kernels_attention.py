@@ -1,0 +1,89 @@
+"""Pallas tree-attention kernel vs the jnp oracle (hypothesis sweep)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels.ref import NEG_INF, attention_ref
+from compile.kernels.tree_attention import tree_attention, vmem_report
+
+
+def _run_case(b, n, h, dh, m, mask_frac, seed):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, n, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    bias = np.where(rng.random((b, n, m)) < mask_frac, NEG_INF, 0.0)
+    bias = jnp.asarray(bias, jnp.float32)
+    out = tree_attention(q, k, v, bias)
+    ref = attention_ref(q, k, v, bias)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.sampled_from([1, 2]),
+    n=st.sampled_from([1, 8, 32, 64]),
+    h=st.sampled_from([1, 2, 4]),
+    dh=st.sampled_from([16, 32]),
+    m=st.integers(min_value=1, max_value=130),
+    mask_frac=st.sampled_from([0.0, 0.3, 0.9]),
+    seed=st.integers(min_value=0, max_value=2 ** 16),
+)
+def test_matches_ref_random(b, n, h, dh, m, mask_frac, seed):
+    _run_case(b, n, h, dh, m, mask_frac, seed)
+
+
+def test_serving_shapes():
+    # the exact shapes the exported step graphs use
+    for n in (1, 32, 64):
+        _run_case(1, n, 4, 32, 384 + n, 0.5, 99)
+
+
+def test_fully_masked_rows_are_zero():
+    b, n, h, dh, m = 1, 4, 2, 16, 8
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, n, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    bias = jnp.full((b, n, m), NEG_INF, jnp.float32)
+    out = tree_attention(q, k, v, bias)
+    assert np.allclose(np.asarray(out), 0.0)
+
+
+def test_single_visible_key_returns_its_value():
+    b, n, h, dh, m = 1, 2, 1, 16, 6
+    rng = np.random.default_rng(3)
+    q = jnp.asarray(rng.normal(size=(b, n, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    bias = np.full((b, n, m), NEG_INF, np.float32)
+    bias[:, :, 3] = 0.0
+    out = tree_attention(q, k, v, jnp.asarray(bias))
+    expect = np.broadcast_to(np.asarray(v)[:, 3][:, None], out.shape)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5, atol=1e-5)
+
+
+def test_bias_shift_invariance():
+    # adding a constant to a full bias row must not change the output
+    b, n, h, dh, m = 1, 4, 2, 16, 20
+    rng = np.random.default_rng(5)
+    q = jnp.asarray(rng.normal(size=(b, n, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, m, h, dh)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(b, n, m)) * 2, jnp.float32)
+    out1 = tree_attention(q, k, v, bias)
+    out2 = tree_attention(q, k, v, bias + 3.5)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_vmem_report_reasonable():
+    rep = vmem_report(n=32, m=416, dh=32)
+    # must comfortably fit a TPU core's ~16 MiB VMEM
+    assert rep["vmem_bytes"] < 1 << 20
+    assert 0 < rep["mxu_tile_cover"] <= 1
+    assert rep["grid_steps_per_bh"] == 7

@@ -1,0 +1,166 @@
+"""Base model: step/full-forward consistency, tree verify semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import constants as C
+from compile import model as M
+from compile.kernels.ref import NEG_INF
+
+
+def _zero_cache(cfg, b):
+    shp = (cfg["layers"], b, C.LMAX, cfg["n_heads"], C.HEAD_DIM)
+    return jnp.zeros(shp), jnp.zeros(shp)
+
+
+def _decode_bias(t, n=1):
+    """bias for decoding one token at absolute position t."""
+    bias = np.full((1, n, C.LMAX + n), NEG_INF, np.float32)
+    bias[0, :, :t] = 0.0
+    for i in range(n):
+        bias[0, i, C.LMAX: C.LMAX + i + 1] = 0.0
+    return jnp.asarray(bias)
+
+
+@pytest.fixture(scope="module")
+def toks(rng):
+    return rng.integers(3, C.VOCAB_SIZE, size=(1, 12)).astype(np.int32)
+
+
+class TestStepConsistency:
+    def test_stepwise_decode_matches_full_forward(self, tiny_cfg, tiny_params, toks):
+        logits_full, hidden_full = M.lm_forward(
+            tiny_params, tiny_cfg, jnp.asarray(toks))
+        kc, vc = _zero_cache(tiny_cfg, 1)
+        for t in range(toks.shape[1]):
+            lg, kn, vn, hd = M.step_forward(
+                tiny_params, tiny_cfg, kc, vc,
+                jnp.asarray(toks[:, t:t + 1]),
+                jnp.full((1, 1), t, jnp.int32), _decode_bias(t))
+            kc = kc.at[:, :, t].set(kn[:, :, 0])
+            vc = vc.at[:, :, t].set(vn[:, :, 0])
+            np.testing.assert_allclose(
+                np.asarray(lg[0, 0]), np.asarray(logits_full[0, t]),
+                rtol=1e-4, atol=1e-4)
+            np.testing.assert_allclose(
+                np.asarray(hd[0, 0]), np.asarray(hidden_full[0, t]),
+                rtol=1e-4, atol=1e-4)
+
+    def test_chunked_prefill_matches_full_forward(self, tiny_cfg, tiny_params, toks):
+        n = toks.shape[1]
+        logits_full, _ = M.lm_forward(tiny_params, tiny_cfg, jnp.asarray(toks))
+        kc, vc = _zero_cache(tiny_cfg, 1)
+        # one chunk of n tokens with a causal bias
+        bias = np.full((1, n, C.LMAX + n), NEG_INF, np.float32)
+        for i in range(n):
+            bias[0, i, C.LMAX: C.LMAX + i + 1] = 0.0
+        lg, kn, vn, hd = M.step_forward(
+            tiny_params, tiny_cfg, kc, vc, jnp.asarray(toks),
+            jnp.arange(n, dtype=jnp.int32)[None], jnp.asarray(bias))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits_full),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_gelu_family_also_consistent(self, gelu_cfg, toks):
+        params = M.init_params(gelu_cfg, jax.random.PRNGKey(3))
+        logits_full, _ = M.lm_forward(params, gelu_cfg, jnp.asarray(toks))
+        kc, vc = _zero_cache(gelu_cfg, 1)
+        lg, *_ = M.step_forward(
+            params, gelu_cfg, kc, vc, jnp.asarray(toks[:, :1]),
+            jnp.zeros((1, 1), jnp.int32), _decode_bias(0))
+        np.testing.assert_allclose(np.asarray(lg[0, 0]),
+                                   np.asarray(logits_full[0, 0]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestTreeVerify:
+    def test_linear_chain_tree_equals_sequential_decode(
+            self, tiny_cfg, tiny_params, toks):
+        """A degenerate tree (single path) must reproduce AR decoding."""
+        prefix_len, chain = 4, 5
+        # prefill the prefix token-by-token
+        kc, vc = _zero_cache(tiny_cfg, 1)
+        for t in range(prefix_len):
+            _, kn, vn, _ = M.step_forward(
+                tiny_params, tiny_cfg, kc, vc, jnp.asarray(toks[:, t:t + 1]),
+                jnp.full((1, 1), t, jnp.int32), _decode_bias(t))
+            kc = kc.at[:, :, t].set(kn[:, :, 0])
+            vc = vc.at[:, :, t].set(vn[:, :, 0])
+
+        chain_toks = toks[:, prefix_len:prefix_len + chain]
+        # tree bias: node i sees cache[0:prefix_len] + nodes 0..i
+        n = chain
+        bias = np.full((1, n, C.LMAX + n), NEG_INF, np.float32)
+        bias[0, :, :prefix_len] = 0.0
+        for i in range(n):
+            bias[0, i, C.LMAX: C.LMAX + i + 1] = 0.0
+        pos = (prefix_len + np.arange(n, dtype=np.int32))[None]
+        tree_lg, *_ = M.step_forward(
+            tiny_params, tiny_cfg, kc, vc, jnp.asarray(chain_toks),
+            jnp.asarray(pos), jnp.asarray(bias))
+
+        # sequential decode of the same tokens
+        kc2, vc2 = kc, vc
+        seq_lg = []
+        for i in range(chain):
+            t = prefix_len + i
+            lg, kn, vn, _ = M.step_forward(
+                tiny_params, tiny_cfg, kc2, vc2,
+                jnp.asarray(chain_toks[:, i:i + 1]),
+                jnp.full((1, 1), t, jnp.int32), _decode_bias(t))
+            kc2 = kc2.at[:, :, t].set(kn[:, :, 0])
+            vc2 = vc2.at[:, :, t].set(vn[:, :, 0])
+            seq_lg.append(np.asarray(lg[0, 0]))
+        np.testing.assert_allclose(np.asarray(tree_lg[0]), np.stack(seq_lg),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_sibling_isolation(self, tiny_cfg, tiny_params, toks):
+        """Two sibling branches must not attend to each other."""
+        prefix_len = 3
+        kc, vc = _zero_cache(tiny_cfg, 1)
+        for t in range(prefix_len):
+            _, kn, vn, _ = M.step_forward(
+                tiny_params, tiny_cfg, kc, vc, jnp.asarray(toks[:, t:t + 1]),
+                jnp.full((1, 1), t, jnp.int32), _decode_bias(t))
+            kc = kc.at[:, :, t].set(kn[:, :, 0])
+            vc = vc.at[:, :, t].set(vn[:, :, 0])
+
+        # tree with two siblings a, b at the same depth
+        a_tok, b_tok = 17, 23
+        for variant_b in (b_tok, 101):  # changing sibling b ...
+            tree = np.asarray([[a_tok, variant_b]], np.int32)
+            bias = np.full((1, 2, C.LMAX + 2), NEG_INF, np.float32)
+            bias[0, :, :prefix_len] = 0.0
+            bias[0, 0, C.LMAX + 0] = 0.0
+            bias[0, 1, C.LMAX + 1] = 0.0
+            pos = np.asarray([[prefix_len, prefix_len]], np.int32)
+            lg, *_ = M.step_forward(
+                tiny_cfg and tiny_params, tiny_cfg, kc, vc, jnp.asarray(tree),
+                jnp.asarray(pos), jnp.asarray(bias))
+            if variant_b == b_tok:
+                base_a = np.asarray(lg[0, 0])
+            else:
+                # ... must not change sibling a's logits
+                np.testing.assert_allclose(np.asarray(lg[0, 0]), base_a,
+                                           rtol=1e-5, atol=1e-5)
+
+
+class TestParams:
+    def test_weight_names_cover_params(self, tiny_cfg, tiny_params):
+        assert set(M.weight_names(tiny_cfg)) == set(tiny_params.keys())
+
+    def test_param_shapes_match(self, tiny_cfg, tiny_params):
+        shapes = M.param_shapes(tiny_cfg)
+        for k, v in tiny_params.items():
+            assert tuple(v.shape) == shapes[k], k
+
+    def test_gelu_has_no_gate(self, gelu_cfg):
+        names = M.weight_names(gelu_cfg)
+        assert not any("w_gate" in n for n in names)
+
+    def test_flat_params_order(self, tiny_cfg, tiny_params):
+        flat = M.flat_params(tiny_params, tiny_cfg)
+        names = M.weight_names(tiny_cfg)
+        assert len(flat) == len(names)
+        assert flat[0] is tiny_params["emb"]

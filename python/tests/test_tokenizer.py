@@ -1,0 +1,87 @@
+"""Byte-BPE tokenizer: roundtrips, determinism, vocab invariants."""
+
+import json
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import constants as C
+from compile.tokenizer import ByteBpe, train_bpe
+
+CORPUS = (
+    "the quick brown fox jumps over the lazy dog. "
+    "the quick brown fox returns. pack my box with five dozen jugs. "
+    "def add(a, b):\n    return a + b\n" * 20
+)
+
+
+@pytest.fixture(scope="module")
+def bpe():
+    return train_bpe(CORPUS, n_merges=80)
+
+
+def test_vocab_layout(bpe):
+    # specials + bytes + merges, merges capped
+    assert bpe.vocab_size <= C.VOCAB_SIZE
+    assert bpe.token_bytes[C.N_SPECIAL] == b"\x00"
+    assert bpe.token_bytes[C.N_SPECIAL + 65] == b"A"
+    for i, (a, b) in enumerate(bpe.merges):
+        tid = C.N_SPECIAL + C.N_BYTES + i
+        assert bpe.token_bytes[tid] == bpe.token_bytes[a] + bpe.token_bytes[b]
+
+
+def test_roundtrip_corpus(bpe):
+    assert bpe.decode(bpe.encode(CORPUS)) == CORPUS
+
+
+def test_merges_actually_used(bpe):
+    ids = bpe.encode("the quick brown fox")
+    assert any(i >= C.N_SPECIAL + C.N_BYTES for i in ids), \
+        "expected at least one merged token on in-distribution text"
+
+
+def test_bos_eos(bpe):
+    ids = bpe.encode("hi", bos=True, eos=True)
+    assert ids[0] == C.BOS_ID and ids[-1] == C.EOS_ID
+
+
+def test_empty(bpe):
+    assert bpe.encode("") == []
+    assert bpe.decode([]) == ""
+
+
+def test_determinism():
+    a = train_bpe(CORPUS, n_merges=40)
+    b = train_bpe(CORPUS, n_merges=40)
+    assert a.merges == b.merges
+
+
+def test_save_load_roundtrip(bpe, tmp_path):
+    path = tmp_path / "vocab.json"
+    bpe.save(str(path))
+    loaded = ByteBpe.load(str(path))
+    assert loaded.merges == bpe.merges
+    assert loaded.encode(CORPUS) == bpe.encode(CORPUS)
+    # the json also carries explicit token bytes for the rust decoder
+    data = json.load(open(path))
+    assert data["token_bytes"][C.N_SPECIAL + 97] == [97]  # 'a'
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.text(max_size=200))
+def test_roundtrip_any_text(text):
+    bpe = _CACHED
+    assert bpe.decode(bpe.encode(text)) == text
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.binary(max_size=100))
+def test_roundtrip_any_bytes_via_latin(data):
+    # arbitrary byte content via utf-8 decodable wrapper
+    text = data.decode("utf-8", errors="replace")
+    bpe = _CACHED
+    assert bpe.decode(bpe.encode(text)) == text
+
+
+_CACHED = train_bpe(CORPUS, n_merges=80)

@@ -1,0 +1,109 @@
+"""Training machinery: optimizer, distill targets, loss plumbing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import constants as C
+from compile import train as T
+from compile import model as M
+
+
+class TestAdamW:
+    def test_descends_quadratic(self):
+        params = {"x": jnp.array([5.0, -3.0])}
+        opt = T.adamw_init(params)
+        for _ in range(200):
+            grads = {"x": 2 * params["x"]}
+            params, opt = T.adamw_update(params, grads, opt, lr=0.05, wd=0.0)
+        assert float(jnp.max(jnp.abs(params["x"]))) < 0.1
+
+    def test_grad_clip_bounds_update(self):
+        params = {"x": jnp.zeros(4)}
+        opt = T.adamw_init(params)
+        huge = {"x": jnp.full(4, 1e9)}
+        p2, _ = T.adamw_update(params, huge, opt, lr=0.1, wd=0.0)
+        # clipped: first-step update magnitude == lr regardless of grad size
+        assert float(jnp.max(jnp.abs(p2["x"]))) <= 0.1 + 1e-6
+
+    def test_global_norm(self):
+        tree = {"a": jnp.array([3.0]), "b": jnp.array([4.0])}
+        assert abs(float(T.global_norm(tree)) - 5.0) < 1e-6
+
+    def test_cosine_schedule_shape(self):
+        lrs = [float(T.cosine_lr(s, 100, 1.0)) for s in range(100)]
+        assert lrs[0] < lrs[19]            # warmup rises
+        assert lrs[25] > lrs[99]           # then decays
+        assert lrs[99] >= 0.0
+
+
+class TestBatcher:
+    def test_shapes_and_determinism(self):
+        toks = np.arange(4000, dtype=np.int32)
+        b1 = T.Batcher(toks, 4, 16, seed=9)
+        b2 = T.Batcher(toks, 4, 16, seed=9)
+        x1, x2 = b1.next(), b2.next()
+        assert x1.shape == (4, 17)
+        np.testing.assert_array_equal(x1, x2)
+
+    def test_windows_are_contiguous(self):
+        toks = np.arange(4000, dtype=np.int32)
+        b = T.Batcher(toks, 2, 8, seed=1)
+        x = b.next()
+        for row in x:
+            np.testing.assert_array_equal(np.diff(row), 1)
+
+
+class TestDistillTargets:
+    def test_hidden_windows_alignment(self):
+        b, t, d = 1, 5, 3
+        hidden = jnp.arange(b * t * d, dtype=jnp.float32).reshape(b, t, d)
+        wins = T.hidden_windows(hidden)
+        assert wins.shape == (b, t, C.HIDDEN_WIN, d)
+        # newest element of window t is hidden[t]
+        np.testing.assert_allclose(np.asarray(wins[0, 3, -1]),
+                                   np.asarray(hidden[0, 3]))
+        # one before that is hidden[t-1]
+        np.testing.assert_allclose(np.asarray(wins[0, 3, -2]),
+                                   np.asarray(hidden[0, 2]))
+        # pre-sequence rows are zero
+        np.testing.assert_allclose(np.asarray(wins[0, 0, :-1]), 0.0)
+
+    def test_next_token_targets(self):
+        labels = jnp.asarray([[10, 11, 12, 13]], jnp.int32)
+        tgt, tlen = T.next_token_targets(labels, u=3)
+        assert tgt.shape == (1, 4, 3)
+        # targets start AFTER the base token: position t targets labels[t+1:]
+        np.testing.assert_array_equal(np.asarray(tgt[0, 0]), [11, 12, 13])
+        np.testing.assert_array_equal(np.asarray(tgt[0, 2]), [13, C.PAD_ID, C.PAD_ID])
+        np.testing.assert_array_equal(np.asarray(tlen[0]), [3, 2, 1, 0])
+
+
+class TestEndToEndSmoke:
+    @pytest.fixture(scope="class")
+    def corpus_tokens(self):
+        # structured, learnable stream: short repeating pattern
+        pattern = np.asarray([7, 8, 9, 10, 11, 12] * 800, np.int32)
+        return pattern
+
+    def test_base_learns_repeating_pattern(self, tiny_cfg, corpus_tokens):
+        # 60 steps: the cosine schedule spends the first 20 in warmup
+        params, losses = T.train_base(tiny_cfg, corpus_tokens, steps=60,
+                                      log=lambda m: None)
+        assert losses[-1] < losses[0] * 0.75, (losses[0], losses[-1])
+
+    def test_all_heads_train_without_nan(self, tiny_cfg, corpus_tokens):
+        params, _ = T.train_base(tiny_cfg, corpus_tokens, steps=8,
+                                 log=lambda m: None)
+        for kind in ("ctc", "medusa", "hydra"):
+            hp, losses = T.train_head(kind, tiny_cfg, params, corpus_tokens,
+                                      steps=4, log=lambda m: None)
+            assert np.isfinite(losses).all(), kind
+
+    def test_ctc_head_loss_decreases_on_pattern(self, tiny_cfg, corpus_tokens):
+        params, _ = T.train_base(tiny_cfg, corpus_tokens, steps=25,
+                                 log=lambda m: None)
+        hp, losses = T.train_head("ctc", tiny_cfg, params, corpus_tokens,
+                                  steps=20, log=lambda m: None)
+        assert losses[-1] < losses[0], (losses[0], losses[-1])

@@ -1,0 +1,55 @@
+//! Regenerates **Figure 2**: average accepted tokens per decoding step (β)
+//! across the 8 MT-bench question categories, for CTC-drafter vs Medusa vs
+//! the vanilla baseline (β=1 by construction).
+//!
+//! Paper shape: coding highest for both speculative methods (regular,
+//! logical text), roleplay comparatively weak for CTC-drafter.
+//!
+//! `cargo bench --bench fig2_categories [-- --full]`
+
+use ctcdraft::bench::eval::{engine_for, run_workload};
+use ctcdraft::bench::eval_scale;
+use ctcdraft::config::Method;
+use ctcdraft::util::render_table;
+use ctcdraft::workload::{self, CATEGORIES};
+
+fn main() {
+    let artifacts = ctcdraft::default_artifacts_dir();
+    let model = "vic-tiny";
+    let (per_cat, max_new) = eval_scale();
+    let qs = workload::mtbench(per_cat, 13);
+    println!("### Figure 2 — per-category β on {model} \
+              ({per_cat} questions/category) ###\n");
+
+    let mut engine = engine_for(&artifacts, model, Method::Ctc)
+        .expect("engine (run `make artifacts`)");
+
+    let mut columns = Vec::new();
+    for method in [Method::Ctc, Method::Medusa, Method::Vanilla] {
+        engine.set_method(method, true);
+        let outcome = run_workload(&mut engine, &qs, max_new).unwrap();
+        columns.push((method.name(), outcome.per_category));
+    }
+
+    let mut rows = Vec::new();
+    for cat in CATEGORIES {
+        let mut row = vec![cat.to_string()];
+        for (_, per_cat_map) in &columns {
+            let beta = per_cat_map.get(cat).map(|s| s.beta()).unwrap_or(0.0);
+            row.push(format!("{beta:.2}"));
+        }
+        rows.push(row);
+    }
+    print!("{}", render_table(
+        &["category", "ctc β", "medusa β", "vanilla β"], &rows));
+
+    // simple ASCII bars for the ctc column (the figure itself)
+    println!("\nctc-drafter β by category:");
+    for cat in CATEGORIES {
+        let beta = columns[0].1.get(cat).map(|s| s.beta()).unwrap_or(0.0);
+        let bar = "█".repeat((beta * 8.0).round() as usize);
+        println!("  {cat:11} {beta:4.2} {bar}");
+    }
+    println!("\npaper: coding highest (~4.0 ctc), roleplay lowest for ctc; \
+              ctc > medusa in every category");
+}

@@ -1,0 +1,56 @@
+//! Regenerates **Figure 3**: percentage of inference time spent in each
+//! pipeline stage, CTC-drafter vs Medusa.
+//!
+//! Paper numbers: CTC-drafter — draft model 14.93%, CTC transform 5.36%,
+//! base model + others the rest; Medusa — draft model 3.71%. The shape to
+//! reproduce: CTC spends visibly more on drafting/transform than Medusa, yet
+//! the base model still dominates, so the better acceptance rate wins
+//! overall.
+//!
+//! `cargo bench --bench fig3_time_breakdown [-- --full]`
+
+use ctcdraft::bench::eval::{engine_for, run_workload};
+use ctcdraft::bench::eval_scale;
+use ctcdraft::config::Method;
+use ctcdraft::util::render_table;
+use ctcdraft::workload;
+
+fn pie(label: &str, pct: f64) -> String {
+    let blocks = "▒".repeat((pct / 2.0).round() as usize);
+    format!("  {label:13} {pct:5.2}% {blocks}")
+}
+
+fn main() {
+    let artifacts = ctcdraft::default_artifacts_dir();
+    let model = "vic-tiny";
+    let (per_cat, max_new) = eval_scale();
+    let qs = workload::mtbench(per_cat, 17);
+    println!("### Figure 3 — time breakdown on {model} ({} questions) ###\n",
+             qs.len());
+
+    let mut engine = engine_for(&artifacts, model, Method::Ctc)
+        .expect("engine (run `make artifacts`)");
+
+    let mut rows = Vec::new();
+    for method in [Method::Ctc, Method::Medusa] {
+        engine.set_method(method, true);
+        let s = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+        let (base, draft, transform, other) = s.breakdown.percentages();
+        println!("{}:", method.name());
+        println!("{}", pie("base model", base));
+        println!("{}", pie("draft model", draft));
+        println!("{}", pie("ctc transform", transform));
+        println!("{}\n", pie("others", other));
+        rows.push(vec![
+            method.name().to_string(),
+            format!("{base:.2}%"),
+            format!("{draft:.2}%"),
+            format!("{transform:.2}%"),
+            format!("{other:.2}%"),
+        ]);
+    }
+    print!("{}", render_table(
+        &["method", "base model", "draft model", "ctc transform", "others"],
+        &rows));
+    println!("\npaper: ctc — draft 14.93%, transform 5.36%; medusa — draft 3.71%");
+}

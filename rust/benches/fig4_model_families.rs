@@ -1,0 +1,71 @@
+//! Regenerates **Figure 4** (appendix): CTC-drafter γ and β across base-model
+//! families and sizes — Vicuna analogs *and* LLaMA-2-Chat analogs — on both
+//! MT-bench and GSM8K.
+//!
+//! Paper shape: the method transfers across families with only slight
+//! degradation; for the lc2 family, moving from the 7B to the 13B analog
+//! does not hurt draft quality.
+//!
+//! `cargo bench --bench fig4_model_families [-- --full]`
+
+use ctcdraft::bench::eval::{available_models, engine_for, run_workload};
+use ctcdraft::bench::eval_scale;
+use ctcdraft::config::Method;
+use ctcdraft::util::render_table;
+use ctcdraft::workload;
+
+fn main() {
+    let artifacts = ctcdraft::default_artifacts_dir();
+    let models = available_models(&artifacts);
+    if models.is_empty() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let (per_cat, max_new) = eval_scale();
+
+    for (wname, qs) in [
+        ("MT-bench", workload::mtbench(per_cat, 19)),
+        ("GSM8K", workload::gsm8k(per_cat * 8, 19)),
+    ] {
+        println!("\n### Figure 4 — {wname}: CTC-drafter across model families ###\n");
+        let mut rows = Vec::new();
+        let mut bars = Vec::new();
+        for model in &models {
+            let mut engine = match engine_for(&artifacts, model, Method::Vanilla) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("skip {model}: {e:#}");
+                    continue;
+                }
+            };
+            let analog = engine.runtime().manifest.models[model.as_str()]
+                .config
+                .analog
+                .clone();
+            let vanilla = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+            engine.set_method(Method::Ctc, true);
+            let s = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+            let gamma = s.gamma_vs(&vanilla);
+            rows.push(vec![
+                model.clone(),
+                analog.clone(),
+                format!("{gamma:.2}x"),
+                format!("{:.2}", s.beta()),
+            ]);
+            bars.push((analog, gamma, s.beta()));
+        }
+        print!("{}", render_table(&["model", "analog", "γ", "β"], &rows));
+        println!("\nγ bars:");
+        for (analog, gamma, _) in &bars {
+            println!("  {analog:18} {gamma:4.2} {}",
+                     "█".repeat((gamma * 10.0).round() as usize));
+        }
+        println!("β bars:");
+        for (analog, _, beta) in &bars {
+            println!("  {analog:18} {beta:4.2} {}",
+                     "█".repeat((beta * 8.0).round() as usize));
+        }
+    }
+    println!("\npaper Fig 4: γ≈2.2–2.8 and β≈3.4–3.6 across Vicuna-{{7,13,33}}B \
+              and LLaMA-2-Chat-{{7,13}}B, both datasets");
+}

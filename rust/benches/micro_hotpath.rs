@@ -1,0 +1,180 @@
+//! Micro-benchmarks of the L3 hot path — the per-step cost centers the §Perf
+//! pass optimizes: CTC transform, tree/mask construction, KV batch assembly,
+//! tokenizer, the PJRT step/draft calls, and the rust CTC DP vs the exported
+//! Pallas ctc_score kernel.
+//!
+//! `cargo bench --bench micro_hotpath`
+
+use ctcdraft::bench::{bench, print_results};
+use ctcdraft::config::Method;
+use ctcdraft::ctc;
+use ctcdraft::drafters::CandidatePath;
+use ctcdraft::runtime::tensor::Tensor;
+use ctcdraft::runtime::Runtime;
+use ctcdraft::testkit::gen;
+use ctcdraft::tree::TokenTree;
+use ctcdraft::util::rng::Rng;
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(0);
+
+    // ---------- pure host-side pieces (no runtime needed)
+    let slots = 8;
+    let vp1 = 513;
+    let blank = (vp1 - 1) as i32;
+    let logp = gen::logp_matrix(&mut rng, slots, vp1);
+    let raw: Vec<CandidatePath> = (0..12)
+        .map(|i| CandidatePath {
+            tokens: (0..slots).map(|_| rng.below(vp1) as i32).collect(),
+            score: -(i as f32),
+        })
+        .collect();
+    results.push(bench("ctc_transform(12 paths)", 200, 0.3, || {
+        let out = ctc::transform_paths(&raw, &logp, slots, vp1, blank, 6);
+        std::hint::black_box(out);
+    }));
+
+    results.push(bench("ctc_marginal_nll(U=6)", 500, 0.3, || {
+        let nll = ctc::ctc_marginal_nll(&logp, slots, vp1, &[5, 9, 3, 2, 8, 1]);
+        std::hint::black_box(nll);
+    }));
+
+    let paths: Vec<CandidatePath> = (0..12)
+        .map(|i| CandidatePath {
+            tokens: (0..6).map(|_| rng.below(512) as i32).collect(),
+            score: -(i as f32) * 0.3,
+        })
+        .collect();
+    results.push(bench("tree_from_paths(12x6)", 500, 0.3, || {
+        let t = TokenTree::from_paths(7, &paths, 32);
+        std::hint::black_box(t);
+    }));
+
+    let tree = TokenTree::from_paths(7, &paths, 32);
+    results.push(bench("tree_attention_bias(32x416)", 500, 0.3, || {
+        let b = tree.attention_bias(128, 384, 32);
+        std::hint::black_box(b);
+    }));
+
+    // ---------- runtime-backed pieces (need artifacts)
+    let artifacts = ctcdraft::default_artifacts_dir();
+    match Runtime::load(&artifacts) {
+        Ok(rt) => {
+            let model = rt.manifest.models.keys().next().cloned();
+            if let Some(model) = model {
+                bench_runtime(&rt, &model, &mut results);
+            }
+            bench_ctc_kernel(&rt, &mut results);
+        }
+        Err(e) => eprintln!("(skipping runtime benches: {e:#})"),
+    }
+
+    // ---------- end-to-end single step
+    if let Ok(rt) = Runtime::load(&artifacts) {
+        if rt.has_model("vic-tiny") {
+            use ctcdraft::config::EngineConfig;
+            use ctcdraft::engine::Engine;
+            let mut engine = Engine::new(rt, EngineConfig {
+                model: "vic-tiny".into(),
+                method: Method::Ctc,
+                ..EngineConfig::default()
+            }).unwrap();
+            let prompt = engine.format_prompt("What is 12 times 4?");
+            engine.admit(&prompt, 10_000).unwrap();
+            results.push(bench("engine_spec_step(b=1)", 20, 1.0, || {
+                if engine.n_active() == 0 {
+                    // sequence finished (EOS / capacity): re-admit so every
+                    // iteration measures a real speculative step
+                    engine.admit(&prompt, 10_000).unwrap();
+                }
+                let _ = engine.step().unwrap();
+            }));
+        }
+    }
+
+    print_results("micro hot-path", &results);
+}
+
+fn bench_runtime(rt: &Runtime, model: &str,
+                 results: &mut Vec<ctcdraft::bench::BenchResult>) {
+    let c = rt.manifest.constants.clone();
+    let cfg = rt.manifest.model(model).unwrap().config.clone();
+    let (l, h, dh, d) = (cfg.layers, cfg.n_heads, c.head_dim, cfg.d_model);
+    let cache_shape = [l, 1, c.lmax, h, dh];
+
+    // decode step (n=1)
+    let mut bias = vec![-1e9f32; c.lmax + 1];
+    bias[c.lmax] = 0.0;
+    let args = vec![
+        Tensor::zeros_f32(&cache_shape),
+        Tensor::zeros_f32(&cache_shape),
+        Tensor::from_i32(&[1, 1], vec![5]),
+        Tensor::from_i32(&[1, 1], vec![0]),
+        Tensor::from_f32(&[1, 1, c.lmax + 1], bias),
+    ];
+    results.push(bench(&format!("step_graph_{model}_b1_n1"), 20, 1.0, || {
+        let out = rt.run_step(model, 1, 1, &args).unwrap();
+        std::hint::black_box(out);
+    }));
+
+    // verify step (n=tree_n)
+    let n = c.tree_n;
+    let mut bias = vec![-1e9f32; n * (c.lmax + n)];
+    for i in 0..n {
+        bias[i * (c.lmax + n) + c.lmax + i] = 0.0;
+    }
+    let args = vec![
+        Tensor::zeros_f32(&cache_shape),
+        Tensor::zeros_f32(&cache_shape),
+        Tensor::from_i32(&[1, n], vec![5; n]),
+        Tensor::from_i32(&[1, n], vec![0; n]),
+        Tensor::from_f32(&[1, n, c.lmax + n], bias),
+    ];
+    results.push(bench(&format!("step_graph_{model}_b1_n{n}"), 10, 1.0, || {
+        let out = rt.run_step(model, 1, n, &args).unwrap();
+        std::hint::black_box(out);
+    }));
+
+    // ctc draft graph
+    let args = vec![
+        Tensor::zeros_f32(&[1, c.hidden_win, d]),
+        Tensor::from_i32(&[1], vec![c.hidden_win as i32]),
+    ];
+    results.push(bench(&format!("draft_ctc_{model}_b1"), 20, 1.0, || {
+        let out = rt.run_draft(model, "ctc", 1, &args).unwrap();
+        std::hint::black_box(out);
+    }));
+}
+
+fn bench_ctc_kernel(rt: &Runtime, results: &mut Vec<ctcdraft::bench::BenchResult>) {
+    let c = rt.manifest.constants.clone();
+    let b = c.ctc_score_batch;
+    let vp1 = c.vocab_size + 1;
+    let kname = format!("ctc_score_b{b}");
+    if !rt.manifest.kernels.contains_key(&kname) {
+        return;
+    }
+    let mut rng = Rng::new(3);
+    let logp = gen::logp_matrix(&mut rng, b * c.draft_slots, vp1);
+    let targets: Vec<i32> = (0..b * c.ctc_target_u)
+        .map(|_| rng.below(c.vocab_size) as i32)
+        .collect();
+    let args = vec![
+        Tensor::from_f32(&[b, c.draft_slots, vp1], logp.clone()),
+        Tensor::from_i32(&[b, c.ctc_target_u], targets.clone()),
+        Tensor::from_i32(&[b], vec![c.ctc_target_u as i32; b]),
+    ];
+    results.push(bench("ctc_score_kernel(pallas,b16)", 20, 1.0, || {
+        let out = rt.run_kernel(&kname, &args).unwrap();
+        std::hint::black_box(out);
+    }));
+    // the equivalent rust DP for the same batch
+    results.push(bench("ctc_score_rust_dp(b16)", 50, 0.5, || {
+        for i in 0..b {
+            let lp = &logp[i * c.draft_slots * vp1..(i + 1) * c.draft_slots * vp1];
+            let tgt = &targets[i * c.ctc_target_u..(i + 1) * c.ctc_target_u];
+            std::hint::black_box(ctc::ctc_marginal_nll(lp, c.draft_slots, vp1, tgt));
+        }
+    }));
+}

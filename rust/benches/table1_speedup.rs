@@ -1,0 +1,77 @@
+//! Regenerates **Table 1**: average speedup ratio γ and accepted tokens β on
+//! MT-bench and GSM8K, for every available base model × speculation method.
+//!
+//! Paper shape to reproduce (not absolute numbers — different substrate):
+//!   * ctc > hydra > medusa > vanilla in both γ and β on MT-bench,
+//!   * β for ctc ≳ 3 with a well-fit head,
+//!   * β decays as the base model grows (fixed-size draft head),
+//!   * on GSM8K ctc stays ahead of medusa.
+//!
+//! `cargo bench --bench table1_speedup [-- --full]`
+
+use ctcdraft::bench::eval::{engine_for, run_workload};
+use ctcdraft::bench::eval_scale;
+use ctcdraft::config::Method;
+use ctcdraft::metrics::RunSummary;
+use ctcdraft::util::render_table;
+use ctcdraft::workload;
+
+fn main() {
+    let artifacts = ctcdraft::default_artifacts_dir();
+    let models = ctcdraft::bench::eval::available_models(&artifacts);
+    if models.is_empty() {
+        eprintln!("no artifacts — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let (per_cat, max_new) = eval_scale();
+    let vic_models: Vec<&String> =
+        models.iter().filter(|m| m.starts_with("vic")).collect();
+
+    for (wname, qs) in [
+        ("MT-bench", workload::mtbench(per_cat, 7)),
+        ("GSM8K", workload::gsm8k(per_cat * 8, 7)),
+    ] {
+        println!("\n### Table 1 — {wname} ({} questions, ≤{max_new} tok) ###",
+                 qs.len());
+        let mut rows = Vec::new();
+        for model in &vic_models {
+            let mut engine = match engine_for(&artifacts, model, Method::Vanilla) {
+                Ok(e) => e,
+                Err(e) => {
+                    eprintln!("skip {model}: {e:#}");
+                    continue;
+                }
+            };
+            let mut vanilla: Option<RunSummary> = None;
+            for method in [Method::Vanilla, Method::Medusa, Method::Hydra,
+                           Method::Ctc] {
+                engine.set_method(method, true);
+                let s = run_workload(&mut engine, &qs, max_new)
+                    .expect("eval failed")
+                    .summary;
+                let gamma = vanilla.as_ref().map(|v| s.gamma_vs(v)).unwrap_or(1.0);
+                rows.push(vec![
+                    model.to_string(),
+                    engine
+                        .runtime()
+                        .manifest
+                        .models[model.as_str()]
+                        .config
+                        .analog
+                        .clone(),
+                    method.name().to_string(),
+                    format!("{gamma:.2}x"),
+                    format!("{:.2}", s.beta()),
+                ]);
+                if method == Method::Vanilla {
+                    vanilla = Some(s);
+                }
+            }
+        }
+        print!("{}", render_table(
+            &["model", "analog", "method", "γ", "β"], &rows));
+    }
+    println!("\npaper Table 1 (MT-bench, Vicuna-7B/13B/33B):");
+    println!("  vanilla 1.00/1.00/1.00β=1 · medusa 2.13x,2.58 | 1.97x,2.60 | 1.93x,2.55");
+    println!("  hydra 2.36x,3.04 | 2.17x,3.06 | 2.15x,2.95 · ctc 2.78x,3.56 | 2.52x,3.51 | 2.20x,3.53");
+}

@@ -1,0 +1,43 @@
+//! Regenerates **Table 2**: model-structure ablation — {linear+CE vs
+//! transformer+CTC} × {Medusa verify vs CTC verify} on MT-bench, Vicuna-7B
+//! analog. The paper's finding: the CTC head helps only together with the
+//! CTC transform (β 3.02→3.56, γ 2.25→2.78); without the transform, blanks
+//! and repeats spoil the candidates.
+//!
+//! `cargo bench --bench table2_ablation [-- --full]`
+
+use ctcdraft::bench::eval::{engine_for, run_workload};
+use ctcdraft::bench::eval_scale;
+use ctcdraft::config::Method;
+use ctcdraft::util::render_table;
+use ctcdraft::workload;
+
+fn main() {
+    let artifacts = ctcdraft::default_artifacts_dir();
+    let model = "vic-tiny";
+    let (per_cat, max_new) = eval_scale();
+    let qs = workload::mtbench(per_cat, 11);
+    println!("### Table 2 — ablation on {model} ({} questions) ###\n", qs.len());
+
+    let mut engine = engine_for(&artifacts, model, Method::Vanilla)
+        .expect("engine (run `make artifacts`)");
+    let vanilla = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+
+    let variants: [(&str, Method, bool); 3] = [
+        ("Linear layer + CE loss | Medusa verify", Method::Medusa, true),
+        ("Transformer + CTC loss | Medusa verify", Method::Ctc, false),
+        ("Transformer + CTC loss | CTC verify", Method::Ctc, true),
+    ];
+    let mut rows = Vec::new();
+    for (label, method, transform) in variants {
+        engine.set_method(method, transform);
+        let s = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.2}x", s.gamma_vs(&vanilla)),
+            format!("{:.2}", s.beta()),
+        ]);
+    }
+    print!("{}", render_table(&["draft module | verify", "γ", "β"], &rows));
+    println!("\npaper: 2.13x,2.58 · 2.25x,3.02 · 2.78x,3.56");
+}

@@ -1,0 +1,201 @@
+//! Criterion-like measurement harness (criterion is unavailable offline).
+//!
+//! Every `cargo bench` target is a `harness = false` binary built on this:
+//! warmup, timed iterations until both a minimum iteration count and a
+//! minimum wall budget are met, then mean/p50/p95 statistics and aligned
+//! table output. Deterministic workloads come from `workload::*` seeds.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub total_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.name.clone(),
+            self.iters.to_string(),
+            fmt_secs(self.mean_s),
+            fmt_secs(self.p50_s),
+            fmt_secs(self.p95_s),
+        ]
+    }
+}
+
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.0}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.2}s")
+    }
+}
+
+/// Measure `f`, running at least `min_iters` times and at least `min_secs`
+/// of wall time (whichever is later), after one warmup call.
+pub fn bench<F: FnMut()>(name: &str, min_iters: usize, min_secs: f64,
+                         mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut times = Vec::new();
+    let start = Instant::now();
+    loop {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+        if times.len() >= min_iters && start.elapsed().as_secs_f64() >= min_secs {
+            break;
+        }
+        if times.len() >= 100_000 {
+            break; // safety valve
+        }
+    }
+    summarize(name, &times)
+}
+
+/// Build a result from externally collected per-iteration times.
+pub fn summarize(name: &str, times: &[f64]) -> BenchResult {
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let total: f64 = sorted.iter().sum();
+    let q = |p: f64| -> f64 {
+        if sorted.is_empty() {
+            return 0.0;
+        }
+        let i = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+        sorted[i]
+    };
+    BenchResult {
+        name: name.to_string(),
+        iters: sorted.len(),
+        mean_s: if sorted.is_empty() { 0.0 } else { total / sorted.len() as f64 },
+        p50_s: q(0.5),
+        p95_s: q(0.95),
+        total_s: total,
+    }
+}
+
+pub fn print_results(title: &str, results: &[BenchResult]) {
+    println!("\n== {title} ==");
+    let rows: Vec<Vec<String>> = results.iter().map(|r| r.row()).collect();
+    print!("{}", crate::util::render_table(
+        &["benchmark", "iters", "mean", "p50", "p95"], &rows));
+}
+
+/// Shared flag: benches run a reduced workload unless `--full` is passed
+/// (or BENCH_FULL=1) — one CPU core makes full paper-scale sweeps slow.
+pub fn full_mode() -> bool {
+    std::env::args().any(|a| a == "--full")
+        || std::env::var("BENCH_FULL").ok().as_deref() == Some("1")
+}
+
+/// Standard bench workload sizes: (questions per category, max_new tokens).
+pub fn eval_scale() -> (usize, usize) {
+    if full_mode() {
+        (10, 128) // paper scale: 80 questions
+    } else {
+        (1, 32) // 8 questions — sized for the 1-core CI budget
+    }
+}
+
+// ---------------------------------------------------------------- eval runner
+/// Shared evaluation driver for the paper-table benches.
+pub mod eval {
+    use std::collections::BTreeMap;
+
+    use anyhow::Result;
+
+    use crate::config::{EngineConfig, Method};
+    use crate::engine::Engine;
+    use crate::metrics::RunSummary;
+    use crate::runtime::Runtime;
+    use crate::workload::Question;
+
+    #[derive(Debug, Clone, Default)]
+    pub struct EvalOutcome {
+        pub summary: RunSummary,
+        pub per_category: BTreeMap<&'static str, RunSummary>,
+    }
+
+    /// Run a question set through the engine with continuous batching,
+    /// aggregating β/timing overall and per category.
+    pub fn run_workload(engine: &mut Engine, qs: &[Question], max_new: usize)
+                        -> Result<EvalOutcome> {
+        let prompts: Vec<(String, usize)> = qs
+            .iter()
+            .map(|q| (engine.format_prompt(&q.text), max_new))
+            .collect();
+        let outs = engine.generate_batch(&prompts)?;
+        let mut outcome = EvalOutcome::default();
+        for (o, q) in outs.iter().zip(qs) {
+            let s = o.stats.summary();
+            outcome.summary.merge(&s);
+            outcome
+                .per_category
+                .entry(q.category)
+                .or_default()
+                .merge(&s);
+        }
+        Ok(outcome)
+    }
+
+    /// Build an engine for (model, method); reuse by swapping methods via
+    /// `Engine::set_method` to keep the compiled-graph cache warm.
+    pub fn engine_for(artifacts: &std::path::Path, model: &str,
+                      method: Method) -> Result<Engine> {
+        let rt = Runtime::load(artifacts)?;
+        Engine::new(rt, EngineConfig {
+            model: model.to_string(),
+            method,
+            ..EngineConfig::default()
+        })
+    }
+
+    /// Models present in the artifacts, in manifest (BTree) order.
+    pub fn available_models(artifacts: &std::path::Path) -> Vec<String> {
+        crate::config::Manifest::load(artifacts)
+            .map(|m| m.models.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_min_iters() {
+        let mut n = 0;
+        let r = bench("noop", 10, 0.0, || n += 1);
+        assert!(n >= 11); // warmup + 10
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_s >= 0.0);
+    }
+
+    #[test]
+    fn summarize_quantiles() {
+        let times: Vec<f64> = (1..=100).map(|i| i as f64 / 1000.0).collect();
+        let r = summarize("t", &times);
+        assert_eq!(r.iters, 100);
+        assert!((r.p50_s - 0.050).abs() < 0.002, "{}", r.p50_s);
+        assert!((r.p95_s - 0.095).abs() < 0.002);
+        assert!((r.mean_s - 0.0505).abs() < 0.001);
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-5).ends_with("us"));
+        assert!(fmt_secs(5e-2).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,347 @@
+//! Typed views over `artifacts/manifest.json` plus engine configuration.
+//!
+//! The manifest is the contract between the python build path and this
+//! coordinator: shapes, weight orderings and graph filenames all come from
+//! it — nothing shape-like is hard-coded on the rust side.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+/// Global serving constants exported by the python build.
+#[derive(Debug, Clone)]
+pub struct Constants {
+    pub vocab_size: usize,
+    pub blank_id: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub lmax: usize,
+    pub tree_n: usize,
+    pub prefill_n: usize,
+    pub draft_slots: usize,
+    pub ctc_target_u: usize,
+    pub hidden_win: usize,
+    pub medusa_heads: usize,
+    pub hydra_steps: usize,
+    pub hydra_beams: usize,
+    pub head_dim: usize,
+    pub batch_sizes: Vec<usize>,
+    pub step_ns: Vec<usize>,
+    pub ctc_score_batch: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub family: String,
+    pub analog: String,
+    pub layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub act: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct GraphMeta {
+    pub file: String,
+    pub batch: usize,
+    /// N for step graphs; 0 for draft/kernel graphs.
+    pub n: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct HeadMeta {
+    pub weights_file: String,
+    pub weight_order: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub config: ModelConfig,
+    pub weights_file: String,
+    pub weight_order: Vec<String>,
+    pub heads: BTreeMap<String, HeadMeta>,
+    pub graphs: BTreeMap<String, GraphMeta>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub constants: Constants,
+    pub tokenizer_file: String,
+    pub chat_templates: BTreeMap<String, (String, String)>,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub kernels: BTreeMap<String, GraphMeta>,
+}
+
+fn req_usize(v: &Json, key: &str) -> Result<usize> {
+    v.get(key)
+        .as_usize()
+        .ok_or_else(|| anyhow!("manifest: missing numeric field '{key}'"))
+}
+
+fn req_str(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: missing string field '{key}'"))?
+        .to_string())
+}
+
+fn str_list(v: &Json) -> Vec<String> {
+    v.as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+        .unwrap_or_default()
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = parse(&text).map_err(|e| anyhow!("{e}"))?;
+        if v.get("version").as_i64() != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let c = v.get("constants");
+        let constants = Constants {
+            vocab_size: req_usize(c, "vocab_size")?,
+            blank_id: req_usize(c, "blank_id")?,
+            pad_id: c.get("pad_id").as_i64().unwrap_or(0) as i32,
+            bos_id: c.get("bos_id").as_i64().unwrap_or(1) as i32,
+            eos_id: c.get("eos_id").as_i64().unwrap_or(2) as i32,
+            lmax: req_usize(c, "lmax")?,
+            tree_n: req_usize(c, "tree_n")?,
+            prefill_n: req_usize(c, "prefill_n")?,
+            draft_slots: req_usize(c, "draft_slots")?,
+            ctc_target_u: req_usize(c, "ctc_target_u")?,
+            hidden_win: req_usize(c, "hidden_win")?,
+            medusa_heads: req_usize(c, "medusa_heads")?,
+            hydra_steps: req_usize(c, "hydra_steps")?,
+            hydra_beams: req_usize(c, "hydra_beams")?,
+            head_dim: req_usize(c, "head_dim")?,
+            batch_sizes: c
+                .get("batch_sizes")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_else(|| vec![1, 4]),
+            step_ns: c
+                .get("step_ns")
+                .as_arr()
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_else(|| vec![1, 32, 64]),
+            ctc_score_batch: c.get("ctc_score_batch").as_usize().unwrap_or(16),
+        };
+
+        let mut chat_templates = BTreeMap::new();
+        if let Some(obj) = v.get("chat_templates").as_obj() {
+            for (fam, t) in obj {
+                let full = t.idx(0).as_str().unwrap_or("{q} {a}").to_string();
+                let prompt = t.idx(1).as_str().unwrap_or("{q}").to_string();
+                chat_templates.insert(fam.clone(), (full, prompt));
+            }
+        }
+
+        let parse_graph = |g: &Json| -> Result<GraphMeta> {
+            Ok(GraphMeta {
+                file: req_str(g, "file")?,
+                batch: g.get("batch").as_usize().unwrap_or(1),
+                n: g.get("n").as_usize().unwrap_or(0),
+            })
+        };
+
+        let mut models = BTreeMap::new();
+        if let Some(obj) = v.get("models").as_obj() {
+            for (name, m) in obj {
+                let cfgv = m.get("config");
+                let config = ModelConfig {
+                    family: req_str(cfgv, "family")?,
+                    analog: req_str(cfgv, "analog")?,
+                    layers: req_usize(cfgv, "layers")?,
+                    d_model: req_usize(cfgv, "d_model")?,
+                    n_heads: req_usize(cfgv, "n_heads")?,
+                    d_ff: req_usize(cfgv, "d_ff")?,
+                    act: req_str(cfgv, "act")?,
+                };
+                let mut heads = BTreeMap::new();
+                if let Some(hobj) = m.get("heads").as_obj() {
+                    for (hname, h) in hobj {
+                        heads.insert(
+                            hname.clone(),
+                            HeadMeta {
+                                weights_file: req_str(h, "weights")?,
+                                weight_order: str_list(h.get("weight_order")),
+                            },
+                        );
+                    }
+                }
+                let mut graphs = BTreeMap::new();
+                if let Some(gobj) = m.get("graphs").as_obj() {
+                    for (gname, g) in gobj {
+                        graphs.insert(gname.clone(), parse_graph(g)?);
+                    }
+                }
+                models.insert(
+                    name.clone(),
+                    ModelMeta {
+                        config,
+                        weights_file: req_str(m, "weights")?,
+                        weight_order: str_list(m.get("weight_order")),
+                        heads,
+                        graphs,
+                    },
+                );
+            }
+        }
+
+        let mut kernels = BTreeMap::new();
+        if let Some(kobj) = v.get("kernels").as_obj() {
+            for (kname, k) in kobj {
+                kernels.insert(kname.clone(), parse_graph(k)?);
+            }
+        }
+
+        Ok(Manifest {
+            dir,
+            constants,
+            tokenizer_file: req_str(&v, "tokenizer")?,
+            chat_templates,
+            models,
+            kernels,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Prompt template for a model family ("USER: {q}\nASSISTANT:").
+    pub fn prompt_template(&self, family: &str) -> &str {
+        self.chat_templates
+            .get(family)
+            .map(|(_, p)| p.as_str())
+            .unwrap_or("{q}")
+    }
+
+    /// Pick the smallest exported batch size >= the requested one.
+    pub fn pick_batch(&self, want: usize) -> usize {
+        let mut sizes = self.constants.batch_sizes.clone();
+        sizes.sort_unstable();
+        for b in &sizes {
+            if *b >= want {
+                return *b;
+            }
+        }
+        *sizes.last().unwrap_or(&1)
+    }
+}
+
+/// Engine-level knobs (speculation method, tree shaping, sampling).
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub model: String,
+    pub method: Method,
+    /// top-k per CTC slot when expanding raw candidates
+    pub slot_topk: usize,
+    /// number of raw candidate paths kept before CTC transform
+    pub max_paths: usize,
+    /// disable the CTC transform (Table 2 ablation: "Medusa verify")
+    pub ctc_transform: bool,
+    pub max_new_tokens: usize,
+    /// 0.0 = greedy (paper's setting); >0 enables stochastic acceptance
+    pub temperature: f32,
+    pub seed: u64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Method {
+    Vanilla,
+    Medusa,
+    Hydra,
+    Ctc,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "vanilla" => Method::Vanilla,
+            "medusa" => Method::Medusa,
+            "hydra" => Method::Hydra,
+            "ctc" => Method::Ctc,
+            other => bail!("unknown method '{other}' (vanilla|medusa|hydra|ctc)"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Vanilla => "vanilla",
+            Method::Medusa => "medusa",
+            Method::Hydra => "hydra",
+            Method::Ctc => "ctc",
+        }
+    }
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            model: "vic-tiny".into(),
+            method: Method::Ctc,
+            slot_topk: 5,
+            max_paths: 16,
+            ctc_transform: true,
+            max_new_tokens: 128,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in [Method::Vanilla, Method::Medusa, Method::Hydra, Method::Ctc] {
+            assert_eq!(Method::parse(m.name()).unwrap(), m);
+        }
+        assert!(Method::parse("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_loads_from_artifacts_if_present() {
+        // integration-ish: only runs when artifacts/ exists
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.constants.vocab_size > 0);
+        assert_eq!(m.constants.blank_id, m.constants.vocab_size);
+        for (_name, meta) in &m.models {
+            assert!(!meta.weight_order.is_empty());
+            assert!(meta.graphs.contains_key("step_b1_n1"));
+            assert!(meta.heads.contains_key("ctc"));
+        }
+    }
+
+    #[test]
+    fn pick_batch() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.pick_batch(1), 1);
+        assert_eq!(m.pick_batch(2), 4);
+        assert_eq!(m.pick_batch(4), 4);
+        assert_eq!(m.pick_batch(9), 4); // clamps to largest
+    }
+}

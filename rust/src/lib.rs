@@ -1,0 +1,44 @@
+//! # ctcdraft — CTC-drafter speculative decoding (NeurIPS 2024 reproduction)
+//!
+//! Rust serving coordinator for "Speculative Decoding with CTC-based Draft
+//! Model for LLM Inference Acceleration" (Wen, Gui & Feng). Three layers:
+//!
+//! * **L1/L2 (build time, python)** — Pallas kernels + JAX transformer,
+//!   AOT-lowered to HLO text in `artifacts/` (`make artifacts`).
+//! * **L3 (this crate)** — the request path: router/server, continuous
+//!   batcher, KV-cache manager, draft-token tree construction, the paper's
+//!   **CTC Transform** verify stage, acceptance, metrics.
+//!
+//! Quick start:
+//! ```no_run
+//! use ctcdraft::{config::EngineConfig, engine::Engine, runtime::Runtime};
+//! let rt = Runtime::load("artifacts").unwrap();
+//! let mut engine = Engine::new(rt, EngineConfig::default()).unwrap();
+//! let out = engine.generate("USER: What is 37 + 45?\nASSISTANT:", 64).unwrap();
+//! println!("{} ({:.1} tok/step)", out.text, out.stats.accepted_per_step());
+//! ```
+
+pub mod bench;
+pub mod config;
+pub mod ctc;
+pub mod drafters;
+pub mod engine;
+pub mod kvcache;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod testkit;
+pub mod tokenizer;
+pub mod tree;
+pub mod util;
+pub mod workload;
+
+/// Default artifacts directory (relative to the repo root).
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    // prefer CWD/artifacts, fall back to the crate dir (tests, examples)
+    let cwd = std::path::PathBuf::from("artifacts");
+    if cwd.join("manifest.json").exists() {
+        return cwd;
+    }
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,236 @@
+//! `ctcdraft` CLI — leader entrypoint for the CTC-drafter serving stack.
+//!
+//! Subcommands:
+//!   info      — inspect artifacts/manifest
+//!   generate  — one-shot generation with any speculation method
+//!   eval      — quick β/γ evaluation on a workload slice
+//!   serve     — start the TCP JSON-lines server (router + workers)
+//!   client    — query a running server
+//!   warmup    — precompile every graph of a model
+
+use anyhow::{bail, Result};
+
+use ctcdraft::config::{EngineConfig, Method};
+use ctcdraft::engine::Engine;
+use ctcdraft::metrics::RunSummary;
+use ctcdraft::runtime::Runtime;
+use ctcdraft::server::{Client, Server, ServerConfig};
+use ctcdraft::util::cli::Cli;
+use ctcdraft::{default_artifacts_dir, workload};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some((cmd, rest)) = args.split_first() else {
+        eprintln!("{}", usage());
+        std::process::exit(2);
+    };
+    let result = match cmd.as_str() {
+        "info" => cmd_info(rest),
+        "generate" => cmd_generate(rest),
+        "eval" => cmd_eval(rest),
+        "serve" => cmd_serve(rest),
+        "client" => cmd_client(rest),
+        "warmup" => cmd_warmup(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{}", usage());
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> String {
+    "ctcdraft — CTC-drafter speculative decoding server\n\n\
+     commands:\n\
+     \x20 info                       show artifact manifest summary\n\
+     \x20 generate --prompt <text>   one-shot generation\n\
+     \x20 eval                       quick workload evaluation (β, tok/s)\n\
+     \x20 serve                      start the TCP server\n\
+     \x20 client --prompt <text>     query a running server\n\
+     \x20 warmup                     precompile all graphs for a model\n\n\
+     run `ctcdraft <command> --help` for options"
+        .to_string()
+}
+
+fn engine_opts(cli: Cli) -> Cli {
+    cli.opt("artifacts", "artifacts directory", None)
+        .opt("model", "model name", Some("vic-tiny"))
+        .opt("method", "vanilla|medusa|hydra|ctc", Some("ctc"))
+        .opt("max-new", "max new tokens", Some("64"))
+        .opt("temperature", "sampling temperature (0 = greedy)", Some("0"))
+        .opt("seed", "rng seed", Some("0"))
+        .flag("no-ctc-transform", "disable the CTC transform (ablation)")
+}
+
+fn build_engine_cfg(a: &ctcdraft::util::cli::Args) -> Result<EngineConfig> {
+    Ok(EngineConfig {
+        model: a.get_or("model", "vic-tiny").to_string(),
+        method: Method::parse(a.get_or("method", "ctc"))?,
+        ctc_transform: !a.flag("no-ctc-transform"),
+        max_new_tokens: a.usize("max-new", 64),
+        temperature: a.f64("temperature", 0.0) as f32,
+        seed: a.u64("seed", 0),
+        ..EngineConfig::default()
+    })
+}
+
+fn artifacts_dir(a: &ctcdraft::util::cli::Args) -> std::path::PathBuf {
+    a.get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir)
+}
+
+fn parse_args(cli: Cli, argv: &[String]) -> Result<ctcdraft::util::cli::Args> {
+    match cli.parse_from(argv.iter().cloned()) {
+        Ok(a) => Ok(a),
+        Err(usage) => {
+            println!("{usage}");
+            std::process::exit(2);
+        }
+    }
+}
+
+// ---------------------------------------------------------------- info
+fn cmd_info(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("ctcdraft info", "artifact summary")
+        .opt("artifacts", "artifacts directory", None);
+    let a = parse_args(cli, argv)?;
+    let rt = Runtime::load(artifacts_dir(&a))?;
+    let m = &rt.manifest;
+    println!("artifacts: {}", m.dir.display());
+    println!("vocab: {} (+blank {})", m.constants.vocab_size, m.constants.blank_id);
+    println!("lmax {}  tree_n {}  slots {}  window {}",
+             m.constants.lmax, m.constants.tree_n,
+             m.constants.draft_slots, m.constants.hidden_win);
+    for (name, meta) in &m.models {
+        let c = &meta.config;
+        println!(
+            "model {name:10} analog={:18} L={} D={} H={} act={} graphs={} heads={:?}",
+            c.analog, c.layers, c.d_model, c.n_heads, c.act,
+            meta.graphs.len(),
+            meta.heads.keys().collect::<Vec<_>>()
+        );
+    }
+    for (name, _) in &m.kernels {
+        println!("kernel {name}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- generate
+fn cmd_generate(argv: &[String]) -> Result<()> {
+    let cli = engine_opts(Cli::new("ctcdraft generate", "one-shot generation"))
+        .opt("prompt", "raw question (chat template is applied)", None)
+        .flag("raw", "do not apply the chat template");
+    let a = parse_args(cli, argv)?;
+    let Some(prompt) = a.get("prompt") else { bail!("--prompt required") };
+    let cfg = build_engine_cfg(&a)?;
+    let max_new = cfg.max_new_tokens;
+    let rt = Runtime::load(artifacts_dir(&a))?;
+    let mut engine = Engine::new(rt, cfg)?;
+    let full_prompt = if a.flag("raw") {
+        prompt.to_string()
+    } else {
+        engine.format_prompt(prompt)
+    };
+    let out = engine.generate(&full_prompt, max_new)?;
+    println!("{}", out.text);
+    let s = &out.stats;
+    let (bm, dr, tr, ot) = s.breakdown.percentages();
+    eprintln!(
+        "\n[{} tokens, {} steps, β={:.2}, {:.2}s | base {bm:.1}% draft {dr:.1}% \
+         transform {tr:.1}% other {ot:.1}%]",
+        s.new_tokens, s.steps, s.accepted_per_step(), s.wall_secs
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- eval
+fn cmd_eval(argv: &[String]) -> Result<()> {
+    let cli = engine_opts(Cli::new("ctcdraft eval", "quick workload evaluation"))
+        .opt("workload", "mtbench|gsm8k", Some("mtbench"))
+        .opt("n", "questions (mtbench: per category)", Some("1"));
+    let a = parse_args(cli, argv)?;
+    let cfg = build_engine_cfg(&a)?;
+    let n = a.usize("n", 1);
+    let qs = match a.get_or("workload", "mtbench") {
+        "mtbench" => workload::mtbench(n, cfg.seed),
+        "gsm8k" => workload::gsm8k(n * 8, cfg.seed),
+        other => bail!("unknown workload {other}"),
+    };
+    let rt = Runtime::load(artifacts_dir(&a))?;
+    let max_new = cfg.max_new_tokens;
+    let mut engine = Engine::new(rt, cfg)?;
+    let prompts: Vec<(String, usize)> = qs
+        .iter()
+        .map(|q| (engine.format_prompt(&q.text), max_new))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let outs = engine.generate_batch(&prompts)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let mut sum = RunSummary::default();
+    for o in &outs {
+        sum.merge(&o.stats.summary());
+    }
+    println!(
+        "{} questions | {} tokens | β={:.2} | {:.1} tok/s | wall {wall:.1}s",
+        outs.len(), sum.total_tokens, sum.beta(),
+        sum.total_tokens as f64 / wall
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------- serve
+fn cmd_serve(argv: &[String]) -> Result<()> {
+    let cli = engine_opts(Cli::new("ctcdraft serve", "start the TCP server"))
+        .opt("addr", "listen address", Some("127.0.0.1:7700"))
+        .opt("workers", "engine worker threads", Some("1"));
+    let a = parse_args(cli, argv)?;
+    let cfg = ServerConfig {
+        addr: a.get_or("addr", "127.0.0.1:7700").to_string(),
+        workers: a.usize("workers", 1),
+        artifacts: artifacts_dir(&a),
+        engine: build_engine_cfg(&a)?,
+    };
+    let server = Server::start(cfg)?;
+    println!("listening on {} — ctrl-c to stop", server.local_addr);
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+// ---------------------------------------------------------------- client
+fn cmd_client(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("ctcdraft client", "query a running server")
+        .opt("addr", "server address", Some("127.0.0.1:7700"))
+        .opt("prompt", "question text", None)
+        .opt("max-new", "max new tokens", Some("64"));
+    let a = parse_args(cli, argv)?;
+    let Some(prompt) = a.get("prompt") else { bail!("--prompt required") };
+    let mut client = Client::connect(a.get_or("addr", "127.0.0.1:7700"))?;
+    let reply = client.generate(1, prompt, a.usize("max-new", 64))?;
+    println!("{}", reply.text);
+    eprintln!("[{} tokens, {} steps, β={:.2}, {:.0}ms]",
+              reply.tokens, reply.steps, reply.beta, reply.ms);
+    Ok(())
+}
+
+// ---------------------------------------------------------------- warmup
+fn cmd_warmup(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("ctcdraft warmup", "precompile all graphs")
+        .opt("artifacts", "artifacts directory", None)
+        .opt("model", "model name", Some("vic-tiny"));
+    let a = parse_args(cli, argv)?;
+    let rt = Runtime::load(artifacts_dir(&a))?;
+    let t0 = std::time::Instant::now();
+    let n = rt.warmup(a.get_or("model", "vic-tiny"))?;
+    println!("compiled {n} graphs in {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,310 @@
+//! Serving metrics: per-stage timing breakdown (Fig 3), latency histograms,
+//! acceptance accounting (β), and speedup reporting (γ).
+
+use std::collections::BTreeMap;
+
+/// Wall-time split of a decoding run into the paper's Fig-3 stages.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct StageBreakdown {
+    /// base-model step-graph execution (prefill + verify/decode)
+    pub base_model_secs: f64,
+    /// draft-graph execution
+    pub draft_secs: f64,
+    /// CTC transform + candidate expansion + tree/mask building
+    pub transform_secs: f64,
+    /// everything else (acceptance walk, cache writes, bookkeeping)
+    pub other_secs: f64,
+}
+
+impl StageBreakdown {
+    pub fn total(&self) -> f64 {
+        self.base_model_secs + self.draft_secs + self.transform_secs + self.other_secs
+    }
+
+    /// Percentages in Fig-3 order: (base model, draft model, ctc transform, others).
+    pub fn percentages(&self) -> (f64, f64, f64, f64) {
+        let t = self.total().max(1e-12);
+        (
+            100.0 * self.base_model_secs / t,
+            100.0 * self.draft_secs / t,
+            100.0 * self.transform_secs / t,
+            100.0 * self.other_secs / t,
+        )
+    }
+
+    pub fn add(&mut self, other: &StageBreakdown) {
+        self.base_model_secs += other.base_model_secs;
+        self.draft_secs += other.draft_secs;
+        self.transform_secs += other.transform_secs;
+        self.other_secs += other.other_secs;
+    }
+}
+
+/// Calibrated accelerator roofline for paper-comparable speedups.
+///
+/// The PJRT CPU substrate is *compute-bound on one core*, so verifying a
+/// 32-node tree costs ~32× a single-token step and wall-clock speculative
+/// decoding cannot win there by construction. The paper's γ is measured on
+/// GPUs where single-token decoding is **memory-bandwidth-bound** — verify
+/// and decode cost almost the same. This model charges each graph call
+/// `launch + max(bytes/BW, flops/TP)` with A100-class constants; β and all
+/// host-side costs stay measured. DESIGN.md §2 documents the substitution;
+/// benches report both γ_device (model) and γ_wall (raw CPU).
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceModel {
+    /// HBM bandwidth, GB/s
+    pub hbm_gbps: f64,
+    /// sustained matmul throughput, TFLOP/s
+    pub tflops: f64,
+    /// per-graph-call launch/dispatch overhead, seconds
+    pub launch_secs: f64,
+}
+
+impl Default for DeviceModel {
+    fn default() -> Self {
+        // A100-40GB-ish: 1555 GB/s, ~150 TFLOP/s sustained fp16, 8us launch
+        DeviceModel { hbm_gbps: 1555.0, tflops: 150.0, launch_secs: 8e-6 }
+    }
+}
+
+impl DeviceModel {
+    /// Modeled execution time of one graph call.
+    pub fn graph_secs(&self, bytes_moved: f64, flops: f64) -> f64 {
+        let t_mem = bytes_moved / (self.hbm_gbps * 1e9);
+        let t_comp = flops / (self.tflops * 1e12);
+        self.launch_secs + t_mem.max(t_comp)
+    }
+}
+
+/// Log-bucketed latency histogram (microseconds to ~minutes).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Histogram { buckets: vec![0; 36], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        self.record_us((secs * 1e6).max(0.0) as u64);
+    }
+
+    pub fn record_us(&mut self, us: u64) {
+        let b = (64 - us.max(1).leading_zeros() as usize - 1).min(self.buckets.len() - 1);
+        self.buckets[b] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries (upper bound of bucket).
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+}
+
+/// Named counters + histograms registry for a serving process.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub counters: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, Histogram>,
+    pub breakdown: StageBreakdown,
+}
+
+impl Metrics {
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += by;
+    }
+
+    pub fn observe_secs(&mut self, name: &str, secs: f64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_default()
+            .record_secs(secs);
+    }
+
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("{k}: {v}\n"));
+        }
+        for (k, h) in &self.histograms {
+            s.push_str(&format!(
+                "{k}: n={} mean={:.1}us p50={}us p95={}us max={}us\n",
+                h.count(),
+                h.mean_us(),
+                h.quantile_us(0.5),
+                h.quantile_us(0.95),
+                h.max_us()
+            ));
+        }
+        let (bm, dr, tr, ot) = self.breakdown.percentages();
+        s.push_str(&format!(
+            "breakdown: base={bm:.1}% draft={dr:.1}% transform={tr:.1}% other={ot:.1}%\n"
+        ));
+        s
+    }
+}
+
+/// Paper metrics for one evaluated run (a set of questions, one method).
+#[derive(Debug, Clone, Default)]
+pub struct RunSummary {
+    pub total_tokens: usize,
+    pub total_steps: usize,
+    /// measured wall time on this substrate (1-core CPU PJRT)
+    pub total_secs: f64,
+    /// modeled accelerator time (DeviceModel); 0 when not tracked
+    pub device_secs: f64,
+    pub breakdown: StageBreakdown,
+}
+
+impl RunSummary {
+    /// β — average tokens accepted per base-model decoding step (Eq. 12).
+    pub fn beta(&self) -> f64 {
+        if self.total_steps == 0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / self.total_steps as f64
+        }
+    }
+
+    /// tokens per second over the whole run.
+    pub fn tokens_per_sec(&self) -> f64 {
+        if self.total_secs <= 0.0 {
+            0.0
+        } else {
+            self.total_tokens as f64 / self.total_secs
+        }
+    }
+
+    /// γ — speedup vs a vanilla run (Eq. 13: ratio of per-token times) on
+    /// the modeled device when both runs tracked it, else on wall time.
+    pub fn gamma_vs(&self, vanilla: &RunSummary) -> f64 {
+        if self.device_secs > 0.0 && vanilla.device_secs > 0.0 {
+            let spec = self.device_secs / self.total_tokens.max(1) as f64;
+            let van = vanilla.device_secs / vanilla.total_tokens.max(1) as f64;
+            return if spec <= 0.0 { 0.0 } else { van / spec };
+        }
+        self.gamma_wall_vs(vanilla)
+    }
+
+    /// γ measured on raw wall-clock of this substrate (compute-bound CPU —
+    /// expected < 1 for tree verification; see DeviceModel docs).
+    pub fn gamma_wall_vs(&self, vanilla: &RunSummary) -> f64 {
+        let spec = self.total_secs / self.total_tokens.max(1) as f64;
+        let van = vanilla.total_secs / vanilla.total_tokens.max(1) as f64;
+        if spec <= 0.0 {
+            0.0
+        } else {
+            van / spec
+        }
+    }
+
+    pub fn merge(&mut self, other: &RunSummary) {
+        self.total_tokens += other.total_tokens;
+        self.total_steps += other.total_steps;
+        self.total_secs += other.total_secs;
+        self.device_secs += other.device_secs;
+        self.breakdown.add(&other.breakdown);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_percentages_sum_to_100() {
+        let b = StageBreakdown {
+            base_model_secs: 0.7,
+            draft_secs: 0.15,
+            transform_secs: 0.05,
+            other_secs: 0.1,
+        };
+        let (a, d, t, o) = b.percentages();
+        assert!((a + d + t + o - 100.0).abs() < 1e-9);
+        assert!((a - 70.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let mut h = Histogram::new();
+        for us in [10u64, 100, 1000, 10_000, 100_000] {
+            for _ in 0..20 {
+                h.record_us(us);
+            }
+        }
+        assert_eq!(h.count(), 100);
+        assert!(h.quantile_us(0.5) <= h.quantile_us(0.95));
+        assert!(h.quantile_us(0.95) <= h.quantile_us(1.0).max(h.max_us()));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_us(0.5), 0);
+        assert_eq!(h.mean_us(), 0.0);
+    }
+
+    #[test]
+    fn run_summary_beta_gamma() {
+        let vanilla = RunSummary { total_tokens: 100, total_steps: 100, total_secs: 10.0, ..Default::default() };
+        let spec = RunSummary { total_tokens: 100, total_steps: 30, total_secs: 4.0, ..Default::default() };
+        assert!((spec.beta() - 100.0 / 30.0).abs() < 1e-9);
+        assert!((vanilla.beta() - 1.0).abs() < 1e-9);
+        // vanilla: 0.1 s/tok; spec: 0.04 s/tok -> gamma 2.5
+        assert!((spec.gamma_vs(&vanilla) - 2.5).abs() < 1e-9);
+        assert!((vanilla.gamma_vs(&vanilla) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn metrics_report_contains_entries() {
+        let mut m = Metrics::default();
+        m.inc("requests", 3);
+        m.observe_secs("step", 0.01);
+        let r = m.report();
+        assert!(r.contains("requests: 3"));
+        assert!(r.contains("step:"));
+        assert!(r.contains("breakdown:"));
+    }
+}

@@ -1,0 +1,356 @@
+//! PJRT runtime: loads AOT artifacts (`*.hlo.txt`) and executes them.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. HLO
+//! *text* is the interchange format — xla_extension 0.5.1 rejects jax≥0.5
+//! serialized protos (64-bit instruction ids).
+//!
+//! Executables are compiled lazily and cached; model/head weights are
+//! converted to literals once at load.
+
+pub mod tensor;
+pub mod weights;
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Manifest;
+use tensor::Tensor;
+
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    /// graph file name -> compiled executable (lazy)
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// "model" or "model#head" -> ordered weight literals
+    weights: RefCell<HashMap<String, Rc<Vec<xla::Literal>>>>,
+    /// raw host copies of weights (kept for emb access by drafters/tests)
+    host_weights: RefCell<HashMap<String, Rc<BTreeMap<String, Tensor>>>>,
+    /// execution counters (perf accounting)
+    pub stats: RefCell<RuntimeStats>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RuntimeStats {
+    pub executions: u64,
+    pub compiles: u64,
+    pub exec_secs: f64,
+}
+
+impl Runtime {
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            manifest,
+            client,
+            exes: RefCell::new(HashMap::new()),
+            weights: RefCell::new(HashMap::new()),
+            host_weights: RefCell::new(HashMap::new()),
+            stats: RefCell::new(RuntimeStats::default()),
+        })
+    }
+
+    // ------------------------------------------------------------ weights
+    fn load_weight_list(&self, file: &str, order: &[String], key: &str)
+                        -> Result<Rc<Vec<xla::Literal>>> {
+        if let Some(w) = self.weights.borrow().get(key) {
+            return Ok(w.clone());
+        }
+        let tensors = weights::read_tensors(self.manifest.dir.join(file))?;
+        let mut lits = Vec::with_capacity(order.len());
+        for name in order {
+            let t = tensors
+                .get(name)
+                .ok_or_else(|| anyhow!("weights file {file} missing '{name}'"))?;
+            lits.push(t.to_literal()?);
+        }
+        let rc = Rc::new(lits);
+        self.weights.borrow_mut().insert(key.to_string(), rc.clone());
+        self.host_weights
+            .borrow_mut()
+            .insert(key.to_string(), Rc::new(tensors));
+        Ok(rc)
+    }
+
+    pub fn base_weights(&self, model: &str) -> Result<Rc<Vec<xla::Literal>>> {
+        let meta = self.manifest.model(model)?;
+        self.load_weight_list(&meta.weights_file, &meta.weight_order, model)
+    }
+
+    pub fn head_weights(&self, model: &str, head: &str) -> Result<Rc<Vec<xla::Literal>>> {
+        let meta = self.manifest.model(model)?;
+        let h = meta
+            .heads
+            .get(head)
+            .ok_or_else(|| anyhow!("model {model} has no head '{head}'"))?;
+        self.load_weight_list(&h.weights_file, &h.weight_order,
+                              &format!("{model}#{head}"))
+    }
+
+    /// Total byte size of a loaded weight list (device-model accounting).
+    pub fn weights_nbytes(&self, key: &str) -> usize {
+        self.host_weights
+            .borrow()
+            .get(key)
+            .map(|m| m.values().map(|t| t.len() * 4).sum())
+            .unwrap_or(0)
+    }
+
+    /// Host copy of one base-model tensor (e.g. "emb").
+    pub fn host_tensor(&self, model: &str, name: &str) -> Result<Tensor> {
+        self.base_weights(model)?; // ensure loaded
+        let hw = self.host_weights.borrow();
+        let map = hw
+            .get(model)
+            .ok_or_else(|| anyhow!("weights for {model} not loaded"))?;
+        map.get(name)
+            .cloned()
+            .ok_or_else(|| anyhow!("model {model} has no tensor '{name}'"))
+    }
+
+    // ------------------------------------------------------------ executables
+    fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(file) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))?;
+        self.stats.borrow_mut().compiles += 1;
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(file.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    /// Force-compile every graph of a model (warmup; avoids first-request lag).
+    pub fn warmup(&self, model: &str) -> Result<usize> {
+        let files: Vec<String> = self
+            .manifest
+            .model(model)?
+            .graphs
+            .values()
+            .map(|g| g.file.clone())
+            .collect();
+        let n = files.len();
+        for f in files {
+            self.executable(&f)?;
+        }
+        Ok(n)
+    }
+
+    fn execute(&self, file: &str, args: &[&xla::Literal]) -> Result<Vec<Tensor>> {
+        let exe = self.executable(file)?;
+        let t0 = std::time::Instant::now();
+        let borrowed: Vec<&xla::Literal> = args.to_vec();
+        let result = exe
+            .execute::<&xla::Literal>(&borrowed)
+            .map_err(|e| anyhow!("executing {file}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {file}: {e:?}"))?;
+        // graphs are lowered with return_tuple=True -> single tuple literal
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untupling result of {file}: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in &parts {
+            out.push(Tensor::from_literal(p)?);
+        }
+        let mut stats = self.stats.borrow_mut();
+        stats.executions += 1;
+        stats.exec_secs += t0.elapsed().as_secs_f64();
+        Ok(out)
+    }
+
+    /// Run a base-model step graph: args = [kcache, vcache, tokens, pos, bias].
+    pub fn run_step(&self, model: &str, batch: usize, n: usize,
+                    args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let arg_lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        self.run_step_lits(model, batch, n, &arg_lits)
+    }
+
+    /// Literal-level variant of [`run_step`] — the engine hot path builds
+    /// literals directly from reusable scratch buffers.
+    pub fn run_step_lits(&self, model: &str, batch: usize, n: usize,
+                         args: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let gname = format!("step_b{batch}_n{n}");
+        let meta = self.manifest.model(model)?;
+        let g = meta
+            .graphs
+            .get(&gname)
+            .ok_or_else(|| anyhow!("model {model} has no graph {gname}"))?;
+        let w = self.base_weights(model)?;
+        let mut all: Vec<&xla::Literal> = w.iter().collect();
+        all.extend(args.iter());
+        self.execute(&g.file, &all)
+    }
+
+    /// Run a draft-head graph. `head` ∈ {ctc, medusa, hydra}; extra args per
+    /// manifest (window/hidden/base_tok...). The base `emb` is injected
+    /// between head weights and runtime args, as the graphs expect.
+    pub fn run_draft(&self, model: &str, head: &str, batch: usize,
+                     args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let gname = format!("draft_{head}_b{batch}");
+        let meta = self.manifest.model(model)?;
+        let g = meta
+            .graphs
+            .get(&gname)
+            .ok_or_else(|| anyhow!("model {model} has no graph {gname}"))?;
+        let hw = self.head_weights(model, head)?;
+        let bw = self.base_weights(model)?;
+        // emb is weight_order[0] by construction; assert to be safe
+        let emb_idx = meta
+            .weight_order
+            .iter()
+            .position(|n| n == "emb")
+            .ok_or_else(|| anyhow!("model {model} has no 'emb' weight"))?;
+        let arg_lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let mut all: Vec<&xla::Literal> = hw.iter().collect();
+        all.push(&bw[emb_idx]);
+        all.extend(arg_lits.iter());
+        self.execute(&g.file, &all)
+    }
+
+    /// Run a standalone kernel artifact (e.g. ctc_score_b16).
+    pub fn run_kernel(&self, kernel: &str, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let g = self
+            .manifest
+            .kernels
+            .get(kernel)
+            .ok_or_else(|| anyhow!("no kernel '{kernel}' in manifest"))?;
+        let arg_lits: Vec<xla::Literal> = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::Literal> = arg_lits.iter().collect();
+        self.execute(&g.file, &refs)
+    }
+
+    pub fn has_model(&self, model: &str) -> bool {
+        self.manifest.models.contains_key(model)
+    }
+
+    pub fn take_stats(&self) -> RuntimeStats {
+        let mut s = self.stats.borrow_mut();
+        let out = s.clone();
+        *s = RuntimeStats::default();
+        out
+    }
+}
+
+// The xla wrapper types hold raw pointers and are not auto-Send. Every
+// Runtime is owned by exactly one thread (engine workers construct their
+// own), so there is deliberately NO Send/Sync impl here — the compiler
+// enforces the ownership discipline.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Runtime::load(dir).ok()
+    }
+
+    fn first_model(rt: &Runtime) -> String {
+        rt.manifest.models.keys().next().unwrap().clone()
+    }
+
+    #[test]
+    fn loads_weights() {
+        let Some(rt) = runtime() else { return };
+        let m = first_model(&rt);
+        let w = rt.base_weights(&m).unwrap();
+        assert!(!w.is_empty());
+        // cached: second call returns the same Rc
+        let w2 = rt.base_weights(&m).unwrap();
+        assert!(Rc::ptr_eq(&w, &w2));
+        for head in ["ctc", "medusa", "hydra"] {
+            assert!(rt.head_weights(&m, head).is_ok(), "{head}");
+        }
+    }
+
+    #[test]
+    fn decode_step_executes() {
+        let Some(rt) = runtime() else { return };
+        let m = first_model(&rt);
+        let c = &rt.manifest.constants;
+        let cfg = &rt.manifest.model(&m).unwrap().config;
+        let (l, h, dh) = (cfg.layers, cfg.n_heads, c.head_dim);
+        let cache_shape = [l, 1, c.lmax, h, dh];
+        let mut bias = vec![-1e9f32; c.lmax + 1];
+        bias[c.lmax] = 0.0; // token attends to itself only
+        let args = vec![
+            Tensor::zeros_f32(&cache_shape),
+            Tensor::zeros_f32(&cache_shape),
+            Tensor::from_i32(&[1, 1], vec![5]),
+            Tensor::from_i32(&[1, 1], vec![0]),
+            Tensor::from_f32(&[1, 1, c.lmax + 1], bias),
+        ];
+        let out = rt.run_step(&m, 1, 1, &args).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].shape(), &[1, 1, c.vocab_size]);
+        assert_eq!(out[1].shape(), &[l, 1, 1, h, dh]);
+        assert_eq!(out[3].shape(), &[1, 1, cfg.d_model]);
+        let logits = out[0].f32_data().unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn ctc_draft_executes() {
+        let Some(rt) = runtime() else { return };
+        let m = first_model(&rt);
+        let c = &rt.manifest.constants;
+        let d = rt.manifest.model(&m).unwrap().config.d_model;
+        let args = vec![
+            Tensor::zeros_f32(&[1, c.hidden_win, d]),
+            Tensor::from_i32(&[1], vec![1]),
+        ];
+        let out = rt.run_draft(&m, "ctc", 1, &args).unwrap();
+        assert_eq!(out[0].shape(), &[1, c.draft_slots, c.vocab_size + 1]);
+        // rows are log-distributions
+        let lp = out[0].f32_data().unwrap();
+        let row: f32 = lp[..c.vocab_size + 1].iter().map(|v| v.exp()).sum();
+        assert!((row - 1.0).abs() < 1e-3, "sum {row}");
+    }
+
+    #[test]
+    fn ctc_score_kernel_executes() {
+        let Some(rt) = runtime() else { return };
+        let c = rt.manifest.constants.clone();
+        let b = c.ctc_score_batch;
+        let vp1 = c.vocab_size + 1;
+        // uniform log-probs
+        let lp = vec![-(vp1 as f32).ln(); b * c.draft_slots * vp1];
+        let args = vec![
+            Tensor::from_f32(&[b, c.draft_slots, vp1], lp),
+            Tensor::from_i32(&[b, c.ctc_target_u],
+                             vec![3; b * c.ctc_target_u]),
+            Tensor::from_i32(&[b], vec![1; b]),
+        ];
+        let kname = format!("ctc_score_b{b}");
+        let out = rt.run_kernel(&kname, &args).unwrap();
+        let nll = out[0].f32_data().unwrap();
+        assert_eq!(nll.len(), b);
+        assert!(nll.iter().all(|v| *v > 0.0 && v.is_finite()));
+    }
+}

@@ -1,0 +1,158 @@
+//! Host-side tensors and conversions to/from `xla::Literal`.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::F32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::I32 { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn i32_data(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    /// Build an `xla::Literal` (host->device copy happens at execute time).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+            Tensor::I32 { data, .. } => xla::Literal::vec1(data).reshape(&dims)?,
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Ok(Tensor::F32 { shape: dims, data: lit.to_vec::<f32>()? }),
+            xla::ElementType::S32 => Ok(Tensor::I32 { shape: dims, data: lit.to_vec::<i32>()? }),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+
+    /// Row-major strides for this shape.
+    pub fn strides(&self) -> Vec<usize> {
+        strides_of(self.shape())
+    }
+}
+
+/// Build an f32 literal straight from a borrowed slice (hot path:
+/// `create_from_shape_and_untyped_data` copies exactly once, vs the two
+/// copies of `vec1(..).reshape(..)`).
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32, shape, bytes)?)
+}
+
+/// i32 twin of [`literal_f32`].
+pub fn literal_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let bytes = unsafe {
+        std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4)
+    };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32, shape, bytes)?)
+}
+
+pub fn strides_of(shape: &[usize]) -> Vec<usize> {
+    let mut s = vec![1; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        s[i] = s[i + 1] * shape[i + 1];
+    }
+    s
+}
+
+/// Flat offset of a multi-index in a row-major tensor.
+pub fn offset(shape: &[usize], idx: &[usize]) -> usize {
+    debug_assert_eq!(shape.len(), idx.len());
+    let strides = strides_of(shape);
+    idx.iter().zip(&strides).map(|(i, s)| i * s).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_offset() {
+        let shape = [2, 3, 4];
+        assert_eq!(strides_of(&shape), vec![12, 4, 1]);
+        assert_eq!(offset(&shape, &[1, 2, 3]), 12 + 8 + 3);
+        assert_eq!(offset(&shape, &[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn tensor_basics() {
+        let t = Tensor::zeros_f32(&[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert!(t.f32_data().is_ok());
+        assert!(t.i32_data().is_err());
+        let t2 = Tensor::from_i32(&[3], vec![1, 2, 3]);
+        assert_eq!(t2.i32_data().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = Tensor::from_f32(&[2, 3], (0..6).map(|i| i as f32).collect());
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32() {
+        let t = Tensor::from_i32(&[4], vec![7, -1, 0, 3]);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

@@ -1,0 +1,203 @@
+//! tensors.bin reader — the binary weight interchange written by
+//! `python/compile/export.py` (see that file for the byte layout).
+
+use std::collections::BTreeMap;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"CTCW";
+
+pub fn read_tensors(path: impl AsRef<Path>) -> Result<BTreeMap<String, Tensor>> {
+    let path = path.as_ref();
+    let bytes = std::fs::read(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_tensors(&bytes).with_context(|| format!("parsing {}", path.display()))
+}
+
+pub fn parse_tensors(bytes: &[u8]) -> Result<BTreeMap<String, Tensor>> {
+    let mut r = Reader { b: bytes, pos: 0 };
+    let magic = r.take(4)?;
+    if magic != MAGIC {
+        bail!("bad magic {magic:?}");
+    }
+    let version = r.u32()?;
+    if version != 1 {
+        bail!("unsupported tensors.bin version {version}");
+    }
+    let count = r.u32()? as usize;
+    let mut out = BTreeMap::new();
+    for _ in 0..count {
+        let name_len = r.u16()? as usize;
+        let name = String::from_utf8(r.take(name_len)?.to_vec())
+            .context("tensor name not utf-8")?;
+        let dtype = r.u8()?;
+        let ndim = r.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.u32()? as usize);
+        }
+        let nbytes = r.u64()? as usize;
+        let payload = r.take(nbytes)?;
+        let numel: usize = shape.iter().product();
+        let tensor = match dtype {
+            0 => {
+                if nbytes != numel * 4 {
+                    bail!("tensor '{name}': payload {nbytes}B != shape {shape:?}");
+                }
+                let mut data = vec![0f32; numel];
+                le_to_f32(payload, &mut data);
+                Tensor::F32 { shape, data }
+            }
+            1 => {
+                if nbytes != numel * 4 {
+                    bail!("tensor '{name}': payload {nbytes}B != shape {shape:?}");
+                }
+                let mut data = vec![0i32; numel];
+                le_to_i32(payload, &mut data);
+                Tensor::I32 { shape, data }
+            }
+            other => bail!("tensor '{name}': unknown dtype code {other}"),
+        };
+        if out.insert(name.clone(), tensor).is_some() {
+            bail!("duplicate tensor '{name}'");
+        }
+    }
+    if r.pos != bytes.len() {
+        bail!("trailing bytes after last tensor");
+    }
+    Ok(out)
+}
+
+fn le_to_f32(src: &[u8], dst: &mut [f32]) {
+    for (i, chunk) in src.chunks_exact(4).enumerate() {
+        dst[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+}
+
+fn le_to_i32(src: &[u8], dst: &mut [i32]) {
+    for (i, chunk) in src.chunks_exact(4).enumerate() {
+        dst[i] = i32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+}
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("truncated file at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        let s = self.take(2)?;
+        Ok(u16::from_le_bytes([s[0], s[1]]))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        let s = self.take(4)?;
+        Ok(u32::from_le_bytes([s[0], s[1], s[2], s[3]]))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        let s = self.take(8)?;
+        Ok(u64::from_le_bytes(s.try_into().unwrap()))
+    }
+}
+
+/// Write tensors in the same format (used by tests for roundtripping and by
+/// tools that re-export weights).
+pub fn write_tensors(tensors: &BTreeMap<String, Tensor>, order: &[String]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(order.len() as u32).to_le_bytes());
+    for name in order {
+        let t = &tensors[name];
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        let (code, payload): (u8, Vec<u8>) = match t {
+            Tensor::F32 { data, .. } => {
+                (0, data.iter().flat_map(|v| v.to_le_bytes()).collect())
+            }
+            Tensor::I32 { data, .. } => {
+                (1, data.iter().flat_map(|v| v.to_le_bytes()).collect())
+            }
+        };
+        out.push(code);
+        out.push(t.shape().len() as u8);
+        for d in t.shape() {
+            out.extend_from_slice(&(*d as u32).to_le_bytes());
+        }
+        out.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&payload);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert("a".into(), Tensor::from_f32(&[2, 2], vec![1.0, -2.5, 0.0, 4.0]));
+        m.insert("b".into(), Tensor::from_i32(&[3], vec![7, -9, 2]));
+        m.insert("scalar".into(), Tensor::from_f32(&[], vec![3.25]));
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = sample();
+        let order: Vec<String> = vec!["a".into(), "b".into(), "scalar".into()];
+        let bytes = write_tensors(&m, &order);
+        let back = parse_tensors(&bytes).unwrap();
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let mut bytes = write_tensors(&sample(), &["a".into(), "b".into(), "scalar".into()]);
+        bytes[0] = b'X';
+        assert!(parse_tensors(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let bytes = write_tensors(&sample(), &["a".into(), "b".into(), "scalar".into()]);
+        for cut in [3, 10, bytes.len() - 1] {
+            assert!(parse_tensors(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let mut bytes = write_tensors(&sample(), &["a".into(), "b".into(), "scalar".into()]);
+        bytes.push(0);
+        assert!(parse_tensors(&bytes).is_err());
+    }
+
+    #[test]
+    fn reads_real_artifact_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let f = dir.join("vic-tiny.tensors.bin");
+        if !f.exists() {
+            return;
+        }
+        let m = read_tensors(&f).unwrap();
+        assert!(m.contains_key("emb"));
+        let emb = &m["emb"];
+        assert_eq!(emb.shape().len(), 2);
+    }
+}

@@ -1,0 +1,405 @@
+//! Threaded serving stack: TCP JSON-lines protocol, a least-loaded router,
+//! and engine worker threads with continuous batching.
+//!
+//! tokio is unavailable in the build image, and the `xla` wrapper types are
+//! not `Send` — so the architecture is: each worker thread *constructs its
+//! own* `Runtime` + `Engine` and owns them for its lifetime; requests and
+//! responses cross threads as plain strings over mpsc channels (the
+//! vllm-router shape, scaled to threads).
+//!
+//! Wire protocol (one JSON object per line):
+//!   → {"op":"generate","id":7,"prompt":"...","max_new":64}
+//!   ← {"type":"done","id":7,"text":"...","tokens":n,"steps":m,
+//!      "beta":x,"ms":t}
+//!   → {"op":"ping"}            ← {"type":"pong"}
+//!   → {"op":"stats"}           ← {"type":"stats","inflight":[...]}
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::EngineConfig;
+use crate::engine::Engine;
+use crate::runtime::Runtime;
+use crate::util::json::{parse, Json};
+
+pub struct ServerConfig {
+    pub addr: String,
+    pub workers: usize,
+    pub artifacts: PathBuf,
+    pub engine: EngineConfig,
+}
+
+struct Job {
+    client_id: i64,
+    prompt: String,
+    max_new: usize,
+    resp: Sender<String>,
+}
+
+struct WorkerHandle {
+    tx: Sender<Job>,
+    inflight: Arc<AtomicUsize>,
+    join: JoinHandle<()>,
+}
+
+pub struct Server {
+    pub local_addr: std::net::SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<WorkerHandle>,
+}
+
+impl Server {
+    /// Bind, spawn workers + acceptor, return a handle. `addr` may use port
+    /// 0 to pick a free port (see `local_addr`).
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+
+        let mut workers = Vec::new();
+        for w in 0..cfg.workers.max(1) {
+            let (tx, rx) = channel::<Job>();
+            let inflight = Arc::new(AtomicUsize::new(0));
+            let artifacts = cfg.artifacts.clone();
+            let mut ecfg = cfg.engine.clone();
+            ecfg.seed = ecfg.seed.wrapping_add(w as u64);
+            let infl = inflight.clone();
+            let stop = shutdown.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("engine-{w}"))
+                .spawn(move || worker_loop(artifacts, ecfg, rx, infl, stop))
+                .expect("spawn worker");
+            workers.push(WorkerHandle { tx, inflight, join });
+        }
+
+        let routes: Vec<(Sender<Job>, Arc<AtomicUsize>)> = workers
+            .iter()
+            .map(|w| (w.tx.clone(), w.inflight.clone()))
+            .collect();
+        let stop = shutdown.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("acceptor".into())
+            .spawn(move || acceptor_loop(listener, routes, stop))
+            .expect("spawn acceptor");
+
+        Ok(Server { local_addr, shutdown, acceptor: Some(acceptor), workers })
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for w in self.workers.drain(..) {
+            drop(w.tx);
+            let _ = w.join.join();
+        }
+    }
+}
+
+fn acceptor_loop(listener: TcpListener,
+                 routes: Vec<(Sender<Job>, Arc<AtomicUsize>)>,
+                 shutdown: Arc<AtomicBool>) {
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let routes = routes.clone();
+                std::thread::spawn(move || {
+                    let _ = handle_conn(stream, routes);
+                });
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => break,
+        }
+    }
+}
+
+fn pick_worker(routes: &[(Sender<Job>, Arc<AtomicUsize>)])
+               -> &(Sender<Job>, Arc<AtomicUsize>) {
+    routes
+        .iter()
+        .min_by_key(|(_, infl)| infl.load(Ordering::SeqCst))
+        .expect("at least one worker")
+}
+
+fn handle_conn(stream: TcpStream,
+               routes: Vec<(Sender<Job>, Arc<AtomicUsize>)>) -> Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let req = match parse(&line) {
+            Ok(v) => v,
+            Err(e) => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("type", Json::str("error")),
+                    ("message", Json::str(format!("bad json: {e}"))),
+                ]).to_string())?;
+                continue;
+            }
+        };
+        match req.get("op").as_str() {
+            Some("ping") => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("type", Json::str("pong")),
+                ]).to_string())?;
+            }
+            Some("stats") => {
+                let loads: Vec<Json> = routes
+                    .iter()
+                    .map(|(_, i)| Json::num(i.load(Ordering::SeqCst) as f64))
+                    .collect();
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("type", Json::str("stats")),
+                    ("inflight", Json::Arr(loads)),
+                ]).to_string())?;
+            }
+            Some("generate") => {
+                let client_id = req.get("id").as_i64().unwrap_or(0);
+                let prompt = req.get("prompt").as_str().unwrap_or("").to_string();
+                let max_new = req.get("max_new").as_usize().unwrap_or(64);
+                let (rtx, rrx) = channel::<String>();
+                let (tx, infl) = pick_worker(&routes);
+                infl.fetch_add(1, Ordering::SeqCst);
+                let sent = tx.send(Job { client_id, prompt, max_new, resp: rtx });
+                if sent.is_err() {
+                    infl.fetch_sub(1, Ordering::SeqCst);
+                    writeln!(writer, "{}", Json::obj(vec![
+                        ("type", Json::str("error")),
+                        ("message", Json::str("worker unavailable")),
+                    ]).to_string())?;
+                    continue;
+                }
+                // relay response lines until the channel closes
+                for resp_line in rrx {
+                    writeln!(writer, "{resp_line}")?;
+                }
+                infl.fetch_sub(1, Ordering::SeqCst);
+            }
+            Some("shutdown") => return Ok(()),
+            _ => {
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("type", Json::str("error")),
+                    ("message", Json::str("unknown op")),
+                ]).to_string())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Worker: owns Runtime + Engine; continuous batching across requests.
+fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<Job>,
+               _inflight: Arc<AtomicUsize>, shutdown: Arc<AtomicBool>) {
+    let rt = match Runtime::load(&artifacts) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("worker: runtime load failed: {e:#}");
+            return;
+        }
+    };
+    let mut engine = match Engine::new(rt, ecfg) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("worker: engine init failed: {e:#}");
+            return;
+        }
+    };
+    let mut pending: HashMap<u64, Job> = HashMap::new();
+
+    loop {
+        // admit as long as we have slots and queued jobs
+        while engine.has_capacity() {
+            match rx.try_recv() {
+                Ok(job) => {
+                    let prompt = engine.format_prompt(&job.prompt);
+                    match engine.admit(&prompt, job.max_new) {
+                        Ok(id) => {
+                            pending.insert(id, job);
+                        }
+                        Err(e) => {
+                            let _ = job.resp.send(Json::obj(vec![
+                                ("type", Json::str("error")),
+                                ("id", Json::num(job.client_id as f64)),
+                                ("message", Json::str(format!("{e:#}"))),
+                            ]).to_string());
+                        }
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    if engine.n_active() == 0 {
+                        return;
+                    }
+                    break;
+                }
+            }
+        }
+
+        if engine.n_active() == 0 {
+            if shutdown.load(Ordering::SeqCst) {
+                return;
+            }
+            // idle: block briefly for the next job
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(job) => {
+                    let prompt = engine.format_prompt(&job.prompt);
+                    match engine.admit(&prompt, job.max_new) {
+                        Ok(id) => {
+                            pending.insert(id, job);
+                        }
+                        Err(e) => {
+                            let _ = job.resp.send(Json::obj(vec![
+                                ("type", Json::str("error")),
+                                ("message", Json::str(format!("{e:#}"))),
+                            ]).to_string());
+                        }
+                    }
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+            }
+            continue;
+        }
+
+        match engine.step() {
+            Ok(finished) => {
+                for out in finished {
+                    if let Some(job) = pending.remove(&out.id) {
+                        let msg = Json::obj(vec![
+                            ("type", Json::str("done")),
+                            ("id", Json::num(job.client_id as f64)),
+                            ("text", Json::str(out.text)),
+                            ("tokens", Json::num(out.stats.new_tokens as f64)),
+                            ("steps", Json::num(out.stats.steps as f64)),
+                            ("beta", Json::num(out.stats.accepted_per_step())),
+                            ("ms", Json::num(out.stats.wall_secs * 1e3)),
+                        ]);
+                        let _ = job.resp.send(msg.to_string());
+                        // closing the channel ends the relay loop
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("worker: step failed: {e:#}");
+                for (_, job) in pending.drain() {
+                    let _ = job.resp.send(Json::obj(vec![
+                        ("type", Json::str("error")),
+                        ("message", Json::str(format!("{e:#}"))),
+                    ]).to_string());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------- client
+/// Blocking JSON-lines client for the server above.
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+#[derive(Debug, Clone)]
+pub struct GenerateReply {
+    pub text: String,
+    pub tokens: usize,
+    pub steps: usize,
+    pub beta: f64,
+    pub ms: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting {addr}"))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { writer: stream, reader })
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        writeln!(self.writer, "{}", req.to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(anyhow!("server closed connection"));
+        }
+        parse(line.trim()).map_err(|e| anyhow!("bad server reply: {e}"))
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let v = self.roundtrip(Json::obj(vec![("op", Json::str("ping"))]))?;
+        if v.get("type").as_str() == Some("pong") {
+            Ok(())
+        } else {
+            Err(anyhow!("unexpected reply {v:?}"))
+        }
+    }
+
+    pub fn generate(&mut self, id: i64, prompt: &str, max_new: usize)
+                    -> Result<GenerateReply> {
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("id", Json::num(id as f64)),
+            ("prompt", Json::str(prompt)),
+            ("max_new", Json::num(max_new as f64)),
+        ]))?;
+        match v.get("type").as_str() {
+            Some("done") => Ok(GenerateReply {
+                text: v.get("text").as_str().unwrap_or("").to_string(),
+                tokens: v.get("tokens").as_usize().unwrap_or(0),
+                steps: v.get("steps").as_usize().unwrap_or(0),
+                beta: v.get("beta").as_f64().unwrap_or(0.0),
+                ms: v.get("ms").as_f64().unwrap_or(0.0),
+            }),
+            Some("error") => Err(anyhow!(
+                "server error: {}", v.get("message").as_str().unwrap_or("?"))),
+            _ => Err(anyhow!("unexpected reply {v:?}")),
+        }
+    }
+
+    pub fn stats(&mut self) -> Result<Vec<usize>> {
+        let v = self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))?;
+        Ok(v.get("inflight")
+            .as_arr()
+            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+            .unwrap_or_default())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Full server round-trips (which need artifacts + a trained model) live
+    // in rust/tests/server_integration.rs; here we only test protocol bits.
+    use crate::util::json::{parse, Json};
+
+    #[test]
+    fn protocol_shapes() {
+        let req = Json::obj(vec![
+            ("op", Json::str("generate")),
+            ("id", Json::num(3.0)),
+            ("prompt", Json::str("hello")),
+            ("max_new", Json::num(16.0)),
+        ]);
+        let v = parse(&req.to_string()).unwrap();
+        assert_eq!(v.get("op").as_str(), Some("generate"));
+        assert_eq!(v.get("max_new").as_usize(), Some(16));
+    }
+}

@@ -1,0 +1,219 @@
+//! Byte-level BPE tokenizer — rust mirror of `python/compile/tokenizer.py`.
+//!
+//! Loads `artifacts/vocab.json` and reproduces the exact merge procedure so
+//! the serving path tokenizes identically to the build path. Id layout:
+//! 0=<pad> 1=<bos> 2=<eos>, 3..258 raw bytes, 259.. merges in rank order.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::parse;
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+pub const N_SPECIAL: usize = 3;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    /// token id -> raw bytes (empty for specials)
+    token_bytes: Vec<Vec<u8>>,
+    /// (left, right) -> (rank, merged id)
+    ranks: HashMap<(i32, i32), (usize, i32)>,
+}
+
+impl Tokenizer {
+    pub fn load(path: impl AsRef<Path>) -> Result<Tokenizer> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_json(&text)
+    }
+
+    pub fn from_json(text: &str) -> Result<Tokenizer> {
+        let v = parse(text).map_err(|e| anyhow!("vocab.json: {e}"))?;
+        let merges = v
+            .get("merges")
+            .as_arr()
+            .ok_or_else(|| anyhow!("vocab.json missing 'merges'"))?;
+        let mut token_bytes: Vec<Vec<u8>> = vec![vec![], vec![], vec![]];
+        for b in 0..=255u8 {
+            token_bytes.push(vec![b]);
+        }
+        let mut ranks = HashMap::new();
+        for (rank, m) in merges.iter().enumerate() {
+            let a = m.idx(0).as_i64().ok_or_else(|| anyhow!("bad merge"))? as i32;
+            let b = m.idx(1).as_i64().ok_or_else(|| anyhow!("bad merge"))? as i32;
+            let merged_id = (N_SPECIAL + 256 + rank) as i32;
+            let (abytes, bbytes) = (
+                token_bytes
+                    .get(a as usize)
+                    .ok_or_else(|| anyhow!("merge refers to unknown id {a}"))?
+                    .clone(),
+                token_bytes
+                    .get(b as usize)
+                    .ok_or_else(|| anyhow!("merge refers to unknown id {b}"))?
+                    .clone(),
+            );
+            let mut joined = abytes;
+            joined.extend_from_slice(&bbytes);
+            token_bytes.push(joined);
+            ranks.insert((a, b), (rank, merged_id));
+        }
+        // sanity: the redundant token_bytes table in the json must agree
+        if let Some(tb) = v.get("token_bytes").as_arr() {
+            if tb.len() != token_bytes.len() {
+                bail!("vocab.json token_bytes length {} != derived {}",
+                      tb.len(), token_bytes.len());
+            }
+            for (i, entry) in tb.iter().enumerate() {
+                let bytes: Vec<u8> = entry
+                    .as_arr()
+                    .map(|a| a.iter().filter_map(|x| x.as_i64().map(|v| v as u8)).collect())
+                    .unwrap_or_default();
+                if bytes != token_bytes[i] {
+                    bail!("vocab.json token_bytes[{i}] mismatch");
+                }
+            }
+        }
+        Ok(Tokenizer { token_bytes, ranks })
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.token_bytes.len()
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut ids: Vec<i32> = text
+            .bytes()
+            .map(|b| (N_SPECIAL + b as usize) as i32)
+            .collect();
+        // repeatedly apply the lowest-rank merge present (same as python)
+        loop {
+            let mut best: Option<(usize, usize, i32)> = None; // (rank, pos, id)
+            for i in 0..ids.len().saturating_sub(1) {
+                if let Some(&(rank, merged)) = self.ranks.get(&(ids[i], ids[i + 1])) {
+                    if best.map(|(r, _, _)| rank < r).unwrap_or(true) {
+                        best = Some((rank, i, merged));
+                    }
+                }
+            }
+            let Some((_, pos, merged)) = best else { break };
+            let (a, b) = (ids[pos], ids[pos + 1]);
+            // merge all occurrences of this pair left-to-right
+            let mut out = Vec::with_capacity(ids.len());
+            let mut i = 0;
+            while i < ids.len() {
+                if i + 1 < ids.len() && ids[i] == a && ids[i + 1] == b {
+                    out.push(merged);
+                    i += 2;
+                } else {
+                    out.push(ids[i]);
+                    i += 1;
+                }
+            }
+            ids = out;
+        }
+        ids
+    }
+
+    pub fn encode_with(&self, text: &str, bos: bool, eos: bool) -> Vec<i32> {
+        let mut ids = Vec::new();
+        if bos {
+            ids.push(BOS_ID);
+        }
+        ids.extend(self.encode(text));
+        if eos {
+            ids.push(EOS_ID);
+        }
+        ids
+    }
+
+    pub fn decode(&self, ids: &[i32]) -> String {
+        let mut bytes = Vec::new();
+        for &id in ids {
+            if let Some(tb) = self.token_bytes.get(id as usize) {
+                bytes.extend_from_slice(tb);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Decode a single token (may be an incomplete UTF-8 fragment).
+    pub fn token_bytes(&self, id: i32) -> &[u8] {
+        self.token_bytes
+            .get(id as usize)
+            .map(|v| v.as_slice())
+            .unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vocab_json() -> String {
+        // a tiny hand-built vocab: merge 'h'+'i' -> id 259, then 259+'!' -> 260
+        let mut token_bytes = vec![vec![], vec![], vec![]];
+        for b in 0..=255u32 {
+            token_bytes.push(vec![b]);
+        }
+        token_bytes.push(vec![104, 105]);
+        token_bytes.push(vec![104, 105, 33]);
+        let tb: Vec<String> = token_bytes
+            .iter()
+            .map(|v| format!("[{}]", v.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(",")))
+            .collect();
+        format!(
+            r#"{{"version":1,"merges":[[{h},{i}],[259,{bang}]],"token_bytes":[{tb}]}}"#,
+            h = 3 + 104,
+            i = 3 + 105,
+            bang = 3 + 33,
+            tb = tb.join(",")
+        )
+    }
+
+    #[test]
+    fn merges_apply_in_rank_order() {
+        let t = Tokenizer::from_json(&vocab_json()).unwrap();
+        assert_eq!(t.encode("hi"), vec![259]);
+        assert_eq!(t.encode("hi!"), vec![260]);
+        assert_eq!(t.encode("hhi"), vec![3 + 104, 259]);
+        assert_eq!(t.decode(&[260]), "hi!");
+    }
+
+    #[test]
+    fn roundtrip_with_specials() {
+        let t = Tokenizer::from_json(&vocab_json()).unwrap();
+        let ids = t.encode_with("hi there", true, true);
+        assert_eq!(ids[0], BOS_ID);
+        assert_eq!(*ids.last().unwrap(), EOS_ID);
+        assert_eq!(t.decode(&ids), "hi there"); // specials decode to ""
+    }
+
+    #[test]
+    fn unknown_ids_are_skipped() {
+        let t = Tokenizer::from_json(&vocab_json()).unwrap();
+        assert_eq!(t.decode(&[9999]), "");
+    }
+
+    #[test]
+    fn matches_python_on_real_vocab() {
+        // golden-file check against the artifact tokenizer, if present
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let f = dir.join("vocab.json");
+        if !f.exists() {
+            return;
+        }
+        let t = Tokenizer::load(&f).unwrap();
+        for text in ["USER: What is 37 + 45?\nASSISTANT:",
+                     "def add(a, b):\n    return a + b",
+                     "the quick brown fox", "", "日本語 bytes"] {
+            let ids = t.encode(text);
+            assert_eq!(t.decode(&ids), text);
+        }
+        assert!(t.vocab_size() > 256 + N_SPECIAL);
+    }
+}

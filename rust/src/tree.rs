@@ -1,0 +1,291 @@
+//! Token-tree construction and tree-attention mask building.
+//!
+//! Candidate paths from a drafter are merged prefix-wise into a single tree
+//! (node 0 = the base token, which greedy verification has already decided).
+//! The tree is what the step graph verifies in one pass: node `i` may attend
+//! to the KV cache plus its own ancestor chain — exactly the additive bias
+//! this module builds. The paper's CTC Transform patches candidate content
+//! *before* this tree is built (see `ctc::transform_paths`), so removed
+//! blank/duplicate positions never appear in the attention map.
+
+use crate::drafters::CandidatePath;
+
+pub const NEG_INF: f32 = -1e9;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TreeNode {
+    pub token: i32,
+    /// parent node index; node 0 (root) has none
+    pub parent: Option<usize>,
+    pub depth: usize,
+    /// cumulative candidate score down to this node (root = 0)
+    pub score: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct TokenTree {
+    pub nodes: Vec<TreeNode>,
+}
+
+impl TokenTree {
+    /// Only the base token — the degenerate tree used by vanilla decoding.
+    pub fn root_only(base_token: i32) -> TokenTree {
+        TokenTree {
+            nodes: vec![TreeNode { token: base_token, parent: None, depth: 0, score: 0.0 }],
+        }
+    }
+
+    /// Merge candidate paths (each a continuation *after* the base token)
+    /// into a prefix tree capped at `max_nodes` nodes. Paths are consumed in
+    /// descending score order so the cap keeps the most valuable branches —
+    /// "a group of the most valuable combinations are reserved" (paper §3.3).
+    pub fn from_paths(base_token: i32, paths: &[CandidatePath],
+                      max_nodes: usize) -> TokenTree {
+        let mut tree = TokenTree::root_only(base_token);
+        let mut order: Vec<usize> = (0..paths.len()).collect();
+        order.sort_by(|&a, &b| {
+            paths[b].score.partial_cmp(&paths[a].score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        for pi in order {
+            let path = &paths[pi];
+            let mut cur = 0usize;
+            for (d, &tok) in path.tokens.iter().enumerate() {
+                // find existing child with this token
+                let child = tree
+                    .nodes
+                    .iter()
+                    .position(|n| n.parent == Some(cur) && n.token == tok);
+                match child {
+                    Some(c) => cur = c,
+                    None => {
+                        if tree.nodes.len() >= max_nodes {
+                            break;
+                        }
+                        tree.nodes.push(TreeNode {
+                            token: tok,
+                            parent: Some(cur),
+                            depth: d + 1,
+                            score: path.score,
+                        });
+                        cur = tree.nodes.len() - 1;
+                    }
+                }
+            }
+        }
+        tree
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Ancestor chain of node `i`, root-first, including `i` itself.
+    pub fn ancestry(&self, mut i: usize) -> Vec<usize> {
+        let mut chain = vec![i];
+        while let Some(p) = self.nodes[i].parent {
+            chain.push(p);
+            i = p;
+        }
+        chain.reverse();
+        chain
+    }
+
+    pub fn children(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.nodes
+            .iter()
+            .enumerate()
+            .filter(move |(_, n)| n.parent == Some(i))
+            .map(|(j, _)| j)
+    }
+
+    /// Token ids padded to `n_slots` (pad with `pad_token`).
+    pub fn tokens_padded(&self, n_slots: usize, pad_token: i32) -> Vec<i32> {
+        let mut out = vec![pad_token; n_slots];
+        for (i, n) in self.nodes.iter().enumerate().take(n_slots) {
+            out[i] = n.token;
+        }
+        out
+    }
+
+    /// Absolute positions (base_pos + depth) padded to `n_slots`.
+    pub fn positions_padded(&self, base_pos: usize, n_slots: usize) -> Vec<i32> {
+        let mut out = vec![base_pos as i32; n_slots];
+        for (i, n) in self.nodes.iter().enumerate().take(n_slots) {
+            out[i] = (base_pos + n.depth) as i32;
+        }
+        out
+    }
+
+    /// Additive attention bias `[n_slots, lmax + n_slots]` for one sequence:
+    /// node `i` sees cache positions `< cache_len` and its ancestor chain
+    /// (incl. itself) in the tree block. Padded slots see only themselves
+    /// (keeps softmax well-defined; their outputs are ignored).
+    pub fn attention_bias(&self, cache_len: usize, lmax: usize,
+                          n_slots: usize) -> Vec<f32> {
+        let m = lmax + n_slots;
+        let mut bias = vec![NEG_INF; n_slots * m];
+        for i in 0..n_slots {
+            let row = &mut bias[i * m..(i + 1) * m];
+            if i < self.nodes.len() {
+                row[..cache_len].fill(0.0);
+                for a in self.ancestry(i) {
+                    row[lmax + a] = 0.0;
+                }
+            } else {
+                row[lmax + i] = 0.0; // padded slot: self-attention only
+            }
+        }
+        bias
+    }
+
+    /// Greedy token-tree verification: walk from the root following the base
+    /// model's argmax at each accepted node. Returns the accepted node
+    /// indices in order (always starts with the root) and the next base
+    /// token (the argmax at the last accepted node).
+    ///
+    /// `argmax_at(node_idx) -> token` abstracts the logits row lookup.
+    pub fn greedy_accept(&self, mut argmax_at: impl FnMut(usize) -> i32)
+                         -> (Vec<usize>, i32) {
+        let mut accepted = vec![0usize];
+        let mut cur = 0usize;
+        loop {
+            let want = argmax_at(cur);
+            let next = self
+                .children(cur)
+                .find(|&c| self.nodes[c].token == want);
+            match next {
+                Some(c) => {
+                    accepted.push(c);
+                    cur = c;
+                }
+                None => return (accepted, want),
+            }
+        }
+    }
+
+    /// Total nodes at each depth (diagnostics / tests).
+    pub fn depth_histogram(&self) -> Vec<usize> {
+        let max_d = self.nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+        let mut h = vec![0; max_d + 1];
+        for n in &self.nodes {
+            h[n.depth] += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn path(tokens: &[i32], score: f32) -> CandidatePath {
+        CandidatePath { tokens: tokens.to_vec(), score }
+    }
+
+    #[test]
+    fn prefix_merge() {
+        let t = TokenTree::from_paths(
+            9,
+            &[path(&[1, 2, 3], -0.1), path(&[1, 2, 4], -0.2), path(&[5], -0.3)],
+            32,
+        );
+        // root + shared [1,2] + leaves 3,4 + 5 = 6 nodes
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.nodes[0].token, 9);
+        let ones: Vec<_> = t.nodes.iter().filter(|n| n.token == 1).collect();
+        assert_eq!(ones.len(), 1, "shared prefix must not duplicate");
+    }
+
+    #[test]
+    fn cap_keeps_best_paths() {
+        let t = TokenTree::from_paths(
+            0,
+            &[path(&[1, 2, 3, 4], -5.0), path(&[7], -0.1)],
+            3, // root + 2
+        );
+        assert_eq!(t.len(), 3);
+        // best path [7] must be present; worst path truncated
+        assert!(t.nodes.iter().any(|n| n.token == 7));
+    }
+
+    #[test]
+    fn ancestry_and_positions() {
+        let t = TokenTree::from_paths(0, &[path(&[1, 2], -0.1)], 32);
+        assert_eq!(t.ancestry(2), vec![0, 1, 2]);
+        let pos = t.positions_padded(10, 4);
+        assert_eq!(&pos[..3], &[10, 11, 12]);
+        assert_eq!(pos[3], 10); // padding
+    }
+
+    #[test]
+    fn bias_structure() {
+        let t = TokenTree::from_paths(0, &[path(&[1], -0.1), path(&[2], -0.2)], 32);
+        let lmax = 8;
+        let n = 4;
+        let bias = t.attention_bias(3, lmax, n);
+        let row = |i: usize| &bias[i * (lmax + n)..(i + 1) * (lmax + n)];
+        // root sees cache 0..3 and itself
+        assert_eq!(row(0)[..3], [0.0, 0.0, 0.0]);
+        assert_eq!(row(0)[3], NEG_INF);
+        assert_eq!(row(0)[lmax], 0.0);
+        // node 1 sees cache, root, itself — but NOT its sibling node 2
+        assert_eq!(row(1)[lmax], 0.0);
+        assert_eq!(row(1)[lmax + 1], 0.0);
+        assert_eq!(row(1)[lmax + 2], NEG_INF);
+        // padded slot 3: self only
+        assert_eq!(row(3)[lmax + 3], 0.0);
+        assert!(row(3)[..lmax].iter().all(|&x| x == NEG_INF));
+    }
+
+    #[test]
+    fn greedy_accept_follows_argmax() {
+        // tree: root(9) -> 1 -> 2 ; root -> 5
+        let t = TokenTree::from_paths(9, &[path(&[1, 2], -0.1), path(&[5], -0.2)], 32);
+        // argmax: at root choose 1, at node "1" choose 2, at node "2" choose 77
+        let (acc, next) = t.greedy_accept(|i| match t.nodes[i].token {
+            9 => 1,
+            1 => 2,
+            2 => 77,
+            _ => 0,
+        });
+        let toks: Vec<i32> = acc.iter().map(|&i| t.nodes[i].token).collect();
+        assert_eq!(toks, vec![9, 1, 2]);
+        assert_eq!(next, 77);
+    }
+
+    #[test]
+    fn greedy_accept_stops_on_mismatch() {
+        let t = TokenTree::from_paths(9, &[path(&[1], -0.1)], 32);
+        let (acc, next) = t.greedy_accept(|_| 42); // 42 not in the tree
+        assert_eq!(acc, vec![0]);
+        assert_eq!(next, 42);
+    }
+
+    #[test]
+    fn root_only_vanilla() {
+        let t = TokenTree::root_only(7);
+        assert_eq!(t.len(), 1);
+        let (acc, next) = t.greedy_accept(|_| 3);
+        assert_eq!(acc, vec![0]);
+        assert_eq!(next, 3);
+    }
+
+    #[test]
+    fn tokens_padded_and_histogram() {
+        let t = TokenTree::from_paths(9, &[path(&[1, 2], -0.1)], 32);
+        assert_eq!(t.tokens_padded(5, 0), vec![9, 1, 2, 0, 0]);
+        assert_eq!(t.depth_histogram(), vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn duplicate_paths_merge_fully() {
+        let t = TokenTree::from_paths(
+            0, &[path(&[1, 2], -0.1), path(&[1, 2], -0.3)], 32);
+        assert_eq!(t.len(), 3);
+    }
+}

@@ -1,0 +1,179 @@
+//! Tiny declarative CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text. Each binary declares its options up front.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+    pub fn usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+    pub fn f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<Opt>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str,
+               default: Option<&'static str>) -> Self {
+        self.opts.push(Opt { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(Opt { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "".to_string() } else { " <value>".to_string() };
+            let def = o
+                .default
+                .map(|d| format!(" (default: {d})"))
+                .unwrap_or_default();
+            s.push_str(&format!("  --{}{kind}\n      {}{def}\n", o.name, o.help));
+        }
+        s
+    }
+
+    /// Parse; returns Err(usage) on `--help` or malformed input.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        &self,
+        argv: I,
+    ) -> Result<Args, String> {
+        let mut args = Args::default();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                args.values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                return Err(self.usage());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.usage()))?;
+                if opt.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} takes no value"));
+                    }
+                    args.flags.push(key);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| format!("--{key} needs a value"))?,
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn parse(&self) -> Result<Args, String> {
+        self.parse_from(std::env::args().skip(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("model", "model name", Some("vic-tiny"))
+            .opt("n", "count", None)
+            .flag("verbose", "talk more")
+    }
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        cli().parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = parse(&[]).unwrap();
+        assert_eq!(a.get("model"), Some("vic-tiny"));
+        let a = parse(&["--model", "vic-base"]).unwrap();
+        assert_eq!(a.get("model"), Some("vic-base"));
+        let a = parse(&["--model=lc2-tiny"]).unwrap();
+        assert_eq!(a.get("model"), Some("lc2-tiny"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = parse(&["--verbose", "pos1", "--n", "5", "pos2"]).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize("n", 0), 5);
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse(&["--nope"]).is_err());
+        assert!(parse(&["--n"]).is_err());
+        assert!(parse(&["--help"]).is_err());
+        assert!(parse(&["--verbose=x"]).is_err());
+    }
+
+    #[test]
+    fn numeric_helpers() {
+        let a = parse(&["--n", "12"]).unwrap();
+        assert_eq!(a.usize("n", 0), 12);
+        assert_eq!(a.f64("n", 0.0), 12.0);
+        assert_eq!(a.usize("missing", 9), 9);
+    }
+}

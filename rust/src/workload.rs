@@ -1,0 +1,185 @@
+//! Evaluation workloads: MT-bench- and GSM8K-style question generators.
+//!
+//! These mirror the synthetic dialogue distribution the models were trained
+//! on (`python/compile/corpus.py`) — same 8 MT-bench categories, same
+//! template families, different seeds, so evaluation questions are unseen
+//! but in-distribution. That substitution (DESIGN.md §2) is what lets the
+//! paper's per-category acceptance-rate structure (Fig 2) reproduce.
+
+use crate::util::rng::Rng;
+
+pub const CATEGORIES: [&str; 8] = [
+    "writing", "roleplay", "reasoning", "math",
+    "coding", "extraction", "stem", "humanities",
+];
+
+#[derive(Debug, Clone)]
+pub struct Question {
+    pub category: &'static str,
+    pub text: String,
+}
+
+const TOPICS: [&str; 10] = ["the ocean", "a small village", "the night sky",
+    "an old library", "a mountain trail", "the harvest season",
+    "a river crossing", "the city market", "a winter storm", "an ancient map"];
+const ROLES: [&str; 6] = ["a ship captain", "a museum guide", "a village doctor",
+    "a night watchman", "a railway engineer", "a lighthouse keeper"];
+const NAMES: [&str; 5] = ["Ada", "Bruno", "Clara", "Daniel", "Elena"];
+const CITIES: [&str; 5] = ["Lisbon", "Oslo", "Kyoto", "Quito", "Cairo"];
+const FNS: [&str; 5] = ["add", "double", "square", "negate", "half"];
+const STEM_QS: [&str; 5] = ["Why is the sky blue?", "What causes tides?",
+    "How do plants make food?", "What is an atom?", "Why do seasons change?"];
+const HUM_QS: [&str; 4] = ["Who writes history?", "What is a myth?",
+    "Why do cities form near rivers?", "What is a constitution?"];
+
+pub fn gen_question(rng: &mut Rng, category: &'static str) -> Question {
+    let text = match category {
+        "writing" => format!("Write a short paragraph about {}.",
+                             rng.choice(&TOPICS)),
+        "roleplay" => format!("Pretend you are {}. Introduce yourself.",
+                              rng.choice(&ROLES)),
+        "reasoning" => {
+            let (a, b) = (rng.range(2, 9), rng.range(2, 9));
+            format!("If a box holds {a} red balls and {b} blue balls, \
+                     how many balls are in the box?")
+        }
+        "math" => match rng.below(3) {
+            0 => {
+                let (x, y) = (rng.range(10, 99), rng.range(10, 99));
+                format!("What is {x} + {y}?")
+            }
+            1 => {
+                let (x, y) = (rng.range(2, 12), rng.range(2, 12));
+                format!("What is {x} times {y}?")
+            }
+            _ => {
+                let (n, p) = (rng.range(3, 9), rng.range(2, 9));
+                format!("A farmer packs {} apples into boxes of {p}. \
+                         How many boxes does he fill?", n * p)
+            }
+        },
+        "coding" => format!("Write a python function named {}.",
+                            rng.choice(&FNS)),
+        "extraction" => {
+            let (n, c, y) = (rng.choice(&NAMES), rng.choice(&CITIES),
+                             rng.range(1990, 2020));
+            format!("Extract the name, city and year from: '{n} moved to \
+                     {c} in {y} to study music.'")
+        }
+        "stem" => rng.choice(&STEM_QS).to_string(),
+        "humanities" => rng.choice(&HUM_QS).to_string(),
+        other => panic!("unknown category {other}"),
+    };
+    Question { category, text }
+}
+
+/// MT-bench analog: `per_category` questions for each of the 8 categories
+/// (paper: 80 questions, 10 per category).
+pub fn mtbench(per_category: usize, seed: u64) -> Vec<Question> {
+    let mut rng = Rng::new(seed ^ 0x4d54_4245);
+    let mut qs = Vec::with_capacity(per_category * CATEGORIES.len());
+    for cat in CATEGORIES {
+        for _ in 0..per_category {
+            qs.push(gen_question(&mut rng, cat));
+        }
+    }
+    qs
+}
+
+/// GSM8K analog: grade-school math word problems with multi-step answers.
+pub fn gsm8k(count: usize, seed: u64) -> Vec<Question> {
+    let mut rng = Rng::new(seed ^ 0x4753_4d38);
+    (0..count)
+        .map(|_| {
+            let q = match rng.below(3) {
+                0 => {
+                    let (a, b, c) = (rng.range(11, 60), rng.range(11, 60),
+                                     rng.range(2, 9));
+                    format!("A shop sold {a} apples in the morning and {b} \
+                             in the afternoon, in bags of {c}. How many \
+                             apples were sold?")
+                }
+                1 => {
+                    let (n, p) = (rng.range(3, 12), rng.range(3, 9));
+                    format!("A farmer packs {} apples into boxes of {p}. \
+                             How many boxes does he fill?", n * p)
+                }
+                _ => {
+                    let (x, y) = (rng.range(12, 99), rng.range(12, 99));
+                    format!("What is {x} + {y}? Explain step by step.")
+                }
+            };
+            Question { category: "math", text: q }
+        })
+        .collect()
+}
+
+/// A recorded trace of (question, generated length) pairs — replayable load
+/// for the server benchmarks.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub entries: Vec<(Question, usize)>,
+}
+
+impl Trace {
+    pub fn poisson_arrivals(questions: Vec<Question>, max_new: usize,
+                            seed: u64) -> Trace {
+        let mut rng = Rng::new(seed);
+        let entries = questions
+            .into_iter()
+            .map(|q| {
+                let jitter = (max_new as f64 * (0.5 + rng.f64())) as usize;
+                (q, jitter.max(8))
+            })
+            .collect();
+        Trace { entries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mtbench_shape() {
+        let qs = mtbench(10, 0);
+        assert_eq!(qs.len(), 80);
+        for cat in CATEGORIES {
+            assert_eq!(qs.iter().filter(|q| q.category == cat).count(), 10);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = mtbench(3, 7);
+        let b = mtbench(3, 7);
+        assert!(a.iter().zip(&b).all(|(x, y)| x.text == y.text));
+        let c = mtbench(3, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.text != y.text));
+    }
+
+    #[test]
+    fn gsm8k_is_math() {
+        let qs = gsm8k(20, 1);
+        assert_eq!(qs.len(), 20);
+        assert!(qs.iter().all(|q| q.category == "math"));
+        // questions contain numbers
+        assert!(qs.iter().all(|q| q.text.chars().any(|c| c.is_ascii_digit())));
+    }
+
+    #[test]
+    fn questions_nonempty_all_categories() {
+        let mut rng = Rng::new(5);
+        for cat in CATEGORIES {
+            let q = gen_question(&mut rng, cat);
+            assert!(!q.text.is_empty());
+        }
+    }
+
+    #[test]
+    fn trace_lengths_bounded() {
+        let t = Trace::poisson_arrivals(mtbench(2, 0), 64, 3);
+        assert_eq!(t.entries.len(), 16);
+        assert!(t.entries.iter().all(|(_, n)| *n >= 8 && *n <= 96));
+    }
+}

@@ -1,0 +1,217 @@
+//! Integration tests over the full stack: runtime + engine + drafters on the
+//! real artifacts. Every test gates on `artifacts/manifest.json` existing so
+//! the suite passes (as skipped no-ops) before `make artifacts`.
+
+use ctcdraft::config::{EngineConfig, Method};
+use ctcdraft::engine::Engine;
+use ctcdraft::runtime::Runtime;
+
+fn engine(method: Method) -> Option<Engine> {
+    engine_cfg(EngineConfig { method, ..EngineConfig::default() })
+}
+
+fn engine_cfg(cfg: EngineConfig) -> Option<Engine> {
+    let dir = ctcdraft::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let rt = Runtime::load(dir).ok()?;
+    if !rt.has_model(&cfg.model) {
+        return None;
+    }
+    Some(Engine::new(rt, cfg).expect("engine"))
+}
+
+const QUESTIONS: [&str; 3] = [
+    "What is 37 + 45?",
+    "Write a python function named add.",
+    "Why is the sky blue?",
+];
+
+/// Greedy speculative decoding is LOSSLESS: every method must produce the
+/// exact same text as vanilla autoregressive decoding.
+#[test]
+fn speculative_output_is_lossless() {
+    let Some(mut engine) = engine(Method::Vanilla) else { return };
+    for q in QUESTIONS {
+        let prompt = engine.format_prompt(q);
+        engine.set_method(Method::Vanilla, true);
+        let vanilla = engine.generate(&prompt, 48).expect("vanilla");
+        for method in [Method::Ctc, Method::Medusa, Method::Hydra] {
+            engine.set_method(method, true);
+            let spec = engine.generate(&prompt, 48).expect("spec");
+            // spec decoding may overshoot max_new inside the final tree step;
+            // compare on the common prefix of the two token streams.
+            let n = vanilla.token_ids.len().min(spec.token_ids.len());
+            assert_eq!(&spec.token_ids[..n], &vanilla.token_ids[..n],
+                       "{:?} diverged from vanilla on {q:?}", method);
+            assert!(spec.stats.steps <= vanilla.stats.steps,
+                    "{method:?} took more steps than vanilla");
+        }
+    }
+}
+
+#[test]
+fn ctc_beta_is_at_least_one_and_steps_drop() {
+    let Some(mut engine) = engine(Method::Ctc) else { return };
+    let prompt = engine.format_prompt("What is 12 times 4?");
+    let out = engine.generate(&prompt, 48).expect("generate");
+    let beta = out.stats.accepted_per_step();
+    assert!(beta >= 1.0, "beta {beta}");
+    assert_eq!(
+        out.stats.new_tokens,
+        out.stats.accepted_hist.iter().sum::<usize>(),
+        "accepted histogram must sum to token count"
+    );
+    assert!(out.stats.steps > 0);
+    assert!(out.stats.breakdown.total() > 0.0);
+    // ctc must actually draft: draft share > 0
+    assert!(out.stats.breakdown.draft_secs > 0.0);
+}
+
+#[test]
+fn vanilla_beta_is_exactly_one() {
+    let Some(mut engine) = engine(Method::Vanilla) else { return };
+    let prompt = engine.format_prompt("What is 2 + 2?");
+    let out = engine.generate(&prompt, 24).expect("generate");
+    assert_eq!(out.stats.new_tokens, out.stats.steps);
+    assert!((out.stats.accepted_per_step() - 1.0).abs() < 1e-9);
+}
+
+#[test]
+fn batch_equals_individual_generation() {
+    let Some(mut engine) = engine(Method::Ctc) else { return };
+    let prompts: Vec<(String, usize)> = QUESTIONS
+        .iter()
+        .map(|q| (engine.format_prompt(q), 32))
+        .collect();
+    // individual
+    let mut individual = Vec::new();
+    for (p, n) in &prompts {
+        individual.push(engine.generate(p, *n).expect("gen").text);
+    }
+    // batched (continuous batching across 4 slots)
+    let batched = engine.generate_batch(&prompts).expect("batch");
+    assert_eq!(batched.len(), prompts.len());
+    for (b, ind) in batched.iter().zip(&individual) {
+        assert_eq!(&b.text, ind, "batched output diverged");
+    }
+}
+
+#[test]
+fn ablation_no_transform_still_lossless_but_weaker() {
+    let Some(mut engine) = engine_cfg(EngineConfig {
+        method: Method::Ctc,
+        ctc_transform: false,
+        ..EngineConfig::default()
+    }) else { return };
+    let prompt = engine.format_prompt("What is 30 + 12?");
+    let raw = engine.generate(&prompt, 40).expect("no-transform");
+    engine.set_method(Method::Vanilla, true);
+    let vanilla = engine.generate(&prompt, 40).expect("vanilla");
+    let n = vanilla.token_ids.len().min(raw.token_ids.len());
+    assert_eq!(&raw.token_ids[..n], &vanilla.token_ids[..n]);
+    engine.set_method(Method::Ctc, true);
+    let full = engine.generate(&prompt, 40).expect("full");
+    // the transform should never hurt acceptance on average; allow equality
+    assert!(full.stats.accepted_per_step()
+            >= raw.stats.accepted_per_step() - 0.35,
+            "transform {} vs raw {}",
+            full.stats.accepted_per_step(), raw.stats.accepted_per_step());
+}
+
+#[test]
+fn temperature_sampling_is_seed_deterministic() {
+    let mk = |seed| EngineConfig {
+        method: Method::Ctc,
+        temperature: 0.8,
+        seed,
+        ..EngineConfig::default()
+    };
+    let Some(mut e1) = engine_cfg(mk(7)) else { return };
+    let Some(mut e2) = engine_cfg(mk(7)) else { return };
+    let Some(mut e3) = engine_cfg(mk(8)) else { return };
+    let prompt = e1.format_prompt("Write a short paragraph about the ocean.");
+    let a = e1.generate(&prompt, 32).unwrap();
+    let b = e2.generate(&prompt, 32).unwrap();
+    let c = e3.generate(&prompt, 32).unwrap();
+    assert_eq!(a.token_ids, b.token_ids, "same seed must reproduce");
+    // different seed *may* coincide, but over 32 sampled tokens it shouldn't
+    assert_ne!(a.token_ids, c.token_ids, "different seed should diverge");
+}
+
+#[test]
+fn long_generation_respects_cache_capacity() {
+    let Some(mut engine) = engine(Method::Ctc) else { return };
+    let prompt = engine.format_prompt("Write a short paragraph about the night sky.");
+    // ask for more than the cache can hold; engine must stop cleanly
+    let out = engine.generate(&prompt, 100_000).expect("long generate");
+    let lmax = engine.runtime().manifest.constants.lmax;
+    assert!(out.stats.new_tokens + out.stats.prefill_tokens <= lmax);
+}
+
+#[test]
+fn admission_rejects_when_full_and_recovers() {
+    let Some(mut engine) = engine(Method::Ctc) else { return };
+    let prompt = engine.format_prompt("What is 1 + 1?");
+    let max_slots = engine
+        .runtime()
+        .manifest
+        .constants
+        .batch_sizes
+        .iter()
+        .copied()
+        .max()
+        .unwrap();
+    for _ in 0..max_slots {
+        engine.admit(&prompt, 8).expect("admit");
+    }
+    assert!(!engine.has_capacity());
+    assert!(engine.admit(&prompt, 8).is_err(), "over-admission must fail");
+    // drain
+    while engine.n_active() > 0 {
+        engine.step().expect("step");
+    }
+    assert!(engine.has_capacity());
+    engine.admit(&prompt, 8).expect("admission after drain");
+    while engine.n_active() > 0 {
+        engine.step().expect("step");
+    }
+}
+
+#[test]
+fn eos_terminates_generation() {
+    let Some(mut engine) = engine(Method::Vanilla) else { return };
+    // the corpus ends assistant turns; with enough budget most prompts hit
+    // EOS or run to max_new — either way ids are bounded and text decodes
+    let prompt = engine.format_prompt("What is 5 + 5?");
+    let out = engine.generate(&prompt, 200).expect("generate");
+    assert!(out.stats.new_tokens <= 200 + 8);
+    let eos = engine.runtime().manifest.constants.eos_id;
+    if let Some(p) = out.token_ids.iter().position(|&t| t == eos) {
+        assert_eq!(p, out.token_ids.len() - 1, "nothing after EOS");
+    }
+}
+
+#[test]
+fn per_model_generation_works_for_all_artifacts() {
+    let dir = ctcdraft::default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let models = ctcdraft::bench::eval::available_models(&dir);
+    for model in models {
+        let rt = Runtime::load(&dir).expect("runtime");
+        let mut engine = Engine::new(rt, EngineConfig {
+            model: model.clone(),
+            method: Method::Ctc,
+            ..EngineConfig::default()
+        })
+        .unwrap_or_else(|e| panic!("engine for {model}: {e:#}"));
+        let prompt = engine.format_prompt("What is 3 + 4?");
+        let out = engine
+            .generate(&prompt, 16)
+            .unwrap_or_else(|e| panic!("generate on {model}: {e:#}"));
+        assert!(out.stats.new_tokens > 0, "{model} generated nothing");
+    }
+}

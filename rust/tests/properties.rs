@@ -1,0 +1,343 @@
+//! Randomized property tests (testkit) over the coordinator's pure logic:
+//! CTC transform, lattice DP, token trees, JSON, tokenizer, kv-cache.
+
+use ctcdraft::ctc;
+use ctcdraft::drafters::{log_softmax_row, topk, CandidatePath};
+use ctcdraft::testkit::{gen, Prop};
+use ctcdraft::tree::{TokenTree, NEG_INF};
+use ctcdraft::util::json::{parse, Json};
+
+#[test]
+fn prop_collapse_idempotent_and_blankfree() {
+    Prop::new("collapse").check(|rng| {
+        let blank = 50;
+        let toks = gen::token_seq(rng, 20, 51);
+        let once = ctc::collapse(&toks, blank);
+        if once.iter().any(|&t| t == blank) {
+            return Err(format!("blank survived: {once:?}"));
+        }
+        // collapse removes *adjacent* duplicates only; a second pass of the
+        // repeat-merge must be a no-op on the blank-free output
+        let twice: Vec<i32> = {
+            let mut out = Vec::new();
+            for &t in &once {
+                if out.last() != Some(&t) {
+                    out.push(t);
+                }
+            }
+            out
+        };
+        if twice != once {
+            return Err(format!("adjacent repeat survived: {once:?}"));
+        }
+        if once.len() > toks.len() {
+            return Err("collapse grew the sequence".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_keep_mask_consistent_with_collapse() {
+    Prop::new("keep_mask").check(|rng| {
+        let blank = 30;
+        let toks = gen::token_seq(rng, 16, 31);
+        let mask = ctc::collapse_keep_mask(&toks, blank);
+        let kept: Vec<i32> = toks
+            .iter()
+            .zip(&mask)
+            .filter(|(_, &k)| k)
+            .map(|(&t, _)| t)
+            .collect();
+        if kept != ctc::collapse(&toks, blank) {
+            return Err("mask disagrees with collapse".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ctc_dp_bounds_and_monotonicity() {
+    Prop::new("ctc_dp").check(|rng| {
+        let slots = 2 + rng.below(7);
+        let vp1 = 3 + rng.below(10);
+        let lp = gen::logp_matrix(rng, slots, vp1);
+        let ulen = rng.below(4.min(slots) + 1);
+        let target: Vec<i32> = (0..ulen)
+            .map(|_| rng.below(vp1 - 1) as i32)
+            .collect();
+        let nll = ctc::ctc_marginal_nll(&lp, slots, vp1, &target);
+        if nll < -1e-3 {
+            return Err(format!("negative nll {nll} (prob > 1)"));
+        }
+        // adding one more token can only lower the probability mass
+        if ulen >= 1 {
+            let shorter = &target[..ulen - 1];
+            let nll_short = ctc::ctc_marginal_nll(&lp, slots, vp1, shorter);
+            // P(prefix) >= P(full) does NOT hold for CTC marginals in general
+            // (different alignment sets), but both must stay finite & >= 0
+            if !nll_short.is_finite() && nll_short < 1e8 {
+                return Err("short-target nll not finite".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ctc_dp_total_probability_conserved() {
+    // summing exp(-nll) over ALL targets of length <= slots (tiny alphabet)
+    // must give exactly 1 (the DP partitions the alignment space).
+    Prop::new("ctc_total_prob").cases(15).check(|rng| {
+        let slots = 2 + rng.below(2); // 2..3
+        let v = 2; // tokens {0,1}, blank=2
+        let vp1 = v + 1;
+        let lp = gen::logp_matrix(rng, slots, vp1);
+        let mut total = 0f64;
+        // enumerate all collapsed outputs up to length `slots`
+        let mut targets: Vec<Vec<i32>> = vec![vec![]];
+        for len in 1..=slots {
+            let mut cur = vec![vec![0i32; 0]];
+            for _ in 0..len {
+                let mut next = Vec::new();
+                for t in cur {
+                    for sym in 0..v as i32 {
+                        let mut t2 = t.clone();
+                        t2.push(sym);
+                        next.push(t2);
+                    }
+                }
+                cur = next;
+            }
+            targets.extend(cur);
+        }
+        for t in &targets {
+            let nll = ctc::ctc_marginal_nll(&lp, slots, vp1, t);
+            if nll < 1e8 {
+                total += (-nll as f64).exp();
+            }
+        }
+        if (total - 1.0).abs() > 1e-3 {
+            return Err(format!("total probability {total} != 1"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_structure_invariants() {
+    Prop::new("tree").check(|rng| {
+        let n_paths = 1 + rng.below(10);
+        let paths: Vec<CandidatePath> = (0..n_paths)
+            .map(|_| CandidatePath {
+                tokens: gen::token_seq(rng, 6, 40),
+                score: rng.normal() as f32,
+            })
+            .collect();
+        let max_nodes = 2 + rng.below(31);
+        let tree = TokenTree::from_paths(7, &paths, max_nodes);
+        if tree.len() > max_nodes {
+            return Err(format!("tree exceeded cap: {}", tree.len()));
+        }
+        if tree.nodes[0].parent.is_some() || tree.nodes[0].depth != 0 {
+            return Err("bad root".into());
+        }
+        for (i, node) in tree.nodes.iter().enumerate().skip(1) {
+            let p = node.parent.ok_or("non-root without parent")?;
+            if p >= i {
+                return Err(format!("parent {p} not before child {i}"));
+            }
+            if node.depth != tree.nodes[p].depth + 1 {
+                return Err("depth mismatch".into());
+            }
+        }
+        // no duplicate (parent, token) pairs
+        for i in 1..tree.len() {
+            for j in (i + 1)..tree.len() {
+                if tree.nodes[i].parent == tree.nodes[j].parent
+                    && tree.nodes[i].token == tree.nodes[j].token
+                {
+                    return Err("duplicate sibling token".into());
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tree_bias_respects_ancestry() {
+    Prop::new("tree_bias").check(|rng| {
+        let paths: Vec<CandidatePath> = (0..4)
+            .map(|_| CandidatePath {
+                tokens: gen::token_seq(rng, 5, 10),
+                score: rng.normal() as f32,
+            })
+            .collect();
+        let tree = TokenTree::from_paths(1, &paths, 16);
+        let lmax = 24;
+        let n = 16;
+        let cache_len = rng.below(lmax);
+        let bias = tree.attention_bias(cache_len, lmax, n);
+        for i in 0..tree.len() {
+            let row = &bias[i * (lmax + n)..(i + 1) * (lmax + n)];
+            // cache visibility
+            for (j, &b) in row[..lmax].iter().enumerate() {
+                let expect = if j < cache_len { 0.0 } else { NEG_INF };
+                if b != expect {
+                    return Err(format!("cache bias wrong at node {i} pos {j}"));
+                }
+            }
+            // tree block: visible iff ancestor (or self)
+            let anc = tree.ancestry(i);
+            for j in 0..n {
+                let visible = row[lmax + j] == 0.0;
+                let should = j < tree.len() && anc.contains(&j);
+                if visible != should {
+                    return Err(format!("tree bias wrong at node {i} -> {j}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_greedy_accept_consistent_with_chain() {
+    Prop::new("greedy_accept").check(|rng| {
+        // build a random chain and verify acceptance stops exactly at the
+        // first mismatch of the simulated argmax sequence
+        let chain: Vec<i32> = (0..5).map(|_| rng.below(50) as i32).collect();
+        let tree = TokenTree::from_paths(
+            9,
+            &[CandidatePath { tokens: chain.clone(), score: 0.0 }],
+            32,
+        );
+        let cut = rng.below(chain.len() + 1);
+        // argmax agrees with the chain for `cut` nodes, then diverges
+        let answers: Vec<i32> = (0..chain.len() + 1)
+            .map(|d| {
+                if d < cut {
+                    chain[d]
+                } else {
+                    999 // token not present in the tree
+                }
+            })
+            .collect();
+        let (accepted, next) =
+            tree.greedy_accept(|node| answers[tree.nodes[node].depth]);
+        if accepted.len() != cut + 1 {
+            return Err(format!(
+                "accepted {} nodes, expected {}", accepted.len(), cut + 1));
+        }
+        if next != 999 && cut != chain.len() {
+            return Err("next base token wrong".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_topk_matches_sort() {
+    Prop::new("topk").check(|rng| {
+        let n = 1 + rng.below(40);
+        let row = gen::logits_row(rng, n);
+        let k = 1 + rng.below(8);
+        let got = topk(&row, k);
+        let mut want: Vec<usize> = (0..row.len()).collect();
+        want.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap());
+        want.truncate(k.min(row.len()));
+        // compare VALUES (ties may reorder indices)
+        let gv: Vec<f32> = got.iter().map(|&i| row[i]).collect();
+        let wv: Vec<f32> = want.iter().map(|&i| row[i]).collect();
+        if gv != wv {
+            return Err(format!("topk values {gv:?} != {wv:?}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_log_softmax_normalizes() {
+    Prop::new("log_softmax").check(|rng| {
+        let n = 2 + rng.below(30);
+        let mut row = gen::logits_row(rng, n);
+        log_softmax_row(&mut row);
+        let sum: f32 = row.iter().map(|v| v.exp()).sum();
+        if (sum - 1.0).abs() > 1e-4 {
+            return Err(format!("sum {sum}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut ctcdraft::util::rng::Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.range(-1_000_000, 1_000_000)) as f64),
+            3 => Json::Str(
+                (0..rng.below(12))
+                    .map(|_| char::from_u32(32 + rng.below(90) as u32).unwrap())
+                    .collect::<String>()
+                    + "\n\"\\é",
+            ),
+            4 => Json::Arr((0..rng.below(4)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), random_json(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    Prop::new("json_roundtrip").check(|rng| {
+        let v = random_json(rng, 3);
+        let text = v.to_string();
+        let back = parse(&text).map_err(|e| format!("{e} for {text}"))?;
+        if back != v {
+            return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kvcache_append_preserves_earlier_rows() {
+    use ctcdraft::kvcache::SeqCache;
+    Prop::new("kvcache").check(|rng| {
+        let (l, lmax, h, dh) = (2, 16, 2, 4);
+        let re = h * dh;
+        let mut cache = SeqCache::new(l, lmax, h, dh);
+        let mut expected: Vec<Vec<f32>> = Vec::new(); // layer-0 rows in order
+        while cache.len < lmax.min(10) {
+            let n = 1 + rng.below(3);
+            let k: Vec<f32> = (0..l * n * re).map(|_| rng.f32()).collect();
+            let v = k.clone();
+            let picks: Vec<usize> = {
+                let mut p: Vec<usize> = (0..n).collect();
+                rng.shuffle(&mut p);
+                p.truncate(1 + rng.below(n));
+                p
+            };
+            if cache.len + picks.len() > lmax {
+                break;
+            }
+            for &pi in &picks {
+                expected.push(k[pi * re..(pi + 1) * re].to_vec());
+            }
+            cache.append_selected(&k, &v, n, &picks).map_err(|e| e.to_string())?;
+        }
+        // verify layer-0 contents
+        for (pos, row) in expected.iter().enumerate() {
+            let off = pos * re;
+            if &cache.k_data()[off..off + re] != row.as_slice() {
+                return Err(format!("row {pos} corrupted"));
+            }
+        }
+        Ok(())
+    });
+}
