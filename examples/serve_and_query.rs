@@ -1,6 +1,20 @@
 //! Serving demo: start the TCP JSON-lines server in-process, fire a small
 //! concurrent client load at it, and report latency/throughput — the
-//! serving-paper E2E path (router → engine workers → PJRT).
+//! serving-paper E2E path (router → admission-controlled engine workers →
+//! PJRT).
+//!
+//! Wire protocol quick reference (full doc block in `src/server.rs`):
+//!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true}
+//!   ← {"type":"queued","pos":n}   admit queue position (informational)
+//!   ← {"type":"tok","id":7,"text":"...","n":k}   per-round token frames
+//!   ← {"type":"done",...} | {"type":"busy"} | {"type":"cancelled"}
+//!   → {"op":"cancel","id":7}      frees the slot + KV blocks mid-flight
+//!   → {"op":"stats"}              router inflight + per-worker scheduler
+//!                                 state (queue depth, pool utilization)
+//!
+//! Client 0 below streams (`tok` frames as the scheduler accepts tokens);
+//! the rest use blocking generate. `busy` backpressure appears when the
+//! engine's `queue_cap` is set and the admit queue fills.
 //!
 //! Run: `cargo run --release --example serve_and_query`
 
@@ -52,7 +66,22 @@ fn main() -> Result<()> {
             client.ping()?;
             let mut out = Vec::new();
             for (i, q) in qs.iter().enumerate() {
-                let reply = client.generate((c * 100 + i) as i64, q, max_new)?;
+                let id = (c * 100 + i) as i64;
+                let reply = if c == 0 {
+                    // client 0 demonstrates streaming: count tok frames as
+                    // the scheduler accepts tokens round by round
+                    let mut frames = 0usize;
+                    match client.generate_stream(id, q, max_new, true,
+                                                 |_| frames += 1)? {
+                        ctcdraft::server::GenerateOutcome::Done(r) => {
+                            println!("  [stream id={id}: {} tok frames]", frames);
+                            r
+                        }
+                        other => anyhow::bail!("stream terminal: {other:?}"),
+                    }
+                } else {
+                    client.generate(id, q, max_new)?
+                };
                 out.push((reply.tokens, reply.ms));
             }
             Ok(out)
@@ -78,7 +107,15 @@ fn main() -> Result<()> {
 
     let mut client = Client::connect(&addr)?;
     println!("router inflight after drain: {:?}", client.stats()?);
+    let detail = client.stats_detail()?;
+    let w = detail.get("workers").idx(0);
+    println!(
+        "worker 0 scheduler: completed={} queued={} pool_utilization={:.2}",
+        w.get("completed").as_usize().unwrap_or(0),
+        w.get("queued").as_usize().unwrap_or(0),
+        w.get("pool_utilization").as_f64().unwrap_or(0.0),
+    );
     server.stop();
-    println!("server stopped cleanly");
+    println!("server stopped cleanly (graceful drain)");
     Ok(())
 }

@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# Tier-1 gate: release build + full test suite.
+#
+# CTCD_PROP_FAST=1 scales the randomized property/simulation case counts
+# down (testkit::Prop: 100 → 25 cases) so the gate stays fast; reproduce a
+# specific property failure with CTCD_PROP_SEED=<seed> cargo test <name>.
+set -euo pipefail
+cd "$(dirname "$0")"
+
+cargo build --release
+CTCD_PROP_FAST=1 cargo test -q

@@ -258,6 +258,13 @@ pub struct EngineConfig {
     /// 0.0 = greedy (paper's setting); >0 enables stochastic acceptance
     pub temperature: f32,
     pub seed: u64,
+    /// KV block-pool capacity in positions; 0 = lmax × max slots (never
+    /// exhausts). Smaller values turn on real admission pressure: queued
+    /// requests wait for pool room and running ones can be preempted.
+    pub kv_pool_positions: usize,
+    /// Engine-side admit-queue bound; 0 = unbounded. When the queue is at
+    /// the cap, `submit` reports `Submission::Busy` (backpressure).
+    pub queue_cap: usize,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -299,6 +306,8 @@ impl Default for EngineConfig {
             max_new_tokens: 128,
             temperature: 0.0,
             seed: 0,
+            kv_pool_positions: 0,
+            queue_cap: 0,
         }
     }
 }

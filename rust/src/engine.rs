@@ -15,6 +15,7 @@
 //!      accepted nodes' KV rows are committed to the host cache and their
 //!      hidden states pushed into the draft window.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -22,7 +23,8 @@ use anyhow::{anyhow, bail, Result};
 use crate::config::{EngineConfig, Method};
 use crate::drafters::{make_drafter, DraftCtx, DraftTiming, Drafter};
 use crate::kvcache::{BlockPool, SeqCache};
-use crate::metrics::{DeviceModel, RunSummary, StageBreakdown};
+use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
+                     StageBreakdown};
 
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
@@ -75,8 +77,76 @@ pub struct GenOutput {
     pub stats: GenStats,
 }
 
+/// Outcome of `Engine::submit` under admission control.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Submission {
+    /// Request went straight into a free batch slot.
+    Admitted(u64),
+    /// Request parked in the wait queue at `pos` (0 = next up).
+    Queued { id: u64, pos: usize },
+    /// Wait queue at its cap — backpressure; retry later.
+    Busy,
+}
+
+/// Newly accepted tokens for one sequence in one scheduler round — the
+/// unit the server turns into a `tok` stream frame.
+#[derive(Debug, Clone)]
+pub struct TokenDelta {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// Everything one scheduler round produced, for streaming servers and the
+/// deterministic scheduler simulation.
+#[derive(Debug, Default)]
+pub struct StepReport {
+    /// engine step counter (virtual clock) after this round
+    pub step: u64,
+    /// seq ids admitted from the wait queue at the top of this round
+    pub admitted: Vec<u64>,
+    /// per-sequence tokens accepted this round (active sequences only)
+    pub emitted: Vec<TokenDelta>,
+    /// sequences that completed this round
+    pub finished: Vec<GenOutput>,
+    /// sequences preempted back to the queue under KV-pool pressure
+    pub evicted: Vec<u64>,
+    /// wait-queue depth after this round
+    pub queue_depth: usize,
+    /// KV block-pool utilization in [0,1] after this round
+    pub pool_utilization: f64,
+}
+
+/// A request waiting for a batch slot (fresh, or evicted mid-flight).
+struct QueuedReq {
+    id: u64,
+    prompt_ids: Vec<i32>,
+    /// tokens already generated before an eviction (re-prefilled on
+    /// re-admission so decoding resumes exactly where it stopped)
+    gen_ids: Vec<i32>,
+    /// total generation budget (not remaining — `gen_ids` counts toward it)
+    max_new: usize,
+    stats: GenStats,
+    rng: Option<Rng>,
+    enq_step: u64,
+}
+
+impl QueuedReq {
+    fn fresh(id: u64, prompt_ids: Vec<i32>, max_new: usize, step: u64) -> Self {
+        QueuedReq {
+            id,
+            prompt_ids,
+            gen_ids: Vec::new(),
+            max_new,
+            stats: GenStats::default(),
+            rng: None,
+            enq_step: step,
+        }
+    }
+}
+
 struct Seq {
     id: u64,
+    prompt_ids: Vec<i32>,
     gen_ids: Vec<i32>,
     max_new: usize,
     cache: SeqCache,
@@ -98,6 +168,12 @@ pub struct Engine {
     drafter: Box<dyn Drafter>,
     slots: Vec<Option<Seq>>,
     pool: BlockPool,
+    /// FIFO admit queue feeding free slots at the top of every step
+    wait_queue: VecDeque<QueuedReq>,
+    /// monotone step counter — the scheduler's virtual clock
+    step_no: u64,
+    events: EventLog,
+    metrics: Metrics,
     next_id: u64,
     rng: Rng,
     device: DeviceModel,
@@ -141,9 +217,18 @@ impl Engine {
                 rt.weights_nbytes(&format!("{}#{}", cfg.model, head)) as f64
             }
         };
+        let pool_positions = if cfg.kv_pool_positions > 0 {
+            cfg.kv_pool_positions
+        } else {
+            c.lmax * max_slots
+        };
         Ok(Engine {
             slots: (0..max_slots).map(|_| None).collect(),
-            pool: BlockPool::new(c.lmax * max_slots, max_slots),
+            pool: BlockPool::new(pool_positions, max_slots),
+            wait_queue: VecDeque::new(),
+            step_no: 0,
+            events: EventLog::default(),
+            metrics: Metrics::default(),
             next_id: 1,
             rng,
             device: DeviceModel::default(),
@@ -276,42 +361,265 @@ impl Engine {
     }
 
     // ------------------------------------------------------------ admission
-    /// Tokenize, chunk-prefill, and occupy a batch slot. Returns the seq id.
+    /// Queue depth (requests waiting for a slot).
+    pub fn queue_len(&self) -> usize {
+        self.wait_queue.len()
+    }
+
+    /// 0-based position of a queued request, if it is still waiting.
+    pub fn queue_position(&self, id: u64) -> Option<usize> {
+        self.wait_queue.iter().position(|r| r.id == id)
+    }
+
+    /// Ids of sequences currently occupying batch slots.
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.slots.iter().flatten().map(|s| s.id).collect()
+    }
+
+    /// Ids of requests waiting in the admit queue (FIFO order).
+    pub fn queued_ids(&self) -> Vec<u64> {
+        self.wait_queue.iter().map(|r| r.id).collect()
+    }
+
+    pub fn set_queue_cap(&mut self, cap: usize) {
+        self.cfg.queue_cap = cap;
+    }
+
+    /// Scheduler event log (admissions/evictions/completions, step-stamped).
+    pub fn events(&self) -> &EventLog {
+        &self.events
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn pool_utilization(&self) -> f64 {
+        self.pool.utilization()
+    }
+
+    pub fn scheduler_step(&self) -> u64 {
+        self.step_no
+    }
+
+    /// Prefill length budget for a request: leave room in the cache for
+    /// generation plus one verification tree per step. The single source of
+    /// truth for submit/admit_req/fill_slots — they must agree or the
+    /// admission gate checks a different length than admission allocates.
+    fn prefill_budget(&self, max_new: usize) -> usize {
+        self.lmax - max_new.min(self.lmax / 2) - self.tree_n - 2
+    }
+
+    /// Admission-controlled entry point: go straight into a free slot when
+    /// one exists (and the pool fits the prompt), otherwise park in the FIFO
+    /// wait queue; report `Busy` when the queue is at its cap.
+    pub fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
+        if self.cfg.queue_cap > 0 && self.wait_queue.len() >= self.cfg.queue_cap {
+            self.metrics.inc("sched.rejected_busy", 1);
+            return Ok(Submission::Busy);
+        }
+        let ids = self.tok.encode_with(prompt, true, false);
+        let budget = self.prefill_budget(max_new);
+        let min_prefill = ids.len().min(budget).max(1);
+        if BlockPool::blocks_for(min_prefill) > self.pool.total_blocks() {
+            bail!(
+                "prompt needs {} KV blocks but the pool holds only {}",
+                BlockPool::blocks_for(min_prefill),
+                self.pool.total_blocks()
+            );
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.events.push(SchedEvent::Submitted { step: self.step_no, id });
+        self.metrics.inc("sched.submitted", 1);
+        let req = QueuedReq::fresh(id, ids, max_new, self.step_no);
+        // gate on the budget-trimmed prefill length (what admit_req will
+        // actually allocate), matching fill_slots
+        if self.wait_queue.is_empty()
+            && self.has_capacity()
+            && self.pool.can_fit(min_prefill)
+        {
+            let sid = self.admit_req(req)?;
+            return Ok(Submission::Admitted(sid));
+        }
+        let pos = self.wait_queue.len();
+        self.wait_queue.push_back(req);
+        self.events.push(SchedEvent::Queued { step: self.step_no, id, pos });
+        self.metrics.inc("sched.queued", 1);
+        Ok(Submission::Queued { id, pos })
+    }
+
+    /// Cancel a queued or running request; frees its slot and pool blocks
+    /// immediately. Returns false when the id is unknown (e.g. finished).
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.wait_queue.iter().position(|r| r.id == id) {
+            self.wait_queue.remove(pos);
+            self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
+            self.metrics.inc("sched.cancelled", 1);
+            return true;
+        }
+        let slot = self.slots.iter().position(|s| {
+            s.as_ref().map(|q| q.id == id).unwrap_or(false)
+        });
+        if let Some(slot) = slot {
+            self.slots[slot] = None;
+            self.pool.release(slot);
+            self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
+            self.metrics.inc("sched.cancelled", 1);
+            return true;
+        }
+        false
+    }
+
+    /// Tokenize, chunk-prefill, and occupy a batch slot NOW. Bypasses the
+    /// wait queue; errors when no slot is free (legacy direct-admission
+    /// path used by `generate`/`generate_batch` and the batch benches).
     pub fn admit(&mut self, prompt: &str, max_new: usize) -> Result<u64> {
+        if !self.has_capacity() {
+            return Err(anyhow!("no free slot (active={})", self.n_active()));
+        }
+        let ids = self.tok.encode_with(prompt, true, false);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.events.push(SchedEvent::Submitted { step: self.step_no, id });
+        self.metrics.inc("sched.submitted", 1);
+        self.admit_req(QueuedReq::fresh(id, ids, max_new, self.step_no))
+    }
+
+    /// Install a request (fresh or evicted) into a free slot: budget-trim
+    /// the prefill ids, allocate pool blocks, chunk-prefill, occupy.
+    fn admit_req(&mut self, req: QueuedReq) -> Result<u64> {
         let slot = self
             .slots
             .iter()
             .position(|s| s.is_none())
             .ok_or_else(|| anyhow!("no free slot (active={})", self.n_active()))?;
-
-        let mut ids = self.tok.encode_with(prompt, true, false);
-        // leave room for generation + one tree per step
-        let budget = self.lmax - max_new.min(self.lmax / 2) - self.tree_n - 2;
+        let mut ids = req.prompt_ids.clone();
+        ids.extend_from_slice(&req.gen_ids);
+        let budget = self.prefill_budget(req.max_new);
         if ids.len() > budget {
             ids.drain(..ids.len() - budget);
         }
-        let id = self.next_id;
-        self.next_id += 1;
-
+        let id = req.id;
+        let rng = match req.rng {
+            Some(r) => r,
+            None => self.rng.fork(id),
+        };
         let mut seq = Seq {
             id,
-            gen_ids: Vec::new(),
-            max_new,
+            prompt_ids: req.prompt_ids,
+            gen_ids: req.gen_ids,
+            max_new: req.max_new,
             cache: SeqCache::new(self.layers, self.lmax, self.heads, self.head_dim),
             hidden_win: vec![0.0; self.win * self.d_model],
             win_len: 0,
             last_hidden: vec![0.0; self.d_model],
             base_token: 0,
-            stats: GenStats::default(),
+            stats: req.stats,
             t_admit: Instant::now(),
             done: false,
-            rng: self.rng.fork(id),
+            rng,
         };
         self.pool.ensure(slot, ids.len())?;
         self.prefill(&mut seq, &ids)?;
-        seq.stats.prefill_tokens = ids.len();
+        seq.stats.prefill_tokens += ids.len();
         self.slots[slot] = Some(seq);
+        let waited = self.step_no.saturating_sub(req.enq_step);
+        self.events.push(SchedEvent::Admitted { step: self.step_no, id, waited });
+        self.metrics.inc("sched.admitted", 1);
+        self.metrics.observe("sched.queue_wait_steps", waited);
         Ok(id)
+    }
+
+    /// Feed free slots from the wait queue (FIFO; the head blocks until the
+    /// pool can hold its prefill, preserving admission-order fairness).
+    /// A head whose prefill exceeds the *whole* pool can never run again
+    /// (only reachable via eviction carryover) — it is force-finished with
+    /// the tokens it already generated instead of head-blocking forever.
+    fn fill_slots(&mut self) -> Result<(Vec<u64>, Vec<GenOutput>)> {
+        let mut admitted = Vec::new();
+        let mut forced = Vec::new();
+        while self.has_capacity() {
+            let Some(front) = self.wait_queue.front() else { break };
+            // same budget trim admit_req applies — gate on what will
+            // actually be prefilled, not the raw prompt+carryover length
+            let budget = self.prefill_budget(front.max_new);
+            let prefill_len = (front.prompt_ids.len() + front.gen_ids.len())
+                .min(budget)
+                .max(1);
+            if BlockPool::blocks_for(prefill_len) > self.pool.total_blocks() {
+                let req = self.wait_queue.pop_front().expect("front exists");
+                forced.push(self.finish_queued(req));
+                continue;
+            }
+            if !self.pool.can_fit(prefill_len) {
+                break;
+            }
+            let req = self.wait_queue.pop_front().expect("front exists");
+            let id = self.admit_req(req)?;
+            admitted.push(id);
+        }
+        Ok((admitted, forced))
+    }
+
+    /// Complete a queued (evicted) request without re-admitting it, keeping
+    /// whatever it generated before eviction.
+    fn finish_queued(&mut self, mut req: QueuedReq) -> GenOutput {
+        req.stats.new_tokens = req.stats.new_tokens.max(req.gen_ids.len());
+        self.events.push(SchedEvent::Completed {
+            step: self.step_no,
+            id: req.id,
+            steps: req.stats.steps,
+            tokens: req.stats.new_tokens,
+        });
+        self.metrics.inc("sched.completed", 1);
+        self.make_output(req.id, req.gen_ids, req.stats)
+    }
+
+    /// Shared output construction for every completion path: truncate the
+    /// id stream at the first EOS (keeping it), strip EOS from the text.
+    fn make_output(&self, id: u64, mut gen_ids: Vec<i32>, stats: GenStats)
+                   -> GenOutput {
+        let eos = self.rt.manifest.constants.eos_id;
+        if let Some(p) = gen_ids.iter().position(|&t| t == eos) {
+            gen_ids.truncate(p + 1); // keep EOS in ids, strip from text
+        }
+        let text_ids: Vec<i32> = gen_ids
+            .iter()
+            .cloned()
+            .filter(|&t| t != eos)
+            .collect();
+        GenOutput {
+            id,
+            text: self.tok.decode(&text_ids),
+            token_ids: gen_ids,
+            stats,
+        }
+    }
+
+    /// Preempt a running sequence under pool pressure: release its blocks
+    /// and push it to the FRONT of the wait queue carrying its generated
+    /// tokens, so re-admission re-prefills prompt+generated and decoding
+    /// resumes losslessly (recompute-style preemption).
+    fn evict(&mut self, slot: usize) -> u64 {
+        let mut seq = self.slots[slot].take().expect("evict empty slot");
+        self.pool.release(slot);
+        seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
+        let id = seq.id;
+        let gen_len = seq.gen_ids.len();
+        let req = QueuedReq {
+            id,
+            prompt_ids: std::mem::take(&mut seq.prompt_ids),
+            gen_ids: std::mem::take(&mut seq.gen_ids),
+            max_new: seq.max_new,
+            stats: seq.stats.clone(),
+            rng: Some(seq.rng.clone()),
+            enq_step: self.step_no,
+        };
+        self.wait_queue.push_front(req);
+        self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
+        self.metrics.inc("sched.evicted", 1);
+        id
     }
 
     /// Chunked prefill through the n=PREFILL_N step graph (b=1).
@@ -387,9 +695,24 @@ impl Engine {
 
     // ------------------------------------------------------------ stepping
     /// One speculative decoding round across all active sequences.
-    /// Returns outputs for sequences that finished this round.
+    /// Returns outputs for sequences that finished this round. (Compat
+    /// wrapper over `step_ex`, which also reports streaming/scheduling
+    /// detail.)
     pub fn step(&mut self) -> Result<Vec<GenOutput>> {
+        Ok(self.step_ex()?.finished)
+    }
+
+    /// One scheduler round: admit from the wait queue into free slots, run
+    /// one draft→verify→accept round over all active sequences, reap
+    /// finished ones, and resolve KV-pool pressure by preempting the
+    /// youngest sequences back to the queue.
+    pub fn step_ex(&mut self) -> Result<StepReport> {
         let t_round = Instant::now();
+        self.step_no += 1;
+        let mut report = StepReport { step: self.step_no, ..Default::default() };
+        let (admitted, forced) = self.fill_slots()?;
+        report.admitted = admitted;
+        report.finished.extend(forced);
         let active: Vec<usize> = self
             .slots
             .iter()
@@ -398,7 +721,10 @@ impl Engine {
             .map(|(i, _)| i)
             .collect();
         if active.is_empty() {
-            return Ok(Vec::new());
+            report.queue_depth = self.wait_queue.len();
+            report.pool_utilization = self.pool.utilization();
+            self.record_step_gauges(&report);
+            return Ok(report);
         }
         let gb = self.rt.manifest.pick_batch(
             active.iter().max().map(|&i| i + 1).unwrap_or(1));
@@ -484,7 +810,7 @@ impl Engine {
         let hidden = out[3].f32_data()?;
 
         // --- 4. accept + commit per sequence
-        let mut finished = Vec::new();
+        let mut pool_pressure: Vec<(usize, usize)> = Vec::new();
         let re = self.heads * self.head_dim;
         let round_secs = t_round.elapsed().as_secs_f64();
         // modeled accelerator times for this round (per-seq attribution)
@@ -515,6 +841,16 @@ impl Engine {
                 }
             });
             seq.rng = rng;
+            // cut the accepted chain at the first EOS: tokens past it would
+            // leak into stream frames and β but never into the final text
+            let eos = self.rt.manifest.constants.eos_id;
+            let accepted: Vec<usize> = match accepted
+                .iter()
+                .position(|&node| tree.nodes[node].token == eos)
+            {
+                Some(p) => accepted[..=p].to_vec(),
+                None => accepted,
+            };
 
             // commit KV rows of accepted nodes (they sit in this seq's batch
             // slot of k_new: [L, gb, N, H, Dh] -> slice layer-wise)
@@ -527,15 +863,22 @@ impl Engine {
                 v_slice[dst..dst + n * re].copy_from_slice(&v_new[src..src + n * re]);
             }
             seq.cache.append_selected(&k_slice, &v_slice, n, &accepted)?;
-            self.pool.ensure(b, seq.cache.len).ok();
+            if self.pool.ensure(b, seq.cache.len).is_err() {
+                // over-committed: resolved below by preempting the
+                // youngest sequence(s) once finished slots are reaped
+                pool_pressure.push((b, seq.cache.len));
+            }
 
+            let mut delta = TokenDelta { id: seq.id, tokens: Vec::new() };
             for &node in &accepted {
                 let h = &hidden[(b * n + node) * self.d_model
                     ..(b * n + node + 1) * self.d_model];
                 self_push_window(seq, h, self.win, self.d_model);
                 seq.last_hidden.copy_from_slice(h);
                 seq.gen_ids.push(tree.nodes[node].token);
+                delta.tokens.push(tree.nodes[node].token);
             }
+            report.emitted.push(delta);
             seq.base_token = next_base;
 
             seq.stats.steps += 1;
@@ -556,43 +899,80 @@ impl Engine {
             seq.stats.device_breakdown.other_secs += other;
 
             // --- termination
-            let eos = self.rt.manifest.constants.eos_id;
             let hit_eos = seq.gen_ids.iter().any(|&t| t == eos);
             let out_of_room = seq.cache.len + self.tree_n + 1 >= self.lmax;
-            if hit_eos || seq.gen_ids.len() >= seq.max_new || out_of_room {
+            // a sequence the whole pool can't hold for one more tree must
+            // finish now — requeueing it would head-block the queue forever
+            let out_of_pool = BlockPool::blocks_for(seq.cache.len + self.tree_n + 1)
+                > self.pool.total_blocks();
+            if hit_eos || seq.gen_ids.len() >= seq.max_new || out_of_room
+                || out_of_pool
+            {
                 seq.done = true;
             }
         }
 
+        // --- 5. reap finished sequences (frees their pool blocks first so
+        // pressure resolution below preempts as little as possible)
         for b in 0..self.slots.len() {
             let done = self.slots[b].as_ref().map(|s| s.done).unwrap_or(false);
             if done {
                 let mut seq = self.slots[b].take().unwrap();
                 self.pool.release(b);
-                seq.stats.wall_secs = seq.t_admit.elapsed().as_secs_f64();
-                finished.push(self.finish(seq));
+                seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
+                self.events.push(SchedEvent::Completed {
+                    step: self.step_no,
+                    id: seq.id,
+                    steps: seq.stats.steps,
+                    tokens: seq.stats.new_tokens,
+                });
+                self.metrics.inc("sched.completed", 1);
+                report.finished.push(self.finish(seq));
             }
         }
-        Ok(finished)
+
+        // --- 6. resolve pool pressure: preempt youngest-first until every
+        // surviving slot's accounting covers its cache length
+        for (slot, need_len) in pool_pressure {
+            loop {
+                if self.slots[slot].is_none() {
+                    break; // finished or already preempted
+                }
+                if self.pool.ensure(slot, need_len).is_ok() {
+                    break;
+                }
+                let victim = self
+                    .slots
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(i, s)| s.as_ref().map(|q| (i, q.id)))
+                    .max_by_key(|&(_, id)| id)
+                    .map(|(i, _)| i)
+                    .expect("pool pressure implies a live sequence");
+                let vid = self.evict(victim);
+                report.evicted.push(vid);
+                if victim == slot {
+                    break;
+                }
+            }
+        }
+
+        report.queue_depth = self.wait_queue.len();
+        report.pool_utilization = self.pool.utilization();
+        self.record_step_gauges(&report);
+        Ok(report)
     }
 
-    fn finish(&self, mut seq: Seq) -> GenOutput {
-        let eos = self.rt.manifest.constants.eos_id;
-        if let Some(p) = seq.gen_ids.iter().position(|&t| t == eos) {
-            seq.gen_ids.truncate(p + 1); // keep EOS in ids, strip from text
-        }
-        let text_ids: Vec<i32> = seq
-            .gen_ids
-            .iter()
-            .cloned()
-            .filter(|&t| t != eos)
-            .collect();
-        GenOutput {
-            id: seq.id,
-            text: self.tok.decode(&text_ids),
-            token_ids: seq.gen_ids,
-            stats: seq.stats,
-        }
+    fn record_step_gauges(&mut self, report: &StepReport) {
+        self.metrics.inc("sched.steps", 1);
+        self.metrics.set_gauge("sched.queue_depth", report.queue_depth as f64);
+        self.metrics
+            .set_gauge("sched.pool_utilization", report.pool_utilization);
+        self.metrics.set_gauge("sched.active", self.n_active() as f64);
+    }
+
+    fn finish(&self, seq: Seq) -> GenOutput {
+        self.make_output(seq.id, seq.gen_ids, seq.stats)
     }
 
     // ------------------------------------------------------------ frontends
@@ -605,7 +985,7 @@ impl Engine {
                     return Ok(out);
                 }
             }
-            if self.n_active() == 0 {
+            if self.n_active() == 0 && self.queue_len() == 0 {
                 bail!("sequence {id} vanished without finishing");
             }
         }
@@ -617,8 +997,8 @@ impl Engine {
         let mut queue: std::collections::VecDeque<&(String, usize)> =
             prompts.iter().collect();
         let mut outputs = Vec::with_capacity(prompts.len());
-        while !queue.is_empty() || self.n_active() > 0 {
-            while self.has_capacity() {
+        while !queue.is_empty() || self.n_active() > 0 || self.queue_len() > 0 {
+            while self.has_capacity() && self.queue_len() == 0 {
                 let Some((prompt, max_new)) = queue.pop_front() else { break };
                 self.admit(prompt, *max_new)?;
             }

@@ -120,7 +120,10 @@ pub struct BlockPool {
 
 impl BlockPool {
     pub fn new(total_positions: usize, max_seqs: usize) -> Self {
-        let total_blocks = total_positions / BLOCK_POSITIONS;
+        // round up: a pool configured with 1..15 positions must still hold
+        // one block, not silently become a zero-capacity pool that rejects
+        // every request
+        let total_blocks = total_positions.div_ceil(BLOCK_POSITIONS);
         BlockPool {
             total_blocks,
             free_blocks: total_blocks,
@@ -155,11 +158,25 @@ impl BlockPool {
         self.allocated[slot] = 0;
     }
 
+    /// Whether a fresh sequence of `positions` tokens could be admitted
+    /// right now (ignoring slot availability — capacity accounting only).
+    pub fn can_fit(&self, positions: usize) -> bool {
+        Self::blocks_for(positions) <= self.free_blocks
+    }
+
+    /// Blocks currently held by `slot` (0 when idle).
+    pub fn allocated(&self, slot: usize) -> usize {
+        self.allocated[slot]
+    }
+
     pub fn free_blocks(&self) -> usize {
         self.free_blocks
     }
     pub fn total_blocks(&self) -> usize {
         self.total_blocks
+    }
+    pub fn in_use_blocks(&self) -> usize {
+        self.total_blocks - self.free_blocks
     }
     pub fn utilization(&self) -> f64 {
         1.0 - self.free_blocks as f64 / self.total_blocks.max(1) as f64
@@ -259,11 +276,34 @@ mod tests {
     }
 
     #[test]
+    fn can_fit_and_allocated_track_pool_state() {
+        let mut p = BlockPool::new(64, 2); // 4 blocks
+        assert!(p.can_fit(64));
+        assert!(!p.can_fit(65));
+        p.ensure(0, 33).unwrap(); // 3 blocks
+        assert_eq!(p.allocated(0), 3);
+        assert_eq!(p.in_use_blocks(), 3);
+        assert!(p.can_fit(16));
+        assert!(!p.can_fit(17));
+        p.release(0);
+        assert_eq!(p.allocated(0), 0);
+        assert_eq!(p.in_use_blocks(), 0);
+    }
+
+    #[test]
     fn blocks_for_rounding() {
         assert_eq!(BlockPool::blocks_for(0), 0);
         assert_eq!(BlockPool::blocks_for(1), 1);
         assert_eq!(BlockPool::blocks_for(16), 1);
         assert_eq!(BlockPool::blocks_for(17), 2);
+    }
+
+    #[test]
+    fn tiny_pool_rounds_up_to_one_block() {
+        let mut p = BlockPool::new(10, 1);
+        assert_eq!(p.total_blocks(), 1);
+        assert!(p.ensure(0, 10).is_ok());
+        assert_eq!(BlockPool::new(0, 1).total_blocks(), 0);
     }
 
     #[test]

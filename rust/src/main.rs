@@ -66,6 +66,9 @@ fn engine_opts(cli: Cli) -> Cli {
         .opt("max-new", "max new tokens", Some("64"))
         .opt("temperature", "sampling temperature (0 = greedy)", Some("0"))
         .opt("seed", "rng seed", Some("0"))
+        .opt("queue-cap", "admit-queue bound (0 = unbounded); full => busy",
+             Some("0"))
+        .opt("kv-pool", "KV pool positions (0 = lmax × slots)", Some("0"))
         .flag("no-ctc-transform", "disable the CTC transform (ablation)")
 }
 
@@ -77,6 +80,8 @@ fn build_engine_cfg(a: &ctcdraft::util::cli::Args) -> Result<EngineConfig> {
         max_new_tokens: a.usize("max-new", 64),
         temperature: a.f64("temperature", 0.0) as f32,
         seed: a.u64("seed", 0),
+        queue_cap: a.usize("queue-cap", 0),
+        kv_pool_positions: a.usize("kv-pool", 0),
         ..EngineConfig::default()
     })
 }
@@ -211,11 +216,44 @@ fn cmd_client(argv: &[String]) -> Result<()> {
     let cli = Cli::new("ctcdraft client", "query a running server")
         .opt("addr", "server address", Some("127.0.0.1:7700"))
         .opt("prompt", "question text", None)
-        .opt("max-new", "max new tokens", Some("64"));
+        .opt("max-new", "max new tokens", Some("64"))
+        .opt("id", "client-chosen request id", Some("1"))
+        .opt("cancel", "cancel the request with this id and exit", None)
+        .flag("stream", "print tokens as they are accepted")
+        .flag("stats", "print server scheduler stats and exit");
     let a = parse_args(cli, argv)?;
-    let Some(prompt) = a.get("prompt") else { bail!("--prompt required") };
     let mut client = Client::connect(a.get_or("addr", "127.0.0.1:7700"))?;
-    let reply = client.generate(1, prompt, a.usize("max-new", 64))?;
+    if a.flag("stats") {
+        println!("{}", client.stats_detail()?.to_string());
+        return Ok(());
+    }
+    if let Some(id) = a.get("cancel") {
+        let id: i64 = id.parse()?;
+        let ok = client.cancel(id)?;
+        println!("cancel id={id}: {}", if ok { "cancelled" } else { "not found" });
+        return Ok(());
+    }
+    let Some(prompt) = a.get("prompt") else { bail!("--prompt required") };
+    let id = a.get("id").and_then(|v| v.parse().ok()).unwrap_or(1);
+    let max_new = a.usize("max-new", 64);
+    if a.flag("stream") {
+        use std::io::Write as _;
+        let outcome = client.generate_stream(id, prompt, max_new, true, |t| {
+            print!("{t}");
+            let _ = std::io::stdout().flush();
+        })?;
+        println!();
+        match outcome {
+            ctcdraft::server::GenerateOutcome::Done(r) => {
+                eprintln!("[{} tokens, {} steps, β={:.2}, {:.0}ms]",
+                          r.tokens, r.steps, r.beta, r.ms);
+            }
+            ctcdraft::server::GenerateOutcome::Busy => bail!("server busy"),
+            ctcdraft::server::GenerateOutcome::Cancelled => bail!("cancelled"),
+        }
+        return Ok(());
+    }
+    let reply = client.generate(id, prompt, max_new)?;
     println!("{}", reply.text);
     eprintln!("[{} tokens, {} steps, β={:.2}, {:.0}ms]",
               reply.tokens, reply.steps, reply.beta, reply.ms);

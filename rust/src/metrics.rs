@@ -1,7 +1,10 @@
 //! Serving metrics: per-stage timing breakdown (Fig 3), latency histograms,
-//! acceptance accounting (β), and speedup reporting (γ).
+//! acceptance accounting (β), speedup reporting (γ), and the scheduler
+//! event log (admission/eviction/completion) used by the deterministic
+//! scheduler simulation.
 
 use std::collections::BTreeMap;
+use std::fmt;
 
 /// Wall-time split of a decoding run into the paper's Fig-3 stages.
 #[derive(Debug, Default, Clone, Copy)]
@@ -76,14 +79,17 @@ impl DeviceModel {
     }
 }
 
-/// Log-bucketed latency histogram (microseconds to ~minutes).
+/// Log-bucketed histogram; buckets are powers of two of the recorded unit
+/// (microseconds for latencies, raw counts for dimensionless quantities).
 #[derive(Debug, Clone)]
 pub struct Histogram {
-    /// bucket i covers [2^i, 2^(i+1)) microseconds
+    /// bucket i covers [2^i, 2^(i+1)) units
     buckets: Vec<u64>,
     count: u64,
     sum_us: u64,
     max_us: u64,
+    /// display suffix in reports: "us" for time, "" for dimensionless
+    unit: &'static str,
 }
 
 impl Default for Histogram {
@@ -94,7 +100,13 @@ impl Default for Histogram {
 
 impl Histogram {
     pub fn new() -> Self {
-        Histogram { buckets: vec![0; 36], count: 0, sum_us: 0, max_us: 0 }
+        Histogram { buckets: vec![0; 36], count: 0, sum_us: 0, max_us: 0, unit: "us" }
+    }
+
+    /// A histogram over a dimensionless quantity (steps, counts, depths) —
+    /// identical bucketing, no unit suffix in reports.
+    pub fn new_unitless() -> Self {
+        Histogram { unit: "", ..Self::new() }
     }
 
     pub fn record_secs(&mut self, secs: f64) {
@@ -142,11 +154,12 @@ impl Histogram {
     }
 }
 
-/// Named counters + histograms registry for a serving process.
+/// Named counters + histograms + gauges registry for a serving process.
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub counters: BTreeMap<String, u64>,
     pub histograms: BTreeMap<String, Histogram>,
+    pub gauges: BTreeMap<String, f64>,
     pub breakdown: StageBreakdown,
 }
 
@@ -162,14 +175,39 @@ impl Metrics {
             .record_secs(secs);
     }
 
+    /// Record a raw (unit-agnostic) value into a histogram; used for
+    /// dimensionless scheduler quantities like queue-wait steps.
+    pub fn observe(&mut self, name: &str, value: u64) {
+        self.histograms
+            .entry(name.to_string())
+            .or_insert_with(Histogram::new_unitless)
+            .record_us(value);
+    }
+
+    pub fn set_gauge(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
     pub fn report(&self) -> String {
         let mut s = String::new();
         for (k, v) in &self.counters {
             s.push_str(&format!("{k}: {v}\n"));
         }
+        for (k, v) in &self.gauges {
+            s.push_str(&format!("{k}: {v:.3}\n"));
+        }
         for (k, h) in &self.histograms {
+            let u = h.unit;
             s.push_str(&format!(
-                "{k}: n={} mean={:.1}us p50={}us p95={}us max={}us\n",
+                "{k}: n={} mean={:.1}{u} p50={}{u} p95={}{u} max={}{u}\n",
                 h.count(),
                 h.mean_us(),
                 h.quantile_us(0.5),
@@ -181,6 +219,122 @@ impl Metrics {
         s.push_str(&format!(
             "breakdown: base={bm:.1}% draft={dr:.1}% transform={tr:.1}% other={ot:.1}%\n"
         ));
+        s
+    }
+}
+
+// ------------------------------------------------------ scheduler events
+
+/// One scheduler decision, stamped with the engine's step counter (a virtual
+/// clock) rather than wall time, so event logs replay byte-for-byte from a
+/// seed regardless of host speed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SchedEvent {
+    /// Request entered the engine (either straight into a slot or queued).
+    Submitted { step: u64, id: u64 },
+    /// Request parked in the wait queue at position `pos`.
+    Queued { step: u64, id: u64, pos: usize },
+    /// Request occupies a batch slot after `waited` steps in the queue.
+    Admitted { step: u64, id: u64, waited: u64 },
+    /// Request preempted mid-flight (KV pool pressure); it re-queues and
+    /// will re-prefill its prompt + accepted tokens when re-admitted.
+    Evicted { step: u64, id: u64, gen_len: usize },
+    /// Request cancelled by the client; slot and pool blocks freed.
+    Cancelled { step: u64, id: u64 },
+    /// Request finished; `steps`/`tokens` feed the β histogram.
+    Completed { step: u64, id: u64, steps: usize, tokens: usize },
+}
+
+impl fmt::Display for SchedEvent {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SchedEvent::Submitted { step, id } => {
+                write!(f, "t={step} submit id={id}")
+            }
+            SchedEvent::Queued { step, id, pos } => {
+                write!(f, "t={step} queue id={id} pos={pos}")
+            }
+            SchedEvent::Admitted { step, id, waited } => {
+                write!(f, "t={step} admit id={id} waited={waited}")
+            }
+            SchedEvent::Evicted { step, id, gen_len } => {
+                write!(f, "t={step} evict id={id} gen={gen_len}")
+            }
+            SchedEvent::Cancelled { step, id } => {
+                write!(f, "t={step} cancel id={id}")
+            }
+            SchedEvent::Completed { step, id, steps, tokens } => {
+                write!(f, "t={step} done id={id} steps={steps} tokens={tokens}")
+            }
+        }
+    }
+}
+
+/// Retention cap for `EventLog::default()` — far above any simulation run
+/// (the determinism tests compare complete logs), but bounded so a
+/// long-running server worker does not grow its heap without limit.
+pub const EVENT_LOG_DEFAULT_CAP: usize = 65_536;
+
+/// Scheduler event log. `render()` is the canonical byte-for-byte
+/// representation compared by the determinism tests. Retention is bounded:
+/// once `cap` events are held, the oldest half is discarded (counted in
+/// `dropped`), so sustained serving traffic cannot leak memory.
+#[derive(Debug)]
+pub struct EventLog {
+    events: Vec<SchedEvent>,
+    /// 0 = unbounded
+    cap: usize,
+    dropped: u64,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog { events: Vec::new(), cap: EVENT_LOG_DEFAULT_CAP, dropped: 0 }
+    }
+}
+
+impl EventLog {
+    pub fn with_cap(cap: usize) -> Self {
+        EventLog { cap, ..Self::default() }
+    }
+
+    pub fn push(&mut self, e: SchedEvent) {
+        if self.cap > 0 && self.events.len() >= self.cap {
+            let n = (self.cap / 2).max(1);
+            self.events.drain(..n);
+            self.dropped += n as u64;
+        }
+        self.events.push(e);
+    }
+
+    /// Events discarded so far under the retention cap.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn events(&self) -> &[SchedEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.events.clear();
+        self.dropped = 0;
+    }
+
+    /// One line per event, in order.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for e in &self.events {
+            s.push_str(&format!("{e}\n"));
+        }
         s
     }
 }
@@ -302,9 +456,48 @@ mod tests {
         let mut m = Metrics::default();
         m.inc("requests", 3);
         m.observe_secs("step", 0.01);
+        m.set_gauge("queue_depth", 2.0);
         let r = m.report();
         assert!(r.contains("requests: 3"));
         assert!(r.contains("step:"));
         assert!(r.contains("breakdown:"));
+        assert!(r.contains("queue_depth: 2.000"));
+        assert_eq!(m.counter("requests"), 3);
+        assert_eq!(m.counter("missing"), 0);
+        assert!((m.gauge("queue_depth") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn event_log_cap_bounds_memory() {
+        let mut log = EventLog::with_cap(8);
+        for i in 0..100 {
+            log.push(SchedEvent::Submitted { step: i, id: i });
+        }
+        assert!(log.len() <= 8, "cap not enforced: {}", log.len());
+        assert_eq!(log.dropped() + log.len() as u64, 100);
+        // the newest event is always retained
+        assert!(log.render().contains("t=99 submit id=99"));
+        log.clear();
+        assert_eq!(log.dropped(), 0);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn event_log_renders_deterministically() {
+        let mk = || {
+            let mut log = EventLog::default();
+            log.push(SchedEvent::Submitted { step: 1, id: 1 });
+            log.push(SchedEvent::Queued { step: 1, id: 2, pos: 0 });
+            log.push(SchedEvent::Admitted { step: 2, id: 2, waited: 1 });
+            log.push(SchedEvent::Evicted { step: 3, id: 2, gen_len: 4 });
+            log.push(SchedEvent::Cancelled { step: 4, id: 1 });
+            log.push(SchedEvent::Completed { step: 5, id: 2, steps: 3, tokens: 7 });
+            log
+        };
+        let (a, b) = (mk(), mk());
+        assert_eq!(a.render(), b.render());
+        assert_eq!(a.len(), 6);
+        assert!(a.render().contains("t=2 admit id=2 waited=1"));
+        assert!(a.render().contains("t=5 done id=2 steps=3 tokens=7"));
     }
 }

@@ -1,5 +1,6 @@
 //! Threaded serving stack: TCP JSON-lines protocol, a least-loaded router,
-//! and engine worker threads with continuous batching.
+//! and engine worker threads running an admission-controlled continuous-
+//! batching scheduler (streaming, cancellation, bounded-queue backpressure).
 //!
 //! tokio is unavailable in the build image, and the `xla` wrapper types are
 //! not `Send` — so the architecture is: each worker thread *constructs its
@@ -8,17 +9,41 @@
 //! vllm-router shape, scaled to threads).
 //!
 //! Wire protocol (one JSON object per line):
-//!   → {"op":"generate","id":7,"prompt":"...","max_new":64}
-//!   ← {"type":"done","id":7,"text":"...","tokens":n,"steps":m,
-//!      "beta":x,"ms":t}
+//!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true}
+//!     Reply is a frame sequence on the same connection, terminated by one
+//!     terminal frame:
+//!     ← {"type":"queued","id":7,"pos":n}       (admit queue; informational)
+//!     ← {"type":"tok","id":7,"text":"...","n":k}  (stream:true only; one
+//!        frame per scheduler round, `n` accepted tokens)
+//!     ← {"type":"done","id":7,"text":"...","tokens":n,"steps":m,
+//!        "beta":x,"ms":t}                      (terminal)
+//!     ← {"type":"busy","id":7}                 (terminal; admit queue at
+//!        its cap — backpressure, retry later)
+//!     ← {"type":"cancelled","id":7}            (terminal; cancelled from
+//!        another connection)
+//!     ← {"type":"error", "message":"..."}      (terminal)
+//!   → {"op":"cancel","id":7}
+//!     ← {"type":"cancel_result","id":7,"ok":true}  (ok=false: id unknown
+//!        or already finished)
 //!   → {"op":"ping"}            ← {"type":"pong"}
-//!   → {"op":"stats"}           ← {"type":"stats","inflight":[...]}
+//!   → {"op":"stats"}           ← {"type":"stats","inflight":[...],
+//!        "workers":[{"active":..,"queued":..,"pool_utilization":..,
+//!                    "completed":..,"cancelled":..,"evicted":..,
+//!                    "rejected_busy":..,"steps":..}, ...]}
+//!
+//! Shutdown drains gracefully: in-flight and queued requests finish (new
+//! ones are rejected `busy`), then workers exit.
+//!
+//! Disconnect policy: a client that closes (or half-closes) its socket
+//! mid-request is treated as gone — its request is cancelled and the slot
+//! and KV blocks are freed. Keep the connection fully open until the
+//! terminal frame arrives.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -27,7 +52,7 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::EngineConfig;
-use crate::engine::Engine;
+use crate::engine::{Engine, GenOutput, Submission};
 use crate::runtime::Runtime;
 use crate::util::json::{parse, Json};
 
@@ -38,18 +63,44 @@ pub struct ServerConfig {
     pub engine: EngineConfig,
 }
 
+/// Server-unique request token (client ids are caller-chosen and may
+/// collide; disconnect-triggered cancels must target exactly one request).
+static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+
 struct Job {
     client_id: i64,
+    /// server-assigned, unique per generate request
+    token: u64,
     prompt: String,
     max_new: usize,
+    stream: bool,
+    resp: Sender<String>,
+}
+
+enum WorkerMsg {
+    Job(Job),
+    /// Explicit client cancel: kills every request with this client id.
+    Cancel { client_id: i64, ack: Sender<bool> },
+    /// Disconnect cleanup: kills exactly the request with this token.
+    CancelToken { token: u64, ack: Sender<bool> },
+    Stats { resp: Sender<String> },
+}
+
+/// A request the worker has handed to its engine and not yet terminated.
+struct Pending {
+    client_id: i64,
+    token: u64,
+    stream: bool,
     resp: Sender<String>,
 }
 
 struct WorkerHandle {
-    tx: Sender<Job>,
+    tx: Sender<WorkerMsg>,
     inflight: Arc<AtomicUsize>,
     join: JoinHandle<()>,
 }
+
+type Route = (Sender<WorkerMsg>, Arc<AtomicUsize>);
 
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
@@ -70,7 +121,7 @@ impl Server {
 
         let mut workers = Vec::new();
         for w in 0..cfg.workers.max(1) {
-            let (tx, rx) = channel::<Job>();
+            let (tx, rx) = channel::<WorkerMsg>();
             let inflight = Arc::new(AtomicUsize::new(0));
             let artifacts = cfg.artifacts.clone();
             let mut ecfg = cfg.engine.clone();
@@ -84,7 +135,7 @@ impl Server {
             workers.push(WorkerHandle { tx, inflight, join });
         }
 
-        let routes: Vec<(Sender<Job>, Arc<AtomicUsize>)> = workers
+        let routes: Vec<Route> = workers
             .iter()
             .map(|w| (w.tx.clone(), w.inflight.clone()))
             .collect();
@@ -97,6 +148,8 @@ impl Server {
         Ok(Server { local_addr, shutdown, acceptor: Some(acceptor), workers })
     }
 
+    /// Graceful drain: stop accepting, let workers finish every in-flight
+    /// and queued request (new submissions get `busy`), then join them.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(a) = self.acceptor.take() {
@@ -109,8 +162,7 @@ impl Server {
     }
 }
 
-fn acceptor_loop(listener: TcpListener,
-                 routes: Vec<(Sender<Job>, Arc<AtomicUsize>)>,
+fn acceptor_loop(listener: TcpListener, routes: Vec<Route>,
                  shutdown: Arc<AtomicBool>) {
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
@@ -128,16 +180,14 @@ fn acceptor_loop(listener: TcpListener,
     }
 }
 
-fn pick_worker(routes: &[(Sender<Job>, Arc<AtomicUsize>)])
-               -> &(Sender<Job>, Arc<AtomicUsize>) {
+fn pick_worker(routes: &[Route]) -> &Route {
     routes
         .iter()
         .min_by_key(|(_, infl)| infl.load(Ordering::SeqCst))
         .expect("at least one worker")
 }
 
-fn handle_conn(stream: TcpStream,
-               routes: Vec<(Sender<Job>, Arc<AtomicUsize>)>) -> Result<()> {
+fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -166,19 +216,77 @@ fn handle_conn(stream: TcpStream,
                     .iter()
                     .map(|(_, i)| Json::num(i.load(Ordering::SeqCst) as f64))
                     .collect();
+                // fan out first, then collect: total wait is bounded by the
+                // slowest worker (one in-flight step), not the sum; a wedged
+                // worker degrades its entry to null instead of stalling stats
+                let receivers: Vec<Option<Receiver<String>>> = routes
+                    .iter()
+                    .map(|(tx, _)| {
+                        let (stx, srx) = channel::<String>();
+                        tx.send(WorkerMsg::Stats { resp: stx }).ok().map(|_| srx)
+                    })
+                    .collect();
+                let per_worker: Vec<Json> = receivers
+                    .into_iter()
+                    .map(|srx| {
+                        srx.and_then(|rx| {
+                            rx.recv_timeout(Duration::from_secs(5)).ok()
+                        })
+                        .and_then(|s| parse(&s).ok())
+                        .unwrap_or(Json::Null)
+                    })
+                    .collect();
                 writeln!(writer, "{}", Json::obj(vec![
                     ("type", Json::str("stats")),
                     ("inflight", Json::Arr(loads)),
+                    ("workers", Json::Arr(per_worker)),
+                ]).to_string())?;
+            }
+            Some("cancel") => {
+                let client_id = req.get("id").as_i64().unwrap_or(0);
+                // the router doesn't track request→worker placement, so the
+                // cancel fans out to every worker; client ids are caller-
+                // chosen and may collide, so all matches are cancelled.
+                // Send-all-then-collect (like stats): latency is bounded by
+                // the slowest worker's in-flight step, not the sum
+                let acks: Vec<Option<Receiver<bool>>> = routes
+                    .iter()
+                    .map(|(tx, _)| {
+                        let (atx, arx) = channel::<bool>();
+                        tx.send(WorkerMsg::Cancel { client_id, ack: atx })
+                            .ok()
+                            .map(|_| arx)
+                    })
+                    .collect();
+                let ok = acks.into_iter().any(|arx| {
+                    arx.map(|rx| {
+                        rx.recv_timeout(Duration::from_secs(30)) == Ok(true)
+                    })
+                    .unwrap_or(false)
+                });
+                writeln!(writer, "{}", Json::obj(vec![
+                    ("type", Json::str("cancel_result")),
+                    ("id", Json::num(client_id as f64)),
+                    ("ok", Json::bool(ok)),
                 ]).to_string())?;
             }
             Some("generate") => {
                 let client_id = req.get("id").as_i64().unwrap_or(0);
                 let prompt = req.get("prompt").as_str().unwrap_or("").to_string();
                 let max_new = req.get("max_new").as_usize().unwrap_or(64);
+                let stream_toks = req.get("stream").as_bool().unwrap_or(false);
+                let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
                 let (rtx, rrx) = channel::<String>();
                 let (tx, infl) = pick_worker(&routes);
                 infl.fetch_add(1, Ordering::SeqCst);
-                let sent = tx.send(Job { client_id, prompt, max_new, resp: rtx });
+                let sent = tx.send(WorkerMsg::Job(Job {
+                    client_id,
+                    token,
+                    prompt,
+                    max_new,
+                    stream: stream_toks,
+                    resp: rtx,
+                }));
                 if sent.is_err() {
                     infl.fetch_sub(1, Ordering::SeqCst);
                     writeln!(writer, "{}", Json::obj(vec![
@@ -187,11 +295,29 @@ fn handle_conn(stream: TcpStream,
                     ]).to_string())?;
                     continue;
                 }
-                // relay response lines until the channel closes
-                for resp_line in rrx {
-                    writeln!(writer, "{resp_line}")?;
-                }
+                // relay response frames until the worker drops the channel
+                // (it does so right after the terminal frame). Between
+                // frames, probe the socket so a vanished client is noticed
+                // even when no frame is due (non-streaming requests emit
+                // nothing until `done`) and its request gets cancelled
+                // instead of burning a slot for a dead connection.
+                let relay = relay_frames(&mut writer, rrx);
                 infl.fetch_sub(1, Ordering::SeqCst);
+                if relay.client_gone {
+                    // cancel only this connection's request — client ids
+                    // may collide across connections, tokens cannot
+                    let (atx, arx) = channel::<bool>();
+                    let cancel = WorkerMsg::CancelToken { token, ack: atx };
+                    if tx.send(cancel).is_ok() {
+                        let _ = arx.recv_timeout(Duration::from_secs(30));
+                    }
+                    return Ok(());
+                }
+                if !relay.terminated {
+                    // worker exited (shutdown race) before replying; honor
+                    // the one-terminal-frame-per-generate contract
+                    writeln!(writer, "{}", simple_frame("busy", client_id))?;
+                }
             }
             Some("shutdown") => return Ok(()),
             _ => {
@@ -205,8 +331,193 @@ fn handle_conn(stream: TcpStream,
     Ok(())
 }
 
-/// Worker: owns Runtime + Engine; continuous batching across requests.
-fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<Job>,
+struct RelayResult {
+    /// client socket died before the terminal frame
+    client_gone: bool,
+    /// a terminal frame (done/busy/cancelled/error) was relayed
+    terminated: bool,
+}
+
+fn is_terminal_frame(line: &str) -> bool {
+    parse(line)
+        .ok()
+        .and_then(|v| v.get("type").as_str().map(|t| {
+            matches!(t, "done" | "busy" | "cancelled" | "error")
+        }))
+        .unwrap_or(false)
+}
+
+/// Forward worker frames to the client, watching for a dead socket between
+/// frames. Liveness probing uses `peek` under a short SO_RCVTIMEO; the
+/// option is shared with the connection's reader, so it is restored before
+/// returning (the reader is idle during the relay — generate is the
+/// pending op).
+fn relay_frames(writer: &mut TcpStream, rrx: Receiver<String>) -> RelayResult {
+    let probe_timeout = Some(Duration::from_millis(20));
+    let mut res = RelayResult { client_gone: false, terminated: false };
+    loop {
+        match rrx.recv_timeout(Duration::from_millis(500)) {
+            Ok(line) => {
+                if writeln!(writer, "{line}").is_err() {
+                    res.client_gone = true;
+                    break;
+                }
+                if is_terminal_frame(&line) {
+                    res.terminated = true;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if writer.set_read_timeout(probe_timeout).is_err() {
+                    res.client_gone = true;
+                    break;
+                }
+                let mut byte = [0u8; 1];
+                match writer.peek(&mut byte) {
+                    Ok(0) => {
+                        res.client_gone = true; // orderly EOF: client closed
+                        break;
+                    }
+                    Ok(_) => {} // pipelined request waiting; client alive
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                    Err(_) => {
+                        res.client_gone = true;
+                        break;
+                    }
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    let _ = writer.set_read_timeout(None);
+    res
+}
+
+fn done_frame(client_id: i64, out: &GenOutput) -> String {
+    Json::obj(vec![
+        ("type", Json::str("done")),
+        ("id", Json::num(client_id as f64)),
+        ("text", Json::str(out.text.clone())),
+        ("tokens", Json::num(out.stats.new_tokens as f64)),
+        ("steps", Json::num(out.stats.steps as f64)),
+        ("beta", Json::num(out.stats.accepted_per_step())),
+        ("ms", Json::num(out.stats.wall_secs * 1e3)),
+    ]).to_string()
+}
+
+fn simple_frame(kind: &str, client_id: i64) -> String {
+    Json::obj(vec![
+        ("type", Json::str(kind)),
+        ("id", Json::num(client_id as f64)),
+    ]).to_string()
+}
+
+fn error_frame(client_id: i64, msg: &str) -> String {
+    Json::obj(vec![
+        ("type", Json::str("error")),
+        ("id", Json::num(client_id as f64)),
+        ("message", Json::str(msg)),
+    ]).to_string()
+}
+
+fn worker_stats_json(engine: &Engine) -> String {
+    let m = engine.metrics();
+    Json::obj(vec![
+        ("active", Json::num(engine.n_active() as f64)),
+        ("queued", Json::num(engine.queue_len() as f64)),
+        ("pool_utilization", Json::num(engine.pool_utilization())),
+        ("steps", Json::num(m.counter("sched.steps") as f64)),
+        ("completed", Json::num(m.counter("sched.completed") as f64)),
+        ("cancelled", Json::num(m.counter("sched.cancelled") as f64)),
+        ("evicted", Json::num(m.counter("sched.evicted") as f64)),
+        ("rejected_busy", Json::num(m.counter("sched.rejected_busy") as f64)),
+    ]).to_string()
+}
+
+fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
+                     msg: WorkerMsg, draining: bool) {
+    match msg {
+        WorkerMsg::Job(job) => {
+            if draining {
+                let _ = job.resp.send(simple_frame("busy", job.client_id));
+                return;
+            }
+            let prompt = engine.format_prompt(&job.prompt);
+            match engine.submit(&prompt, job.max_new) {
+                Ok(Submission::Admitted(id)) => {
+                    pending.insert(id, Pending {
+                        client_id: job.client_id,
+                        token: job.token,
+                        stream: job.stream,
+                        resp: job.resp,
+                    });
+                }
+                Ok(Submission::Queued { id, pos }) => {
+                    let _ = job.resp.send(Json::obj(vec![
+                        ("type", Json::str("queued")),
+                        ("id", Json::num(job.client_id as f64)),
+                        ("pos", Json::num(pos as f64)),
+                    ]).to_string());
+                    pending.insert(id, Pending {
+                        client_id: job.client_id,
+                        token: job.token,
+                        stream: job.stream,
+                        resp: job.resp,
+                    });
+                }
+                Ok(Submission::Busy) => {
+                    let _ = job.resp.send(simple_frame("busy", job.client_id));
+                }
+                Err(e) => {
+                    let _ = job.resp.send(error_frame(
+                        job.client_id, &format!("{e:#}")));
+                }
+            }
+        }
+        WorkerMsg::Cancel { client_id, ack } => {
+            // client ids are caller-chosen and may collide; cancel every
+            // matching request (deterministic) rather than an arbitrary one
+            let mut hits: Vec<u64> = pending
+                .iter()
+                .filter(|(_, p)| p.client_id == client_id)
+                .map(|(&id, _)| id)
+                .collect();
+            hits.sort_unstable();
+            let mut ok = false;
+            for id in hits {
+                ok |= engine.cancel(id);
+                if let Some(p) = pending.remove(&id) {
+                    let _ = p.resp.send(simple_frame("cancelled", p.client_id));
+                }
+            }
+            let _ = ack.send(ok);
+        }
+        WorkerMsg::CancelToken { token, ack } => {
+            let hit = pending
+                .iter()
+                .find(|(_, p)| p.token == token)
+                .map(|(&id, _)| id);
+            let ok = match hit {
+                Some(id) => {
+                    let cancelled = engine.cancel(id);
+                    pending.remove(&id); // client is gone; no frame to send
+                    cancelled
+                }
+                None => false,
+            };
+            let _ = ack.send(ok);
+        }
+        WorkerMsg::Stats { resp } => {
+            let _ = resp.send(worker_stats_json(engine));
+        }
+    }
+}
+
+/// Worker: owns Runtime + Engine; admission-controlled continuous batching
+/// with token streaming. Requests flow `submit` → wait queue → slot →
+/// `step_ex` rounds; each round's accepted tokens become `tok` frames for
+/// streaming clients.
+fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<WorkerMsg>,
                _inflight: Arc<AtomicUsize>, shutdown: Arc<AtomicBool>) {
     let rt = match Runtime::load(&artifacts) {
         Ok(rt) => rt,
@@ -222,88 +533,102 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<Job>,
             return;
         }
     };
-    let mut pending: HashMap<u64, Job> = HashMap::new();
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
 
     loop {
-        // admit as long as we have slots and queued jobs
-        while engine.has_capacity() {
+        // drain the control channel: admit jobs, fire cancels, answer stats
+        let mut disconnected = false;
+        loop {
             match rx.try_recv() {
-                Ok(job) => {
-                    let prompt = engine.format_prompt(&job.prompt);
-                    match engine.admit(&prompt, job.max_new) {
-                        Ok(id) => {
-                            pending.insert(id, job);
-                        }
-                        Err(e) => {
-                            let _ = job.resp.send(Json::obj(vec![
-                                ("type", Json::str("error")),
-                                ("id", Json::num(job.client_id as f64)),
-                                ("message", Json::str(format!("{e:#}"))),
-                            ]).to_string());
-                        }
-                    }
+                Ok(msg) => {
+                    let draining = shutdown.load(Ordering::SeqCst);
+                    handle_worker_msg(&mut engine, &mut pending, msg, draining);
                 }
                 Err(TryRecvError::Empty) => break,
                 Err(TryRecvError::Disconnected) => {
-                    if engine.n_active() == 0 {
-                        return;
-                    }
+                    disconnected = true;
                     break;
                 }
             }
         }
+        let draining = disconnected || shutdown.load(Ordering::SeqCst);
 
-        if engine.n_active() == 0 {
-            if shutdown.load(Ordering::SeqCst) {
-                return;
-            }
-            // idle: block briefly for the next job
-            match rx.recv_timeout(Duration::from_millis(50)) {
-                Ok(job) => {
-                    let prompt = engine.format_prompt(&job.prompt);
-                    match engine.admit(&prompt, job.max_new) {
-                        Ok(id) => {
-                            pending.insert(id, job);
-                        }
-                        Err(e) => {
-                            let _ = job.resp.send(Json::obj(vec![
-                                ("type", Json::str("error")),
-                                ("message", Json::str(format!("{e:#}"))),
-                            ]).to_string());
-                        }
-                    }
+        if engine.n_active() == 0 && engine.queue_len() == 0 {
+            if draining {
+                // final sweep: busy-reject anything that raced in between
+                // the drain loop above and this return, so no job is
+                // dropped without a terminal frame
+                while let Ok(msg) = rx.try_recv() {
+                    handle_worker_msg(&mut engine, &mut pending, msg, true);
                 }
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                return; // graceful drain complete
+            }
+            // idle: block briefly for the next message
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(msg) => {
+                    // re-read the flag: shutdown may have begun mid-wait
+                    let draining = shutdown.load(Ordering::SeqCst);
+                    handle_worker_msg(&mut engine, &mut pending, msg, draining);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                 Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
             }
             continue;
         }
 
-        match engine.step() {
-            Ok(finished) => {
-                for out in finished {
-                    if let Some(job) = pending.remove(&out.id) {
-                        let msg = Json::obj(vec![
-                            ("type", Json::str("done")),
-                            ("id", Json::num(job.client_id as f64)),
-                            ("text", Json::str(out.text)),
-                            ("tokens", Json::num(out.stats.new_tokens as f64)),
-                            ("steps", Json::num(out.stats.steps as f64)),
-                            ("beta", Json::num(out.stats.accepted_per_step())),
-                            ("ms", Json::num(out.stats.wall_secs * 1e3)),
-                        ]);
-                        let _ = job.resp.send(msg.to_string());
-                        // closing the channel ends the relay loop
+        match engine.step_ex() {
+            Ok(report) => {
+                // a failed tok send means the client disconnected mid-
+                // stream; cancel its request so the slot + blocks free up
+                let mut orphaned: Vec<u64> = Vec::new();
+                let eos = engine.runtime().manifest.constants.eos_id;
+                for delta in &report.emitted {
+                    let Some(p) = pending.get(&delta.id) else { continue };
+                    if p.stream && !delta.tokens.is_empty() {
+                        // `n` counts all accepted tokens (β accounting, incl.
+                        // EOS); the text mirrors finish() and excludes it
+                        let text_ids: Vec<i32> = delta
+                            .tokens
+                            .iter()
+                            .cloned()
+                            .filter(|&t| t != eos)
+                            .collect();
+                        let text = engine.tokenizer().decode(&text_ids);
+                        let sent = p.resp.send(Json::obj(vec![
+                            ("type", Json::str("tok")),
+                            ("id", Json::num(p.client_id as f64)),
+                            ("text", Json::str(text)),
+                            ("n", Json::num(delta.tokens.len() as f64)),
+                        ]).to_string());
+                        if sent.is_err() {
+                            orphaned.push(delta.id);
+                        }
+                    }
+                }
+                for out in report.finished {
+                    if let Some(p) = pending.remove(&out.id) {
+                        let _ = p.resp.send(done_frame(p.client_id, &out));
+                        // dropping `p.resp` ends the client's relay loop
+                    }
+                }
+                for id in orphaned {
+                    if engine.cancel(id) {
+                        pending.remove(&id);
                     }
                 }
             }
             Err(e) => {
                 eprintln!("worker: step failed: {e:#}");
-                for (_, job) in pending.drain() {
-                    let _ = job.resp.send(Json::obj(vec![
-                        ("type", Json::str("error")),
-                        ("message", Json::str(format!("{e:#}"))),
-                    ]).to_string());
+                // free every slot/queue entry so the engine returns to a
+                // clean idle state instead of re-stepping a wedged batch
+                for id in engine.active_ids() {
+                    engine.cancel(id);
+                }
+                for id in engine.queued_ids() {
+                    engine.cancel(id);
+                }
+                for (_, p) in pending.drain() {
+                    let _ = p.resp.send(error_frame(p.client_id, &format!("{e:#}")));
                 }
             }
         }
@@ -326,6 +651,16 @@ pub struct GenerateReply {
     pub ms: f64,
 }
 
+/// Terminal outcome of a generate call (non-error).
+#[derive(Debug, Clone)]
+pub enum GenerateOutcome {
+    Done(GenerateReply),
+    /// Admit queue at its cap — backpressure; retry later.
+    Busy,
+    /// Cancelled from another connection mid-flight.
+    Cancelled,
+}
+
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)
@@ -334,14 +669,18 @@ impl Client {
         Ok(Client { writer: stream, reader })
     }
 
-    fn roundtrip(&mut self, req: Json) -> Result<Json> {
-        writeln!(self.writer, "{}", req.to_string())?;
+    fn read_frame(&mut self) -> Result<Json> {
         let mut line = String::new();
         self.reader.read_line(&mut line)?;
         if line.is_empty() {
             return Err(anyhow!("server closed connection"));
         }
         parse(line.trim()).map_err(|e| anyhow!("bad server reply: {e}"))
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        writeln!(self.writer, "{}", req.to_string())?;
+        self.read_frame()
     }
 
     pub fn ping(&mut self) -> Result<()> {
@@ -353,34 +692,86 @@ impl Client {
         }
     }
 
+    /// Blocking generate; `queued`/`tok` frames are consumed internally.
+    /// `busy` and `cancelled` terminals surface as errors — use
+    /// `generate_stream` to observe them as outcomes.
     pub fn generate(&mut self, id: i64, prompt: &str, max_new: usize)
                     -> Result<GenerateReply> {
-        let v = self.roundtrip(Json::obj(vec![
+        match self.generate_stream(id, prompt, max_new, false, |_| {})? {
+            GenerateOutcome::Done(r) => Ok(r),
+            GenerateOutcome::Busy => Err(anyhow!("server busy (queue full)")),
+            GenerateOutcome::Cancelled => Err(anyhow!("request cancelled")),
+        }
+    }
+
+    /// Streaming generate: `on_tok` fires for each `tok` frame (one per
+    /// scheduler round) when `stream` is true. Returns the terminal
+    /// outcome; protocol errors and `error` frames are `Err`.
+    pub fn generate_stream<F: FnMut(&str)>(
+        &mut self, id: i64, prompt: &str, max_new: usize, stream: bool,
+        mut on_tok: F) -> Result<GenerateOutcome> {
+        writeln!(self.writer, "{}", Json::obj(vec![
             ("op", Json::str("generate")),
             ("id", Json::num(id as f64)),
             ("prompt", Json::str(prompt)),
             ("max_new", Json::num(max_new as f64)),
+            ("stream", Json::bool(stream)),
+        ]).to_string())?;
+        loop {
+            let v = self.read_frame()?;
+            match v.get("type").as_str() {
+                Some("queued") => continue,
+                Some("tok") => on_tok(v.get("text").as_str().unwrap_or("")),
+                Some("done") => {
+                    return Ok(GenerateOutcome::Done(GenerateReply {
+                        text: v.get("text").as_str().unwrap_or("").to_string(),
+                        tokens: v.get("tokens").as_usize().unwrap_or(0),
+                        steps: v.get("steps").as_usize().unwrap_or(0),
+                        beta: v.get("beta").as_f64().unwrap_or(0.0),
+                        ms: v.get("ms").as_f64().unwrap_or(0.0),
+                    }));
+                }
+                Some("busy") => return Ok(GenerateOutcome::Busy),
+                Some("cancelled") => return Ok(GenerateOutcome::Cancelled),
+                Some("error") => return Err(anyhow!(
+                    "server error: {}",
+                    v.get("message").as_str().unwrap_or("?"))),
+                _ => return Err(anyhow!("unexpected reply {v:?}")),
+            }
+        }
+    }
+
+    /// Cancel a request submitted (usually from another connection) with
+    /// client id `id`. Returns whether a live request was cancelled.
+    pub fn cancel(&mut self, id: i64) -> Result<bool> {
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("cancel")),
+            ("id", Json::num(id as f64)),
         ]))?;
         match v.get("type").as_str() {
-            Some("done") => Ok(GenerateReply {
-                text: v.get("text").as_str().unwrap_or("").to_string(),
-                tokens: v.get("tokens").as_usize().unwrap_or(0),
-                steps: v.get("steps").as_usize().unwrap_or(0),
-                beta: v.get("beta").as_f64().unwrap_or(0.0),
-                ms: v.get("ms").as_f64().unwrap_or(0.0),
-            }),
-            Some("error") => Err(anyhow!(
-                "server error: {}", v.get("message").as_str().unwrap_or("?"))),
+            Some("cancel_result") => Ok(v.get("ok").as_bool().unwrap_or(false)),
             _ => Err(anyhow!("unexpected reply {v:?}")),
         }
     }
 
+    /// Router-level inflight per worker (back-compat shape).
     pub fn stats(&mut self) -> Result<Vec<usize>> {
         let v = self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))?;
         Ok(v.get("inflight")
             .as_arr()
             .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
             .unwrap_or_default())
+    }
+
+    /// Full stats object including per-worker scheduler detail
+    /// (`active`, `queued`, `pool_utilization`, counters).
+    pub fn stats_detail(&mut self) -> Result<Json> {
+        let v = self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))?;
+        if v.get("type").as_str() == Some("stats") {
+            Ok(v)
+        } else {
+            Err(anyhow!("unexpected reply {v:?}"))
+        }
     }
 }
 
@@ -397,9 +788,22 @@ mod tests {
             ("id", Json::num(3.0)),
             ("prompt", Json::str("hello")),
             ("max_new", Json::num(16.0)),
+            ("stream", Json::bool(true)),
         ]);
         let v = parse(&req.to_string()).unwrap();
         assert_eq!(v.get("op").as_str(), Some("generate"));
         assert_eq!(v.get("max_new").as_usize(), Some(16));
+        assert_eq!(v.get("stream").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn frame_builders_roundtrip() {
+        let busy = parse(&super::simple_frame("busy", 9)).unwrap();
+        assert_eq!(busy.get("type").as_str(), Some("busy"));
+        assert_eq!(busy.get("id").as_i64(), Some(9));
+        let err = parse(&super::error_frame(-3, "nope")).unwrap();
+        assert_eq!(err.get("type").as_str(), Some("error"));
+        assert_eq!(err.get("id").as_i64(), Some(-3));
+        assert_eq!(err.get("message").as_str(), Some("nope"));
     }
 }

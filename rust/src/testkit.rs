@@ -1,10 +1,24 @@
-//! Randomized property-test driver (proptest is unavailable offline).
+//! Randomized property-test driver (proptest is unavailable offline) and
+//! the deterministic scheduler simulation.
 //!
 //! `check` runs a property against many seeded random cases and reports the
 //! failing seed so a failure is reproducible with `CTCD_PROP_SEED=<seed>`.
 //! Case counts scale down under `CTCD_PROP_FAST=1` (used by CI-ish runs).
+//!
+//! `SchedulerSim` replays a `workload::Trace` (Poisson arrivals on a
+//! virtual step clock) against anything implementing `SchedBackend` — the
+//! real `Engine`, or the artifact-free `MockSched` — and returns a report
+//! whose event log is byte-for-byte reproducible from the seed.
 
+use std::collections::{BTreeMap, VecDeque};
+
+use anyhow::Result;
+
+use crate::engine::{Engine, GenOutput, GenStats, StepReport, Submission,
+                    TokenDelta};
+use crate::metrics::{EventLog, SchedEvent};
 use crate::util::rng::Rng;
+use crate::workload::Trace;
 
 pub struct Prop<'a> {
     pub name: &'a str,
@@ -45,6 +59,443 @@ impl<'a> Prop<'a> {
                 );
             }
         }
+    }
+}
+
+// ------------------------------------------------------ scheduler sim
+
+/// The scheduler surface the simulation drives. Implemented by the real
+/// `Engine` and by `MockSched` (no artifacts needed), so scheduler-policy
+/// tests run everywhere and engine-backed tests gate on artifacts.
+pub trait SchedBackend {
+    fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission>;
+    fn cancel(&mut self, id: u64) -> bool;
+    fn step_ex(&mut self) -> Result<StepReport>;
+    fn n_active(&self) -> usize;
+    fn queue_len(&self) -> usize;
+    /// Canonical event-log rendering (`metrics::EventLog::render`).
+    fn render_events(&self) -> String;
+}
+
+impl SchedBackend for Engine {
+    fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
+        Engine::submit(self, prompt, max_new)
+    }
+    fn cancel(&mut self, id: u64) -> bool {
+        Engine::cancel(self, id)
+    }
+    fn step_ex(&mut self) -> Result<StepReport> {
+        Engine::step_ex(self)
+    }
+    fn n_active(&self) -> usize {
+        Engine::n_active(self)
+    }
+    fn queue_len(&self) -> usize {
+        Engine::queue_len(self)
+    }
+    fn render_events(&self) -> String {
+        Engine::events(self).render()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// hard stop (steps) so a wedged scheduler fails fast instead of hanging
+    pub max_steps: u64,
+    /// per-arrival probability of scheduling a cancellation
+    pub cancel_prob: f64,
+    /// virtual-clock delay between submission and its cancellation firing
+    pub cancel_after: u64,
+    /// seed for the sim's own randomness (cancel plan) — independent of the
+    /// backend's seed
+    pub seed: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { max_steps: 10_000, cancel_prob: 0.0, cancel_after: 2, seed: 0 }
+    }
+}
+
+/// Everything a sim run produced. `event_log` is the canonical byte-for-
+/// byte artifact the determinism tests compare.
+#[derive(Debug, Default)]
+pub struct SimReport {
+    pub event_log: String,
+    /// seq ids in the order the scheduler admitted them into slots
+    pub admission_order: Vec<u64>,
+    /// per-request base-model decoding steps (finished requests only)
+    pub per_request_steps: BTreeMap<u64, usize>,
+    /// β histogram: accepted-tokens-per-round counts across the run
+    pub beta_hist: BTreeMap<usize, usize>,
+    pub finished: Vec<GenOutput>,
+    pub cancels_fired: usize,
+    pub busy_rejections: usize,
+    pub evictions: usize,
+    pub max_queue_depth: usize,
+    pub steps: u64,
+}
+
+/// Drives a `SchedBackend` through a timed `Trace` under a virtual clock:
+/// submit arrivals when due, fire planned cancellations, step until drained.
+pub struct SchedulerSim {
+    pub opts: SimOptions,
+}
+
+impl SchedulerSim {
+    pub fn new(opts: SimOptions) -> Self {
+        SchedulerSim { opts }
+    }
+
+    pub fn run<B: SchedBackend>(&self, backend: &mut B, trace: &Trace)
+                                -> Result<SimReport> {
+        let mut report = SimReport::default();
+        let mut cancel_rng = Rng::new(self.opts.seed ^ 0x5C4E_D01E);
+        let mut pending_cancels: Vec<(u64, u64)> = Vec::new(); // (fire, id)
+        let mut taken = 0usize;
+        let mut clock = 0u64;
+        loop {
+            // arrivals due on this tick
+            let due = trace.due(taken, clock);
+            let n_due = due.len();
+            for entry in due.to_vec() {
+                let wants_cancel = cancel_rng.bool(self.opts.cancel_prob);
+                match backend.submit(&entry.question.text, entry.max_new)? {
+                    Submission::Admitted(id) => {
+                        // direct admissions never pass through fill_slots,
+                        // so record them here to keep the order complete
+                        report.admission_order.push(id);
+                        if wants_cancel {
+                            pending_cancels
+                                .push((clock + self.opts.cancel_after, id));
+                        }
+                    }
+                    Submission::Queued { id, .. } => {
+                        if wants_cancel {
+                            pending_cancels
+                                .push((clock + self.opts.cancel_after, id));
+                        }
+                    }
+                    Submission::Busy => report.busy_rejections += 1,
+                }
+            }
+            taken += n_due;
+
+            // planned cancellations due on this tick
+            pending_cancels.retain(|&(fire, id)| {
+                if fire <= clock {
+                    if backend.cancel(id) {
+                        report.cancels_fired += 1;
+                    }
+                    false
+                } else {
+                    true
+                }
+            });
+
+            let step = backend.step_ex()?;
+            clock = step.step;
+            report.steps = clock;
+            report.admission_order.extend(&step.admitted);
+            report.evictions += step.evicted.len();
+            report.max_queue_depth = report.max_queue_depth.max(step.queue_depth);
+            for d in &step.emitted {
+                *report.beta_hist.entry(d.tokens.len()).or_insert(0) += 1;
+            }
+            for out in step.finished {
+                report.per_request_steps.insert(out.id, out.stats.steps);
+                report.finished.push(out);
+            }
+
+            let drained = taken >= trace.entries.len()
+                && backend.n_active() == 0
+                && backend.queue_len() == 0
+                && pending_cancels.is_empty();
+            if drained || clock >= self.opts.max_steps {
+                break;
+            }
+        }
+        report.event_log = backend.render_events();
+        Ok(report)
+    }
+}
+
+// ------------------------------------------------------ mock backend
+
+struct MockSeq {
+    id: u64,
+    prompt_len: usize,
+    max_new: usize,
+    produced: Vec<i32>,
+    steps: usize,
+    rng: Rng,
+}
+
+struct MockReq {
+    id: u64,
+    prompt_len: usize,
+    max_new: usize,
+    produced: Vec<i32>,
+    steps: usize,
+    rng: Option<Rng>,
+    enq_step: u64,
+}
+
+/// Engine-shaped deterministic fake: same admission/queue/eviction policy
+/// surface as `Engine` (slots, FIFO wait queue with a cap, a position pool
+/// that preempts youngest-first), but token production is a seeded RNG
+/// instead of a model — so scheduler tests run without artifacts.
+pub struct MockSched {
+    slots: Vec<Option<MockSeq>>,
+    wait_queue: VecDeque<MockReq>,
+    queue_cap: usize,
+    /// total KV positions the fake pool holds
+    pool_positions: usize,
+    step_no: u64,
+    next_id: u64,
+    rng: Rng,
+    events: EventLog,
+}
+
+impl MockSched {
+    pub fn new(slots: usize, queue_cap: usize, pool_positions: usize,
+               seed: u64) -> Self {
+        MockSched {
+            slots: (0..slots.max(1)).map(|_| None).collect(),
+            wait_queue: VecDeque::new(),
+            queue_cap,
+            pool_positions: pool_positions.max(1),
+            step_no: 0,
+            next_id: 1,
+            rng: Rng::new(seed),
+            events: EventLog::default(),
+        }
+    }
+
+    fn pool_used(&self) -> usize {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| s.prompt_len + s.produced.len())
+            .sum()
+    }
+
+    fn has_free_slot(&self) -> bool {
+        self.slots.iter().any(|s| s.is_none())
+    }
+
+    fn admit_req(&mut self, req: MockReq) -> u64 {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.is_none())
+            .expect("admit_req requires a free slot");
+        let id = req.id;
+        let rng = match req.rng {
+            Some(r) => r,
+            None => self.rng.fork(id),
+        };
+        self.slots[slot] = Some(MockSeq {
+            id,
+            prompt_len: req.prompt_len,
+            max_new: req.max_new,
+            produced: req.produced,
+            steps: req.steps,
+            rng,
+        });
+        let waited = self.step_no.saturating_sub(req.enq_step);
+        self.events.push(SchedEvent::Admitted { step: self.step_no, id, waited });
+        id
+    }
+
+    /// Mirrors `Engine::fill_slots`: a head the whole pool can never hold
+    /// (only reachable via eviction carryover) is force-finished with what
+    /// it produced instead of head-blocking the queue forever.
+    fn fill_slots(&mut self) -> (Vec<u64>, Vec<GenOutput>) {
+        let mut admitted = Vec::new();
+        let mut forced = Vec::new();
+        while self.has_free_slot() {
+            let Some(front) = self.wait_queue.front() else { break };
+            let need = front.prompt_len + front.produced.len();
+            if need > self.pool_positions {
+                let req = self.wait_queue.pop_front().expect("front exists");
+                forced.push(self.finish_req(
+                    req.id, req.prompt_len, req.steps, req.produced));
+                continue;
+            }
+            if self.pool_used() + need > self.pool_positions {
+                break;
+            }
+            let req = self.wait_queue.pop_front().expect("front exists");
+            admitted.push(self.admit_req(req));
+        }
+        (admitted, forced)
+    }
+
+    fn finish_req(&mut self, id: u64, prompt_len: usize, steps: usize,
+                  produced: Vec<i32>) -> GenOutput {
+        self.events.push(SchedEvent::Completed {
+            step: self.step_no,
+            id,
+            steps,
+            tokens: produced.len(),
+        });
+        let mut stats = GenStats::default();
+        stats.steps = steps;
+        stats.new_tokens = produced.len();
+        stats.prefill_tokens = prompt_len;
+        GenOutput {
+            id,
+            text: format!("mock-{id}"),
+            token_ids: produced,
+            stats,
+        }
+    }
+
+    fn evict_youngest(&mut self) -> Option<u64> {
+        let victim = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|q| (i, q.id)))
+            .max_by_key(|&(_, id)| id)
+            .map(|(i, _)| i)?;
+        let seq = self.slots[victim].take().expect("victim is live");
+        let gen_len = seq.produced.len();
+        let id = seq.id;
+        self.wait_queue.push_front(MockReq {
+            id,
+            prompt_len: seq.prompt_len,
+            max_new: seq.max_new,
+            produced: seq.produced,
+            steps: seq.steps,
+            rng: Some(seq.rng),
+            enq_step: self.step_no,
+        });
+        self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
+        Some(id)
+    }
+}
+
+impl SchedBackend for MockSched {
+    fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
+        if self.queue_cap > 0 && self.wait_queue.len() >= self.queue_cap {
+            return Ok(Submission::Busy);
+        }
+        // deterministic "tokenized" length from the prompt bytes
+        let prompt_len = (prompt.len() / 4).clamp(1, 64);
+        if prompt_len > self.pool_positions {
+            // mirror Engine::submit's bail for prompts the whole pool can
+            // never hold — they must never enter the queue
+            anyhow::bail!(
+                "prompt needs {prompt_len} positions but the pool holds \
+                 only {}", self.pool_positions);
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.events.push(SchedEvent::Submitted { step: self.step_no, id });
+        let req = MockReq {
+            id,
+            prompt_len,
+            max_new,
+            produced: Vec::new(),
+            steps: 0,
+            rng: None,
+            enq_step: self.step_no,
+        };
+        if self.wait_queue.is_empty()
+            && self.has_free_slot()
+            && self.pool_used() + prompt_len <= self.pool_positions
+        {
+            return Ok(Submission::Admitted(self.admit_req(req)));
+        }
+        let pos = self.wait_queue.len();
+        self.wait_queue.push_back(req);
+        self.events.push(SchedEvent::Queued { step: self.step_no, id, pos });
+        Ok(Submission::Queued { id, pos })
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        if let Some(pos) = self.wait_queue.iter().position(|r| r.id == id) {
+            self.wait_queue.remove(pos);
+            self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
+            return true;
+        }
+        let slot = self.slots.iter().position(|s| {
+            s.as_ref().map(|q| q.id == id).unwrap_or(false)
+        });
+        if let Some(slot) = slot {
+            self.slots[slot] = None;
+            self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
+            return true;
+        }
+        false
+    }
+
+    fn step_ex(&mut self) -> Result<StepReport> {
+        self.step_no += 1;
+        let mut report = StepReport { step: self.step_no, ..Default::default() };
+        let (admitted, forced) = self.fill_slots();
+        report.admitted = admitted;
+        report.finished.extend(forced);
+
+        // one "round": every active seq accepts 1..=4 tokens (β analog)
+        for slot in self.slots.iter_mut() {
+            let Some(seq) = slot.as_mut() else { continue };
+            let k = (1 + seq.rng.below(4)).min(seq.max_new - seq.produced.len());
+            let mut delta = TokenDelta { id: seq.id, tokens: Vec::new() };
+            for _ in 0..k {
+                let tok = seq.rng.below(1000) as i32;
+                seq.produced.push(tok);
+                delta.tokens.push(tok);
+            }
+            seq.steps += 1;
+            report.emitted.push(delta);
+        }
+
+        // reap finished — `max_new` reached, or (mirroring Engine's
+        // out-of-pool early finish) the whole pool can't hold one more token
+        for b in 0..self.slots.len() {
+            let done = self.slots[b]
+                .as_ref()
+                .map(|s| {
+                    s.produced.len() >= s.max_new
+                        || s.prompt_len + s.produced.len() + 1 > self.pool_positions
+                })
+                .unwrap_or(false);
+            if done {
+                let seq = self.slots[b].take().expect("done seq");
+                let out = self.finish_req(
+                    seq.id, seq.prompt_len, seq.steps, seq.produced);
+                report.finished.push(out);
+            }
+        }
+
+        // pool pressure: preempt youngest until the fake pool fits
+        while self.pool_used() > self.pool_positions {
+            match self.evict_youngest() {
+                Some(id) => report.evicted.push(id),
+                None => break,
+            }
+        }
+
+        report.queue_depth = self.wait_queue.len();
+        report.pool_utilization =
+            self.pool_used().min(self.pool_positions) as f64
+                / self.pool_positions as f64;
+        Ok(report)
+    }
+
+    fn n_active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn queue_len(&self) -> usize {
+        self.wait_queue.len()
+    }
+
+    fn render_events(&self) -> String {
+        self.events.render()
     }
 }
 

@@ -80,6 +80,9 @@ impl Json {
     pub fn num(n: impl Into<f64>) -> Json {
         Json::Num(n.into())
     }
+    pub fn bool(b: bool) -> Json {
+        Json::Bool(b)
+    }
 
     // ------------------------------------------------------------ writer
     pub fn to_string(&self) -> String {
@@ -411,5 +414,11 @@ mod tests {
     fn integer_formatting() {
         assert_eq!(Json::Num(5.0).to_string(), "5");
         assert_eq!(Json::Num(5.25).to_string(), "5.25");
+    }
+
+    #[test]
+    fn bool_constructor() {
+        assert_eq!(Json::bool(true).to_string(), "true");
+        assert_eq!(parse("false").unwrap().as_bool(), Some(false));
     }
 }

@@ -114,25 +114,63 @@ pub fn gsm8k(count: usize, seed: u64) -> Vec<Question> {
         .collect()
 }
 
-/// A recorded trace of (question, generated length) pairs — replayable load
-/// for the server benchmarks.
+/// One request in a replayable load trace: what to ask, how much to
+/// generate, and *when* it arrives on the scheduler's virtual clock.
+#[derive(Debug, Clone)]
+pub struct TraceEntry {
+    pub question: Question,
+    pub max_new: usize,
+    /// arrival time in scheduler steps (virtual clock, monotone)
+    pub arrival_step: u64,
+}
+
+/// A recorded trace of timed requests — replayable load for the server
+/// benchmarks and the deterministic scheduler simulation (`testkit`).
 #[derive(Debug, Clone)]
 pub struct Trace {
-    pub entries: Vec<(Question, usize)>,
+    pub entries: Vec<TraceEntry>,
 }
 
 impl Trace {
-    pub fn poisson_arrivals(questions: Vec<Question>, max_new: usize,
-                            seed: u64) -> Trace {
+    /// Poisson arrival process: i.i.d. exponential interarrival gaps with
+    /// `mean_gap_steps` mean (in scheduler steps), plus per-request
+    /// generation-length jitter in [0.5, 1.5]×`max_new` (min 8). Entries
+    /// keep the input question order; arrival steps are nondecreasing.
+    pub fn poisson_with_rate(questions: Vec<Question>, max_new: usize,
+                             mean_gap_steps: f64, seed: u64) -> Trace {
         let mut rng = Rng::new(seed);
+        let mut clock = 0f64;
         let entries = questions
             .into_iter()
             .map(|q| {
                 let jitter = (max_new as f64 * (0.5 + rng.f64())) as usize;
-                (q, jitter.max(8))
+                // inverse-CDF exponential draw; f64() < 1 keeps ln finite
+                let gap = -(1.0 - rng.f64()).ln() * mean_gap_steps.max(0.0);
+                clock += gap;
+                TraceEntry {
+                    question: q,
+                    max_new: jitter.max(8),
+                    arrival_step: clock as u64,
+                }
             })
             .collect();
         Trace { entries }
+    }
+
+    /// Back-compat shape: Poisson arrivals with a mean gap of 2 steps.
+    pub fn poisson_arrivals(questions: Vec<Question>, max_new: usize,
+                            seed: u64) -> Trace {
+        Self::poisson_with_rate(questions, max_new, 2.0, seed)
+    }
+
+    /// Arrivals due at or before `step` that come after the first `taken`
+    /// entries (entries are arrival-ordered, so this is a prefix walk).
+    pub fn due(&self, taken: usize, step: u64) -> &[TraceEntry] {
+        let mut end = taken;
+        while end < self.entries.len() && self.entries[end].arrival_step <= step {
+            end += 1;
+        }
+        &self.entries[taken..end]
     }
 }
 
@@ -180,6 +218,34 @@ mod tests {
     fn trace_lengths_bounded() {
         let t = Trace::poisson_arrivals(mtbench(2, 0), 64, 3);
         assert_eq!(t.entries.len(), 16);
-        assert!(t.entries.iter().all(|(_, n)| *n >= 8 && *n <= 96));
+        assert!(t.entries.iter().all(|e| e.max_new >= 8 && e.max_new <= 96));
+    }
+
+    #[test]
+    fn trace_arrivals_monotone_and_seeded() {
+        let a = Trace::poisson_with_rate(mtbench(2, 0), 32, 3.0, 7);
+        let b = Trace::poisson_with_rate(mtbench(2, 0), 32, 3.0, 7);
+        assert!(a.entries.windows(2)
+            .all(|w| w[0].arrival_step <= w[1].arrival_step));
+        assert!(a.entries.iter().zip(&b.entries).all(|(x, y)| {
+            x.arrival_step == y.arrival_step && x.max_new == y.max_new
+        }));
+        let c = Trace::poisson_with_rate(mtbench(2, 0), 32, 3.0, 8);
+        assert!(a.entries.iter().zip(&c.entries)
+            .any(|(x, y)| x.arrival_step != y.arrival_step));
+    }
+
+    #[test]
+    fn trace_due_walks_prefix() {
+        let t = Trace::poisson_with_rate(mtbench(1, 0), 16, 4.0, 1);
+        let last = t.entries.last().unwrap().arrival_step;
+        // everything is due by the last arrival step
+        assert_eq!(t.due(0, last).len(), t.entries.len());
+        // nothing new is due once all were taken
+        assert!(t.due(t.entries.len(), last + 100).is_empty());
+        // prefix walk: due(0, s) grows with s
+        let mid = t.entries[t.entries.len() / 2].arrival_step;
+        assert!(t.due(0, mid).len() <= t.entries.len());
+        assert!(!t.due(0, mid).is_empty());
     }
 }

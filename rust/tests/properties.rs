@@ -306,6 +306,77 @@ fn prop_json_roundtrip() {
 }
 
 #[test]
+fn prop_block_pool_never_leaks_or_double_frees() {
+    use ctcdraft::kvcache::{BlockPool, BLOCK_POSITIONS};
+    // Model-based check: random interleavings of ensure/release across
+    // random slots, against a reference per-slot block ledger. The pool
+    // must never leak blocks, never free more than it allocated, and keep
+    // utilization in [0, 1] throughout.
+    Prop::new("block_pool").check(|rng| {
+        let max_seqs = 1 + rng.below(6);
+        let total_positions = BLOCK_POSITIONS * (1 + rng.below(16));
+        let mut pool = BlockPool::new(total_positions, max_seqs);
+        let total = pool.total_blocks();
+        let mut ledger = vec![0usize; max_seqs];
+        for op in 0..200 {
+            let slot = rng.below(max_seqs);
+            if rng.bool(0.6) {
+                let positions = rng.below(2 * total_positions + 1);
+                let want = BlockPool::blocks_for(positions);
+                let free = total - ledger.iter().sum::<usize>();
+                let grew = want > ledger[slot];
+                let res = pool.ensure(slot, positions);
+                if !grew {
+                    if res.is_err() {
+                        return Err(format!("op {op}: shrinking ensure failed"));
+                    }
+                } else if want - ledger[slot] <= free {
+                    if res.is_err() {
+                        return Err(format!("op {op}: fitting ensure failed"));
+                    }
+                    ledger[slot] = want;
+                } else if res.is_ok() {
+                    return Err(format!("op {op}: over-capacity ensure ok"));
+                }
+                // a failed ensure must not partially allocate (checked by
+                // the ledger comparison below)
+            } else {
+                pool.release(slot);
+                ledger[slot] = 0;
+            }
+            let held: usize = ledger.iter().sum();
+            if pool.free_blocks() + held != total {
+                return Err(format!(
+                    "op {op}: leak — free {} + held {held} != total {total}",
+                    pool.free_blocks()));
+            }
+            for (s, &want) in ledger.iter().enumerate() {
+                if pool.allocated(s) != want {
+                    return Err(format!(
+                        "op {op}: slot {s} holds {} blocks, expected {want}",
+                        pool.allocated(s)));
+                }
+            }
+            let u = pool.utilization();
+            if !(0.0..=1.0).contains(&u) {
+                return Err(format!("op {op}: utilization {u} out of [0,1]"));
+            }
+        }
+        // releasing everything (twice — double release must be a no-op)
+        // returns the pool to fully free: nothing leaked
+        for s in 0..max_seqs {
+            pool.release(s);
+            pool.release(s);
+        }
+        if pool.free_blocks() != total || pool.in_use_blocks() != 0 {
+            return Err(format!(
+                "final drain leaked: free {} of {total}", pool.free_blocks()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_kvcache_append_preserves_earlier_rows() {
     use ctcdraft::kvcache::SeqCache;
     Prop::new("kvcache").check(|rng| {

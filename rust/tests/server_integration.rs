@@ -1,9 +1,14 @@
-//! Server integration: full TCP round trips against an in-process server.
+//! Server integration: full TCP round trips against an in-process server —
+//! request/response, token streaming, mid-stream cancellation, and
+//! bounded-queue `busy` backpressure.
+
+use std::io::{BufRead, BufReader, Write};
 
 use ctcdraft::config::{EngineConfig, Method};
-use ctcdraft::server::{Client, Server, ServerConfig};
+use ctcdraft::server::{Client, GenerateOutcome, Server, ServerConfig};
+use ctcdraft::util::json::{parse, Json};
 
-fn start_server(workers: usize) -> Option<Server> {
+fn start_server_with(workers: usize, engine: EngineConfig) -> Option<Server> {
     let artifacts = ctcdraft::default_artifacts_dir();
     if !artifacts.join("manifest.json").exists() {
         return None;
@@ -13,14 +18,25 @@ fn start_server(workers: usize) -> Option<Server> {
             addr: "127.0.0.1:0".into(),
             workers,
             artifacts,
-            engine: EngineConfig {
-                model: "vic-tiny".into(),
-                method: Method::Ctc,
-                ..EngineConfig::default()
-            },
+            engine,
         })
         .expect("server start"),
     )
+}
+
+fn start_server(workers: usize) -> Option<Server> {
+    start_server_with(workers, EngineConfig {
+        model: "vic-tiny".into(),
+        method: Method::Ctc,
+        ..EngineConfig::default()
+    })
+}
+
+/// Worker 0's scheduler stats from a fresh stats connection.
+fn worker_stats(addr: &str) -> Json {
+    let mut client = Client::connect(addr).expect("stats connect");
+    let v = client.stats_detail().expect("stats");
+    v.get("workers").idx(0).clone()
 }
 
 #[test]
@@ -70,7 +86,6 @@ fn concurrent_clients_share_the_batch() {
 
 #[test]
 fn malformed_requests_get_error_replies_and_connection_survives() {
-    use std::io::{BufRead, BufReader, Write};
     let Some(server) = start_server(1) else { return };
     let addr = server.local_addr.to_string();
     let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
@@ -91,6 +106,161 @@ fn malformed_requests_get_error_replies_and_connection_survives() {
     line.clear();
     reader.read_line(&mut line).unwrap();
     assert!(line.contains("pong"), "{line}");
+    server.stop();
+}
+
+#[test]
+fn stream_frames_arrive_in_order_and_sum_to_done() {
+    let Some(server) = start_server(1) else { return };
+    let addr = server.local_addr.to_string();
+    let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(
+        stream,
+        "{{\"op\":\"generate\",\"id\":5,\"prompt\":\"What is 7 + 8?\",\
+         \"max_new\":24,\"stream\":true}}"
+    )
+    .unwrap();
+
+    let mut tok_frames = 0usize;
+    let mut streamed_tokens = 0usize;
+    let done;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection closed before terminal frame");
+        let v = parse(line.trim()).expect("frame json");
+        match v.get("type").as_str() {
+            Some("queued") => {}
+            Some("tok") => {
+                assert_eq!(v.get("id").as_i64(), Some(5));
+                tok_frames += 1;
+                streamed_tokens += v.get("n").as_usize().unwrap_or(0);
+            }
+            Some("done") => {
+                done = v;
+                break;
+            }
+            other => panic!("unexpected frame type {other:?}: {line}"),
+        }
+    }
+    assert_eq!(done.get("id").as_i64(), Some(5));
+    assert!(tok_frames > 0, "no tok frames before done");
+    assert_eq!(streamed_tokens, done.get("tokens").as_usize().unwrap(),
+               "streamed token count disagrees with the done frame");
+    server.stop();
+}
+
+#[test]
+fn mid_stream_cancel_frees_slot_and_blocks() {
+    let Some(server) = start_server(1) else { return };
+    let addr = server.local_addr.to_string();
+
+    // conn A: a long streaming generate
+    let gen_addr = addr.clone();
+    let gen_thread = std::thread::spawn(move || {
+        let mut c = Client::connect(&gen_addr).expect("connect");
+        let mut toks = 0usize;
+        let outcome = c
+            .generate_stream(77, "Write a short paragraph about the ocean.",
+                             512, true, |_| toks += 1)
+            .expect("generate_stream");
+        (outcome, toks)
+    });
+
+    // conn B: wait until the request is visibly running, then cancel it
+    let mut ctl = Client::connect(&addr).expect("connect");
+    let mut cancelled = false;
+    for _ in 0..600 {
+        let w = worker_stats(&addr);
+        if w.get("active").as_usize().unwrap_or(0) > 0 {
+            cancelled = ctl.cancel(77).expect("cancel");
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(cancelled, "request never became cancellable");
+
+    let (outcome, _) = gen_thread.join().expect("gen thread");
+    assert!(matches!(outcome, GenerateOutcome::Cancelled),
+            "expected cancelled terminal, got {outcome:?}");
+
+    // slot and KV blocks must be free again
+    let w = worker_stats(&addr);
+    assert_eq!(w.get("active").as_usize(), Some(0));
+    assert_eq!(w.get("queued").as_usize(), Some(0));
+    assert_eq!(w.get("cancelled").as_usize(), Some(1));
+    assert!(w.get("pool_utilization").as_f64().unwrap_or(1.0) < 1e-9,
+            "cancel leaked KV blocks: {w:?}");
+    // a second cancel of the same id is a clean no-op
+    assert!(!ctl.cancel(77).expect("re-cancel"));
+    server.stop();
+}
+
+#[test]
+fn full_queue_rejects_busy_and_recovers() {
+    // one admitted request exhausts most of a 4-block pool, the second
+    // waits in the (cap-1) queue, everything after that must bounce busy
+    let Some(server) = start_server_with(1, EngineConfig {
+        model: "vic-tiny".into(),
+        method: Method::Ctc,
+        kv_pool_positions: 64,
+        queue_cap: 1,
+        ..EngineConfig::default()
+    }) else { return };
+    let addr = server.local_addr.to_string();
+
+    // hold the first request in the engine before firing the burst, so the
+    // burst is guaranteed to overlap it (no reliance on thread-spawn timing)
+    let first_addr = addr.clone();
+    let first = std::thread::spawn(move || {
+        let mut c = Client::connect(&first_addr).expect("connect");
+        c.generate_stream(0, "What is 2 + 2?", 48, false, |_| {})
+            .expect("generate")
+    });
+    let mut running = false;
+    for _ in 0..600 {
+        let w = worker_stats(&addr);
+        if w.get("active").as_usize().unwrap_or(0) >= 1 {
+            running = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(running, "first request never occupied a slot");
+
+    // burst of 5 more: with the held request that's 6 overlapping requests
+    // against at most 4 batch slots + 1 queue seat, so at least one submit
+    // must bounce `busy` regardless of prompt tokenization or pool state
+    let mut handles = Vec::new();
+    for i in 1..6 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).expect("connect");
+            c.generate_stream(i, "What is 2 + 2?", 48, false, |_| {})
+                .expect("generate")
+        }));
+    }
+    let mut outcomes: Vec<GenerateOutcome> =
+        vec![first.join().expect("first client")];
+    outcomes.extend(handles.into_iter().map(|h| h.join().expect("client")));
+    let done = outcomes.iter()
+        .filter(|o| matches!(o, GenerateOutcome::Done(_)))
+        .count();
+    let busy = outcomes.iter()
+        .filter(|o| matches!(o, GenerateOutcome::Busy))
+        .count();
+    assert_eq!(done + busy, 6, "unexpected terminal outcome: {outcomes:?}");
+    assert!(done >= 1, "nothing completed under backpressure");
+    assert!(busy >= 1, "queue cap never produced busy");
+
+    // after the burst drains, the scheduler accepts work again
+    let mut c = Client::connect(&addr).expect("connect");
+    let reply = c.generate(9, "What is 3 + 3?", 16).expect("post-burst generate");
+    assert!(reply.tokens > 0);
+    let w = worker_stats(&addr);
+    assert_eq!(w.get("active").as_usize(), Some(0));
+    assert!(w.get("rejected_busy").as_usize().unwrap_or(0) >= 1);
     server.stop();
 }
 
