@@ -4,17 +4,21 @@
 //! PJRT).
 //!
 //! Wire protocol quick reference (full doc block in `src/server.rs`):
-//!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true}
-//!   ← {"type":"queued","pos":n}   admit queue position (informational)
+//!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true,
+//!      "class":"interactive"|"batch","deadline_steps":N}
+//!   ← {"type":"queued","pos":n,"class":"..."}  SLO-policy queue position
 //!   ← {"type":"tok","id":7,"text":"...","n":k}   per-round token frames
 //!   ← {"type":"done",...} | {"type":"busy"} | {"type":"cancelled"}
 //!   → {"op":"cancel","id":7}      frees the slot + KV blocks mid-flight
 //!   → {"op":"stats"}              router inflight + per-worker scheduler
-//!                                 state (queue depth, pool utilization)
+//!                                 state (queue depth, pool utilization,
+//!                                 deadline misses)
 //!
 //! Client 0 below streams (`tok` frames as the scheduler accepts tokens);
-//! the rest use blocking generate. `busy` backpressure appears when the
-//! engine's `queue_cap` is set and the admit queue fills.
+//! the rest use blocking generate, and odd-numbered clients submit as the
+//! `batch` class so the SLO-aware scheduler admits the interactive ones
+//! first under contention. `busy` backpressure appears when the engine's
+//! `queue_cap` is set and the admit queue fills.
 //!
 //! Run: `cargo run --release --example serve_and_query`
 
@@ -22,6 +26,7 @@ use std::time::Instant;
 
 use anyhow::Result;
 use ctcdraft::config::{EngineConfig, Method};
+use ctcdraft::sched::Priority;
 use ctcdraft::server::{Client, Server, ServerConfig};
 use ctcdraft::util::cli::Cli;
 use ctcdraft::workload;
@@ -80,7 +85,18 @@ fn main() -> Result<()> {
                         other => anyhow::bail!("stream terminal: {other:?}"),
                     }
                 } else {
-                    client.generate(id, q, max_new)?
+                    // odd clients submit throughput work as `batch` so the
+                    // SLO scheduler orders interactive requests ahead
+                    let class = if c % 2 == 1 {
+                        Priority::Batch
+                    } else {
+                        Priority::Interactive
+                    };
+                    match client.generate_stream_opts(id, q, max_new, false,
+                                                      class, None, |_| {})? {
+                        ctcdraft::server::GenerateOutcome::Done(r) => r,
+                        other => anyhow::bail!("terminal: {other:?}"),
+                    }
                 };
                 out.push((reply.tokens, reply.ms));
             }
@@ -110,10 +126,13 @@ fn main() -> Result<()> {
     let detail = client.stats_detail()?;
     let w = detail.get("workers").idx(0);
     println!(
-        "worker 0 scheduler: completed={} queued={} pool_utilization={:.2}",
+        "worker 0 scheduler: completed={} queued={} pool_utilization={:.2} \
+         deadline_missed={} prefill_interleaved_rounds={}",
         w.get("completed").as_usize().unwrap_or(0),
         w.get("queued").as_usize().unwrap_or(0),
         w.get("pool_utilization").as_f64().unwrap_or(0.0),
+        w.get("deadline_missed").as_usize().unwrap_or(0),
+        w.get("prefill_interleaved_rounds").as_usize().unwrap_or(0),
     );
     server.stop();
     println!("server stopped cleanly (graceful drain)");

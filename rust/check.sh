@@ -8,4 +8,20 @@ set -euo pipefail
 cd "$(dirname "$0")"
 
 cargo build --release
+# The full suite includes the SchedulerSim scenario suite
+# (rust/tests/scheduler_sim.rs: interleaved chunked prefill,
+# interactive-preempts-batch, deadline misses, head-blocking regression).
 CTCD_PROP_FAST=1 cargo test -q
+
+# Determinism audit: two replays of the same seeded class-tagged trace must
+# produce byte-identical scheduler event logs. Any diff fails the gate.
+for seed in 7 41; do
+  a="$(./target/release/ctcdraft sim --seed "$seed")"
+  b="$(./target/release/ctcdraft sim --seed "$seed")"
+  if [ "$a" != "$b" ]; then
+    echo "FAIL: SchedulerSim replay for seed $seed is nondeterministic" >&2
+    diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
+    exit 1
+  fi
+done
+echo "scheduler-sim replay determinism: OK"

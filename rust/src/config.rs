@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::sched::SloPolicy;
 use crate::util::json::{parse, Json};
 
 /// Global serving constants exported by the python build.
@@ -265,6 +266,9 @@ pub struct EngineConfig {
     /// Engine-side admit-queue bound; 0 = unbounded. When the queue is at
     /// the cap, `submit` reports `Submission::Busy` (backpressure).
     pub queue_cap: usize,
+    /// SLO scheduling policy: priority-class deadlines, batch aging, and
+    /// the per-round prefill-chunk budget (see `sched::SloPolicy`).
+    pub slo: SloPolicy,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -308,6 +312,7 @@ impl Default for EngineConfig {
             seed: 0,
             kv_pool_positions: 0,
             queue_cap: 0,
+            slo: SloPolicy::default(),
         }
     }
 }

@@ -15,7 +15,6 @@
 //!      accepted nodes' KV rows are committed to the host cache and their
 //!      hidden states pushed into the draft window.
 
-use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -25,6 +24,7 @@ use crate::drafters::{make_drafter, DraftCtx, DraftTiming, Drafter};
 use crate::kvcache::{BlockPool, SeqCache};
 use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
                      StageBreakdown};
+use crate::sched::{Priority, ReqMeta};
 
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
@@ -108,8 +108,13 @@ pub struct StepReport {
     pub emitted: Vec<TokenDelta>,
     /// sequences that completed this round
     pub finished: Vec<GenOutput>,
-    /// sequences preempted back to the queue under KV-pool pressure
+    /// sequences preempted back to the queue (KV-pool pressure or
+    /// deadline-driven preemption at admission)
     pub evicted: Vec<u64>,
+    /// resumable-prefill progress this round: (seq id, tokens prefilled)
+    pub prefilled: Vec<(u64, usize)>,
+    /// sequences that completed this round PAST their deadline (SLO miss)
+    pub deadline_missed: Vec<u64>,
     /// wait-queue depth after this round
     pub queue_depth: usize,
     /// KV block-pool utilization in [0,1] after this round
@@ -125,23 +130,49 @@ struct QueuedReq {
     gen_ids: Vec<i32>,
     /// total generation budget (not remaining — `gen_ids` counts toward it)
     max_new: usize,
+    class: Priority,
+    /// absolute deadline on the scheduler's virtual step clock
+    deadline_step: u64,
+    /// step of the ORIGINAL submission (survives evictions; feeds aging)
+    submit_step: u64,
     stats: GenStats,
     rng: Option<Rng>,
+    /// step this entry (re-)entered the queue — basis of the wait metric
     enq_step: u64,
 }
 
 impl QueuedReq {
-    fn fresh(id: u64, prompt_ids: Vec<i32>, max_new: usize, step: u64) -> Self {
+    fn fresh(id: u64, prompt_ids: Vec<i32>, max_new: usize, class: Priority,
+             deadline_step: u64, step: u64) -> Self {
         QueuedReq {
             id,
             prompt_ids,
             gen_ids: Vec::new(),
             max_new,
+            class,
+            deadline_step,
+            submit_step: step,
             stats: GenStats::default(),
             rng: None,
             enq_step: step,
         }
     }
+
+    fn meta(&self) -> ReqMeta {
+        ReqMeta {
+            id: self.id,
+            class: self.class,
+            deadline_step: self.deadline_step,
+            enq_step: self.submit_step,
+        }
+    }
+}
+
+/// Resumable prefill progress carried on a sequence: the budget-trimmed
+/// prompt (+ eviction carryover) ids and how many are already in the cache.
+struct PrefillState {
+    ids: Vec<i32>,
+    done: usize,
 }
 
 struct Seq {
@@ -149,16 +180,42 @@ struct Seq {
     prompt_ids: Vec<i32>,
     gen_ids: Vec<i32>,
     max_new: usize,
+    class: Priority,
+    deadline_step: u64,
+    submit_step: u64,
     cache: SeqCache,
     /// right-aligned hidden window [W * D], newest row last
     hidden_win: Vec<f32>,
     win_len: usize,
     last_hidden: Vec<f32>,
     base_token: i32,
+    /// Some(..) while the prompt is still prefilling (chunk-interleaved
+    /// with decode rounds); None once the sequence is decoding
+    prefill: Option<PrefillState>,
     stats: GenStats,
     t_admit: Instant,
     done: bool,
     rng: Rng,
+}
+
+impl Seq {
+    fn meta(&self) -> ReqMeta {
+        ReqMeta {
+            id: self.id,
+            class: self.class,
+            deadline_step: self.deadline_step,
+            enq_step: self.submit_step,
+        }
+    }
+}
+
+/// Everything one `fill_slots` pass decided.
+#[derive(Default)]
+struct FillReport {
+    admitted: Vec<u64>,
+    forced: Vec<GenOutput>,
+    evicted: Vec<u64>,
+    missed: Vec<u64>,
 }
 
 pub struct Engine {
@@ -168,8 +225,9 @@ pub struct Engine {
     drafter: Box<dyn Drafter>,
     slots: Vec<Option<Seq>>,
     pool: BlockPool,
-    /// FIFO admit queue feeding free slots at the top of every step
-    wait_queue: VecDeque<QueuedReq>,
+    /// admit queue feeding free slots at the top of every step; order is
+    /// decided by the SLO policy (class, then slack), not insertion order
+    wait_queue: Vec<QueuedReq>,
     /// monotone step counter — the scheduler's virtual clock
     step_no: u64,
     events: EventLog,
@@ -225,7 +283,7 @@ impl Engine {
         Ok(Engine {
             slots: (0..max_slots).map(|_| None).collect(),
             pool: BlockPool::new(pool_positions, max_slots),
-            wait_queue: VecDeque::new(),
+            wait_queue: Vec::new(),
             step_no: 0,
             events: EventLog::default(),
             metrics: Metrics::default(),
@@ -366,9 +424,22 @@ impl Engine {
         self.wait_queue.len()
     }
 
-    /// 0-based position of a queued request, if it is still waiting.
+    /// 0-based admission-priority position of a queued request (0 = next
+    /// up under the current SLO policy order), if it is still waiting.
     pub fn queue_position(&self, id: u64) -> Option<usize> {
-        self.wait_queue.iter().position(|r| r.id == id)
+        self.policy_order().iter().position(|&i| self.wait_queue[i].id == id)
+    }
+
+    /// Queue indices sorted by the SLO admission policy (class, slack,
+    /// submission step, id) at the current virtual step.
+    fn policy_order(&self) -> Vec<usize> {
+        let now = self.step_no;
+        let mut order: Vec<usize> = (0..self.wait_queue.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.cfg.slo.admit_cmp(
+                &self.wait_queue[a].meta(), &self.wait_queue[b].meta(), now)
+        });
+        order
     }
 
     /// Ids of sequences currently occupying batch slots.
@@ -376,9 +447,13 @@ impl Engine {
         self.slots.iter().flatten().map(|s| s.id).collect()
     }
 
-    /// Ids of requests waiting in the admit queue (FIFO order).
+    /// Ids of requests waiting in the admit queue, in admission-priority
+    /// order.
     pub fn queued_ids(&self) -> Vec<u64> {
-        self.wait_queue.iter().map(|r| r.id).collect()
+        self.policy_order()
+            .into_iter()
+            .map(|i| self.wait_queue[i].id)
+            .collect()
     }
 
     pub fn set_queue_cap(&mut self, cap: usize) {
@@ -410,10 +485,21 @@ impl Engine {
         self.lmax - max_new.min(self.lmax / 2) - self.tree_n - 2
     }
 
-    /// Admission-controlled entry point: go straight into a free slot when
-    /// one exists (and the pool fits the prompt), otherwise park in the FIFO
-    /// wait queue; report `Busy` when the queue is at its cap.
+    /// Admission-controlled entry point with the default SLO tags
+    /// (`interactive`, class-default deadline). See `submit_tagged`.
     pub fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
+        self.submit_tagged(prompt, max_new, Priority::Interactive, None)
+    }
+
+    /// Admission-controlled entry point: go straight into a free slot when
+    /// one exists (and the pool fits the prompt), otherwise park in the
+    /// wait queue — ordered by the SLO policy (class, then slack-to-
+    /// deadline), not arrival. `deadline_steps` is relative to now; `None`
+    /// uses the class default from `SloPolicy`. Reports `Busy` when the
+    /// queue is at its cap.
+    pub fn submit_tagged(&mut self, prompt: &str, max_new: usize,
+                         class: Priority, deadline_steps: Option<u64>)
+                         -> Result<Submission> {
         if self.cfg.queue_cap > 0 && self.wait_queue.len() >= self.cfg.queue_cap {
             self.metrics.inc("sched.rejected_busy", 1);
             return Ok(Submission::Busy);
@@ -428,11 +514,18 @@ impl Engine {
                 self.pool.total_blocks()
             );
         }
+        let deadline_step = self.step_no
+            + deadline_steps.unwrap_or_else(|| self.cfg.slo.class_deadline(class));
         let id = self.next_id;
         self.next_id += 1;
-        self.events.push(SchedEvent::Submitted { step: self.step_no, id });
+        self.events.push(SchedEvent::Submitted {
+            step: self.step_no, id, class, deadline: deadline_step,
+        });
         self.metrics.inc("sched.submitted", 1);
-        let req = QueuedReq::fresh(id, ids, max_new, self.step_no);
+        self.metrics
+            .inc(&format!("sched.submitted.{}", class.name()), 1);
+        let req = QueuedReq::fresh(id, ids, max_new, class, deadline_step,
+                                   self.step_no);
         // gate on the budget-trimmed prefill length (what admit_req will
         // actually allocate), matching fill_slots
         if self.wait_queue.is_empty()
@@ -442,8 +535,8 @@ impl Engine {
             let sid = self.admit_req(req)?;
             return Ok(Submission::Admitted(sid));
         }
-        let pos = self.wait_queue.len();
-        self.wait_queue.push_back(req);
+        self.wait_queue.push(req);
+        let pos = self.queue_position(id).unwrap_or(self.wait_queue.len() - 1);
         self.events.push(SchedEvent::Queued { step: self.step_no, id, pos });
         self.metrics.inc("sched.queued", 1);
         Ok(Submission::Queued { id, pos })
@@ -453,7 +546,7 @@ impl Engine {
     /// immediately. Returns false when the id is unknown (e.g. finished).
     pub fn cancel(&mut self, id: u64) -> bool {
         if let Some(pos) = self.wait_queue.iter().position(|r| r.id == id) {
-            self.wait_queue.remove(pos);
+            let _ = self.wait_queue.remove(pos);
             self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
             self.metrics.inc("sched.cancelled", 1);
             return true;
@@ -471,23 +564,33 @@ impl Engine {
         false
     }
 
-    /// Tokenize, chunk-prefill, and occupy a batch slot NOW. Bypasses the
-    /// wait queue; errors when no slot is free (legacy direct-admission
-    /// path used by `generate`/`generate_batch` and the batch benches).
+    /// Tokenize and occupy a batch slot NOW (prefill runs chunked inside
+    /// subsequent `step_ex` rounds). Bypasses the wait queue; errors when no
+    /// slot is free (legacy direct-admission path used by
+    /// `generate`/`generate_batch` and the batch benches).
     pub fn admit(&mut self, prompt: &str, max_new: usize) -> Result<u64> {
         if !self.has_capacity() {
             return Err(anyhow!("no free slot (active={})", self.n_active()));
         }
         let ids = self.tok.encode_with(prompt, true, false);
+        let class = Priority::Interactive;
+        let deadline_step = self.step_no + self.cfg.slo.class_deadline(class);
         let id = self.next_id;
         self.next_id += 1;
-        self.events.push(SchedEvent::Submitted { step: self.step_no, id });
+        self.events.push(SchedEvent::Submitted {
+            step: self.step_no, id, class, deadline: deadline_step,
+        });
         self.metrics.inc("sched.submitted", 1);
-        self.admit_req(QueuedReq::fresh(id, ids, max_new, self.step_no))
+        self.metrics
+            .inc(&format!("sched.submitted.{}", class.name()), 1);
+        self.admit_req(QueuedReq::fresh(id, ids, max_new, class, deadline_step,
+                                        self.step_no))
     }
 
     /// Install a request (fresh or evicted) into a free slot: budget-trim
-    /// the prefill ids, allocate pool blocks, chunk-prefill, occupy.
+    /// the prefill ids, allocate pool blocks, and park the ids as a
+    /// resumable `PrefillState` — the actual prefill runs chunk-by-chunk in
+    /// `step_ex`, interleaved with decode rounds.
     fn admit_req(&mut self, req: QueuedReq) -> Result<u64> {
         let slot = self
             .slots
@@ -505,67 +608,146 @@ impl Engine {
             Some(r) => r,
             None => self.rng.fork(id),
         };
-        let mut seq = Seq {
+        let prefill_len = ids.len();
+        let seq = Seq {
             id,
             prompt_ids: req.prompt_ids,
             gen_ids: req.gen_ids,
             max_new: req.max_new,
+            class: req.class,
+            deadline_step: req.deadline_step,
+            submit_step: req.submit_step,
             cache: SeqCache::new(self.layers, self.lmax, self.heads, self.head_dim),
             hidden_win: vec![0.0; self.win * self.d_model],
             win_len: 0,
             last_hidden: vec![0.0; self.d_model],
             base_token: 0,
+            prefill: Some(PrefillState { ids, done: 0 }),
             stats: req.stats,
             t_admit: Instant::now(),
             done: false,
             rng,
         };
-        self.pool.ensure(slot, ids.len())?;
-        self.prefill(&mut seq, &ids)?;
-        seq.stats.prefill_tokens += ids.len();
+        self.pool.ensure(slot, prefill_len)?;
         self.slots[slot] = Some(seq);
         let waited = self.step_no.saturating_sub(req.enq_step);
         self.events.push(SchedEvent::Admitted { step: self.step_no, id, waited });
         self.metrics.inc("sched.admitted", 1);
         self.metrics.observe("sched.queue_wait_steps", waited);
+        self.metrics.observe(
+            &format!("sched.queue_wait_steps.{}", req.class.name()), waited);
         Ok(id)
     }
 
-    /// Feed free slots from the wait queue (FIFO; the head blocks until the
-    /// pool can hold its prefill, preserving admission-order fairness).
-    /// A head whose prefill exceeds the *whole* pool can never run again
-    /// (only reachable via eviction carryover) — it is force-finished with
-    /// the tokens it already generated instead of head-blocking forever.
-    fn fill_slots(&mut self) -> Result<(Vec<u64>, Vec<GenOutput>)> {
-        let mut admitted = Vec::new();
-        let mut forced = Vec::new();
-        while self.has_capacity() {
-            let Some(front) = self.wait_queue.front() else { break };
-            // same budget trim admit_req applies — gate on what will
-            // actually be prefilled, not the raw prompt+carryover length
-            let budget = self.prefill_budget(front.max_new);
-            let prefill_len = (front.prompt_ids.len() + front.gen_ids.len())
-                .min(budget)
-                .max(1);
-            if BlockPool::blocks_for(prefill_len) > self.pool.total_blocks() {
-                let req = self.wait_queue.pop_front().expect("front exists");
-                forced.push(self.finish_queued(req));
-                continue;
-            }
-            if !self.pool.can_fit(prefill_len) {
+    /// Feed free slots from the wait queue in SLO-policy order (class, then
+    /// slack-to-deadline). A candidate the pool cannot currently fit is
+    /// *skipped* — no FIFO head-blocking — unless it is interactive-
+    /// effective, in which case deadline-driven preemption may evict a
+    /// strictly less urgent running sequence to make room. A request whose
+    /// prefill exceeds the *whole* pool can never run again (only reachable
+    /// via eviction carryover) — it is force-finished with the tokens it
+    /// already generated.
+    fn fill_slots(&mut self) -> Result<FillReport> {
+        let mut rep = FillReport::default();
+        'outer: loop {
+            if !self.has_capacity() || self.wait_queue.is_empty() {
                 break;
             }
-            let req = self.wait_queue.pop_front().expect("front exists");
-            let id = self.admit_req(req)?;
-            admitted.push(id);
+            let now = self.step_no;
+            let order = self.policy_order();
+            for &i in &order {
+                let front = &self.wait_queue[i];
+                // same budget trim admit_req applies — gate on what will
+                // actually be prefilled, not the raw prompt+carryover length
+                let budget = self.prefill_budget(front.max_new);
+                let prefill_len = (front.prompt_ids.len() + front.gen_ids.len())
+                    .min(budget)
+                    .max(1);
+                if BlockPool::blocks_for(prefill_len) > self.pool.total_blocks() {
+                    let req = self.wait_queue.remove(i);
+                    let (out, missed) = self.finish_queued(req);
+                    if missed {
+                        rep.missed.push(out.id);
+                    }
+                    rep.forced.push(out);
+                    continue 'outer;
+                }
+                if self.pool.can_fit(prefill_len) {
+                    let req = self.wait_queue.remove(i);
+                    let id = self.admit_req(req)?;
+                    rep.admitted.push(id);
+                    continue 'outer;
+                }
+                // Pool-short candidate. Deadline-driven preemption: an
+                // interactive-effective request may reclaim room from
+                // strictly less urgent running sequences (batch first, most
+                // slack) — but ONLY when those victims actually hold enough
+                // blocks to fit the candidate, so every eviction here ends
+                // in an admission (no evict/re-admit churn or livelock).
+                let meta = front.meta();
+                if self.cfg.slo.effective_class(&meta, now)
+                    == Priority::Interactive
+                {
+                    let running: Vec<(usize, ReqMeta)> = self
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(s, q)| q.as_ref().map(|q| (s, q.meta())))
+                        .collect();
+                    let metas: Vec<ReqMeta> =
+                        running.iter().map(|(_, m)| m.clone()).collect();
+                    let victims = self.cfg.slo.victims_for(&metas, &meta, now);
+                    let need_blocks = BlockPool::blocks_for(prefill_len);
+                    let reclaim: usize = victims
+                        .iter()
+                        .map(|&v| self.pool.allocated(running[v].0))
+                        .sum();
+                    if self.pool.free_blocks() + reclaim >= need_blocks {
+                        for &v in &victims {
+                            if self.pool.can_fit(prefill_len) {
+                                break;
+                            }
+                            let vid = self.evict(running[v].0);
+                            rep.evicted.push(vid);
+                        }
+                        let req = self.wait_queue.remove(i);
+                        let id = self.admit_req(req)?;
+                        rep.admitted.push(id);
+                        continue 'outer;
+                    }
+                }
+                // otherwise skip this candidate and try the next one
+            }
+            break; // full pass with no admission / eviction / force-finish
         }
-        Ok((admitted, forced))
+        Ok(rep)
+    }
+
+    /// Record a completion's deadline outcome; returns true when missed.
+    fn note_deadline(&mut self, id: u64, class: Priority, deadline_step: u64)
+                     -> bool {
+        if self.step_no > deadline_step {
+            let late = self.step_no - deadline_step;
+            self.events.push(SchedEvent::DeadlineMiss {
+                step: self.step_no, id, late,
+            });
+            self.metrics.inc("sched.deadline_missed", 1);
+            self.metrics
+                .inc(&format!("sched.deadline_missed.{}", class.name()), 1);
+            true
+        } else {
+            self.metrics
+                .inc(&format!("sched.deadline_met.{}", class.name()), 1);
+            false
+        }
     }
 
     /// Complete a queued (evicted) request without re-admitting it, keeping
-    /// whatever it generated before eviction.
-    fn finish_queued(&mut self, mut req: QueuedReq) -> GenOutput {
+    /// whatever it generated before eviction. Returns the output and
+    /// whether the request finished past its deadline.
+    fn finish_queued(&mut self, mut req: QueuedReq) -> (GenOutput, bool) {
         req.stats.new_tokens = req.stats.new_tokens.max(req.gen_ids.len());
+        let missed = self.note_deadline(req.id, req.class, req.deadline_step);
         self.events.push(SchedEvent::Completed {
             step: self.step_no,
             id: req.id,
@@ -573,7 +755,7 @@ impl Engine {
             tokens: req.stats.new_tokens,
         });
         self.metrics.inc("sched.completed", 1);
-        self.make_output(req.id, req.gen_ids, req.stats)
+        (self.make_output(req.id, req.gen_ids, req.stats), missed)
     }
 
     /// Shared output construction for every completion path: truncate the
@@ -597,10 +779,12 @@ impl Engine {
         }
     }
 
-    /// Preempt a running sequence under pool pressure: release its blocks
-    /// and push it to the FRONT of the wait queue carrying its generated
-    /// tokens, so re-admission re-prefills prompt+generated and decoding
-    /// resumes losslessly (recompute-style preemption).
+    /// Preempt a running sequence (pool pressure or deadline-driven
+    /// preemption): release its blocks and return it to the wait queue
+    /// carrying its generated tokens, so re-admission re-prefills
+    /// prompt+generated and decoding resumes losslessly (recompute-style
+    /// preemption). A sequence evicted mid-prefill restarts its prefill
+    /// from scratch on re-admission.
     fn evict(&mut self, slot: usize) -> u64 {
         let mut seq = self.slots[slot].take().expect("evict empty slot");
         self.pool.release(slot);
@@ -612,26 +796,62 @@ impl Engine {
             prompt_ids: std::mem::take(&mut seq.prompt_ids),
             gen_ids: std::mem::take(&mut seq.gen_ids),
             max_new: seq.max_new,
+            class: seq.class,
+            deadline_step: seq.deadline_step,
+            submit_step: seq.submit_step,
             stats: seq.stats.clone(),
             rng: Some(seq.rng.clone()),
             enq_step: self.step_no,
         };
-        self.wait_queue.push_front(req);
+        self.wait_queue.push(req);
         self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
         self.metrics.inc("sched.evicted", 1);
         id
     }
 
-    /// Chunked prefill through the n=PREFILL_N step graph (b=1).
-    fn prefill(&mut self, seq: &mut Seq, ids: &[i32]) -> Result<()> {
+    /// Preempt a running sequence by id back to the wait queue (recompute-
+    /// style). Returns false when the id is not currently in a slot.
+    pub fn preempt(&mut self, id: u64) -> bool {
+        let slot = self.slots.iter().position(|s| {
+            s.as_ref().map(|q| q.id == id).unwrap_or(false)
+        });
+        match slot {
+            Some(s) => {
+                self.evict(s);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Advance slot `slot`'s resumable prefill by up to `allowed` tokens
+    /// through the n=PREFILL_N step graph (b=1); always processes at least
+    /// one chunk so progress is made. Returns (id, tokens this call,
+    /// tokens done in total, prefill total).
+    fn prefill_round(&mut self, slot: usize, allowed: usize)
+                     -> Result<(u64, usize, usize, usize)> {
+        let mut seq = self.slots[slot].take().expect("prefill on empty slot");
         let n = self.prefill_n;
         let m = self.lmax + n;
-        for chunk in ids.chunks(n) {
+        let (mut done, total) = {
+            let st = seq.prefill.as_ref().expect("prefill_round without state");
+            (st.done, st.ids.len())
+        };
+        let mut done_now = 0usize;
+        while done < total {
+            if done_now > 0 && done_now >= allowed {
+                break;
+            }
+            let end = (done + n).min(total);
+            let chunk: Vec<i32> =
+                seq.prefill.as_ref().expect("state").ids[done..end].to_vec();
             let cache_len = seq.cache.len;
             let clen = chunk.len();
             let mut tokens = vec![0i32; n];
-            tokens[..clen].copy_from_slice(chunk);
-            let pos: Vec<i32> = (0..n).map(|i| (cache_len + i.min(clen.saturating_sub(1))) as i32).collect();
+            tokens[..clen].copy_from_slice(&chunk);
+            let pos: Vec<i32> = (0..n)
+                .map(|i| (cache_len + i.min(clen.saturating_sub(1))) as i32)
+                .collect();
             let mut bias = vec![NEG_INF; n * m];
             for i in 0..n {
                 let row = &mut bias[i * m..(i + 1) * m];
@@ -645,7 +865,7 @@ impl Engine {
                 }
             }
             let re = self.heads * self.head_dim;
-            fill_batch_cache(&[Some(&*seq)], 1, self.layers, self.lmax, re,
+            fill_batch_cache(&[Some(&seq)], 1, self.layers, self.lmax, re,
                              &mut self.scratch_k, &mut self.scratch_v);
             let args = build_step_lits(
                 &self.scratch_k, &self.scratch_v, self.layers, 1, self.lmax,
@@ -663,15 +883,25 @@ impl Engine {
 
             let hidden = out[3].f32_data()?;
             for i in 0..clen {
-                self_push_window(seq, &hidden[i * self.d_model..(i + 1) * self.d_model],
+                self_push_window(&mut seq,
+                                 &hidden[i * self.d_model..(i + 1) * self.d_model],
                                  self.win, self.d_model);
             }
-            // base token from the last real position of the final chunk
-            let logits = out[0].f32_data()?;
-            let row = &logits[(clen - 1) * self.vocab..clen * self.vocab];
-            seq.base_token = self.pick_token(row, &mut seq.rng.clone());
+            done += clen;
+            done_now += clen;
+            seq.stats.prefill_tokens += clen;
+            seq.prefill.as_mut().expect("state").done = done;
+            if done >= total {
+                // base token from the last real position of the final chunk
+                let logits = out[0].f32_data()?;
+                let row = &logits[(clen - 1) * self.vocab..clen * self.vocab];
+                seq.base_token = self.pick_token(row, &mut seq.rng.clone());
+                seq.prefill = None;
+            }
         }
-        Ok(())
+        let id = seq.id;
+        self.slots[slot] = Some(seq);
+        Ok((id, done_now, done, total))
     }
 
     fn pick_token(&self, logits: &[f32], rng: &mut Rng) -> i32 {
@@ -702,22 +932,58 @@ impl Engine {
         Ok(self.step_ex()?.finished)
     }
 
-    /// One scheduler round: admit from the wait queue into free slots, run
-    /// one draft→verify→accept round over all active sequences, reap
-    /// finished ones, and resolve KV-pool pressure by preempting the
-    /// youngest sequences back to the queue.
+    /// One scheduler round: admit from the wait queue into free slots
+    /// (SLO-policy order, with deadline-driven preemption), advance
+    /// resumable prefills under the per-round chunk budget, run one
+    /// draft→verify→accept round over all decode-ready sequences, reap
+    /// finished ones, and resolve KV-pool pressure by preempting the least
+    /// urgent sequences back to the queue.
     pub fn step_ex(&mut self) -> Result<StepReport> {
         let t_round = Instant::now();
         self.step_no += 1;
         let mut report = StepReport { step: self.step_no, ..Default::default() };
-        let (admitted, forced) = self.fill_slots()?;
-        report.admitted = admitted;
-        report.finished.extend(forced);
+        let fill = self.fill_slots()?;
+        report.admitted = fill.admitted;
+        report.finished.extend(fill.forced);
+        report.evicted.extend(fill.evicted);
+        report.deadline_missed.extend(fill.missed);
+
+        // --- 0. resumable chunked prefill, budgeted per round, so running
+        // sequences keep decoding below while long prompts prefill
+        let mut budget_left = if self.cfg.slo.prefill_chunk == 0 {
+            usize::MAX
+        } else {
+            self.cfg.slo.prefill_chunk
+        };
+        for b in 0..self.slots.len() {
+            if budget_left == 0 {
+                break;
+            }
+            let prefilling = self.slots[b]
+                .as_ref()
+                .map(|s| s.prefill.is_some())
+                .unwrap_or(false);
+            if !prefilling {
+                continue;
+            }
+            let (id, did, done, total) = self.prefill_round(b, budget_left)?;
+            budget_left = budget_left.saturating_sub(did);
+            report.prefilled.push((id, did));
+            self.events.push(SchedEvent::Prefill {
+                step: self.step_no, id, done, total,
+            });
+            self.metrics.inc("sched.prefill_chunks", 1);
+            self.metrics.inc("sched.prefill_tokens", did as u64);
+        }
+
+        // decode-ready sequences only: mid-prefill slots sit this round out
         let active: Vec<usize> = self
             .slots
             .iter()
             .enumerate()
-            .filter(|(_, s)| s.is_some())
+            .filter(|(_, s)| {
+                s.as_ref().map(|q| q.prefill.is_none()).unwrap_or(false)
+            })
             .map(|(i, _)| i)
             .collect();
         if active.is_empty() {
@@ -733,7 +999,11 @@ impl Engine {
         let mut timing = DraftTiming::default();
         let ctxs: Vec<Option<DraftCtx>> = (0..gb)
             .map(|i| {
-                self.slots.get(i).and_then(|s| s.as_ref()).map(|seq| DraftCtx {
+                self.slots
+                    .get(i)
+                    .and_then(|s| s.as_ref())
+                    .filter(|seq| seq.prefill.is_none())
+                    .map(|seq| DraftCtx {
                     hidden_window: seq.hidden_win.clone(),
                     win_len: seq.win_len,
                     last_hidden: seq.last_hidden.clone(),
@@ -751,7 +1021,12 @@ impl Engine {
         let t_tr = Instant::now();
         let mut trees: Vec<Option<TokenTree>> = vec![None; gb];
         for b in 0..gb {
-            if let Some(seq) = self.slots.get(b).and_then(|s| s.as_ref()) {
+            if let Some(seq) = self
+                .slots
+                .get(b)
+                .and_then(|s| s.as_ref())
+                .filter(|q| q.prefill.is_none())
+            {
                 let tree = if paths[b].is_empty() {
                     TokenTree::root_only(seq.base_token)
                 } else {
@@ -920,6 +1195,9 @@ impl Engine {
                 let mut seq = self.slots[b].take().unwrap();
                 self.pool.release(b);
                 seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
+                if self.note_deadline(seq.id, seq.class, seq.deadline_step) {
+                    report.deadline_missed.push(seq.id);
+                }
                 self.events.push(SchedEvent::Completed {
                     step: self.step_no,
                     id: seq.id,
@@ -931,8 +1209,9 @@ impl Engine {
             }
         }
 
-        // --- 6. resolve pool pressure: preempt youngest-first until every
-        // surviving slot's accounting covers its cache length
+        // --- 6. resolve pool pressure: preempt the least urgent sequence
+        // (batch first, most slack-to-deadline, youngest breaks ties) until
+        // every surviving slot's accounting covers its cache length
         for (slot, need_len) in pool_pressure {
             loop {
                 if self.slots[slot].is_none() {
@@ -941,14 +1220,21 @@ impl Engine {
                 if self.pool.ensure(slot, need_len).is_ok() {
                     break;
                 }
-                let victim = self
+                let now = self.step_no;
+                let running: Vec<(usize, ReqMeta)> = self
                     .slots
                     .iter()
                     .enumerate()
-                    .filter_map(|(i, s)| s.as_ref().map(|q| (i, q.id)))
-                    .max_by_key(|&(_, id)| id)
-                    .map(|(i, _)| i)
-                    .expect("pool pressure implies a live sequence");
+                    .filter_map(|(i, s)| s.as_ref().map(|q| (i, q.meta())))
+                    .collect();
+                let metas: Vec<ReqMeta> =
+                    running.iter().map(|(_, m)| m.clone()).collect();
+                let victim = running[self
+                    .cfg
+                    .slo
+                    .pick_victim(&metas, now)
+                    .expect("pool pressure implies a live sequence")]
+                    .0;
                 let vid = self.evict(victim);
                 report.evicted.push(vid);
                 if victim == slot {
@@ -965,7 +1251,23 @@ impl Engine {
 
     fn record_step_gauges(&mut self, report: &StepReport) {
         self.metrics.inc("sched.steps", 1);
+        if !report.prefilled.is_empty()
+            && report.emitted.iter().any(|d| !d.tokens.is_empty())
+        {
+            // a round where a prefill chunk ran WHILE other sequences
+            // streamed tokens — the chunked-prefill interleave working
+            self.metrics.inc("sched.prefill_interleaved_rounds", 1);
+        }
         self.metrics.set_gauge("sched.queue_depth", report.queue_depth as f64);
+        let (mut qi, mut qb) = (0f64, 0f64);
+        for r in &self.wait_queue {
+            match r.class {
+                Priority::Interactive => qi += 1.0,
+                Priority::Batch => qb += 1.0,
+            }
+        }
+        self.metrics.set_gauge("sched.queue_depth.interactive", qi);
+        self.metrics.set_gauge("sched.queue_depth.batch", qb);
         self.metrics
             .set_gauge("sched.pool_utilization", report.pool_utilization);
         self.metrics.set_gauge("sched.active", self.n_active() as f64);

@@ -26,6 +26,7 @@ pub mod engine;
 pub mod kvcache;
 pub mod metrics;
 pub mod runtime;
+pub mod sched;
 pub mod server;
 pub mod testkit;
 pub mod tokenizer;

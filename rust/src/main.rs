@@ -14,8 +14,11 @@ use ctcdraft::config::{EngineConfig, Method};
 use ctcdraft::engine::Engine;
 use ctcdraft::metrics::RunSummary;
 use ctcdraft::runtime::Runtime;
+use ctcdraft::sched::{Priority, SloPolicy};
 use ctcdraft::server::{Client, Server, ServerConfig};
+use ctcdraft::testkit::{MockSched, SchedulerSim, SimOptions};
 use ctcdraft::util::cli::Cli;
+use ctcdraft::workload::Trace;
 use ctcdraft::{default_artifacts_dir, workload};
 
 fn main() {
@@ -31,6 +34,7 @@ fn main() {
         "serve" => cmd_serve(rest),
         "client" => cmd_client(rest),
         "warmup" => cmd_warmup(rest),
+        "sim" => cmd_sim(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -54,7 +58,9 @@ fn usage() -> String {
      \x20 eval                       quick workload evaluation (β, tok/s)\n\
      \x20 serve                      start the TCP server\n\
      \x20 client --prompt <text>     query a running server\n\
-     \x20 warmup                     precompile all graphs for a model\n\n\
+     \x20 warmup                     precompile all graphs for a model\n\
+     \x20 sim                        artifact-free scheduler-sim replay\n\
+     \x20                            (prints the canonical event log)\n\n\
      run `ctcdraft <command> --help` for options"
         .to_string()
 }
@@ -69,7 +75,26 @@ fn engine_opts(cli: Cli) -> Cli {
         .opt("queue-cap", "admit-queue bound (0 = unbounded); full => busy",
              Some("0"))
         .opt("kv-pool", "KV pool positions (0 = lmax × slots)", Some("0"))
+        .opt("prefill-chunk",
+             "per-round prefill token budget (0 = unlimited): long prompts \
+              prefill in chunks interleaved with decode rounds", Some("0"))
+        .opt("interactive-deadline",
+             "default interactive deadline (scheduler steps)", Some("256"))
+        .opt("batch-deadline",
+             "default batch deadline (scheduler steps)", Some("2048"))
+        .opt("batch-aging",
+             "queue age (steps) after which batch competes as interactive \
+              (0 = no aging)", Some("512"))
         .flag("no-ctc-transform", "disable the CTC transform (ablation)")
+}
+
+fn build_slo(a: &ctcdraft::util::cli::Args) -> SloPolicy {
+    SloPolicy {
+        interactive_deadline: a.u64("interactive-deadline", 256),
+        batch_deadline: a.u64("batch-deadline", 2048),
+        batch_aging_steps: a.u64("batch-aging", 512),
+        prefill_chunk: a.usize("prefill-chunk", 0),
+    }
 }
 
 fn build_engine_cfg(a: &ctcdraft::util::cli::Args) -> Result<EngineConfig> {
@@ -82,6 +107,7 @@ fn build_engine_cfg(a: &ctcdraft::util::cli::Args) -> Result<EngineConfig> {
         seed: a.u64("seed", 0),
         queue_cap: a.usize("queue-cap", 0),
         kv_pool_positions: a.usize("kv-pool", 0),
+        slo: build_slo(a),
         ..EngineConfig::default()
     })
 }
@@ -219,6 +245,8 @@ fn cmd_client(argv: &[String]) -> Result<()> {
         .opt("max-new", "max new tokens", Some("64"))
         .opt("id", "client-chosen request id", Some("1"))
         .opt("cancel", "cancel the request with this id and exit", None)
+        .opt("class", "priority class: interactive|batch", Some("interactive"))
+        .opt("deadline", "relative deadline in scheduler steps", None)
         .flag("stream", "print tokens as they are accepted")
         .flag("stats", "print server scheduler stats and exit");
     let a = parse_args(cli, argv)?;
@@ -236,27 +264,93 @@ fn cmd_client(argv: &[String]) -> Result<()> {
     let Some(prompt) = a.get("prompt") else { bail!("--prompt required") };
     let id = a.get("id").and_then(|v| v.parse().ok()).unwrap_or(1);
     let max_new = a.usize("max-new", 64);
-    if a.flag("stream") {
-        use std::io::Write as _;
-        let outcome = client.generate_stream(id, prompt, max_new, true, |t| {
+    let class = Priority::parse(a.get_or("class", "interactive"))?;
+    let deadline = a.get("deadline").and_then(|v| v.parse::<u64>().ok());
+    let stream = a.flag("stream");
+    use std::io::Write as _;
+    let outcome = client.generate_stream_opts(
+        id, prompt, max_new, stream, class, deadline, |t| {
             print!("{t}");
             let _ = std::io::stdout().flush();
         })?;
-        println!();
-        match outcome {
-            ctcdraft::server::GenerateOutcome::Done(r) => {
-                eprintln!("[{} tokens, {} steps, β={:.2}, {:.0}ms]",
-                          r.tokens, r.steps, r.beta, r.ms);
+    match outcome {
+        ctcdraft::server::GenerateOutcome::Done(r) => {
+            if stream {
+                println!();
+            } else {
+                println!("{}", r.text);
             }
-            ctcdraft::server::GenerateOutcome::Busy => bail!("server busy"),
-            ctcdraft::server::GenerateOutcome::Cancelled => bail!("cancelled"),
+            eprintln!("[{} tokens, {} steps, β={:.2}, {:.0}ms]",
+                      r.tokens, r.steps, r.beta, r.ms);
         }
-        return Ok(());
+        ctcdraft::server::GenerateOutcome::Busy => bail!("server busy"),
+        ctcdraft::server::GenerateOutcome::Cancelled => bail!("cancelled"),
     }
-    let reply = client.generate(id, prompt, max_new)?;
-    println!("{}", reply.text);
-    eprintln!("[{} tokens, {} steps, β={:.2}, {:.0}ms]",
-              reply.tokens, reply.steps, reply.beta, reply.ms);
+    Ok(())
+}
+
+// ---------------------------------------------------------------- sim
+/// Artifact-free scheduler-simulation replay: drive `MockSched` through a
+/// class-tagged Poisson trace and print the canonical event log to stdout.
+/// Two runs with the same options MUST print identical logs — `check.sh`
+/// diffs a double replay as the determinism gate.
+fn cmd_sim(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("ctcdraft sim", "deterministic scheduler-sim replay")
+        .opt("seed", "trace + backend seed", Some("7"))
+        .opt("slots", "batch slots", Some("4"))
+        .opt("queue-cap", "admit-queue bound (0 = unbounded)", Some("8"))
+        .opt("pool", "fake KV pool positions", Some("256"))
+        .opt("requests", "questions per MT-bench category", Some("2"))
+        .opt("max-new", "max new tokens per request", Some("24"))
+        .opt("mean-gap", "mean arrival gap (steps)", Some("1.5"))
+        .opt("batch-frac", "fraction of requests tagged batch", Some("0.5"))
+        .opt("interactive-deadline", "interactive deadline (steps)", Some("32"))
+        .opt("batch-deadline", "batch deadline (steps)", Some("256"))
+        .opt("batch-aging", "batch aging bound (steps; 0 = off)", Some("64"))
+        .opt("prefill-chunk", "per-round prefill budget (0 = unlimited)",
+             Some("8"))
+        .opt("cancel-prob", "per-request cancellation probability", Some("0"))
+        .flag("summary", "print a run summary to stderr");
+    let a = parse_args(cli, argv)?;
+    let seed = a.u64("seed", 7);
+    let policy = SloPolicy {
+        interactive_deadline: a.u64("interactive-deadline", 32),
+        batch_deadline: a.u64("batch-deadline", 256),
+        batch_aging_steps: a.u64("batch-aging", 64),
+        prefill_chunk: a.usize("prefill-chunk", 8),
+    };
+    let trace = Trace::poisson_with_classes(
+        workload::mtbench(a.usize("requests", 2), seed),
+        a.usize("max-new", 24),
+        a.f64("mean-gap", 1.5),
+        seed,
+        a.f64("batch-frac", 0.5),
+        policy.interactive_deadline,
+        policy.batch_deadline,
+    );
+    let mut backend = MockSched::new(
+        a.usize("slots", 4),
+        a.usize("queue-cap", 8),
+        a.usize("pool", 256),
+        seed,
+    )
+    .with_policy(policy);
+    let sim = SchedulerSim::new(SimOptions {
+        cancel_prob: a.f64("cancel-prob", 0.0),
+        seed,
+        ..Default::default()
+    });
+    let report = sim.run(&mut backend, &trace)?;
+    print!("{}", report.event_log);
+    if a.flag("summary") {
+        eprintln!(
+            "steps={} finished={} evictions={} busy={} deadline_misses={} \
+             interleaved_rounds={} max_queue_depth={}",
+            report.steps, report.finished.len(), report.evictions,
+            report.busy_rejections, report.deadline_misses,
+            report.interleaved_rounds, report.max_queue_depth
+        );
+    }
     Ok(())
 }
 

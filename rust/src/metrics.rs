@@ -6,6 +6,8 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+use crate::sched::Priority;
+
 /// Wall-time split of a decoding run into the paper's Fig-3 stages.
 #[derive(Debug, Default, Clone, Copy)]
 pub struct StageBreakdown {
@@ -230,17 +232,25 @@ impl Metrics {
 /// seed regardless of host speed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SchedEvent {
-    /// Request entered the engine (either straight into a slot or queued).
-    Submitted { step: u64, id: u64 },
-    /// Request parked in the wait queue at position `pos`.
+    /// Request entered the engine (either straight into a slot or queued)
+    /// with its priority class and absolute deadline (virtual steps).
+    Submitted { step: u64, id: u64, class: Priority, deadline: u64 },
+    /// Request parked in the wait queue at admission-priority position
+    /// `pos` (0 = next up under the current policy order).
     Queued { step: u64, id: u64, pos: usize },
     /// Request occupies a batch slot after `waited` steps in the queue.
     Admitted { step: u64, id: u64, waited: u64 },
-    /// Request preempted mid-flight (KV pool pressure); it re-queues and
-    /// will re-prefill its prompt + accepted tokens when re-admitted.
+    /// Request preempted mid-flight (KV pool pressure or deadline-driven
+    /// preemption); it re-queues and will re-prefill its prompt + accepted
+    /// tokens when re-admitted.
     Evicted { step: u64, id: u64, gen_len: usize },
     /// Request cancelled by the client; slot and pool blocks freed.
     Cancelled { step: u64, id: u64 },
+    /// A resumable-prefill chunk ran this round: `done` of `total` prompt
+    /// tokens are now prefilled (interleaved with decode rounds).
+    Prefill { step: u64, id: u64, done: usize, total: usize },
+    /// Request finished `late` steps past its deadline (SLO miss).
+    DeadlineMiss { step: u64, id: u64, late: u64 },
     /// Request finished; `steps`/`tokens` feed the β histogram.
     Completed { step: u64, id: u64, steps: usize, tokens: usize },
 }
@@ -248,8 +258,9 @@ pub enum SchedEvent {
 impl fmt::Display for SchedEvent {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            SchedEvent::Submitted { step, id } => {
-                write!(f, "t={step} submit id={id}")
+            SchedEvent::Submitted { step, id, class, deadline } => {
+                write!(f, "t={step} submit id={id} class={} deadline={deadline}",
+                       class.name())
             }
             SchedEvent::Queued { step, id, pos } => {
                 write!(f, "t={step} queue id={id} pos={pos}")
@@ -262,6 +273,12 @@ impl fmt::Display for SchedEvent {
             }
             SchedEvent::Cancelled { step, id } => {
                 write!(f, "t={step} cancel id={id}")
+            }
+            SchedEvent::Prefill { step, id, done, total } => {
+                write!(f, "t={step} prefill id={id} done={done}/{total}")
+            }
+            SchedEvent::DeadlineMiss { step, id, late } => {
+                write!(f, "t={step} deadline-miss id={id} late={late}")
             }
             SchedEvent::Completed { step, id, steps, tokens } => {
                 write!(f, "t={step} done id={id} steps={steps} tokens={tokens}")
@@ -471,7 +488,12 @@ mod tests {
     fn event_log_cap_bounds_memory() {
         let mut log = EventLog::with_cap(8);
         for i in 0..100 {
-            log.push(SchedEvent::Submitted { step: i, id: i });
+            log.push(SchedEvent::Submitted {
+                step: i,
+                id: i,
+                class: Priority::Interactive,
+                deadline: i + 8,
+            });
         }
         assert!(log.len() <= 8, "cap not enforced: {}", log.len());
         assert_eq!(log.dropped() + log.len() as u64, 100);
@@ -486,18 +508,25 @@ mod tests {
     fn event_log_renders_deterministically() {
         let mk = || {
             let mut log = EventLog::default();
-            log.push(SchedEvent::Submitted { step: 1, id: 1 });
+            log.push(SchedEvent::Submitted {
+                step: 1, id: 1, class: Priority::Batch, deadline: 65,
+            });
             log.push(SchedEvent::Queued { step: 1, id: 2, pos: 0 });
             log.push(SchedEvent::Admitted { step: 2, id: 2, waited: 1 });
+            log.push(SchedEvent::Prefill { step: 2, id: 2, done: 32, total: 96 });
             log.push(SchedEvent::Evicted { step: 3, id: 2, gen_len: 4 });
             log.push(SchedEvent::Cancelled { step: 4, id: 1 });
+            log.push(SchedEvent::DeadlineMiss { step: 5, id: 2, late: 3 });
             log.push(SchedEvent::Completed { step: 5, id: 2, steps: 3, tokens: 7 });
             log
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.render(), b.render());
-        assert_eq!(a.len(), 6);
+        assert_eq!(a.len(), 8);
+        assert!(a.render().contains("t=1 submit id=1 class=batch deadline=65"));
         assert!(a.render().contains("t=2 admit id=2 waited=1"));
+        assert!(a.render().contains("t=2 prefill id=2 done=32/96"));
+        assert!(a.render().contains("t=5 deadline-miss id=2 late=3"));
         assert!(a.render().contains("t=5 done id=2 steps=3 tokens=7"));
     }
 }

@@ -1,0 +1,270 @@
+//! SLO-aware scheduling policy: priority classes, per-request deadlines on
+//! the scheduler's virtual step clock, and the comparators that drive
+//! admission order and preemption-victim choice.
+//!
+//! This module is the single source of truth for policy decisions — the
+//! real `Engine` and the artifact-free `testkit::MockSched` both call into
+//! it, so the deterministic scheduler simulation exercises exactly the
+//! policy the server runs.
+//!
+//! Ordering model:
+//! * every request carries a class (`interactive` | `batch`) and an
+//!   absolute deadline in scheduler steps;
+//! * *slack* = deadline − now. Smaller slack = more urgent;
+//! * admission sorts by *effective class* first (interactive ahead of
+//!   batch), then slack ascending, then submission step, then id — a total,
+//!   deterministic order;
+//! * a `batch` request older than `batch_aging_steps` competes as
+//!   `interactive` (aging), which bounds batch starvation;
+//! * preemption may only evict a victim that is *strictly less urgent*
+//!   than the request being admitted (lower class, or same class with
+//!   strictly more slack) — so admitting one request can never evict a more
+//!   urgent one.
+
+use std::cmp::Ordering;
+
+use anyhow::{bail, Result};
+
+/// Request priority class. `Interactive` is latency-sensitive (chat-style);
+/// `Batch` is throughput work that tolerates waiting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Priority {
+    Interactive,
+    Batch,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Priority> {
+        Ok(match s {
+            "interactive" => Priority::Interactive,
+            "batch" => Priority::Batch,
+            other => bail!("unknown priority class '{other}' (interactive|batch)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Sort rank: interactive ahead of batch.
+    fn rank(&self) -> u8 {
+        match self {
+            Priority::Interactive => 0,
+            Priority::Batch => 1,
+        }
+    }
+}
+
+/// The scheduling-relevant identity of a queued or running request.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReqMeta {
+    pub id: u64,
+    pub class: Priority,
+    /// absolute deadline on the scheduler's virtual step clock
+    pub deadline_step: u64,
+    /// step of the ORIGINAL submission (survives evictions; feeds aging)
+    pub enq_step: u64,
+}
+
+impl ReqMeta {
+    /// Steps remaining until the deadline (negative = overdue).
+    pub fn slack(&self, now: u64) -> i64 {
+        self.deadline_step as i64 - now as i64
+    }
+}
+
+/// SLO policy knobs: per-class default deadlines, the batch aging bound,
+/// and the per-round prefill-chunk budget for interleaved chunked prefill.
+#[derive(Debug, Clone, Copy)]
+pub struct SloPolicy {
+    /// default relative deadline (steps) for `interactive` requests
+    pub interactive_deadline: u64,
+    /// default relative deadline (steps) for `batch` requests
+    pub batch_deadline: u64,
+    /// queue age (steps) after which a `batch` request competes as
+    /// `interactive`; bounds starvation. 0 disables aging.
+    pub batch_aging_steps: u64,
+    /// max prefill tokens processed per scheduler round across all
+    /// prefilling sequences (resumable chunked prefill); 0 = unlimited,
+    /// i.e. a prefill completes within the round it starts (legacy).
+    pub prefill_chunk: usize,
+}
+
+impl Default for SloPolicy {
+    fn default() -> Self {
+        SloPolicy {
+            interactive_deadline: 256,
+            batch_deadline: 2048,
+            batch_aging_steps: 512,
+            prefill_chunk: 0,
+        }
+    }
+}
+
+impl SloPolicy {
+    /// Default relative deadline for a class.
+    pub fn class_deadline(&self, class: Priority) -> u64 {
+        match class {
+            Priority::Interactive => self.interactive_deadline,
+            Priority::Batch => self.batch_deadline,
+        }
+    }
+
+    /// Class a request competes at *now*: `batch` promotes to `interactive`
+    /// once it has waited `batch_aging_steps` since its original submission.
+    pub fn effective_class(&self, m: &ReqMeta, now: u64) -> Priority {
+        if m.class == Priority::Batch
+            && self.batch_aging_steps > 0
+            && now.saturating_sub(m.enq_step) >= self.batch_aging_steps
+        {
+            Priority::Interactive
+        } else {
+            m.class
+        }
+    }
+
+    /// Urgency order: effective class, then slack ascending. `Less` = more
+    /// urgent. Ties are `Equal` (tie-breaks belong to `admit_cmp`).
+    pub fn urgency_cmp(&self, a: &ReqMeta, b: &ReqMeta, now: u64) -> Ordering {
+        self.effective_class(a, now)
+            .rank()
+            .cmp(&self.effective_class(b, now).rank())
+            .then(a.slack(now).cmp(&b.slack(now)))
+    }
+
+    /// Total, deterministic admission order: urgency, then original
+    /// submission step, then id.
+    pub fn admit_cmp(&self, a: &ReqMeta, b: &ReqMeta, now: u64) -> Ordering {
+        self.urgency_cmp(a, b, now)
+            .then(a.enq_step.cmp(&b.enq_step))
+            .then(a.id.cmp(&b.id))
+    }
+
+    /// Preemption victim under pool pressure with no competing admission:
+    /// the least-urgent running sequence (batch before interactive, most
+    /// slack, youngest id breaks ties). Returns an index into `running`.
+    pub fn pick_victim(&self, running: &[ReqMeta], now: u64) -> Option<usize> {
+        running
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, m)| {
+                (
+                    self.effective_class(m, now) == Priority::Batch,
+                    m.slack(now),
+                    m.id,
+                )
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Eligible preemption victims for admitting `cand`, most evictable
+    /// first (batch before interactive, most slack, youngest id). Every
+    /// entry is *strictly less urgent* than `cand` — admitting one request
+    /// can never evict an equally or more urgent one.
+    pub fn victims_for(&self, running: &[ReqMeta], cand: &ReqMeta,
+                       now: u64) -> Vec<usize> {
+        let mut v: Vec<usize> = running
+            .iter()
+            .enumerate()
+            .filter(|(_, m)| self.urgency_cmp(m, cand, now) == Ordering::Greater)
+            .map(|(i, _)| i)
+            .collect();
+        v.sort_by_key(|&i| {
+            let m = &running[i];
+            std::cmp::Reverse((
+                self.effective_class(m, now) == Priority::Batch,
+                m.slack(now),
+                m.id,
+            ))
+        });
+        v
+    }
+
+    /// Preemption victim for admitting `cand`: the least-urgent running
+    /// sequence that is *strictly less urgent* than `cand`. `None` when no
+    /// such victim exists.
+    pub fn pick_victim_for(&self, running: &[ReqMeta], cand: &ReqMeta,
+                           now: u64) -> Option<usize> {
+        self.victims_for(running, cand, now).first().copied()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: u64, class: Priority, deadline: u64, enq: u64) -> ReqMeta {
+        ReqMeta { id, class, deadline_step: deadline, enq_step: enq }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in [Priority::Interactive, Priority::Batch] {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert!(Priority::parse("bulk").is_err());
+    }
+
+    #[test]
+    fn interactive_sorts_before_batch() {
+        let pol = SloPolicy::default();
+        let i = meta(2, Priority::Interactive, 500, 10);
+        let b = meta(1, Priority::Batch, 100, 0); // tighter deadline, lower id
+        assert_eq!(pol.admit_cmp(&i, &b, 20), Ordering::Less);
+    }
+
+    #[test]
+    fn slack_orders_within_class() {
+        let pol = SloPolicy::default();
+        let tight = meta(5, Priority::Interactive, 30, 10);
+        let loose = meta(1, Priority::Interactive, 90, 0);
+        assert_eq!(pol.admit_cmp(&tight, &loose, 20), Ordering::Less);
+    }
+
+    #[test]
+    fn aging_promotes_batch() {
+        let pol = SloPolicy { batch_aging_steps: 50, ..Default::default() };
+        let old_batch = meta(1, Priority::Batch, 10_000, 0);
+        assert_eq!(pol.effective_class(&old_batch, 49), Priority::Batch);
+        assert_eq!(pol.effective_class(&old_batch, 50), Priority::Interactive);
+        // aging disabled: never promotes
+        let off = SloPolicy { batch_aging_steps: 0, ..Default::default() };
+        assert_eq!(off.effective_class(&old_batch, 10_000), Priority::Batch);
+    }
+
+    #[test]
+    fn victim_prefers_batch_then_slack_then_youngest() {
+        let pol = SloPolicy::default();
+        let running = vec![
+            meta(1, Priority::Interactive, 900, 0),
+            meta(2, Priority::Batch, 100, 0),
+            meta(3, Priority::Batch, 400, 0),
+        ];
+        // batch with most slack wins even though an interactive has more
+        assert_eq!(pol.pick_victim(&running, 50), Some(2));
+        let ties = vec![
+            meta(4, Priority::Batch, 400, 0),
+            meta(9, Priority::Batch, 400, 0),
+        ];
+        assert_eq!(pol.pick_victim(&ties, 50), Some(1)); // youngest id
+    }
+
+    #[test]
+    fn victim_for_requires_strictly_less_urgent() {
+        let pol = SloPolicy::default();
+        let cand = meta(9, Priority::Interactive, 60, 50);
+        let running = vec![
+            meta(1, Priority::Interactive, 55, 0), // more urgent
+            meta(2, Priority::Interactive, 60, 0), // equally urgent
+        ];
+        assert_eq!(pol.pick_victim_for(&running, &cand, 50), None);
+        let with_batch = vec![
+            meta(1, Priority::Interactive, 55, 0),
+            meta(3, Priority::Batch, 55, 0), // lower class => less urgent
+        ];
+        assert_eq!(pol.pick_victim_for(&with_batch, &cand, 50), Some(1));
+    }
+}

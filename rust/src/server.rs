@@ -9,12 +9,21 @@
 //! vllm-router shape, scaled to threads).
 //!
 //! Wire protocol (one JSON object per line):
-//!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true}
+//!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true,
+//!      "class":"interactive"|"batch","deadline_steps":N}
+//!     `class` (default "interactive") and `deadline_steps` (relative, in
+//!     scheduler steps; default = the class's configured deadline) drive
+//!     SLO-aware admission: interactive requests and tight deadlines are
+//!     admitted first and may preempt strictly less urgent batch work.
 //!     Reply is a frame sequence on the same connection, terminated by one
 //!     terminal frame:
-//!     ← {"type":"queued","id":7,"pos":n}       (admit queue; informational)
+//!     ← {"type":"queued","id":7,"pos":n,"class":"..."}  (admit queue
+//!        position under the SLO policy order; informational)
 //!     ← {"type":"tok","id":7,"text":"...","n":k}  (stream:true only; one
-//!        frame per scheduler round, `n` accepted tokens)
+//!        frame per scheduler round, `n` accepted tokens; text comes from a
+//!        stateful detokenizer, so UTF-8 split across rounds never yields
+//!        U+FFFD artifacts and the concatenated `tok` text equals the
+//!        `done` text)
 //!     ← {"type":"done","id":7,"text":"...","tokens":n,"steps":m,
 //!        "beta":x,"ms":t}                      (terminal)
 //!     ← {"type":"busy","id":7}                 (terminal; admit queue at
@@ -29,7 +38,8 @@
 //!   → {"op":"stats"}           ← {"type":"stats","inflight":[...],
 //!        "workers":[{"active":..,"queued":..,"pool_utilization":..,
 //!                    "completed":..,"cancelled":..,"evicted":..,
-//!                    "rejected_busy":..,"steps":..}, ...]}
+//!                    "rejected_busy":..,"deadline_missed":..,
+//!                    "prefill_interleaved_rounds":..,"steps":..}, ...]}
 //!
 //! Shutdown drains gracefully: in-flight and queued requests finish (new
 //! ones are rejected `busy`), then workers exit.
@@ -54,6 +64,8 @@ use anyhow::{anyhow, Context, Result};
 use crate::config::EngineConfig;
 use crate::engine::{Engine, GenOutput, Submission};
 use crate::runtime::Runtime;
+use crate::sched::Priority;
+use crate::tokenizer::StreamDecoder;
 use crate::util::json::{parse, Json};
 
 pub struct ServerConfig {
@@ -74,6 +86,9 @@ struct Job {
     prompt: String,
     max_new: usize,
     stream: bool,
+    /// SLO tags: priority class + optional relative deadline (steps)
+    class: Priority,
+    deadline: Option<u64>,
     resp: Sender<String>,
 }
 
@@ -91,6 +106,8 @@ struct Pending {
     client_id: i64,
     token: u64,
     stream: bool,
+    /// stateful detokenizer: carries partial UTF-8 across `tok` frames
+    detok: StreamDecoder,
     resp: Sender<String>,
 }
 
@@ -275,6 +292,19 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
                 let prompt = req.get("prompt").as_str().unwrap_or("").to_string();
                 let max_new = req.get("max_new").as_usize().unwrap_or(64);
                 let stream_toks = req.get("stream").as_bool().unwrap_or(false);
+                let class = match req.get("class").as_str() {
+                    None => Priority::Interactive,
+                    Some(s) => match Priority::parse(s) {
+                        Ok(c) => c,
+                        Err(e) => {
+                            writeln!(writer, "{}",
+                                     error_frame(client_id, &format!("{e}")))?;
+                            continue;
+                        }
+                    },
+                };
+                let deadline = req.get("deadline_steps").as_usize()
+                    .map(|v| v as u64);
                 let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
                 let (rtx, rrx) = channel::<String>();
                 let (tx, infl) = pick_worker(&routes);
@@ -285,6 +315,8 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
                     prompt,
                     max_new,
                     stream: stream_toks,
+                    class,
+                    deadline,
                     resp: rtx,
                 }));
                 if sent.is_err() {
@@ -431,6 +463,9 @@ fn worker_stats_json(engine: &Engine) -> String {
         ("cancelled", Json::num(m.counter("sched.cancelled") as f64)),
         ("evicted", Json::num(m.counter("sched.evicted") as f64)),
         ("rejected_busy", Json::num(m.counter("sched.rejected_busy") as f64)),
+        ("deadline_missed", Json::num(m.counter("sched.deadline_missed") as f64)),
+        ("prefill_interleaved_rounds",
+         Json::num(m.counter("sched.prefill_interleaved_rounds") as f64)),
     ]).to_string()
 }
 
@@ -443,12 +478,14 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
                 return;
             }
             let prompt = engine.format_prompt(&job.prompt);
-            match engine.submit(&prompt, job.max_new) {
+            match engine.submit_tagged(&prompt, job.max_new, job.class,
+                                       job.deadline) {
                 Ok(Submission::Admitted(id)) => {
                     pending.insert(id, Pending {
                         client_id: job.client_id,
                         token: job.token,
                         stream: job.stream,
+                        detok: StreamDecoder::new(),
                         resp: job.resp,
                     });
                 }
@@ -457,11 +494,13 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
                         ("type", Json::str("queued")),
                         ("id", Json::num(job.client_id as f64)),
                         ("pos", Json::num(pos as f64)),
+                        ("class", Json::str(job.class.name())),
                     ]).to_string());
                     pending.insert(id, Pending {
                         client_id: job.client_id,
                         token: job.token,
                         stream: job.stream,
+                        detok: StreamDecoder::new(),
                         resp: job.resp,
                     });
                 }
@@ -583,17 +622,20 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<WorkerMsg>,
                 let mut orphaned: Vec<u64> = Vec::new();
                 let eos = engine.runtime().manifest.constants.eos_id;
                 for delta in &report.emitted {
-                    let Some(p) = pending.get(&delta.id) else { continue };
+                    let Some(p) = pending.get_mut(&delta.id) else { continue };
                     if p.stream && !delta.tokens.is_empty() {
                         // `n` counts all accepted tokens (β accounting, incl.
-                        // EOS); the text mirrors finish() and excludes it
+                        // EOS); the text mirrors finish() and excludes it.
+                        // The per-request StreamDecoder carries partial
+                        // UTF-8 across rounds, so concatenated `tok` text
+                        // equals the final `done` text.
                         let text_ids: Vec<i32> = delta
                             .tokens
                             .iter()
                             .cloned()
                             .filter(|&t| t != eos)
                             .collect();
-                        let text = engine.tokenizer().decode(&text_ids);
+                        let text = p.detok.push(engine.tokenizer(), &text_ids);
                         let sent = p.resp.send(Json::obj(vec![
                             ("type", Json::str("tok")),
                             ("id", Json::num(p.client_id as f64)),
@@ -606,7 +648,20 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<WorkerMsg>,
                     }
                 }
                 for out in report.finished {
-                    if let Some(p) = pending.remove(&out.id) {
+                    if let Some(mut p) = pending.remove(&out.id) {
+                        if p.stream {
+                            // flush any held-back partial UTF-8 so streamed
+                            // text is complete before the terminal frame
+                            let tail = p.detok.finish();
+                            if !tail.is_empty() {
+                                let _ = p.resp.send(Json::obj(vec![
+                                    ("type", Json::str("tok")),
+                                    ("id", Json::num(p.client_id as f64)),
+                                    ("text", Json::str(tail)),
+                                    ("n", Json::num(0.0)),
+                                ]).to_string());
+                            }
+                        }
                         let _ = p.resp.send(done_frame(p.client_id, &out));
                         // dropping `p.resp` ends the client's relay loop
                     }
@@ -705,18 +760,35 @@ impl Client {
     }
 
     /// Streaming generate: `on_tok` fires for each `tok` frame (one per
-    /// scheduler round) when `stream` is true. Returns the terminal
-    /// outcome; protocol errors and `error` frames are `Err`.
+    /// scheduler round) when `stream` is true. Submits as `interactive`
+    /// with the server's default deadline; see `generate_stream_opts` for
+    /// SLO tags. Returns the terminal outcome; protocol errors and `error`
+    /// frames are `Err`.
     pub fn generate_stream<F: FnMut(&str)>(
         &mut self, id: i64, prompt: &str, max_new: usize, stream: bool,
+        on_tok: F) -> Result<GenerateOutcome> {
+        self.generate_stream_opts(id, prompt, max_new, stream,
+                                  Priority::Interactive, None, on_tok)
+    }
+
+    /// Streaming generate with SLO tags: priority `class` and an optional
+    /// relative `deadline_steps` (scheduler steps; None = class default).
+    pub fn generate_stream_opts<F: FnMut(&str)>(
+        &mut self, id: i64, prompt: &str, max_new: usize, stream: bool,
+        class: Priority, deadline_steps: Option<u64>,
         mut on_tok: F) -> Result<GenerateOutcome> {
-        writeln!(self.writer, "{}", Json::obj(vec![
+        let mut fields = vec![
             ("op", Json::str("generate")),
             ("id", Json::num(id as f64)),
             ("prompt", Json::str(prompt)),
             ("max_new", Json::num(max_new as f64)),
             ("stream", Json::bool(stream)),
-        ]).to_string())?;
+            ("class", Json::str(class.name())),
+        ];
+        if let Some(d) = deadline_steps {
+            fields.push(("deadline_steps", Json::num(d as f64)));
+        }
+        writeln!(self.writer, "{}", Json::obj(fields).to_string())?;
         loop {
             let v = self.read_frame()?;
             match v.get("type").as_str() {

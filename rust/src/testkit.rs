@@ -10,13 +10,14 @@
 //! real `Engine`, or the artifact-free `MockSched` — and returns a report
 //! whose event log is byte-for-byte reproducible from the seed.
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::BTreeMap;
 
 use anyhow::Result;
 
 use crate::engine::{Engine, GenOutput, GenStats, StepReport, Submission,
                     TokenDelta};
 use crate::metrics::{EventLog, SchedEvent};
+use crate::sched::{Priority, ReqMeta, SloPolicy};
 use crate::util::rng::Rng;
 use crate::workload::Trace;
 
@@ -68,7 +69,14 @@ impl<'a> Prop<'a> {
 /// `Engine` and by `MockSched` (no artifacts needed), so scheduler-policy
 /// tests run everywhere and engine-backed tests gate on artifacts.
 pub trait SchedBackend {
-    fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission>;
+    /// Submit with SLO tags: priority class plus an optional relative
+    /// deadline in scheduler steps (None = the class default).
+    fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>) -> Result<Submission>;
+    /// Untagged submit: `interactive` with the class-default deadline.
+    fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
+        self.submit_tagged(prompt, max_new, Priority::Interactive, None)
+    }
     fn cancel(&mut self, id: u64) -> bool;
     fn step_ex(&mut self) -> Result<StepReport>;
     fn n_active(&self) -> usize;
@@ -78,8 +86,9 @@ pub trait SchedBackend {
 }
 
 impl SchedBackend for Engine {
-    fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
-        Engine::submit(self, prompt, max_new)
+    fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>) -> Result<Submission> {
+        Engine::submit_tagged(self, prompt, max_new, class, deadline_steps)
     }
     fn cancel(&mut self, id: u64) -> bool {
         Engine::cancel(self, id)
@@ -132,6 +141,11 @@ pub struct SimReport {
     pub cancels_fired: usize,
     pub busy_rejections: usize,
     pub evictions: usize,
+    /// requests that completed past their deadline (SLO misses)
+    pub deadline_misses: usize,
+    /// rounds where a prefill chunk ran WHILE other sequences emitted
+    /// tokens — evidence of chunked-prefill/decode interleaving
+    pub interleaved_rounds: usize,
     pub max_queue_depth: usize,
     pub steps: u64,
 }
@@ -160,7 +174,8 @@ impl SchedulerSim {
             let n_due = due.len();
             for entry in due.to_vec() {
                 let wants_cancel = cancel_rng.bool(self.opts.cancel_prob);
-                match backend.submit(&entry.question.text, entry.max_new)? {
+                match backend.submit_tagged(&entry.question.text, entry.max_new,
+                                            entry.class, entry.deadline_steps)? {
                     Submission::Admitted(id) => {
                         // direct admissions never pass through fill_slots,
                         // so record them here to keep the order complete
@@ -198,6 +213,12 @@ impl SchedulerSim {
             report.steps = clock;
             report.admission_order.extend(&step.admitted);
             report.evictions += step.evicted.len();
+            report.deadline_misses += step.deadline_missed.len();
+            if !step.prefilled.is_empty()
+                && step.emitted.iter().any(|d| !d.tokens.is_empty())
+            {
+                report.interleaved_rounds += 1;
+            }
             report.max_queue_depth = report.max_queue_depth.max(step.queue_depth);
             for d in &step.emitted {
                 *report.beta_hist.entry(d.tokens.len()).or_insert(0) += 1;
@@ -226,31 +247,66 @@ struct MockSeq {
     id: u64,
     prompt_len: usize,
     max_new: usize,
+    class: Priority,
+    deadline_step: u64,
+    submit_step: u64,
+    /// prompt tokens still to prefill (chunk-interleaved with decode when
+    /// the policy sets a per-round budget; 0 = ready to decode)
+    prefill_left: usize,
+    prefill_total: usize,
     produced: Vec<i32>,
     steps: usize,
     rng: Rng,
+}
+
+impl MockSeq {
+    fn meta(&self) -> ReqMeta {
+        ReqMeta {
+            id: self.id,
+            class: self.class,
+            deadline_step: self.deadline_step,
+            enq_step: self.submit_step,
+        }
+    }
 }
 
 struct MockReq {
     id: u64,
     prompt_len: usize,
     max_new: usize,
+    class: Priority,
+    deadline_step: u64,
+    submit_step: u64,
     produced: Vec<i32>,
     steps: usize,
     rng: Option<Rng>,
     enq_step: u64,
 }
 
+impl MockReq {
+    fn meta(&self) -> ReqMeta {
+        ReqMeta {
+            id: self.id,
+            class: self.class,
+            deadline_step: self.deadline_step,
+            enq_step: self.submit_step,
+        }
+    }
+}
+
 /// Engine-shaped deterministic fake: same admission/queue/eviction policy
-/// surface as `Engine` (slots, FIFO wait queue with a cap, a position pool
-/// that preempts youngest-first), but token production is a seeded RNG
-/// instead of a model — so scheduler tests run without artifacts.
+/// surface as `Engine` (slots, SLO-policy wait queue with a cap, a position
+/// pool with least-urgent preemption, resumable chunked prefill), but token
+/// production is a seeded RNG instead of a model — so scheduler tests run
+/// without artifacts. Policy decisions go through the same
+/// `sched::SloPolicy` the engine uses.
 pub struct MockSched {
     slots: Vec<Option<MockSeq>>,
-    wait_queue: VecDeque<MockReq>,
+    wait_queue: Vec<MockReq>,
     queue_cap: usize,
     /// total KV positions the fake pool holds
     pool_positions: usize,
+    policy: SloPolicy,
     step_no: u64,
     next_id: u64,
     rng: Rng,
@@ -262,14 +318,21 @@ impl MockSched {
                seed: u64) -> Self {
         MockSched {
             slots: (0..slots.max(1)).map(|_| None).collect(),
-            wait_queue: VecDeque::new(),
+            wait_queue: Vec::new(),
             queue_cap,
             pool_positions: pool_positions.max(1),
+            policy: SloPolicy::default(),
             step_no: 0,
             next_id: 1,
             rng: Rng::new(seed),
             events: EventLog::default(),
         }
+    }
+
+    /// Override the SLO policy (deadlines, batch aging, prefill chunking).
+    pub fn with_policy(mut self, policy: SloPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
     fn pool_used(&self) -> usize {
@@ -284,6 +347,17 @@ impl MockSched {
         self.slots.iter().any(|s| s.is_none())
     }
 
+    /// Queue indices in SLO admission order (mirrors `Engine::policy_order`).
+    fn policy_order(&self) -> Vec<usize> {
+        let now = self.step_no;
+        let mut order: Vec<usize> = (0..self.wait_queue.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.policy.admit_cmp(
+                &self.wait_queue[a].meta(), &self.wait_queue[b].meta(), now)
+        });
+        order
+    }
+
     fn admit_req(&mut self, req: MockReq) -> u64 {
         let slot = self
             .slots
@@ -295,10 +369,21 @@ impl MockSched {
             Some(r) => r,
             None => self.rng.fork(id),
         };
+        // recompute-style: an evicted request re-prefills prompt+produced
+        let prefill_total = if self.policy.prefill_chunk == 0 {
+            0
+        } else {
+            req.prompt_len + req.produced.len()
+        };
         self.slots[slot] = Some(MockSeq {
             id,
             prompt_len: req.prompt_len,
             max_new: req.max_new,
+            class: req.class,
+            deadline_step: req.deadline_step,
+            submit_step: req.submit_step,
+            prefill_left: prefill_total,
+            prefill_total,
             produced: req.produced,
             steps: req.steps,
             rng,
@@ -308,32 +393,99 @@ impl MockSched {
         id
     }
 
-    /// Mirrors `Engine::fill_slots`: a head the whole pool can never hold
-    /// (only reachable via eviction carryover) is force-finished with what
-    /// it produced instead of head-blocking the queue forever.
-    fn fill_slots(&mut self) -> (Vec<u64>, Vec<GenOutput>) {
+    /// Mirrors `Engine::fill_slots`: SLO-policy admission order, skip-over
+    /// (no head-blocking) for pool-short candidates, deadline-driven
+    /// preemption for interactive-effective candidates, and force-finish
+    /// for requests the whole pool can never hold.
+    fn fill_slots(&mut self) -> (Vec<u64>, Vec<GenOutput>, Vec<u64>, Vec<u64>) {
         let mut admitted = Vec::new();
         let mut forced = Vec::new();
-        while self.has_free_slot() {
-            let Some(front) = self.wait_queue.front() else { break };
-            let need = front.prompt_len + front.produced.len();
-            if need > self.pool_positions {
-                let req = self.wait_queue.pop_front().expect("front exists");
-                forced.push(self.finish_req(
-                    req.id, req.prompt_len, req.steps, req.produced));
-                continue;
-            }
-            if self.pool_used() + need > self.pool_positions {
+        let mut evicted = Vec::new();
+        let mut missed = Vec::new();
+        'outer: loop {
+            if !self.has_free_slot() || self.wait_queue.is_empty() {
                 break;
             }
-            let req = self.wait_queue.pop_front().expect("front exists");
-            admitted.push(self.admit_req(req));
+            let now = self.step_no;
+            let order = self.policy_order();
+            for &i in &order {
+                let front = &self.wait_queue[i];
+                let need = front.prompt_len + front.produced.len();
+                if need > self.pool_positions {
+                    let req = self.wait_queue.remove(i);
+                    let (out, miss) = self.finish_req(
+                        req.id, req.prompt_len, req.steps, req.produced,
+                        req.class, req.deadline_step);
+                    if miss {
+                        missed.push(out.id);
+                    }
+                    forced.push(out);
+                    continue 'outer;
+                }
+                if self.pool_used() + need <= self.pool_positions {
+                    let req = self.wait_queue.remove(i);
+                    admitted.push(self.admit_req(req));
+                    continue 'outer;
+                }
+                // deadline-driven preemption, mirroring Engine::fill_slots:
+                // only when the strictly-less-urgent victims hold enough
+                // positions for the candidate, so eviction always ends in
+                // an admission (no evict/re-admit churn or livelock)
+                let meta = front.meta();
+                if self.policy.effective_class(&meta, now)
+                    == Priority::Interactive
+                {
+                    let running: Vec<(usize, ReqMeta)> = self
+                        .slots
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(s, q)| q.as_ref().map(|q| (s, q.meta())))
+                        .collect();
+                    let metas: Vec<ReqMeta> =
+                        running.iter().map(|(_, m)| m.clone()).collect();
+                    let victims = self.policy.victims_for(&metas, &meta, now);
+                    let reclaim: usize = victims
+                        .iter()
+                        .map(|&v| {
+                            let s = self.slots[running[v].0]
+                                .as_ref()
+                                .expect("victim is live");
+                            s.prompt_len + s.produced.len()
+                        })
+                        .sum();
+                    if self.pool_used() + need <= self.pool_positions + reclaim {
+                        for &v in &victims {
+                            if self.pool_used() + need <= self.pool_positions {
+                                break;
+                            }
+                            let vid = self.evict_slot(running[v].0);
+                            evicted.push(vid);
+                        }
+                        let req = self.wait_queue.remove(i);
+                        admitted.push(self.admit_req(req));
+                        continue 'outer;
+                    }
+                }
+            }
+            break;
         }
-        (admitted, forced)
+        (admitted, forced, evicted, missed)
     }
 
+    /// Finish a request; returns the output and whether the deadline was
+    /// missed (event-logged, mirroring `Engine::note_deadline`).
     fn finish_req(&mut self, id: u64, prompt_len: usize, steps: usize,
-                  produced: Vec<i32>) -> GenOutput {
+                  produced: Vec<i32>, class: Priority, deadline_step: u64)
+                  -> (GenOutput, bool) {
+        let _ = class;
+        let missed = self.step_no > deadline_step;
+        if missed {
+            self.events.push(SchedEvent::DeadlineMiss {
+                step: self.step_no,
+                id,
+                late: self.step_no - deadline_step,
+            });
+        }
         self.events.push(SchedEvent::Completed {
             step: self.step_no,
             id,
@@ -344,41 +496,56 @@ impl MockSched {
         stats.steps = steps;
         stats.new_tokens = produced.len();
         stats.prefill_tokens = prompt_len;
-        GenOutput {
-            id,
-            text: format!("mock-{id}"),
-            token_ids: produced,
-            stats,
-        }
+        (
+            GenOutput {
+                id,
+                text: format!("mock-{id}"),
+                token_ids: produced,
+                stats,
+            },
+            missed,
+        )
     }
 
-    fn evict_youngest(&mut self) -> Option<u64> {
-        let victim = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter_map(|(i, s)| s.as_ref().map(|q| (i, q.id)))
-            .max_by_key(|&(_, id)| id)
-            .map(|(i, _)| i)?;
-        let seq = self.slots[victim].take().expect("victim is live");
+    fn evict_slot(&mut self, slot: usize) -> u64 {
+        let seq = self.slots[slot].take().expect("victim is live");
         let gen_len = seq.produced.len();
         let id = seq.id;
-        self.wait_queue.push_front(MockReq {
+        self.wait_queue.push(MockReq {
             id,
             prompt_len: seq.prompt_len,
             max_new: seq.max_new,
+            class: seq.class,
+            deadline_step: seq.deadline_step,
+            submit_step: seq.submit_step,
             produced: seq.produced,
             steps: seq.steps,
             rng: Some(seq.rng),
             enq_step: self.step_no,
         });
         self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
-        Some(id)
+        id
+    }
+
+    /// Least-urgent running sequence via the shared policy (batch first,
+    /// most slack, youngest id).
+    fn evict_least_urgent(&mut self) -> Option<u64> {
+        let now = self.step_no;
+        let running: Vec<(usize, ReqMeta)> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|q| (i, q.meta())))
+            .collect();
+        let metas: Vec<ReqMeta> = running.iter().map(|(_, m)| m.clone()).collect();
+        let v = self.policy.pick_victim(&metas, now)?;
+        Some(self.evict_slot(running[v].0))
     }
 }
 
 impl SchedBackend for MockSched {
-    fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
+    fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>) -> Result<Submission> {
         if self.queue_cap > 0 && self.wait_queue.len() >= self.queue_cap {
             return Ok(Submission::Busy);
         }
@@ -391,13 +558,20 @@ impl SchedBackend for MockSched {
                 "prompt needs {prompt_len} positions but the pool holds \
                  only {}", self.pool_positions);
         }
+        let deadline_step = self.step_no
+            + deadline_steps.unwrap_or_else(|| self.policy.class_deadline(class));
         let id = self.next_id;
         self.next_id += 1;
-        self.events.push(SchedEvent::Submitted { step: self.step_no, id });
+        self.events.push(SchedEvent::Submitted {
+            step: self.step_no, id, class, deadline: deadline_step,
+        });
         let req = MockReq {
             id,
             prompt_len,
             max_new,
+            class,
+            deadline_step,
+            submit_step: self.step_no,
             produced: Vec::new(),
             steps: 0,
             rng: None,
@@ -409,15 +583,19 @@ impl SchedBackend for MockSched {
         {
             return Ok(Submission::Admitted(self.admit_req(req)));
         }
-        let pos = self.wait_queue.len();
-        self.wait_queue.push_back(req);
+        self.wait_queue.push(req);
+        let pos = self
+            .policy_order()
+            .iter()
+            .position(|&i| self.wait_queue[i].id == id)
+            .unwrap_or(self.wait_queue.len() - 1);
         self.events.push(SchedEvent::Queued { step: self.step_no, id, pos });
         Ok(Submission::Queued { id, pos })
     }
 
     fn cancel(&mut self, id: u64) -> bool {
         if let Some(pos) = self.wait_queue.iter().position(|r| r.id == id) {
-            self.wait_queue.remove(pos);
+            let _ = self.wait_queue.remove(pos);
             self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
             return true;
         }
@@ -435,13 +613,45 @@ impl SchedBackend for MockSched {
     fn step_ex(&mut self) -> Result<StepReport> {
         self.step_no += 1;
         let mut report = StepReport { step: self.step_no, ..Default::default() };
-        let (admitted, forced) = self.fill_slots();
+        let (admitted, forced, evicted, missed) = self.fill_slots();
         report.admitted = admitted;
         report.finished.extend(forced);
+        report.evicted.extend(evicted);
+        report.deadline_missed.extend(missed);
 
-        // one "round": every active seq accepts 1..=4 tokens (β analog)
+        // resumable chunked prefill under the shared per-round budget
+        // (slot order, at least one token of progress per scheduled seq)
+        let mut budget_left = if self.policy.prefill_chunk == 0 {
+            usize::MAX
+        } else {
+            self.policy.prefill_chunk
+        };
+        for b in 0..self.slots.len() {
+            if budget_left == 0 {
+                break;
+            }
+            let Some(seq) = self.slots[b].as_mut() else { continue };
+            if seq.prefill_left == 0 {
+                continue;
+            }
+            let did = seq.prefill_left.min(budget_left).max(1);
+            seq.prefill_left -= did;
+            budget_left = budget_left.saturating_sub(did);
+            let (id, done, total) =
+                (seq.id, seq.prefill_total - seq.prefill_left, seq.prefill_total);
+            report.prefilled.push((id, did));
+            self.events.push(SchedEvent::Prefill {
+                step: self.step_no, id, done, total,
+            });
+        }
+
+        // one "round": every decode-ready seq accepts 1..=4 tokens (β
+        // analog); mid-prefill seqs sit the round out
         for slot in self.slots.iter_mut() {
             let Some(seq) = slot.as_mut() else { continue };
+            if seq.prefill_left > 0 {
+                continue;
+            }
             let k = (1 + seq.rng.below(4)).min(seq.max_new - seq.produced.len());
             let mut delta = TokenDelta { id: seq.id, tokens: Vec::new() };
             for _ in 0..k {
@@ -459,21 +669,25 @@ impl SchedBackend for MockSched {
             let done = self.slots[b]
                 .as_ref()
                 .map(|s| {
-                    s.produced.len() >= s.max_new
+                    (s.prefill_left == 0 && s.produced.len() >= s.max_new)
                         || s.prompt_len + s.produced.len() + 1 > self.pool_positions
                 })
                 .unwrap_or(false);
             if done {
                 let seq = self.slots[b].take().expect("done seq");
-                let out = self.finish_req(
-                    seq.id, seq.prompt_len, seq.steps, seq.produced);
+                let (out, miss) = self.finish_req(
+                    seq.id, seq.prompt_len, seq.steps, seq.produced,
+                    seq.class, seq.deadline_step);
+                if miss {
+                    report.deadline_missed.push(out.id);
+                }
                 report.finished.push(out);
             }
         }
 
-        // pool pressure: preempt youngest until the fake pool fits
+        // pool pressure: preempt the least urgent until the fake pool fits
         while self.pool_used() > self.pool_positions {
-            match self.evict_youngest() {
+            match self.evict_least_urgent() {
                 Some(id) => report.evicted.push(id),
                 None => break,
             }

@@ -150,6 +150,75 @@ impl Tokenizer {
     }
 }
 
+/// Stateful incremental detokenizer for streamed output.
+///
+/// Byte-level BPE tokens can end mid-way through a multi-byte UTF-8
+/// character, so decoding each scheduler round's tokens independently (the
+/// pre-PR-2 `tok` frame path) yields U+FFFD replacement artifacts at chunk
+/// boundaries. `StreamDecoder` buffers the trailing incomplete sequence
+/// across `push` calls and emits exactly what `Tokenizer::decode` would
+/// produce over the concatenated id stream: genuinely invalid bytes still
+/// become U+FFFD (matching `from_utf8_lossy`), only *incomplete* tails are
+/// held back until the next push (or `finish`).
+#[derive(Debug, Clone, Default)]
+pub struct StreamDecoder {
+    pending: Vec<u8>,
+}
+
+impl StreamDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed the next round's token ids; returns the newly-completed text.
+    pub fn push(&mut self, tok: &Tokenizer, ids: &[i32]) -> String {
+        for &id in ids {
+            self.pending.extend_from_slice(tok.token_bytes(id));
+        }
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.pending) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.pending.clear();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(
+                        std::str::from_utf8(&self.pending[..valid])
+                            .expect("valid_up_to prefix"),
+                    );
+                    match e.error_len() {
+                        // invalid sequence: replace it and continue, exactly
+                        // as from_utf8_lossy would
+                        Some(bad) => {
+                            out.push('\u{FFFD}');
+                            self.pending.drain(..valid + bad);
+                        }
+                        // incomplete tail: hold it for the next push
+                        None => {
+                            self.pending.drain(..valid);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Flush any held-back incomplete tail (lossily) at end of stream.
+    pub fn finish(&mut self) -> String {
+        if self.pending.is_empty() {
+            return String::new();
+        }
+        let s = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +266,44 @@ mod tests {
     fn unknown_ids_are_skipped() {
         let t = Tokenizer::from_json(&vocab_json()).unwrap();
         assert_eq!(t.decode(&[9999]), "");
+    }
+
+    #[test]
+    fn stream_decoder_holds_split_utf8_across_pushes() {
+        let t = Tokenizer::from_json(&vocab_json()).unwrap();
+        let mut d = StreamDecoder::new();
+        // "é" = 0xC3 0xA9 split across two pushes (byte tokens are 3+byte)
+        assert_eq!(d.push(&t, &[3 + 0xC3]), "");
+        assert_eq!(d.push(&t, &[3 + 0xA9]), "é");
+        assert_eq!(d.finish(), "");
+    }
+
+    #[test]
+    fn stream_decoder_matches_batch_decode_any_chunking() {
+        let t = Tokenizer::from_json(&vocab_json()).unwrap();
+        let text = "héllo wörld 日本語 hi!";
+        let ids = t.encode(text);
+        for chunk in 1..4 {
+            let mut d = StreamDecoder::new();
+            let mut out = String::new();
+            for c in ids.chunks(chunk) {
+                out.push_str(&d.push(&t, c));
+            }
+            out.push_str(&d.finish());
+            assert_eq!(out, t.decode(&ids), "chunk size {chunk}");
+        }
+    }
+
+    #[test]
+    fn stream_decoder_replaces_invalid_and_flushes_tail() {
+        let t = Tokenizer::from_json(&vocab_json()).unwrap();
+        let mut d = StreamDecoder::new();
+        // lone continuation byte is invalid immediately (not incomplete)
+        assert_eq!(d.push(&t, &[3 + 0xA9]), "\u{FFFD}");
+        // incomplete lead byte is held, then flushed lossily
+        assert_eq!(d.push(&t, &[3 + 0xC3]), "");
+        assert_eq!(d.finish(), "\u{FFFD}");
+        assert_eq!(d.finish(), "", "finish drains the buffer");
     }
 
     #[test]

@@ -6,6 +6,7 @@
 //! but in-distribution. That substitution (DESIGN.md §2) is what lets the
 //! paper's per-category acceptance-rate structure (Fig 2) reproduce.
 
+use crate::sched::Priority;
 use crate::util::rng::Rng;
 
 pub const CATEGORIES: [&str; 8] = [
@@ -115,13 +116,18 @@ pub fn gsm8k(count: usize, seed: u64) -> Vec<Question> {
 }
 
 /// One request in a replayable load trace: what to ask, how much to
-/// generate, and *when* it arrives on the scheduler's virtual clock.
+/// generate, *when* it arrives on the scheduler's virtual clock, and its
+/// SLO tags (priority class + relative deadline).
 #[derive(Debug, Clone)]
 pub struct TraceEntry {
     pub question: Question,
     pub max_new: usize,
     /// arrival time in scheduler steps (virtual clock, monotone)
     pub arrival_step: u64,
+    /// priority class the request is submitted under
+    pub class: Priority,
+    /// relative deadline in scheduler steps; None = the class default
+    pub deadline_steps: Option<u64>,
 }
 
 /// A recorded trace of timed requests — replayable load for the server
@@ -151,6 +157,8 @@ impl Trace {
                     question: q,
                     max_new: jitter.max(8),
                     arrival_step: clock as u64,
+                    class: Priority::Interactive,
+                    deadline_steps: None,
                 }
             })
             .collect();
@@ -161,6 +169,31 @@ impl Trace {
     pub fn poisson_arrivals(questions: Vec<Question>, max_new: usize,
                             seed: u64) -> Trace {
         Self::poisson_with_rate(questions, max_new, 2.0, seed)
+    }
+
+    /// Class-tagged Poisson arrivals: each request is `batch` with
+    /// probability `batch_frac` (relative deadline `batch_deadline`), else
+    /// `interactive` (`interactive_deadline`). Deterministic in `seed`; the
+    /// class draw is independent of the arrival-time draws so the same seed
+    /// yields the same arrival schedule as `poisson_with_rate`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn poisson_with_classes(questions: Vec<Question>, max_new: usize,
+                                mean_gap_steps: f64, seed: u64,
+                                batch_frac: f64, interactive_deadline: u64,
+                                batch_deadline: u64) -> Trace {
+        let mut trace =
+            Self::poisson_with_rate(questions, max_new, mean_gap_steps, seed);
+        let mut rng = Rng::new(seed ^ 0x5105_C1A5);
+        for e in &mut trace.entries {
+            if rng.bool(batch_frac) {
+                e.class = Priority::Batch;
+                e.deadline_steps = Some(batch_deadline);
+            } else {
+                e.class = Priority::Interactive;
+                e.deadline_steps = Some(interactive_deadline);
+            }
+        }
+        trace
     }
 
     /// Arrivals due at or before `step` that come after the first `taken`
@@ -233,6 +266,29 @@ mod tests {
         let c = Trace::poisson_with_rate(mtbench(2, 0), 32, 3.0, 8);
         assert!(a.entries.iter().zip(&c.entries)
             .any(|(x, y)| x.arrival_step != y.arrival_step));
+    }
+
+    #[test]
+    fn class_tagged_trace_is_seeded_and_mixed() {
+        let mk = || Trace::poisson_with_classes(
+            mtbench(2, 0), 32, 2.0, 9, 0.5, 16, 128);
+        let (a, b) = (mk(), mk());
+        assert!(a.entries.iter().zip(&b.entries).all(|(x, y)| {
+            x.class == y.class && x.deadline_steps == y.deadline_steps
+                && x.arrival_step == y.arrival_step
+        }));
+        let batch = a.entries.iter()
+            .filter(|e| e.class == Priority::Batch).count();
+        assert!(batch > 0 && batch < a.entries.len(),
+                "batch_frac=0.5 should mix classes, got {batch}/16");
+        for e in &a.entries {
+            let want = if e.class == Priority::Batch { 128 } else { 16 };
+            assert_eq!(e.deadline_steps, Some(want));
+        }
+        // the arrival schedule matches the untagged constructor (same seed)
+        let plain = Trace::poisson_with_rate(mtbench(2, 0), 32, 2.0, 9);
+        assert!(a.entries.iter().zip(&plain.entries)
+            .all(|(x, y)| x.arrival_step == y.arrival_step));
     }
 
     #[test]

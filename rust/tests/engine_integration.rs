@@ -3,8 +3,9 @@
 //! the suite passes (as skipped no-ops) before `make artifacts`.
 
 use ctcdraft::config::{EngineConfig, Method};
-use ctcdraft::engine::Engine;
+use ctcdraft::engine::{Engine, GenOutput, Submission};
 use ctcdraft::runtime::Runtime;
+use ctcdraft::sched::SloPolicy;
 
 fn engine(method: Method) -> Option<Engine> {
     engine_cfg(EngineConfig { method, ..EngineConfig::default() })
@@ -191,6 +192,63 @@ fn eos_terminates_generation() {
     if let Some(p) = out.token_ids.iter().position(|&t| t == eos) {
         assert_eq!(p, out.token_ids.len() - 1, "nothing after EOS");
     }
+}
+
+fn run_to_done(engine: &mut Engine, id: u64) -> GenOutput {
+    loop {
+        for out in engine.step().expect("step") {
+            if out.id == id {
+                return out;
+            }
+        }
+        assert!(engine.n_active() > 0 || engine.queue_len() > 0,
+                "request {id} vanished without finishing");
+    }
+}
+
+/// Resumable prefill: evicting a sequence mid-prefill and re-admitting it
+/// (recompute-style) must reproduce exactly the uninterrupted run's ids.
+#[test]
+fn eviction_mid_prefill_matches_uninterrupted_run() {
+    let mk = || engine_cfg(EngineConfig {
+        method: Method::Ctc,
+        // one PREFILL_N chunk per round: a long prompt spans several rounds
+        slo: SloPolicy { prefill_chunk: 1, ..SloPolicy::default() },
+        ..EngineConfig::default()
+    });
+    let Some(mut a) = mk() else { return };
+    let Some(mut b) = mk() else { return };
+    let long_q = "Write a short paragraph about the ocean. ".repeat(10);
+    let prompt = a.format_prompt(&long_q);
+
+    // uninterrupted reference run
+    let ida = match a.submit(&prompt, 24).expect("submit") {
+        Submission::Admitted(id) => id,
+        other => panic!("expected direct admission, got {other:?}"),
+    };
+    let out_a = run_to_done(&mut a, ida);
+
+    // interrupted run: step once (prefill must still be in flight), then
+    // preempt and let the scheduler re-admit and re-prefill
+    let idb = match b.submit(&prompt, 24).expect("submit") {
+        Submission::Admitted(id) => id,
+        other => panic!("expected direct admission, got {other:?}"),
+    };
+    let rep = b.step_ex().expect("step");
+    assert!(rep.prefilled.iter().any(|&(id, n)| id == idb && n > 0),
+            "prefill did not run chunked");
+    assert!(rep.emitted.iter().all(|d| d.id != idb || d.tokens.is_empty()),
+            "prompt too short: prefill completed within one round, the \
+             mid-prefill eviction case is not exercised");
+    assert!(b.preempt(idb), "preempt of a mid-prefill sequence failed");
+    let out_b = run_to_done(&mut b, idb);
+
+    assert_eq!(out_a.token_ids, out_b.token_ids,
+               "mid-prefill eviction changed the generated ids");
+    assert!(b.events().render().contains(" evict id="),
+            "eviction not recorded in the event log");
+    assert!(b.events().render().matches(" admit id=").count() >= 2,
+            "re-admission not recorded in the event log");
 }
 
 #[test]

@@ -1,11 +1,16 @@
 //! Randomized property tests (testkit) over the coordinator's pure logic:
-//! CTC transform, lattice DP, token trees, JSON, tokenizer, kv-cache.
+//! CTC transform, lattice DP, token trees, JSON, tokenizer, kv-cache, and
+//! the SLO scheduling policy (admission order, aging, preemption).
+
+use std::cmp::Ordering;
 
 use ctcdraft::ctc;
 use ctcdraft::drafters::{log_softmax_row, topk, CandidatePath};
+use ctcdraft::sched::{Priority, ReqMeta, SloPolicy};
 use ctcdraft::testkit::{gen, Prop};
 use ctcdraft::tree::{TokenTree, NEG_INF};
 use ctcdraft::util::json::{parse, Json};
+use ctcdraft::util::rng::Rng;
 
 #[test]
 fn prop_collapse_idempotent_and_blankfree() {
@@ -300,6 +305,128 @@ fn prop_json_roundtrip() {
         let back = parse(&text).map_err(|e| format!("{e} for {text}"))?;
         if back != v {
             return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- SLO policy properties
+
+/// Random request meta around a fixed `now`: slack in [-64, 256), age in
+/// [0, 600), either class.
+fn rand_meta(rng: &mut Rng, id: u64, now: u64) -> ReqMeta {
+    let slack = rng.range(-64, 255);
+    ReqMeta {
+        id,
+        class: if rng.bool(0.5) { Priority::Batch } else { Priority::Interactive },
+        deadline_step: (now as i64 + slack).max(0) as u64,
+        enq_step: now.saturating_sub(rng.below(600) as u64),
+    }
+}
+
+#[test]
+fn prop_admission_orders_class_then_slack() {
+    Prop::new("admit_order").check(|rng| {
+        let pol = SloPolicy {
+            batch_aging_steps: 128,
+            ..SloPolicy::default()
+        };
+        let now = 1000u64;
+        let mut metas: Vec<ReqMeta> = (0..2 + rng.below(12))
+            .map(|i| rand_meta(rng, i as u64 + 1, now))
+            .collect();
+        metas.sort_by(|a, b| pol.admit_cmp(a, b, now));
+        // every effective-interactive request sorts before every
+        // effective-batch one
+        let classes: Vec<Priority> =
+            metas.iter().map(|m| pol.effective_class(m, now)).collect();
+        if let Some(first_batch) =
+            classes.iter().position(|&c| c == Priority::Batch)
+        {
+            if classes[first_batch..].iter().any(|&c| c == Priority::Interactive)
+            {
+                return Err(format!("interactive after batch: {classes:?}"));
+            }
+        }
+        // within an effective class, slack is nondecreasing (deadline-first)
+        for w in metas.windows(2) {
+            if pol.effective_class(&w[0], now) == pol.effective_class(&w[1], now)
+                && w[0].slack(now) > w[1].slack(now)
+            {
+                return Err(format!(
+                    "slack order violated: {} before {}",
+                    w[0].slack(now), w[1].slack(now)));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batch_aging_bounds_starvation() {
+    Prop::new("batch_aging").check(|rng| {
+        let aging = 1 + rng.below(256) as u64;
+        let pol = SloPolicy { batch_aging_steps: aging, ..SloPolicy::default() };
+        let now = 10_000u64;
+        let m = rand_meta(rng, 1, now);
+        // any request waits at most `aging` steps before competing as
+        // interactive — so batch can never be starved indefinitely
+        let promoted_at = m.enq_step + aging;
+        if pol.effective_class(&m, promoted_at) != Priority::Interactive {
+            return Err(format!(
+                "class {:?} not interactive-effective after the aging bound",
+                m.class));
+        }
+        // an aged batch request outranks a fresh interactive one with
+        // strictly more slack
+        if m.class == Priority::Batch && now >= promoted_at {
+            let fresh = ReqMeta {
+                id: 2,
+                class: Priority::Interactive,
+                deadline_step: m.deadline_step + 1 + rng.below(100) as u64,
+                enq_step: now,
+            };
+            if pol.admit_cmp(&m, &fresh, now) != Ordering::Less {
+                return Err("aged batch sorted behind a laxer fresh \
+                            interactive request".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_preemption_never_evicts_more_urgent() {
+    Prop::new("preempt_urgency").check(|rng| {
+        let pol = SloPolicy {
+            batch_aging_steps: [0u64, 64, 512][rng.below(3)],
+            ..SloPolicy::default()
+        };
+        let now = 1000u64;
+        let cand = rand_meta(rng, 99, now);
+        let running: Vec<ReqMeta> = (0..1 + rng.below(8))
+            .map(|i| rand_meta(rng, i as u64 + 1, now))
+            .collect();
+        match pol.pick_victim_for(&running, &cand, now) {
+            Some(v) => {
+                // the victim must be STRICTLY less urgent than the request
+                // being admitted — never equally or more urgent
+                if pol.urgency_cmp(&running[v], &cand, now) != Ordering::Greater {
+                    return Err(format!(
+                        "victim {:?} not strictly less urgent than candidate \
+                         {:?}", running[v], cand));
+                }
+            }
+            None => {
+                // refusal is only legal when no strictly-less-urgent
+                // sequence exists
+                if running.iter().any(|m| {
+                    pol.urgency_cmp(m, &cand, now) == Ordering::Greater
+                }) {
+                    return Err("eligible victim existed but preemption \
+                                refused".into());
+                }
+            }
         }
         Ok(())
     });

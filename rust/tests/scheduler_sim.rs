@@ -1,14 +1,26 @@
 //! Deterministic scheduler-simulation tests: replay a seeded Poisson trace
 //! through `testkit::SchedulerSim` and require byte-for-byte identical
-//! scheduler-event logs across runs.
+//! scheduler-event logs across runs, plus the SLO scenario suite
+//! (long-prefill interleave, interactive-preempts-batch, deadline-miss
+//! accounting, and the FIFO head-blocking regression case).
 //!
 //! Most tests drive the artifact-free `MockSched` (same admission/queue/
-//! eviction policy surface as `Engine`); the final test replays against a
-//! real `Engine` and is gated on compiled artifacts being present.
+//! eviction policy surface as `Engine`, via the shared `sched::SloPolicy`);
+//! the engine-backed replays gate on compiled artifacts being present.
 
-use ctcdraft::testkit::{MockSched, Prop, SchedulerSim, SimOptions, SimReport};
-use ctcdraft::workload::{Question, Trace};
+use ctcdraft::engine::Submission;
+use ctcdraft::sched::{Priority, SloPolicy};
+use ctcdraft::testkit::{MockSched, Prop, SchedBackend, SchedulerSim,
+                        SimOptions, SimReport};
+use ctcdraft::workload::{Question, Trace, TraceEntry};
 use ctcdraft::{default_artifacts_dir, workload};
+
+/// Step stamp of the first event line containing `needle` ("t=N ...").
+fn event_step(log: &str, needle: &str) -> Option<u64> {
+    log.lines().find(|l| l.contains(needle)).and_then(|l| {
+        l.strip_prefix("t=")?.split_whitespace().next()?.parse().ok()
+    })
+}
 
 fn mock_run(slots: usize, queue_cap: usize, pool_positions: usize, seed: u64,
             cancel_prob: f64) -> SimReport {
@@ -142,6 +154,240 @@ fn prop_sim_deterministic_across_random_configs() {
     });
 }
 
+// ------------------------------------------------- SLO scenario suite
+
+/// Tentpole acceptance scenario: while one long prompt prefills in chunks,
+/// already-running sequences keep emitting tokens every round — and the
+/// whole schedule replays byte-for-byte.
+#[test]
+fn long_prefill_interleaves_with_running_decodes() {
+    let policy = SloPolicy { prefill_chunk: 4, ..SloPolicy::default() };
+    let run = || {
+        let mut m = MockSched::new(4, 0, 100_000, 11).with_policy(policy);
+        let mut short_ids = Vec::new();
+        for i in 0..2 {
+            match m
+                .submit_tagged(&format!("{}{i}", "s".repeat(8)), 40,
+                               Priority::Interactive, None)
+                .expect("submit short")
+            {
+                Submission::Admitted(id) => short_ids.push(id),
+                other => panic!("short request not admitted: {other:?}"),
+            }
+        }
+        // one round: the shorts' tiny prefills complete and decoding starts
+        m.step_ex().expect("step");
+        let long_id = match m
+            .submit_tagged(&"x".repeat(240), 8, Priority::Interactive, None)
+            .expect("submit long")
+        {
+            Submission::Admitted(id) => id,
+            other => panic!("long request not admitted: {other:?}"),
+        };
+        let mut interleaved = 0usize;
+        for _ in 0..400 {
+            let rep = m.step_ex().expect("step");
+            let long_prefilling =
+                rep.prefilled.iter().any(|&(id, n)| id == long_id && n > 0);
+            let shorts_streaming = rep.emitted.iter().any(|d| {
+                short_ids.contains(&d.id) && !d.tokens.is_empty()
+            });
+            if long_prefilling && shorts_streaming {
+                interleaved += 1;
+            }
+            if m.n_active() == 0 && m.queue_len() == 0 {
+                break;
+            }
+        }
+        (interleaved, m.render_events())
+    };
+    let (interleaved, log_a) = run();
+    // 60 prefill tokens at 4/round = 15 prefill rounds; the running shorts
+    // must stream through most of them instead of stalling (old behavior:
+    // the monolithic prefill blocked the whole round sequence)
+    assert!(interleaved >= 5,
+            "long prefill interleaved with running decodes in only \
+             {interleaved} rounds");
+    let (_, log_b) = run();
+    assert_eq!(log_a, log_b, "interleave scenario must replay byte-for-byte");
+}
+
+/// Deadline-driven preemption: an interactive request that cannot fit the
+/// pool evicts the least urgent (batch, most slack) running sequence; the
+/// evicted request still finishes (recompute-style).
+#[test]
+fn interactive_preempts_batch_under_pool_pressure() {
+    let policy = SloPolicy { prefill_chunk: 2, ..SloPolicy::default() };
+    let run = || {
+        let mut m = MockSched::new(4, 0, 60, 21).with_policy(policy);
+        let admit = |sub: Submission| match sub {
+            Submission::Admitted(id) => id,
+            other => panic!("expected direct admission, got {other:?}"),
+        };
+        let _b1 = admit(m.submit_tagged(&"b".repeat(100), 8, Priority::Batch,
+                                        Some(2000)).expect("b1"));
+        let b2 = admit(m.submit_tagged(&"c".repeat(100), 8, Priority::Batch,
+                                       Some(2000)).expect("b2"));
+        for _ in 0..3 {
+            m.step_ex().expect("step");
+        }
+        // pool: 25 + 25 of 60 positions reserved — the interactive prompt
+        // (25) cannot fit without preemption
+        let i3 = match m
+            .submit_tagged(&"i".repeat(100), 8, Priority::Interactive, Some(10))
+            .expect("i3")
+        {
+            Submission::Queued { id, .. } => id,
+            other => panic!("interactive should queue first, got {other:?}"),
+        };
+        let mut evicted = Vec::new();
+        for _ in 0..400 {
+            let rep = m.step_ex().expect("step");
+            evicted.extend(rep.evicted.iter().copied());
+            if m.n_active() == 0 && m.queue_len() == 0 {
+                break;
+            }
+        }
+        (b2, i3, evicted, m.render_events())
+    };
+    let (b2, i3, evicted, log) = run();
+    assert_eq!(evicted.first(), Some(&b2),
+               "the youngest batch sequence must be the preemption victim");
+    let i3_admit = event_step(&log, &format!(" admit id={i3} "))
+        .expect("interactive request was never admitted");
+    // the evicted batch request re-admits only after the interactive one
+    let b2_readmit_off = log.rfind(&format!(" admit id={b2} ")).unwrap();
+    let i3_admit_off = log.find(&format!(" admit id={i3} ")).unwrap();
+    assert!(b2_readmit_off > i3_admit_off,
+            "evicted batch re-admitted before the urgent interactive");
+    assert_eq!(log.matches(" done id=").count(), 3,
+               "recompute-style preemption must not lose any request");
+    assert!(i3_admit > 3, "preemption cannot precede the interactive arrival");
+    let (_, _, evicted_b, log_b) = run();
+    assert_eq!(evicted, evicted_b);
+    assert_eq!(log, log_b, "preemption scenario must replay byte-for-byte");
+}
+
+/// Deadline-miss accounting: an overloaded single-slot scheduler must
+/// record every late completion, and the SimReport count must agree with
+/// the canonical event log.
+#[test]
+fn deadline_misses_are_accounted() {
+    let entries: Vec<TraceEntry> = (0..4)
+        .map(|_| TraceEntry {
+            question: Question { category: "writing", text: "d".repeat(40) },
+            max_new: 24,
+            arrival_step: 0,
+            class: Priority::Interactive,
+            deadline_steps: Some(4),
+        })
+        .collect();
+    let trace = Trace { entries };
+    let run = || {
+        let mut backend = MockSched::new(1, 0, 100_000, 13);
+        SchedulerSim::new(SimOptions { seed: 13, ..Default::default() })
+            .run(&mut backend, &trace)
+            .expect("sim run")
+    };
+    let report = run();
+    assert_eq!(report.per_request_steps.len(), 4, "all requests finish");
+    // 24 tokens at <=4/round take >=6 rounds — every 4-step deadline misses
+    assert_eq!(report.deadline_misses, 4,
+               "expected all requests late, got {}", report.deadline_misses);
+    assert_eq!(report.deadline_misses,
+               report.event_log.matches(" deadline-miss id=").count(),
+               "SimReport and event log disagree on deadline misses");
+    let report2 = run();
+    assert_eq!(report.event_log, report2.event_log);
+}
+
+/// Head-blocking regression: a pool-blocked batch request at the front of
+/// the queue must NOT stall small interactive requests behind it. Under
+/// PR-1's FIFO policy this admission order was [1, 2, 3, 4] with 2 gating
+/// everything; the SLO policy admits the small interactive ones first.
+#[test]
+fn small_interactive_requests_pass_a_pool_blocked_batch_head() {
+    let q = |n: usize, c: char| Question {
+        category: "writing",
+        text: std::iter::repeat(c).take(n).collect(),
+    };
+    let entries = vec![
+        TraceEntry { question: q(80, 'a'), max_new: 12, arrival_step: 0,
+                     class: Priority::Interactive, deadline_steps: Some(500) },
+        TraceEntry { question: q(144, 'b'), max_new: 8, arrival_step: 1,
+                     class: Priority::Batch, deadline_steps: Some(2000) },
+        TraceEntry { question: q(16, 'c'), max_new: 8, arrival_step: 2,
+                     class: Priority::Interactive, deadline_steps: Some(500) },
+        TraceEntry { question: q(16, 'd'), max_new: 8, arrival_step: 3,
+                     class: Priority::Interactive, deadline_steps: Some(500) },
+    ];
+    let trace = Trace { entries };
+    let run = || {
+        // pool 48: the batch prompt (36 positions) cannot fit while the
+        // first request (20 + generated) runs, but the small ones (4) can
+        let mut backend = MockSched::new(2, 0, 48, 17);
+        SchedulerSim::new(SimOptions { seed: 17, ..Default::default() })
+            .run(&mut backend, &trace)
+            .expect("sim run")
+    };
+    let report = run();
+    assert_eq!(report.per_request_steps.len(), 4, "all requests finish");
+    assert_eq!(report.admission_order, vec![1, 3, 4, 2],
+               "small interactive requests must pass the blocked batch head");
+    // the batch head only admits after freed capacity — i.e. after at
+    // least one small request completed, proving no head-block stall
+    let b_admit = event_step(&report.event_log, " admit id=2 ").unwrap();
+    let c_done = event_step(&report.event_log, " done id=3 ").unwrap();
+    let d_done = event_step(&report.event_log, " done id=4 ").unwrap();
+    assert!(b_admit > c_done.min(d_done),
+            "batch head admitted before any small request finished");
+    let report2 = run();
+    assert_eq!(report.event_log, report2.event_log);
+}
+
+/// Randomized determinism over class-tagged traces with chunked prefill,
+/// aging, and cancellations — any config must replay identically.
+#[test]
+fn prop_tagged_sim_deterministic_across_random_configs() {
+    Prop::new("tagged_sim_determinism").check(|rng| {
+        let slots = 1 + rng.below(4);
+        let cap = rng.below(4);
+        let pool = 128 + 16 * rng.below(32);
+        let seed = rng.next_u64();
+        let batch_frac = [0.0, 0.5, 1.0][rng.below(3)];
+        let cancel_prob = [0.0, 0.3][rng.below(2)];
+        let policy = SloPolicy {
+            interactive_deadline: 8 + rng.below(64) as u64,
+            batch_deadline: 64 + rng.below(512) as u64,
+            batch_aging_steps: [0u64, 16, 128][rng.below(3)],
+            prefill_chunk: [0usize, 4, 16][rng.below(3)],
+        };
+        let run = || {
+            let trace = Trace::poisson_with_classes(
+                workload::mtbench(1, seed), 16, 1.0, seed, batch_frac,
+                policy.interactive_deadline, policy.batch_deadline);
+            let mut backend =
+                MockSched::new(slots, cap, pool, seed).with_policy(policy);
+            SchedulerSim::new(SimOptions { cancel_prob, seed, ..Default::default() })
+                .run(&mut backend, &trace)
+                .map_err(|e| e.to_string())
+        };
+        let (a, b) = (run()?, run()?);
+        if a.event_log != b.event_log {
+            return Err(format!(
+                "event logs diverged for slots={slots} cap={cap} pool={pool} \
+                 chunk={}", policy.prefill_chunk));
+        }
+        if a.deadline_misses != b.deadline_misses
+            || a.interleaved_rounds != b.interleaved_rounds
+            || a.per_request_steps != b.per_request_steps
+        {
+            return Err("derived reports diverged".into());
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn engine_backed_sim_is_deterministic() {
     use ctcdraft::config::{EngineConfig, Method};
@@ -158,9 +404,13 @@ fn engine_backed_sim_is_deterministic() {
             model: "vic-tiny".into(),
             method: Method::Ctc,
             queue_cap: 4,
+            // small per-round prefill budget so the engine's resumable
+            // chunked prefill is exercised under the sim
+            slo: SloPolicy { prefill_chunk: 8, ..SloPolicy::default() },
             ..EngineConfig::default()
         }).expect("engine");
-        let trace = Trace::poisson_with_rate(workload::mtbench(1, 3), 12, 1.0, 3);
+        let trace = Trace::poisson_with_classes(
+            workload::mtbench(1, 3), 12, 1.0, 3, 0.5, 64, 512);
         SchedulerSim::new(SimOptions { seed: 3, ..Default::default() })
             .run(&mut engine, &trace)
             .expect("engine sim")
@@ -173,4 +423,5 @@ fn engine_backed_sim_is_deterministic() {
     assert_eq!(a.admission_order, b.admission_order);
     assert_eq!(a.per_request_steps, b.per_request_steps);
     assert_eq!(a.beta_hist, b.beta_hist);
+    assert_eq!(a.deadline_misses, b.deadline_misses);
 }

@@ -5,6 +5,7 @@
 use std::io::{BufRead, BufReader, Write};
 
 use ctcdraft::config::{EngineConfig, Method};
+use ctcdraft::sched::Priority;
 use ctcdraft::server::{Client, GenerateOutcome, Server, ServerConfig};
 use ctcdraft::util::json::{parse, Json};
 
@@ -148,6 +149,60 @@ fn stream_frames_arrive_in_order_and_sum_to_done() {
     assert!(tok_frames > 0, "no tok frames before done");
     assert_eq!(streamed_tokens, done.get("tokens").as_usize().unwrap(),
                "streamed token count disagrees with the done frame");
+    server.stop();
+}
+
+/// Stateful detokenizer regression: the concatenated `tok` frame text must
+/// equal the final `done` text exactly (no U+FFFD merge artifacts at round
+/// boundaries, no missing or duplicated fragments).
+#[test]
+fn streamed_text_concatenates_to_done_text() {
+    let Some(server) = start_server(1) else { return };
+    let addr = server.local_addr.to_string();
+    let mut c = Client::connect(&addr).expect("connect");
+    for (i, q) in ["Write a short paragraph about the ocean.",
+                   "What is 37 + 45?"].iter().enumerate() {
+        let mut streamed = String::new();
+        let outcome = c
+            .generate_stream(10 + i as i64, q, 48, true,
+                             |t| streamed.push_str(t))
+            .expect("stream");
+        let GenerateOutcome::Done(r) = outcome else {
+            panic!("expected done, got {outcome:?}");
+        };
+        assert_eq!(streamed, r.text,
+                   "tok frames must concatenate to the done text for {q:?}");
+    }
+    server.stop();
+}
+
+/// SLO wire fields round-trip: a `batch`-class request with a 0-step
+/// deadline completes normally and is counted as a deadline miss in the
+/// worker's scheduler stats.
+#[test]
+fn class_and_deadline_fields_roundtrip() {
+    let Some(server) = start_server(1) else { return };
+    let addr = server.local_addr.to_string();
+    let mut c = Client::connect(&addr).expect("connect");
+    let outcome = c
+        .generate_stream_opts(21, "What is 2 + 2?", 16, false,
+                              Priority::Batch, Some(0), |_| {})
+        .expect("generate");
+    assert!(matches!(outcome, GenerateOutcome::Done(_)),
+            "tagged request did not complete: {outcome:?}");
+    // a 0-step deadline must be recorded missed: completion always lands at
+    // least one scheduler round after submission
+    let w = worker_stats(&addr);
+    assert!(w.get("deadline_missed").as_usize().unwrap_or(0) >= 1,
+            "deadline miss not counted: {w:?}");
+    // unknown class strings are rejected with an error frame
+    let mut stream = std::net::TcpStream::connect(&addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    writeln!(stream, "{{\"op\":\"generate\",\"id\":5,\"prompt\":\"hi\",\
+                      \"class\":\"bulk\"}}").unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
     server.stop();
 }
 
