@@ -25,10 +25,18 @@ fn main() {
         .expect("engine (run `make artifacts`)");
 
     let mut columns = Vec::new();
+    let mut json = Vec::new();
     for method in [Method::Ctc, Method::Medusa, Method::Vanilla] {
         engine.set_method(method, true);
         let outcome = run_workload(&mut engine, &qs, max_new).unwrap();
+        for (cat, s) in &outcome.per_category {
+            json.push(ctcdraft::bench::result_from_summary(
+                &format!("{}/{cat}", method.name()), s));
+        }
         columns.push((method.name(), outcome.per_category));
+    }
+    if let Err(e) = ctcdraft::bench::write_json("fig2_categories", &json) {
+        eprintln!("failed to write BENCH_fig2_categories.json: {e}");
     }
 
     let mut rows = Vec::new();

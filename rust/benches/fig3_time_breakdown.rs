@@ -32,9 +32,11 @@ fn main() {
         .expect("engine (run `make artifacts`)");
 
     let mut rows = Vec::new();
+    let mut json = Vec::new();
     for method in [Method::Ctc, Method::Medusa] {
         engine.set_method(method, true);
         let s = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+        json.push(ctcdraft::bench::result_from_summary(method.name(), &s));
         let (base, draft, transform, other) = s.breakdown.percentages();
         println!("{}:", method.name());
         println!("{}", pie("base model", base));
@@ -52,5 +54,8 @@ fn main() {
     print!("{}", render_table(
         &["method", "base model", "draft model", "ctc transform", "others"],
         &rows));
+    if let Err(e) = ctcdraft::bench::write_json("fig3_time_breakdown", &json) {
+        eprintln!("failed to write BENCH_fig3_time_breakdown.json: {e}");
+    }
     println!("\npaper: ctc — draft 14.93%, transform 5.36%; medusa — draft 3.71%");
 }

@@ -22,6 +22,7 @@ fn main() {
         std::process::exit(1);
     }
     let (per_cat, max_new) = eval_scale();
+    let mut json = Vec::new();
 
     for (wname, qs) in [
         ("MT-bench", workload::mtbench(per_cat, 19)),
@@ -45,6 +46,8 @@ fn main() {
             let vanilla = run_workload(&mut engine, &qs, max_new).unwrap().summary;
             engine.set_method(Method::Ctc, true);
             let s = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+            json.push(ctcdraft::bench::result_from_summary(
+                &format!("{wname}/{model}/ctc"), &s));
             let gamma = s.gamma_vs(&vanilla);
             rows.push(vec![
                 model.clone(),
@@ -65,6 +68,9 @@ fn main() {
             println!("  {analog:18} {beta:4.2} {}",
                      "█".repeat((beta * 8.0).round() as usize));
         }
+    }
+    if let Err(e) = ctcdraft::bench::write_json("fig4_model_families", &json) {
+        eprintln!("failed to write BENCH_fig4_model_families.json: {e}");
     }
     println!("\npaper Fig 4: γ≈2.2–2.8 and β≈3.4–3.6 across Vicuna-{{7,13,33}}B \
               and LLaMA-2-Chat-{{7,13}}B, both datasets");

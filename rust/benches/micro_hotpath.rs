@@ -3,19 +3,216 @@
 //! tokenizer, the PJRT step/draft calls, and the rust CTC DP vs the exported
 //! Pallas ctc_score kernel.
 //!
-//! `cargo bench --bench micro_hotpath`
+//! PR 3 measures the allocating seed implementations (faithfully copied into
+//! the `legacy` module below) against the arena/scratch hot path, including
+//! the combined `hotpath_round(*)` pair — one full draft→verify host round
+//! (beam search → tree build → token/pos/bias assembly → KV commit+gather).
+//! Results also land in `BENCH_micro_hotpath.json` (see `bench::write_json`)
+//! so the perf trajectory is tracked across PRs.
+//!
+//! `cargo bench --bench micro_hotpath` (`-- --smoke` for the CI-fast mode:
+//! minimal iterations, runtime-backed measurements skipped).
 
-use ctcdraft::bench::{bench, print_results};
+use ctcdraft::bench::{self, bench, print_results};
 use ctcdraft::config::Method;
 use ctcdraft::ctc;
-use ctcdraft::drafters::CandidatePath;
+use ctcdraft::drafters::{CandidatePath, PathSet};
+use ctcdraft::kvcache::SeqCache;
 use ctcdraft::runtime::tensor::Tensor;
 use ctcdraft::runtime::Runtime;
 use ctcdraft::testkit::gen;
 use ctcdraft::tree::TokenTree;
 use ctcdraft::util::rng::Rng;
 
+/// The pre-PR-3 (seed) implementations, copied verbatim so one bench run
+/// records both sides of the before/after comparison.
+mod legacy {
+    use std::collections::HashMap;
+
+    use ctcdraft::drafters::CandidatePath;
+
+    pub const NEG_INF: f32 = -1e9;
+
+    fn logaddexp(a: f32, b: f32) -> f32 {
+        let m = a.max(b);
+        if m <= NEG_INF / 2.0 {
+            return NEG_INF;
+        }
+        m + ((a - m).exp() + (b - m).exp()).ln()
+    }
+
+    /// Seed `ctc::prefix_beam_search`: HashMap-keyed beams, fresh
+    /// allocations per slot per round.
+    pub fn prefix_beam_search(slot_logp: &[f32], slots: usize, vp1: usize,
+                              sym_topk: usize, beam_width: usize,
+                              max_len: usize) -> Vec<CandidatePath> {
+        let blank = vp1 - 1;
+        let mut beams: HashMap<Vec<i32>, (f32, f32)> = HashMap::new();
+        beams.insert(Vec::new(), (0.0, NEG_INF));
+        for t in 0..slots {
+            let row = &slot_logp[t * vp1..(t + 1) * vp1];
+            let picks = ctcdraft::drafters::topk(row, sym_topk.min(vp1));
+            let mut next: HashMap<Vec<i32>, (f32, f32)> = HashMap::new();
+            let bump = |map: &mut HashMap<Vec<i32>, (f32, f32)>,
+                        key: Vec<i32>, is_blank_end: bool, lp: f32| {
+                let e = map.entry(key).or_insert((NEG_INF, NEG_INF));
+                if is_blank_end {
+                    e.0 = logaddexp(e.0, lp);
+                } else {
+                    e.1 = logaddexp(e.1, lp);
+                }
+            };
+            for (prefix, &(p_b, p_nb)) in &beams {
+                for &s in &picks {
+                    let lp = row[s];
+                    if s == blank {
+                        bump(&mut next, prefix.clone(), true,
+                             logaddexp(p_b, p_nb) + lp);
+                    } else if prefix.last() == Some(&(s as i32)) {
+                        bump(&mut next, prefix.clone(), false, p_nb + lp);
+                        if prefix.len() < max_len {
+                            let mut ext = prefix.clone();
+                            ext.push(s as i32);
+                            bump(&mut next, ext, false, p_b + lp);
+                        }
+                    } else if prefix.len() < max_len {
+                        let mut ext = prefix.clone();
+                        ext.push(s as i32);
+                        bump(&mut next, ext, false, logaddexp(p_b, p_nb) + lp);
+                    }
+                }
+            }
+            let mut entries: Vec<(Vec<i32>, (f32, f32))> =
+                next.into_iter().collect();
+            entries.sort_by(|a, b| {
+                logaddexp(b.1 .0, b.1 .1)
+                    .partial_cmp(&logaddexp(a.1 .0, a.1 .1))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            entries.truncate(beam_width);
+            beams = entries.into_iter().collect();
+        }
+        let mut out: Vec<CandidatePath> = beams
+            .into_iter()
+            .filter(|(p, _)| !p.is_empty())
+            .map(|(tokens, (p_b, p_nb))| CandidatePath {
+                tokens,
+                score: logaddexp(p_b, p_nb),
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
+    }
+
+    /// Seed `tree::TokenTree`: AoS node vec, O(nodes) child scan, ancestry
+    /// re-derived per bias row, fresh Vec per padded/bias call.
+    #[derive(Clone)]
+    pub struct TreeNode {
+        pub token: i32,
+        pub parent: Option<usize>,
+        pub depth: usize,
+        pub score: f32,
+    }
+
+    pub struct Tree {
+        pub nodes: Vec<TreeNode>,
+    }
+
+    impl Tree {
+        pub fn from_paths(base_token: i32, paths: &[CandidatePath],
+                          max_nodes: usize) -> Tree {
+            let mut tree = Tree {
+                nodes: vec![TreeNode {
+                    token: base_token,
+                    parent: None,
+                    depth: 0,
+                    score: 0.0,
+                }],
+            };
+            let mut order: Vec<usize> = (0..paths.len()).collect();
+            order.sort_by(|&a, &b| {
+                paths[b].score.partial_cmp(&paths[a].score)
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            for pi in order {
+                let path = &paths[pi];
+                let mut cur = 0usize;
+                for (d, &tok) in path.tokens.iter().enumerate() {
+                    let child = tree.nodes.iter().position(|n| {
+                        n.parent == Some(cur) && n.token == tok
+                    });
+                    match child {
+                        Some(c) => cur = c,
+                        None => {
+                            if tree.nodes.len() >= max_nodes {
+                                break;
+                            }
+                            tree.nodes.push(TreeNode {
+                                token: tok,
+                                parent: Some(cur),
+                                depth: d + 1,
+                                score: path.score,
+                            });
+                            cur = tree.nodes.len() - 1;
+                        }
+                    }
+                }
+            }
+            tree
+        }
+
+        pub fn ancestry(&self, mut i: usize) -> Vec<usize> {
+            let mut chain = vec![i];
+            while let Some(p) = self.nodes[i].parent {
+                chain.push(p);
+                i = p;
+            }
+            chain.reverse();
+            chain
+        }
+
+        pub fn tokens_padded(&self, n_slots: usize, pad: i32) -> Vec<i32> {
+            let mut out = vec![pad; n_slots];
+            for (i, n) in self.nodes.iter().enumerate().take(n_slots) {
+                out[i] = n.token;
+            }
+            out
+        }
+
+        pub fn positions_padded(&self, base_pos: usize, n_slots: usize)
+                                -> Vec<i32> {
+            let mut out = vec![base_pos as i32; n_slots];
+            for (i, n) in self.nodes.iter().enumerate().take(n_slots) {
+                out[i] = (base_pos + n.depth) as i32;
+            }
+            out
+        }
+
+        pub fn attention_bias(&self, cache_len: usize, lmax: usize,
+                              n_slots: usize) -> Vec<f32> {
+            let m = lmax + n_slots;
+            let mut bias = vec![NEG_INF; n_slots * m];
+            for i in 0..n_slots {
+                let row = &mut bias[i * m..(i + 1) * m];
+                if i < self.nodes.len() {
+                    row[..cache_len].fill(0.0);
+                    for a in self.ancestry(i) {
+                        row[lmax + a] = 0.0;
+                    }
+                } else {
+                    row[lmax + i] = 0.0;
+                }
+            }
+            bias
+        }
+    }
+}
+
 fn main() {
+    let smoke = bench::smoke_mode();
+    let (it, secs) = if smoke { (10, 0.0) } else { (200, 0.3) };
     let mut results = Vec::new();
     let mut rng = Rng::new(0);
 
@@ -30,14 +227,35 @@ fn main() {
             score: -(i as f32),
         })
         .collect();
-    results.push(bench("ctc_transform(12 paths)", 200, 0.3, || {
+    results.push(bench("ctc_transform(12 paths)", it, secs, || {
         let out = ctc::transform_paths(&raw, &logp, slots, vp1, blank, 6);
         std::hint::black_box(out);
     }));
+    let mut tf_scratch = ctc::TransformScratch::default();
+    let mut tf_out = PathSet::with_capacity(12, 6);
+    results.push(bench("ctc_transform(scratch)", it, secs, || {
+        ctc::transform_paths_into(
+            raw.iter().map(|p| (p.tokens.as_slice(), p.score)),
+            &logp, slots, vp1, blank, 6, &mut tf_scratch, &mut tf_out);
+        std::hint::black_box(tf_out.len());
+    }));
 
-    results.push(bench("ctc_marginal_nll(U=6)", 500, 0.3, || {
+    results.push(bench("ctc_marginal_nll(U=6)", it.max(100), secs, || {
         let nll = ctc::ctc_marginal_nll(&logp, slots, vp1, &[5, 9, 3, 2, 8, 1]);
         std::hint::black_box(nll);
+    }));
+
+    // beam search: seed HashMap implementation vs PR-3 arena implementation
+    results.push(bench("prefix_beam(hashmap,legacy)", it, secs, || {
+        let out = legacy::prefix_beam_search(&logp, slots, vp1, 8, 16, 6);
+        std::hint::black_box(out);
+    }));
+    let mut beam = ctc::BeamScratch::new();
+    let mut beam_out = PathSet::with_capacity(16, 6);
+    results.push(bench("prefix_beam(arena)", it, secs, || {
+        ctc::prefix_beam_search_into(&mut beam, &logp, slots, vp1, 8, 16, 6,
+                                     &mut beam_out);
+        std::hint::black_box(beam_out.len());
     }));
 
     let paths: Vec<CandidatePath> = (0..12)
@@ -46,54 +264,166 @@ fn main() {
             score: -(i as f32) * 0.3,
         })
         .collect();
-    results.push(bench("tree_from_paths(12x6)", 500, 0.3, || {
-        let t = TokenTree::from_paths(7, &paths, 32);
-        std::hint::black_box(t);
+    results.push(bench("tree_from_paths(12x6,legacy)", it, secs, || {
+        let t = legacy::Tree::from_paths(7, &paths, 32);
+        std::hint::black_box(t.nodes.len());
+    }));
+    let mut arena = TokenTree::with_capacity(32);
+    results.push(bench("tree_rebuild(arena,12x6)", it, secs, || {
+        arena.rebuild(7, paths.iter().map(|p| (p.tokens.as_slice(), p.score)),
+                      32);
+        std::hint::black_box(arena.len());
     }));
 
-    let tree = TokenTree::from_paths(7, &paths, 32);
-    results.push(bench("tree_attention_bias(32x416)", 500, 0.3, || {
-        let b = tree.attention_bias(128, 384, 32);
+    let ltree = legacy::Tree::from_paths(7, &paths, 32);
+    results.push(bench("tree_attention_bias(32x416,legacy)", it, secs, || {
+        let b = ltree.attention_bias(128, 384, 32);
         std::hint::black_box(b);
     }));
+    let tree = TokenTree::from_paths(7, &paths, 32);
+    let mut bias_buf = vec![0f32; 32 * 416];
+    results.push(bench("tree_write_bias(32x416,arena)", it, secs, || {
+        tree.write_bias(&mut bias_buf, 128, 384, 32);
+        std::hint::black_box(bias_buf[0]);
+    }));
 
-    // ---------- runtime-backed pieces (need artifacts)
-    let artifacts = ctcdraft::default_artifacts_dir();
-    match Runtime::load(&artifacts) {
-        Ok(rt) => {
-            let model = rt.manifest.models.keys().next().cloned();
-            if let Some(model) = model {
-                bench_runtime(&rt, &model, &mut results);
-            }
-            bench_ctc_kernel(&rt, &mut results);
-        }
-        Err(e) => eprintln!("(skipping runtime benches: {e:#})"),
-    }
+    // ---------- the combined draft→verify host round (the PR-3 headline)
+    bench_hotpath_round(&mut results, smoke);
 
-    // ---------- end-to-end single step
-    if let Ok(rt) = Runtime::load(&artifacts) {
-        if rt.has_model("vic-tiny") {
-            use ctcdraft::config::EngineConfig;
-            use ctcdraft::engine::Engine;
-            let mut engine = Engine::new(rt, EngineConfig {
-                model: "vic-tiny".into(),
-                method: Method::Ctc,
-                ..EngineConfig::default()
-            }).unwrap();
-            let prompt = engine.format_prompt("What is 12 times 4?");
-            engine.admit(&prompt, 10_000).unwrap();
-            results.push(bench("engine_spec_step(b=1)", 20, 1.0, || {
-                if engine.n_active() == 0 {
-                    // sequence finished (EOS / capacity): re-admit so every
-                    // iteration measures a real speculative step
-                    engine.admit(&prompt, 10_000).unwrap();
+    if !smoke {
+        // ---------- runtime-backed pieces (need artifacts)
+        let artifacts = ctcdraft::default_artifacts_dir();
+        match Runtime::load(&artifacts) {
+            Ok(rt) => {
+                let model = rt.manifest.models.keys().next().cloned();
+                if let Some(model) = model {
+                    bench_runtime(&rt, &model, &mut results);
                 }
-                let _ = engine.step().unwrap();
-            }));
+                bench_ctc_kernel(&rt, &mut results);
+            }
+            Err(e) => eprintln!("(skipping runtime benches: {e:#})"),
+        }
+
+        // ---------- end-to-end single step
+        if let Ok(rt) = Runtime::load(&artifacts) {
+            if rt.has_model("vic-tiny") {
+                use ctcdraft::config::EngineConfig;
+                use ctcdraft::engine::Engine;
+                let mut engine = Engine::new(rt, EngineConfig {
+                    model: "vic-tiny".into(),
+                    method: Method::Ctc,
+                    ..EngineConfig::default()
+                }).unwrap();
+                let prompt = engine.format_prompt("What is 12 times 4?");
+                engine.admit(&prompt, 10_000).unwrap();
+                results.push(bench("engine_spec_step(b=1)", 20, 1.0, || {
+                    if engine.n_active() == 0 {
+                        // sequence finished (EOS / capacity): re-admit so
+                        // every iteration measures a real speculative step
+                        engine.admit(&prompt, 10_000).unwrap();
+                    }
+                    let _ = engine.step().unwrap();
+                }));
+            }
         }
     }
 
     print_results("micro hot-path", &results);
+    if let Err(e) = bench::write_json("micro_hotpath", &results) {
+        eprintln!("failed to write BENCH_micro_hotpath.json: {e}");
+        std::process::exit(1);
+    }
+}
+
+/// One full draft→verify host round for a single sequence — beam search,
+/// tree build, token/pos/bias assembly, KV commit and batch gather — in the
+/// seed (allocating, full-recopy) form vs the PR-3 (arena, incremental)
+/// form, over the same inputs. The acceptance bar is the mean-time ratio
+/// between these two entries.
+fn bench_hotpath_round(results: &mut Vec<ctcdraft::bench::BenchResult>,
+                       smoke: bool) {
+    let (it, secs) = if smoke { (10, 0.0) } else { (150, 0.5) };
+    let (slots, vp1) = (8usize, 513usize);
+    let (layers, heads, head_dim, lmax) = (4usize, 2usize, 32usize, 384usize);
+    let re = heads * head_dim;
+    let n_slots = 32usize;
+    let mut rng = Rng::new(7);
+    // a rotation of slot distributions so rounds differ but both variants
+    // see the identical workload
+    let logps: Vec<Vec<f32>> = (0..8)
+        .map(|_| gen::logp_matrix(&mut rng, slots, vp1))
+        .collect();
+    // batch-shaped fake verify output [L, 1, N, H, Dh]
+    let kv_src: Vec<f32> = (0..layers * n_slots * re)
+        .map(|i| (i % 97) as f32 * 0.25)
+        .collect();
+    let picks = [0usize, 1, 2];
+
+    // ---- legacy: per-round Vecs, staging copy, full lmax re-gather
+    let mut cache = SeqCache::new(layers, lmax, heads, head_dim);
+    let mut bk = vec![0f32; layers * lmax * re];
+    let mut bv = vec![0f32; layers * lmax * re];
+    let mut i = 0usize;
+    results.push(bench("hotpath_round(legacy)", it, secs, || {
+        let lp = &logps[i % logps.len()];
+        i += 1;
+        let paths = legacy::prefix_beam_search(lp, slots, vp1, 8, 16, 6);
+        let tree = legacy::Tree::from_paths(7, &paths, n_slots);
+        let tokens = tree.tokens_padded(n_slots, 0);
+        let pos = tree.positions_padded(cache.len, n_slots);
+        let bias = tree.attention_bias(cache.len, lmax, n_slots);
+        std::hint::black_box((&tokens, &pos, &bias));
+        // seed engine: slice the batch output into per-seq staging buffers
+        let mut k_slice = vec![0f32; layers * n_slots * re];
+        let mut v_slice = vec![0f32; layers * n_slots * re];
+        for l in 0..layers {
+            let src = l * n_slots * re;
+            k_slice[src..src + n_slots * re]
+                .copy_from_slice(&kv_src[src..src + n_slots * re]);
+            v_slice[src..src + n_slots * re]
+                .copy_from_slice(&kv_src[src..src + n_slots * re]);
+        }
+        if cache.len + picks.len() + n_slots >= lmax {
+            cache.truncate(0);
+        }
+        cache.append_selected(&k_slice, &v_slice, n_slots, &picks).unwrap();
+        cache.copy_into_batch(&mut bk, &mut bv, 0, 1); // full re-copy
+        std::hint::black_box(bk[0]);
+    }));
+
+    // ---- arena: reused scratch, direct batch commit, incremental gather
+    let mut beam = ctc::BeamScratch::new();
+    let mut path_set = PathSet::with_capacity(16, 6);
+    let mut tree = TokenTree::with_capacity(n_slots);
+    let mut tokens = vec![0i32; n_slots];
+    let mut pos = vec![0i32; n_slots];
+    let mut bias = vec![0f32; n_slots * (lmax + n_slots)];
+    let mut cache2 = SeqCache::new(layers, lmax, heads, head_dim);
+    let mut bk2 = vec![0f32; layers * lmax * re];
+    let mut bv2 = vec![0f32; layers * lmax * re];
+    let mut synced = 0usize;
+    let mut j = 0usize;
+    results.push(bench("hotpath_round(scratch)", it, secs, || {
+        let lp = &logps[j % logps.len()];
+        j += 1;
+        ctc::prefix_beam_search_into(&mut beam, lp, slots, vp1, 8, 16, 6,
+                                     &mut path_set);
+        tree.rebuild(7, path_set.iter_sorted(), n_slots);
+        tree.write_tokens(&mut tokens, 0);
+        tree.write_positions(&mut pos, cache2.len);
+        tree.write_bias(&mut bias, cache2.len, lmax, n_slots);
+        std::hint::black_box((&tokens, &pos, &bias));
+        if cache2.len + picks.len() + n_slots >= lmax {
+            cache2.truncate(0);
+            synced = 0;
+        }
+        cache2
+            .append_from_batch(&kv_src, &kv_src, 1, 0, n_slots, &picks)
+            .unwrap();
+        cache2.copy_new_into_batch(&mut bk2, &mut bv2, 0, 1, synced);
+        synced = cache2.len;
+        std::hint::black_box(bk2[0]);
+    }));
 }
 
 fn bench_runtime(rt: &Runtime, model: &str,
@@ -169,12 +499,14 @@ fn bench_ctc_kernel(rt: &Runtime, results: &mut Vec<ctcdraft::bench::BenchResult
         let out = rt.run_kernel(&kname, &args).unwrap();
         std::hint::black_box(out);
     }));
-    // the equivalent rust DP for the same batch
+    // the equivalent rust DP for the same batch, with scratch reuse
+    let mut dp = ctc::DpScratch::default();
     results.push(bench("ctc_score_rust_dp(b16)", 50, 0.5, || {
         for i in 0..b {
             let lp = &logp[i * c.draft_slots * vp1..(i + 1) * c.draft_slots * vp1];
             let tgt = &targets[i * c.ctc_target_u..(i + 1) * c.ctc_target_u];
-            std::hint::black_box(ctc::ctc_marginal_nll(lp, c.draft_slots, vp1, tgt));
+            std::hint::black_box(ctc::ctc_marginal_nll_with(
+                &mut dp, lp, c.draft_slots, vp1, tgt));
         }
     }));
 }

@@ -23,6 +23,7 @@ fn main() {
         eprintln!("no artifacts — run `make artifacts` first");
         std::process::exit(1);
     }
+    let mut json = Vec::new();
     let (per_cat, max_new) = eval_scale();
     let vic_models: Vec<&String> =
         models.iter().filter(|m| m.starts_with("vic")).collect();
@@ -49,6 +50,8 @@ fn main() {
                 let s = run_workload(&mut engine, &qs, max_new)
                     .expect("eval failed")
                     .summary;
+                json.push(ctcdraft::bench::result_from_summary(
+                    &format!("{wname}/{model}/{}", method.name()), &s));
                 let gamma = vanilla.as_ref().map(|v| s.gamma_vs(v)).unwrap_or(1.0);
                 rows.push(vec![
                     model.to_string(),
@@ -70,6 +73,9 @@ fn main() {
         }
         print!("{}", render_table(
             &["model", "analog", "method", "γ", "β"], &rows));
+    }
+    if let Err(e) = ctcdraft::bench::write_json("table1_speedup", &json) {
+        eprintln!("failed to write BENCH_table1_speedup.json: {e}");
     }
     println!("\npaper Table 1 (MT-bench, Vicuna-7B/13B/33B):");
     println!("  vanilla 1.00/1.00/1.00β=1 · medusa 2.13x,2.58 | 1.97x,2.60 | 1.93x,2.55");

@@ -29,14 +29,19 @@ fn main() {
         ("Transformer + CTC loss | CTC verify", Method::Ctc, true),
     ];
     let mut rows = Vec::new();
+    let mut json = vec![ctcdraft::bench::result_from_summary("vanilla", &vanilla)];
     for (label, method, transform) in variants {
         engine.set_method(method, transform);
         let s = run_workload(&mut engine, &qs, max_new).unwrap().summary;
+        json.push(ctcdraft::bench::result_from_summary(label, &s));
         rows.push(vec![
             label.to_string(),
             format!("{:.2}x", s.gamma_vs(&vanilla)),
             format!("{:.2}", s.beta()),
         ]);
+    }
+    if let Err(e) = ctcdraft::bench::write_json("table2_ablation", &json) {
+        eprintln!("failed to write BENCH_table2_ablation.json: {e}");
     }
     print!("{}", render_table(&["draft module | verify", "γ", "β"], &rows));
     println!("\npaper: 2.13x,2.58 · 2.25x,3.02 · 2.78x,3.56");

@@ -10,18 +10,49 @@ cd "$(dirname "$0")"
 cargo build --release
 # The full suite includes the SchedulerSim scenario suite
 # (rust/tests/scheduler_sim.rs: interleaved chunked prefill,
-# interactive-preempts-batch, deadline misses, head-blocking regression).
+# interactive-preempts-batch, deadline misses, head-blocking regression,
+# class-aware prefill ordering, adaptive-β replay) and the zero-allocation
+# hot-path gate (rust/tests/hotpath_alloc.rs).
 CTCD_PROP_FAST=1 cargo test -q
 
 # Determinism audit: two replays of the same seeded class-tagged trace must
-# produce byte-identical scheduler event logs. Any diff fails the gate.
+# produce byte-identical scheduler event logs — under BOTH β policies
+# (fixed and batch-adaptive). Any diff fails the gate.
 for seed in 7 41; do
-  a="$(./target/release/ctcdraft sim --seed "$seed")"
-  b="$(./target/release/ctcdraft sim --seed "$seed")"
-  if [ "$a" != "$b" ]; then
-    echo "FAIL: SchedulerSim replay for seed $seed is nondeterministic" >&2
-    diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
-    exit 1
-  fi
+  for beta in fixed adaptive; do
+    a="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta")"
+    b="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta")"
+    if [ "$a" != "$b" ]; then
+      echo "FAIL: SchedulerSim replay (seed $seed, beta $beta) is nondeterministic" >&2
+      diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
+      exit 1
+    fi
+  done
 done
-echo "scheduler-sim replay determinism: OK"
+echo "scheduler-sim replay determinism (fixed + adaptive beta): OK"
+
+# Bench smoke: the micro hot-path bench must run in --smoke mode and leave
+# a well-formed machine-readable BENCH_micro_hotpath.json behind (the
+# cross-PR perf-trajectory artifact).
+rm -f BENCH_micro_hotpath.json
+cargo bench --bench micro_hotpath -- --smoke >/dev/null
+test -s BENCH_micro_hotpath.json || {
+  echo "FAIL: BENCH_micro_hotpath.json missing or empty" >&2; exit 1;
+}
+python3 - <<'EOF'
+import json, sys
+with open("BENCH_micro_hotpath.json") as f:
+    doc = json.load(f)
+assert doc.get("bench") == "micro_hotpath", doc.get("bench")
+results = doc["results"]
+assert results, "no bench results recorded"
+for r in results:
+    for key in ("name", "iters", "mean_s", "p50_s", "p95_s"):
+        assert key in r, f"missing {key} in {r}"
+names = {r["name"] for r in results}
+need = {"hotpath_round(legacy)", "hotpath_round(scratch)"}
+missing = need - names
+assert not missing, f"missing hot-round entries: {missing}"
+print("BENCH_micro_hotpath.json: OK (%d entries)" % len(results))
+EOF
+echo "bench smoke: OK"

@@ -1,0 +1,233 @@
+//! Batch-adaptive speculation control — the β-aware batching policy.
+//!
+//! The speculative-decoding survey (Xia et al., 2024) observes that
+//! batching interacts with acceptance-rate dynamics: verifying a B-sequence
+//! batch multiplies the tree-verification FLOPs by B, so the tree width
+//! that maximizes throughput *shrinks* as the decode batch grows, while a
+//! lonely interactive sequence should spend the idle verify capacity on a
+//! wider/deeper tree. The `BetaController` implements that trade: per round
+//! it derives a `DraftPlan` (beam width, candidate depth, tree-node budget)
+//! from the current decode batch size and an EWMA of per-sequence
+//! acceptance, and the engine threads the plan through the drafter and the
+//! token-tree builder.
+//!
+//! Everything here is pure integer/f64 arithmetic on observed counts —
+//! no clocks, no RNG — so scheduler replays with `--beta-policy adaptive`
+//! stay byte-for-byte deterministic (the chosen plan is additionally
+//! recorded in the scheduler event log whenever it changes).
+
+use anyhow::{bail, Result};
+
+/// Which β policy the engine runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BetaPolicy {
+    /// Paper-default static budget: `max_paths` beams, `tree_n` nodes,
+    /// `ctc_target_u` depth, regardless of batch size.
+    Fixed,
+    /// Batch- and acceptance-adaptive budget (see `BetaController::plan`).
+    Adaptive,
+}
+
+impl BetaPolicy {
+    pub fn parse(s: &str) -> Result<BetaPolicy> {
+        Ok(match s {
+            "fixed" => BetaPolicy::Fixed,
+            "adaptive" => BetaPolicy::Adaptive,
+            other => bail!("unknown beta policy '{other}' (fixed|adaptive)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BetaPolicy::Fixed => "fixed",
+            BetaPolicy::Adaptive => "adaptive",
+        }
+    }
+}
+
+/// Per-round draft budget handed to the drafter and the tree builder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DraftPlan {
+    /// beam width — max candidate paths drafted per sequence
+    pub max_paths: usize,
+    /// max candidate continuation length (tree depth)
+    pub max_len: usize,
+    /// max token-tree nodes per sequence (including the root)
+    pub tree_nodes: usize,
+}
+
+/// EWMA smoothing factor for the acceptance signal. Small enough that one
+/// lucky round does not whipsaw the tree shape, large enough to adapt
+/// within a few tens of rounds.
+const EWMA_ALPHA: f64 = 0.1;
+
+/// Smallest adaptive tree-node budget (root + a couple of branches) — below
+/// this the draft overhead is not worth a verify pass at all.
+const MIN_NODES: usize = 4;
+
+/// Derives the per-round `DraftPlan` from decode batch size and an EWMA of
+/// per-sequence accepted tokens per round. Deterministic in its inputs.
+#[derive(Debug, Clone)]
+pub struct BetaController {
+    policy: BetaPolicy,
+    /// fixed-policy budget (engine config / manifest constants)
+    base_paths: usize,
+    base_nodes: usize,
+    base_len: usize,
+    /// EWMA of accepted tokens per sequence per decode round
+    ewma: f64,
+}
+
+impl BetaController {
+    /// `base_paths`/`base_nodes`/`base_len` are the static budgets the
+    /// `Fixed` policy always returns (engine: `max_paths`, `tree_n`,
+    /// `ctc_target_u`).
+    pub fn new(policy: BetaPolicy, base_paths: usize, base_nodes: usize,
+               base_len: usize) -> BetaController {
+        BetaController {
+            policy,
+            base_paths: base_paths.max(1),
+            // never inflated past the caller's budget: the engine verifies
+            // at most `tree_n` nodes, so a plan must never exceed it
+            base_nodes: base_nodes.max(1),
+            base_len: base_len.max(1),
+            // optimistic start: behave like Fixed until evidence arrives
+            ewma: base_len.max(1) as f64,
+        }
+    }
+
+    pub fn policy(&self) -> BetaPolicy {
+        self.policy
+    }
+
+    /// Current acceptance EWMA (tokens per sequence per round).
+    pub fn ewma_accept(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Record one sequence's accepted-token count for a decode round.
+    pub fn observe(&mut self, accepted: usize) {
+        self.ewma = (1.0 - EWMA_ALPHA) * self.ewma
+            + EWMA_ALPHA * accepted as f64;
+    }
+
+    /// The draft budget for a decode round over `batch` sequences.
+    ///
+    /// Adaptive shape:
+    /// * node budget divides the fixed budget by the batch size (verify
+    ///   FLOPs are `batch × nodes`), floored at `MIN_NODES` — so a full
+    ///   batch runs narrow trees and a lonely sequence gets the whole
+    ///   budget;
+    /// * depth tracks acceptance: draft one level past what is currently
+    ///   being accepted (EWMA), clamped to the trained target length;
+    /// * beam width never exceeds what the node budget can hold.
+    pub fn plan(&self, batch: usize) -> DraftPlan {
+        match self.policy {
+            BetaPolicy::Fixed => DraftPlan {
+                max_paths: self.base_paths,
+                max_len: self.base_len,
+                tree_nodes: self.base_nodes,
+            },
+            BetaPolicy::Adaptive => {
+                let batch = batch.max(1);
+                let nodes = (self.base_nodes / batch)
+                    .clamp(MIN_NODES.min(self.base_nodes), self.base_nodes);
+                let depth = (self.ewma.ceil() as usize + 1)
+                    .clamp(2.min(self.base_len), self.base_len);
+                let paths = self
+                    .base_paths
+                    .min(nodes.saturating_sub(1))
+                    .max(1);
+                DraftPlan { max_paths: paths, max_len: depth, tree_nodes: nodes }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_roundtrip() {
+        for p in [BetaPolicy::Fixed, BetaPolicy::Adaptive] {
+            assert_eq!(BetaPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(BetaPolicy::parse("auto").is_err());
+    }
+
+    #[test]
+    fn fixed_policy_ignores_batch_and_acceptance() {
+        let mut c = BetaController::new(BetaPolicy::Fixed, 16, 32, 6);
+        let base = c.plan(1);
+        assert_eq!(base,
+                   DraftPlan { max_paths: 16, max_len: 6, tree_nodes: 32 });
+        for _ in 0..50 {
+            c.observe(0);
+        }
+        assert_eq!(c.plan(8), base);
+    }
+
+    #[test]
+    fn adaptive_shrinks_trees_as_batch_grows() {
+        let c = BetaController::new(BetaPolicy::Adaptive, 16, 32, 6);
+        let widths: Vec<usize> =
+            (1..=8).map(|b| c.plan(b).tree_nodes).collect();
+        assert_eq!(widths[0], 32, "lonely sequence gets the full budget");
+        for w in widths.windows(2) {
+            assert!(w[0] >= w[1], "node budget must shrink with batch");
+        }
+        assert!(*widths.last().unwrap() >= 4, "floor respected");
+        // beam width always fits the node budget
+        for b in 1..=8 {
+            let p = c.plan(b);
+            assert!(p.max_paths <= p.tree_nodes.saturating_sub(1).max(1));
+            assert!(p.max_paths >= 1 && p.max_len >= 1);
+        }
+    }
+
+    #[test]
+    fn adaptive_depth_tracks_acceptance_ewma() {
+        let mut c = BetaController::new(BetaPolicy::Adaptive, 16, 32, 6);
+        assert_eq!(c.plan(1).max_len, 6, "optimistic before evidence");
+        for _ in 0..200 {
+            c.observe(0); // nothing accepted: draft shallow
+        }
+        assert_eq!(c.plan(1).max_len, 2);
+        for _ in 0..200 {
+            c.observe(6); // deep acceptance: draft back to the cap
+        }
+        assert_eq!(c.plan(1).max_len, 6);
+        assert!(c.ewma_accept() > 5.0);
+    }
+
+    #[test]
+    fn degenerate_budgets_are_never_inflated() {
+        // a manifest with tree_n == 1 must yield single-node plans — the
+        // engine verifies at most tree_n nodes per sequence
+        for policy in [BetaPolicy::Fixed, BetaPolicy::Adaptive] {
+            let mut c = BetaController::new(policy, 1, 1, 1);
+            for batch in [1usize, 2, 8] {
+                let p = c.plan(batch);
+                assert!(p.tree_nodes <= 1, "{policy:?}: {p:?}");
+                assert!(p.max_paths >= 1 && p.max_len >= 1);
+            }
+            c.observe(5);
+            assert!(c.plan(1).tree_nodes <= 1);
+        }
+    }
+
+    #[test]
+    fn plans_are_deterministic_in_observation_history() {
+        let run = || {
+            let mut c = BetaController::new(BetaPolicy::Adaptive, 16, 32, 6);
+            let mut plans = Vec::new();
+            for i in 0..100usize {
+                c.observe(i % 5);
+                plans.push(c.plan(1 + i % 4));
+            }
+            plans
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -91,11 +91,70 @@ pub fn print_results(title: &str, results: &[BenchResult]) {
         &["benchmark", "iters", "mean", "p50", "p95"], &rows));
 }
 
+/// Write results as machine-readable JSON next to the table output:
+/// `BENCH_<name>.json` in the current directory, one entry per benchmark
+/// with iters and mean/p50/p95/total seconds. This is how the perf
+/// trajectory is tracked across PRs — each run leaves a diffable artifact.
+pub fn write_json(name: &str, results: &[BenchResult])
+                  -> std::io::Result<std::path::PathBuf> {
+    use crate::util::json::Json;
+    let entries: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::str(r.name.clone())),
+                ("iters", Json::Num(r.iters as f64)),
+                ("mean_s", Json::Num(r.mean_s)),
+                ("p50_s", Json::Num(r.p50_s)),
+                ("p95_s", Json::Num(r.p95_s)),
+                ("total_s", Json::Num(r.total_s)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("results", Json::Arr(entries)),
+    ]);
+    let path = std::path::PathBuf::from(format!("BENCH_{name}.json"));
+    std::fs::write(&path, doc.to_string() + "\n")?;
+    eprintln!("(wrote {})", path.display());
+    Ok(path)
+}
+
+/// Map an eval `RunSummary` onto the bench JSON schema so the table-style
+/// targets (Table 1/2, Fig 2/3/4) emit machine-readable artifacts too:
+/// iters = base-model decoding steps, times = per-token seconds (mean ==
+/// p50 == p95 — aggregates carry no distribution).
+pub fn result_from_summary(name: &str, s: &crate::metrics::RunSummary)
+                           -> BenchResult {
+    let per_tok = if s.total_tokens == 0 {
+        0.0
+    } else {
+        s.total_secs / s.total_tokens as f64
+    };
+    BenchResult {
+        name: name.to_string(),
+        iters: s.total_steps,
+        mean_s: per_tok,
+        p50_s: per_tok,
+        p95_s: per_tok,
+        total_s: s.total_secs,
+    }
+}
+
 /// Shared flag: benches run a reduced workload unless `--full` is passed
 /// (or BENCH_FULL=1) — one CPU core makes full paper-scale sweeps slow.
 pub fn full_mode() -> bool {
     std::env::args().any(|a| a == "--full")
         || std::env::var("BENCH_FULL").ok().as_deref() == Some("1")
+}
+
+/// Smoke flag (`--smoke` / BENCH_SMOKE=1): benches run a minimal iteration
+/// budget and skip runtime-backed measurements — just enough to validate
+/// the harness and produce a well-formed `BENCH_*.json` (check.sh gate).
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("BENCH_SMOKE").ok().as_deref() == Some("1")
 }
 
 /// Standard bench workload sizes: (questions per category, max_new tokens).
@@ -189,6 +248,25 @@ mod tests {
         assert!((r.p50_s - 0.050).abs() < 0.002, "{}", r.p50_s);
         assert!((r.p95_s - 0.095).abs() < 0.002);
         assert!((r.mean_s - 0.0505).abs() < 0.001);
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let results = vec![
+            summarize("alpha", &[0.001, 0.002, 0.003]),
+            summarize("beta(32x416)", &[0.5]),
+        ];
+        let path = write_json("selftest_tmp", &results).expect("write");
+        let text = std::fs::read_to_string(&path).expect("read back");
+        let _ = std::fs::remove_file(&path);
+        let v = crate::util::json::parse(&text).expect("well-formed JSON");
+        assert_eq!(v.get("bench").as_str(), Some("selftest_tmp"));
+        let rs = v.get("results").as_arr().expect("results array");
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").as_str(), Some("alpha"));
+        assert_eq!(rs[0].get("iters").as_usize(), Some(3));
+        assert!(rs[0].get("mean_s").as_f64().unwrap() > 0.0);
+        assert!(rs[1].get("p95_s").as_f64().is_some());
     }
 
     #[test]

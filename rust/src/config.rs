@@ -9,6 +9,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::adapt::BetaPolicy;
 use crate::sched::SloPolicy;
 use crate::util::json::{parse, Json};
 
@@ -269,6 +270,10 @@ pub struct EngineConfig {
     /// SLO scheduling policy: priority-class deadlines, batch aging, and
     /// the per-round prefill-chunk budget (see `sched::SloPolicy`).
     pub slo: SloPolicy,
+    /// β-aware batching: `fixed` = the paper's static tree budget,
+    /// `adaptive` = per-round width/depth from batch size + acceptance
+    /// EWMA (see `adapt::BetaController`).
+    pub beta_policy: BetaPolicy,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -313,6 +318,7 @@ impl Default for EngineConfig {
             kv_pool_positions: 0,
             queue_cap: 0,
             slo: SloPolicy::default(),
+            beta_policy: BetaPolicy::Fixed,
         }
     }
 }

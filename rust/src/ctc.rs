@@ -13,14 +13,24 @@
 //! kernel / jnp reference) used to re-rank collapsed candidates by their
 //! full marginal probability — summing over all alignments, i.e. the
 //! "probability allocation" that makes CTC drafts sequentially consistent.
+//!
+//! Hot-path forms (PR 3): the `_into`/`_with` variants thread caller-owned
+//! scratch (`BeamScratch`, `DpScratch`, `TransformScratch`) and write into
+//! `PathSet` arenas, so the per-round draft transform performs zero heap
+//! allocations in steady state. The old allocating signatures remain as
+//! thin wrappers. The beam search also replaces the previous
+//! `HashMap`-keyed implementation with a sort-and-merge over flat arenas —
+//! fully deterministic (ties break on prefix content, then insertion
+//! order) where the hash-map iteration order was not.
 
-use crate::drafters::CandidatePath;
+use crate::drafters::{topk_into, CandidatePath, PathSet};
 
 pub const NEG_INF: f32 = -1e9;
 
-/// β⁻¹: collapse adjacent repeats, then strip blanks.
-pub fn collapse(tokens: &[i32], blank: i32) -> Vec<i32> {
-    let mut out = Vec::with_capacity(tokens.len());
+/// β⁻¹: collapse adjacent repeats, then strip blanks, into a reusable
+/// buffer.
+pub fn collapse_into(tokens: &[i32], blank: i32, out: &mut Vec<i32>) {
+    out.clear();
     let mut prev: Option<i32> = None;
     for &t in tokens {
         if Some(t) != prev && t != blank {
@@ -28,6 +38,12 @@ pub fn collapse(tokens: &[i32], blank: i32) -> Vec<i32> {
         }
         prev = Some(t);
     }
+}
+
+/// β⁻¹: collapse adjacent repeats, then strip blanks.
+pub fn collapse(tokens: &[i32], blank: i32) -> Vec<i32> {
+    let mut out = Vec::with_capacity(tokens.len());
+    collapse_into(tokens, blank, &mut out);
     out
 }
 
@@ -50,28 +66,42 @@ fn logsumexp3(a: f32, b: f32, c: f32) -> f32 {
     m + ((a - m).exp() + (b - m).exp() + (c - m).exp()).max(1e-30).ln()
 }
 
+/// Reusable buffers for the CTC α-recursion (blank-extended target + the
+/// two DP rows).
+#[derive(Debug, Default, Clone)]
+pub struct DpScratch {
+    ext: Vec<i32>,
+    alpha: Vec<f32>,
+    next: Vec<f32>,
+}
+
 /// CTC marginal negative log-likelihood of `target` under slot
-/// log-probabilities `slot_logp` (row-major `[slots, vp1]`, blank = vp1-1).
+/// log-probabilities `slot_logp` (row-major `[slots, vp1]`, blank = vp1-1),
+/// using caller-owned DP buffers (zero-alloc in steady state).
 /// Mirrors `python/compile/kernels/ctc_loss.py` exactly.
-pub fn ctc_marginal_nll(slot_logp: &[f32], slots: usize, vp1: usize,
-                        target: &[i32]) -> f32 {
+pub fn ctc_marginal_nll_with(dp: &mut DpScratch, slot_logp: &[f32],
+                             slots: usize, vp1: usize, target: &[i32]) -> f32 {
     let blank = (vp1 - 1) as i32;
     debug_assert_eq!(slot_logp.len(), slots * vp1);
     let u = target.len();
     let s = 2 * u + 1;
     // blank-extended target
-    let mut ext = vec![blank; s];
+    dp.ext.clear();
+    dp.ext.resize(s, blank);
     for (i, &t) in target.iter().enumerate() {
-        ext[2 * i + 1] = t;
+        dp.ext[2 * i + 1] = t;
     }
+    let DpScratch { ext, alpha, next } = dp;
     let lp = |t: usize, sym: i32| slot_logp[t * vp1 + sym as usize];
 
-    let mut alpha = vec![NEG_INF; s];
+    alpha.clear();
+    alpha.resize(s, NEG_INF);
     alpha[0] = lp(0, ext[0]);
     if s > 1 {
         alpha[1] = lp(0, ext[1]);
     }
-    let mut next = vec![NEG_INF; s];
+    next.clear();
+    next.resize(s, NEG_INF);
     for t in 1..slots {
         for i in 0..s {
             let stay = alpha[i];
@@ -83,7 +113,7 @@ pub fn ctc_marginal_nll(slot_logp: &[f32], slots: usize, vp1: usize,
             };
             next[i] = logsumexp3(stay, step, skip) + lp(t, ext[i]);
         }
-        std::mem::swap(&mut alpha, &mut next);
+        std::mem::swap(alpha, next);
     }
     let last = alpha[s - 1];
     let prev = if s >= 2 { alpha[s - 2] } else { NEG_INF };
@@ -91,35 +121,66 @@ pub fn ctc_marginal_nll(slot_logp: &[f32], slots: usize, vp1: usize,
     -(m + ((last - m).exp() + (prev - m).exp()).max(1e-30).ln())
 }
 
+/// Allocating convenience over [`ctc_marginal_nll_with`].
+pub fn ctc_marginal_nll(slot_logp: &[f32], slots: usize, vp1: usize,
+                        target: &[i32]) -> f32 {
+    let mut dp = DpScratch::default();
+    ctc_marginal_nll_with(&mut dp, slot_logp, slots, vp1, target)
+}
+
+/// Reusable buffers for [`transform_paths_into`].
+#[derive(Debug, Default, Clone)]
+pub struct TransformScratch {
+    collapsed: Vec<i32>,
+    dp: DpScratch,
+}
+
 /// The CTC Transform applied to a batch of raw candidate paths:
 /// collapse each, deduplicate identical candidates (keeping the best score),
 /// drop empties (the all-blank path — the base token alone covers it), and
 /// re-rank by the CTC marginal probability of the collapsed sequence.
+/// Writes into the caller's `PathSet` (sorted by score descending).
 ///
 /// `slot_logp` is `[slots, vp1]` for this sequence; `max_target` caps the
 /// collapsed length used for rescoring (matches the training-time U).
-pub fn transform_paths(raw: &[CandidatePath], slot_logp: &[f32], slots: usize,
-                       vp1: usize, blank: i32, max_target: usize)
-                       -> Vec<CandidatePath> {
-    let mut best: Vec<CandidatePath> = Vec::new();
-    for p in raw {
-        let mut collapsed = collapse(&p.tokens, blank);
-        if collapsed.is_empty() {
+pub fn transform_paths_into<'a, I>(raw: I, slot_logp: &[f32], slots: usize,
+                                   vp1: usize, blank: i32, max_target: usize,
+                                   scratch: &mut TransformScratch,
+                                   out: &mut PathSet)
+where
+    I: IntoIterator<Item = (&'a [i32], f32)>,
+{
+    out.clear();
+    for (tokens, score) in raw {
+        collapse_into(tokens, blank, &mut scratch.collapsed);
+        if scratch.collapsed.is_empty() {
             continue;
         }
-        collapsed.truncate(max_target);
-        if let Some(existing) = best.iter_mut().find(|c| c.tokens == collapsed) {
-            if p.score > existing.score {
-                existing.score = p.score;
-            }
+        scratch.collapsed.truncate(max_target);
+        if let Some(j) =
+            (0..out.len()).find(|&j| out.tokens(j) == scratch.collapsed.as_slice())
+        {
+            out.raise_score(j, score);
             continue;
         }
         // marginal rescoring: sum over all alignments of the collapsed target
-        let nll = ctc_marginal_nll(slot_logp, slots, vp1, &collapsed);
-        best.push(CandidatePath { tokens: collapsed, score: -nll });
+        let nll = ctc_marginal_nll_with(&mut scratch.dp, slot_logp, slots, vp1,
+                                        &scratch.collapsed);
+        out.push(&scratch.collapsed, -nll);
     }
-    best.sort_by(|a, b| b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal));
-    best
+    out.sort_by_score_desc();
+}
+
+/// Allocating convenience over [`transform_paths_into`].
+pub fn transform_paths(raw: &[CandidatePath], slot_logp: &[f32], slots: usize,
+                       vp1: usize, blank: i32, max_target: usize)
+                       -> Vec<CandidatePath> {
+    let mut scratch = TransformScratch::default();
+    let mut out = PathSet::new();
+    transform_paths_into(
+        raw.iter().map(|p| (p.tokens.as_slice(), p.score)),
+        slot_logp, slots, vp1, blank, max_target, &mut scratch, &mut out);
+    out.to_paths()
 }
 
 fn logaddexp(a: f32, b: f32) -> f32 {
@@ -130,6 +191,58 @@ fn logaddexp(a: f32, b: f32) -> f32 {
     m + ((a - m).exp() + (b - m).exp()).ln()
 }
 
+// ------------------------------------------------------ prefix beam search
+
+/// Reusable arenas for [`prefix_beam_search_into`]: double-buffered beam
+/// sets in flat (token arena + span) form, a merge-order index, and the
+/// top-k pick buffer. One `BeamScratch` per drafter; steady-state searches
+/// perform zero heap allocations once capacities are warm.
+#[derive(Debug, Default, Clone)]
+pub struct BeamScratch {
+    cur_tokens: Vec<i32>,
+    cur_spans: Vec<(u32, u32)>,
+    cur_pb: Vec<f32>,
+    cur_pnb: Vec<f32>,
+    /// active beams (≤ beam_width), best-first
+    cur_order: Vec<u32>,
+    nxt_tokens: Vec<i32>,
+    nxt_spans: Vec<(u32, u32)>,
+    nxt_pb: Vec<f32>,
+    nxt_pnb: Vec<f32>,
+    merge_order: Vec<u32>,
+    picks: Vec<usize>,
+}
+
+impl BeamScratch {
+    pub fn new() -> BeamScratch {
+        BeamScratch::default()
+    }
+}
+
+fn reserve_to<T>(v: &mut Vec<T>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+/// Push one candidate (prefix, optional extension symbol) with its
+/// blank-ending / non-blank-ending mass contributions.
+#[inline]
+fn push_cand(tokens: &mut Vec<i32>, spans: &mut Vec<(u32, u32)>,
+             pb: &mut Vec<f32>, pnb: &mut Vec<f32>, prefix: &[i32],
+             ext: Option<i32>, pb_v: f32, pnb_v: f32) {
+    let start = tokens.len() as u32;
+    tokens.extend_from_slice(prefix);
+    let mut len = prefix.len() as u32;
+    if let Some(t) = ext {
+        tokens.push(t);
+        len += 1;
+    }
+    spans.push((start, len));
+    pb.push(pb_v);
+    pnb.push(pnb_v);
+}
+
 /// CTC **prefix beam search** (Hannun et al.): beam-search directly in the
 /// collapsed output space, accumulating the marginal probability of each
 /// prefix over all alignments. This is the drafting-side realization of the
@@ -137,75 +250,176 @@ fn logaddexp(a: f32, b: f32) -> f32 {
 /// β⁻¹-collapsed, ranked by their full CTC marginal, with blanks/repeats
 /// resolved during the search instead of post-hoc.
 ///
-/// `slot_logp`: row-major `[slots, vp1]`, blank = vp1-1. Returns candidate
-/// continuations (non-empty prefixes) sorted by marginal log-probability.
-pub fn prefix_beam_search(slot_logp: &[f32], slots: usize, vp1: usize,
-                          sym_topk: usize, beam_width: usize,
-                          max_len: usize) -> Vec<CandidatePath> {
-    use std::collections::HashMap;
+/// `slot_logp`: row-major `[slots, vp1]`, blank = vp1-1. Fills `out` with
+/// candidate continuations (non-empty prefixes) sorted by marginal
+/// log-probability descending. All work happens in `scratch` — zero heap
+/// allocations once its capacities cover (beam_width, sym_topk, max_len).
+#[allow(clippy::too_many_arguments)]
+pub fn prefix_beam_search_into(scratch: &mut BeamScratch, slot_logp: &[f32],
+                               slots: usize, vp1: usize, sym_topk: usize,
+                               beam_width: usize, max_len: usize,
+                               out: &mut PathSet) {
     let blank = vp1 - 1;
-    // beam entry: prefix -> (logp ending in blank, logp ending in non-blank)
-    let mut beams: HashMap<Vec<i32>, (f32, f32)> = HashMap::new();
-    beams.insert(Vec::new(), (0.0, NEG_INF));
+    let sym_topk = sym_topk.min(vp1);
+    let beam_width = beam_width.max(1);
+    let BeamScratch {
+        cur_tokens, cur_spans, cur_pb, cur_pnb, cur_order,
+        nxt_tokens, nxt_spans, nxt_pb, nxt_pnb, merge_order, picks,
+    } = scratch;
+
+    // worst-case capacities: every (beam, pick) pair yields ≤ 2 candidates
+    let cand_cap = beam_width * sym_topk.max(1) * 2 + 1;
+    for spans in [&mut *cur_spans, &mut *nxt_spans] {
+        reserve_to(spans, cand_cap);
+    }
+    for scores in [&mut *cur_pb, &mut *cur_pnb, &mut *nxt_pb, &mut *nxt_pnb] {
+        reserve_to(scores, cand_cap);
+    }
+    for toks in [&mut *cur_tokens, &mut *nxt_tokens] {
+        reserve_to(toks, cand_cap * (max_len + 1));
+    }
+    reserve_to(cur_order, cand_cap);
+    reserve_to(merge_order, cand_cap);
+    reserve_to(picks, vp1);
+
+    // init: the empty prefix, ending in blank with probability 1
+    cur_tokens.clear();
+    cur_spans.clear();
+    cur_pb.clear();
+    cur_pnb.clear();
+    cur_order.clear();
+    cur_spans.push((0, 0));
+    cur_pb.push(0.0);
+    cur_pnb.push(NEG_INF);
+    cur_order.push(0);
 
     for t in 0..slots {
         let row = &slot_logp[t * vp1..(t + 1) * vp1];
-        let picks = crate::drafters::topk(row, sym_topk.min(vp1));
-        let mut next: HashMap<Vec<i32>, (f32, f32)> = HashMap::new();
-        let bump = |map: &mut HashMap<Vec<i32>, (f32, f32)>,
-                        key: Vec<i32>, is_blank_end: bool, lp: f32| {
-            let e = map.entry(key).or_insert((NEG_INF, NEG_INF));
-            if is_blank_end {
-                e.0 = logaddexp(e.0, lp);
-            } else {
-                e.1 = logaddexp(e.1, lp);
-            }
-        };
-        for (prefix, &(p_b, p_nb)) in &beams {
-            for &s in &picks {
+        topk_into(row, sym_topk, picks);
+        nxt_tokens.clear();
+        nxt_spans.clear();
+        nxt_pb.clear();
+        nxt_pnb.clear();
+        for &bi in cur_order.iter() {
+            let (off, len) = cur_spans[bi as usize];
+            let (off, len) = (off as usize, len as usize);
+            let prefix = &cur_tokens[off..off + len];
+            let (p_b, p_nb) = (cur_pb[bi as usize], cur_pnb[bi as usize]);
+            let last = prefix.last().copied();
+            for &s in picks.iter() {
                 let lp = row[s];
                 if s == blank {
                     // emit nothing; prefix now ends in blank
-                    bump(&mut next, prefix.clone(), true,
-                         logaddexp(p_b, p_nb) + lp);
-                } else if prefix.last() == Some(&(s as i32)) {
+                    push_cand(nxt_tokens, nxt_spans, nxt_pb, nxt_pnb, prefix,
+                              None, logaddexp(p_b, p_nb) + lp, NEG_INF);
+                } else if last == Some(s as i32) {
                     // repeat of the last symbol: collapses into the same
                     // prefix unless a blank separated it
-                    bump(&mut next, prefix.clone(), false, p_nb + lp);
-                    if prefix.len() < max_len {
-                        let mut ext = prefix.clone();
-                        ext.push(s as i32);
-                        bump(&mut next, ext, false, p_b + lp);
+                    push_cand(nxt_tokens, nxt_spans, nxt_pb, nxt_pnb, prefix,
+                              None, NEG_INF, p_nb + lp);
+                    if len < max_len {
+                        push_cand(nxt_tokens, nxt_spans, nxt_pb, nxt_pnb,
+                                  prefix, Some(s as i32), NEG_INF, p_b + lp);
                     }
-                } else if prefix.len() < max_len {
-                    let mut ext = prefix.clone();
-                    ext.push(s as i32);
-                    bump(&mut next, ext, false, logaddexp(p_b, p_nb) + lp);
+                } else if len < max_len {
+                    push_cand(nxt_tokens, nxt_spans, nxt_pb, nxt_pnb, prefix,
+                              Some(s as i32), NEG_INF,
+                              logaddexp(p_b, p_nb) + lp);
                 }
             }
         }
-        // prune to beam_width by total mass
-        let mut entries: Vec<(Vec<i32>, (f32, f32))> = next.into_iter().collect();
-        entries.sort_by(|a, b| {
-            logaddexp(b.1 .0, b.1 .1)
-                .partial_cmp(&logaddexp(a.1 .0, a.1 .1))
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        entries.truncate(beam_width);
-        beams = entries.into_iter().collect();
+
+        // merge candidates with identical prefixes. Sorting by prefix
+        // content (then insertion index) groups duplicates and fixes the
+        // logaddexp fold order — fully deterministic, unlike hash-map
+        // iteration.
+        merge_order.clear();
+        merge_order.extend(0..nxt_spans.len() as u32);
+        {
+            let key = |i: u32| {
+                let (s, l) = nxt_spans[i as usize];
+                &nxt_tokens[s as usize..(s + l) as usize]
+            };
+            merge_order.sort_unstable_by(|&a, &b| {
+                key(a).cmp(key(b)).then(a.cmp(&b))
+            });
+        }
+        cur_tokens.clear();
+        cur_spans.clear();
+        cur_pb.clear();
+        cur_pnb.clear();
+        let mut g = 0usize;
+        while g < merge_order.len() {
+            let gi = merge_order[g] as usize;
+            let (gs, gl) = nxt_spans[gi];
+            let (mut pb_m, mut pnb_m) = (nxt_pb[gi], nxt_pnb[gi]);
+            let mut h = g + 1;
+            while h < merge_order.len() {
+                let hi = merge_order[h] as usize;
+                let (hs, hl) = nxt_spans[hi];
+                if nxt_tokens[gs as usize..(gs + gl) as usize]
+                    != nxt_tokens[hs as usize..(hs + hl) as usize]
+                {
+                    break;
+                }
+                pb_m = logaddexp(pb_m, nxt_pb[hi]);
+                pnb_m = logaddexp(pnb_m, nxt_pnb[hi]);
+                h += 1;
+            }
+            let start = cur_tokens.len() as u32;
+            cur_tokens
+                .extend_from_slice(&nxt_tokens[gs as usize..(gs + gl) as usize]);
+            cur_spans.push((start, gl));
+            cur_pb.push(pb_m);
+            cur_pnb.push(pnb_m);
+            g = h;
+        }
+
+        // prune to beam_width by total mass (ties: prefix content, index)
+        cur_order.clear();
+        cur_order.extend(0..cur_spans.len() as u32);
+        {
+            let key = |i: u32| {
+                let (s, l) = cur_spans[i as usize];
+                &cur_tokens[s as usize..(s + l) as usize]
+            };
+            let mass = |i: u32| {
+                logaddexp(cur_pb[i as usize], cur_pnb[i as usize])
+            };
+            cur_order.sort_unstable_by(|&a, &b| {
+                mass(b)
+                    .partial_cmp(&mass(a))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then_with(|| key(a).cmp(key(b)))
+                    .then(a.cmp(&b))
+            });
+        }
+        cur_order.truncate(beam_width);
     }
 
-    let mut out: Vec<CandidatePath> = beams
-        .into_iter()
-        .filter(|(p, _)| !p.is_empty())
-        .map(|(tokens, (p_b, p_nb))| CandidatePath {
-            tokens,
-            score: logaddexp(p_b, p_nb),
-        })
-        .collect();
-    out.sort_by(|a, b| b.score.partial_cmp(&a.score)
-        .unwrap_or(std::cmp::Ordering::Equal));
-    out
+    out.clear();
+    for &bi in cur_order.iter() {
+        let (off, len) = cur_spans[bi as usize];
+        if len == 0 {
+            continue;
+        }
+        out.push(
+            &cur_tokens[off as usize..(off + len) as usize],
+            logaddexp(cur_pb[bi as usize], cur_pnb[bi as usize]),
+        );
+    }
+    out.sort_by_score_desc();
+}
+
+/// Allocating convenience over [`prefix_beam_search_into`].
+pub fn prefix_beam_search(slot_logp: &[f32], slots: usize, vp1: usize,
+                          sym_topk: usize, beam_width: usize,
+                          max_len: usize) -> Vec<CandidatePath> {
+    let mut scratch = BeamScratch::new();
+    let mut out = PathSet::new();
+    prefix_beam_search_into(&mut scratch, slot_logp, slots, vp1, sym_topk,
+                            beam_width, max_len, &mut out);
+    out.to_paths()
 }
 
 #[cfg(test)]
@@ -221,6 +435,17 @@ mod tests {
         assert_eq!(collapse(&[1, 1, 1], BLANK), vec![1]);
         assert_eq!(collapse(&[], BLANK), Vec::<i32>::new());
         assert_eq!(collapse(&[BLANK, 4, BLANK], BLANK), vec![4]);
+    }
+
+    #[test]
+    fn collapse_into_reuses_buffer() {
+        let mut buf = Vec::with_capacity(8);
+        collapse_into(&[5, 5, BLANK, 5, 7], BLANK, &mut buf);
+        assert_eq!(buf, vec![5, 5, 7]);
+        let ptr = buf.as_ptr();
+        collapse_into(&[1, 1, 1], BLANK, &mut buf);
+        assert_eq!(buf, vec![1]);
+        assert_eq!(ptr, buf.as_ptr(), "buffer must not reallocate");
     }
 
     #[test]
@@ -292,6 +517,22 @@ mod tests {
     }
 
     #[test]
+    fn marginal_with_scratch_matches_and_reuses() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        let (slots, vp1) = (6, 9);
+        let mut dp = DpScratch::default();
+        for _ in 0..20 {
+            let lp = crate::testkit::gen::logp_matrix(&mut rng, slots, vp1);
+            let ulen = rng.below(5);
+            let target: Vec<i32> =
+                (0..ulen).map(|_| rng.below(vp1 - 1) as i32).collect();
+            let a = ctc_marginal_nll(&lp, slots, vp1, &target);
+            let b = ctc_marginal_nll_with(&mut dp, &lp, slots, vp1, &target);
+            assert_eq!(a, b, "scratch DP diverged from allocating DP");
+        }
+    }
+
+    #[test]
     fn transform_dedupes_and_ranks() {
         let (slots, vp1) = (4, 6);
         let blank = (vp1 - 1) as i32;
@@ -335,5 +576,145 @@ mod tests {
         }
         let nll = ctc_marginal_nll(&lp, slots, vp1, &[0, 1]);
         assert!(nll.abs() < 1e-3, "forced alignment should have prob 1, nll={nll}");
+    }
+
+    // ------------------------------------------ beam-search equivalence
+    /// Straightforward map-based reference of the prefix beam search (the
+    /// pre-arena implementation), used to pin the arena version's math.
+    fn reference_beam_search(slot_logp: &[f32], slots: usize, vp1: usize,
+                             sym_topk: usize, beam_width: usize,
+                             max_len: usize) -> Vec<CandidatePath> {
+        use std::collections::BTreeMap;
+        let blank = vp1 - 1;
+        let mut beams: BTreeMap<Vec<i32>, (f32, f32)> = BTreeMap::new();
+        beams.insert(Vec::new(), (0.0, NEG_INF));
+        for t in 0..slots {
+            let row = &slot_logp[t * vp1..(t + 1) * vp1];
+            let picks = crate::drafters::topk(row, sym_topk.min(vp1));
+            let mut next: BTreeMap<Vec<i32>, (f32, f32)> = BTreeMap::new();
+            let bump = |map: &mut BTreeMap<Vec<i32>, (f32, f32)>,
+                        key: Vec<i32>, blank_end: bool, lp: f32| {
+                let e = map.entry(key).or_insert((NEG_INF, NEG_INF));
+                if blank_end {
+                    e.0 = logaddexp(e.0, lp);
+                } else {
+                    e.1 = logaddexp(e.1, lp);
+                }
+            };
+            for (prefix, &(p_b, p_nb)) in &beams {
+                for &s in &picks {
+                    let lp = row[s];
+                    if s == blank {
+                        bump(&mut next, prefix.clone(), true,
+                             logaddexp(p_b, p_nb) + lp);
+                    } else if prefix.last() == Some(&(s as i32)) {
+                        bump(&mut next, prefix.clone(), false, p_nb + lp);
+                        if prefix.len() < max_len {
+                            let mut ext = prefix.clone();
+                            ext.push(s as i32);
+                            bump(&mut next, ext, false, p_b + lp);
+                        }
+                    } else if prefix.len() < max_len {
+                        let mut ext = prefix.clone();
+                        ext.push(s as i32);
+                        bump(&mut next, ext, false, logaddexp(p_b, p_nb) + lp);
+                    }
+                }
+            }
+            let mut entries: Vec<(Vec<i32>, (f32, f32))> =
+                next.into_iter().collect();
+            entries.sort_by(|a, b| {
+                logaddexp(b.1 .0, b.1 .1)
+                    .partial_cmp(&logaddexp(a.1 .0, a.1 .1))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            entries.truncate(beam_width);
+            beams = entries.into_iter().collect();
+        }
+        let mut out: Vec<CandidatePath> = beams
+            .into_iter()
+            .filter(|(p, _)| !p.is_empty())
+            .map(|(tokens, (p_b, p_nb))| CandidatePath {
+                tokens,
+                score: logaddexp(p_b, p_nb),
+            })
+            .collect();
+        out.sort_by(|a, b| {
+            b.score.partial_cmp(&a.score).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        out
+    }
+
+    #[test]
+    fn arena_beam_search_matches_reference() {
+        // beam width chosen ABOVE the worst-case candidate count
+        // (1*(topk+1) -> ^slots), so pruning never binds and the two
+        // implementations must produce the exact same candidate *set*; the
+        // logaddexp fold order differs, so scores get float slack.
+        let mut rng = crate::util::rng::Rng::new(42);
+        for case in 0..12 {
+            let slots = 2 + rng.below(2); // 2..3
+            let vp1 = 4 + rng.below(6);
+            let lp = crate::testkit::gen::logp_matrix(&mut rng, slots, vp1);
+            let (topk, width, max_len) = (2, 64, 1 + rng.below(3));
+            let got = prefix_beam_search(&lp, slots, vp1, topk, width, max_len);
+            let want =
+                reference_beam_search(&lp, slots, vp1, topk, width, max_len);
+            assert_eq!(got.len(), want.len(), "case {case}: beam count");
+            for w in &want {
+                let g = got
+                    .iter()
+                    .find(|g| g.tokens == w.tokens)
+                    .unwrap_or_else(|| panic!("case {case}: missing {:?}",
+                                              w.tokens));
+                assert!((g.score - w.score).abs() < 1e-3,
+                        "case {case}: score {} vs {}", g.score, w.score);
+            }
+        }
+    }
+
+    #[test]
+    fn beam_search_respects_width_and_length_caps() {
+        let mut rng = crate::util::rng::Rng::new(9);
+        let (slots, vp1) = (8, 24);
+        let lp = crate::testkit::gen::logp_matrix(&mut rng, slots, vp1);
+        for width in [1usize, 2, 5, 16] {
+            for max_len in [1usize, 3, 6] {
+                let out =
+                    prefix_beam_search(&lp, slots, vp1, 5, width, max_len);
+                assert!(out.len() <= width, "width {width} violated");
+                assert!(out.iter().all(|p| p.tokens.len() <= max_len),
+                        "max_len {max_len} violated");
+                for w in out.windows(2) {
+                    assert!(w[0].score >= w[1].score, "not sorted");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn beam_search_into_is_deterministic_and_alloc_stable() {
+        let mut rng = crate::util::rng::Rng::new(3);
+        let (slots, vp1) = (6, 12);
+        let lp = crate::testkit::gen::logp_matrix(&mut rng, slots, vp1);
+        let mut scratch = BeamScratch::new();
+        let mut out = PathSet::new();
+        prefix_beam_search_into(&mut scratch, &lp, slots, vp1, 4, 6, 4,
+                                &mut out);
+        let first: Vec<(Vec<i32>, f32)> = out
+            .iter_sorted()
+            .map(|(t, s)| (t.to_vec(), s))
+            .collect();
+        assert!(!first.is_empty());
+        // re-running with warm scratch must reproduce byte-identical output
+        for _ in 0..3 {
+            prefix_beam_search_into(&mut scratch, &lp, slots, vp1, 4, 6, 4,
+                                    &mut out);
+            let again: Vec<(Vec<i32>, f32)> = out
+                .iter_sorted()
+                .map(|(t, s)| (t.to_vec(), s))
+                .collect();
+            assert_eq!(first, again, "beam search output not deterministic");
+        }
     }
 }

@@ -6,15 +6,25 @@
 //! the engine merges them into a token tree and verifies in one base-model
 //! pass. Timing of graph execution vs host-side transform is reported
 //! separately so Fig-3's breakdown can be reproduced.
+//!
+//! Hot-path contract (PR 3): drafters read per-sequence state through the
+//! borrowing `DraftSource` view (no hidden-window clones) and write
+//! candidates into caller-owned `PathSet` arenas, so the steady-state
+//! draft→transform stage performs no heap allocation on the default CTC
+//! path (the XLA tensor/literal boundary is the documented exception). The
+//! per-round tree width/depth comes in as a `DraftPlan` from the engine's
+//! `adapt::BetaController`.
 
 use anyhow::Result;
 
+use crate::adapt::DraftPlan;
 use crate::config::EngineConfig;
 use crate::ctc;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::Runtime;
 
-/// One candidate continuation after the base token.
+/// One candidate continuation after the base token (owned form; the hot
+/// path uses `PathSet` arenas instead).
 #[derive(Debug, Clone, PartialEq)]
 pub struct CandidatePath {
     pub tokens: Vec<i32>,
@@ -22,14 +32,162 @@ pub struct CandidatePath {
     pub score: f32,
 }
 
-/// Per-sequence inputs a drafter may use.
-pub struct DraftCtx {
+// ---------------------------------------------------------------- PathSet
+/// Flat arena of candidate paths: one shared token buffer plus span/score
+/// arrays and a sort-order index. `clear` keeps capacity, so a per-slot
+/// `PathSet` reused across rounds performs zero heap allocations in steady
+/// state.
+#[derive(Debug, Default, Clone)]
+pub struct PathSet {
+    tokens: Vec<i32>,
+    /// (start, len) into `tokens`
+    spans: Vec<(u32, u32)>,
+    scores: Vec<f32>,
+    /// indices into `spans` sorted by score desc (valid after `sort_...`)
+    order: Vec<u32>,
+    sorted: bool,
+}
+
+impl PathSet {
+    pub fn new() -> PathSet {
+        PathSet::default()
+    }
+
+    /// Pre-size for `paths` candidates of up to `path_len` tokens each.
+    pub fn with_capacity(paths: usize, path_len: usize) -> PathSet {
+        PathSet {
+            tokens: Vec::with_capacity(paths * path_len),
+            spans: Vec::with_capacity(paths),
+            scores: Vec::with_capacity(paths),
+            order: Vec::with_capacity(paths),
+            sorted: false,
+        }
+    }
+
+    pub fn clear(&mut self) {
+        self.tokens.clear();
+        self.spans.clear();
+        self.scores.clear();
+        self.order.clear();
+        self.sorted = false;
+    }
+
+    pub fn push(&mut self, tokens: &[i32], score: f32) {
+        let start = self.tokens.len() as u32;
+        self.tokens.extend_from_slice(tokens);
+        self.spans.push((start, tokens.len() as u32));
+        self.scores.push(score);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    pub fn tokens(&self, i: usize) -> &[i32] {
+        let (s, l) = self.spans[i];
+        &self.tokens[s as usize..(s + l) as usize]
+    }
+
+    pub fn score(&self, i: usize) -> f32 {
+        self.scores[i]
+    }
+
+    /// Raise path `i`'s score to `s` if higher (dedupe keep-best).
+    pub fn raise_score(&mut self, i: usize, s: f32) {
+        if s > self.scores[i] {
+            self.scores[i] = s;
+            self.sorted = false;
+        }
+    }
+
+    /// Sort the iteration order by score descending; ties break by token
+    /// content then insertion index, so the order is total and
+    /// deterministic. In-place (`sort_unstable`), no allocation once
+    /// `order` capacity is warm.
+    pub fn sort_by_score_desc(&mut self) {
+        self.order.clear();
+        self.order.extend(0..self.spans.len() as u32);
+        let spans = &self.spans;
+        let scores = &self.scores;
+        let tokens = &self.tokens;
+        let slice = |i: u32| {
+            let (s, l) = spans[i as usize];
+            &tokens[s as usize..(s + l) as usize]
+        };
+        self.order.sort_unstable_by(|&a, &b| {
+            scores[b as usize]
+                .partial_cmp(&scores[a as usize])
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then_with(|| slice(a).cmp(slice(b)))
+                .then(a.cmp(&b))
+        });
+        self.sorted = true;
+    }
+
+    /// Paths in score-descending order (requires `sort_by_score_desc`).
+    pub fn iter_sorted(&self) -> impl Iterator<Item = (&[i32], f32)> + '_ {
+        debug_assert!(self.sorted || self.len() <= 1,
+                      "iter_sorted before sort_by_score_desc");
+        let identity = !self.sorted;
+        (0..self.len()).map(move |r| {
+            let i = if identity { r } else { self.order[r] as usize };
+            (self.tokens(i), self.scores[i])
+        })
+    }
+
+    /// Owned copy in sorted order (tests / compat shims).
+    pub fn to_paths(&self) -> Vec<CandidatePath> {
+        self.iter_sorted()
+            .map(|(t, s)| CandidatePath { tokens: t.to_vec(), score: s })
+            .collect()
+    }
+}
+
+// ------------------------------------------------------------ draft inputs
+/// Per-sequence inputs a drafter may use — borrowed straight from the
+/// engine's slot state (no per-round clones).
+pub struct DraftCtx<'a> {
     /// right-aligned hidden window `[W, D]` (newest last)
-    pub hidden_window: Vec<f32>,
+    pub hidden_window: &'a [f32],
     pub win_len: usize,
     /// hidden state of the newest accepted token `[D]`
+    pub last_hidden: &'a [f32],
+    pub base_token: i32,
+}
+
+/// Borrowing view over the decode batch: `batch()` is the padded graph
+/// batch size, `ctx(i)` is None for inactive/mid-prefill slots. Implemented
+/// by the engine over its slot array and by owned test fixtures.
+pub trait DraftSource {
+    fn batch(&self) -> usize;
+    fn ctx(&self, slot: usize) -> Option<DraftCtx<'_>>;
+}
+
+/// Owned context (tests and harnesses that have no engine slots).
+pub struct OwnedDraftCtx {
+    pub hidden_window: Vec<f32>,
+    pub win_len: usize,
     pub last_hidden: Vec<f32>,
     pub base_token: i32,
+}
+
+impl DraftSource for [Option<OwnedDraftCtx>] {
+    fn batch(&self) -> usize {
+        self.len()
+    }
+    fn ctx(&self, slot: usize) -> Option<DraftCtx<'_>> {
+        self[slot].as_ref().map(|c| DraftCtx {
+            hidden_window: &c.hidden_window,
+            win_len: c.win_len,
+            last_hidden: &c.last_hidden,
+            base_token: c.base_token,
+        })
+    }
 }
 
 /// Draft timing split for the Fig-3 breakdown.
@@ -44,25 +202,21 @@ pub struct DraftTiming {
 pub trait Drafter {
     fn name(&self) -> &'static str;
 
-    /// Produce candidate paths for each context (None = inactive slot).
-    /// Returns one Vec per input slot (empty for None/vanilla).
-    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
-             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>>;
+    /// Produce candidate paths for each slot of `src` into `out[slot]`
+    /// (one `PathSet` per slot; the callee clears each and leaves it sorted
+    /// by score descending — empty for inactive slots / vanilla). `plan`
+    /// carries the β-controller's per-round width/depth budget.
+    fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
+             plan: DraftPlan, timing: &mut DraftTiming,
+             out: &mut [PathSet]) -> Result<()>;
 }
 
 pub fn make_drafter(cfg: &EngineConfig) -> Box<dyn Drafter> {
     use crate::config::Method::*;
     match cfg.method {
         Vanilla => Box::new(VanillaDrafter),
-        Ctc => Box::new(CtcDrafter {
-            slot_topk: cfg.slot_topk,
-            max_paths: cfg.max_paths,
-            transform: cfg.ctc_transform,
-        }),
-        Medusa => Box::new(MedusaDrafter {
-            head_topk: cfg.slot_topk,
-            max_paths: cfg.max_paths,
-        }),
+        Ctc => Box::new(CtcDrafter::new(cfg.slot_topk, cfg.ctc_transform)),
+        Medusa => Box::new(MedusaDrafter { head_topk: cfg.slot_topk }),
         Hydra => Box::new(HydraDrafter),
     }
 }
@@ -76,47 +230,61 @@ pub fn log_softmax_row(row: &mut [f32]) {
     }
 }
 
-/// Indices of the k largest entries, descending.
-pub fn topk(row: &[f32], k: usize) -> Vec<usize> {
-    let mut idx: Vec<usize> = (0..row.len()).collect();
+/// Indices of the k largest entries, descending, into a reusable buffer
+/// (no allocation once `out`'s capacity covers `row.len()`).
+pub fn topk_into(row: &[f32], k: usize, out: &mut Vec<usize>) {
+    out.clear();
     let k = k.min(row.len());
-    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-        row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal)
-    });
-    idx.truncate(k);
-    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap_or(std::cmp::Ordering::Equal));
-    idx
+    if k == 0 {
+        return;
+    }
+    out.extend(0..row.len());
+    let cmp = |a: &usize, b: &usize| {
+        row[*b].partial_cmp(&row[*a]).unwrap_or(std::cmp::Ordering::Equal)
+    };
+    out.select_nth_unstable_by(k - 1, cmp);
+    out.truncate(k);
+    out.sort_unstable_by(cmp);
 }
 
-fn active_count(ctxs: &[Option<DraftCtx>]) -> usize {
-    ctxs.iter().filter(|c| c.is_some()).count()
+/// Indices of the k largest entries, descending (allocating convenience).
+pub fn topk(row: &[f32], k: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(row.len());
+    topk_into(row, k, &mut out);
+    out
 }
 
-/// Pack hidden windows into `[gb, W, D]` + win_len `[gb]` tensors.
-fn pack_windows(rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+fn active_count(src: &dyn DraftSource) -> usize {
+    (0..src.batch()).filter(|&i| src.ctx(i).is_some()).count()
+}
+
+/// Pack hidden windows into `[gb, W, D]` + win_len `[gb]` tensors. The
+/// tensor build is the XLA boundary — the one place the draft stage still
+/// allocates (literal buffers are owned by the runtime call).
+fn pack_windows(rt: &Runtime, model: &str, src: &dyn DraftSource,
                 gb: usize) -> Result<(Tensor, Tensor)> {
     let c = &rt.manifest.constants;
     let d = rt.manifest.model(model)?.config.d_model;
     let w = c.hidden_win;
     let mut win = vec![0f32; gb * w * d];
     let mut win_len = vec![1i32; gb]; // padded slots: pretend 1 valid row
-    for (i, ctx) in ctxs.iter().enumerate() {
-        if let Some(ctx) = ctx {
+    for i in 0..src.batch().min(gb) {
+        if let Some(ctx) = src.ctx(i) {
             debug_assert_eq!(ctx.hidden_window.len(), w * d);
-            win[i * w * d..(i + 1) * w * d].copy_from_slice(&ctx.hidden_window);
+            win[i * w * d..(i + 1) * w * d].copy_from_slice(ctx.hidden_window);
             win_len[i] = ctx.win_len.max(1) as i32;
         }
     }
     Ok((Tensor::from_f32(&[gb, w, d], win), Tensor::from_i32(&[gb], win_len)))
 }
 
-fn pack_hidden(rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
+fn pack_hidden(rt: &Runtime, model: &str, src: &dyn DraftSource,
                gb: usize) -> Result<Tensor> {
     let d = rt.manifest.model(model)?.config.d_model;
     let mut hidden = vec![0f32; gb * d];
-    for (i, ctx) in ctxs.iter().enumerate() {
-        if let Some(ctx) = ctx {
-            hidden[i * d..(i + 1) * d].copy_from_slice(&ctx.last_hidden);
+    for i in 0..src.batch().min(gb) {
+        if let Some(ctx) = src.ctx(i) {
+            hidden[i * d..(i + 1) * d].copy_from_slice(ctx.last_hidden);
         }
     }
     Ok(Tensor::from_f32(&[gb, d], hidden))
@@ -130,48 +298,120 @@ impl Drafter for VanillaDrafter {
     fn name(&self) -> &'static str {
         "vanilla"
     }
-    fn draft(&mut self, _rt: &Runtime, _model: &str, ctxs: &[Option<DraftCtx>],
-             _timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
-        Ok(ctxs.iter().map(|_| Vec::new()).collect())
+    fn draft(&mut self, _rt: &Runtime, _model: &str, _src: &dyn DraftSource,
+             _plan: DraftPlan, _timing: &mut DraftTiming,
+             out: &mut [PathSet]) -> Result<()> {
+        for o in out.iter_mut() {
+            o.clear();
+        }
+        Ok(())
     }
 }
 
 // ================================================================ CTC
-/// The paper's drafter: slot distributions over V+1 → beam expansion over
-/// slots → CTC Transform (collapse, dedupe, marginal rescoring).
+/// The paper's drafter: slot distributions over V+1 → prefix beam search in
+/// the collapsed output space (the CTC Transform realized drafting-side).
 pub struct CtcDrafter {
     pub slot_topk: usize,
-    pub max_paths: usize,
     /// false = Table-2 ablation ("Medusa verify"): raw paths are kept,
     /// blanks are surrogated with <pad> — spoiling draft quality exactly as
     /// the paper reports.
     pub transform: bool,
+    /// reusable beam-search arenas (zero-alloc steady state)
+    beam: ctc::BeamScratch,
+    /// ablation-path expansion scratch
+    raw: PathSet,
+    raw_next: PathSet,
+    picks: Vec<usize>,
 }
 
 impl CtcDrafter {
-    /// Beam expansion over slots: at each slot extend every beam with the
-    /// slot's top-k symbols, keep the `max_paths` best by summed log-prob.
-    fn expand(&self, slot_logp: &[f32], slots: usize, vp1: usize)
-              -> Vec<CandidatePath> {
-        let mut beams: Vec<CandidatePath> =
-            vec![CandidatePath { tokens: Vec::new(), score: 0.0 }];
+    pub fn new(slot_topk: usize, transform: bool) -> CtcDrafter {
+        CtcDrafter {
+            slot_topk,
+            transform,
+            beam: ctc::BeamScratch::new(),
+            raw: PathSet::new(),
+            raw_next: PathSet::new(),
+            picks: Vec::new(),
+        }
+    }
+
+    /// Beam expansion over slots (ablation path, no β⁻¹): at each slot
+    /// extend every beam with the slot's top-k symbols, keep the
+    /// `max_paths` best by summed log-prob. Blanks are mapped to
+    /// `pad_token`. Writes into `out` via the double-buffered scratch sets.
+    fn expand_into(&mut self, slot_logp: &[f32], slots: usize, vp1: usize,
+                   max_paths: usize, blank: i32, pad_token: i32,
+                   out: &mut PathSet) {
+        let cur = &mut self.raw;
+        let next = &mut self.raw_next;
+        cur.clear();
+        cur.push(&[], 0.0);
+        cur.sort_by_score_desc();
         for s in 0..slots {
             let row = &slot_logp[s * vp1..(s + 1) * vp1];
-            let picks = topk(row, self.slot_topk);
-            let mut next = Vec::with_capacity(beams.len() * picks.len());
-            for b in &beams {
-                for &p in &picks {
-                    let mut tokens = b.tokens.clone();
-                    tokens.push(p as i32);
-                    next.push(CandidatePath { tokens, score: b.score + row[p] });
+            topk_into(row, self.slot_topk, &mut self.picks);
+            next.clear();
+            for (tokens, score) in cur.iter_sorted() {
+                for &p in self.picks.iter() {
+                    let tok = if p as i32 == blank { pad_token } else { p as i32 };
+                    // push prefix + tok without an intermediate Vec
+                    next.push(tokens, score + row[p]);
+                    let i = next.len() - 1;
+                    next.append_token(i, tok);
                 }
             }
-            next.sort_by(|a, b| b.score.partial_cmp(&a.score)
-                .unwrap_or(std::cmp::Ordering::Equal));
-            next.truncate(self.max_paths);
-            beams = next;
+            next.sort_by_score_desc();
+            next.truncate_sorted(max_paths);
+            std::mem::swap(cur, next);
         }
-        beams
+        out.clear();
+        for (tokens, score) in cur.iter_sorted() {
+            out.push(tokens, score);
+        }
+        out.sort_by_score_desc();
+    }
+}
+
+impl PathSet {
+    /// Append one token to path `i` — only valid for the most recently
+    /// pushed path (its span is the arena tail).
+    fn append_token(&mut self, i: usize, tok: i32) {
+        let (s, l) = self.spans[i];
+        debug_assert_eq!((s + l) as usize, self.tokens.len(),
+                         "append_token on a non-tail path");
+        self.tokens.push(tok);
+        self.spans[i] = (s, l + 1);
+        self.sorted = false;
+    }
+
+    /// Keep only the best `k` paths of the current sorted order, compacting
+    /// spans/scores (token arena is left as-is; it is cleared next round).
+    fn truncate_sorted(&mut self, k: usize) {
+        debug_assert!(self.sorted || self.len() <= 1);
+        if self.len() <= k {
+            return;
+        }
+        // move rank r's span/score to position r (in-place permutation by
+        // swaps; order entries pointing at a swapped-away slot are patched)
+        for r in 0..k {
+            let src = self.order[r] as usize;
+            debug_assert!(src >= r, "order entry resolved behind the cursor");
+            self.spans.swap(r, src);
+            self.scores.swap(r, src);
+            for o in self.order.iter_mut().skip(r + 1) {
+                if *o as usize == r {
+                    *o = src as u32;
+                }
+            }
+        }
+        self.spans.truncate(k);
+        self.scores.truncate(k);
+        self.order.clear();
+        self.order.extend(0..k as u32);
+        // ranks 0..k already in score order after the compaction above
+        self.sorted = true;
     }
 }
 
@@ -180,63 +420,58 @@ impl Drafter for CtcDrafter {
         "ctc"
     }
 
-    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
-             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
-        if active_count(ctxs) == 0 {
-            return Ok(ctxs.iter().map(|_| Vec::new()).collect());
+    fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
+             plan: DraftPlan, timing: &mut DraftTiming,
+             out: &mut [PathSet]) -> Result<()> {
+        for o in out.iter_mut() {
+            o.clear();
         }
-        let c = rt.manifest.constants.clone();
-        let gb = rt.manifest.pick_batch(ctxs.len());
-        let (win, win_len) = pack_windows(rt, model, ctxs, gb)?;
+        if active_count(src) == 0 {
+            return Ok(());
+        }
+        let gb = rt.manifest.pick_batch(src.batch());
+        let (win, win_len) = pack_windows(rt, model, src, gb)?;
 
         let t0 = std::time::Instant::now();
-        let out = rt.run_draft(model, "ctc", gb, &[win, win_len])?;
+        let graph_out = rt.run_draft(model, "ctc", gb, &[win, win_len])?;
         timing.graph_secs += t0.elapsed().as_secs_f64();
 
-        let slot_logp = out[0].f32_data()?;
+        let slot_logp = graph_out[0].f32_data()?;
+        let c = &rt.manifest.constants;
         let (slots, vp1) = (c.draft_slots, c.vocab_size + 1);
         let blank = c.blank_id as i32;
+        let pad = c.pad_id;
+        let max_len = plan.max_len.min(c.ctc_target_u).max(1);
 
         let t1 = std::time::Instant::now();
-        let mut results = Vec::with_capacity(ctxs.len());
-        for (i, ctx) in ctxs.iter().enumerate() {
-            if ctx.is_none() {
-                results.push(Vec::new());
+        for i in 0..src.batch().min(out.len()) {
+            if src.ctx(i).is_none() {
                 continue;
             }
             let lp = &slot_logp[i * slots * vp1..(i + 1) * slots * vp1];
-            let paths = if self.transform {
+            if self.transform {
                 // CTC transform realized as prefix beam search: candidates
                 // come out collapsed + marginal-scored in one pass
-                ctc::prefix_beam_search(lp, slots, vp1, self.slot_topk + 3,
-                                        self.max_paths, c.ctc_target_u)
+                ctc::prefix_beam_search_into(
+                    &mut self.beam, lp, slots, vp1, self.slot_topk + 3,
+                    plan.max_paths, max_len, &mut out[i]);
             } else {
-                let raw = self.expand(lp, slots, vp1);
                 // ablation: skip β⁻¹; blanks become <pad> tokens in the tree
-                raw.into_iter()
-                    .map(|mut p| {
-                        for t in p.tokens.iter_mut() {
-                            if *t == blank {
-                                *t = c.pad_id;
-                            }
-                        }
-                        p
-                    })
-                    .collect()
-            };
-            results.push(paths);
+                self.expand_into(lp, slots, vp1, plan.max_paths, blank, pad,
+                                 &mut out[i]);
+            }
         }
         timing.transform_secs += t1.elapsed().as_secs_f64();
-        Ok(results)
+        Ok(())
     }
 }
 
 // ================================================================ Medusa
 /// Medusa-1 baseline: K independent heads, head i predicts offset i+1.
-/// Candidates are the top-k product combinations (beam-pruned).
+/// Candidates are the top-k product combinations (beam-pruned). Host-side
+/// expansion allocates (baseline path — not the paper's hot path).
 pub struct MedusaDrafter {
     pub head_topk: usize,
-    pub max_paths: usize,
 }
 
 impl Drafter for MedusaDrafter {
@@ -244,37 +479,41 @@ impl Drafter for MedusaDrafter {
         "medusa"
     }
 
-    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
-             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
-        if active_count(ctxs) == 0 {
-            return Ok(ctxs.iter().map(|_| Vec::new()).collect());
+    fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
+             plan: DraftPlan, timing: &mut DraftTiming,
+             out: &mut [PathSet]) -> Result<()> {
+        for o in out.iter_mut() {
+            o.clear();
         }
-        let c = rt.manifest.constants.clone();
-        let gb = rt.manifest.pick_batch(ctxs.len());
-        let hidden = pack_hidden(rt, model, ctxs, gb)?;
+        if active_count(src) == 0 {
+            return Ok(());
+        }
+        let gb = rt.manifest.pick_batch(src.batch());
+        let hidden = pack_hidden(rt, model, src, gb)?;
 
         let t0 = std::time::Instant::now();
-        let out = rt.run_draft(model, "medusa", gb, &[hidden])?;
+        let graph_out = rt.run_draft(model, "medusa", gb, &[hidden])?;
         timing.graph_secs += t0.elapsed().as_secs_f64();
 
-        let logits = out[0].f32_data()?;
+        let logits = graph_out[0].f32_data()?;
+        let c = &rt.manifest.constants;
         let (heads, v) = (c.medusa_heads, c.vocab_size);
 
         let t1 = std::time::Instant::now();
-        let mut results = Vec::with_capacity(ctxs.len());
-        for (i, ctx) in ctxs.iter().enumerate() {
-            if ctx.is_none() {
-                results.push(Vec::new());
+        for i in 0..src.batch().min(out.len()) {
+            if src.ctx(i).is_none() {
                 continue;
             }
             // per-head log-softmax then beam product over heads
             let mut rows: Vec<Vec<f32>> = Vec::with_capacity(heads);
             for h in 0..heads {
-                let mut row = logits[(i * heads + h) * v..(i * heads + h + 1) * v].to_vec();
+                let mut row =
+                    logits[(i * heads + h) * v..(i * heads + h + 1) * v].to_vec();
                 log_softmax_row(&mut row);
                 rows.push(row);
             }
-            let mut beams = vec![CandidatePath { tokens: Vec::new(), score: 0.0 }];
+            let mut beams =
+                vec![CandidatePath { tokens: Vec::new(), score: 0.0 }];
             for row in &rows {
                 let picks = topk(row, self.head_topk);
                 let mut next = Vec::with_capacity(beams.len() * picks.len());
@@ -282,18 +521,26 @@ impl Drafter for MedusaDrafter {
                     for &p in &picks {
                         let mut tokens = b.tokens.clone();
                         tokens.push(p as i32);
-                        next.push(CandidatePath { tokens, score: b.score + row[p] });
+                        next.push(CandidatePath {
+                            tokens,
+                            score: b.score + row[p],
+                        });
                     }
                 }
-                next.sort_by(|a, b| b.score.partial_cmp(&a.score)
-                    .unwrap_or(std::cmp::Ordering::Equal));
-                next.truncate(self.max_paths);
+                next.sort_unstable_by(|a, b| {
+                    b.score.partial_cmp(&a.score)
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                });
+                next.truncate(plan.max_paths);
                 beams = next;
             }
-            results.push(beams);
+            for b in &beams {
+                out[i].push(&b.tokens, b.score);
+            }
+            out[i].sort_by_score_desc();
         }
         timing.transform_secs += t1.elapsed().as_secs_f64();
-        Ok(results)
+        Ok(())
     }
 }
 
@@ -307,46 +554,47 @@ impl Drafter for HydraDrafter {
         "hydra"
     }
 
-    fn draft(&mut self, rt: &Runtime, model: &str, ctxs: &[Option<DraftCtx>],
-             timing: &mut DraftTiming) -> Result<Vec<Vec<CandidatePath>>> {
-        if active_count(ctxs) == 0 {
-            return Ok(ctxs.iter().map(|_| Vec::new()).collect());
+    fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
+             plan: DraftPlan, timing: &mut DraftTiming,
+             out: &mut [PathSet]) -> Result<()> {
+        for o in out.iter_mut() {
+            o.clear();
         }
-        let c = rt.manifest.constants.clone();
-        let gb = rt.manifest.pick_batch(ctxs.len());
-        let hidden = pack_hidden(rt, model, ctxs, gb)?;
+        if active_count(src) == 0 {
+            return Ok(());
+        }
+        let gb = rt.manifest.pick_batch(src.batch());
+        let hidden = pack_hidden(rt, model, src, gb)?;
         let mut base_tok = vec![0i32; gb];
-        for (i, ctx) in ctxs.iter().enumerate() {
-            if let Some(ctx) = ctx {
+        for i in 0..src.batch().min(gb) {
+            if let Some(ctx) = src.ctx(i) {
                 base_tok[i] = ctx.base_token;
             }
         }
         let base_tok = Tensor::from_i32(&[gb], base_tok);
 
         let t0 = std::time::Instant::now();
-        let out = rt.run_draft(model, "hydra", gb, &[hidden, base_tok])?;
+        let graph_out = rt.run_draft(model, "hydra", gb, &[hidden, base_tok])?;
         timing.graph_secs += t0.elapsed().as_secs_f64();
 
-        let toks = out[0].i32_data()?;
-        let logp = out[1].f32_data()?;
+        let toks = graph_out[0].i32_data()?;
+        let logp = graph_out[1].f32_data()?;
+        let c = &rt.manifest.constants;
         let (k, s) = (c.hydra_beams, c.hydra_steps);
 
         let t1 = std::time::Instant::now();
-        let mut results = Vec::with_capacity(ctxs.len());
-        for (i, ctx) in ctxs.iter().enumerate() {
-            if ctx.is_none() {
-                results.push(Vec::new());
+        for i in 0..src.batch().min(out.len()) {
+            if src.ctx(i).is_none() {
                 continue;
             }
-            let mut paths = Vec::with_capacity(k);
-            for b in 0..k {
-                let tokens = toks[(i * k + b) * s..(i * k + b + 1) * s].to_vec();
-                paths.push(CandidatePath { tokens, score: logp[i * k + b] });
+            for b in 0..k.min(plan.max_paths) {
+                out[i].push(&toks[(i * k + b) * s..(i * k + b + 1) * s],
+                            logp[i * k + b]);
             }
-            results.push(paths);
+            out[i].sort_by_score_desc();
         }
         timing.transform_secs += t1.elapsed().as_secs_f64();
-        Ok(results)
+        Ok(())
     }
 }
 
@@ -363,6 +611,20 @@ mod tests {
     }
 
     #[test]
+    fn topk_into_reuses_buffer() {
+        let row = [0.1f32, 5.0, -2.0, 3.0];
+        let mut buf = Vec::with_capacity(row.len());
+        topk_into(&row, 2, &mut buf);
+        assert_eq!(buf, vec![1, 3]);
+        let ptr = buf.as_ptr();
+        topk_into(&row, 3, &mut buf);
+        assert_eq!(buf, vec![1, 3, 0]);
+        assert_eq!(ptr, buf.as_ptr(), "buffer must not reallocate");
+        topk_into(&row, 0, &mut buf);
+        assert!(buf.is_empty());
+    }
+
+    #[test]
     fn log_softmax_normalizes() {
         let mut row = vec![1.0f32, 2.0, 3.0];
         log_softmax_row(&mut row);
@@ -372,8 +634,60 @@ mod tests {
     }
 
     #[test]
+    fn pathset_roundtrip_and_sorting() {
+        let mut ps = PathSet::with_capacity(4, 3);
+        ps.push(&[1, 2], -2.0);
+        ps.push(&[3], -1.0);
+        ps.push(&[4, 5, 6], -3.0);
+        assert_eq!(ps.len(), 3);
+        assert_eq!(ps.tokens(0), &[1, 2]);
+        ps.sort_by_score_desc();
+        let got: Vec<(Vec<i32>, f32)> = ps
+            .iter_sorted()
+            .map(|(t, s)| (t.to_vec(), s))
+            .collect();
+        assert_eq!(got[0], (vec![3], -1.0));
+        assert_eq!(got[1], (vec![1, 2], -2.0));
+        assert_eq!(got[2], (vec![4, 5, 6], -3.0));
+        ps.clear();
+        assert!(ps.is_empty());
+        assert_eq!(ps.iter_sorted().count(), 0);
+    }
+
+    #[test]
+    fn pathset_sort_breaks_ties_deterministically() {
+        let mk = |a: &[i32], b: &[i32]| {
+            let mut ps = PathSet::new();
+            ps.push(a, -1.0);
+            ps.push(b, -1.0);
+            ps.sort_by_score_desc();
+            ps.iter_sorted().map(|(t, _)| t.to_vec()).collect::<Vec<_>>()
+        };
+        // equal scores: lexicographically smaller token seq first, in both
+        // insertion orders
+        assert_eq!(mk(&[2, 1], &[1, 9]), vec![vec![1, 9], vec![2, 1]]);
+        assert_eq!(mk(&[1, 9], &[2, 1]), vec![vec![1, 9], vec![2, 1]]);
+    }
+
+    #[test]
+    fn pathset_append_token_and_truncate() {
+        let mut ps = PathSet::new();
+        ps.push(&[1], -1.0);
+        ps.append_token(0, 2);
+        assert_eq!(ps.tokens(0), &[1, 2]);
+        ps.push(&[9], -0.5);
+        ps.push(&[7], -2.0);
+        ps.sort_by_score_desc();
+        ps.truncate_sorted(2);
+        assert_eq!(ps.len(), 2);
+        let got: Vec<Vec<i32>> =
+            ps.iter_sorted().map(|(t, _)| t.to_vec()).collect();
+        assert_eq!(got, vec![vec![9], vec![1, 2]]);
+    }
+
+    #[test]
     fn ctc_expand_respects_limits() {
-        let d = CtcDrafter { slot_topk: 2, max_paths: 5, transform: true };
+        let mut d = CtcDrafter::new(2, false);
         let (slots, vp1) = (3, 4);
         let mut lp = vec![0f32; slots * vp1];
         for s in 0..slots {
@@ -383,35 +697,51 @@ mod tests {
             }
             log_softmax_row(row);
         }
-        let beams = d.expand(&lp, slots, vp1);
-        assert!(beams.len() <= 5);
-        assert!(beams.iter().all(|b| b.tokens.len() == slots));
-        // sorted by score
+        let mut out = PathSet::new();
+        d.expand_into(&lp, slots, vp1, 5, 99, 0, &mut out);
+        assert!(out.len() <= 5);
+        let beams: Vec<(Vec<i32>, f32)> = out
+            .iter_sorted()
+            .map(|(t, s)| (t.to_vec(), s))
+            .collect();
+        assert!(beams.iter().all(|(t, _)| t.len() == slots));
         for w in beams.windows(2) {
-            assert!(w[0].score >= w[1].score);
+            assert!(w[0].1 >= w[1].1, "not sorted by score");
         }
     }
 
     #[test]
-    fn ctc_expand_best_is_argmax_chain() {
-        let d = CtcDrafter { slot_topk: 3, max_paths: 8, transform: true };
+    fn ctc_expand_best_is_argmax_chain_and_maps_blank() {
+        let mut d = CtcDrafter::new(3, false);
         let (slots, vp1) = (4, 5);
+        let blank = (vp1 - 1) as i32; // 4
+        let pad = -7;
         let mut lp = vec![-10f32; slots * vp1];
-        let argmaxes = [2usize, 0, 3, 1];
+        let argmaxes = [2usize, 0, 4, 1]; // slot 2 argmax IS the blank
         for (s, &a) in argmaxes.iter().enumerate() {
             lp[s * vp1 + a] = -0.01;
         }
-        let beams = d.expand(&lp, slots, vp1);
-        let best: Vec<i32> = argmaxes.iter().map(|&a| a as i32).collect();
-        assert_eq!(beams[0].tokens, best);
+        let mut out = PathSet::new();
+        d.expand_into(&lp, slots, vp1, 8, blank, pad, &mut out);
+        // best beam follows the argmax chain, blank surrogated with pad
+        assert_eq!(out.iter_sorted().next().unwrap().0, &[2, 0, pad, 1]);
     }
 
     #[test]
-    fn vanilla_returns_empty() {
-        // no runtime needed: vanilla never touches it, but the trait takes
-        // one — exercise via the engine tests instead; here check the shape
-        // logic of active_count.
-        let ctxs: Vec<Option<DraftCtx>> = vec![None, None];
-        assert_eq!(active_count(&ctxs), 0);
+    fn owned_source_exposes_ctxs() {
+        let src: Vec<Option<OwnedDraftCtx>> = vec![
+            None,
+            Some(OwnedDraftCtx {
+                hidden_window: vec![0.0; 4],
+                win_len: 2,
+                last_hidden: vec![0.0; 2],
+                base_token: 5,
+            }),
+        ];
+        let src: &[Option<OwnedDraftCtx>] = &src;
+        assert_eq!(src.batch(), 2);
+        assert!(src.ctx(0).is_none());
+        assert_eq!(src.ctx(1).unwrap().base_token, 5);
+        assert_eq!(active_count(src), 1);
     }
 }

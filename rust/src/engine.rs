@@ -14,13 +14,34 @@
 //!   4. greedy acceptance walks the tree along the base model's argmax;
 //!      accepted nodes' KV rows are committed to the host cache and their
 //!      hidden states pushed into the draft window.
+//!
+//! Hot-path memory discipline (PR 3): every per-round buffer the loop needs
+//! lives in the engine-owned `HotScratch` — per-slot candidate `PathSet`
+//! arenas the drafter fills, per-slot reusable `TokenTree`s, the batch
+//! token/position/bias buffers, the accepted-node scratch, and the
+//! temperature-sampling weight buffer. The KV batch gather is incremental:
+//! per slot the engine tracks how many cache rows are already resident in
+//! the reusable batch tensors and copies only the rows appended since the
+//! last round. In steady state the host *compute* stages of a decode round
+//! — draft → CTC transform → tree build → token/pos/bias assembly →
+//! acceptance → KV commit/gather — perform zero heap allocations (asserted
+//! by `rust/tests/hotpath_alloc.rs` over exactly those stages). Documented
+//! exceptions that still allocate: the XLA literal boundary
+//! (`build_step_lits`, drafter tensor packing — buffers are owned by the
+//! graph call) and the per-round *outputs* handed to callers (stream
+//! `TokenDelta`s, `gen_ids`/stats growth, the `StepReport` itself).
+//! Tree width/depth per round comes from `adapt::BetaController`
+//! (`--beta-policy fixed|adaptive`): large batches shrink trees (verify
+//! FLOPs are batch × nodes), lonely sequences grow them.
 
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
 use crate::config::{EngineConfig, Method};
-use crate::drafters::{make_drafter, DraftCtx, DraftTiming, Drafter};
+use crate::drafters::{make_drafter, DraftCtx, DraftSource, DraftTiming,
+                      Drafter, PathSet};
 use crate::kvcache::{BlockPool, SeqCache};
 use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
                      StageBreakdown};
@@ -209,6 +230,30 @@ impl Seq {
     }
 }
 
+/// Borrowing drafter view over the slot array: no hidden-window clones.
+struct SlotSource<'a> {
+    slots: &'a [Option<Seq>],
+    gb: usize,
+}
+
+impl DraftSource for SlotSource<'_> {
+    fn batch(&self) -> usize {
+        self.gb
+    }
+    fn ctx(&self, slot: usize) -> Option<DraftCtx<'_>> {
+        self.slots
+            .get(slot)
+            .and_then(|s| s.as_ref())
+            .filter(|seq| seq.prefill.is_none())
+            .map(|seq| DraftCtx {
+                hidden_window: &seq.hidden_win,
+                win_len: seq.win_len,
+                last_hidden: &seq.last_hidden,
+                base_token: seq.base_token,
+            })
+    }
+}
+
 /// Everything one `fill_slots` pass decided.
 #[derive(Default)]
 struct FillReport {
@@ -216,6 +261,64 @@ struct FillReport {
     forced: Vec<GenOutput>,
     evicted: Vec<u64>,
     missed: Vec<u64>,
+}
+
+/// Engine-owned reusable buffers for the draft→verify hot path. Everything
+/// is sized once (slot count at construction, batch shapes on first use)
+/// and cleared-in-place per round, so steady-state rounds allocate nothing
+/// on the host side.
+struct HotScratch {
+    /// per-slot candidate-path arenas the drafter writes into
+    paths: Vec<PathSet>,
+    /// per-slot reusable token trees (arena/SoA layout)
+    trees: Vec<TokenTree>,
+    /// which slots hold a live tree this round
+    live: Vec<bool>,
+    /// accepted-node index buffer (also reused as the prefill pick list)
+    accepted: Vec<usize>,
+    /// batch token/position/bias buffers for the step-graph call
+    tokens: Vec<i32>,
+    pos: Vec<i32>,
+    bias: Vec<f32>,
+    /// temperature-sampling weight buffer (vocab-sized, reused per node)
+    weights: Vec<f64>,
+    /// per-slot cache rows already resident in the decode batch buffers
+    synced: Vec<usize>,
+    /// batch layout (gb) the sync state describes; mismatch = full resync
+    synced_gb: usize,
+    /// single-sequence (b=1) gather buffers for chunked prefill
+    prefill_k: Vec<f32>,
+    prefill_v: Vec<f32>,
+    /// (slot, rows synced) for the prefill buffers
+    prefill_synced: (usize, usize),
+    /// prefilling slot indices in class-aware service order
+    prefill_order: Vec<usize>,
+}
+
+impl HotScratch {
+    fn new(max_slots: usize, max_paths: usize, max_len: usize,
+           tree_cap: usize, vocab: usize) -> HotScratch {
+        HotScratch {
+            paths: (0..max_slots)
+                .map(|_| PathSet::with_capacity(max_paths, max_len))
+                .collect(),
+            trees: (0..max_slots)
+                .map(|_| TokenTree::with_capacity(tree_cap))
+                .collect(),
+            live: vec![false; max_slots],
+            accepted: Vec::with_capacity(tree_cap.max(64)),
+            weights: Vec::with_capacity(vocab),
+            tokens: Vec::new(),
+            pos: Vec::new(),
+            bias: Vec::new(),
+            synced: vec![0; max_slots],
+            synced_gb: 0,
+            prefill_k: Vec::new(),
+            prefill_v: Vec::new(),
+            prefill_synced: (usize::MAX, 0),
+            prefill_order: Vec::with_capacity(max_slots),
+        }
+    }
 }
 
 pub struct Engine {
@@ -238,9 +341,20 @@ pub struct Engine {
     base_weight_bytes: f64,
     head_weight_bytes: f64,
     /// reusable batch-assembly buffers (perf: avoids a multi-MB alloc+zero
-    /// per step; stale inactive-slot contents are masked by the bias)
+    /// per step; stale inactive-slot contents are masked by the bias).
+    /// Synced incrementally — see `HotScratch::synced`.
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
+    /// reusable hot-path buffers (paths, trees, token/pos/bias, sync state)
+    scratch: HotScratch,
+    /// β-aware batching controller (ROADMAP: per-step tree width adapted to
+    /// batch size and the acceptance EWMA)
+    beta: BetaController,
+    /// last emitted β plan (event-log dedupe)
+    last_plan: Option<DraftPlan>,
+    /// exported verify widths per graph batch size (n > 1, ascending) —
+    /// precomputed so the adaptive per-round width pick allocates nothing
+    verify_ns: std::collections::BTreeMap<usize, Vec<usize>>,
     // cached dims
     layers: usize,
     heads: usize,
@@ -280,6 +394,20 @@ impl Engine {
         } else {
             c.lmax * max_slots
         };
+        // every exported step graph with n > 1 can verify a tree of up to
+        // n nodes; index them by batch size once (GraphMeta carries the
+        // parsed shape — no key-string matching on the hot path)
+        let mut verify_ns: std::collections::BTreeMap<usize, Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for g in rt.manifest.model(&cfg.model)?.graphs.values() {
+            if g.n > 1 {
+                verify_ns.entry(g.batch).or_default().push(g.n);
+            }
+        }
+        for ns in verify_ns.values_mut() {
+            ns.sort_unstable();
+            ns.dedup();
+        }
         Ok(Engine {
             slots: (0..max_slots).map(|_| None).collect(),
             pool: BlockPool::new(pool_positions, max_slots),
@@ -294,6 +422,13 @@ impl Engine {
             head_weight_bytes,
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
+            scratch: HotScratch::new(max_slots, cfg.max_paths,
+                                     c.ctc_target_u.max(1), c.tree_n,
+                                     c.vocab_size),
+            beta: BetaController::new(cfg.beta_policy, cfg.max_paths,
+                                      c.tree_n, c.ctc_target_u),
+            last_plan: None,
+            verify_ns,
             layers: mcfg.layers,
             heads: mcfg.n_heads,
             head_dim: c.head_dim,
@@ -630,6 +765,12 @@ impl Engine {
         };
         self.pool.ensure(slot, prefill_len)?;
         self.slots[slot] = Some(seq);
+        // new occupant: its cache shares nothing with what the batch
+        // buffers hold for this slot — force a full gather on first use
+        self.scratch.synced[slot] = 0;
+        if self.scratch.prefill_synced.0 == slot {
+            self.scratch.prefill_synced = (slot, 0);
+        }
         let waited = self.step_no.saturating_sub(req.enq_step);
         self.events.push(SchedEvent::Admitted { step: self.step_no, id, waited });
         self.metrics.inc("sched.admitted", 1);
@@ -800,10 +941,13 @@ impl Engine {
             deadline_step: seq.deadline_step,
             submit_step: seq.submit_step,
             stats: seq.stats.clone(),
+            // the rng clone here IS load-bearing: the carried state lets a
+            // re-admitted sequence resume sampling exactly where it stopped
             rng: Some(seq.rng.clone()),
             enq_step: self.step_no,
         };
         self.wait_queue.push(req);
+        self.scratch.synced[slot] = 0;
         self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
         self.metrics.inc("sched.evicted", 1);
         id
@@ -837,24 +981,40 @@ impl Engine {
             let st = seq.prefill.as_ref().expect("prefill_round without state");
             (st.done, st.ids.len())
         };
+        // single-sequence gather buffers, synced incrementally while this
+        // slot keeps prefilling (only fresh cache rows are copied per chunk)
+        let re = self.heads * self.head_dim;
+        let cache_elems = self.layers * self.lmax * re;
+        self.scratch.prefill_k.resize(cache_elems, 0.0);
+        self.scratch.prefill_v.resize(cache_elems, 0.0);
+        if self.scratch.prefill_synced.0 != slot {
+            self.scratch.prefill_synced = (slot, 0);
+        }
         let mut done_now = 0usize;
         while done < total {
             if done_now > 0 && done_now >= allowed {
                 break;
             }
             let end = (done + n).min(total);
-            let chunk: Vec<i32> =
-                seq.prefill.as_ref().expect("state").ids[done..end].to_vec();
+            let clen = end - done;
             let cache_len = seq.cache.len;
-            let clen = chunk.len();
-            let mut tokens = vec![0i32; n];
-            tokens[..clen].copy_from_slice(&chunk);
-            let pos: Vec<i32> = (0..n)
-                .map(|i| (cache_len + i.min(clen.saturating_sub(1))) as i32)
-                .collect();
-            let mut bias = vec![NEG_INF; n * m];
+            {
+                let st = seq.prefill.as_ref().expect("state");
+                let tokens = &mut self.scratch.tokens;
+                tokens.resize(n, 0);
+                tokens[..clen].copy_from_slice(&st.ids[done..end]);
+                tokens[clen..].fill(0);
+            }
+            let pos = &mut self.scratch.pos;
+            pos.resize(n, 0);
+            for (i, p) in pos.iter_mut().enumerate() {
+                *p = (cache_len + i.min(clen.saturating_sub(1))) as i32;
+            }
+            let bias = &mut self.scratch.bias;
+            bias.resize(n * m, NEG_INF);
             for i in 0..n {
                 let row = &mut bias[i * m..(i + 1) * m];
+                row.fill(NEG_INF);
                 if i < clen {
                     row[..cache_len].fill(0.0);
                     for j in 0..=i {
@@ -864,12 +1024,15 @@ impl Engine {
                     row[self.lmax + i] = 0.0; // padded row: self only
                 }
             }
-            let re = self.heads * self.head_dim;
-            fill_batch_cache(&[Some(&seq)], 1, self.layers, self.lmax, re,
-                             &mut self.scratch_k, &mut self.scratch_v);
+            let from = self.scratch.prefill_synced.1.min(cache_len);
+            seq.cache.copy_new_into_batch(&mut self.scratch.prefill_k,
+                                          &mut self.scratch.prefill_v, 0, 1,
+                                          from);
+            self.scratch.prefill_synced = (slot, cache_len);
             let args = build_step_lits(
-                &self.scratch_k, &self.scratch_v, self.layers, 1, self.lmax,
-                self.heads, self.head_dim, n, &tokens, &pos, &bias)?;
+                &self.scratch.prefill_k, &self.scratch.prefill_v, self.layers,
+                1, self.lmax, self.heads, self.head_dim, n,
+                &self.scratch.tokens, &self.scratch.pos, &self.scratch.bias)?;
             let t0 = Instant::now();
             let out = self.rt.run_step_lits(&self.cfg.model, 1, n, &args)?;
             seq.stats.breakdown.base_model_secs += t0.elapsed().as_secs_f64();
@@ -878,8 +1041,10 @@ impl Engine {
 
             let k_new = out[1].f32_data()?;
             let v_new = out[2].f32_data()?;
-            let picks: Vec<usize> = (0..clen).collect();
-            seq.cache.append_selected(k_new, v_new, n, &picks)?;
+            let picks = &mut self.scratch.accepted;
+            picks.clear();
+            picks.extend(0..clen);
+            seq.cache.append_selected(k_new, v_new, n, picks)?;
 
             let hidden = out[3].f32_data()?;
             for i in 0..clen {
@@ -892,10 +1057,16 @@ impl Engine {
             seq.stats.prefill_tokens += clen;
             seq.prefill.as_mut().expect("state").done = done;
             if done >= total {
-                // base token from the last real position of the final chunk
+                // base token from the last real position of the final chunk.
+                // Advances the sequence's real RNG (the old code sampled
+                // from a discarded clone — audited in PR 3: the clone was
+                // not load-bearing, greedy runs never touch the RNG and
+                // same-seed replays advance identically either way).
                 let logits = out[0].f32_data()?;
                 let row = &logits[(clen - 1) * self.vocab..clen * self.vocab];
-                seq.base_token = self.pick_token(row, &mut seq.rng.clone());
+                seq.base_token = pick_token_with(&mut self.scratch.weights,
+                                                 self.cfg.temperature, row,
+                                                 &mut seq.rng);
                 seq.prefill = None;
             }
         }
@@ -904,23 +1075,61 @@ impl Engine {
         Ok((id, done_now, done, total))
     }
 
-    fn pick_token(&self, logits: &[f32], rng: &mut Rng) -> i32 {
-        if self.cfg.temperature <= 0.0 {
-            return argmax(logits) as i32;
+    /// Incremental decode-batch gather: copy only rows appended since the
+    /// last round into the reusable `[L, gb, Lmax, H, Dh]` batch buffers.
+    /// A layout change (different gb) or a slot changing occupants forces a
+    /// full copy for the affected slots; stale rows beyond a sequence's
+    /// live length are masked by the attention bias.
+    fn sync_batch_cache(&mut self, gb: usize) {
+        let re = self.heads * self.head_dim;
+        let cache_elems = self.layers * gb * self.lmax * re;
+        if self.scratch.synced_gb != gb || self.scratch_k.len() != cache_elems {
+            for s in self.scratch.synced.iter_mut() {
+                *s = 0;
+            }
+            self.scratch.synced_gb = gb;
         }
-        // temperature sampling
-        let t = self.cfg.temperature;
-        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let weights: Vec<f64> = logits.iter().map(|&l| (((l - m) / t) as f64).exp()).collect();
-        let total: f64 = weights.iter().sum();
-        let mut x = rng.f64() * total;
-        for (i, w) in weights.iter().enumerate() {
-            x -= w;
-            if x <= 0.0 {
-                return i as i32;
+        self.scratch_k.resize(cache_elems, 0.0);
+        self.scratch_v.resize(cache_elems, 0.0);
+        for b in 0..gb {
+            if let Some(seq) = self.slots.get(b).and_then(|s| s.as_ref()) {
+                let from = self.scratch.synced[b].min(seq.cache.len);
+                seq.cache.copy_new_into_batch(&mut self.scratch_k,
+                                              &mut self.scratch_v, b, gb, from);
+                self.scratch.synced[b] = seq.cache.len;
             }
         }
-        (logits.len() - 1) as i32
+    }
+
+    /// Smallest exported verify width `n` (with a compiled graph for this
+    /// batch size) that holds `want` tree nodes; falls back to the fixed
+    /// `tree_n`. Only consulted under the adaptive β policy; reads the
+    /// table precomputed at construction — no per-round allocation.
+    fn pick_verify_n(&self, gb: usize, want: usize) -> usize {
+        self.verify_ns
+            .get(&gb)
+            .and_then(|ns| ns.iter().copied().find(|&n| n >= want))
+            .unwrap_or(self.tree_n)
+    }
+
+    /// Record the round's β plan in gauges, and in the event log whenever
+    /// it changes — so `--beta-policy adaptive` replays stay auditable and
+    /// byte-for-byte deterministic.
+    fn note_beta_plan(&mut self, batch: usize, plan: DraftPlan) {
+        self.metrics.set_gauge("sched.beta.paths", plan.max_paths as f64);
+        self.metrics.set_gauge("sched.beta.nodes", plan.tree_nodes as f64);
+        self.metrics.set_gauge("sched.beta.depth", plan.max_len as f64);
+        if self.last_plan != Some(plan) {
+            self.events.push(SchedEvent::Beta {
+                step: self.step_no,
+                batch,
+                paths: plan.max_paths,
+                nodes: plan.tree_nodes,
+                depth: plan.max_len,
+            });
+            self.metrics.inc("sched.beta.adjustments", 1);
+            self.last_plan = Some(plan);
+        }
     }
 
     // ------------------------------------------------------------ stepping
@@ -934,10 +1143,10 @@ impl Engine {
 
     /// One scheduler round: admit from the wait queue into free slots
     /// (SLO-policy order, with deadline-driven preemption), advance
-    /// resumable prefills under the per-round chunk budget, run one
-    /// draft→verify→accept round over all decode-ready sequences, reap
-    /// finished ones, and resolve KV-pool pressure by preempting the least
-    /// urgent sequences back to the queue.
+    /// resumable prefills under the per-round chunk budget (interactive-
+    /// effective prompts first), run one draft→verify→accept round over all
+    /// decode-ready sequences, reap finished ones, and resolve KV-pool
+    /// pressure by preempting the least urgent sequences back to the queue.
     pub fn step_ex(&mut self) -> Result<StepReport> {
         let t_round = Instant::now();
         self.step_no += 1;
@@ -949,23 +1158,37 @@ impl Engine {
         report.deadline_missed.extend(fill.missed);
 
         // --- 0. resumable chunked prefill, budgeted per round, so running
-        // sequences keep decoding below while long prompts prefill
+        // sequences keep decoding below while long prompts prefill.
+        // Class-aware service order (ROADMAP open item): interactive-
+        // effective prompts drain the budget before batch ones, cutting
+        // interactive TTFT under mixed load; slot index breaks ties so the
+        // order stays total and deterministic.
         let mut budget_left = if self.cfg.slo.prefill_chunk == 0 {
             usize::MAX
         } else {
             self.cfg.slo.prefill_chunk
         };
-        for b in 0..self.slots.len() {
+        self.scratch.prefill_order.clear();
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.as_ref().map(|q| q.prefill.is_some()).unwrap_or(false) {
+                self.scratch.prefill_order.push(i);
+            }
+        }
+        {
+            let slots = &self.slots;
+            let slo = self.cfg.slo;
+            let now = self.step_no;
+            self.scratch.prefill_order.sort_unstable_by(|&a, &b| {
+                let ma = slots[a].as_ref().expect("prefill slot").meta();
+                let mb = slots[b].as_ref().expect("prefill slot").meta();
+                slo.urgency_cmp(&ma, &mb, now).then(a.cmp(&b))
+            });
+        }
+        for idx in 0..self.scratch.prefill_order.len() {
             if budget_left == 0 {
                 break;
             }
-            let prefilling = self.slots[b]
-                .as_ref()
-                .map(|s| s.prefill.is_some())
-                .unwrap_or(false);
-            if !prefilling {
-                continue;
-            }
+            let b = self.scratch.prefill_order[idx];
             let (id, did, done, total) = self.prefill_round(b, budget_left)?;
             budget_left = budget_left.saturating_sub(did);
             report.prefilled.push((id, did));
@@ -977,104 +1200,103 @@ impl Engine {
         }
 
         // decode-ready sequences only: mid-prefill slots sit this round out
-        let active: Vec<usize> = self
-            .slots
-            .iter()
-            .enumerate()
-            .filter(|(_, s)| {
-                s.as_ref().map(|q| q.prefill.is_none()).unwrap_or(false)
-            })
-            .map(|(i, _)| i)
-            .collect();
-        if active.is_empty() {
+        let (mut n_active, mut max_slot) = (0usize, 0usize);
+        for (i, s) in self.slots.iter().enumerate() {
+            if s.as_ref().map(|q| q.prefill.is_none()).unwrap_or(false) {
+                n_active += 1;
+                max_slot = i;
+            }
+        }
+        if n_active == 0 {
             report.queue_depth = self.wait_queue.len();
             report.pool_utilization = self.pool.utilization();
             self.record_step_gauges(&report);
             return Ok(report);
         }
-        let gb = self.rt.manifest.pick_batch(
-            active.iter().max().map(|&i| i + 1).unwrap_or(1));
+        let gb = self.rt.manifest.pick_batch(max_slot + 1);
 
-        // --- 1. draft
+        // --- 1. draft (β plan decides this round's width/depth budget;
+        // belt-and-braces: the verify graphs hold at most tree_n nodes)
+        let mut plan = self.beta.plan(n_active);
+        plan.tree_nodes = plan.tree_nodes.min(self.tree_n.max(1));
+        self.note_beta_plan(n_active, plan);
         let mut timing = DraftTiming::default();
-        let ctxs: Vec<Option<DraftCtx>> = (0..gb)
-            .map(|i| {
-                self.slots
-                    .get(i)
-                    .and_then(|s| s.as_ref())
-                    .filter(|seq| seq.prefill.is_none())
-                    .map(|seq| DraftCtx {
-                    hidden_window: seq.hidden_win.clone(),
-                    win_len: seq.win_len,
-                    last_hidden: seq.last_hidden.clone(),
-                    base_token: seq.base_token,
-                })
-            })
-            .collect();
-        let paths = if self.cfg.method == Method::Vanilla {
-            ctxs.iter().map(|_| Vec::new()).collect::<Vec<_>>()
-        } else {
-            self.drafter.draft(&self.rt, &self.cfg.model, &ctxs, &mut timing)?
-        };
+        {
+            let src = SlotSource { slots: &self.slots, gb };
+            self.drafter.draft(&self.rt, &self.cfg.model, &src, plan,
+                               &mut timing, &mut self.scratch.paths[..gb])?;
+        }
 
-        // --- 2. CTC-transformed candidates -> token trees + masks
+        // --- 2. candidates -> token trees + verify-graph inputs, all into
+        // reusable arenas (zero host allocations in steady state)
         let t_tr = Instant::now();
-        let mut trees: Vec<Option<TokenTree>> = vec![None; gb];
-        for b in 0..gb {
-            if let Some(seq) = self
-                .slots
-                .get(b)
-                .and_then(|s| s.as_ref())
-                .filter(|q| q.prefill.is_none())
-            {
-                let tree = if paths[b].is_empty() {
-                    TokenTree::root_only(seq.base_token)
-                } else {
-                    TokenTree::from_paths(seq.base_token, &paths[b], self.tree_n)
-                };
-                trees[b] = Some(tree);
+        let mut max_nodes = 1usize;
+        {
+            let HotScratch { paths, trees, live, .. } = &mut self.scratch;
+            for b in 0..gb {
+                let seq = self
+                    .slots
+                    .get(b)
+                    .and_then(|s| s.as_ref())
+                    .filter(|q| q.prefill.is_none());
+                match seq {
+                    Some(seq) => {
+                        trees[b].rebuild(seq.base_token,
+                                         paths[b].iter_sorted(),
+                                         plan.tree_nodes);
+                        live[b] = true;
+                        max_nodes = max_nodes.max(trees[b].len());
+                    }
+                    None => live[b] = false,
+                }
             }
         }
-        let n = if trees.iter().flatten().all(|t| t.len() == 1) {
+        let n = if max_nodes <= 1 {
             1 // pure decode round (vanilla, or no usable drafts)
-        } else {
+        } else if self.beta.policy() == BetaPolicy::Fixed {
             self.tree_n
+        } else {
+            self.pick_verify_n(gb, max_nodes)
         };
         let m = self.lmax + n;
-        let mut tokens = vec![0i32; gb * n];
-        let mut pos = vec![0i32; gb * n];
-        let mut bias = vec![NEG_INF; gb * n * m];
-        for b in 0..gb {
-            match (&trees[b], self.slots.get(b).and_then(|s| s.as_ref())) {
-                (Some(tree), Some(seq)) => {
-                    tokens[b * n..(b + 1) * n]
-                        .copy_from_slice(&tree.tokens_padded(n, 0));
-                    pos[b * n..(b + 1) * n]
-                        .copy_from_slice(&tree.positions_padded(seq.cache.len, n));
-                    bias[b * n * m..(b + 1) * n * m]
-                        .copy_from_slice(&tree.attention_bias(seq.cache.len, self.lmax, n));
-                }
-                _ => {
-                    // inactive slot: self-attention only on each row
-                    for i in 0..n {
-                        bias[(b * n + i) * m + self.lmax + i] = 0.0;
+        {
+            let lmax = self.lmax;
+            let HotScratch { trees, live, tokens, pos, bias, .. } =
+                &mut self.scratch;
+            tokens.resize(gb * n, 0);
+            pos.resize(gb * n, 0);
+            bias.resize(gb * n * m, NEG_INF);
+            for b in 0..gb {
+                let t_slice = &mut tokens[b * n..(b + 1) * n];
+                let p_slice = &mut pos[b * n..(b + 1) * n];
+                let b_slice = &mut bias[b * n * m..(b + 1) * n * m];
+                match self.slots.get(b).and_then(|s| s.as_ref()) {
+                    Some(seq) if live[b] => {
+                        trees[b].write_tokens(t_slice, 0);
+                        trees[b].write_positions(p_slice, seq.cache.len);
+                        trees[b].write_bias(b_slice, seq.cache.len, lmax, n);
+                    }
+                    _ => {
+                        // inactive slot: self-attention only on each row
+                        t_slice.fill(0);
+                        p_slice.fill(0);
+                        b_slice.fill(NEG_INF);
+                        for i in 0..n {
+                            b_slice[i * m + lmax + i] = 0.0;
+                        }
                     }
                 }
             }
         }
         let transform_secs = t_tr.elapsed().as_secs_f64() + timing.transform_secs;
 
-        // --- 3. verify (one base-model pass over all trees)
-        let seq_refs: Vec<Option<&Seq>> = (0..gb)
-            .map(|i| self.slots.get(i).and_then(|s| s.as_ref()))
-            .collect();
-        let re2 = self.heads * self.head_dim;
-        fill_batch_cache(&seq_refs, gb, self.layers, self.lmax, re2,
-                         &mut self.scratch_k, &mut self.scratch_v);
-        drop(seq_refs);
+        // --- 3. verify (one base-model pass over all trees); the KV gather
+        // is incremental — only rows appended since last round move
+        self.sync_batch_cache(gb);
         let args = build_step_lits(
             &self.scratch_k, &self.scratch_v, self.layers, gb, self.lmax,
-            self.heads, self.head_dim, n, &tokens, &pos, &bias)?;
+            self.heads, self.head_dim, n, &self.scratch.tokens,
+            &self.scratch.pos, &self.scratch.bias)?;
         let t_v = Instant::now();
         let out = self.rt.run_step_lits(&self.cfg.model, gb, n, &args)?;
         let verify_secs = t_v.elapsed().as_secs_f64();
@@ -1086,7 +1308,6 @@ impl Engine {
 
         // --- 4. accept + commit per sequence
         let mut pool_pressure: Vec<(usize, usize)> = Vec::new();
-        let re = self.heads * self.head_dim;
         let round_secs = t_round.elapsed().as_secs_f64();
         // modeled accelerator times for this round (per-seq attribution)
         let max_cache = (0..gb)
@@ -1095,82 +1316,89 @@ impl Engine {
             .max()
             .unwrap_or(0);
         let dev_verify = self.device_step_secs(gb, n, max_cache)
-            / active.len() as f64;
-        let dev_draft = self.device_draft_secs(gb) / active.len() as f64;
+            / n_active as f64;
+        let dev_draft = self.device_draft_secs(gb) / n_active as f64;
+        let eos = self.rt.manifest.constants.eos_id;
         for b in 0..gb {
-            let Some(tree) = &trees[b] else { continue };
+            let HotScratch { trees, live, accepted, synced, weights, .. } =
+                &mut self.scratch;
+            if !live[b] {
+                continue;
+            }
+            let tree = &trees[b];
             let Some(seq) = self.slots.get_mut(b).and_then(|s| s.as_mut()) else {
                 continue;
             };
             let vocab = self.vocab;
             let temp = self.cfg.temperature;
-            let mut rng = seq.rng.clone();
-            let row = |node: usize| &logits[(b * n + node) * vocab..(b * n + node + 1) * vocab];
-            let (accepted, next_base) = tree.greedy_accept(|node| {
+            let row = |node: usize| {
+                &logits[(b * n + node) * vocab..(b * n + node + 1) * vocab]
+            };
+            // acceptance advances the sequence's real RNG in place (the old
+            // clone-then-write-back was just a borrow dance — semantics are
+            // identical and same-seed replays stay byte-for-byte)
+            let rng = &mut seq.rng;
+            let next_base = tree.greedy_accept_into(accepted, |node| {
                 if temp <= 0.0 {
                     argmax(row(node)) as i32
                 } else {
                     // temperature-sampled target chain; acceptance stays
-                    // exact-match so output ≡ sampled AR chain
-                    sample_row(row(node), temp, &mut rng)
+                    // exact-match so output ≡ sampled AR chain (weights
+                    // buffer reused — no per-node vocab-sized allocation)
+                    sample_row_with(weights, row(node), temp, rng)
                 }
             });
-            seq.rng = rng;
             // cut the accepted chain at the first EOS: tokens past it would
             // leak into stream frames and β but never into the final text
-            let eos = self.rt.manifest.constants.eos_id;
-            let accepted: Vec<usize> = match accepted
-                .iter()
-                .position(|&node| tree.nodes[node].token == eos)
+            if let Some(p) =
+                accepted.iter().position(|&node| tree.token(node) == eos)
             {
-                Some(p) => accepted[..=p].to_vec(),
-                None => accepted,
-            };
-
-            // commit KV rows of accepted nodes (they sit in this seq's batch
-            // slot of k_new: [L, gb, N, H, Dh] -> slice layer-wise)
-            let mut k_slice = vec![0f32; self.layers * n * re];
-            let mut v_slice = vec![0f32; self.layers * n * re];
-            for l in 0..self.layers {
-                let src = (l * gb + b) * n * re;
-                let dst = l * n * re;
-                k_slice[dst..dst + n * re].copy_from_slice(&k_new[src..src + n * re]);
-                v_slice[dst..dst + n * re].copy_from_slice(&v_new[src..src + n * re]);
+                accepted.truncate(p + 1);
             }
-            seq.cache.append_selected(&k_slice, &v_slice, n, &accepted)?;
+
+            // commit KV rows of accepted nodes straight from the batch
+            // output [L, gb, N, H, Dh] — no per-sequence staging buffers
+            seq.cache.append_from_batch(k_new, v_new, gb, b, n, accepted)?;
+            // the freshly committed rows are NOT in the batch buffers yet;
+            // cap the sync mark so next round's incremental gather moves them
+            synced[b] = synced[b].min(seq.cache.len - accepted.len());
             if self.pool.ensure(b, seq.cache.len).is_err() {
-                // over-committed: resolved below by preempting the
-                // youngest sequence(s) once finished slots are reaped
+                // over-committed: resolved below by preempting the least
+                // urgent sequence(s) once finished slots are reaped
                 pool_pressure.push((b, seq.cache.len));
             }
 
-            let mut delta = TokenDelta { id: seq.id, tokens: Vec::new() };
-            for &node in &accepted {
+            let mut delta = TokenDelta {
+                id: seq.id,
+                tokens: Vec::with_capacity(accepted.len()),
+            };
+            for &node in accepted.iter() {
                 let h = &hidden[(b * n + node) * self.d_model
                     ..(b * n + node + 1) * self.d_model];
                 self_push_window(seq, h, self.win, self.d_model);
                 seq.last_hidden.copy_from_slice(h);
-                seq.gen_ids.push(tree.nodes[node].token);
-                delta.tokens.push(tree.nodes[node].token);
+                seq.gen_ids.push(tree.token(node));
+                delta.tokens.push(tree.token(node));
             }
             report.emitted.push(delta);
             seq.base_token = next_base;
+            self.beta.observe(accepted.len());
 
             seq.stats.steps += 1;
             seq.stats.new_tokens += accepted.len();
             seq.stats.accepted_hist.push(accepted.len());
-            seq.stats.breakdown.draft_secs += timing.graph_secs / active.len() as f64;
-            seq.stats.breakdown.transform_secs += transform_secs / active.len() as f64;
-            seq.stats.breakdown.base_model_secs += verify_secs / active.len() as f64;
+            seq.stats.breakdown.draft_secs += timing.graph_secs / n_active as f64;
+            seq.stats.breakdown.transform_secs += transform_secs / n_active as f64;
+            seq.stats.breakdown.base_model_secs += verify_secs / n_active as f64;
             let accounted = (timing.graph_secs + transform_secs + verify_secs)
-                / active.len() as f64;
-            let other = (round_secs / active.len() as f64 - accounted).max(0.0);
+                / n_active as f64;
+            let other = (round_secs / n_active as f64 - accounted).max(0.0);
             seq.stats.breakdown.other_secs += other;
             // device basis: modeled graph times + measured host-side work
             seq.stats.device_breakdown.base_model_secs += dev_verify;
             seq.stats.device_breakdown.draft_secs += dev_draft;
             seq.stats.device_breakdown.transform_secs +=
-                transform_secs / active.len() as f64;
+                transform_secs / n_active as f64;
             seq.stats.device_breakdown.other_secs += other;
 
             // --- termination
@@ -1271,6 +1499,8 @@ impl Engine {
         self.metrics
             .set_gauge("sched.pool_utilization", report.pool_utilization);
         self.metrics.set_gauge("sched.active", self.n_active() as f64);
+        self.metrics
+            .set_gauge("sched.beta.ewma_accept", self.beta.ewma_accept());
     }
 
     fn finish(&self, seq: Seq) -> GenOutput {
@@ -1311,22 +1541,6 @@ impl Engine {
     }
 }
 
-/// Assemble the `[L, gb, Lmax, H, Dh]` batch cache tensors into reusable
-/// scratch buffers (resized, not re-zeroed — inactive slots hold stale but
-/// finite data that the attention bias masks out).
-fn fill_batch_cache(seqs: &[Option<&Seq>], gb: usize, layers: usize,
-                    lmax: usize, re: usize,
-                    sk: &mut Vec<f32>, sv: &mut Vec<f32>) {
-    let cache_elems = layers * gb * lmax * re;
-    sk.resize(cache_elems, 0.0);
-    sv.resize(cache_elems, 0.0);
-    for (b, seq) in seqs.iter().enumerate() {
-        if let Some(seq) = seq {
-            seq.cache.copy_into_batch(sk, sv, b, gb);
-        }
-    }
-}
-
 /// Build the 5 step-graph argument literals from borrowed buffers.
 #[allow(clippy::too_many_arguments)]
 fn build_step_lits(sk: &[f32], sv: &[f32], layers: usize, gb: usize,
@@ -1363,9 +1577,23 @@ pub fn argmax(row: &[f32]) -> usize {
     best
 }
 
-fn sample_row(row: &[f32], temp: f32, rng: &mut Rng) -> i32 {
+/// Greedy pick at temperature 0, otherwise temperature sampling through the
+/// reusable `weights` buffer (no per-call vocab-sized allocation).
+fn pick_token_with(weights: &mut Vec<f64>, temperature: f32, logits: &[f32],
+                   rng: &mut Rng) -> i32 {
+    if temperature <= 0.0 {
+        return argmax(logits) as i32;
+    }
+    sample_row_with(weights, logits, temperature, rng)
+}
+
+/// Temperature-sample one token from a logits row, materializing the
+/// softmax weights into the caller's reusable buffer.
+fn sample_row_with(weights: &mut Vec<f64>, row: &[f32], temp: f32,
+                   rng: &mut Rng) -> i32 {
     let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let weights: Vec<f64> = row.iter().map(|&l| (((l - m) / temp) as f64).exp()).collect();
+    weights.clear();
+    weights.extend(row.iter().map(|&l| (((l - m) / temp) as f64).exp()));
     let total: f64 = weights.iter().sum();
     let mut x = rng.f64() * total;
     for (i, w) in weights.iter().enumerate() {
@@ -1375,6 +1603,12 @@ fn sample_row(row: &[f32], temp: f32, rng: &mut Rng) -> i32 {
         }
     }
     (row.len() - 1) as i32
+}
+
+/// Allocating convenience over [`sample_row_with`] (tests).
+fn sample_row(row: &[f32], temp: f32, rng: &mut Rng) -> i32 {
+    let mut weights = Vec::with_capacity(row.len());
+    sample_row_with(&mut weights, row, temp, rng)
 }
 
 #[cfg(test)]
@@ -1406,5 +1640,33 @@ mod tests {
             seen.insert(sample_row(&row, 5.0, &mut rng));
         }
         assert!(seen.len() >= 2);
+    }
+
+    #[test]
+    fn hot_scratch_is_presized_for_all_slots() {
+        let s = HotScratch::new(4, 16, 6, 32, 512);
+        assert_eq!(s.paths.len(), 4);
+        assert_eq!(s.trees.len(), 4);
+        assert_eq!(s.live.len(), 4);
+        assert_eq!(s.synced.len(), 4);
+        assert_eq!(s.synced_gb, 0);
+        assert!(s.weights.capacity() >= 512);
+    }
+
+    #[test]
+    fn sample_row_with_reuses_buffer_and_matches() {
+        let row = [0.1f32, 2.0, -1.0, 0.5];
+        let mut buf = Vec::with_capacity(row.len());
+        let mut r1 = Rng::new(42);
+        let mut r2 = Rng::new(42);
+        for _ in 0..50 {
+            let a = sample_row_with(&mut buf, &row, 0.7, &mut r1);
+            let b = sample_row(&row, 0.7, &mut r2);
+            assert_eq!(a, b, "buffered sampling diverged");
+        }
+        assert!(buf.capacity() >= row.len());
+        // greedy path ignores the buffer entirely
+        let mut rg = Rng::new(0);
+        assert_eq!(pick_token_with(&mut buf, 0.0, &row, &mut rg), 1);
     }
 }

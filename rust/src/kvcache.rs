@@ -74,6 +74,34 @@ impl SeqCache {
         Ok(())
     }
 
+    /// Append `picks.len()` positions straight out of a step-graph batch
+    /// output `[L, B, N, H, Dh]` for batch slot `b` — the zero-copy-slice
+    /// form of `append_selected` (no per-sequence `[L, N, H, Dh]` staging
+    /// buffer, so the engine's accept/commit stage allocates nothing).
+    pub fn append_from_batch(&mut self, k_new: &[f32], v_new: &[f32],
+                             batch: usize, b: usize, n: usize,
+                             picks: &[usize]) -> Result<()> {
+        let re = self.row_elems();
+        debug_assert_eq!(k_new.len(), self.layers * batch * n * re);
+        debug_assert!(b < batch);
+        if self.len + picks.len() > self.lmax {
+            bail!("kv cache overflow: len {} + {} > lmax {}",
+                  self.len, picks.len(), self.lmax);
+        }
+        for (j, &node) in picks.iter().enumerate() {
+            debug_assert!(node < n);
+            let pos = self.len + j;
+            for l in 0..self.layers {
+                let src = ((l * batch + b) * n + node) * re;
+                let dst = self.row(l, pos);
+                self.k[dst..dst + re].copy_from_slice(&k_new[src..src + re]);
+                self.v[dst..dst + re].copy_from_slice(&v_new[src..src + re]);
+            }
+        }
+        self.len += picks.len();
+        Ok(())
+    }
+
     /// Roll back to a shorter length (used by tests / failure injection).
     pub fn truncate(&mut self, len: usize) {
         assert!(len <= self.len);
@@ -101,6 +129,28 @@ impl SeqCache {
                 .copy_from_slice(&self.k[src..src + layer_elems]);
             dst_v[dst..dst + layer_elems]
                 .copy_from_slice(&self.v[src..src + layer_elems]);
+        }
+    }
+
+    /// Incremental batch gather: copy only positions `[from, len)` into
+    /// batch slot `b` of the `[L, B, Lmax, H, Dh]` tensor. With the engine
+    /// tracking how many rows each slot already synced, a steady-state
+    /// verify round moves just the handful of rows accepted last round
+    /// instead of the whole `Lmax` prefix.
+    pub fn copy_new_into_batch(&self, dst_k: &mut [f32], dst_v: &mut [f32],
+                               b: usize, batch: usize, from: usize) {
+        let re = self.row_elems();
+        let layer_elems = self.lmax * re;
+        let from = from.min(self.len);
+        let count = (self.len - from) * re;
+        if count == 0 {
+            return;
+        }
+        for l in 0..self.layers {
+            let src = l * layer_elems + from * re;
+            let dst = (l * batch + b) * layer_elems + from * re;
+            dst_k[dst..dst + count].copy_from_slice(&self.k[src..src + count]);
+            dst_v[dst..dst + count].copy_from_slice(&self.v[src..src + count]);
         }
     }
 
@@ -245,6 +295,77 @@ mod tests {
         assert_eq!(&bk[dst..dst + re], &k_new[re..2 * re]);
         // other slots untouched
         assert!(bk[..32 * re].iter().all(|&x| x == 0.0) || true);
+    }
+
+    #[test]
+    fn append_from_batch_matches_append_selected() {
+        let (batch, n) = (3usize, 4usize);
+        let mut a = cache();
+        let mut b = cache();
+        let re = a.row_elems();
+        let slot = 1usize;
+        // batch-shaped graph output [L, B, N, H, Dh] with distinct values
+        let total = 2 * batch * n * re;
+        let k_new: Vec<f32> = (0..total).map(|i| i as f32 * 0.5).collect();
+        let v_new: Vec<f32> = (0..total).map(|i| -(i as f32)).collect();
+        // reference: slice out slot `slot` the old way, then append
+        let mut k_slice = vec![0f32; 2 * n * re];
+        let mut v_slice = vec![0f32; 2 * n * re];
+        for l in 0..2 {
+            let src = (l * batch + slot) * n * re;
+            let dst = l * n * re;
+            k_slice[dst..dst + n * re].copy_from_slice(&k_new[src..src + n * re]);
+            v_slice[dst..dst + n * re].copy_from_slice(&v_new[src..src + n * re]);
+        }
+        let picks = [0usize, 2, 3];
+        a.append_selected(&k_slice, &v_slice, n, &picks).unwrap();
+        b.append_from_batch(&k_new, &v_new, batch, slot, n, &picks).unwrap();
+        assert_eq!(a.len, b.len);
+        assert_eq!(a.k_data(), b.k_data());
+        assert_eq!(a.v_data(), b.v_data());
+        // overflow still detected
+        let mut tiny = SeqCache::new(1, 2, 1, 1);
+        let kk = vec![0.0; batch * 3];
+        assert!(tiny.append_from_batch(&kk, &kk, batch, 0, 3, &[0, 1]).is_ok());
+        assert!(tiny.append_from_batch(&kk, &kk, batch, 0, 3, &[0]).is_err());
+    }
+
+    #[test]
+    fn copy_new_into_batch_is_incremental() {
+        let mut c = cache();
+        let re = c.row_elems();
+        let batch = 2;
+        let elems = 2 * batch * 32 * re;
+        let (mut ik, mut iv) = (vec![0.0f32; elems], vec![0.0f32; elems]);
+        let (mut fk, mut fv) = (vec![0.0f32; elems], vec![0.0f32; elems]);
+        let mut synced = 0usize;
+        let mut rows_written = 0usize;
+        for round in 0..4 {
+            // append `round+1` fresh rows
+            let n = round + 1;
+            let k: Vec<f32> = (0..2 * n * re)
+                .map(|i| (rows_written * 1000 + i) as f32)
+                .collect();
+            let picks: Vec<usize> = (0..n).collect();
+            c.append_selected(&k, &k, n, &picks).unwrap();
+            rows_written += n;
+            // incremental path copies only the delta...
+            c.copy_new_into_batch(&mut ik, &mut iv, 1, batch, synced);
+            synced = c.len;
+            // ...full path recopies everything
+            c.copy_into_batch(&mut fk, &mut fv, 1, batch);
+            // live region must agree between the two strategies
+            for l in 0..2 {
+                let base = (l * batch + 1) * 32 * re;
+                let live = c.len * re;
+                assert_eq!(&ik[base..base + live], &fk[base..base + live],
+                           "round {round} layer {l} diverged");
+            }
+        }
+        // from >= len is a no-op
+        let before = ik.clone();
+        c.copy_new_into_batch(&mut ik, &mut iv, 1, batch, c.len + 5);
+        assert_eq!(before, ik);
     }
 
     #[test]

@@ -18,6 +18,7 @@
 //! println!("{} ({:.1} tok/step)", out.text, out.stats.accepted_per_step());
 //! ```
 
+pub mod adapt;
 pub mod bench;
 pub mod config;
 pub mod ctc;

@@ -10,6 +10,7 @@
 
 use anyhow::{bail, Result};
 
+use ctcdraft::adapt::BetaPolicy;
 use ctcdraft::config::{EngineConfig, Method};
 use ctcdraft::engine::Engine;
 use ctcdraft::metrics::RunSummary;
@@ -85,6 +86,10 @@ fn engine_opts(cli: Cli) -> Cli {
         .opt("batch-aging",
              "queue age (steps) after which batch competes as interactive \
               (0 = no aging)", Some("512"))
+        .opt("beta-policy",
+             "tree-width policy: fixed (paper static budget) | adaptive \
+              (β-aware: width/depth from batch size + acceptance EWMA)",
+             Some("fixed"))
         .flag("no-ctc-transform", "disable the CTC transform (ablation)")
 }
 
@@ -108,6 +113,7 @@ fn build_engine_cfg(a: &ctcdraft::util::cli::Args) -> Result<EngineConfig> {
         queue_cap: a.usize("queue-cap", 0),
         kv_pool_positions: a.usize("kv-pool", 0),
         slo: build_slo(a),
+        beta_policy: BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?,
         ..EngineConfig::default()
     })
 }
@@ -309,6 +315,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .opt("batch-aging", "batch aging bound (steps; 0 = off)", Some("64"))
         .opt("prefill-chunk", "per-round prefill budget (0 = unlimited)",
              Some("8"))
+        .opt("beta-policy",
+             "β analog for the mock: fixed | adaptive (batch-adaptive \
+              accepted-token range via adapt::BetaController)", Some("fixed"))
         .opt("cancel-prob", "per-request cancellation probability", Some("0"))
         .flag("summary", "print a run summary to stderr");
     let a = parse_args(cli, argv)?;
@@ -334,7 +343,8 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         a.usize("pool", 256),
         seed,
     )
-    .with_policy(policy);
+    .with_policy(policy)
+    .with_beta(BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?);
     let sim = SchedulerSim::new(SimOptions {
         cancel_prob: a.f64("cancel-prob", 0.0),
         seed,

@@ -251,6 +251,11 @@ pub enum SchedEvent {
     Prefill { step: u64, id: u64, done: usize, total: usize },
     /// Request finished `late` steps past its deadline (SLO miss).
     DeadlineMiss { step: u64, id: u64, late: u64 },
+    /// The β controller changed the per-round draft budget: decode batch
+    /// size it reacted to, beam width (`paths`), tree-node budget and
+    /// candidate depth. Logged only on change, so adaptive replays stay
+    /// auditable without flooding the log.
+    Beta { step: u64, batch: usize, paths: usize, nodes: usize, depth: usize },
     /// Request finished; `steps`/`tokens` feed the β histogram.
     Completed { step: u64, id: u64, steps: usize, tokens: usize },
 }
@@ -279,6 +284,10 @@ impl fmt::Display for SchedEvent {
             }
             SchedEvent::DeadlineMiss { step, id, late } => {
                 write!(f, "t={step} deadline-miss id={id} late={late}")
+            }
+            SchedEvent::Beta { step, batch, paths, nodes, depth } => {
+                write!(f, "t={step} beta batch={batch} paths={paths} \
+                           nodes={nodes} depth={depth}")
             }
             SchedEvent::Completed { step, id, steps, tokens } => {
                 write!(f, "t={step} done id={id} steps={steps} tokens={tokens}")
@@ -516,13 +525,17 @@ mod tests {
             log.push(SchedEvent::Prefill { step: 2, id: 2, done: 32, total: 96 });
             log.push(SchedEvent::Evicted { step: 3, id: 2, gen_len: 4 });
             log.push(SchedEvent::Cancelled { step: 4, id: 1 });
+            log.push(SchedEvent::Beta {
+                step: 4, batch: 2, paths: 8, nodes: 16, depth: 5,
+            });
             log.push(SchedEvent::DeadlineMiss { step: 5, id: 2, late: 3 });
             log.push(SchedEvent::Completed { step: 5, id: 2, steps: 3, tokens: 7 });
             log
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.render(), b.render());
-        assert_eq!(a.len(), 8);
+        assert_eq!(a.len(), 9);
+        assert!(a.render().contains("t=4 beta batch=2 paths=8 nodes=16 depth=5"));
         assert!(a.render().contains("t=1 submit id=1 class=batch deadline=65"));
         assert!(a.render().contains("t=2 admit id=2 waited=1"));
         assert!(a.render().contains("t=2 prefill id=2 done=32/96"));

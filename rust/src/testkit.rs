@@ -14,12 +14,92 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
 use crate::engine::{Engine, GenOutput, GenStats, StepReport, Submission,
                     TokenDelta};
 use crate::metrics::{EventLog, SchedEvent};
 use crate::sched::{Priority, ReqMeta, SloPolicy};
 use crate::util::rng::Rng;
 use crate::workload::Trace;
+
+/// Byte/call-counting allocator shim for the zero-allocation hot-path
+/// tests. A test binary opts in by registering it:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: ctcdraft::testkit::alloc::CountingAllocator =
+///     ctcdraft::testkit::alloc::CountingAllocator::new();
+/// ```
+///
+/// Counters are global atomics; `snapshot()` + `delta(since)` bracket the
+/// region under test. Binaries that do not register the allocator simply
+/// read zeros (their counts are not meaningful).
+pub mod alloc {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+    static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+    /// `System` allocator wrapper that counts allocation calls and bytes
+    /// (dealloc is not tracked — the hot-path assertion is about acquiring
+    /// memory, and realloc counts as an acquisition of the new size).
+    pub struct CountingAllocator;
+
+    impl CountingAllocator {
+        pub const fn new() -> CountingAllocator {
+            CountingAllocator
+        }
+    }
+
+    unsafe impl GlobalAlloc for CountingAllocator {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+            ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            unsafe { System.alloc(layout) }
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+            ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+            unsafe { System.alloc_zeroed(layout) }
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout,
+                          new_size: usize) -> *mut u8 {
+            ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+            ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+            unsafe { System.realloc(ptr, layout, new_size) }
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            unsafe { System.dealloc(ptr, layout) }
+        }
+    }
+
+    /// Cumulative allocation counters at a point in time.
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub struct AllocSnapshot {
+        pub calls: u64,
+        pub bytes: u64,
+    }
+
+    pub fn snapshot() -> AllocSnapshot {
+        AllocSnapshot {
+            calls: ALLOC_CALLS.load(Ordering::Relaxed),
+            bytes: ALLOC_BYTES.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Allocation calls/bytes since `since`.
+    pub fn delta(since: AllocSnapshot) -> AllocSnapshot {
+        let now = snapshot();
+        AllocSnapshot {
+            calls: now.calls - since.calls,
+            bytes: now.bytes - since.bytes,
+        }
+    }
+}
 
 pub struct Prop<'a> {
     pub name: &'a str,
@@ -307,11 +387,24 @@ pub struct MockSched {
     /// total KV positions the fake pool holds
     pool_positions: usize,
     policy: SloPolicy,
+    /// β analog: when installed (`with_beta`), the per-round accepted-token
+    /// range is the controller's tree-node budget instead of the legacy
+    /// fixed 1..=4 draw — so `--beta-policy adaptive` replays exercise the
+    /// exact production controller, deterministically, without artifacts
+    beta: Option<BetaController>,
+    last_plan: Option<DraftPlan>,
     step_no: u64,
     next_id: u64,
     rng: Rng,
     events: EventLog,
 }
+
+/// Static budget the mock's β controller is built around. `with_beta`
+/// replaces the legacy fixed 1..=4 draw: `Fixed` policy draws 1..=8 every
+/// round, `Adaptive` shrinks the range toward 1..=4 as the decode batch
+/// fills (clamp(8/batch, 4, 8)) — so adaptive-vs-fixed schedules visibly
+/// diverge while both stay seed-deterministic.
+const MOCK_BETA_BASE: (usize, usize, usize) = (7, 8, 8); // paths, nodes, len
 
 impl MockSched {
     pub fn new(slots: usize, queue_cap: usize, pool_positions: usize,
@@ -322,6 +415,8 @@ impl MockSched {
             queue_cap,
             pool_positions: pool_positions.max(1),
             policy: SloPolicy::default(),
+            beta: None,
+            last_plan: None,
             step_no: 0,
             next_id: 1,
             rng: Rng::new(seed),
@@ -332,6 +427,14 @@ impl MockSched {
     /// Override the SLO policy (deadlines, batch aging, prefill chunking).
     pub fn with_policy(mut self, policy: SloPolicy) -> Self {
         self.policy = policy;
+        self
+    }
+
+    /// Install a β controller (the same `adapt::BetaController` the engine
+    /// runs) governing the per-round accepted-token range.
+    pub fn with_beta(mut self, policy: BetaPolicy) -> Self {
+        let (paths, nodes, len) = MOCK_BETA_BASE;
+        self.beta = Some(BetaController::new(policy, paths, nodes, len));
         self
     }
 
@@ -619,21 +722,40 @@ impl SchedBackend for MockSched {
         report.evicted.extend(evicted);
         report.deadline_missed.extend(missed);
 
-        // resumable chunked prefill under the shared per-round budget
-        // (slot order, at least one token of progress per scheduled seq)
+        // resumable chunked prefill under the shared per-round budget.
+        // Class-aware service order (mirrors Engine::step_ex): interactive-
+        // effective prompts drain the budget before batch ones — cutting
+        // interactive TTFT under mixed load — with the slot index as the
+        // deterministic tie-break.
         let mut budget_left = if self.policy.prefill_chunk == 0 {
             usize::MAX
         } else {
             self.policy.prefill_chunk
         };
-        for b in 0..self.slots.len() {
+        let mut prefill_order: Vec<usize> = self
+            .slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| {
+                s.as_ref().map(|q| q.prefill_left > 0).unwrap_or(false)
+            })
+            .map(|(i, _)| i)
+            .collect();
+        {
+            let slots = &self.slots;
+            let policy = self.policy;
+            let now = self.step_no;
+            prefill_order.sort_unstable_by(|&a, &b| {
+                let ma = slots[a].as_ref().expect("prefill slot").meta();
+                let mb = slots[b].as_ref().expect("prefill slot").meta();
+                policy.urgency_cmp(&ma, &mb, now).then(a.cmp(&b))
+            });
+        }
+        for b in prefill_order {
             if budget_left == 0 {
                 break;
             }
             let Some(seq) = self.slots[b].as_mut() else { continue };
-            if seq.prefill_left == 0 {
-                continue;
-            }
             let did = seq.prefill_left.min(budget_left).max(1);
             seq.prefill_left -= did;
             budget_left = budget_left.saturating_sub(did);
@@ -645,14 +767,40 @@ impl SchedBackend for MockSched {
             });
         }
 
-        // one "round": every decode-ready seq accepts 1..=4 tokens (β
-        // analog); mid-prefill seqs sit the round out
+        // one "round": every decode-ready seq accepts 1..=width tokens (β
+        // analog); mid-prefill seqs sit the round out. With a β controller
+        // installed, width is the production controller's tree-node budget
+        // for this batch size (legacy mocks keep the fixed 1..=4 draw).
+        let decode_ready = self
+            .slots
+            .iter()
+            .flatten()
+            .filter(|s| s.prefill_left == 0)
+            .count();
+        let width = match (decode_ready, self.beta.as_ref()) {
+            (0, _) | (_, None) => 4,
+            (batch, Some(beta)) => {
+                let plan = beta.plan(batch);
+                if self.last_plan != Some(plan) {
+                    self.events.push(SchedEvent::Beta {
+                        step: self.step_no,
+                        batch,
+                        paths: plan.max_paths,
+                        nodes: plan.tree_nodes,
+                        depth: plan.max_len,
+                    });
+                    self.last_plan = Some(plan);
+                }
+                plan.tree_nodes
+            }
+        };
         for slot in self.slots.iter_mut() {
             let Some(seq) = slot.as_mut() else { continue };
             if seq.prefill_left > 0 {
                 continue;
             }
-            let k = (1 + seq.rng.below(4)).min(seq.max_new - seq.produced.len());
+            let k = (1 + seq.rng.below(width))
+                .min(seq.max_new - seq.produced.len());
             let mut delta = TokenDelta { id: seq.id, tokens: Vec::new() };
             for _ in 0..k {
                 let tok = seq.rng.below(1000) as i32;
@@ -660,6 +808,9 @@ impl SchedBackend for MockSched {
                 delta.tokens.push(tok);
             }
             seq.steps += 1;
+            if let Some(beta) = self.beta.as_mut() {
+                beta.observe(k);
+            }
             report.emitted.push(delta);
         }
 

@@ -7,87 +7,191 @@
 //! this module builds. The paper's CTC Transform patches candidate content
 //! *before* this tree is built (see `ctc::transform_paths`), so removed
 //! blank/duplicate positions never appear in the attention map.
+//!
+//! Layout (PR 3): the tree is an **arena in SoA form** — flat `tokens` /
+//! `parent` / `first_child` / `next_sibling` arrays plus a per-node ancestor
+//! **bitset** (`anc_mask`) that is extended incrementally as nodes are
+//! pushed (`mask[i] = mask[parent] | 1<<i`). A tree is `rebuild`-able in
+//! place, so the engine's per-slot scratch tree performs zero heap
+//! allocations in steady state; child lookup walks the sibling list instead
+//! of scanning every node, and bias rows come straight off the bitset
+//! instead of re-deriving ancestor chains.
 
 use crate::drafters::CandidatePath;
 
 pub const NEG_INF: f32 = -1e9;
 
-#[derive(Debug, Clone, PartialEq)]
-pub struct TreeNode {
-    pub token: i32,
-    /// parent node index; node 0 (root) has none
-    pub parent: Option<usize>,
-    pub depth: usize,
-    /// cumulative candidate score down to this node (root = 0)
-    pub score: f32,
-}
+/// Hard cap on nodes per tree — the ancestor bitset is one `u128` per node.
+/// Far above any exported verify width (`tree_n` is 32 in the artifacts).
+pub const MAX_TREE_NODES: usize = 128;
 
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct TokenTree {
-    pub nodes: Vec<TreeNode>,
+    tokens: Vec<i32>,
+    /// parent index; -1 for the root
+    parent: Vec<i32>,
+    depth: Vec<u32>,
+    /// cumulative candidate score down to this node (root = 0)
+    score: Vec<f32>,
+    first_child: Vec<i32>,
+    next_sibling: Vec<i32>,
+    /// ancestor-or-self bitset: bit `j` set iff node `j` is on `i`'s chain
+    anc_mask: Vec<u128>,
 }
 
 impl TokenTree {
-    /// Only the base token — the degenerate tree used by vanilla decoding.
-    pub fn root_only(base_token: i32) -> TokenTree {
+    /// An empty arena (no root yet); `reset` before use.
+    pub fn new() -> TokenTree {
+        TokenTree::default()
+    }
+
+    /// Pre-sized arena so steady-state `rebuild` calls never reallocate.
+    pub fn with_capacity(max_nodes: usize) -> TokenTree {
+        let n = max_nodes.min(MAX_TREE_NODES).max(1);
         TokenTree {
-            nodes: vec![TreeNode { token: base_token, parent: None, depth: 0, score: 0.0 }],
+            tokens: Vec::with_capacity(n),
+            parent: Vec::with_capacity(n),
+            depth: Vec::with_capacity(n),
+            score: Vec::with_capacity(n),
+            first_child: Vec::with_capacity(n),
+            next_sibling: Vec::with_capacity(n),
+            anc_mask: Vec::with_capacity(n),
         }
     }
 
-    /// Merge candidate paths (each a continuation *after* the base token)
-    /// into a prefix tree capped at `max_nodes` nodes. Paths are consumed in
-    /// descending score order so the cap keeps the most valuable branches —
-    /// "a group of the most valuable combinations are reserved" (paper §3.3).
-    pub fn from_paths(base_token: i32, paths: &[CandidatePath],
-                      max_nodes: usize) -> TokenTree {
-        let mut tree = TokenTree::root_only(base_token);
-        let mut order: Vec<usize> = (0..paths.len()).collect();
-        order.sort_by(|&a, &b| {
-            paths[b].score.partial_cmp(&paths[a].score)
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
-        for pi in order {
-            let path = &paths[pi];
+    /// Only the base token — the degenerate tree used by vanilla decoding.
+    pub fn root_only(base_token: i32) -> TokenTree {
+        let mut t = TokenTree::with_capacity(1);
+        t.reset(base_token);
+        t
+    }
+
+    /// Clear the arena and install a fresh root (keeps capacity).
+    pub fn reset(&mut self, base_token: i32) {
+        self.tokens.clear();
+        self.parent.clear();
+        self.depth.clear();
+        self.score.clear();
+        self.first_child.clear();
+        self.next_sibling.clear();
+        self.anc_mask.clear();
+        self.tokens.push(base_token);
+        self.parent.push(-1);
+        self.depth.push(0);
+        self.score.push(0.0);
+        self.first_child.push(-1);
+        self.next_sibling.push(-1);
+        self.anc_mask.push(1);
+    }
+
+    /// Append a child of `parent`; returns the new node index.
+    fn push_child(&mut self, parent: usize, token: i32, score: f32) -> usize {
+        let i = self.tokens.len();
+        debug_assert!(i < MAX_TREE_NODES, "tree exceeds MAX_TREE_NODES");
+        self.tokens.push(token);
+        self.parent.push(parent as i32);
+        self.depth.push(self.depth[parent] + 1);
+        self.score.push(score);
+        self.first_child.push(-1);
+        self.next_sibling.push(self.first_child[parent]);
+        self.first_child[parent] = i as i32;
+        self.anc_mask.push(self.anc_mask[parent] | (1u128 << i));
+        i
+    }
+
+    /// Child of `parent` carrying `token`, via the sibling list (no full
+    /// node scan).
+    fn find_child(&self, parent: usize, token: i32) -> Option<usize> {
+        let mut c = self.first_child[parent];
+        while c >= 0 {
+            let ci = c as usize;
+            if self.tokens[ci] == token {
+                return Some(ci);
+            }
+            c = self.next_sibling[ci];
+        }
+        None
+    }
+
+    /// Rebuild the arena in place from candidate continuations (each a path
+    /// *after* the base token), capped at `max_nodes` nodes. `paths` MUST be
+    /// iterated in descending score order so the cap keeps the most valuable
+    /// branches — "a group of the most valuable combinations are reserved"
+    /// (paper §3.3).
+    pub fn rebuild<'a, I>(&mut self, base_token: i32, paths: I, max_nodes: usize)
+    where
+        I: IntoIterator<Item = (&'a [i32], f32)>,
+    {
+        let max_nodes = max_nodes.min(MAX_TREE_NODES);
+        self.reset(base_token);
+        for (tokens, score) in paths {
             let mut cur = 0usize;
-            for (d, &tok) in path.tokens.iter().enumerate() {
-                // find existing child with this token
-                let child = tree
-                    .nodes
-                    .iter()
-                    .position(|n| n.parent == Some(cur) && n.token == tok);
-                match child {
+            for &tok in tokens {
+                match self.find_child(cur, tok) {
                     Some(c) => cur = c,
                     None => {
-                        if tree.nodes.len() >= max_nodes {
+                        if self.len() >= max_nodes {
                             break;
                         }
-                        tree.nodes.push(TreeNode {
-                            token: tok,
-                            parent: Some(cur),
-                            depth: d + 1,
-                            score: path.score,
-                        });
-                        cur = tree.nodes.len() - 1;
+                        cur = self.push_child(cur, tok, score);
                     }
                 }
             }
         }
+    }
+
+    /// Merge candidate paths into a fresh prefix tree (allocating
+    /// convenience over `rebuild`; sorts by score internally).
+    pub fn from_paths(base_token: i32, paths: &[CandidatePath],
+                      max_nodes: usize) -> TokenTree {
+        let mut order: Vec<usize> = (0..paths.len()).collect();
+        order.sort_unstable_by(|&a, &b| {
+            paths[b].score.partial_cmp(&paths[a].score)
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut tree = TokenTree::with_capacity(max_nodes);
+        tree.rebuild(
+            base_token,
+            order.iter().map(|&i| (paths[i].tokens.as_slice(), paths[i].score)),
+            max_nodes,
+        );
         tree
     }
 
     pub fn len(&self) -> usize {
-        self.nodes.len()
+        self.tokens.len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.nodes.is_empty()
+        self.tokens.is_empty()
+    }
+
+    pub fn token(&self, i: usize) -> i32 {
+        self.tokens[i]
+    }
+
+    pub fn parent(&self, i: usize) -> Option<usize> {
+        let p = self.parent[i];
+        if p < 0 { None } else { Some(p as usize) }
+    }
+
+    pub fn depth(&self, i: usize) -> usize {
+        self.depth[i] as usize
+    }
+
+    pub fn score(&self, i: usize) -> f32 {
+        self.score[i]
+    }
+
+    /// Whether node `j` is on node `i`'s ancestor chain (including itself).
+    pub fn sees(&self, i: usize, j: usize) -> bool {
+        j < MAX_TREE_NODES && (self.anc_mask[i] >> j) & 1 == 1
     }
 
     /// Ancestor chain of node `i`, root-first, including `i` itself.
     pub fn ancestry(&self, mut i: usize) -> Vec<usize> {
         let mut chain = vec![i];
-        while let Some(p) = self.nodes[i].parent {
+        while let Some(p) = self.parent(i) {
             chain.push(p);
             i = p;
         }
@@ -96,84 +200,126 @@ impl TokenTree {
     }
 
     pub fn children(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
-        self.nodes
-            .iter()
-            .enumerate()
-            .filter(move |(_, n)| n.parent == Some(i))
-            .map(|(j, _)| j)
+        let mut c = self.first_child[i];
+        std::iter::from_fn(move || {
+            if c < 0 {
+                None
+            } else {
+                let cur = c as usize;
+                c = self.next_sibling[cur];
+                Some(cur)
+            }
+        })
     }
 
-    /// Token ids padded to `n_slots` (pad with `pad_token`).
+    /// Write token ids into `out` (length = slot count), padding with
+    /// `pad_token`.
+    pub fn write_tokens(&self, out: &mut [i32], pad_token: i32) {
+        out.fill(pad_token);
+        let n = self.len().min(out.len());
+        out[..n].copy_from_slice(&self.tokens[..n]);
+    }
+
+    /// Token ids padded to `n_slots` (allocating convenience).
     pub fn tokens_padded(&self, n_slots: usize, pad_token: i32) -> Vec<i32> {
         let mut out = vec![pad_token; n_slots];
-        for (i, n) in self.nodes.iter().enumerate().take(n_slots) {
-            out[i] = n.token;
-        }
+        self.write_tokens(&mut out, pad_token);
         out
     }
 
-    /// Absolute positions (base_pos + depth) padded to `n_slots`.
+    /// Write absolute positions (base_pos + depth) into `out`; padded slots
+    /// get `base_pos`.
+    pub fn write_positions(&self, out: &mut [i32], base_pos: usize) {
+        out.fill(base_pos as i32);
+        for i in 0..self.len().min(out.len()) {
+            out[i] = (base_pos + self.depth[i] as usize) as i32;
+        }
+    }
+
+    /// Absolute positions padded to `n_slots` (allocating convenience).
     pub fn positions_padded(&self, base_pos: usize, n_slots: usize) -> Vec<i32> {
         let mut out = vec![base_pos as i32; n_slots];
-        for (i, n) in self.nodes.iter().enumerate().take(n_slots) {
-            out[i] = (base_pos + n.depth) as i32;
-        }
+        self.write_positions(&mut out, base_pos);
         out
     }
 
-    /// Additive attention bias `[n_slots, lmax + n_slots]` for one sequence:
-    /// node `i` sees cache positions `< cache_len` and its ancestor chain
-    /// (incl. itself) in the tree block. Padded slots see only themselves
+    /// Write the additive attention bias `[n_slots, lmax + n_slots]` for one
+    /// sequence into `out`: node `i` sees cache positions `< cache_len` and
+    /// its ancestor chain (incl. itself) in the tree block — straight off
+    /// the incremental ancestor bitset. Padded slots see only themselves
     /// (keeps softmax well-defined; their outputs are ignored).
-    pub fn attention_bias(&self, cache_len: usize, lmax: usize,
-                          n_slots: usize) -> Vec<f32> {
+    pub fn write_bias(&self, out: &mut [f32], cache_len: usize, lmax: usize,
+                      n_slots: usize) {
         let m = lmax + n_slots;
-        let mut bias = vec![NEG_INF; n_slots * m];
+        debug_assert_eq!(out.len(), n_slots * m);
         for i in 0..n_slots {
-            let row = &mut bias[i * m..(i + 1) * m];
-            if i < self.nodes.len() {
+            let row = &mut out[i * m..(i + 1) * m];
+            if i < self.len() {
                 row[..cache_len].fill(0.0);
-                for a in self.ancestry(i) {
-                    row[lmax + a] = 0.0;
+                row[cache_len..lmax].fill(NEG_INF);
+                let mask = self.anc_mask[i];
+                for (j, b) in row[lmax..].iter_mut().enumerate() {
+                    // j >= MAX_TREE_NODES cannot hold a node (and would
+                    // overflow the u128 shift)
+                    *b = if j < MAX_TREE_NODES && (mask >> j) & 1 == 1 {
+                        0.0
+                    } else {
+                        NEG_INF
+                    };
                 }
             } else {
+                row.fill(NEG_INF);
                 row[lmax + i] = 0.0; // padded slot: self-attention only
             }
         }
+    }
+
+    /// Additive attention bias (allocating convenience over `write_bias`).
+    pub fn attention_bias(&self, cache_len: usize, lmax: usize,
+                          n_slots: usize) -> Vec<f32> {
+        let mut bias = vec![NEG_INF; n_slots * (lmax + n_slots)];
+        self.write_bias(&mut bias, cache_len, lmax, n_slots);
         bias
     }
 
-    /// Greedy token-tree verification: walk from the root following the base
-    /// model's argmax at each accepted node. Returns the accepted node
-    /// indices in order (always starts with the root) and the next base
-    /// token (the argmax at the last accepted node).
+    /// Greedy token-tree verification into a caller-owned buffer: walk from
+    /// the root following the base model's argmax at each accepted node.
+    /// Fills `out` with the accepted node indices in order (always starts
+    /// with the root) and returns the next base token (the argmax at the
+    /// last accepted node).
     ///
     /// `argmax_at(node_idx) -> token` abstracts the logits row lookup.
-    pub fn greedy_accept(&self, mut argmax_at: impl FnMut(usize) -> i32)
-                         -> (Vec<usize>, i32) {
-        let mut accepted = vec![0usize];
+    pub fn greedy_accept_into(&self, out: &mut Vec<usize>,
+                              mut argmax_at: impl FnMut(usize) -> i32) -> i32 {
+        out.clear();
+        out.push(0);
         let mut cur = 0usize;
         loop {
             let want = argmax_at(cur);
-            let next = self
-                .children(cur)
-                .find(|&c| self.nodes[c].token == want);
-            match next {
+            match self.find_child(cur, want) {
                 Some(c) => {
-                    accepted.push(c);
+                    out.push(c);
                     cur = c;
                 }
-                None => return (accepted, want),
+                None => return want,
             }
         }
+    }
+
+    /// Allocating convenience over `greedy_accept_into`.
+    pub fn greedy_accept(&self, argmax_at: impl FnMut(usize) -> i32)
+                         -> (Vec<usize>, i32) {
+        let mut accepted = Vec::with_capacity(self.len());
+        let next = self.greedy_accept_into(&mut accepted, argmax_at);
+        (accepted, next)
     }
 
     /// Total nodes at each depth (diagnostics / tests).
     pub fn depth_histogram(&self) -> Vec<usize> {
-        let max_d = self.nodes.iter().map(|n| n.depth).max().unwrap_or(0);
+        let max_d = self.depth.iter().copied().max().unwrap_or(0) as usize;
         let mut h = vec![0; max_d + 1];
-        for n in &self.nodes {
-            h[n.depth] += 1;
+        for &d in &self.depth {
+            h[d as usize] += 1;
         }
         h
     }
@@ -196,9 +342,9 @@ mod tests {
         );
         // root + shared [1,2] + leaves 3,4 + 5 = 6 nodes
         assert_eq!(t.len(), 6);
-        assert_eq!(t.nodes[0].token, 9);
-        let ones: Vec<_> = t.nodes.iter().filter(|n| n.token == 1).collect();
-        assert_eq!(ones.len(), 1, "shared prefix must not duplicate");
+        assert_eq!(t.token(0), 9);
+        let ones = (0..t.len()).filter(|&i| t.token(i) == 1).count();
+        assert_eq!(ones, 1, "shared prefix must not duplicate");
     }
 
     #[test]
@@ -210,7 +356,7 @@ mod tests {
         );
         assert_eq!(t.len(), 3);
         // best path [7] must be present; worst path truncated
-        assert!(t.nodes.iter().any(|n| n.token == 7));
+        assert!((0..t.len()).any(|i| t.token(i) == 7));
     }
 
     #[test]
@@ -243,17 +389,51 @@ mod tests {
     }
 
     #[test]
+    fn write_bias_matches_mask_and_reuses_buffer() {
+        let t = TokenTree::from_paths(
+            1, &[path(&[3, 4], -0.1), path(&[3, 5], -0.2), path(&[6], -0.3)], 16);
+        let (lmax, n) = (12, 8);
+        let mut buf = vec![0.42f32; n * (lmax + n)];
+        t.write_bias(&mut buf, 5, lmax, n);
+        for i in 0..t.len() {
+            for j in 0..t.len() {
+                let visible = buf[i * (lmax + n) + lmax + j] == 0.0;
+                assert_eq!(visible, t.ancestry(i).contains(&j),
+                           "node {i} -> {j}");
+                assert_eq!(visible, t.sees(i, j));
+            }
+        }
+        // a second write over the dirty buffer must give identical rows
+        let fresh = t.attention_bias(5, lmax, n);
+        assert_eq!(buf, fresh);
+    }
+
+    #[test]
+    fn rebuild_reuses_arena() {
+        let mut t = TokenTree::with_capacity(16);
+        t.rebuild(7, [(&[1i32, 2][..], -0.1)], 16);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.depth(2), 2);
+        t.rebuild(9, [(&[4i32][..], -0.1), (&[4i32, 5][..], -0.2)], 16);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.token(0), 9);
+        assert_eq!(t.token(1), 4);
+        assert_eq!(t.parent(2), Some(1));
+        assert_eq!(t.ancestry(2), vec![0, 1, 2]);
+    }
+
+    #[test]
     fn greedy_accept_follows_argmax() {
         // tree: root(9) -> 1 -> 2 ; root -> 5
         let t = TokenTree::from_paths(9, &[path(&[1, 2], -0.1), path(&[5], -0.2)], 32);
         // argmax: at root choose 1, at node "1" choose 2, at node "2" choose 77
-        let (acc, next) = t.greedy_accept(|i| match t.nodes[i].token {
+        let (acc, next) = t.greedy_accept(|i| match t.token(i) {
             9 => 1,
             1 => 2,
             2 => 77,
             _ => 0,
         });
-        let toks: Vec<i32> = acc.iter().map(|&i| t.nodes[i].token).collect();
+        let toks: Vec<i32> = acc.iter().map(|&i| t.token(i)).collect();
         assert_eq!(toks, vec![9, 1, 2]);
         assert_eq!(next, 77);
     }
@@ -287,5 +467,16 @@ mod tests {
         let t = TokenTree::from_paths(
             0, &[path(&[1, 2], -0.1), path(&[1, 2], -0.3)], 32);
         assert_eq!(t.len(), 3);
+    }
+
+    #[test]
+    fn children_walks_sibling_list() {
+        let t = TokenTree::from_paths(
+            0, &[path(&[1], -0.1), path(&[2], -0.2), path(&[3], -0.3)], 32);
+        let mut kids: Vec<i32> =
+            t.children(0).map(|c| t.token(c)).collect();
+        kids.sort_unstable();
+        assert_eq!(kids, vec![1, 2, 3]);
+        assert_eq!(t.children(1).count(), 0);
     }
 }

@@ -141,6 +141,57 @@ fn temperature_sampling_is_seed_deterministic() {
     assert_ne!(a.token_ids, c.token_ids, "different seed should diverge");
 }
 
+/// PR-3 RNG audit regression: the prefill base-token pick now advances the
+/// sequence's REAL rng (the seed code sampled from a discarded clone).
+/// Same-seed engines must still reproduce each other across *sequential*
+/// generations — i.e. the advanced state is itself deterministic and no
+/// state is accidentally reused between prefill and decode.
+#[test]
+fn temperature_rng_advances_deterministically_across_requests() {
+    let mk = || engine_cfg(EngineConfig {
+        method: Method::Ctc,
+        temperature: 0.8,
+        seed: 11,
+        ..EngineConfig::default()
+    });
+    let Some(mut a) = mk() else { return };
+    let Some(mut b) = mk() else { return };
+    let prompt = a.format_prompt("Write a short paragraph about the ocean.");
+    let a1 = a.generate(&prompt, 24).expect("a1");
+    let a2 = a.generate(&prompt, 24).expect("a2");
+    let b1 = b.generate(&prompt, 24).expect("b1");
+    let b2 = b.generate(&prompt, 24).expect("b2");
+    assert_eq!(a1.token_ids, b1.token_ids, "first generation must replay");
+    assert_eq!(a2.token_ids, b2.token_ids, "second generation must replay");
+}
+
+/// Adaptive β is lossless for a lonely sequence: at batch size 1 a fresh
+/// controller reproduces the fixed budget, so greedy outputs are identical
+/// token for token.
+#[test]
+fn adaptive_beta_single_sequence_matches_fixed() {
+    use ctcdraft::adapt::BetaPolicy;
+    let mk = |policy| engine_cfg(EngineConfig {
+        method: Method::Ctc,
+        beta_policy: policy,
+        ..EngineConfig::default()
+    });
+    let Some(mut fixed) = mk(BetaPolicy::Fixed) else { return };
+    let Some(mut adaptive) = mk(BetaPolicy::Adaptive) else { return };
+    for q in ["What is 12 times 4?", "Why is the sky blue?"] {
+        let prompt = fixed.format_prompt(q);
+        let f = fixed.generate(&prompt, 32).expect("fixed");
+        let a = adaptive.generate(&prompt, 32).expect("adaptive");
+        // spec decoding may overshoot max_new inside the final tree step by
+        // different amounts per tree shape; compare on the common prefix
+        // (greedy tree verification is lossless for any tree)
+        let n = f.token_ids.len().min(a.token_ids.len());
+        assert!(n > 0, "empty generation on {q:?}");
+        assert_eq!(&f.token_ids[..n], &a.token_ids[..n],
+                   "adaptive β changed greedy output on {q:?}");
+    }
+}
+
 #[test]
 fn long_generation_respects_cache_capacity() {
     let Some(mut engine) = engine(Method::Ctc) else { return };

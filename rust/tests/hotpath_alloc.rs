@@ -1,0 +1,132 @@
+//! Zero-allocation gate for the draft→verify hot path (PR 3 tentpole).
+//!
+//! Registers `testkit::alloc::CountingAllocator` as the global allocator
+//! and drives the full host side of a steady-state `step_ex` decode round —
+//! CTC prefix beam search into a `PathSet` arena, token-tree rebuild in the
+//! SoA arena, token/position/bias assembly into reused buffers, greedy
+//! acceptance into a reused index buffer, KV commit straight from the
+//! batch-shaped verify output, and the incremental batch gather — and
+//! asserts the warm loop performs ZERO heap allocations.
+//!
+//! Scope is the host COMPUTE stages, mirrored here stage-for-stage; it is
+//! a mirror rather than a runtime-backed `step_ex` call because the two
+//! documented exceptions sit inline in the real loop and allocate by
+//! design: the XLA literal/tensor boundary (graph-call-owned buffers that
+//! cannot borrow scratch) and the per-round outputs handed to callers
+//! (`TokenDelta` token vecs, `gen_ids`/stats growth, the `StepReport`).
+//! A regression in those paths is NOT caught here — only the draft→
+//! transform→tree→bias→accept→commit/gather kernel is gated.
+//!
+//! This binary holds exactly one #[test]: the allocation counters are
+//! process-global, so a concurrently running test would pollute the
+//! measurement.
+
+use ctcdraft::ctc::{prefix_beam_search_into, BeamScratch};
+use ctcdraft::drafters::PathSet;
+use ctcdraft::kvcache::SeqCache;
+use ctcdraft::testkit::alloc::{self, CountingAllocator};
+use ctcdraft::testkit::gen;
+use ctcdraft::tree::TokenTree;
+use ctcdraft::util::rng::Rng;
+
+#[global_allocator]
+static ALLOC: CountingAllocator = CountingAllocator::new();
+
+/// One steady-state host round over pre-owned scratch. Mirrors the engine's
+/// step_ex stages 1-4 for a single sequence.
+#[allow(clippy::too_many_arguments)]
+fn host_round(lp: &[f32], slots: usize, vp1: usize, beam: &mut BeamScratch,
+              paths: &mut PathSet, tree: &mut TokenTree, tokens: &mut [i32],
+              pos: &mut [i32], bias: &mut [f32], accepted: &mut Vec<usize>,
+              cache: &mut SeqCache, kv_src: &[f32], bk: &mut [f32],
+              bv: &mut [f32], synced: &mut usize, lmax: usize,
+              n_slots: usize) -> usize {
+    // 1. draft: CTC transform realized as prefix beam search
+    prefix_beam_search_into(beam, lp, slots, vp1, 8, 16, 6, paths);
+    // 2. tree + verify-graph inputs
+    tree.rebuild(7, paths.iter_sorted(), n_slots);
+    tree.write_tokens(tokens, 0);
+    tree.write_positions(pos, cache.len);
+    tree.write_bias(bias, cache.len, lmax, n_slots);
+    // 3. (graph call happens here in the engine — XLA boundary, exempt)
+    // 4. accept + commit: walk a deterministic pseudo-argmax, commit the
+    //    accepted rows from the batch-shaped output, gather incrementally
+    let next = tree.greedy_accept_into(accepted, |node| {
+        // pseudo base-model argmax: a fixed function of the node token so
+        // some children match and some do not
+        (tree.token(node) * 31 + 7) % 512
+    });
+    if cache.len + accepted.len() + n_slots >= lmax {
+        cache.truncate(0);
+        *synced = 0;
+    }
+    cache
+        .append_from_batch(kv_src, kv_src, 1, 0, n_slots, accepted)
+        .expect("kv commit");
+    cache.copy_new_into_batch(bk, bv, 0, 1, *synced);
+    *synced = cache.len;
+    next as usize
+}
+
+#[test]
+fn steady_state_host_round_allocates_zero_bytes() {
+    // sanity: the counting allocator is live in this binary
+    let before = alloc::snapshot();
+    let probe: Vec<u8> = Vec::with_capacity(4096);
+    drop(probe);
+    let probe_delta = alloc::delta(before);
+    assert!(probe_delta.calls >= 1 && probe_delta.bytes >= 4096,
+            "counting allocator not registered? {probe_delta:?}");
+
+    let (slots, vp1) = (8usize, 513usize);
+    let (layers, heads, head_dim, lmax) = (2usize, 2usize, 8usize, 256usize);
+    let n_slots = 32usize;
+    let re = heads * head_dim;
+    let mut rng = Rng::new(5);
+    let logps: Vec<Vec<f32>> = (0..4)
+        .map(|_| gen::logp_matrix(&mut rng, slots, vp1))
+        .collect();
+    let kv_src: Vec<f32> = (0..layers * n_slots * re)
+        .map(|i| (i % 89) as f32)
+        .collect();
+
+    // scratch, owned outside the measured region (the engine owns these
+    // across rounds in HotScratch)
+    let mut beam = BeamScratch::new();
+    let mut paths = PathSet::with_capacity(16, 6);
+    let mut tree = TokenTree::with_capacity(n_slots);
+    let mut tokens = vec![0i32; n_slots];
+    let mut pos = vec![0i32; n_slots];
+    let mut bias = vec![0f32; n_slots * (lmax + n_slots)];
+    let mut accepted: Vec<usize> = Vec::with_capacity(64);
+    let mut cache = SeqCache::new(layers, lmax, heads, head_dim);
+    let mut bk = vec![0f32; layers * lmax * re];
+    let mut bv = vec![0f32; layers * lmax * re];
+    let mut synced = 0usize;
+
+    // warmup: fills every scratch arena to its steady-state capacity
+    // (capacities are data-independent worst cases, so a few rounds with
+    // each input shape suffice)
+    let mut sink = 0usize;
+    for r in 0..8 {
+        sink ^= host_round(&logps[r % logps.len()], slots, vp1, &mut beam,
+                           &mut paths, &mut tree, &mut tokens, &mut pos,
+                           &mut bias, &mut accepted, &mut cache, &kv_src,
+                           &mut bk, &mut bv, &mut synced, lmax, n_slots);
+    }
+
+    // measured steady state: zero heap allocations across many rounds
+    let start = alloc::snapshot();
+    for r in 0..200 {
+        sink ^= host_round(&logps[r % logps.len()], slots, vp1, &mut beam,
+                           &mut paths, &mut tree, &mut tokens, &mut pos,
+                           &mut bias, &mut accepted, &mut cache, &kv_src,
+                           &mut bk, &mut bv, &mut synced, lmax, n_slots);
+    }
+    let used = alloc::delta(start);
+    std::hint::black_box(sink);
+    assert_eq!(used.calls, 0,
+               "steady-state hot round made {} allocation calls ({} bytes)",
+               used.calls, used.bytes);
+    assert_eq!(used.bytes, 0);
+}

@@ -4,6 +4,7 @@
 
 use std::cmp::Ordering;
 
+use ctcdraft::adapt::{BetaController, BetaPolicy};
 use ctcdraft::ctc;
 use ctcdraft::drafters::{log_softmax_row, topk, CandidatePath};
 use ctcdraft::sched::{Priority, ReqMeta, SloPolicy};
@@ -144,23 +145,27 @@ fn prop_tree_structure_invariants() {
         if tree.len() > max_nodes {
             return Err(format!("tree exceeded cap: {}", tree.len()));
         }
-        if tree.nodes[0].parent.is_some() || tree.nodes[0].depth != 0 {
+        if tree.parent(0).is_some() || tree.depth(0) != 0 {
             return Err("bad root".into());
         }
-        for (i, node) in tree.nodes.iter().enumerate().skip(1) {
-            let p = node.parent.ok_or("non-root without parent")?;
+        for i in 1..tree.len() {
+            let p = tree.parent(i).ok_or("non-root without parent")?;
             if p >= i {
                 return Err(format!("parent {p} not before child {i}"));
             }
-            if node.depth != tree.nodes[p].depth + 1 {
+            if tree.depth(i) != tree.depth(p) + 1 {
                 return Err("depth mismatch".into());
+            }
+            // sibling-list reachability: child must be found from its parent
+            if !tree.children(p).any(|c| c == i) {
+                return Err(format!("node {i} unreachable from parent {p}"));
             }
         }
         // no duplicate (parent, token) pairs
         for i in 1..tree.len() {
             for j in (i + 1)..tree.len() {
-                if tree.nodes[i].parent == tree.nodes[j].parent
-                    && tree.nodes[i].token == tree.nodes[j].token
+                if tree.parent(i) == tree.parent(j)
+                    && tree.token(i) == tree.token(j)
                 {
                     return Err("duplicate sibling token".into());
                 }
@@ -230,7 +235,7 @@ fn prop_greedy_accept_consistent_with_chain() {
             })
             .collect();
         let (accepted, next) =
-            tree.greedy_accept(|node| answers[tree.nodes[node].depth]);
+            tree.greedy_accept(|node| answers[tree.depth(node)]);
         if accepted.len() != cut + 1 {
             return Err(format!(
                 "accepted {} nodes, expected {}", accepted.len(), cut + 1));
@@ -305,6 +310,155 @@ fn prop_json_roundtrip() {
         let back = parse(&text).map_err(|e| format!("{e} for {text}"))?;
         if back != v {
             return Err(format!("roundtrip mismatch: {text}"));
+        }
+        Ok(())
+    });
+}
+
+// ------------------------------------------------- β-adaptive properties
+
+/// Build the candidate set a `DraftPlan` admits: the best `max_paths`
+/// paths, each truncated to `max_len`, merged under the `tree_nodes` cap.
+/// `sorted` must be in strictly descending score order.
+fn plan_tree(sorted: &[CandidatePath], paths: usize, max_len: usize,
+             nodes: usize) -> TokenTree {
+    let trimmed: Vec<CandidatePath> = sorted
+        .iter()
+        .take(paths)
+        .map(|p| CandidatePath {
+            tokens: p.tokens[..p.tokens.len().min(max_len)].to_vec(),
+            score: p.score,
+        })
+        .collect();
+    TokenTree::from_paths(0, &trimmed, nodes)
+}
+
+/// The satellite property behind `--beta-policy adaptive` being lossless:
+/// greedy tree acceptance is **prefix-stable under tree growth**. The
+/// adaptive controller only ever *narrows* the fixed budget (fewer paths,
+/// shallower, fewer nodes), and a narrower tree's node set is a subset of
+/// the fixed tree's — so for the same base-model argmax (a pure function of
+/// each node's root→node token chain, which is exactly what tree attention
+/// guarantees), the narrow tree accepts a prefix of the wide tree's tokens.
+/// Adaptive β never changes WHICH tokens are accepted, only how many are
+/// accepted per round. At equal width the acceptance is identical.
+#[test]
+fn prop_adaptive_beta_acceptance_is_prefix_of_fixed() {
+    Prop::new("beta_prefix_stable").check(|rng| {
+        let n_paths = 2 + rng.below(8);
+        let mut sorted: Vec<CandidatePath> = (0..n_paths)
+            .map(|i| {
+                let mut t = gen::token_seq(rng, 5, 12);
+                if t.is_empty() {
+                    t.push(1);
+                }
+                // strictly distinct scores: ties would make the sorted
+                // order (and thus the insertion sequence) ambiguous
+                CandidatePath { tokens: t, score: -(i as f32) * 0.5 }
+            })
+            .collect();
+        sorted.sort_by(|a, b| {
+            b.score.partial_cmp(&a.score).unwrap_or(Ordering::Equal)
+        });
+        let seed = rng.next_u64();
+        // oracle argmax: pure function of the node's token chain
+        let oracle = |tree: &TokenTree, node: usize| -> i32 {
+            let mut h = seed;
+            for &a in &tree.ancestry(node) {
+                h = h.wrapping_mul(0x100_0000_01b3)
+                    .wrapping_add(tree.token(a) as u64 + 1);
+            }
+            (h % 12) as i32
+        };
+        // fixed budget wide enough that its node cap NEVER binds (max
+        // 1 + 8*5 = 41 nodes < 64) — so the fixed tree holds every chain
+        // any narrower adaptive plan can build, and subset => walk prefix
+        let fixed = BetaController::new(BetaPolicy::Fixed, 8, 64, 5);
+        let fp = fixed.plan(1);
+        let tf = plan_tree(&sorted, fp.max_paths, fp.max_len, fp.tree_nodes);
+        let (acc_f, next_f) = tf.greedy_accept(|n| oracle(&tf, n));
+        let toks_f: Vec<i32> = acc_f.iter().map(|&i| tf.token(i)).collect();
+
+        // a FRESH adaptive controller at batch 1 must reproduce the fixed
+        // plan — and therefore the exact same accepted tokens ("adaptive β
+        // never changes which tokens are accepted at the same width")
+        let fresh = BetaController::new(BetaPolicy::Adaptive, 8, 64, 5);
+        let ap1 = fresh.plan(1);
+        if ap1 != fp {
+            return Err(format!("fresh adaptive plan {ap1:?} != fixed {fp:?}"));
+        }
+        let t1 = plan_tree(&sorted, ap1.max_paths, ap1.max_len, ap1.tree_nodes);
+        let (acc_1, next_1) = t1.greedy_accept(|n| oracle(&t1, n));
+        let toks_1: Vec<i32> = acc_1.iter().map(|&i| t1.token(i)).collect();
+        if toks_1 != toks_f || next_1 != next_f {
+            return Err("equal-width plans diverged".into());
+        }
+
+        // with observation history and growing batch, adaptive only
+        // narrows — acceptance must stay a prefix of the fixed acceptance
+        let mut adaptive = BetaController::new(BetaPolicy::Adaptive, 8, 64, 5);
+        for _ in 0..rng.below(40) {
+            adaptive.observe(rng.below(6));
+        }
+        for batch in 1..=8usize {
+            let ap = adaptive.plan(batch);
+            if ap.max_paths > fp.max_paths || ap.max_len > fp.max_len
+                || ap.tree_nodes > fp.tree_nodes
+            {
+                return Err(format!(
+                    "adaptive plan exceeds the fixed budget: {ap:?} vs {fp:?}"));
+            }
+            let ta =
+                plan_tree(&sorted, ap.max_paths, ap.max_len, ap.tree_nodes);
+            let (acc_a, _) = ta.greedy_accept(|n| oracle(&ta, n));
+            let toks_a: Vec<i32> =
+                acc_a.iter().map(|&i| ta.token(i)).collect();
+            if !toks_f.starts_with(&toks_a) {
+                return Err(format!(
+                    "batch {batch}: adaptive acceptance {toks_a:?} is not a \
+                     prefix of fixed acceptance {toks_f:?}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Tree growth in the other direction: adding more candidate paths (wider
+/// beams at small batch) never rewrites already-accepted tokens either.
+#[test]
+fn prop_acceptance_prefix_stable_under_tree_growth() {
+    Prop::new("tree_growth_prefix").check(|rng| {
+        let n_paths = 2 + rng.below(7);
+        let sorted: Vec<CandidatePath> = (0..n_paths)
+            .map(|i| {
+                let mut t = gen::token_seq(rng, 5, 12);
+                if t.is_empty() {
+                    t.push(2);
+                }
+                CandidatePath { tokens: t, score: -(i as f32) * 0.25 }
+            })
+            .collect();
+        let seed = rng.next_u64();
+        let oracle = |tree: &TokenTree, node: usize| -> i32 {
+            let mut h = seed ^ 0xABCD;
+            for &a in &tree.ancestry(node) {
+                h = h.wrapping_mul(0x100_0000_01b3)
+                    .wrapping_add(tree.token(a) as u64 + 1);
+            }
+            (h % 12) as i32
+        };
+        let mut prev: Option<Vec<i32>> = None;
+        for w in 1..=sorted.len() {
+            let tree = TokenTree::from_paths(0, &sorted[..w], 2 + 5 * w);
+            let (acc, _) = tree.greedy_accept(|n| oracle(&tree, n));
+            let toks: Vec<i32> = acc.iter().map(|&i| tree.token(i)).collect();
+            if let Some(prev) = &prev {
+                if !toks.starts_with(prev) {
+                    return Err(format!(
+                        "width {w}: {toks:?} does not extend {prev:?}"));
+                }
+            }
+            prev = Some(toks);
         }
         Ok(())
     });
