@@ -17,19 +17,28 @@ CTCD_PROP_FAST=1 cargo test -q
 
 # Determinism audit: two replays of the same seeded class-tagged trace must
 # produce byte-identical scheduler event logs — under BOTH β policies
-# (fixed and batch-adaptive). Any diff fails the gate.
+# (fixed and batch-adaptive), and for BOTH the single-worker mock and the
+# two-workers-over-one-shared-pool cluster (placement + lease stealing on
+# the replay path). Any diff fails the gate.
 for seed in 7 41; do
   for beta in fixed adaptive; do
-    a="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta")"
-    b="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta")"
-    if [ "$a" != "$b" ]; then
-      echo "FAIL: SchedulerSim replay (seed $seed, beta $beta) is nondeterministic" >&2
-      diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
-      exit 1
-    fi
+    for workers in 1 2; do
+      a="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta" --workers "$workers")"
+      b="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta" --workers "$workers")"
+      if [ "$a" != "$b" ]; then
+        echo "FAIL: SchedulerSim replay (seed $seed, beta $beta, workers $workers) is nondeterministic" >&2
+        diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
+        exit 1
+      fi
+    done
   done
 done
-echo "scheduler-sim replay determinism (fixed + adaptive beta): OK"
+# the cluster replay must actually route through the placement policy
+if ! ./target/release/ctcdraft sim --seed 7 --workers 2 | grep -q " place id="; then
+  echo "FAIL: cluster sim log records no placement decisions" >&2
+  exit 1
+fi
+echo "scheduler-sim replay determinism (fixed + adaptive beta, 1 + 2 workers): OK"
 
 # Bench smoke: the micro hot-path bench must run in --smoke mode and leave
 # a well-formed machine-readable BENCH_micro_hotpath.json behind (the
@@ -54,5 +63,20 @@ need = {"hotpath_round(legacy)", "hotpath_round(scratch)"}
 missing = need - names
 assert not missing, f"missing hot-round entries: {missing}"
 print("BENCH_micro_hotpath.json: OK (%d entries)" % len(results))
+
+# Perf ratchet (machine-readable, CI-enforced): the arena/scratch hot round
+# must stay within 1.15x of the legacy (seed) implementation's mean in the
+# smoke run. A regression past that fails the gate — the cross-PR perf
+# trajectory is enforced, not just recorded.
+by_name = {r["name"]: r for r in results}
+legacy = by_name["hotpath_round(legacy)"]["mean_s"]
+scratch = by_name["hotpath_round(scratch)"]["mean_s"]
+assert legacy > 0, "legacy hot-round mean is zero — bench broken"
+ratio = scratch / legacy
+limit = 1.15
+assert ratio <= limit, (
+    f"PERF RATCHET FAIL: hotpath_round(scratch) mean {scratch:.3e}s is "
+    f"{ratio:.2f}x legacy ({legacy:.3e}s); limit {limit}x")
+print(f"perf ratchet: OK (scratch/legacy mean ratio {ratio:.2f} <= {limit})")
 EOF
 echo "bench smoke: OK"

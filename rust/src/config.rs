@@ -263,6 +263,9 @@ pub struct EngineConfig {
     /// KV block-pool capacity in positions; 0 = lmax × max slots (never
     /// exhausts). Smaller values turn on real admission pressure: queued
     /// requests wait for pool room and running ones can be preempted.
+    /// Under the server this sizes the ONE `SharedBlockPool` every worker
+    /// leases from (cluster-wide total; 0 scales the default by the worker
+    /// count) — see `Engine::new_leased`.
     pub kv_pool_positions: usize,
     /// Engine-side admit-queue bound; 0 = unbounded. When the queue is at
     /// the cap, `submit` reports `Submission::Busy` (backpressure).

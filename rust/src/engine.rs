@@ -15,11 +15,21 @@
 //!      accepted nodes' KV rows are committed to the host cache and their
 //!      hidden states pushed into the draft window.
 //!
+//! KV capacity (PR 4): the engine does not own a private block pool any
+//! more — it holds a `kvcache::PoolLease` on a (possibly process-wide)
+//! `SharedBlockPool`. Under the server, every worker leases from ONE pool,
+//! so pool pressure is a cluster condition: a worker preempts only when
+//! refill AND lease stealing both come up empty, never because its private
+//! slice ran out while a neighbor idled on free blocks.
+//!
 //! Hot-path memory discipline (PR 3): every per-round buffer the loop needs
 //! lives in the engine-owned `HotScratch` — per-slot candidate `PathSet`
 //! arenas the drafter fills, per-slot reusable `TokenTree`s, the batch
-//! token/position/bias buffers, the accepted-node scratch, and the
-//! temperature-sampling weight buffer. The KV batch gather is incremental:
+//! token/position/bias buffers, the batch KV gather buffers (`batch_k`/
+//! `batch_v`, co-located with the `synced` watermarks that describe them),
+//! the accepted-node scratch, and the temperature-sampling weight buffer.
+//! Lease acquisition is atomic-only, so pool accounting adds no steady-
+//! state allocations. The KV batch gather is incremental:
 //! per slot the engine tracks how many cache rows are already resident in
 //! the reusable batch tensors and copies only the rows appended since the
 //! last round. In steady state the host *compute* stages of a decode round
@@ -42,10 +52,10 @@ use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
 use crate::config::{EngineConfig, Method};
 use crate::drafters::{make_drafter, DraftCtx, DraftSource, DraftTiming,
                       Drafter, PathSet};
-use crate::kvcache::{BlockPool, SeqCache};
+use crate::kvcache::{PoolLease, SeqCache};
 use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
                      StageBreakdown};
-use crate::sched::{Priority, ReqMeta};
+use crate::sched::{AdmitRate, Priority, ReqMeta};
 
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
@@ -104,9 +114,13 @@ pub enum Submission {
     /// Request went straight into a free batch slot.
     Admitted(u64),
     /// Request parked in the wait queue at `pos` (0 = next up).
-    Queued { id: u64, pos: usize },
-    /// Wait queue at its cap — backpressure; retry later.
-    Busy,
+    /// `est_start_step` is the deadline-aware hint: the absolute virtual
+    /// step at which this position is expected to reach a slot, from the
+    /// scheduler's observed admission rate (`sched::AdmitRate`).
+    Queued { id: u64, pos: usize, est_start_step: u64 },
+    /// Wait queue at its cap — backpressure. `retry_after_steps` estimates
+    /// how many scheduler steps until a queue seat plausibly frees.
+    Busy { retry_after_steps: u64 },
 }
 
 /// Newly accepted tokens for one sequence in one scheduler round — the
@@ -282,7 +296,13 @@ struct HotScratch {
     bias: Vec<f32>,
     /// temperature-sampling weight buffer (vocab-sized, reused per node)
     weights: Vec<f64>,
-    /// per-slot cache rows already resident in the decode batch buffers
+    /// reusable `[L, gb, Lmax, H, Dh]` decode-batch KV gather buffers
+    /// (perf: avoids a multi-MB alloc+zero per step; stale inactive-slot
+    /// contents are masked by the bias). Live HERE, next to the `synced`
+    /// watermarks that describe their contents (PR 3 review note).
+    batch_k: Vec<f32>,
+    batch_v: Vec<f32>,
+    /// per-slot cache rows already resident in `batch_k`/`batch_v`
     synced: Vec<usize>,
     /// batch layout (gb) the sync state describes; mismatch = full resync
     synced_gb: usize,
@@ -311,6 +331,8 @@ impl HotScratch {
             tokens: Vec::new(),
             pos: Vec::new(),
             bias: Vec::new(),
+            batch_k: Vec::new(),
+            batch_v: Vec::new(),
             synced: vec![0; max_slots],
             synced_gb: 0,
             prefill_k: Vec::new(),
@@ -327,7 +349,11 @@ pub struct Engine {
     tok: Tokenizer,
     drafter: Box<dyn Drafter>,
     slots: Vec<Option<Seq>>,
-    pool: BlockPool,
+    /// this worker's lease on the (possibly process-wide) KV block pool:
+    /// per-slot allocation ledger over `kvcache::SharedBlockPool`. Capacity
+    /// pressure is cluster-level — `ensure` fails only when every shard and
+    /// the global free list are empty (see `Engine::new_leased`).
+    pool: PoolLease,
     /// admit queue feeding free slots at the top of every step; order is
     /// decided by the SLO policy (class, then slack), not insertion order
     wait_queue: Vec<QueuedReq>,
@@ -340,13 +366,11 @@ pub struct Engine {
     device: DeviceModel,
     base_weight_bytes: f64,
     head_weight_bytes: f64,
-    /// reusable batch-assembly buffers (perf: avoids a multi-MB alloc+zero
-    /// per step; stale inactive-slot contents are masked by the bias).
-    /// Synced incrementally — see `HotScratch::synced`.
-    scratch_k: Vec<f32>,
-    scratch_v: Vec<f32>,
-    /// reusable hot-path buffers (paths, trees, token/pos/bias, sync state)
+    /// reusable hot-path buffers (paths, trees, token/pos/bias, the batch
+    /// KV gather buffers and their sync watermarks)
     scratch: HotScratch,
+    /// observed admission rate — deadline-aware `queued`/`busy` estimates
+    admit_rate: AdmitRate,
     /// β-aware batching controller (ROADMAP: per-step tree width adapted to
     /// batch size and the acceptance EWMA)
     beta: BetaController,
@@ -368,7 +392,28 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Standalone engine owning a private single-worker pool (tests,
+    /// benches, one-engine CLIs). Capacity semantics match the pre-shared-
+    /// pool engine exactly. Pool size: `cfg.kv_pool_positions`, or
+    /// `lmax × max_slots` (never exhausts) when 0.
     pub fn new(rt: Runtime, cfg: EngineConfig) -> Result<Engine> {
+        let max_slots = *rt.manifest.constants.batch_sizes.iter().max().unwrap_or(&1);
+        let pool_positions = if cfg.kv_pool_positions > 0 {
+            cfg.kv_pool_positions
+        } else {
+            rt.manifest.constants.lmax * max_slots
+        };
+        let lease = PoolLease::single(pool_positions, max_slots);
+        Engine::new_leased(rt, cfg, lease)
+    }
+
+    /// Engine over a shared-pool lease: the server constructs ONE
+    /// `kvcache::SharedBlockPool` for the whole process and hands each
+    /// worker its `PoolLease`, so KV capacity is never stranded on an idle
+    /// neighbor — a worker preempts only when the cluster is out of blocks.
+    /// `cfg.kv_pool_positions` is ignored here; the pool is pre-sized.
+    pub fn new_leased(rt: Runtime, cfg: EngineConfig, lease: PoolLease)
+                      -> Result<Engine> {
         if !rt.has_model(&cfg.model) {
             bail!("model '{}' not in artifacts (run `make artifacts`)", cfg.model);
         }
@@ -376,6 +421,15 @@ impl Engine {
         let c = rt.manifest.constants.clone();
         let mcfg = rt.manifest.model(&cfg.model)?.config.clone();
         let max_slots = *rt.manifest.constants.batch_sizes.iter().max().unwrap_or(&1);
+        if lease.shared().block_positions() != crate::kvcache::BLOCK_POSITIONS {
+            bail!("engine pool lease must use {}-position blocks (got {})",
+                  crate::kvcache::BLOCK_POSITIONS,
+                  lease.shared().block_positions());
+        }
+        if lease.max_slots() < max_slots {
+            bail!("pool lease covers {} slots but the engine runs {max_slots}",
+                  lease.max_slots());
+        }
         let drafter = make_drafter(&cfg);
         let rng = Rng::new(cfg.seed);
         // byte sizes for the device-time model (forces weight load)
@@ -388,11 +442,6 @@ impl Engine {
                 rt.head_weights(&cfg.model, head)?;
                 rt.weights_nbytes(&format!("{}#{}", cfg.model, head)) as f64
             }
-        };
-        let pool_positions = if cfg.kv_pool_positions > 0 {
-            cfg.kv_pool_positions
-        } else {
-            c.lmax * max_slots
         };
         // every exported step graph with n > 1 can verify a tree of up to
         // n nodes; index them by batch size once (GraphMeta carries the
@@ -410,7 +459,7 @@ impl Engine {
         }
         Ok(Engine {
             slots: (0..max_slots).map(|_| None).collect(),
-            pool: BlockPool::new(pool_positions, max_slots),
+            pool: lease,
             wait_queue: Vec::new(),
             step_no: 0,
             events: EventLog::default(),
@@ -420,11 +469,10 @@ impl Engine {
             device: DeviceModel::default(),
             base_weight_bytes,
             head_weight_bytes,
-            scratch_k: Vec::new(),
-            scratch_v: Vec::new(),
             scratch: HotScratch::new(max_slots, cfg.max_paths,
                                      c.ctc_target_u.max(1), c.tree_n,
                                      c.vocab_size),
+            admit_rate: AdmitRate::default(),
             beta: BetaController::new(cfg.beta_policy, cfg.max_paths,
                                       c.tree_n, c.ctc_target_u),
             last_plan: None,
@@ -604,8 +652,15 @@ impl Engine {
         &self.metrics
     }
 
+    /// Cluster-wide KV pool utilization in [0, 1] (with a standalone
+    /// engine's private pool, "cluster" is just this worker).
     pub fn pool_utilization(&self) -> f64 {
         self.pool.utilization()
+    }
+
+    /// This worker's lease on the (possibly shared) KV block pool.
+    pub fn pool(&self) -> &PoolLease {
+        &self.pool
     }
 
     pub fn scheduler_step(&self) -> u64 {
@@ -637,15 +692,19 @@ impl Engine {
                          -> Result<Submission> {
         if self.cfg.queue_cap > 0 && self.wait_queue.len() >= self.cfg.queue_cap {
             self.metrics.inc("sched.rejected_busy", 1);
-            return Ok(Submission::Busy);
+            return Ok(Submission::Busy {
+                retry_after_steps: self
+                    .admit_rate
+                    .retry_after_steps(self.wait_queue.len()),
+            });
         }
         let ids = self.tok.encode_with(prompt, true, false);
         let budget = self.prefill_budget(max_new);
         let min_prefill = ids.len().min(budget).max(1);
-        if BlockPool::blocks_for(min_prefill) > self.pool.total_blocks() {
+        if self.pool.blocks_for(min_prefill) > self.pool.total_blocks() {
             bail!(
                 "prompt needs {} KV blocks but the pool holds only {}",
-                BlockPool::blocks_for(min_prefill),
+                self.pool.blocks_for(min_prefill),
                 self.pool.total_blocks()
             );
         }
@@ -667,14 +726,22 @@ impl Engine {
             && self.has_capacity()
             && self.pool.can_fit(min_prefill)
         {
-            let sid = self.admit_req(req)?;
-            return Ok(Submission::Admitted(sid));
+            if let Some(sid) = self.admit_req(req)? {
+                return Ok(Submission::Admitted(sid));
+            }
+            // cross-worker race: admit_req requeued the request — report
+            // it Queued like any other pool-short arrival
+        } else {
+            self.wait_queue.push(req);
         }
-        self.wait_queue.push(req);
         let pos = self.queue_position(id).unwrap_or(self.wait_queue.len() - 1);
         self.events.push(SchedEvent::Queued { step: self.step_no, id, pos });
         self.metrics.inc("sched.queued", 1);
-        Ok(Submission::Queued { id, pos })
+        Ok(Submission::Queued {
+            id,
+            pos,
+            est_start_step: self.admit_rate.est_start_step(self.step_no, pos),
+        })
     }
 
     /// Cancel a queued or running request; frees its slot and pool blocks
@@ -718,15 +785,36 @@ impl Engine {
         self.metrics.inc("sched.submitted", 1);
         self.metrics
             .inc(&format!("sched.submitted.{}", class.name()), 1);
-        self.admit_req(QueuedReq::fresh(id, ids, max_new, class, deadline_step,
-                                        self.step_no))
+        match self.admit_req(QueuedReq::fresh(id, ids, max_new, class,
+                                              deadline_step, self.step_no))? {
+            Some(sid) => Ok(sid),
+            None => {
+                // this path does not gate on can_fit, so with a private
+                // single-shard pool this is ordinary exhaustion; on a
+                // shared pool it can also be cross-worker contention.
+                // Either way: un-queue the request and report the shortfall
+                self.wait_queue.retain(|r| r.id != id);
+                Err(anyhow!(
+                    "kv block pool exhausted: cannot admit ({} blocks free \
+                     of {})",
+                    self.pool.free_blocks(),
+                    self.pool.total_blocks()
+                ))
+            }
+        }
     }
 
     /// Install a request (fresh or evicted) into a free slot: budget-trim
     /// the prefill ids, allocate pool blocks, and park the ids as a
     /// resumable `PrefillState` — the actual prefill runs chunk-by-chunk in
     /// `step_ex`, interleaved with decode rounds.
-    fn admit_req(&mut self, req: QueuedReq) -> Result<u64> {
+    ///
+    /// Returns `Ok(None)` when the shared pool's blocks vanished between
+    /// the caller's `can_fit` gate and the reservation here — a neighbor
+    /// worker won the race for them. The request is requeued (not failed):
+    /// cross-worker contention is a scheduling condition, never an error
+    /// that should tear down the step.
+    fn admit_req(&mut self, req: QueuedReq) -> Result<Option<u64>> {
         let slot = self
             .slots
             .iter()
@@ -738,12 +826,23 @@ impl Engine {
         if ids.len() > budget {
             ids.drain(..ids.len() - budget);
         }
+        let prefill_len = ids.len();
+        if self.pool.ensure(slot, prefill_len).is_err() {
+            // a single-owner pool can only get here through the unguarded
+            // legacy `admit` path (genuine exhaustion); on a shared pool
+            // this is a lost cross-worker race for the blocks — count it,
+            // requeue, retry next round
+            if self.pool.shared().workers() > 1 {
+                self.metrics.inc("sched.admit_races", 1);
+            }
+            self.wait_queue.push(req);
+            return Ok(None);
+        }
         let id = req.id;
         let rng = match req.rng {
             Some(r) => r,
             None => self.rng.fork(id),
         };
-        let prefill_len = ids.len();
         let seq = Seq {
             id,
             prompt_ids: req.prompt_ids,
@@ -763,7 +862,6 @@ impl Engine {
             done: false,
             rng,
         };
-        self.pool.ensure(slot, prefill_len)?;
         self.slots[slot] = Some(seq);
         // new occupant: its cache shares nothing with what the batch
         // buffers hold for this slot — force a full gather on first use
@@ -772,12 +870,13 @@ impl Engine {
             self.scratch.prefill_synced = (slot, 0);
         }
         let waited = self.step_no.saturating_sub(req.enq_step);
+        self.admit_rate.observe_admission(self.step_no, waited);
         self.events.push(SchedEvent::Admitted { step: self.step_no, id, waited });
         self.metrics.inc("sched.admitted", 1);
         self.metrics.observe("sched.queue_wait_steps", waited);
         self.metrics.observe(
             &format!("sched.queue_wait_steps.{}", req.class.name()), waited);
-        Ok(id)
+        Ok(Some(id))
     }
 
     /// Feed free slots from the wait queue in SLO-policy order (class, then
@@ -804,7 +903,7 @@ impl Engine {
                 let prefill_len = (front.prompt_ids.len() + front.gen_ids.len())
                     .min(budget)
                     .max(1);
-                if BlockPool::blocks_for(prefill_len) > self.pool.total_blocks() {
+                if self.pool.blocks_for(prefill_len) > self.pool.total_blocks() {
                     let req = self.wait_queue.remove(i);
                     let (out, missed) = self.finish_queued(req);
                     if missed {
@@ -815,9 +914,15 @@ impl Engine {
                 }
                 if self.pool.can_fit(prefill_len) {
                     let req = self.wait_queue.remove(i);
-                    let id = self.admit_req(req)?;
-                    rep.admitted.push(id);
-                    continue 'outer;
+                    match self.admit_req(req)? {
+                        Some(id) => {
+                            rep.admitted.push(id);
+                            continue 'outer;
+                        }
+                        // lost a cross-worker race (requeued); stop this
+                        // pass and retry next round rather than spin
+                        None => break 'outer,
+                    }
                 }
                 // Pool-short candidate. Deadline-driven preemption: an
                 // interactive-effective request may reclaim room from
@@ -838,7 +943,7 @@ impl Engine {
                     let metas: Vec<ReqMeta> =
                         running.iter().map(|(_, m)| m.clone()).collect();
                     let victims = self.cfg.slo.victims_for(&metas, &meta, now);
-                    let need_blocks = BlockPool::blocks_for(prefill_len);
+                    let need_blocks = self.pool.blocks_for(prefill_len);
                     let reclaim: usize = victims
                         .iter()
                         .map(|&v| self.pool.allocated(running[v].0))
@@ -852,9 +957,15 @@ impl Engine {
                             rep.evicted.push(vid);
                         }
                         let req = self.wait_queue.remove(i);
-                        let id = self.admit_req(req)?;
-                        rep.admitted.push(id);
-                        continue 'outer;
+                        match self.admit_req(req)? {
+                            Some(id) => {
+                                rep.admitted.push(id);
+                                continue 'outer;
+                            }
+                            // a neighbor raced us even past the reclaimed
+                            // blocks; candidate requeued, retry next round
+                            None => break 'outer,
+                        }
                     }
                 }
                 // otherwise skip this candidate and try the next one
@@ -1083,19 +1194,22 @@ impl Engine {
     fn sync_batch_cache(&mut self, gb: usize) {
         let re = self.heads * self.head_dim;
         let cache_elems = self.layers * gb * self.lmax * re;
-        if self.scratch.synced_gb != gb || self.scratch_k.len() != cache_elems {
+        if self.scratch.synced_gb != gb
+            || self.scratch.batch_k.len() != cache_elems
+        {
             for s in self.scratch.synced.iter_mut() {
                 *s = 0;
             }
             self.scratch.synced_gb = gb;
         }
-        self.scratch_k.resize(cache_elems, 0.0);
-        self.scratch_v.resize(cache_elems, 0.0);
+        self.scratch.batch_k.resize(cache_elems, 0.0);
+        self.scratch.batch_v.resize(cache_elems, 0.0);
         for b in 0..gb {
             if let Some(seq) = self.slots.get(b).and_then(|s| s.as_ref()) {
                 let from = self.scratch.synced[b].min(seq.cache.len);
-                seq.cache.copy_new_into_batch(&mut self.scratch_k,
-                                              &mut self.scratch_v, b, gb, from);
+                seq.cache.copy_new_into_batch(&mut self.scratch.batch_k,
+                                              &mut self.scratch.batch_v, b, gb,
+                                              from);
                 self.scratch.synced[b] = seq.cache.len;
             }
         }
@@ -1294,8 +1408,8 @@ impl Engine {
         // is incremental — only rows appended since last round move
         self.sync_batch_cache(gb);
         let args = build_step_lits(
-            &self.scratch_k, &self.scratch_v, self.layers, gb, self.lmax,
-            self.heads, self.head_dim, n, &self.scratch.tokens,
+            &self.scratch.batch_k, &self.scratch.batch_v, self.layers, gb,
+            self.lmax, self.heads, self.head_dim, n, &self.scratch.tokens,
             &self.scratch.pos, &self.scratch.bias)?;
         let t_v = Instant::now();
         let out = self.rt.run_step_lits(&self.cfg.model, gb, n, &args)?;
@@ -1406,7 +1520,7 @@ impl Engine {
             let out_of_room = seq.cache.len + self.tree_n + 1 >= self.lmax;
             // a sequence the whole pool can't hold for one more tree must
             // finish now — requeueing it would head-block the queue forever
-            let out_of_pool = BlockPool::blocks_for(seq.cache.len + self.tree_n + 1)
+            let out_of_pool = self.pool.blocks_for(seq.cache.len + self.tree_n + 1)
                 > self.pool.total_blocks();
             if hit_eos || seq.gen_ids.len() >= seq.max_new || out_of_room
                 || out_of_pool
@@ -1501,6 +1615,24 @@ impl Engine {
         self.metrics.set_gauge("sched.active", self.n_active() as f64);
         self.metrics
             .set_gauge("sched.beta.ewma_accept", self.beta.ewma_accept());
+        // shared-pool lease visibility: this worker's shard, its no-steal
+        // headroom, and the cluster-wide free/steal counters
+        let shared = self.pool.shared();
+        self.metrics.set_gauge("pool.shard_free_blocks",
+                               self.pool.shard_free_blocks() as f64);
+        self.metrics.set_gauge("pool.headroom_blocks",
+                               self.pool.headroom_blocks() as f64);
+        self.metrics.set_gauge("pool.lease_in_use_blocks",
+                               self.pool.lease_in_use_blocks() as f64);
+        self.metrics.set_gauge("pool.cluster_free_blocks",
+                               shared.cluster_free_blocks() as f64);
+        self.metrics.set_gauge("pool.lease_steals", shared.steals() as f64);
+        self.metrics.set_gauge("pool.lease_refills", shared.refills() as f64);
+        self.metrics
+            .set_gauge("pool.exhaustions", shared.exhaustions() as f64);
+        self.metrics
+            .set_gauge("sched.admit_gap_steps",
+                       self.admit_rate.steps_per_admission());
     }
 
     fn finish(&self, seq: Seq) -> GenOutput {

@@ -6,9 +6,24 @@
 //! row-major, matching the batch tensor `[L, B, Lmax, H, Dh]` the step
 //! graphs take, so batch assembly is a strided memcpy.
 //!
-//! A `BlockPool` tracks capacity in fixed-size position blocks (paged-
-//! attention-style accounting): admission fails cleanly when the pool is
-//! exhausted instead of silently overrunning `Lmax`.
+//! Capacity is tracked in fixed-size position blocks (paged-attention-
+//! style accounting): admission fails cleanly when the pool is exhausted
+//! instead of silently overrunning `Lmax`.
+//!
+//! `SharedBlockPool` + `PoolLease` own that accounting across worker
+//! engines (PR 4 tentpole; they replace the old per-engine `BlockPool` —
+//! `PoolLease::single` is its exact single-worker equivalent): one
+//! process-wide pool of blocks, sharded into
+//! per-worker reservation leases so the steady-state allocation path is a
+//! single uncontended atomic op. A worker that outgrows its lease refills
+//! from the unleased global free list, and — only when that is empty —
+//! *steals* from idle workers' shards. Capacity pressure therefore becomes
+//! a cluster-level condition: `ensure` fails (and the scheduler preempts)
+//! only when the whole cluster is out of blocks, not when one worker's
+//! private slice happens to be.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
@@ -159,77 +174,372 @@ impl SeqCache {
     }
 }
 
-/// Capacity accounting in position blocks across all live sequences.
-#[derive(Debug)]
-pub struct BlockPool {
-    total_blocks: usize,
-    free_blocks: usize,
-    /// per-sequence allocated block counts, keyed by slot id
-    allocated: Vec<usize>,
+/// Atomically take up to `want` units from `cell`; returns how many were
+/// taken. Lock-free (CAS loop), allocation-free.
+fn take_upto(cell: &AtomicUsize, want: usize) -> usize {
+    let mut cur = cell.load(Ordering::Acquire);
+    loop {
+        let take = cur.min(want);
+        if take == 0 {
+            return 0;
+        }
+        match cell.compare_exchange_weak(cur, cur - take, Ordering::AcqRel,
+                                         Ordering::Acquire) {
+            Ok(_) => return take,
+            Err(now) => cur = now,
+        }
+    }
 }
 
-impl BlockPool {
-    pub fn new(total_positions: usize, max_seqs: usize) -> Self {
-        // round up: a pool configured with 1..15 positions must still hold
-        // one block, not silently become a zero-capacity pool that rejects
-        // every request
-        let total_blocks = total_positions.div_ceil(BLOCK_POSITIONS);
-        BlockPool {
+/// Process-wide KV block pool shared by every worker engine.
+///
+/// Free blocks live in two places: the unleased `global_free` list and one
+/// *shard* per worker (blocks leased to that worker but not yet allocated
+/// to a sequence). The allocation path (`try_take`) is lock-free and
+/// allocation-free:
+///
+/// 1. draw from the caller's own shard (steady state: one uncontended CAS),
+/// 2. refill from `global_free`, banking a `lease_quantum` of lease-ahead
+///    in the shard so subsequent rounds stay local,
+/// 3. steal from other workers' shards in index order (slow path; counted),
+/// 4. fail only when the whole cluster is out of blocks.
+///
+/// Released blocks return to the releasing worker's shard up to
+/// `shard_cap`; the excess spills back to `global_free` so an idle worker
+/// cannot hoard capacity forever (stealing reclaims the rest on demand).
+/// Invariant: `global_free + Σ shards + Σ lease-allocated == total_blocks`.
+#[derive(Debug)]
+pub struct SharedBlockPool {
+    global_free: AtomicUsize,
+    /// per-worker leased-but-unallocated blocks (stealable)
+    shards: Vec<AtomicUsize>,
+    total_blocks: usize,
+    block_positions: usize,
+    lease_quantum: usize,
+    shard_cap: usize,
+    refills: AtomicU64,
+    steals: AtomicU64,
+    stolen_blocks: AtomicU64,
+    exhaustions: AtomicU64,
+}
+
+impl SharedBlockPool {
+    /// Pool over `total_positions` KV positions in `BLOCK_POSITIONS`-sized
+    /// blocks, sharded for `workers` workers, with derived lease sizing.
+    pub fn new(total_positions: usize, workers: usize) -> Self {
+        Self::with_config(total_positions, BLOCK_POSITIONS, workers, 0, 0)
+    }
+
+    /// Fully explicit constructor. `block_positions` sets the accounting
+    /// granularity (the scheduler mock uses 1 so positions == blocks);
+    /// `lease_quantum`/`shard_cap` of 0 pick defaults derived from the pool
+    /// size (quantum = total/(workers*4) clamped to [1, 64]; cap = 2×).
+    pub fn with_config(total_positions: usize, block_positions: usize,
+                       workers: usize, lease_quantum: usize,
+                       shard_cap: usize) -> Self {
+        let block_positions = block_positions.max(1);
+        let total_blocks = total_positions.div_ceil(block_positions);
+        let workers = workers.max(1);
+        let lease_quantum = if lease_quantum > 0 {
+            lease_quantum
+        } else {
+            (total_blocks / (workers * 4)).clamp(1, 64)
+        };
+        let shard_cap = if shard_cap > 0 { shard_cap } else { lease_quantum * 2 };
+        SharedBlockPool {
+            global_free: AtomicUsize::new(total_blocks),
+            shards: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
             total_blocks,
-            free_blocks: total_blocks,
-            allocated: vec![0; max_seqs],
+            block_positions,
+            lease_quantum,
+            shard_cap,
+            refills: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            stolen_blocks: AtomicU64::new(0),
+            exhaustions: AtomicU64::new(0),
         }
     }
 
-    pub fn blocks_for(positions: usize) -> usize {
-        positions.div_ceil(BLOCK_POSITIONS)
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn block_positions(&self) -> usize {
+        self.block_positions
+    }
+
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.block_positions)
+    }
+
+    pub fn total_blocks(&self) -> usize {
+        self.total_blocks
+    }
+
+    pub fn global_free_blocks(&self) -> usize {
+        self.global_free.load(Ordering::Acquire)
+    }
+
+    /// Blocks parked in `worker`'s shard (leased, unallocated).
+    pub fn shard_free(&self, worker: usize) -> usize {
+        self.shards[worker].load(Ordering::Acquire)
+    }
+
+    /// Blocks `worker` can acquire WITHOUT stealing: its shard plus the
+    /// unleased global list. The router's placement signal.
+    pub fn headroom(&self, worker: usize) -> usize {
+        self.shard_free(worker) + self.global_free_blocks()
+    }
+
+    /// Free blocks cluster-wide (global + every shard) — what `try_take`
+    /// can reach through refill + stealing.
+    pub fn cluster_free_blocks(&self) -> usize {
+        self.global_free_blocks()
+            + self.shards.iter().map(|s| s.load(Ordering::Acquire)).sum::<usize>()
+    }
+
+    pub fn cluster_in_use_blocks(&self) -> usize {
+        self.total_blocks - self.cluster_free_blocks()
+    }
+
+    pub fn utilization(&self) -> f64 {
+        self.cluster_in_use_blocks() as f64 / self.total_blocks.max(1) as f64
+    }
+
+    /// Whether `positions` more could currently be allocated cluster-wide.
+    pub fn can_fit_positions(&self, positions: usize) -> bool {
+        self.blocks_for(positions) <= self.cluster_free_blocks()
+    }
+
+    /// Acquire `want` blocks for `worker` (own shard → global refill →
+    /// steal). All-or-nothing: on failure the blocks gathered so far are
+    /// returned through `give_back` — caller's shard up to `shard_cap`,
+    /// rest to the global list — so a failed grab under cluster pressure
+    /// cannot hoard everyone's blocks in the failing worker's shard and
+    /// invert the router's headroom signal. Lock-free; never allocates.
+    pub fn try_take(&self, worker: usize, want: usize) -> bool {
+        if want == 0 {
+            return true;
+        }
+        let mut got = take_upto(&self.shards[worker], want);
+        if got < want {
+            let need = want - got;
+            let from_global =
+                take_upto(&self.global_free, need + self.lease_quantum);
+            if from_global > 0 {
+                self.refills.fetch_add(1, Ordering::Relaxed);
+            }
+            if from_global > need {
+                // bank the lease-ahead locally so the next rounds stay on
+                // the uncontended shard path
+                self.shards[worker]
+                    .fetch_add(from_global - need, Ordering::AcqRel);
+                got = want;
+            } else {
+                got += from_global;
+            }
+        }
+        if got < want {
+            // lease stealing: the cluster may still hold room parked in
+            // other workers' shards
+            for (s, shard) in self.shards.iter().enumerate() {
+                if s == worker {
+                    continue;
+                }
+                if got >= want {
+                    break;
+                }
+                let stolen = take_upto(shard, want - got);
+                if stolen > 0 {
+                    self.steals.fetch_add(1, Ordering::Relaxed);
+                    self.stolen_blocks.fetch_add(stolen as u64, Ordering::Relaxed);
+                    got += stolen;
+                }
+            }
+        }
+        if got < want {
+            // the CLUSTER is out of blocks — the only condition under which
+            // a worker may preempt
+            if got > 0 {
+                self.give_back(worker, got);
+            }
+            self.exhaustions.fetch_add(1, Ordering::Relaxed);
+            return false;
+        }
+        true
+    }
+
+    /// Return `n` allocated blocks to `worker`'s shard, spilling anything
+    /// beyond `shard_cap` to the global free list.
+    pub fn give_back(&self, worker: usize, n: usize) {
+        if n == 0 {
+            return;
+        }
+        let shard = &self.shards[worker];
+        let now = shard.fetch_add(n, Ordering::AcqRel) + n;
+        if now > self.shard_cap {
+            let spill = take_upto(shard, now - self.shard_cap);
+            if spill > 0 {
+                self.global_free.fetch_add(spill, Ordering::AcqRel);
+            }
+        }
+    }
+
+    /// Drain `worker`'s shard back to the global free list (worker exiting
+    /// or idle-drained); returns the number of blocks released.
+    pub fn drain_worker(&self, worker: usize) -> usize {
+        let n = take_upto(&self.shards[worker], usize::MAX);
+        if n > 0 {
+            self.global_free.fetch_add(n, Ordering::AcqRel);
+        }
+        n
+    }
+
+    /// Times a shard ran dry and pulled from the global list.
+    pub fn refills(&self) -> u64 {
+        self.refills.load(Ordering::Relaxed)
+    }
+
+    /// Times a worker stole from another worker's lease.
+    pub fn steals(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    pub fn stolen_blocks(&self) -> u64 {
+        self.stolen_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Times `try_take` failed with the whole cluster out of blocks.
+    pub fn exhaustions(&self) -> u64 {
+        self.exhaustions.load(Ordering::Relaxed)
+    }
+}
+
+/// One worker's handle on the shared pool: per-slot allocation ledger plus
+/// the worker's shard identity. API mirrors the old per-engine `BlockPool`
+/// so the engine's admission/preemption logic is pool-topology-agnostic —
+/// except that capacity now reflects the whole cluster.
+#[derive(Debug)]
+pub struct PoolLease {
+    pool: Arc<SharedBlockPool>,
+    worker: usize,
+    /// per-slot allocated block counts (preallocated; never grows)
+    allocated: Vec<usize>,
+}
+
+impl PoolLease {
+    pub fn new(pool: Arc<SharedBlockPool>, worker: usize, max_slots: usize)
+               -> PoolLease {
+        assert!(worker < pool.workers(),
+                "lease worker {worker} out of range ({} shards)",
+                pool.workers());
+        PoolLease { pool, worker, allocated: vec![0; max_slots] }
+    }
+
+    /// Standalone single-worker pool (tests, benches, one-engine CLIs):
+    /// identical capacity semantics to the old per-engine `BlockPool`.
+    pub fn single(total_positions: usize, max_slots: usize) -> PoolLease {
+        let pool = Arc::new(SharedBlockPool::new(total_positions, 1));
+        PoolLease::new(pool, 0, max_slots)
+    }
+
+    pub fn shared(&self) -> &Arc<SharedBlockPool> {
+        &self.pool
+    }
+
+    pub fn worker(&self) -> usize {
+        self.worker
+    }
+
+    /// Batch slots this lease's ledger covers.
+    pub fn max_slots(&self) -> usize {
+        self.allocated.len()
+    }
+
+    pub fn blocks_for(&self, positions: usize) -> usize {
+        self.pool.blocks_for(positions)
     }
 
     /// Grow sequence `slot` to cover `positions`; fails (without partial
-    /// allocation) if the pool can't supply the delta.
+    /// allocation) only when the whole cluster cannot supply the delta.
     pub fn ensure(&mut self, slot: usize, positions: usize) -> Result<()> {
-        let want = Self::blocks_for(positions);
+        let want = self.pool.blocks_for(positions);
         let have = self.allocated[slot];
         if want <= have {
             return Ok(());
         }
         let delta = want - have;
-        if delta > self.free_blocks {
-            bail!("kv block pool exhausted: need {delta}, free {}",
-                  self.free_blocks);
+        if !self.pool.try_take(self.worker, delta) {
+            bail!("kv block pool exhausted cluster-wide: need {delta}, free {}",
+                  self.pool.cluster_free_blocks());
         }
-        self.free_blocks -= delta;
         self.allocated[slot] = want;
         Ok(())
     }
 
     pub fn release(&mut self, slot: usize) {
-        self.free_blocks += self.allocated[slot];
-        self.allocated[slot] = 0;
+        let n = std::mem::take(&mut self.allocated[slot]);
+        self.pool.give_back(self.worker, n);
+    }
+
+    /// Release every slot's blocks (worker drain).
+    pub fn release_all(&mut self) {
+        for slot in 0..self.allocated.len() {
+            self.release(slot);
+        }
     }
 
     /// Whether a fresh sequence of `positions` tokens could be admitted
-    /// right now (ignoring slot availability — capacity accounting only).
+    /// right now, counting blocks reachable through refill AND stealing —
+    /// admission pressure is a cluster condition, not a worker one.
     pub fn can_fit(&self, positions: usize) -> bool {
-        Self::blocks_for(positions) <= self.free_blocks
+        self.pool.can_fit_positions(positions)
     }
 
-    /// Blocks currently held by `slot` (0 when idle).
     pub fn allocated(&self, slot: usize) -> usize {
         self.allocated[slot]
     }
 
+    /// Blocks this worker has allocated to live sequences.
+    pub fn lease_in_use_blocks(&self) -> usize {
+        self.allocated.iter().sum()
+    }
+
+    /// Blocks this worker can acquire without stealing (placement signal).
+    pub fn headroom_blocks(&self) -> usize {
+        self.pool.headroom(self.worker)
+    }
+
+    pub fn shard_free_blocks(&self) -> usize {
+        self.pool.shard_free(self.worker)
+    }
+
+    /// Cluster-wide free blocks.
     pub fn free_blocks(&self) -> usize {
-        self.free_blocks
+        self.pool.cluster_free_blocks()
     }
+
     pub fn total_blocks(&self) -> usize {
-        self.total_blocks
+        self.pool.total_blocks()
     }
+
     pub fn in_use_blocks(&self) -> usize {
-        self.total_blocks - self.free_blocks
+        self.pool.cluster_in_use_blocks()
     }
+
+    /// Cluster-wide pool utilization in [0, 1].
     pub fn utilization(&self) -> f64 {
-        1.0 - self.free_blocks as f64 / self.total_blocks.max(1) as f64
+        self.pool.utilization()
+    }
+}
+
+impl Drop for PoolLease {
+    /// Draining a worker releases its lease back to the shared pool: every
+    /// slot's blocks, then the shard's parked reserve, go global so
+    /// surviving workers see the capacity immediately.
+    fn drop(&mut self) {
+        self.release_all();
+        self.pool.drain_worker(self.worker);
     }
 }
 
@@ -369,25 +679,8 @@ mod tests {
     }
 
     #[test]
-    fn block_pool_accounting() {
-        let mut p = BlockPool::new(64, 2); // 4 blocks
-        assert_eq!(p.total_blocks(), 4);
-        p.ensure(0, 17).unwrap(); // 2 blocks
-        assert_eq!(p.free_blocks(), 2);
-        p.ensure(0, 20).unwrap(); // still 2 blocks, no-op
-        assert_eq!(p.free_blocks(), 2);
-        // seq 1 wants 3 blocks but only 2 are free
-        assert!(p.ensure(1, 33).is_err());
-        // failed ensure must not leak blocks
-        assert_eq!(p.free_blocks(), 2);
-        assert!((p.utilization() - 0.5).abs() < 1e-9);
-        p.release(0);
-        assert_eq!(p.free_blocks(), 4);
-    }
-
-    #[test]
-    fn block_pool_release_restores() {
-        let mut p = BlockPool::new(64, 2);
+    fn lease_release_restores_capacity() {
+        let mut p = PoolLease::single(64, 2); // 4 blocks
         p.ensure(0, 64).unwrap();
         assert_eq!(p.free_blocks(), 0);
         assert!(p.ensure(1, 1).is_err());
@@ -398,7 +691,7 @@ mod tests {
 
     #[test]
     fn can_fit_and_allocated_track_pool_state() {
-        let mut p = BlockPool::new(64, 2); // 4 blocks
+        let mut p = PoolLease::single(64, 2); // 4 blocks
         assert!(p.can_fit(64));
         assert!(!p.can_fit(65));
         p.ensure(0, 33).unwrap(); // 3 blocks
@@ -413,18 +706,19 @@ mod tests {
 
     #[test]
     fn blocks_for_rounding() {
-        assert_eq!(BlockPool::blocks_for(0), 0);
-        assert_eq!(BlockPool::blocks_for(1), 1);
-        assert_eq!(BlockPool::blocks_for(16), 1);
-        assert_eq!(BlockPool::blocks_for(17), 2);
+        let pool = SharedBlockPool::new(64, 1);
+        assert_eq!(pool.blocks_for(0), 0);
+        assert_eq!(pool.blocks_for(1), 1);
+        assert_eq!(pool.blocks_for(16), 1);
+        assert_eq!(pool.blocks_for(17), 2);
     }
 
     #[test]
     fn tiny_pool_rounds_up_to_one_block() {
-        let mut p = BlockPool::new(10, 1);
+        let mut p = PoolLease::single(10, 1);
         assert_eq!(p.total_blocks(), 1);
         assert!(p.ensure(0, 10).is_ok());
-        assert_eq!(BlockPool::new(0, 1).total_blocks(), 0);
+        assert_eq!(SharedBlockPool::new(0, 1).total_blocks(), 0);
     }
 
     #[test]
@@ -436,5 +730,85 @@ mod tests {
         c.truncate(1);
         assert_eq!(c.len, 1);
         assert_eq!(c.remaining(), 3);
+    }
+
+    #[test]
+    fn shared_pool_single_worker_matches_block_pool_semantics() {
+        let mut lease = PoolLease::single(64, 2); // 4 blocks of 16
+        assert_eq!(lease.total_blocks(), 4);
+        lease.ensure(0, 17).unwrap(); // 2 blocks
+        assert_eq!(lease.free_blocks(), 2);
+        lease.ensure(0, 20).unwrap(); // no-op
+        assert_eq!(lease.free_blocks(), 2);
+        assert!(lease.ensure(1, 33).is_err()); // needs 3, only 2 free
+        assert_eq!(lease.free_blocks(), 2, "failed ensure must not leak");
+        assert!((lease.utilization() - 0.5).abs() < 1e-9);
+        assert!(lease.can_fit(32));
+        assert!(!lease.can_fit(33));
+        lease.release(0);
+        assert_eq!(lease.free_blocks(), 4);
+        assert_eq!(lease.in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn shared_pool_steals_before_failing() {
+        // granularity 1, huge shard cap: worker 1's freed blocks park in
+        // its shard instead of spilling global
+        let pool = Arc::new(SharedBlockPool::with_config(10, 1, 2, 2, 100));
+        let mut a = PoolLease::new(pool.clone(), 0, 2);
+        let mut b = PoolLease::new(pool.clone(), 1, 2);
+        b.ensure(0, 8).unwrap(); // global 10 -> b takes 8 (+quantum bank)
+        b.release(0); // all 8+ parked in b's shard (cap 100)
+        assert_eq!(pool.global_free_blocks(), 0);
+        assert!(pool.shard_free(1) >= 8);
+        // worker 0 has no headroom without stealing...
+        assert_eq!(a.headroom_blocks(), 0);
+        // ...but the cluster has room, so ensure steals instead of failing
+        assert!(a.can_fit(6));
+        a.ensure(0, 6).unwrap();
+        assert!(pool.steals() >= 1, "lease steal not counted");
+        assert_eq!(pool.cluster_in_use_blocks(), 6);
+        // cluster genuinely full -> failure, accounting intact
+        assert!(a.ensure(1, 5).is_err());
+        assert!(pool.exhaustions() >= 1);
+        assert_eq!(pool.cluster_in_use_blocks(), 6, "failed take leaked");
+    }
+
+    #[test]
+    fn shared_pool_drop_drains_lease_back_to_global() {
+        let pool = Arc::new(SharedBlockPool::with_config(12, 1, 2, 2, 100));
+        {
+            let mut b = PoolLease::new(pool.clone(), 1, 2);
+            b.ensure(0, 7).unwrap();
+            b.ensure(1, 2).unwrap();
+            assert!(pool.global_free_blocks() < 12);
+        } // drop: slots released + shard drained
+        assert_eq!(pool.global_free_blocks(), 12,
+                   "dropped lease must return every block to the shared pool");
+        assert_eq!(pool.shard_free(1), 0);
+        assert_eq!(pool.cluster_in_use_blocks(), 0);
+    }
+
+    #[test]
+    fn shared_pool_release_spills_past_shard_cap() {
+        let pool = Arc::new(SharedBlockPool::with_config(20, 1, 1, 2, 4));
+        let mut a = PoolLease::new(pool.clone(), 0, 1);
+        a.ensure(0, 16).unwrap();
+        a.release(0);
+        assert!(pool.shard_free(0) <= 4, "shard cap not enforced");
+        assert_eq!(pool.cluster_free_blocks(), 20);
+    }
+
+    #[test]
+    fn shared_pool_headroom_tracks_shard_and_global() {
+        let pool = Arc::new(SharedBlockPool::with_config(8, 1, 2, 1, 100));
+        assert_eq!(pool.headroom(0), 8);
+        assert_eq!(pool.headroom(1), 8);
+        let mut a = PoolLease::new(pool.clone(), 0, 1);
+        a.ensure(0, 5).unwrap();
+        a.release(0); // parked in shard 0
+        assert!(pool.headroom(0) > pool.headroom(1),
+                "released blocks must show up as the releasing worker's \
+                 headroom first");
     }
 }

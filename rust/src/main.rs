@@ -17,7 +17,7 @@ use ctcdraft::metrics::RunSummary;
 use ctcdraft::runtime::Runtime;
 use ctcdraft::sched::{Priority, SloPolicy};
 use ctcdraft::server::{Client, Server, ServerConfig};
-use ctcdraft::testkit::{MockSched, SchedulerSim, SimOptions};
+use ctcdraft::testkit::{MockCluster, MockSched, SchedulerSim, SimOptions};
 use ctcdraft::util::cli::Cli;
 use ctcdraft::workload::Trace;
 use ctcdraft::{default_artifacts_dir, workload};
@@ -75,7 +75,9 @@ fn engine_opts(cli: Cli) -> Cli {
         .opt("seed", "rng seed", Some("0"))
         .opt("queue-cap", "admit-queue bound (0 = unbounded); full => busy",
              Some("0"))
-        .opt("kv-pool", "KV pool positions (0 = lmax × slots)", Some("0"))
+        .opt("kv-pool",
+             "KV pool positions — cluster-wide under serve, shared by all \
+              workers (0 = lmax × slots, × workers when serving)", Some("0"))
         .opt("prefill-chunk",
              "per-round prefill token budget (0 = unlimited): long prompts \
               prefill in chunks interleaved with decode rounds", Some("0"))
@@ -289,23 +291,31 @@ fn cmd_client(argv: &[String]) -> Result<()> {
             eprintln!("[{} tokens, {} steps, β={:.2}, {:.0}ms]",
                       r.tokens, r.steps, r.beta, r.ms);
         }
-        ctcdraft::server::GenerateOutcome::Busy => bail!("server busy"),
+        ctcdraft::server::GenerateOutcome::Busy { retry_after_steps } => {
+            match retry_after_steps {
+                Some(n) => bail!("server busy (retry after ~{n} steps)"),
+                None => bail!("server busy"),
+            }
+        }
         ctcdraft::server::GenerateOutcome::Cancelled => bail!("cancelled"),
     }
     Ok(())
 }
 
 // ---------------------------------------------------------------- sim
-/// Artifact-free scheduler-simulation replay: drive `MockSched` through a
-/// class-tagged Poisson trace and print the canonical event log to stdout.
-/// Two runs with the same options MUST print identical logs — `check.sh`
-/// diffs a double replay as the determinism gate.
+/// Artifact-free scheduler-simulation replay: drive `MockSched` (or, with
+/// `--workers N`, a `MockCluster` of N workers over ONE shared KV block
+/// pool behind the production placement policy) through a class-tagged
+/// Poisson trace and print the canonical event log to stdout. Two runs
+/// with the same options MUST print identical logs — `check.sh` diffs a
+/// double replay (single-worker AND cluster) as the determinism gate.
 fn cmd_sim(argv: &[String]) -> Result<()> {
     let cli = Cli::new("ctcdraft sim", "deterministic scheduler-sim replay")
         .opt("seed", "trace + backend seed", Some("7"))
+        .opt("workers", "mock workers over one shared pool", Some("1"))
         .opt("slots", "batch slots", Some("4"))
         .opt("queue-cap", "admit-queue bound (0 = unbounded)", Some("8"))
-        .opt("pool", "fake KV pool positions", Some("256"))
+        .opt("pool", "shared KV pool positions (cluster-wide)", Some("256"))
         .opt("requests", "questions per MT-bench category", Some("2"))
         .opt("max-new", "max new tokens per request", Some("24"))
         .opt("mean-gap", "mean arrival gap (steps)", Some("1.5"))
@@ -337,20 +347,35 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         policy.interactive_deadline,
         policy.batch_deadline,
     );
-    let mut backend = MockSched::new(
-        a.usize("slots", 4),
-        a.usize("queue-cap", 8),
-        a.usize("pool", 256),
-        seed,
-    )
-    .with_policy(policy)
-    .with_beta(BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?);
+    let beta = BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?;
     let sim = SchedulerSim::new(SimOptions {
         cancel_prob: a.f64("cancel-prob", 0.0),
         seed,
         ..Default::default()
     });
-    let report = sim.run(&mut backend, &trace)?;
+    let workers = a.usize("workers", 1);
+    let report = if workers > 1 {
+        let mut backend = MockCluster::new(
+            workers,
+            a.usize("slots", 4),
+            a.usize("queue-cap", 8),
+            a.usize("pool", 256),
+            seed,
+        )
+        .with_policy(policy)
+        .with_beta(beta);
+        sim.run(&mut backend, &trace)?
+    } else {
+        let mut backend = MockSched::new(
+            a.usize("slots", 4),
+            a.usize("queue-cap", 8),
+            a.usize("pool", 256),
+            seed,
+        )
+        .with_policy(policy)
+        .with_beta(beta);
+        sim.run(&mut backend, &trace)?
+    };
     print!("{}", report.event_log);
     if a.flag("summary") {
         eprintln!(

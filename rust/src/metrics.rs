@@ -258,6 +258,9 @@ pub enum SchedEvent {
     Beta { step: u64, batch: usize, paths: usize, nodes: usize, depth: usize },
     /// Request finished; `steps`/`tokens` feed the β histogram.
     Completed { step: u64, id: u64, steps: usize, tokens: usize },
+    /// Router placement decision: request `id` routed to `worker` (shared-
+    /// pool clusters only; id 0 = rejected before an id was assigned).
+    Placed { step: u64, id: u64, worker: usize },
 }
 
 impl fmt::Display for SchedEvent {
@@ -291,6 +294,9 @@ impl fmt::Display for SchedEvent {
             }
             SchedEvent::Completed { step, id, steps, tokens } => {
                 write!(f, "t={step} done id={id} steps={steps} tokens={tokens}")
+            }
+            SchedEvent::Placed { step, id, worker } => {
+                write!(f, "t={step} place id={id} worker={worker}")
             }
         }
     }
@@ -530,11 +536,13 @@ mod tests {
             });
             log.push(SchedEvent::DeadlineMiss { step: 5, id: 2, late: 3 });
             log.push(SchedEvent::Completed { step: 5, id: 2, steps: 3, tokens: 7 });
+            log.push(SchedEvent::Placed { step: 6, id: 3, worker: 1 });
             log
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.render(), b.render());
-        assert_eq!(a.len(), 9);
+        assert_eq!(a.len(), 10);
+        assert!(a.render().contains("t=6 place id=3 worker=1"));
         assert!(a.render().contains("t=4 beta batch=2 paths=8 nodes=16 depth=5"));
         assert!(a.render().contains("t=1 submit id=1 class=batch deadline=65"));
         assert!(a.render().contains("t=2 admit id=2 waited=1"));

@@ -1,11 +1,14 @@
 //! SLO-aware scheduling policy: priority classes, per-request deadlines on
-//! the scheduler's virtual step clock, and the comparators that drive
-//! admission order and preemption-victim choice.
+//! the scheduler's virtual step clock, the comparators that drive
+//! admission order and preemption-victim choice, the cross-worker
+//! *placement* policy (`WorkerSnapshot`/`place`) the router runs over the
+//! shared KV block pool, and the admission-rate model (`AdmitRate`) behind
+//! deadline-aware `queued`/`busy` responses.
 //!
 //! This module is the single source of truth for policy decisions — the
-//! real `Engine` and the artifact-free `testkit::MockSched` both call into
-//! it, so the deterministic scheduler simulation exercises exactly the
-//! policy the server runs.
+//! real `Engine`/`Server` and the artifact-free `testkit::MockSched`/
+//! `MockCluster` all call into it, so the deterministic scheduler
+//! simulation exercises exactly the policy the server runs.
 //!
 //! Ordering model:
 //! * every request carries a class (`interactive` | `batch`) and an
@@ -192,6 +195,133 @@ impl SloPolicy {
     }
 }
 
+// ------------------------------------------------------ placement policy
+
+/// Relative deadline (steps) below which a request counts as *urgent* for
+/// placement: queue depth is weighted double, since every queued request
+/// ahead of it burns slack it does not have.
+pub const URGENT_SLACK_STEPS: u64 = 64;
+
+/// Router-visible load state of one worker, sampled at placement time.
+/// `headroom_blocks` is what the worker can allocate WITHOUT stealing
+/// (its shard + the unleased global pool — `SharedBlockPool::headroom`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WorkerSnapshot {
+    pub headroom_blocks: usize,
+    pub inflight_interactive: usize,
+    pub inflight_batch: usize,
+    pub queued: usize,
+    /// admit queue at its cap: dispatching here returns a terminal `busy`
+    pub queue_full: bool,
+}
+
+/// Placement score for one worker (lower = better). Deterministic integer
+/// arithmetic so cluster replays are byte-for-byte reproducible.
+///
+/// Terms, in rough order of weight:
+/// * **queue-full gate** — a worker whose admit queue is at its cap will
+///   answer with a terminal `busy`; routing there while a neighbor has
+///   room turns backpressure into a spurious rejection, so it takes the
+///   largest penalty (still not a hard exclusion: when EVERY queue is
+///   full, `busy` is the correct answer and ties break normally).
+/// * **headroom gate** — a worker whose headroom cannot cover the
+///   request's estimated block need would have to steal (or preempt);
+///   placing there strands capacity elsewhere, so it takes a large flat
+///   penalty rather than a hard exclusion (every worker may be short).
+/// * **queued depth** — each waiting request delays this one by a full
+///   admission; doubled for urgent (low-slack) requests.
+/// * **class mix** — same-class in-flight work contends directly (5×),
+///   cross-class work mildly (1×): an interactive request prefers the
+///   worker busy with preemptible batch work over one saturated with
+///   other interactive requests, and vice versa.
+/// * **headroom bonus** — spare blocks break ties toward the roomier
+///   worker so pool capacity is never stranded on a loaded neighbor.
+pub fn placement_score(s: &WorkerSnapshot, class: Priority,
+                       need_blocks: usize, urgent: bool) -> i64 {
+    let mut score: i64 = if s.queue_full { 10_000_000 } else { 0 };
+    score += if s.headroom_blocks < need_blocks { 100_000 } else { 0 };
+    score += (if urgent { 200 } else { 100 }) * s.queued as i64;
+    let (same, other) = match class {
+        Priority::Interactive => (s.inflight_interactive, s.inflight_batch),
+        Priority::Batch => (s.inflight_batch, s.inflight_interactive),
+    };
+    score += 50 * same as i64 + 10 * other as i64;
+    score -= s.headroom_blocks.min(64) as i64;
+    score
+}
+
+/// Pick the worker for a request: minimal `placement_score`, lowest index
+/// breaking ties. `slack_steps` is the request's relative deadline when the
+/// client supplied one (urgency signal). Panics on an empty snapshot list.
+pub fn place(snaps: &[WorkerSnapshot], class: Priority, need_blocks: usize,
+             slack_steps: Option<u64>) -> usize {
+    let urgent = slack_steps.map(|s| s <= URGENT_SLACK_STEPS).unwrap_or(false);
+    let mut best = 0usize;
+    let mut best_score = i64::MAX;
+    for (w, s) in snaps.iter().enumerate() {
+        let score = placement_score(s, class, need_blocks, urgent);
+        if score < best_score {
+            best = w;
+            best_score = score;
+        }
+    }
+    best
+}
+
+// ------------------------------------------------- admission-rate model
+
+/// EWMA of the step gap between slot admissions — the basis for the
+/// deadline-aware `queued` response (estimated start step) and the
+/// `retry_after_steps` hint on `busy`. Pure deterministic f64 arithmetic on
+/// the virtual step clock: same schedule, same estimates, so replays stay
+/// byte-for-byte reproducible.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmitRate {
+    ewma_gap: f64,
+    last_admit_step: u64,
+}
+
+impl Default for AdmitRate {
+    fn default() -> Self {
+        AdmitRate { ewma_gap: 1.0, last_admit_step: 0 }
+    }
+}
+
+impl AdmitRate {
+    /// Record an admission at virtual step `step` of a request that waited
+    /// `waited_steps` in the queue. The observed gap is clamped by the
+    /// admitted request's own wait: an idle stretch with no demand (nothing
+    /// queued, so nothing admitted) is NOT evidence of a slow admission
+    /// rate — without the clamp, one long solo generation would teach the
+    /// estimator a huge gap and inflate every later `est_start`/
+    /// `retry_after` hint by orders of magnitude.
+    pub fn observe_admission(&mut self, step: u64, waited_steps: u64) {
+        let gap = step
+            .saturating_sub(self.last_admit_step)
+            .min(waited_steps.saturating_add(1))
+            .max(1) as f64;
+        self.ewma_gap = 0.7 * self.ewma_gap + 0.3 * gap;
+        self.last_admit_step = step;
+    }
+
+    /// Observed steps-per-admission (>= 1).
+    pub fn steps_per_admission(&self) -> f64 {
+        self.ewma_gap.max(1.0)
+    }
+
+    /// Estimated absolute step at which queue position `pos` (0 = next up)
+    /// reaches a slot: now + (pos + 1) × observed admission gap.
+    pub fn est_start_step(&self, now: u64, pos: usize) -> u64 {
+        now + (self.steps_per_admission() * (pos as f64 + 1.0)).ceil() as u64
+    }
+
+    /// `busy` retry hint: steps until a queue seat plausibly frees — one
+    /// admission gap per queued request ahead.
+    pub fn retry_after_steps(&self, queue_len: usize) -> u64 {
+        (self.steps_per_admission() * queue_len.max(1) as f64).ceil() as u64
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -266,5 +396,110 @@ mod tests {
             meta(3, Priority::Batch, 55, 0), // lower class => less urgent
         ];
         assert_eq!(pol.pick_victim_for(&with_batch, &cand, 50), Some(1));
+    }
+
+    fn snap(headroom: usize, i: usize, b: usize, q: usize) -> WorkerSnapshot {
+        WorkerSnapshot {
+            headroom_blocks: headroom,
+            inflight_interactive: i,
+            inflight_batch: b,
+            queued: q,
+            queue_full: false,
+        }
+    }
+
+    #[test]
+    fn placement_prefers_headroom_over_low_inflight() {
+        // the satellite's routing property: an interactive request must go
+        // to the worker WITH pool headroom even though the other worker has
+        // strictly lower inflight
+        let snaps = [
+            snap(0, 0, 0, 0),  // idle but broke
+            snap(16, 2, 1, 0), // busier but holds the blocks
+        ];
+        assert_eq!(place(&snaps, Priority::Interactive, 4, None), 1);
+        // with headroom everywhere, load decides again
+        let even = [snap(16, 2, 1, 0), snap(16, 0, 0, 0)];
+        assert_eq!(place(&even, Priority::Interactive, 4, None), 1);
+    }
+
+    #[test]
+    fn placement_class_mix_separates_traffic() {
+        // same headroom, same totals: interactive avoids the interactive-
+        // saturated worker, batch avoids the batch-saturated one
+        let snaps = [snap(32, 3, 0, 0), snap(32, 0, 3, 0)];
+        assert_eq!(place(&snaps, Priority::Interactive, 1, None), 1);
+        assert_eq!(place(&snaps, Priority::Batch, 1, None), 0);
+    }
+
+    #[test]
+    fn placement_urgency_weights_queue_depth() {
+        // w0: short queue, interactive-loaded; w1: deeper queue, idle.
+        // relaxed request tolerates the queue; urgent one must not
+        let snaps = [snap(32, 3, 0, 0), snap(32, 0, 0, 1)];
+        assert_eq!(place(&snaps, Priority::Interactive, 1, Some(1000)), 1);
+        assert_eq!(place(&snaps, Priority::Interactive, 1, Some(8)), 0);
+    }
+
+    #[test]
+    fn placement_avoids_full_queues_even_when_otherwise_best() {
+        // worker 0 looks ideal (idle, roomy) but its admit queue is at cap:
+        // dispatching there would bounce `busy` while worker 1 has room
+        let full = WorkerSnapshot { queue_full: true, ..snap(64, 0, 0, 4) };
+        let snaps = [full, snap(8, 5, 5, 2)];
+        assert_eq!(place(&snaps, Priority::Interactive, 1, None), 1);
+        // every queue full: fall back to normal scoring (busy IS correct)
+        let both = [
+            WorkerSnapshot { queue_full: true, ..snap(64, 0, 0, 4) },
+            WorkerSnapshot { queue_full: true, ..snap(8, 5, 5, 2) },
+        ];
+        assert_eq!(place(&both, Priority::Interactive, 1, None), 0);
+    }
+
+    #[test]
+    fn placement_ties_break_to_lowest_index() {
+        let snaps = [snap(8, 0, 0, 0), snap(8, 0, 0, 0)];
+        assert_eq!(place(&snaps, Priority::Interactive, 1, None), 0);
+        assert_eq!(place(&snaps, Priority::Batch, 1, Some(0)), 0);
+    }
+
+    #[test]
+    fn admit_rate_estimates_are_monotone_and_deterministic() {
+        let mut r = AdmitRate::default();
+        for step in [2u64, 4, 6, 8] {
+            r.observe_admission(step, 2);
+        }
+        let gap = r.steps_per_admission();
+        assert!(gap >= 1.0);
+        let e0 = r.est_start_step(10, 0);
+        let e3 = r.est_start_step(10, 3);
+        assert!(e0 > 10, "estimate must be in the future");
+        assert!(e3 > e0, "deeper queue position must start later");
+        assert!(r.retry_after_steps(4) >= r.retry_after_steps(1));
+        // deterministic: same observation stream, same estimates
+        let mut r2 = AdmitRate::default();
+        for step in [2u64, 4, 6, 8] {
+            r2.observe_admission(step, 2);
+        }
+        assert_eq!(r.est_start_step(10, 2), r2.est_start_step(10, 2));
+    }
+
+    #[test]
+    fn admit_rate_ignores_idle_gaps() {
+        // a 500-step solo run with an empty queue must NOT teach the
+        // estimator a 500-step admission gap: the next arrival was admitted
+        // the moment it asked (waited 0)
+        let mut r = AdmitRate::default();
+        r.observe_admission(1, 0);
+        r.observe_admission(501, 0); // direct admission after a long idle
+        assert!(r.steps_per_admission() <= 2.0,
+                "idle gap leaked into the admission-rate EWMA: {}",
+                r.steps_per_admission());
+        // a request that genuinely WAITED across the gap does count
+        let mut w = AdmitRate::default();
+        w.observe_admission(1, 0);
+        w.observe_admission(501, 499);
+        assert!(w.steps_per_admission() > 100.0,
+                "real contention must raise the estimate");
     }
 }

@@ -1,12 +1,25 @@
-//! Threaded serving stack: TCP JSON-lines protocol, a least-loaded router,
-//! and engine worker threads running an admission-controlled continuous-
-//! batching scheduler (streaming, cancellation, bounded-queue backpressure).
+//! Threaded serving stack: TCP JSON-lines protocol, a headroom/class-aware
+//! router over a process-wide shared KV block pool, and engine worker
+//! threads running an admission-controlled continuous-batching scheduler
+//! (streaming, cancellation, bounded-queue backpressure).
 //!
 //! tokio is unavailable in the build image, and the `xla` wrapper types are
 //! not `Send` — so the architecture is: each worker thread *constructs its
 //! own* `Runtime` + `Engine` and owns them for its lifetime; requests and
 //! responses cross threads as plain strings over mpsc channels (the
 //! vllm-router shape, scaled to threads).
+//!
+//! KV capacity is ONE `kvcache::SharedBlockPool` for the whole process:
+//! each worker engine holds a `PoolLease` (shard + global refill + lease
+//! stealing), so a worker preempts only when the *cluster* is out of
+//! blocks — capacity is never stranded on an idle neighbor, and the pool
+//! is sized `kv_pool_positions` total (0 = lmax × slots × workers).
+//! Placement (`pick_worker`) is no longer least-inflight: each generate is
+//! scored per worker by `sched::place` over (no-steal pool headroom,
+//! interactive/batch in-flight mix, queued depth), with the request's
+//! class and deadline slack as inputs. Decisions are counted per worker
+//! (`placements` in stats) and the per-shard pool gauges are exported
+//! through the `stats` op and `metrics.rs` (`pool.*` gauges).
 //!
 //! Wire protocol (one JSON object per line):
 //!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true,
@@ -17,8 +30,10 @@
 //!     admitted first and may preempt strictly less urgent batch work.
 //!     Reply is a frame sequence on the same connection, terminated by one
 //!     terminal frame:
-//!     ← {"type":"queued","id":7,"pos":n,"class":"..."}  (admit queue
-//!        position under the SLO policy order; informational)
+//!     ← {"type":"queued","id":7,"pos":n,"class":"...","est_start":s}
+//!        (admit-queue position under the SLO policy order, plus the
+//!        deadline-aware hint: estimated absolute scheduler step at which
+//!        the request reaches a slot, from the observed admission rate)
 //!     ← {"type":"tok","id":7,"text":"...","n":k}  (stream:true only; one
 //!        frame per scheduler round, `n` accepted tokens; text comes from a
 //!        stateful detokenizer, so UTF-8 split across rounds never yields
@@ -26,8 +41,10 @@
 //!        `done` text)
 //!     ← {"type":"done","id":7,"text":"...","tokens":n,"steps":m,
 //!        "beta":x,"ms":t}                      (terminal)
-//!     ← {"type":"busy","id":7}                 (terminal; admit queue at
-//!        its cap — backpressure, retry later)
+//!     ← {"type":"busy","id":7,"retry_after_steps":s}  (terminal; admit
+//!        queue at its cap — backpressure. `retry_after_steps` estimates
+//!        scheduler steps until a seat frees; absent when the server is
+//!        draining/shutting down rather than momentarily full)
 //!     ← {"type":"cancelled","id":7}            (terminal; cancelled from
 //!        another connection)
 //!     ← {"type":"error", "message":"..."}      (terminal)
@@ -36,10 +53,20 @@
 //!        or already finished)
 //!   → {"op":"ping"}            ← {"type":"pong"}
 //!   → {"op":"stats"}           ← {"type":"stats","inflight":[...],
+//!        "placements":[...],   (requests routed per worker, router-side)
+//!        "pool":{"total_blocks":..,"free_blocks":..,"global_free":..,
+//!                "shards":[...],"lease_refills":..,"lease_steals":..,
+//!                "stolen_blocks":..,"exhaustions":..},
 //!        "workers":[{"active":..,"queued":..,"pool_utilization":..,
+//!                    "shard_free_blocks":..,"headroom_blocks":..,
+//!                    "lease_blocks":..,
 //!                    "completed":..,"cancelled":..,"evicted":..,
 //!                    "rejected_busy":..,"deadline_missed":..,
 //!                    "prefill_interleaved_rounds":..,"steps":..}, ...]}
+//!     `pool` is the shared KV block pool: cluster totals, the unleased
+//!     global free list, and each worker's shard reserve; `shard_free_
+//!     blocks`/`headroom_blocks`/`lease_blocks` give the same view from
+//!     inside each worker's lease.
 //!
 //! Shutdown drains gracefully: in-flight and queued requests finish (new
 //! ones are rejected `busy`), then workers exit.
@@ -61,10 +88,11 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, Manifest};
 use crate::engine::{Engine, GenOutput, Submission};
+use crate::kvcache::{PoolLease, SharedBlockPool};
 use crate::runtime::Runtime;
-use crate::sched::Priority;
+use crate::sched::{self, Priority, WorkerSnapshot};
 use crate::tokenizer::StreamDecoder;
 use crate::util::json::{parse, Json};
 
@@ -113,22 +141,40 @@ struct Pending {
 
 struct WorkerHandle {
     tx: Sender<WorkerMsg>,
-    inflight: Arc<AtomicUsize>,
     join: JoinHandle<()>,
 }
 
-type Route = (Sender<WorkerMsg>, Arc<AtomicUsize>);
+/// Router-side view of one worker: its control channel plus the atomics
+/// the placement policy reads. `inflight`/per-class counters are tracked
+/// by the router (incremented at dispatch, decremented when the terminal
+/// frame is relayed); `queued_depth` is published by the worker loop.
+#[derive(Clone)]
+struct Route {
+    tx: Sender<WorkerMsg>,
+    inflight: Arc<AtomicUsize>,
+    inflight_interactive: Arc<AtomicUsize>,
+    inflight_batch: Arc<AtomicUsize>,
+    queued_depth: Arc<AtomicUsize>,
+    /// generate requests the router has placed on this worker
+    placed: Arc<AtomicU64>,
+}
 
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
     workers: Vec<WorkerHandle>,
+    pool: Arc<SharedBlockPool>,
 }
 
 impl Server {
     /// Bind, spawn workers + acceptor, return a handle. `addr` may use port
     /// 0 to pick a free port (see `local_addr`).
+    ///
+    /// Builds the ONE `SharedBlockPool` every worker leases from. Sizing
+    /// comes from the manifest (read here, before any worker thread owns a
+    /// runtime): `kv_pool_positions` cluster-wide when set, otherwise
+    /// `lmax × max_slots × workers` (no worker can ever exhaust it).
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
@@ -136,33 +182,64 @@ impl Server {
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
 
+        let n_workers = cfg.workers.max(1);
+        let manifest = Manifest::load(&cfg.artifacts)
+            .with_context(|| "loading manifest for pool sizing")?;
+        let max_slots =
+            *manifest.constants.batch_sizes.iter().max().unwrap_or(&1);
+        let pool_positions = if cfg.engine.kv_pool_positions > 0 {
+            cfg.engine.kv_pool_positions
+        } else {
+            manifest.constants.lmax * max_slots * n_workers
+        };
+        let pool = Arc::new(SharedBlockPool::new(pool_positions, n_workers));
+
         let mut workers = Vec::new();
-        for w in 0..cfg.workers.max(1) {
+        let mut routes = Vec::new();
+        for w in 0..n_workers {
             let (tx, rx) = channel::<WorkerMsg>();
-            let inflight = Arc::new(AtomicUsize::new(0));
+            let route = Route {
+                tx: tx.clone(),
+                inflight: Arc::new(AtomicUsize::new(0)),
+                inflight_interactive: Arc::new(AtomicUsize::new(0)),
+                inflight_batch: Arc::new(AtomicUsize::new(0)),
+                queued_depth: Arc::new(AtomicUsize::new(0)),
+                placed: Arc::new(AtomicU64::new(0)),
+            };
             let artifacts = cfg.artifacts.clone();
             let mut ecfg = cfg.engine.clone();
             ecfg.seed = ecfg.seed.wrapping_add(w as u64);
-            let infl = inflight.clone();
             let stop = shutdown.clone();
+            let queued_depth = route.queued_depth.clone();
+            let lease = PoolLease::new(pool.clone(), w, max_slots);
             let join = std::thread::Builder::new()
                 .name(format!("engine-{w}"))
-                .spawn(move || worker_loop(artifacts, ecfg, rx, infl, stop))
+                .spawn(move || {
+                    worker_loop(artifacts, ecfg, lease, rx, queued_depth, stop)
+                })
                 .expect("spawn worker");
-            workers.push(WorkerHandle { tx, inflight, join });
+            workers.push(WorkerHandle { tx, join });
+            routes.push(route);
         }
 
-        let routes: Vec<Route> = workers
-            .iter()
-            .map(|w| (w.tx.clone(), w.inflight.clone()))
-            .collect();
         let stop = shutdown.clone();
+        let acceptor_pool = pool.clone();
+        let queue_cap = cfg.engine.queue_cap;
         let acceptor = std::thread::Builder::new()
             .name("acceptor".into())
-            .spawn(move || acceptor_loop(listener, routes, stop))
+            .spawn(move || {
+                acceptor_loop(listener, routes, acceptor_pool, queue_cap, stop)
+            })
             .expect("spawn acceptor");
 
-        Ok(Server { local_addr, shutdown, acceptor: Some(acceptor), workers })
+        Ok(Server { local_addr, shutdown, acceptor: Some(acceptor), workers,
+                    pool })
+    }
+
+    /// The process-wide KV block pool (tests inspect shard/steal state; a
+    /// drained worker's lease returns here).
+    pub fn pool(&self) -> Arc<SharedBlockPool> {
+        self.pool.clone()
     }
 
     /// Graceful drain: stop accepting, let workers finish every in-flight
@@ -180,13 +257,15 @@ impl Server {
 }
 
 fn acceptor_loop(listener: TcpListener, routes: Vec<Route>,
+                 pool: Arc<SharedBlockPool>, queue_cap: usize,
                  shutdown: Arc<AtomicBool>) {
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
                 let routes = routes.clone();
+                let pool = pool.clone();
                 std::thread::spawn(move || {
-                    let _ = handle_conn(stream, routes);
+                    let _ = handle_conn(stream, routes, pool, queue_cap);
                 });
             }
             Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -197,14 +276,39 @@ fn acceptor_loop(listener: TcpListener, routes: Vec<Route>,
     }
 }
 
-fn pick_worker(routes: &[Route]) -> &Route {
-    routes
+/// Placement policy (replaces the old least-inflight pick): score every
+/// worker by no-steal pool headroom, interactive/batch in-flight mix, and
+/// queued depth — weighted by the request's class and deadline slack — and
+/// route to the best. The block-need estimate uses the same bytes/4 prompt
+/// heuristic as the scheduler mock (the router has no tokenizer; admission
+/// re-validates against real token counts).
+fn pick_worker(routes: &[Route], pool: &SharedBlockPool, queue_cap: usize,
+               class: Priority, deadline_steps: Option<u64>, prompt: &str)
+               -> usize {
+    let snaps: Vec<WorkerSnapshot> = routes
         .iter()
-        .min_by_key(|(_, infl)| infl.load(Ordering::SeqCst))
-        .expect("at least one worker")
+        .enumerate()
+        .map(|(w, r)| {
+            let queued = r.queued_depth.load(Ordering::SeqCst);
+            WorkerSnapshot {
+                headroom_blocks: pool.headroom(w),
+                inflight_interactive: r
+                    .inflight_interactive
+                    .load(Ordering::SeqCst),
+                inflight_batch: r.inflight_batch.load(Ordering::SeqCst),
+                queued,
+                // at-cap queue => the engine would answer a terminal busy;
+                // route around it while any neighbor has room
+                queue_full: queue_cap > 0 && queued >= queue_cap,
+            }
+        })
+        .collect();
+    let est_positions = (prompt.len() / 4).max(1);
+    sched::place(&snaps, class, pool.blocks_for(est_positions), deadline_steps)
 }
 
-fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
+fn handle_conn(stream: TcpStream, routes: Vec<Route>,
+               pool: Arc<SharedBlockPool>, queue_cap: usize) -> Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
     for line in reader.lines() {
@@ -231,16 +335,38 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
             Some("stats") => {
                 let loads: Vec<Json> = routes
                     .iter()
-                    .map(|(_, i)| Json::num(i.load(Ordering::SeqCst) as f64))
+                    .map(|r| Json::num(r.inflight.load(Ordering::SeqCst) as f64))
                     .collect();
+                let placements: Vec<Json> = routes
+                    .iter()
+                    .map(|r| Json::num(r.placed.load(Ordering::SeqCst) as f64))
+                    .collect();
+                // shared-pool view: cluster totals + per-shard reserves
+                let shards: Vec<Json> = (0..pool.workers())
+                    .map(|w| Json::num(pool.shard_free(w) as f64))
+                    .collect();
+                let pool_json = Json::obj(vec![
+                    ("total_blocks", Json::num(pool.total_blocks() as f64)),
+                    ("free_blocks",
+                     Json::num(pool.cluster_free_blocks() as f64)),
+                    ("global_free",
+                     Json::num(pool.global_free_blocks() as f64)),
+                    ("shards", Json::Arr(shards)),
+                    ("lease_refills", Json::num(pool.refills() as f64)),
+                    ("lease_steals", Json::num(pool.steals() as f64)),
+                    ("stolen_blocks", Json::num(pool.stolen_blocks() as f64)),
+                    ("exhaustions", Json::num(pool.exhaustions() as f64)),
+                ]);
                 // fan out first, then collect: total wait is bounded by the
                 // slowest worker (one in-flight step), not the sum; a wedged
                 // worker degrades its entry to null instead of stalling stats
                 let receivers: Vec<Option<Receiver<String>>> = routes
                     .iter()
-                    .map(|(tx, _)| {
+                    .map(|r| {
                         let (stx, srx) = channel::<String>();
-                        tx.send(WorkerMsg::Stats { resp: stx }).ok().map(|_| srx)
+                        r.tx.send(WorkerMsg::Stats { resp: stx })
+                            .ok()
+                            .map(|_| srx)
                     })
                     .collect();
                 let per_worker: Vec<Json> = receivers
@@ -256,6 +382,8 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
                 writeln!(writer, "{}", Json::obj(vec![
                     ("type", Json::str("stats")),
                     ("inflight", Json::Arr(loads)),
+                    ("placements", Json::Arr(placements)),
+                    ("pool", pool_json),
                     ("workers", Json::Arr(per_worker)),
                 ]).to_string())?;
             }
@@ -268,9 +396,9 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
                 // the slowest worker's in-flight step, not the sum
                 let acks: Vec<Option<Receiver<bool>>> = routes
                     .iter()
-                    .map(|(tx, _)| {
+                    .map(|r| {
                         let (atx, arx) = channel::<bool>();
-                        tx.send(WorkerMsg::Cancel { client_id, ack: atx })
+                        r.tx.send(WorkerMsg::Cancel { client_id, ack: atx })
                             .ok()
                             .map(|_| arx)
                     })
@@ -307,8 +435,18 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
                     .map(|v| v as u64);
                 let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
                 let (rtx, rrx) = channel::<String>();
-                let (tx, infl) = pick_worker(&routes);
+                let w = pick_worker(&routes, &pool, queue_cap, class,
+                                    deadline, &prompt);
+                let route = &routes[w];
+                let tx = &route.tx;
+                let infl = &route.inflight;
+                let class_infl = match class {
+                    Priority::Interactive => &route.inflight_interactive,
+                    Priority::Batch => &route.inflight_batch,
+                };
+                route.placed.fetch_add(1, Ordering::SeqCst);
                 infl.fetch_add(1, Ordering::SeqCst);
+                class_infl.fetch_add(1, Ordering::SeqCst);
                 let sent = tx.send(WorkerMsg::Job(Job {
                     client_id,
                     token,
@@ -321,6 +459,7 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
                 }));
                 if sent.is_err() {
                     infl.fetch_sub(1, Ordering::SeqCst);
+                    class_infl.fetch_sub(1, Ordering::SeqCst);
                     writeln!(writer, "{}", Json::obj(vec![
                         ("type", Json::str("error")),
                         ("message", Json::str("worker unavailable")),
@@ -335,6 +474,7 @@ fn handle_conn(stream: TcpStream, routes: Vec<Route>) -> Result<()> {
                 // instead of burning a slot for a dead connection.
                 let relay = relay_frames(&mut writer, rrx);
                 infl.fetch_sub(1, Ordering::SeqCst);
+                class_infl.fetch_sub(1, Ordering::SeqCst);
                 if relay.client_gone {
                     // cancel only this connection's request — client ids
                     // may collide across connections, tokens cannot
@@ -444,6 +584,17 @@ fn simple_frame(kind: &str, client_id: i64) -> String {
     ]).to_string()
 }
 
+/// `busy` with the scheduler's retry hint. The plain `simple_frame("busy")`
+/// form stays for drain/shutdown rejections, where "retry in N steps" would
+/// be a lie — the queue is not coming back.
+fn busy_frame(client_id: i64, retry_after_steps: u64) -> String {
+    Json::obj(vec![
+        ("type", Json::str("busy")),
+        ("id", Json::num(client_id as f64)),
+        ("retry_after_steps", Json::num(retry_after_steps as f64)),
+    ]).to_string()
+}
+
 fn error_frame(client_id: i64, msg: &str) -> String {
     Json::obj(vec![
         ("type", Json::str("error")),
@@ -458,6 +609,14 @@ fn worker_stats_json(engine: &Engine) -> String {
         ("active", Json::num(engine.n_active() as f64)),
         ("queued", Json::num(engine.queue_len() as f64)),
         ("pool_utilization", Json::num(engine.pool_utilization())),
+        // shared-pool lease view: this worker's parked shard reserve, what
+        // it could allocate without stealing, and blocks held by its seqs
+        ("shard_free_blocks",
+         Json::num(engine.pool().shard_free_blocks() as f64)),
+        ("headroom_blocks",
+         Json::num(engine.pool().headroom_blocks() as f64)),
+        ("lease_blocks",
+         Json::num(engine.pool().lease_in_use_blocks() as f64)),
         ("steps", Json::num(m.counter("sched.steps") as f64)),
         ("completed", Json::num(m.counter("sched.completed") as f64)),
         ("cancelled", Json::num(m.counter("sched.cancelled") as f64)),
@@ -489,12 +648,15 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
                         resp: job.resp,
                     });
                 }
-                Ok(Submission::Queued { id, pos }) => {
+                Ok(Submission::Queued { id, pos, est_start_step }) => {
                     let _ = job.resp.send(Json::obj(vec![
                         ("type", Json::str("queued")),
                         ("id", Json::num(job.client_id as f64)),
                         ("pos", Json::num(pos as f64)),
                         ("class", Json::str(job.class.name())),
+                        // deadline-aware hint: estimated absolute scheduler
+                        // step at which this position reaches a slot
+                        ("est_start", Json::num(est_start_step as f64)),
                     ]).to_string());
                     pending.insert(id, Pending {
                         client_id: job.client_id,
@@ -504,8 +666,9 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
                         resp: job.resp,
                     });
                 }
-                Ok(Submission::Busy) => {
-                    let _ = job.resp.send(simple_frame("busy", job.client_id));
+                Ok(Submission::Busy { retry_after_steps }) => {
+                    let _ = job.resp.send(busy_frame(job.client_id,
+                                                     retry_after_steps));
                 }
                 Err(e) => {
                     let _ = job.resp.send(error_frame(
@@ -552,12 +715,16 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
     }
 }
 
-/// Worker: owns Runtime + Engine; admission-controlled continuous batching
-/// with token streaming. Requests flow `submit` → wait queue → slot →
-/// `step_ex` rounds; each round's accepted tokens become `tok` frames for
-/// streaming clients.
-fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<WorkerMsg>,
-               _inflight: Arc<AtomicUsize>, shutdown: Arc<AtomicBool>) {
+/// Worker: owns Runtime + Engine (leased on the process-wide block pool);
+/// admission-controlled continuous batching with token streaming. Requests
+/// flow `submit` → wait queue → slot → `step_ex` rounds; each round's
+/// accepted tokens become `tok` frames for streaming clients. Publishes its
+/// queue depth for the router's placement policy. On exit (drain or error)
+/// the engine drops, and with it the `PoolLease` — every block the worker
+/// held returns to the shared pool's global free list.
+fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
+               rx: Receiver<WorkerMsg>, queued_depth: Arc<AtomicUsize>,
+               shutdown: Arc<AtomicBool>) {
     let rt = match Runtime::load(&artifacts) {
         Ok(rt) => rt,
         Err(e) => {
@@ -565,7 +732,7 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<WorkerMsg>,
             return;
         }
     };
-    let mut engine = match Engine::new(rt, ecfg) {
+    let mut engine = match Engine::new_leased(rt, ecfg, lease) {
         Ok(e) => e,
         Err(e) => {
             eprintln!("worker: engine init failed: {e:#}");
@@ -591,6 +758,8 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, rx: Receiver<WorkerMsg>,
             }
         }
         let draining = disconnected || shutdown.load(Ordering::SeqCst);
+        // publish queue depth for the router's placement scoring
+        queued_depth.store(engine.queue_len(), Ordering::SeqCst);
 
         if engine.n_active() == 0 && engine.queue_len() == 0 {
             if draining {
@@ -711,7 +880,10 @@ pub struct GenerateReply {
 pub enum GenerateOutcome {
     Done(GenerateReply),
     /// Admit queue at its cap — backpressure; retry later.
-    Busy,
+    /// `retry_after_steps` carries the server's deadline-aware hint
+    /// (estimated scheduler steps until a queue seat frees); `None` when
+    /// the server was draining rather than momentarily full.
+    Busy { retry_after_steps: Option<u64> },
     /// Cancelled from another connection mid-flight.
     Cancelled,
 }
@@ -754,7 +926,9 @@ impl Client {
                     -> Result<GenerateReply> {
         match self.generate_stream(id, prompt, max_new, false, |_| {})? {
             GenerateOutcome::Done(r) => Ok(r),
-            GenerateOutcome::Busy => Err(anyhow!("server busy (queue full)")),
+            GenerateOutcome::Busy { .. } => {
+                Err(anyhow!("server busy (queue full)"))
+            }
             GenerateOutcome::Cancelled => Err(anyhow!("request cancelled")),
         }
     }
@@ -803,7 +977,14 @@ impl Client {
                         ms: v.get("ms").as_f64().unwrap_or(0.0),
                     }));
                 }
-                Some("busy") => return Ok(GenerateOutcome::Busy),
+                Some("busy") => {
+                    return Ok(GenerateOutcome::Busy {
+                        retry_after_steps: v
+                            .get("retry_after_steps")
+                            .as_usize()
+                            .map(|n| n as u64),
+                    })
+                }
                 Some("cancelled") => return Ok(GenerateOutcome::Cancelled),
                 Some("error") => return Err(anyhow!(
                     "server error: {}",

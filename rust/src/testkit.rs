@@ -14,11 +14,15 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use std::sync::Arc;
+
 use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
 use crate::engine::{Engine, GenOutput, GenStats, StepReport, Submission,
                     TokenDelta};
+use crate::kvcache::{PoolLease, SharedBlockPool};
 use crate::metrics::{EventLog, SchedEvent};
-use crate::sched::{Priority, ReqMeta, SloPolicy};
+use crate::sched::{self, AdmitRate, Priority, ReqMeta, SloPolicy,
+                   WorkerSnapshot};
 use crate::util::rng::Rng;
 use crate::workload::Trace;
 
@@ -49,6 +53,12 @@ pub mod alloc {
     impl CountingAllocator {
         pub const fn new() -> CountingAllocator {
             CountingAllocator
+        }
+    }
+
+    impl Default for CountingAllocator {
+        fn default() -> Self {
+            Self::new()
         }
     }
 
@@ -271,7 +281,7 @@ impl SchedulerSim {
                                 .push((clock + self.opts.cancel_after, id));
                         }
                     }
-                    Submission::Busy => report.busy_rejections += 1,
+                    Submission::Busy { .. } => report.busy_rejections += 1,
                 }
             }
             taken += n_due;
@@ -374,18 +384,28 @@ impl MockReq {
     }
 }
 
+/// Deterministic "tokenized" prompt length used by `MockSched` and by
+/// `MockCluster`'s placement estimate (they must agree, exactly as the
+/// server's router estimate pairs with the engine's real tokenizer).
+pub fn mock_prompt_len(prompt: &str) -> usize {
+    (prompt.len() / 4).clamp(1, 64)
+}
+
 /// Engine-shaped deterministic fake: same admission/queue/eviction policy
-/// surface as `Engine` (slots, SLO-policy wait queue with a cap, a position
-/// pool with least-urgent preemption, resumable chunked prefill), but token
-/// production is a seeded RNG instead of a model — so scheduler tests run
-/// without artifacts. Policy decisions go through the same
-/// `sched::SloPolicy` the engine uses.
+/// surface as `Engine` (slots, SLO-policy wait queue with a cap, a
+/// `PoolLease` on a real `kvcache::SharedBlockPool` with least-urgent
+/// preemption, resumable chunked prefill), but token production is a seeded
+/// RNG instead of a model — so scheduler tests run without artifacts.
+/// Policy decisions go through the same `sched::SloPolicy` the engine
+/// uses, and pool accounting through the same shared-pool lease/steal
+/// code, at 1-position block granularity so positions == blocks and the
+/// PR-2-era scenario arithmetic is unchanged.
 pub struct MockSched {
     slots: Vec<Option<MockSeq>>,
     wait_queue: Vec<MockReq>,
     queue_cap: usize,
-    /// total KV positions the fake pool holds
-    pool_positions: usize,
+    /// lease on the (possibly cluster-shared) fake KV pool
+    pool: PoolLease,
     policy: SloPolicy,
     /// β analog: when installed (`with_beta`), the per-round accepted-token
     /// range is the controller's tree-node budget instead of the legacy
@@ -393,8 +413,12 @@ pub struct MockSched {
     /// exact production controller, deterministically, without artifacts
     beta: Option<BetaController>,
     last_plan: Option<DraftPlan>,
+    /// observed admission rate (deadline-aware queued/busy estimates)
+    admit_rate: AdmitRate,
     step_no: u64,
     next_id: u64,
+    /// id increment — cluster workers interleave id spaces (w+1, +workers)
+    id_stride: u64,
     rng: Rng,
     events: EventLog,
 }
@@ -407,18 +431,35 @@ pub struct MockSched {
 const MOCK_BETA_BASE: (usize, usize, usize) = (7, 8, 8); // paths, nodes, len
 
 impl MockSched {
+    /// Standalone mock over a private single-worker pool of
+    /// `pool_positions` 1-position blocks (PR-2-compatible semantics).
     pub fn new(slots: usize, queue_cap: usize, pool_positions: usize,
                seed: u64) -> Self {
+        let slots = slots.max(1);
+        let pool = Arc::new(SharedBlockPool::with_config(
+            pool_positions.max(1), 1, 1, 0, 0));
+        Self::with_lease(slots, queue_cap, PoolLease::new(pool, 0, slots), seed)
+    }
+
+    /// Mock worker over an externally owned lease — the N-workers-over-one-
+    /// shared-pool form `MockCluster` builds.
+    pub fn with_lease(slots: usize, queue_cap: usize, lease: PoolLease,
+                      seed: u64) -> Self {
+        let slots = slots.max(1);
+        assert!(lease.max_slots() >= slots,
+                "lease covers {} slots, mock needs {slots}", lease.max_slots());
         MockSched {
-            slots: (0..slots.max(1)).map(|_| None).collect(),
+            slots: (0..slots).map(|_| None).collect(),
             wait_queue: Vec::new(),
             queue_cap,
-            pool_positions: pool_positions.max(1),
+            pool: lease,
             policy: SloPolicy::default(),
             beta: None,
             last_plan: None,
+            admit_rate: AdmitRate::default(),
             step_no: 0,
             next_id: 1,
+            id_stride: 1,
             rng: Rng::new(seed),
             events: EventLog::default(),
         }
@@ -430,6 +471,14 @@ impl MockSched {
         self
     }
 
+    /// Interleaved id namespace for cluster workers: ids start at `start`
+    /// and advance by `stride`, so N workers sharing a pool never collide.
+    pub fn with_ids(mut self, start: u64, stride: u64) -> Self {
+        self.next_id = start.max(1);
+        self.id_stride = stride.max(1);
+        self
+    }
+
     /// Install a β controller (the same `adapt::BetaController` the engine
     /// runs) governing the per-round accepted-token range.
     pub fn with_beta(mut self, policy: BetaPolicy) -> Self {
@@ -438,16 +487,26 @@ impl MockSched {
         self
     }
 
-    fn pool_used(&self) -> usize {
-        self.slots
-            .iter()
-            .flatten()
-            .map(|s| s.prompt_len + s.produced.len())
-            .sum()
-    }
-
     fn has_free_slot(&self) -> bool {
         self.slots.iter().any(|s| s.is_none())
+    }
+
+    /// (interactive, batch) counts of sequences occupying slots — the
+    /// cluster router's class-mix signal.
+    pub fn class_load(&self) -> (usize, usize) {
+        let mut counts = (0usize, 0usize);
+        for s in self.slots.iter().flatten() {
+            match s.class {
+                Priority::Interactive => counts.0 += 1,
+                Priority::Batch => counts.1 += 1,
+            }
+        }
+        counts
+    }
+
+    /// This worker's pool lease (tests inspect shard/steal state).
+    pub fn pool(&self) -> &PoolLease {
+        &self.pool
     }
 
     /// Queue indices in SLO admission order (mirrors `Engine::policy_order`).
@@ -468,6 +527,12 @@ impl MockSched {
             .position(|s| s.is_none())
             .expect("admit_req requires a free slot");
         let id = req.id;
+        let need = req.prompt_len + req.produced.len();
+        // callers gate on can_fit(need); with refill + stealing, ensure then
+        // reaches everything the cluster has free
+        self.pool
+            .ensure(slot, need)
+            .expect("mock admission gated on can_fit");
         let rng = match req.rng {
             Some(r) => r,
             None => self.rng.fork(id),
@@ -476,7 +541,7 @@ impl MockSched {
         let prefill_total = if self.policy.prefill_chunk == 0 {
             0
         } else {
-            req.prompt_len + req.produced.len()
+            need
         };
         self.slots[slot] = Some(MockSeq {
             id,
@@ -492,6 +557,7 @@ impl MockSched {
             rng,
         });
         let waited = self.step_no.saturating_sub(req.enq_step);
+        self.admit_rate.observe_admission(self.step_no, waited);
         self.events.push(SchedEvent::Admitted { step: self.step_no, id, waited });
         id
     }
@@ -514,7 +580,7 @@ impl MockSched {
             for &i in &order {
                 let front = &self.wait_queue[i];
                 let need = front.prompt_len + front.produced.len();
-                if need > self.pool_positions {
+                if self.pool.blocks_for(need) > self.pool.total_blocks() {
                     let req = self.wait_queue.remove(i);
                     let (out, miss) = self.finish_req(
                         req.id, req.prompt_len, req.steps, req.produced,
@@ -525,14 +591,14 @@ impl MockSched {
                     forced.push(out);
                     continue 'outer;
                 }
-                if self.pool_used() + need <= self.pool_positions {
+                if self.pool.can_fit(need) {
                     let req = self.wait_queue.remove(i);
                     admitted.push(self.admit_req(req));
                     continue 'outer;
                 }
                 // deadline-driven preemption, mirroring Engine::fill_slots:
                 // only when the strictly-less-urgent victims hold enough
-                // positions for the candidate, so eviction always ends in
+                // blocks for the candidate, so eviction always ends in
                 // an admission (no evict/re-admit churn or livelock)
                 let meta = front.meta();
                 if self.policy.effective_class(&meta, now)
@@ -547,18 +613,14 @@ impl MockSched {
                     let metas: Vec<ReqMeta> =
                         running.iter().map(|(_, m)| m.clone()).collect();
                     let victims = self.policy.victims_for(&metas, &meta, now);
+                    let need_blocks = self.pool.blocks_for(need);
                     let reclaim: usize = victims
                         .iter()
-                        .map(|&v| {
-                            let s = self.slots[running[v].0]
-                                .as_ref()
-                                .expect("victim is live");
-                            s.prompt_len + s.produced.len()
-                        })
+                        .map(|&v| self.pool.allocated(running[v].0))
                         .sum();
-                    if self.pool_used() + need <= self.pool_positions + reclaim {
+                    if self.pool.free_blocks() + reclaim >= need_blocks {
                         for &v in &victims {
-                            if self.pool_used() + need <= self.pool_positions {
+                            if self.pool.can_fit(need) {
                                 break;
                             }
                             let vid = self.evict_slot(running[v].0);
@@ -612,6 +674,7 @@ impl MockSched {
 
     fn evict_slot(&mut self, slot: usize) -> u64 {
         let seq = self.slots[slot].take().expect("victim is live");
+        self.pool.release(slot);
         let gen_len = seq.produced.len();
         let id = seq.id;
         self.wait_queue.push(MockReq {
@@ -650,21 +713,25 @@ impl SchedBackend for MockSched {
     fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
                      deadline_steps: Option<u64>) -> Result<Submission> {
         if self.queue_cap > 0 && self.wait_queue.len() >= self.queue_cap {
-            return Ok(Submission::Busy);
+            return Ok(Submission::Busy {
+                retry_after_steps: self
+                    .admit_rate
+                    .retry_after_steps(self.wait_queue.len()),
+            });
         }
         // deterministic "tokenized" length from the prompt bytes
-        let prompt_len = (prompt.len() / 4).clamp(1, 64);
-        if prompt_len > self.pool_positions {
+        let prompt_len = mock_prompt_len(prompt);
+        if self.pool.blocks_for(prompt_len) > self.pool.total_blocks() {
             // mirror Engine::submit's bail for prompts the whole pool can
             // never hold — they must never enter the queue
             anyhow::bail!(
                 "prompt needs {prompt_len} positions but the pool holds \
-                 only {}", self.pool_positions);
+                 only {}", self.pool.total_blocks());
         }
         let deadline_step = self.step_no
             + deadline_steps.unwrap_or_else(|| self.policy.class_deadline(class));
         let id = self.next_id;
-        self.next_id += 1;
+        self.next_id += self.id_stride;
         self.events.push(SchedEvent::Submitted {
             step: self.step_no, id, class, deadline: deadline_step,
         });
@@ -682,7 +749,7 @@ impl SchedBackend for MockSched {
         };
         if self.wait_queue.is_empty()
             && self.has_free_slot()
-            && self.pool_used() + prompt_len <= self.pool_positions
+            && self.pool.can_fit(prompt_len)
         {
             return Ok(Submission::Admitted(self.admit_req(req)));
         }
@@ -693,7 +760,11 @@ impl SchedBackend for MockSched {
             .position(|&i| self.wait_queue[i].id == id)
             .unwrap_or(self.wait_queue.len() - 1);
         self.events.push(SchedEvent::Queued { step: self.step_no, id, pos });
-        Ok(Submission::Queued { id, pos })
+        Ok(Submission::Queued {
+            id,
+            pos,
+            est_start_step: self.admit_rate.est_start_step(self.step_no, pos),
+        })
     }
 
     fn cancel(&mut self, id: u64) -> bool {
@@ -707,6 +778,7 @@ impl SchedBackend for MockSched {
         });
         if let Some(slot) = slot {
             self.slots[slot] = None;
+            self.pool.release(slot);
             self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
             return true;
         }
@@ -794,8 +866,9 @@ impl SchedBackend for MockSched {
                 plan.tree_nodes
             }
         };
-        for slot in self.slots.iter_mut() {
-            let Some(seq) = slot.as_mut() else { continue };
+        let mut pressure: Vec<(usize, usize)> = Vec::new();
+        for b in 0..self.slots.len() {
+            let Some(seq) = self.slots[b].as_mut() else { continue };
             if seq.prefill_left > 0 {
                 continue;
             }
@@ -808,10 +881,17 @@ impl SchedBackend for MockSched {
                 delta.tokens.push(tok);
             }
             seq.steps += 1;
+            let need = seq.prompt_len + seq.produced.len();
             if let Some(beta) = self.beta.as_mut() {
                 beta.observe(k);
             }
             report.emitted.push(delta);
+            // mirror the engine: accepted tokens grow the slot's lease;
+            // a failed ensure means the CLUSTER is out of blocks (refill
+            // and stealing both came up empty) — resolved after the reap
+            if self.pool.ensure(b, need).is_err() {
+                pressure.push((b, need));
+            }
         }
 
         // reap finished — `max_new` reached, or (mirroring Engine's
@@ -821,11 +901,14 @@ impl SchedBackend for MockSched {
                 .as_ref()
                 .map(|s| {
                     (s.prefill_left == 0 && s.produced.len() >= s.max_new)
-                        || s.prompt_len + s.produced.len() + 1 > self.pool_positions
+                        || self.pool.blocks_for(
+                            s.prompt_len + s.produced.len() + 1)
+                            > self.pool.total_blocks()
                 })
                 .unwrap_or(false);
             if done {
                 let seq = self.slots[b].take().expect("done seq");
+                self.pool.release(b);
                 let (out, miss) = self.finish_req(
                     seq.id, seq.prompt_len, seq.steps, seq.produced,
                     seq.class, seq.deadline_step);
@@ -836,18 +919,26 @@ impl SchedBackend for MockSched {
             }
         }
 
-        // pool pressure: preempt the least urgent until the fake pool fits
-        while self.pool_used() > self.pool_positions {
-            match self.evict_least_urgent() {
-                Some(id) => report.evicted.push(id),
-                None => break,
+        // cluster pool pressure: preempt the least urgent until every
+        // surviving slot's lease covers its sequence (mirrors Engine
+        // step 6; the victim can end up being the pressured slot itself)
+        for (slot, need) in pressure {
+            loop {
+                if self.slots[slot].is_none() {
+                    break; // finished, cancelled, or evicted above
+                }
+                if self.pool.ensure(slot, need).is_ok() {
+                    break;
+                }
+                match self.evict_least_urgent() {
+                    Some(id) => report.evicted.push(id),
+                    None => break,
+                }
             }
         }
 
         report.queue_depth = self.wait_queue.len();
-        report.pool_utilization =
-            self.pool_used().min(self.pool_positions) as f64
-                / self.pool_positions as f64;
+        report.pool_utilization = self.pool.utilization();
         Ok(report)
     }
 
@@ -861,6 +952,180 @@ impl SchedBackend for MockSched {
 
     fn render_events(&self) -> String {
         self.events.render()
+    }
+}
+
+// ------------------------------------------------------ mock cluster
+
+/// N `MockSched` workers over ONE `SharedBlockPool`, fronted by the same
+/// `sched::place` policy the server's router runs — the artifact-free
+/// model of the shared-pool serving cluster. Placement decisions are
+/// logged as `place` events, every worker's scheduler log is rendered in
+/// a fixed order, and all randomness is seeded, so cluster scenarios
+/// (headroom routing, cross-worker lease stealing, drain) replay
+/// byte-for-byte.
+pub struct MockCluster {
+    workers: Vec<MockSched>,
+    pool: Arc<SharedBlockPool>,
+    /// requests routed per worker (the router's `placements` counter)
+    placements: Vec<u64>,
+    events: EventLog,
+    step_no: u64,
+}
+
+impl MockCluster {
+    /// `workers` mocks sharing a pool of `pool_positions` 1-position
+    /// blocks; worker w gets ids w+1, w+1+workers, ... (no collisions).
+    pub fn new(workers: usize, slots: usize, queue_cap: usize,
+               pool_positions: usize, seed: u64) -> Self {
+        let workers = workers.max(1);
+        let pool = Arc::new(SharedBlockPool::with_config(
+            pool_positions.max(1), 1, workers, 0, 0));
+        Self::with_pool(pool, slots, queue_cap, seed)
+    }
+
+    /// Cluster over a caller-built pool (tests tune lease quantum/cap).
+    pub fn with_pool(pool: Arc<SharedBlockPool>, slots: usize,
+                     queue_cap: usize, seed: u64) -> Self {
+        let n = pool.workers();
+        let slots = slots.max(1);
+        let workers: Vec<MockSched> = (0..n)
+            .map(|w| {
+                MockSched::with_lease(
+                    slots, queue_cap,
+                    PoolLease::new(pool.clone(), w, slots),
+                    seed.wrapping_add(w as u64))
+                .with_ids(w as u64 + 1, n as u64)
+            })
+            .collect();
+        MockCluster {
+            placements: vec![0; n],
+            workers,
+            pool,
+            events: EventLog::default(),
+            step_no: 0,
+        }
+    }
+
+    /// Apply an SLO policy to every worker.
+    pub fn with_policy(mut self, policy: SloPolicy) -> Self {
+        self.workers = self
+            .workers
+            .into_iter()
+            .map(|m| m.with_policy(policy))
+            .collect();
+        self
+    }
+
+    /// Install the β controller on every worker.
+    pub fn with_beta(mut self, policy: BetaPolicy) -> Self {
+        self.workers = self
+            .workers
+            .into_iter()
+            .map(|m| m.with_beta(policy))
+            .collect();
+        self
+    }
+
+    pub fn pool(&self) -> &Arc<SharedBlockPool> {
+        &self.pool
+    }
+
+    pub fn worker(&self, w: usize) -> &MockSched {
+        &self.workers[w]
+    }
+
+    /// Requests routed to each worker so far.
+    pub fn placements(&self) -> &[u64] {
+        &self.placements
+    }
+
+    /// Drain an idle worker's lease back to the shared pool (the worker
+    /// keeps running; its shard refills on demand). Panics when the worker
+    /// still has active or queued requests — drain is for idle workers.
+    pub fn drain_worker(&mut self, w: usize) -> usize {
+        assert!(self.workers[w].n_active() == 0
+                    && self.workers[w].queue_len() == 0,
+                "drain_worker requires an idle worker");
+        self.pool.drain_worker(w)
+    }
+
+    /// Router-visible load snapshot per worker: no-steal pool headroom,
+    /// class mix of occupied slots, and queue depth.
+    fn snapshots(&self) -> Vec<WorkerSnapshot> {
+        self.workers
+            .iter()
+            .enumerate()
+            .map(|(w, m)| {
+                let (interactive, batch) = m.class_load();
+                let queued = m.queue_len();
+                WorkerSnapshot {
+                    headroom_blocks: self.pool.headroom(w),
+                    inflight_interactive: interactive,
+                    inflight_batch: batch,
+                    queued,
+                    queue_full: m.queue_cap > 0 && queued >= m.queue_cap,
+                }
+            })
+            .collect()
+    }
+}
+
+impl SchedBackend for MockCluster {
+    fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>) -> Result<Submission> {
+        let snaps = self.snapshots();
+        let need = self.pool.blocks_for(mock_prompt_len(prompt));
+        let w = sched::place(&snaps, class, need, deadline_steps);
+        let sub = self.workers[w].submit_tagged(prompt, max_new, class,
+                                                deadline_steps)?;
+        self.placements[w] += 1;
+        let id = match &sub {
+            Submission::Admitted(id) => *id,
+            Submission::Queued { id, .. } => *id,
+            Submission::Busy { .. } => 0,
+        };
+        self.events.push(SchedEvent::Placed { step: self.step_no, id, worker: w });
+        Ok(sub)
+    }
+
+    fn cancel(&mut self, id: u64) -> bool {
+        // cluster ids are unique (interleaved namespaces): at most one hit
+        self.workers.iter_mut().any(|m| m.cancel(id))
+    }
+
+    fn step_ex(&mut self) -> Result<StepReport> {
+        self.step_no += 1;
+        let mut report = StepReport { step: self.step_no, ..Default::default() };
+        for m in &mut self.workers {
+            let r = m.step_ex()?;
+            report.admitted.extend(r.admitted);
+            report.emitted.extend(r.emitted);
+            report.finished.extend(r.finished);
+            report.evicted.extend(r.evicted);
+            report.prefilled.extend(r.prefilled);
+            report.deadline_missed.extend(r.deadline_missed);
+            report.queue_depth += r.queue_depth;
+        }
+        report.pool_utilization = self.pool.utilization();
+        Ok(report)
+    }
+
+    fn n_active(&self) -> usize {
+        self.workers.iter().map(|m| m.n_active()).sum()
+    }
+
+    fn queue_len(&self) -> usize {
+        self.workers.iter().map(|m| m.queue_len()).sum()
+    }
+
+    fn render_events(&self) -> String {
+        let mut s = self.events.render();
+        for (w, m) in self.workers.iter().enumerate() {
+            s.push_str(&format!("-- worker {w} --\n"));
+            s.push_str(&m.render_events());
+        }
+        s
     }
 }
 

@@ -17,13 +17,20 @@
 //! A regression in those paths is NOT caught here — only the draft→
 //! transform→tree→bias→accept→commit/gather kernel is gated.
 //!
+//! PR 4 extends the gate to the shared KV block pool: steady-state lease
+//! traffic (own-shard grow, global refill, cross-worker lease steal,
+//! release) is measured in the same binary and must also allocate nothing
+//! — the shared pool's accounting is atomics end to end.
+//!
 //! This binary holds exactly one #[test]: the allocation counters are
 //! process-global, so a concurrently running test would pollute the
 //! measurement.
 
+use std::sync::Arc;
+
 use ctcdraft::ctc::{prefix_beam_search_into, BeamScratch};
 use ctcdraft::drafters::PathSet;
-use ctcdraft::kvcache::SeqCache;
+use ctcdraft::kvcache::{PoolLease, SeqCache, SharedBlockPool};
 use ctcdraft::testkit::alloc::{self, CountingAllocator};
 use ctcdraft::testkit::gen;
 use ctcdraft::tree::TokenTree;
@@ -128,5 +135,38 @@ fn steady_state_host_round_allocates_zero_bytes() {
     assert_eq!(used.calls, 0,
                "steady-state hot round made {} allocation calls ({} bytes)",
                used.calls, used.bytes);
+    assert_eq!(used.bytes, 0);
+
+    // --- shared-pool lease gate (PR 4): with the cluster-wide block pool
+    // under the engine, steady-state lease traffic — grow within the
+    // shard, refill from global, STEAL from a neighbor's shard, release —
+    // must also be allocation-free (atomics only). The 128-block pool with
+    // generous shard retention makes the global list drain after a few
+    // rounds, so worker 0's big grow (100-block peak demand vs ~90 blocks
+    // outside worker 1's shard) crosses the steal path every cycle while
+    // never exhausting the cluster (peak use 100 <= 128).
+    fn lease_round(a: &mut PoolLease, b: &mut PoolLease, r: usize) {
+        a.ensure(0, 64 + (r % 3) * 256).expect("grow a0");
+        b.ensure(1, 512).expect("grow b1");
+        b.release(1); // parks in worker 1's shard (cap = whole pool)
+        a.ensure(1, 1024).expect("grow a1: refill + steal");
+        a.release(1);
+        a.release(0);
+    }
+    let pool = Arc::new(SharedBlockPool::with_config(2048, 16, 2, 4, 128));
+    let mut lease_a = PoolLease::new(pool.clone(), 0, 4);
+    let mut lease_b = PoolLease::new(pool.clone(), 1, 4);
+    for r in 0..8 {
+        lease_round(&mut lease_a, &mut lease_b, r);
+    }
+    let start = alloc::snapshot();
+    for r in 0..200 {
+        lease_round(&mut lease_a, &mut lease_b, r);
+    }
+    let used = alloc::delta(start);
+    assert!(pool.steals() > 0, "steal path never exercised");
+    assert_eq!(used.calls, 0,
+               "steady-state lease traffic made {} allocation calls \
+                ({} bytes)", used.calls, used.bytes);
     assert_eq!(used.bytes, 0);
 }

@@ -588,22 +588,23 @@ fn prop_preemption_never_evicts_more_urgent() {
 
 #[test]
 fn prop_block_pool_never_leaks_or_double_frees() {
-    use ctcdraft::kvcache::{BlockPool, BLOCK_POSITIONS};
-    // Model-based check: random interleavings of ensure/release across
-    // random slots, against a reference per-slot block ledger. The pool
-    // must never leak blocks, never free more than it allocated, and keep
-    // utilization in [0, 1] throughout.
+    use ctcdraft::kvcache::{PoolLease, BLOCK_POSITIONS};
+    // Model-based check over the single-worker lease (the old per-engine
+    // `BlockPool`'s exact replacement): random interleavings of
+    // ensure/release across random slots, against a reference per-slot
+    // block ledger. The pool must never leak blocks, never free more than
+    // it allocated, and keep utilization in [0, 1] throughout.
     Prop::new("block_pool").check(|rng| {
         let max_seqs = 1 + rng.below(6);
         let total_positions = BLOCK_POSITIONS * (1 + rng.below(16));
-        let mut pool = BlockPool::new(total_positions, max_seqs);
+        let mut pool = PoolLease::single(total_positions, max_seqs);
         let total = pool.total_blocks();
         let mut ledger = vec![0usize; max_seqs];
         for op in 0..200 {
             let slot = rng.below(max_seqs);
             if rng.bool(0.6) {
                 let positions = rng.below(2 * total_positions + 1);
-                let want = BlockPool::blocks_for(positions);
+                let want = pool.blocks_for(positions);
                 let free = total - ledger.iter().sum::<usize>();
                 let grew = want > ledger[slot];
                 let res = pool.ensure(slot, positions);
@@ -652,6 +653,88 @@ fn prop_block_pool_never_leaks_or_double_frees() {
         if pool.free_blocks() != total || pool.in_use_blocks() != 0 {
             return Err(format!(
                 "final drain leaked: free {} of {total}", pool.free_blocks()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_shared_pool_never_leaks_or_strands_capacity() {
+    use ctcdraft::kvcache::{PoolLease, SharedBlockPool, BLOCK_POSITIONS};
+    use std::sync::Arc;
+    // Model-based check across W workers sharing one pool: random
+    // ensure/release interleavings against a per-worker/per-slot ledger.
+    // Invariants: exact accounting (free + held == total, per-slot ledgers
+    // match), NO stranding (an ensure the cluster can satisfy must succeed
+    // — refill + lease stealing reach every free block), no partial
+    // allocation on failure, and dropping every lease drains the whole
+    // pool back to the global free list.
+    Prop::new("shared_pool").check(|rng| {
+        let workers = 1 + rng.below(4);
+        let max_seqs = 1 + rng.below(4);
+        let total_positions = BLOCK_POSITIONS * (4 + rng.below(24));
+        let pool = Arc::new(SharedBlockPool::new(total_positions, workers));
+        let total = pool.total_blocks();
+        let mut leases: Vec<PoolLease> = (0..workers)
+            .map(|w| PoolLease::new(pool.clone(), w, max_seqs))
+            .collect();
+        let mut ledger = vec![vec![0usize; max_seqs]; workers];
+        for op in 0..300 {
+            let w = rng.below(workers);
+            let slot = rng.below(max_seqs);
+            if rng.bool(0.6) {
+                let positions = rng.below(2 * total_positions + 1);
+                let want = pool.blocks_for(positions);
+                let held: usize = ledger.iter().flatten().sum();
+                let free = total - held;
+                let grew = want > ledger[w][slot];
+                let res = leases[w].ensure(slot, positions);
+                if !grew {
+                    if res.is_err() {
+                        return Err(format!("op {op}: shrinking ensure failed"));
+                    }
+                } else if want - ledger[w][slot] <= free {
+                    // the CLUSTER has room: per-worker shards must never
+                    // strand it (this is the tentpole's core guarantee)
+                    if res.is_err() {
+                        return Err(format!(
+                            "op {op}: worker {w} failed an ensure the \
+                             cluster could satisfy (want {want}, free {free})"));
+                    }
+                    ledger[w][slot] = want;
+                } else if res.is_ok() {
+                    return Err(format!("op {op}: over-capacity ensure ok"));
+                }
+            } else {
+                leases[w].release(slot);
+                ledger[w][slot] = 0;
+            }
+            let held: usize = ledger.iter().flatten().sum();
+            if pool.cluster_free_blocks() + held != total {
+                return Err(format!(
+                    "op {op}: leak — cluster free {} + held {held} != {total}",
+                    pool.cluster_free_blocks()));
+            }
+            for (w, lw) in ledger.iter().enumerate() {
+                for (s, &want) in lw.iter().enumerate() {
+                    if leases[w].allocated(s) != want {
+                        return Err(format!(
+                            "op {op}: worker {w} slot {s} holds {} blocks, \
+                             expected {want}", leases[w].allocated(s)));
+                    }
+                }
+            }
+            let u = pool.utilization();
+            if !(0.0..=1.0).contains(&u) {
+                return Err(format!("op {op}: utilization {u} out of [0,1]"));
+            }
+        }
+        // dropping every lease must return EVERYTHING to the global list
+        leases.clear();
+        if pool.global_free_blocks() != total {
+            return Err(format!(
+                "lease drop leaked: global {} of {total}",
+                pool.global_free_blocks()));
         }
         Ok(())
     });

@@ -2,17 +2,24 @@
 //! through `testkit::SchedulerSim` and require byte-for-byte identical
 //! scheduler-event logs across runs, plus the SLO scenario suite
 //! (long-prefill interleave, interactive-preempts-batch, deadline-miss
-//! accounting, and the FIFO head-blocking regression case).
+//! accounting, and the FIFO head-blocking regression case) and the
+//! shared-pool cluster suite (lease stealing instead of preemption,
+//! headroom-over-inflight routing, idle-worker drain, cluster replay).
 //!
-//! Most tests drive the artifact-free `MockSched` (same admission/queue/
-//! eviction policy surface as `Engine`, via the shared `sched::SloPolicy`);
-//! the engine-backed replays gate on compiled artifacts being present.
+//! Most tests drive the artifact-free `MockSched`/`MockCluster` (same
+//! admission/queue/eviction/placement policy surface as `Engine` + the
+//! server router, via the shared `sched` policy module and a real
+//! `kvcache::SharedBlockPool`); the engine-backed replays gate on
+//! compiled artifacts being present.
+
+use std::sync::Arc;
 
 use ctcdraft::adapt::BetaPolicy;
 use ctcdraft::engine::Submission;
+use ctcdraft::kvcache::SharedBlockPool;
 use ctcdraft::sched::{Priority, SloPolicy};
-use ctcdraft::testkit::{MockSched, Prop, SchedBackend, SchedulerSim,
-                        SimOptions, SimReport};
+use ctcdraft::testkit::{MockCluster, MockSched, Prop, SchedBackend,
+                        SchedulerSim, SimOptions, SimReport};
 use ctcdraft::workload::{Question, Trace, TraceEntry};
 use ctcdraft::{default_artifacts_dir, workload};
 
@@ -469,6 +476,207 @@ fn prop_tagged_sim_deterministic_across_random_configs() {
         }
         Ok(())
     });
+}
+
+// ------------------------------------------- shared-pool cluster suite
+
+/// PR-4 acceptance scenario: two workers over ONE shared pool. Worker 0's
+/// sequence outgrows its lease while worker 1 idles on a shard full of
+/// released blocks — the engine-mirroring mock must STEAL worker 1's lease
+/// instead of preempting, so the whole run completes with zero evictions.
+/// Byte-for-byte replayable.
+#[test]
+fn cluster_under_pressure_steals_idle_lease_instead_of_preempting() {
+    let run = || {
+        // granularity 1, quantum 5, shard cap 100: worker 1's freed blocks
+        // stay parked in its shard (nothing spills back to global)
+        let pool = Arc::new(SharedBlockPool::with_config(100, 1, 2, 5, 100));
+        let mut c = MockCluster::with_pool(pool.clone(), 2, 0, 11);
+        // r1 -> worker 0 (tie-break): long-running, grows to 35+60 blocks
+        let r1 = match c
+            .submit_tagged(&"a".repeat(140), 60, Priority::Interactive,
+                           Some(500))
+            .expect("r1")
+        {
+            Submission::Admitted(id) => id,
+            other => panic!("r1 not admitted: {other:?}"),
+        };
+        // r2 -> worker 1 (class-mix steering away from busy worker 0):
+        // short; its ~39 blocks park in worker 1's shard on completion
+        let r2 = match c
+            .submit_tagged(&"b".repeat(140), 4, Priority::Interactive,
+                           Some(500))
+            .expect("r2")
+        {
+            Submission::Admitted(id) => id,
+            other => panic!("r2 not admitted: {other:?}"),
+        };
+        assert_eq!(c.placements(), &[1, 1], "requests must spread workers");
+        let mut evictions = 0usize;
+        let (mut r1_done, mut r2_done) = (false, false);
+        for _ in 0..400 {
+            let rep = c.step_ex().expect("step");
+            evictions += rep.evicted.len();
+            r1_done |= rep.finished.iter().any(|o| o.id == r1);
+            r2_done |= rep.finished.iter().any(|o| o.id == r2);
+            if c.n_active() == 0 && c.queue_len() == 0 {
+                break;
+            }
+        }
+        (evictions, r1_done, r2_done, pool.steals(), c.render_events())
+    };
+    let (evictions, r1_done, r2_done, steals, log) = run();
+    assert!(r2_done, "short request never finished");
+    assert!(r1_done, "long request never finished");
+    assert!(steals >= 1,
+            "worker 0 under pressure must steal worker 1's idle lease");
+    assert_eq!(evictions, 0,
+               "lease stealing must preempt NOBODY when the cluster has \
+                room (got {evictions} evictions)");
+    assert!(log.contains(" place id="), "placement decisions not logged");
+    let (e2, d1, d2, s2, log2) = run();
+    assert_eq!((evictions, r1_done, r2_done), (e2, d1, d2));
+    assert_eq!(steals, s2);
+    assert_eq!(log, log2, "cluster scenario must replay byte-for-byte");
+}
+
+/// Routing follows pool headroom, not raw inflight: worker 1 is idle but
+/// broke (all capacity parked in worker 0's shard), worker 0 is busy but
+/// roomy — both requests must land on worker 0.
+#[test]
+fn cluster_routes_by_headroom_not_inflight() {
+    let pool = Arc::new(SharedBlockPool::with_config(100, 1, 2, 5, 100));
+    // park the entire global list in worker 0's shard
+    let all = pool.global_free_blocks();
+    assert!(pool.try_take(0, all));
+    pool.give_back(0, all);
+    assert_eq!(pool.headroom(1), 0);
+    let mut c = MockCluster::with_pool(pool.clone(), 2, 0, 13);
+    let r1 = match c
+        .submit_tagged(&"a".repeat(120), 12, Priority::Interactive, None)
+        .expect("r1")
+    {
+        Submission::Admitted(id) => id,
+        other => panic!("r1 not admitted: {other:?}"),
+    };
+    c.step_ex().expect("step");
+    // worker 0: inflight 1, headroom plenty; worker 1: inflight 0, broke.
+    // least-inflight would pick worker 1; headroom-aware must pick 0
+    match c
+        .submit_tagged(&"b".repeat(16), 8, Priority::Interactive, None)
+        .expect("r2")
+    {
+        Submission::Admitted(id) => assert_ne!(id, r1),
+        other => panic!("r2 not admitted: {other:?}"),
+    }
+    assert_eq!(c.placements(), &[2, 0],
+               "interactive requests must follow pool headroom, not lowest \
+                inflight");
+    for _ in 0..200 {
+        c.step_ex().expect("step");
+        if c.n_active() == 0 && c.queue_len() == 0 {
+            break;
+        }
+    }
+    assert_eq!(c.n_active(), 0, "cluster failed to drain");
+}
+
+/// Draining an idle worker returns its parked lease to the shared pool's
+/// global free list, where any worker can claim it without stealing.
+#[test]
+fn drained_worker_releases_lease_back_to_shared_pool() {
+    let mut c = MockCluster::new(2, 2, 0, 200, 17);
+    for (chars, class) in [(120, Priority::Interactive), (120, Priority::Batch)]
+    {
+        let sub = c
+            .submit_tagged(&"x".repeat(chars), 8, class, None)
+            .expect("submit");
+        assert!(matches!(sub, Submission::Admitted(_)), "{sub:?}");
+    }
+    for _ in 0..200 {
+        c.step_ex().expect("step");
+        if c.n_active() == 0 && c.queue_len() == 0 {
+            break;
+        }
+    }
+    assert_eq!(c.n_active(), 0);
+    let total = c.pool().total_blocks();
+    let parked: usize = (0..2).map(|w| c.pool().shard_free(w)).sum();
+    assert!(parked > 0, "completed requests should leave parked lease");
+    let freed = c.drain_worker(0) + c.drain_worker(1);
+    assert_eq!(freed, parked);
+    assert_eq!(c.pool().global_free_blocks(), total,
+               "drained leases must all return to the global free list");
+    assert_eq!(c.pool().shard_free(0) + c.pool().shard_free(1), 0);
+}
+
+/// Whole-cluster determinism under a class-tagged Poisson trace with
+/// chunked prefill and cancellations: the merged event log (placements +
+/// every worker's scheduler log) must replay byte-for-byte.
+#[test]
+fn cluster_sim_replays_byte_for_byte() {
+    let policy = SloPolicy { prefill_chunk: 4, ..SloPolicy::default() };
+    let run = || {
+        let trace = Trace::poisson_with_classes(
+            workload::mtbench(2, 19), 24, 1.0, 19, 0.5, 64, 512);
+        let mut backend = MockCluster::new(2, 2, 4, 160, 19)
+            .with_policy(policy)
+            .with_beta(BetaPolicy::Adaptive);
+        SchedulerSim::new(SimOptions { cancel_prob: 0.3, seed: 19,
+                                       ..Default::default() })
+            .run(&mut backend, &trace)
+            .expect("cluster sim")
+    };
+    let a = run();
+    let b = run();
+    assert!(!a.event_log.is_empty());
+    assert!(a.event_log.contains(" place id="),
+            "cluster log must record placement decisions");
+    assert!(a.event_log.contains("-- worker 1 --"),
+            "cluster log must render every worker's section");
+    assert_eq!(a.event_log, b.event_log,
+               "cluster schedule not reproducible from seed");
+    assert_eq!(a.per_request_steps, b.per_request_steps);
+    assert_eq!(a.beta_hist, b.beta_hist);
+    assert_eq!(a.evictions, b.evictions);
+    assert_eq!(a.busy_rejections, b.busy_rejections);
+}
+
+/// Deadline-aware admission hints: `Queued` carries a future estimated
+/// start step that deepens with queue position, `Busy` carries a retry
+/// hint — both deterministic.
+#[test]
+fn queued_and_busy_carry_deadline_aware_hints() {
+    let mut m = MockSched::new(1, 2, 100_000, 5);
+    let admit = m.submit_tagged(&"a".repeat(40), 8, Priority::Interactive,
+                                None).expect("submit");
+    assert!(matches!(admit, Submission::Admitted(_)));
+    let q1 = match m.submit_tagged(&"b".repeat(40), 8, Priority::Interactive,
+                                   None).expect("submit") {
+        Submission::Queued { pos, est_start_step, .. } => {
+            assert_eq!(pos, 0);
+            assert!(est_start_step > 0, "estimate must be in the future");
+            est_start_step
+        }
+        other => panic!("expected queued, got {other:?}"),
+    };
+    let q2 = match m.submit_tagged(&"c".repeat(40), 8, Priority::Interactive,
+                                   None).expect("submit") {
+        Submission::Queued { pos, est_start_step, .. } => {
+            assert_eq!(pos, 1);
+            est_start_step
+        }
+        other => panic!("expected queued, got {other:?}"),
+    };
+    assert!(q2 >= q1, "deeper queue position must not start earlier");
+    match m.submit_tagged(&"d".repeat(40), 8, Priority::Interactive, None)
+        .expect("submit")
+    {
+        Submission::Busy { retry_after_steps } => {
+            assert!(retry_after_steps >= 1, "busy must carry a retry hint");
+        }
+        other => panic!("expected busy, got {other:?}"),
+    }
 }
 
 #[test]

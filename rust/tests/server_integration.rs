@@ -132,7 +132,11 @@ fn stream_frames_arrive_in_order_and_sum_to_done() {
         assert!(!line.is_empty(), "connection closed before terminal frame");
         let v = parse(line.trim()).expect("frame json");
         match v.get("type").as_str() {
-            Some("queued") => {}
+            Some("queued") => {
+                // deadline-aware queued response: estimated start step
+                assert!(v.get("est_start").as_usize().is_some(),
+                        "queued frame missing est_start: {line}");
+            }
             Some("tok") => {
                 assert_eq!(v.get("id").as_i64(), Some(5));
                 tok_frames += 1;
@@ -303,11 +307,19 @@ fn full_queue_rejects_busy_and_recovers() {
         .filter(|o| matches!(o, GenerateOutcome::Done(_)))
         .count();
     let busy = outcomes.iter()
-        .filter(|o| matches!(o, GenerateOutcome::Busy))
+        .filter(|o| matches!(o, GenerateOutcome::Busy { .. }))
         .count();
     assert_eq!(done + busy, 6, "unexpected terminal outcome: {outcomes:?}");
     assert!(done >= 1, "nothing completed under backpressure");
     assert!(busy >= 1, "queue cap never produced busy");
+    // queue-full rejections carry the deadline-aware retry hint (drain-time
+    // rejections are the only hintless busy frames, and we are not draining)
+    for o in &outcomes {
+        if let GenerateOutcome::Busy { retry_after_steps } = o {
+            assert!(retry_after_steps.unwrap_or(0) >= 1,
+                    "busy frame missing retry_after_steps hint: {o:?}");
+        }
+    }
 
     // after the burst drains, the scheduler accepts work again
     let mut c = Client::connect(&addr).expect("connect");
@@ -317,6 +329,129 @@ fn full_queue_rejects_busy_and_recovers() {
     assert_eq!(w.get("active").as_usize(), Some(0));
     assert!(w.get("rejected_busy").as_usize().unwrap_or(0) >= 1);
     server.stop();
+}
+
+/// Tentpole routing property, end to end: with worker 0 holding the only
+/// shard headroom and worker 1 idle but broke (the shared pool's global
+/// list drained), an interactive request must route to worker 0 even while
+/// worker 0 already has a request in flight — pool headroom beats raw
+/// inflight. Also exercises the drain path: after `stop()`, every worker's
+/// lease must be back in the shared pool's global free list.
+#[test]
+fn interactive_routes_to_headroom_not_lowest_inflight() {
+    let Some(server) = start_server_with(2, EngineConfig {
+        model: "vic-tiny".into(),
+        method: Method::Ctc,
+        kv_pool_positions: 2048, // 128 blocks cluster-wide
+        ..EngineConfig::default()
+    }) else { return };
+    let addr = server.local_addr.to_string();
+    let pool = server.pool();
+    let total = pool.total_blocks();
+    assert_eq!(total, 128);
+    // drain the global free list into a test-held reservation, then park a
+    // healthy reserve in worker 0's shard: worker 1 now has ZERO headroom
+    let held = pool.global_free_blocks();
+    assert!(held >= 33, "global list unexpectedly drained at startup");
+    assert!(pool.try_take(1, held), "test reservation failed");
+    pool.give_back(0, 32);
+    let parked = pool.shard_free(0);
+    assert!(parked > 0, "no blocks parked in worker 0's shard");
+    assert_eq!(pool.headroom(1), 0);
+
+    // request A occupies worker 0 (the only worker with headroom) and
+    // keeps streaming while we place the probe request
+    let gen_addr = addr.clone();
+    let a_thread = std::thread::spawn(move || {
+        let mut c = Client::connect(&gen_addr).expect("connect");
+        c.generate_stream(71, "Write a short paragraph about the ocean.", 48,
+                          true, |_| {})
+            .expect("stream A")
+    });
+    let mut probe = Client::connect(&addr).expect("connect");
+    let mut a_running = false;
+    for _ in 0..600 {
+        let v = probe.stats_detail().expect("stats");
+        if v.get("workers").idx(0).get("active").as_usize().unwrap_or(0) >= 1 {
+            a_running = true;
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    assert!(a_running, "request A never became active on worker 0");
+
+    // probe request B: worker 1 has lower inflight (0 vs 1) but no
+    // headroom — the router must still pick worker 0
+    let reply = probe.generate(72, "What is 2 + 2?", 16).expect("generate B");
+    assert!(reply.tokens > 0);
+    let v = probe.stats_detail().expect("stats");
+    let placements: Vec<usize> = v
+        .get("placements")
+        .as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+        .unwrap_or_default();
+    assert_eq!(placements, vec![2, 0],
+               "placement must follow pool headroom, not lowest inflight");
+    // per-shard pool gauges are visible through the stats op
+    let shards = v.get("pool").get("shards").as_arr()
+        .expect("stats missing pool.shards");
+    assert_eq!(shards.len(), 2);
+    assert!(v.get("pool").get("total_blocks").as_usize() == Some(total));
+    let w0 = v.get("workers").idx(0).clone();
+    assert!(w0.get("headroom_blocks").as_usize().is_some(),
+            "worker stats missing lease fields: {w0:?}");
+
+    let outcome = a_thread.join().expect("A thread");
+    assert!(matches!(outcome, GenerateOutcome::Done(_)),
+            "request A did not finish: {outcome:?}");
+    // return the test-held reservation, then stop: dropped worker leases
+    // must drain their shards back to the global free list
+    pool.give_back(1, held - 32);
+    server.stop();
+    assert_eq!(pool.cluster_free_blocks(), total,
+               "stopped server leaked pool blocks");
+    assert_eq!(pool.global_free_blocks(), total,
+               "worker leases not drained back to the shared pool");
+}
+
+/// Two workers over ONE shared pool still serve correctly and the shared
+/// pool balances: total pool accounting stays exact through concurrent
+/// load on both workers.
+#[test]
+fn two_workers_share_one_block_pool() {
+    let Some(server) = start_server_with(2, EngineConfig {
+        model: "vic-tiny".into(),
+        method: Method::Ctc,
+        ..EngineConfig::default()
+    }) else { return };
+    let addr = server.local_addr.to_string();
+    let pool = server.pool();
+    let total = pool.total_blocks();
+    let mut handles = Vec::new();
+    for i in 0..4 {
+        let addr = addr.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).expect("connect");
+            c.generate(i, "What is 9 + 9?", 16).expect("generate")
+        }));
+    }
+    for h in handles {
+        assert!(h.join().expect("client").tokens > 0);
+    }
+    let mut client = Client::connect(&addr).expect("connect");
+    let v = client.stats_detail().expect("stats");
+    let placed: usize = v
+        .get("placements")
+        .as_arr()
+        .map(|a| a.iter().filter_map(|x| x.as_usize()).sum())
+        .unwrap_or(0);
+    assert_eq!(placed, 4, "router lost track of placements");
+    // drained: every block free again (parked in shards or global)
+    assert_eq!(pool.cluster_free_blocks(), total,
+               "requests leaked shared-pool blocks: {v:?}");
+    server.stop();
+    assert_eq!(pool.global_free_blocks(), total,
+               "stop() must drain worker leases to the global list");
 }
 
 #[test]
