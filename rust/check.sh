@@ -15,21 +15,25 @@ cargo build --release
 # hot-path gate (rust/tests/hotpath_alloc.rs).
 CTCD_PROP_FAST=1 cargo test -q
 
-# Determinism audit: two replays of the same seeded class-tagged trace must
-# produce byte-identical scheduler event logs — under BOTH β policies
-# (fixed and batch-adaptive), and for BOTH the single-worker mock and the
-# two-workers-over-one-shared-pool cluster (placement + lease stealing on
-# the replay path). Any diff fails the gate.
+# Determinism audit: two replays of the same seeded trace must produce
+# byte-identical scheduler event logs — under BOTH β policies (fixed and
+# batch-adaptive), for BOTH the single-worker mock and the two-workers-
+# over-one-shared-pool cluster (placement + lease stealing on the replay
+# path), and for BOTH workload shapes (poisson MT-bench arrivals and the
+# prefix-chained multiturn conversations that exercise the prefix-sharing
+# cache). Any diff fails the gate.
 for seed in 7 41; do
   for beta in fixed adaptive; do
     for workers in 1 2; do
-      a="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta" --workers "$workers")"
-      b="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta" --workers "$workers")"
-      if [ "$a" != "$b" ]; then
-        echo "FAIL: SchedulerSim replay (seed $seed, beta $beta, workers $workers) is nondeterministic" >&2
-        diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
-        exit 1
-      fi
+      for trace in poisson multiturn; do
+        a="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta" --workers "$workers" --trace "$trace")"
+        b="$(./target/release/ctcdraft sim --seed "$seed" --beta-policy "$beta" --workers "$workers" --trace "$trace")"
+        if [ "$a" != "$b" ]; then
+          echo "FAIL: SchedulerSim replay (seed $seed, beta $beta, workers $workers, trace $trace) is nondeterministic" >&2
+          diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
+          exit 1
+        fi
+      done
     done
   done
 done
@@ -38,7 +42,31 @@ if ! ./target/release/ctcdraft sim --seed 7 --workers 2 | grep -q " place id="; 
   echo "FAIL: cluster sim log records no placement decisions" >&2
   exit 1
 fi
-echo "scheduler-sim replay determinism (fixed + adaptive beta, 1 + 2 workers): OK"
+echo "scheduler-sim replay determinism (fixed + adaptive beta, 1 + 2 workers, poisson + multiturn): OK"
+
+# Prefix-reuse gate: on the multiturn trace (every turn's prompt extends
+# the previous one) the warm prefix-sharing run must record cache hits and
+# saved prefill blocks, and must spend STRICTLY fewer prefill rounds than
+# the cold baseline (--no-prefix-share) on the identical trace.
+field() { printf '%s\n' "$1" | tr ' ' '\n' | sed -n "s/^$2=//p" | head -n1; }
+warm="$(./target/release/ctcdraft sim --seed 7 --trace multiturn --summary 2>&1 >/dev/null)"
+cold="$(./target/release/ctcdraft sim --seed 7 --trace multiturn --no-prefix-share --summary 2>&1 >/dev/null)"
+warm_hits="$(field "$warm" prefix_hits)"
+warm_saved="$(field "$warm" prefix_saved)"
+warm_prefill="$(field "$warm" prefill_steps)"
+cold_prefill="$(field "$cold" prefill_steps)"
+if [ -z "$warm_hits" ] || [ "$warm_hits" -eq 0 ] || [ -z "$warm_saved" ] || [ "$warm_saved" -eq 0 ]; then
+  echo "FAIL: multiturn warm run recorded no prefix reuse (hits=$warm_hits saved=$warm_saved)" >&2
+  echo "warm summary: $warm" >&2
+  exit 1
+fi
+if [ -z "$warm_prefill" ] || [ -z "$cold_prefill" ] || [ "$warm_prefill" -ge "$cold_prefill" ]; then
+  echo "FAIL: prefix sharing did not cut prefill work (warm $warm_prefill vs cold $cold_prefill prefill steps)" >&2
+  echo "warm summary: $warm" >&2
+  echo "cold summary: $cold" >&2
+  exit 1
+fi
+echo "prefix-reuse gate: OK (hits=$warm_hits saved=$warm_saved blocks, prefill $warm_prefill < $cold_prefill cold)"
 
 # Bench smoke: the micro hot-path bench must run in --smoke mode and leave
 # a well-formed machine-readable BENCH_micro_hotpath.json behind (the

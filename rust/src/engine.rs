@@ -22,6 +22,21 @@
 //! refill AND lease stealing both come up empty, never because its private
 //! slice ran out while a neighbor idled on free blocks.
 //!
+//! Prefix sharing (PR 6): the engine also owns a `kvcache::PrefixIndex` — a
+//! hash-consed radix cache of published prompt KV. Admission looks up the
+//! longest cached prefix, seeds those rows into the fresh `SeqCache`, and
+//! starts chunked prefill a drafter-window back from the first novel
+//! position; the matched blocks stay index-owned (`PoolLease::set_shared`),
+//! so a hot shared prefix costs the pool one copy no matter how many
+//! sequences read it. When a prompt finishes prefilling, its full blocks
+//! are interned back (publish), and under pool pressure unreferenced index
+//! nodes are evicted before any live sequence is preempted. Re-running the
+//! last `win` cached positions rewrites bit-identical KV rows into the
+//! sequence's own cache and leaves the drafter's hidden window exactly as
+//! a cold prefill would — a warm admission is observably equivalent to a
+//! cold one (same tokens, same RNG schedule, same acceptance), it just
+//! skips the prefill compute and pool blocks before the window.
+//!
 //! Hot-path memory discipline (PR 3): every per-round buffer the loop needs
 //! lives in the engine-owned `HotScratch` — per-slot candidate `PathSet`
 //! arenas the drafter fills, per-slot reusable `TokenTree`s, the batch
@@ -44,6 +59,7 @@
 //! (`--beta-policy fixed|adaptive`): large batches shrink trees (verify
 //! FLOPs are batch × nodes), lonely sequences grow them.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
@@ -52,7 +68,7 @@ use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
 use crate::config::{EngineConfig, Method};
 use crate::drafters::{make_drafter, DraftCtx, DraftSource, DraftTiming,
                       Drafter, PathSet};
-use crate::kvcache::{PoolLease, SeqCache};
+use crate::kvcache::{PoolLease, PrefixIndex, SeqCache, NO_NODE};
 use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
                      StageBreakdown};
 use crate::sched::{AdmitRate, Priority, ReqMeta};
@@ -227,6 +243,9 @@ struct Seq {
     /// Some(..) while the prompt is still prefilling (chunk-interleaved
     /// with decode rounds); None once the sequence is decoding
     prefill: Option<PrefillState>,
+    /// deepest prefix-index node this sequence holds a ref on (`NO_NODE`
+    /// when nothing is pinned) — released at every slot-teardown path
+    prefix_ref: usize,
     stats: GenStats,
     t_admit: Instant,
     done: bool,
@@ -354,6 +373,11 @@ pub struct Engine {
     /// pressure is cluster-level — `ensure` fails only when every shard and
     /// the global free list are empty (see `Engine::new_leased`).
     pool: PoolLease,
+    /// radix prompt index (PR 6): hash-consed KV of published prompt
+    /// prefixes. Admission maps its longest cached prefix here instead of
+    /// re-prefilling it; the server reads the handle for cache-affinity
+    /// routing and `pool.prefix.*` stats.
+    index: Arc<Mutex<PrefixIndex>>,
     /// admit queue feeding free slots at the top of every step; order is
     /// decided by the SLO policy (class, then slack), not insertion order
     wait_queue: Vec<QueuedReq>,
@@ -457,9 +481,15 @@ impl Engine {
             ns.sort_unstable();
             ns.dedup();
         }
+        let index = Arc::new(Mutex::new(PrefixIndex::new(
+            crate::kvcache::BLOCK_POSITIONS,
+            mcfg.layers,
+            mcfg.n_heads * c.head_dim,
+        )));
         Ok(Engine {
             slots: (0..max_slots).map(|_| None).collect(),
             pool: lease,
+            index,
             wait_queue: Vec::new(),
             step_no: 0,
             events: EventLog::default(),
@@ -663,6 +693,13 @@ impl Engine {
         &self.pool
     }
 
+    /// Shared handle on this worker's radix prompt index — the server
+    /// consults it for cache-affinity routing (`sched::place` prefix
+    /// inputs), the `stats` op, and the shutdown drain.
+    pub fn prefix_index(&self) -> Arc<Mutex<PrefixIndex>> {
+        Arc::clone(&self.index)
+    }
+
     pub fn scheduler_step(&self) -> u64 {
         self.step_no
     }
@@ -757,13 +794,22 @@ impl Engine {
             s.as_ref().map(|q| q.id == id).unwrap_or(false)
         });
         if let Some(slot) = slot {
-            self.slots[slot] = None;
+            let seq = self.slots[slot].take().expect("cancel slot");
+            self.release_prefix(seq.prefix_ref);
             self.pool.release(slot);
             self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
             self.metrics.inc("sched.cancelled", 1);
             return true;
         }
         false
+    }
+
+    /// Drop a sequence's ref on its interned prefix chain — called at every
+    /// slot-teardown path (cancel / evict / reap). No-op for `NO_NODE`.
+    fn release_prefix(&mut self, node: usize) {
+        if node != NO_NODE {
+            self.index.lock().unwrap().release(node);
+        }
     }
 
     /// Tokenize and occupy a batch slot NOW (prefill runs chunked inside
@@ -827,7 +873,15 @@ impl Engine {
             ids.drain(..ids.len() - budget);
         }
         let prefill_len = ids.len();
+        // longest cached prefix (PR 6): the matched full blocks stay
+        // index-owned and are excluded from this slot's pool demand
+        // (`set_shared`); their KV rows are seeded into the fresh cache
+        // below so prefill resumes a drafter-window back from the first
+        // novel position instead of at token zero.
+        let hit = self.index.lock().unwrap().lookup(&ids);
+        self.pool.set_shared(slot, hit.blocks);
         if self.pool.ensure(slot, prefill_len).is_err() {
+            self.pool.set_shared(slot, 0);
             // a single-owner pool can only get here through the unguarded
             // legacy `admit` path (genuine exhaustion); on a shared pool
             // this is a lost cross-worker race for the blocks — count it,
@@ -839,6 +893,37 @@ impl Engine {
             return Ok(None);
         }
         let id = req.id;
+        let mut cache =
+            SeqCache::new(self.layers, self.lmax, self.heads, self.head_dim);
+        {
+            let mut idx = self.index.lock().unwrap();
+            idx.record_admit(&hit);
+            // the seq ref on the deepest matched node pins its whole chain
+            // (hash-cons child refs) against eviction while we read it
+            idx.acquire(hit.node);
+            if hit.positions > 0 {
+                idx.seed_cache(&hit, &mut cache);
+            }
+        }
+        // Warm-start: rewind the seeded cache by the drafter's hidden
+        // window and re-run prefill over those positions. The recomputed
+        // KV rows are bit-identical (same tokens, same preceding KV), so
+        // a warm admission is observably EQUIVALENT to a cold one — same
+        // tokens, same hidden window, same RNG schedule, same acceptance —
+        // while still skipping everything before the window and never
+        // re-allocating the shared blocks.
+        let start = hit.positions.saturating_sub(self.win);
+        if start < hit.positions {
+            cache.truncate(start);
+        }
+        if hit.positions > 0 {
+            self.events.push(SchedEvent::Prefix {
+                step: self.step_no,
+                id,
+                blocks: hit.blocks,
+                fork: hit.fork_positions,
+            });
+        }
         let rng = match req.rng {
             Some(r) => r,
             None => self.rng.fork(id),
@@ -851,12 +936,13 @@ impl Engine {
             class: req.class,
             deadline_step: req.deadline_step,
             submit_step: req.submit_step,
-            cache: SeqCache::new(self.layers, self.lmax, self.heads, self.head_dim),
+            cache,
             hidden_win: vec![0.0; self.win * self.d_model],
             win_len: 0,
             last_hidden: vec![0.0; self.d_model],
             base_token: 0,
-            prefill: Some(PrefillState { ids, done: 0 }),
+            prefill: Some(PrefillState { ids, done: start }),
+            prefix_ref: hit.node,
             stats: req.stats,
             t_admit: Instant::now(),
             done: false,
@@ -911,6 +997,17 @@ impl Engine {
                     }
                     rep.forced.push(out);
                     continue 'outer;
+                }
+                if !self.pool.can_fit(prefill_len) {
+                    // pool-short: reclaim unreferenced interned prefixes
+                    // first — dropping cached KV is strictly cheaper than
+                    // preempting (or skipping) a sequence
+                    let want = self.pool.blocks_for(prefill_len);
+                    let freed =
+                        self.index.lock().unwrap().evict_unreferenced(want);
+                    if freed > 0 {
+                        self.pool.shared().give_back(self.pool.worker(), freed);
+                    }
                 }
                 if self.pool.can_fit(prefill_len) {
                     let req = self.wait_queue.remove(i);
@@ -1039,6 +1136,7 @@ impl Engine {
     /// from scratch on re-admission.
     fn evict(&mut self, slot: usize) -> u64 {
         let mut seq = self.slots[slot].take().expect("evict empty slot");
+        self.release_prefix(seq.prefix_ref);
         self.pool.release(slot);
         seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
         let id = seq.id;
@@ -1178,7 +1276,28 @@ impl Engine {
                 seq.base_token = pick_token_with(&mut self.scratch.weights,
                                                  self.cfg.temperature, row,
                                                  &mut seq.rng);
-                seq.prefill = None;
+                let st = seq.prefill.take().expect("state");
+                // publish (PR 6): intern every full block of the finished
+                // prompt. Hash-consing shares nodes with previously
+                // published prompts; each newly created node takes
+                // ownership of one pool block, and lease blocks whose
+                // content duplicated already-cached nodes go back to the
+                // pool — prefix sharing multiplying effective capacity.
+                let bp = self.pool.shared().block_positions();
+                let full = st.ids.len() / bp;
+                if full > 0 {
+                    let (deepest, created) = {
+                        let mut idx = self.index.lock().unwrap();
+                        let r = idx.intern_from_cache(&st.ids, Some(&seq.cache));
+                        // swap the seq ref from the admission-time node to
+                        // the full published chain
+                        idx.release(seq.prefix_ref);
+                        idx.acquire(r.0);
+                        r
+                    };
+                    self.pool.share_published(slot, full, created);
+                    seq.prefix_ref = deepest;
+                }
             }
         }
         let id = seq.id;
@@ -1535,6 +1654,7 @@ impl Engine {
             let done = self.slots[b].as_ref().map(|s| s.done).unwrap_or(false);
             if done {
                 let mut seq = self.slots[b].take().unwrap();
+                self.release_prefix(seq.prefix_ref);
                 self.pool.release(b);
                 seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
                 if self.note_deadline(seq.id, seq.class, seq.deadline_step) {
@@ -1561,6 +1681,15 @@ impl Engine {
                 }
                 if self.pool.ensure(slot, need_len).is_ok() {
                     break;
+                }
+                // reclaim unreferenced interned prefixes before preempting
+                // a live sequence (see fill_slots)
+                let want = self.pool.blocks_for(need_len);
+                let freed =
+                    self.index.lock().unwrap().evict_unreferenced(want);
+                if freed > 0 {
+                    self.pool.shared().give_back(self.pool.worker(), freed);
+                    continue;
                 }
                 let now = self.step_no;
                 let running: Vec<(usize, ReqMeta)> = self
@@ -1630,6 +1759,18 @@ impl Engine {
         self.metrics.set_gauge("pool.lease_refills", shared.refills() as f64);
         self.metrics
             .set_gauge("pool.exhaustions", shared.exhaustions() as f64);
+        // prefix-sharing visibility (radix prompt index, PR 6)
+        let (p_hits, p_misses, p_saved, p_forks, p_owned) = {
+            let idx = self.index.lock().unwrap();
+            (idx.hits(), idx.misses(), idx.blocks_saved(), idx.forks(),
+             idx.owned_blocks())
+        };
+        self.metrics.set_gauge("pool.prefix.hits", p_hits as f64);
+        self.metrics.set_gauge("pool.prefix.misses", p_misses as f64);
+        self.metrics.set_gauge("pool.prefix.blocks_saved", p_saved as f64);
+        self.metrics.set_gauge("pool.prefix.forks", p_forks as f64);
+        self.metrics
+            .set_gauge("pool.prefix.owned_blocks", p_owned as f64);
         self.metrics
             .set_gauge("sched.admit_gap_steps",
                        self.admit_rate.steps_per_admission());

@@ -21,6 +21,18 @@
 //! a cluster-level condition: `ensure` fails (and the scheduler preempts)
 //! only when the whole cluster is out of blocks, not when one worker's
 //! private slice happens to be.
+//!
+//! `PrefixIndex` (PR 6 tentpole) layers prefix sharing on top: a
+//! hash-consed radix trie over block-granular token runs, with refcounted
+//! nodes that own their pool blocks. A new request maps its longest cached
+//! prefix (skipping that much prefill) and only pays pool blocks for the
+//! novel suffix — `PoolLease` tracks a per-slot `shared` base so `ensure`
+//! demand excludes index-owned blocks. A sequence that diverges *mid-block*
+//! copies the matched head of the cached block into its own freshly
+//! allocated block (copy-on-write fork): the cached node is never mutated,
+//! so no live sequence can observe another sequence's divergence.
+//! Unreferenced nodes are evicted deterministically under pool pressure
+//! and their blocks returned to the pool.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -415,6 +427,501 @@ impl SharedBlockPool {
     }
 }
 
+// ------------------------------------------------------------ prefix index
+
+/// Sentinel node id: "no node".
+pub const NO_NODE: usize = usize::MAX;
+
+/// Result of a longest-cached-prefix lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixHit {
+    /// Deepest fully-matched node (`NO_NODE` on a whole-prompt miss).
+    pub node: usize,
+    /// Fully-matched blocks (the depth of `node`).
+    pub blocks: usize,
+    /// Total matched positions (`blocks * block_positions + fork_positions`).
+    pub positions: usize,
+    /// Cached node sharing a strict prefix of the next block (`NO_NODE` if
+    /// the prompt diverges exactly on a block boundary).
+    pub fork_node: usize,
+    /// Positions matched inside `fork_node` before the divergence — the
+    /// copy-on-write fork head.
+    pub fork_positions: usize,
+}
+
+impl PrefixHit {
+    pub const MISS: PrefixHit = PrefixHit {
+        node: NO_NODE,
+        blocks: 0,
+        positions: 0,
+        fork_node: NO_NODE,
+        fork_positions: 0,
+    };
+}
+
+#[derive(Debug)]
+struct PrefixNode {
+    parent: usize,
+    /// depth in blocks (>= 1); node covers positions
+    /// `[(depth-1)*bp, depth*bp)` of any prompt routed through it
+    depth: usize,
+    tokens: Vec<i32>,
+    /// cached KV rows `[L, bp, H*Dh]`; empty for counting-only indices
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// sequence refs + child refs (hash-cons structural refcount: every
+    /// child holds one ref on its parent, so a referenced leaf pins its
+    /// whole chain)
+    refs: usize,
+    hash: u64,
+    /// hash-bucket chain
+    next: usize,
+    first_child: usize,
+    next_sibling: usize,
+    live: bool,
+}
+
+/// Hash-consed radix index over block-granular token runs.
+///
+/// Interning is keyed on `(parent, block tokens)` — structurally equal
+/// prefixes share one node chain, and each live node owns exactly one pool
+/// block of accounting (`owned_blocks`). Lookup, acquire, release and
+/// cache seeding are allocation-free (the prefix-hit admission path is
+/// zero-alloc-gated); interning a new node allocates by design (miss/cold
+/// path). All traversals (bucket chains, sibling scans, eviction sweeps)
+/// follow explicit index-ordered links — no hash-map iteration — so
+/// replays are deterministic.
+#[derive(Debug)]
+pub struct PrefixIndex {
+    block_positions: usize,
+    layers: usize,
+    /// `heads * head_dim`; 0 = counting-only (scheduler mock: no payload)
+    row_elems: usize,
+    nodes: Vec<PrefixNode>,
+    free_nodes: Vec<usize>,
+    /// power-of-two bucket heads, `NO_NODE`-terminated chains
+    buckets: Vec<usize>,
+    /// head of the depth-1 sibling chain
+    root_child: usize,
+    live_nodes: usize,
+    owned_blocks: usize,
+    hits: u64,
+    misses: u64,
+    blocks_saved: u64,
+    forks: u64,
+    evicted_blocks: u64,
+}
+
+impl PrefixIndex {
+    pub fn new(block_positions: usize, layers: usize, row_elems: usize) -> Self {
+        PrefixIndex {
+            block_positions: block_positions.max(1),
+            layers,
+            row_elems,
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            buckets: vec![NO_NODE; 64],
+            root_child: NO_NODE,
+            live_nodes: 0,
+            owned_blocks: 0,
+            hits: 0,
+            misses: 0,
+            blocks_saved: 0,
+            forks: 0,
+            evicted_blocks: 0,
+        }
+    }
+
+    /// Counting-only index (no KV payload) — the scheduler mock's form, so
+    /// MockSched/MockCluster replay the identical sharing decisions.
+    pub fn counting(block_positions: usize) -> Self {
+        Self::new(block_positions, 0, 0)
+    }
+
+    pub fn block_positions(&self) -> usize {
+        self.block_positions
+    }
+
+    fn block_hash(parent: usize, toks: &[i32]) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64
+            ^ (parent as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        for &t in toks {
+            h = (h ^ (t as u32 as u64)).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+
+    fn find(&self, parent: usize, toks: &[i32]) -> usize {
+        let mut cur =
+            self.buckets[(Self::block_hash(parent, toks) as usize)
+                & (self.buckets.len() - 1)];
+        while cur != NO_NODE {
+            let n = &self.nodes[cur];
+            if n.parent == parent && n.tokens.as_slice() == toks {
+                return cur;
+            }
+            cur = n.next;
+        }
+        NO_NODE
+    }
+
+    /// Longest cached prefix of `tokens`, capped at `tokens.len() - 1`
+    /// positions so at least one prompt position is always left to prefill
+    /// (the engine needs a real forward pass to sample the first token).
+    /// Full blocks walk the trie; the next block is then scanned for a
+    /// mid-block divergence candidate (`fork_node`/`fork_positions`).
+    /// Read-only and allocation-free; counters move in `record_admit`.
+    pub fn lookup(&self, tokens: &[i32]) -> PrefixHit {
+        let bp = self.block_positions;
+        let cap = tokens.len().saturating_sub(1);
+        let mut hit = PrefixHit::MISS;
+        let mut parent = NO_NODE;
+        while (hit.blocks + 1) * bp <= cap {
+            let beg = hit.blocks * bp;
+            let node = self.find(parent, &tokens[beg..beg + bp]);
+            if node == NO_NODE {
+                break;
+            }
+            hit.node = node;
+            hit.blocks += 1;
+            hit.positions += bp;
+            parent = node;
+        }
+        // mid-block divergence: the longest strict-prefix overlap between
+        // the next block and any cached child (first maximum wins — the
+        // sibling chain order is deterministic)
+        let beg = hit.blocks * bp;
+        let lim = (cap - beg).min(bp);
+        let mut child = if parent == NO_NODE {
+            self.root_child
+        } else {
+            self.nodes[parent].first_child
+        };
+        while child != NO_NODE {
+            let n = &self.nodes[child];
+            let mut j = 0;
+            while j < lim && n.tokens[j] == tokens[beg + j] {
+                j += 1;
+            }
+            if j > hit.fork_positions {
+                hit.fork_node = child;
+                hit.fork_positions = j;
+            }
+            child = n.next_sibling;
+        }
+        hit.positions += hit.fork_positions;
+        hit
+    }
+
+    /// Update the hit/miss/saved/fork counters for an admission that used
+    /// `hit` (separate from `lookup` so routing probes don't skew stats).
+    pub fn record_admit(&mut self, hit: &PrefixHit) {
+        if hit.positions > 0 {
+            self.hits += 1;
+        } else {
+            self.misses += 1;
+        }
+        self.blocks_saved += hit.blocks as u64;
+        if hit.fork_positions > 0 {
+            self.forks += 1;
+        }
+    }
+
+    /// Take a sequence reference on `node`; its ancestors are pinned
+    /// transitively through the child refs. No-op on `NO_NODE`.
+    pub fn acquire(&mut self, node: usize) {
+        if node != NO_NODE {
+            debug_assert!(self.nodes[node].live);
+            self.nodes[node].refs += 1;
+        }
+    }
+
+    /// Drop a sequence reference taken by `acquire`. No-op on `NO_NODE`.
+    pub fn release(&mut self, node: usize) {
+        if node != NO_NODE {
+            debug_assert!(self.nodes[node].live && self.nodes[node].refs > 0);
+            self.nodes[node].refs -= 1;
+        }
+    }
+
+    /// Copy the matched prefix KV into `cache` positions
+    /// `[0, hit.positions)` and set `cache.len` — the admission-time
+    /// prefill skip. The fork block's matched head is copied too
+    /// (copy-on-write: the cached node keeps its rows untouched; the
+    /// diverging sequence writes into its own block). Allocation-free.
+    pub fn seed_cache(&self, hit: &PrefixHit, cache: &mut SeqCache) {
+        assert!(self.row_elems > 0, "counting-only index has no KV to seed");
+        if hit.positions == 0 {
+            return;
+        }
+        let bp = self.block_positions;
+        let re = self.row_elems;
+        debug_assert_eq!(re, cache.row_elems());
+        debug_assert_eq!(cache.len, 0, "seed expects a fresh cache");
+        assert!(hit.positions <= cache.lmax);
+        let mut node = hit.node;
+        while node != NO_NODE {
+            let n = &self.nodes[node];
+            let beg = (n.depth - 1) * bp;
+            let cnt = bp * re;
+            for l in 0..self.layers {
+                let dst = cache.row(l, beg);
+                let src = l * cnt;
+                cache.k[dst..dst + cnt].copy_from_slice(&n.k[src..src + cnt]);
+                cache.v[dst..dst + cnt].copy_from_slice(&n.v[src..src + cnt]);
+            }
+            node = n.parent;
+        }
+        if hit.fork_positions > 0 {
+            let n = &self.nodes[hit.fork_node];
+            let beg = hit.blocks * bp;
+            let cnt = hit.fork_positions * re;
+            for l in 0..self.layers {
+                let dst = cache.row(l, beg);
+                let src = l * bp * re;
+                cache.k[dst..dst + cnt].copy_from_slice(&n.k[src..src + cnt]);
+                cache.v[dst..dst + cnt].copy_from_slice(&n.v[src..src + cnt]);
+            }
+        }
+        cache.len = hit.positions;
+    }
+
+    /// Intern every full block of `tokens` (hash-consing: existing nodes
+    /// are shared, missing ones created), copying KV rows for new nodes out
+    /// of `cache` (ignored / may be `None` for counting-only indices).
+    /// Returns `(deepest node, newly created nodes)`; each new node takes
+    /// ownership of one pool block — pair with `PoolLease::share_published`
+    /// to move that accounting out of the sequence's ledger. Allocates on
+    /// the miss path by design (publish is a cold path).
+    pub fn intern_from_cache(&mut self, tokens: &[i32],
+                             cache: Option<&SeqCache>) -> (usize, usize) {
+        let bp = self.block_positions;
+        let full = tokens.len() / bp;
+        let mut parent = NO_NODE;
+        let mut created = 0usize;
+        for d in 0..full {
+            let beg = d * bp;
+            let toks = &tokens[beg..beg + bp];
+            let mut node = self.find(parent, toks);
+            if node == NO_NODE {
+                node = self.insert(parent, toks, d + 1, cache, beg);
+                created += 1;
+            }
+            parent = node;
+        }
+        (parent, created)
+    }
+
+    fn insert(&mut self, parent: usize, toks: &[i32], depth: usize,
+              cache: Option<&SeqCache>, beg: usize) -> usize {
+        let hash = Self::block_hash(parent, toks);
+        let bp = self.block_positions;
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        if self.row_elems > 0 {
+            let re = self.row_elems;
+            let c = cache.expect("KV-carrying index needs a source cache");
+            debug_assert_eq!(re, c.row_elems());
+            assert!(beg + bp <= c.len, "interning rows beyond cache.len");
+            k = vec![0.0; self.layers * bp * re];
+            v = vec![0.0; self.layers * bp * re];
+            let cnt = bp * re;
+            for l in 0..self.layers {
+                let src = c.row(l, beg);
+                let dst = l * cnt;
+                k[dst..dst + cnt].copy_from_slice(&c.k[src..src + cnt]);
+                v[dst..dst + cnt].copy_from_slice(&c.v[src..src + cnt]);
+            }
+        }
+        let sibling = if parent == NO_NODE {
+            self.root_child
+        } else {
+            self.nodes[parent].first_child
+        };
+        let node = PrefixNode {
+            parent,
+            depth,
+            tokens: toks.to_vec(),
+            k,
+            v,
+            refs: 0,
+            hash,
+            next: NO_NODE,
+            first_child: NO_NODE,
+            next_sibling: sibling,
+            live: true,
+        };
+        let id = match self.free_nodes.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        };
+        if parent == NO_NODE {
+            self.root_child = id;
+        } else {
+            self.nodes[parent].first_child = id;
+            // hash-cons structural refcount: the child pins its parent
+            self.nodes[parent].refs += 1;
+        }
+        self.live_nodes += 1;
+        self.owned_blocks += 1;
+        if self.live_nodes * 2 > self.buckets.len() {
+            self.grow_buckets();
+        }
+        let b = (hash as usize) & (self.buckets.len() - 1);
+        self.nodes[id].next = self.buckets[b];
+        self.buckets[b] = id;
+        id
+    }
+
+    fn grow_buckets(&mut self) {
+        let size = self.buckets.len() * 2;
+        self.buckets = vec![NO_NODE; size];
+        for id in 0..self.nodes.len() {
+            if !self.nodes[id].live {
+                continue;
+            }
+            let b = (self.nodes[id].hash as usize) & (size - 1);
+            self.nodes[id].next = self.buckets[b];
+            self.buckets[b] = id;
+        }
+    }
+
+    fn unlink(&mut self, id: usize) {
+        // bucket chain
+        let hash = self.nodes[id].hash;
+        let b = (hash as usize) & (self.buckets.len() - 1);
+        if self.buckets[b] == id {
+            self.buckets[b] = self.nodes[id].next;
+        } else {
+            let mut cur = self.buckets[b];
+            while cur != NO_NODE {
+                if self.nodes[cur].next == id {
+                    self.nodes[cur].next = self.nodes[id].next;
+                    break;
+                }
+                cur = self.nodes[cur].next;
+            }
+        }
+        // sibling chain
+        let parent = self.nodes[id].parent;
+        let head = if parent == NO_NODE {
+            self.root_child
+        } else {
+            self.nodes[parent].first_child
+        };
+        if head == id {
+            let sib = self.nodes[id].next_sibling;
+            if parent == NO_NODE {
+                self.root_child = sib;
+            } else {
+                self.nodes[parent].first_child = sib;
+            }
+        } else {
+            let mut cur = head;
+            while cur != NO_NODE {
+                if self.nodes[cur].next_sibling == id {
+                    self.nodes[cur].next_sibling = self.nodes[id].next_sibling;
+                    break;
+                }
+                cur = self.nodes[cur].next_sibling;
+            }
+        }
+        if parent != NO_NODE {
+            debug_assert!(self.nodes[parent].refs > 0);
+            self.nodes[parent].refs -= 1;
+        }
+        let n = &mut self.nodes[id];
+        n.live = false;
+        n.tokens = Vec::new();
+        n.k = Vec::new();
+        n.v = Vec::new();
+        self.free_nodes.push(id);
+        self.live_nodes -= 1;
+        self.owned_blocks -= 1;
+    }
+
+    /// Evict unreferenced nodes — deterministic ascending node-id sweeps,
+    /// cascading to parents freed by their last child — until `want`
+    /// blocks are freed or nothing evictable remains. Returns the blocks
+    /// freed; the caller gives them back to the pool
+    /// (`SharedBlockPool::give_back`). Referenced nodes are never touched,
+    /// so a live sequence's prefix can never be stranded.
+    pub fn evict_unreferenced(&mut self, want: usize) -> usize {
+        let mut freed = 0usize;
+        while freed < want {
+            let mut progress = false;
+            for id in 0..self.nodes.len() {
+                if freed >= want {
+                    break;
+                }
+                if self.nodes[id].live && self.nodes[id].refs == 0 {
+                    self.unlink(id);
+                    freed += 1;
+                    progress = true;
+                }
+            }
+            if !progress {
+                break;
+            }
+        }
+        self.evicted_blocks += freed as u64;
+        freed
+    }
+
+    /// Drop every node regardless of refs (worker shutdown); returns the
+    /// blocks to give back to the pool.
+    pub fn drain(&mut self) -> usize {
+        let freed = self.owned_blocks;
+        self.nodes.clear();
+        self.free_nodes.clear();
+        for b in self.buckets.iter_mut() {
+            *b = NO_NODE;
+        }
+        self.root_child = NO_NODE;
+        self.live_nodes = 0;
+        self.owned_blocks = 0;
+        freed
+    }
+
+    /// Node refcount (tests / diagnostics).
+    pub fn refs(&self, node: usize) -> usize {
+        self.nodes[node].refs
+    }
+
+    pub fn live_nodes(&self) -> usize {
+        self.live_nodes
+    }
+
+    /// Pool blocks owned by interned nodes (accounting:
+    /// `global + shards + Σ lease-allocated + owned_blocks == total`).
+    pub fn owned_blocks(&self) -> usize {
+        self.owned_blocks
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+    /// Full blocks of prefill skipped across all admissions.
+    pub fn blocks_saved(&self) -> u64 {
+        self.blocks_saved
+    }
+    /// Mid-block copy-on-write forks taken at admission.
+    pub fn forks(&self) -> u64 {
+        self.forks
+    }
+    pub fn evicted_blocks(&self) -> u64 {
+        self.evicted_blocks
+    }
+}
+
 /// One worker's handle on the shared pool: per-slot allocation ledger plus
 /// the worker's shard identity. API mirrors the old per-engine `BlockPool`
 /// so the engine's admission/preemption logic is pool-topology-agnostic —
@@ -425,6 +932,9 @@ pub struct PoolLease {
     worker: usize,
     /// per-slot allocated block counts (preallocated; never grows)
     allocated: Vec<usize>,
+    /// per-slot blocks served by the prefix index (index-owned, not
+    /// lease-allocated) — subtracted from `ensure` demand
+    shared: Vec<usize>,
 }
 
 impl PoolLease {
@@ -433,7 +943,12 @@ impl PoolLease {
         assert!(worker < pool.workers(),
                 "lease worker {worker} out of range ({} shards)",
                 pool.workers());
-        PoolLease { pool, worker, allocated: vec![0; max_slots] }
+        PoolLease {
+            pool,
+            worker,
+            allocated: vec![0; max_slots],
+            shared: vec![0; max_slots],
+        }
     }
 
     /// Standalone single-worker pool (tests, benches, one-engine CLIs):
@@ -462,8 +977,11 @@ impl PoolLease {
 
     /// Grow sequence `slot` to cover `positions`; fails (without partial
     /// allocation) only when the whole cluster cannot supply the delta.
+    /// Positions covered by the slot's shared prefix base (index-owned
+    /// blocks, see `set_shared`) are excluded from the demand.
     pub fn ensure(&mut self, slot: usize, positions: usize) -> Result<()> {
-        let want = self.pool.blocks_for(positions);
+        let want =
+            self.pool.blocks_for(positions).saturating_sub(self.shared[slot]);
         let have = self.allocated[slot];
         if want <= have {
             return Ok(());
@@ -479,7 +997,45 @@ impl PoolLease {
 
     pub fn release(&mut self, slot: usize) {
         let n = std::mem::take(&mut self.allocated[slot]);
+        self.shared[slot] = 0;
         self.pool.give_back(self.worker, n);
+    }
+
+    /// Record that the first `blocks` blocks of `slot`'s sequence are
+    /// served by the prefix index (admission-time cache hit). Must be set
+    /// on a fresh slot, before any `ensure` — the blocks stay index-owned
+    /// and are never drawn from (or returned to) this lease.
+    pub fn set_shared(&mut self, slot: usize, blocks: usize) {
+        debug_assert_eq!(self.allocated[slot], 0,
+                         "shared base must be set before allocation");
+        self.shared[slot] = blocks;
+    }
+
+    /// Blocks of `slot` served by the prefix index.
+    pub fn shared_blocks(&self, slot: usize) -> usize {
+        self.shared[slot]
+    }
+
+    /// After `slot`'s prompt blocks are interned (`PrefixIndex::
+    /// intern_from_cache`): its shared base grows to `shared_total` blocks.
+    /// Of the lease blocks this frees, `created` transfer ownership to the
+    /// index (the newly-interned nodes) and the rest — blocks whose content
+    /// duplicated already-interned nodes — go back to the pool. This is
+    /// where prefix sharing multiplies effective pool capacity.
+    pub fn share_published(&mut self, slot: usize, shared_total: usize,
+                           created: usize) {
+        let old = self.shared[slot];
+        debug_assert!(shared_total >= old, "shared base cannot shrink");
+        let delta = shared_total - old;
+        debug_assert!(created <= delta && self.allocated[slot] >= delta,
+                      "publish accounting out of range: delta {delta}, \
+                       created {created}, allocated {}", self.allocated[slot]);
+        self.allocated[slot] -= delta;
+        self.shared[slot] = shared_total;
+        let back = delta - created;
+        if back > 0 {
+            self.pool.give_back(self.worker, back);
+        }
     }
 
     /// Release every slot's blocks (worker drain).
@@ -797,6 +1353,144 @@ mod tests {
         a.release(0);
         assert!(pool.shard_free(0) <= 4, "shard cap not enforced");
         assert_eq!(pool.cluster_free_blocks(), 20);
+    }
+
+    #[test]
+    fn prefix_index_interns_and_hash_conses() {
+        let mut idx = PrefixIndex::counting(4);
+        let a: Vec<i32> = (0..12).collect(); // 3 full blocks
+        let (deep_a, created_a) = idx.intern_from_cache(&a, None);
+        assert_eq!(created_a, 3);
+        assert_eq!(idx.owned_blocks(), 3);
+        // same prefix, different tail: first 2 blocks shared, 1 new
+        let mut b = a.clone();
+        b[8] = 99;
+        let (deep_b, created_b) = idx.intern_from_cache(&b, None);
+        assert_eq!(created_b, 1);
+        assert_eq!(idx.owned_blocks(), 4);
+        assert_ne!(deep_a, deep_b);
+        // re-interning is free
+        assert_eq!(idx.intern_from_cache(&a, None), (deep_a, 0));
+        // structural refcounts: block 2's node holds one ref per child
+        let (mid, _) = idx.intern_from_cache(&a[..8], None);
+        assert_eq!(idx.refs(mid), 2, "two children must pin their parent");
+    }
+
+    #[test]
+    fn prefix_lookup_longest_match_and_midblock_fork() {
+        let mut idx = PrefixIndex::counting(4);
+        let a: Vec<i32> = (0..12).collect();
+        let (deep, _) = idx.intern_from_cache(&a, None);
+        // exact replay: all 3 blocks cached, but the cap leaves position 11
+        // to prefill — 2 full blocks + a 3-position fork into block 3
+        let hit = idx.lookup(&a);
+        assert_eq!(hit.blocks, 2);
+        assert_eq!(hit.fork_positions, 3);
+        assert_eq!(hit.positions, 11);
+        // longer prompt with the cached prefix: full 3-block hit
+        let mut long = a.clone();
+        long.extend([50, 51, 52, 53, 54]);
+        let hit = idx.lookup(&long);
+        assert_eq!((hit.node, hit.blocks, hit.positions), (deep, 3, 12));
+        assert_eq!(hit.fork_node, NO_NODE);
+        // divergence mid-block-2: 1 full block + fork of 2 positions
+        let div: Vec<i32> = vec![0, 1, 2, 3, 4, 5, 77, 78, 79];
+        let hit = idx.lookup(&div);
+        assert_eq!(hit.blocks, 1);
+        assert_eq!(hit.fork_positions, 2);
+        assert_eq!(hit.positions, 6);
+        // cold prompt: miss
+        let hit = idx.lookup(&[9, 9, 9, 9, 9]);
+        assert_eq!(hit, PrefixHit::MISS);
+        // counters only move on record_admit
+        assert_eq!((idx.hits(), idx.misses()), (0, 0));
+        idx.record_admit(&hit);
+        assert_eq!((idx.hits(), idx.misses()), (0, 1));
+        let hit = idx.lookup(&long);
+        idx.record_admit(&hit);
+        assert_eq!((idx.hits(), idx.blocks_saved(), idx.forks()), (1, 3, 0));
+    }
+
+    #[test]
+    fn prefix_evict_respects_refs_and_cascades() {
+        let mut idx = PrefixIndex::counting(2);
+        let a: Vec<i32> = (0..8).collect(); // 4 blocks
+        let (deep, _) = idx.intern_from_cache(&a, None);
+        idx.acquire(deep);
+        // every node is pinned (leaf by the seq ref, ancestors by children)
+        assert_eq!(idx.evict_unreferenced(usize::MAX), 0);
+        assert_eq!(idx.owned_blocks(), 4);
+        idx.release(deep);
+        // one sweep cascades: leaf frees its parent, and so on up the chain
+        assert_eq!(idx.evict_unreferenced(usize::MAX), 4);
+        assert_eq!((idx.owned_blocks(), idx.live_nodes()), (0, 0));
+        // the index stays usable after a full eviction
+        let (_, created) = idx.intern_from_cache(&a, None);
+        assert_eq!(created, 4);
+        assert_eq!(idx.drain(), 4);
+        assert_eq!(idx.owned_blocks(), 0);
+    }
+
+    #[test]
+    fn prefix_seed_cache_replays_interned_rows() {
+        let (layers, lmax, heads, dh) = (2usize, 32usize, 2usize, 4usize);
+        let mut src = SeqCache::new(layers, lmax, heads, dh);
+        let re = src.row_elems();
+        // fill 32 distinct positions (2 full 16-blocks)
+        for pos in 0..32 {
+            let k: Vec<f32> =
+                (0..layers * re).map(|i| (pos * 1000 + i) as f32).collect();
+            src.append_selected(&k, &k, 1, &[0]).unwrap();
+        }
+        let toks: Vec<i32> = (0..32).collect();
+        let mut idx = PrefixIndex::new(16, layers, re);
+        let (deep, created) = idx.intern_from_cache(&toks, Some(&src));
+        assert_eq!(created, 2);
+        // a 20-token prompt sharing the prefix: 1 full block + a 3-row
+        // copy-on-write fork out of the cached second block (cap 19)
+        let hit = idx.lookup(&toks[..20]);
+        assert_eq!((hit.blocks, hit.fork_positions), (1, 3));
+        assert_eq!(hit.fork_node, deep);
+        let mut dst = SeqCache::new(layers, lmax, heads, dh);
+        idx.seed_cache(&hit, &mut dst);
+        assert_eq!(dst.len, 19);
+        for l in 0..layers {
+            for pos in 0..19 {
+                let off = dst.row(l, pos);
+                assert_eq!(&dst.k_data()[off..off + re],
+                           &src.k_data()[off..off + re],
+                           "layer {l} pos {pos} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn lease_shared_base_excludes_index_blocks_from_demand() {
+        let pool = Arc::new(SharedBlockPool::with_config(8 * 16, 16, 1, 1, 2));
+        let mut lease = PoolLease::new(pool.clone(), 0, 2);
+        // admission-time hit: 3 of 5 blocks come from the index
+        lease.set_shared(0, 3);
+        lease.ensure(0, 5 * 16).unwrap();
+        assert_eq!(lease.allocated(0), 2);
+        assert_eq!(lease.shared_blocks(0), 3);
+        assert_eq!(pool.cluster_in_use_blocks(), 2);
+        // publish: blocks 4 and 5 intern — 1 newly created (transfers to
+        // the index), 1 duplicated an existing node (returns to the pool)
+        lease.share_published(0, 5, 1);
+        assert_eq!(lease.allocated(0), 0);
+        assert_eq!(lease.shared_blocks(0), 5);
+        assert_eq!(pool.cluster_in_use_blocks(), 1,
+                   "duplicate block must return to the pool");
+        // growth past the shared base allocates only the novel suffix
+        lease.ensure(0, 7 * 16).unwrap();
+        assert_eq!(lease.allocated(0), 2);
+        lease.release(0);
+        assert_eq!(lease.shared_blocks(0), 0);
+        // the block owned by the index stays in use after the seq releases
+        assert_eq!(pool.cluster_in_use_blocks(), 1);
+        // ...until the index evicts it and gives it back
+        pool.give_back(0, 1);
+        assert_eq!(pool.cluster_in_use_blocks(), 0);
     }
 
     #[test]

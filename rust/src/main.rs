@@ -306,9 +306,13 @@ fn cmd_client(argv: &[String]) -> Result<()> {
 /// Artifact-free scheduler-simulation replay: drive `MockSched` (or, with
 /// `--workers N`, a `MockCluster` of N workers over ONE shared KV block
 /// pool behind the production placement policy) through a class-tagged
-/// Poisson trace and print the canonical event log to stdout. Two runs
-/// with the same options MUST print identical logs — `check.sh` diffs a
-/// double replay (single-worker AND cluster) as the determinism gate.
+/// Poisson trace — or, with `--trace multiturn`, prefix-chained
+/// conversations exercising the prefix-sharing KV cache — and print the
+/// canonical event log to stdout. Two runs with the same options MUST
+/// print identical logs — `check.sh` diffs a double replay (single-worker
+/// AND cluster, both traces) as the determinism gate, and diffs the warm
+/// multiturn run's `prefill_steps` against `--no-prefix-share` as the
+/// cache-reuse gate.
 fn cmd_sim(argv: &[String]) -> Result<()> {
     let cli = Cli::new("ctcdraft sim", "deterministic scheduler-sim replay")
         .opt("seed", "trace + backend seed", Some("7"))
@@ -316,9 +320,16 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .opt("slots", "batch slots", Some("4"))
         .opt("queue-cap", "admit-queue bound (0 = unbounded)", Some("8"))
         .opt("pool", "shared KV pool positions (cluster-wide)", Some("256"))
-        .opt("requests", "questions per MT-bench category", Some("2"))
+        .opt("trace",
+             "workload shape: poisson (class-tagged MT-bench arrivals) | \
+              multiturn (prefix-chained conversations for the prefix-\
+              sharing cache)", Some("poisson"))
+        .opt("requests", "questions per MT-bench category (poisson)",
+             Some("2"))
+        .opt("convs", "concurrent conversations (multiturn)", Some("6"))
+        .opt("turns", "turns per conversation (multiturn)", Some("3"))
         .opt("max-new", "max new tokens per request", Some("24"))
-        .opt("mean-gap", "mean arrival gap (steps)", Some("1.5"))
+        .opt("mean-gap", "mean arrival gap (steps; poisson)", Some("1.5"))
         .opt("batch-frac", "fraction of requests tagged batch", Some("0.5"))
         .opt("interactive-deadline", "interactive deadline (steps)", Some("32"))
         .opt("batch-deadline", "batch deadline (steps)", Some("256"))
@@ -329,6 +340,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
              "β analog for the mock: fixed | adaptive (batch-adaptive \
               accepted-token range via adapt::BetaController)", Some("fixed"))
         .opt("cancel-prob", "per-request cancellation probability", Some("0"))
+        .flag("no-prefix-share",
+              "disable the prefix-sharing KV cache (cold baseline; \
+               check.sh diffs its prefill_steps against the warm run)")
         .flag("summary", "print a run summary to stderr");
     let a = parse_args(cli, argv)?;
     let seed = a.u64("seed", 7);
@@ -338,16 +352,26 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         batch_aging_steps: a.u64("batch-aging", 64),
         prefill_chunk: a.usize("prefill-chunk", 8),
     };
-    let trace = Trace::poisson_with_classes(
-        workload::mtbench(a.usize("requests", 2), seed),
-        a.usize("max-new", 24),
-        a.f64("mean-gap", 1.5),
-        seed,
-        a.f64("batch-frac", 0.5),
-        policy.interactive_deadline,
-        policy.batch_deadline,
-    );
+    let trace = match a.get_or("trace", "poisson") {
+        "poisson" => Trace::poisson_with_classes(
+            workload::mtbench(a.usize("requests", 2), seed),
+            a.usize("max-new", 24),
+            a.f64("mean-gap", 1.5),
+            seed,
+            a.f64("batch-frac", 0.5),
+            policy.interactive_deadline,
+            policy.batch_deadline,
+        ),
+        "multiturn" => Trace::multiturn(
+            a.usize("convs", 6),
+            a.usize("turns", 3),
+            a.usize("max-new", 24),
+            seed,
+        ),
+        other => bail!("unknown --trace {other} (poisson | multiturn)"),
+    };
     let beta = BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?;
+    let share = !a.flag("no-prefix-share");
     let sim = SchedulerSim::new(SimOptions {
         cancel_prob: a.f64("cancel-prob", 0.0),
         seed,
@@ -363,7 +387,8 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
             seed,
         )
         .with_policy(policy)
-        .with_beta(beta);
+        .with_beta(beta)
+        .with_prefix_sharing(share);
         sim.run(&mut backend, &trace)?
     } else {
         let mut backend = MockSched::new(
@@ -373,17 +398,21 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
             seed,
         )
         .with_policy(policy)
-        .with_beta(beta);
+        .with_beta(beta)
+        .with_prefix_sharing(share);
         sim.run(&mut backend, &trace)?
     };
     print!("{}", report.event_log);
     if a.flag("summary") {
         eprintln!(
             "steps={} finished={} evictions={} busy={} deadline_misses={} \
-             interleaved_rounds={} max_queue_depth={}",
+             interleaved_rounds={} max_queue_depth={} prefill_steps={} \
+             prefix_hits={} prefix_misses={} prefix_saved={} prefix_forks={}",
             report.steps, report.finished.len(), report.evictions,
             report.busy_rejections, report.deadline_misses,
-            report.interleaved_rounds, report.max_queue_depth
+            report.interleaved_rounds, report.max_queue_depth,
+            report.prefill_steps, report.prefix_hits, report.prefix_misses,
+            report.prefix_blocks_saved, report.prefix_forks
         );
     }
     Ok(())

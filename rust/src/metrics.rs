@@ -261,6 +261,11 @@ pub enum SchedEvent {
     /// Router placement decision: request `id` routed to `worker` (shared-
     /// pool clusters only; id 0 = rejected before an id was assigned).
     Placed { step: u64, id: u64, worker: usize },
+    /// Admission mapped a cached prompt prefix: `blocks` full KV blocks
+    /// reused from the prefix index plus `fork` positions copied out of a
+    /// diverging block (copy-on-write). Logged only on a hit, so cold
+    /// traffic does not flood the log; replays make reuse auditable.
+    Prefix { step: u64, id: u64, blocks: usize, fork: usize },
 }
 
 impl fmt::Display for SchedEvent {
@@ -297,6 +302,9 @@ impl fmt::Display for SchedEvent {
             }
             SchedEvent::Placed { step, id, worker } => {
                 write!(f, "t={step} place id={id} worker={worker}")
+            }
+            SchedEvent::Prefix { step, id, blocks, fork } => {
+                write!(f, "t={step} prefix id={id} blocks={blocks} fork={fork}")
             }
         }
     }
@@ -537,12 +545,14 @@ mod tests {
             log.push(SchedEvent::DeadlineMiss { step: 5, id: 2, late: 3 });
             log.push(SchedEvent::Completed { step: 5, id: 2, steps: 3, tokens: 7 });
             log.push(SchedEvent::Placed { step: 6, id: 3, worker: 1 });
+            log.push(SchedEvent::Prefix { step: 6, id: 3, blocks: 2, fork: 5 });
             log
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.render(), b.render());
-        assert_eq!(a.len(), 10);
+        assert_eq!(a.len(), 11);
         assert!(a.render().contains("t=6 place id=3 worker=1"));
+        assert!(a.render().contains("t=6 prefix id=3 blocks=2 fork=5"));
         assert!(a.render().contains("t=4 beta batch=2 paths=8 nodes=16 depth=5"));
         assert!(a.render().contains("t=1 submit id=1 class=batch deadline=65"));
         assert!(a.render().contains("t=2 admit id=2 waited=1"));

@@ -213,6 +213,11 @@ pub struct WorkerSnapshot {
     pub queued: usize,
     /// admit queue at its cap: dispatching here returns a terminal `busy`
     pub queue_full: bool,
+    /// blocks of THIS request's prompt already cached in the worker's
+    /// prefix index (`PrefixIndex::lookup`) — per-request, unlike the other
+    /// fields. Cache affinity: routing to the holder skips that much
+    /// prefill and allocates that many fewer pool blocks.
+    pub prefix_blocks: usize,
 }
 
 /// Placement score for one worker (lower = better). Deterministic integer
@@ -228,6 +233,13 @@ pub struct WorkerSnapshot {
 ///   request's estimated block need would have to steal (or preempt);
 ///   placing there strands capacity elsewhere, so it takes a large flat
 ///   penalty rather than a hard exclusion (every worker may be short).
+///   The need is the request's *effective* need: blocks already cached in
+///   the worker's prefix index are served without allocation, so a
+///   prefix-holding worker passes the gate with less headroom.
+/// * **cache affinity** — each prompt block already resident in the
+///   worker's prefix index skips prefill work and block allocation
+///   outright; this outweighs queue depth and class mix (but never the
+///   two gates above): a cached prefix beats an idle cold worker.
 /// * **queued depth** — each waiting request delays this one by a full
 ///   admission; doubled for urgent (low-slack) requests.
 /// * **class mix** — same-class in-flight work contends directly (5×),
@@ -239,7 +251,9 @@ pub struct WorkerSnapshot {
 pub fn placement_score(s: &WorkerSnapshot, class: Priority,
                        need_blocks: usize, urgent: bool) -> i64 {
     let mut score: i64 = if s.queue_full { 10_000_000 } else { 0 };
-    score += if s.headroom_blocks < need_blocks { 100_000 } else { 0 };
+    let effective_need = need_blocks.saturating_sub(s.prefix_blocks);
+    score += if s.headroom_blocks < effective_need { 100_000 } else { 0 };
+    score -= 1_000 * s.prefix_blocks.min(64) as i64;
     score += (if urgent { 200 } else { 100 }) * s.queued as i64;
     let (same, other) = match class {
         Priority::Interactive => (s.inflight_interactive, s.inflight_batch),
@@ -248,6 +262,16 @@ pub fn placement_score(s: &WorkerSnapshot, class: Priority,
     score += 50 * same as i64 + 10 * other as i64;
     score -= s.headroom_blocks.min(64) as i64;
     score
+}
+
+/// Cheap shared prompt-size estimate in TOKENS (~4 chars per BPE token),
+/// used by every pre-tokenization sizing decision — the router's headroom
+/// gate, prefix-affinity scoring, and the scheduler mock's virtual prompt
+/// length — so they all agree on units. Counting `chars` rather than bytes
+/// keeps multi-byte UTF-8 prompts from looking 2–4× longer than they
+/// tokenize (the carried-over router bug this replaces).
+pub fn est_prompt_tokens(prompt: &str) -> usize {
+    (prompt.chars().count() / 4).max(1)
 }
 
 /// Pick the worker for a request: minimal `placement_score`, lowest index
@@ -405,6 +429,7 @@ mod tests {
             inflight_batch: b,
             queued: q,
             queue_full: false,
+            prefix_blocks: 0,
         }
     }
 
@@ -454,6 +479,47 @@ mod tests {
             WorkerSnapshot { queue_full: true, ..snap(8, 5, 5, 2) },
         ];
         assert_eq!(place(&both, Priority::Interactive, 1, None), 0);
+    }
+
+    #[test]
+    fn placement_prefers_prefix_holder_over_idle_cold_worker() {
+        // worker 1 holds 4 blocks of the request's prompt in its prefix
+        // index; worker 0 is idle and cold. Affinity must win over the
+        // class-mix/queue terms...
+        let warm = WorkerSnapshot { prefix_blocks: 4, ..snap(32, 2, 1, 1) };
+        let snaps = [snap(32, 0, 0, 0), warm];
+        assert_eq!(place(&snaps, Priority::Interactive, 6, None), 1);
+        // ...and the cached blocks shrink the effective need: headroom 2
+        // with 4 blocks cached passes the headroom gate for a 6-block
+        // request (no 100_000 shortfall penalty), while the same snapshot
+        // without the cached prefix takes it
+        let tight = WorkerSnapshot { prefix_blocks: 4, ..snap(2, 0, 0, 0) };
+        assert!(placement_score(&tight, Priority::Interactive, 6, false) < 0);
+        assert!(placement_score(&snap(2, 0, 0, 0), Priority::Interactive, 6,
+                                false) >= 100_000 - 64);
+        // but affinity never overrides the queue-full gate
+        let full = WorkerSnapshot {
+            queue_full: true,
+            prefix_blocks: 64,
+            ..snap(64, 0, 0, 0)
+        };
+        let snaps = [snap(8, 5, 5, 2), full];
+        assert_eq!(place(&snaps, Priority::Interactive, 1, None), 0);
+    }
+
+    #[test]
+    fn est_prompt_tokens_counts_chars_not_bytes() {
+        assert_eq!(est_prompt_tokens(""), 1); // floor
+        assert_eq!(est_prompt_tokens("abcdefgh"), 2);
+        // 8 chars of multi-byte UTF-8 (24 bytes) must estimate like 8
+        // ASCII chars, not like 24 — the byte-length bug made the router's
+        // headroom gate and the mock's prompt length disagree by 3×
+        let cjk = "模型推理加速测试";
+        assert_eq!(cjk.chars().count(), 8);
+        assert_eq!(cjk.len(), 24);
+        assert_eq!(est_prompt_tokens(cjk), est_prompt_tokens("abcdefgh"));
+        // accented latin (2-byte chars)
+        assert_eq!(est_prompt_tokens("éééééééé"), 2);
     }
 
     #[test]

@@ -21,6 +21,17 @@
 //! (`placements` in stats) and the per-shard pool gauges are exported
 //! through the `stats` op and `metrics.rs` (`pool.*` gauges).
 //!
+//! Cache affinity (PR 6): each worker engine keeps a copy-on-write prefix
+//! index (`kvcache::PrefixIndex`) so a prompt sharing a prefix with a
+//! finished sequence skips re-prefilling the shared blocks. The router
+//! cannot see worker token ids (it has no tokenizer), so it mirrors
+//! placements in a per-worker *counting* index over a cheap pseudo-
+//! tokenization of the prompt and feeds the longest-match as
+//! `WorkerSnapshot::prefix_blocks` — `sched::place` then prefers the
+//! worker already holding the prefix over a cold neighbor. The mirror is
+//! a heuristic (admission re-validates against real tokens); it is capped
+//! and dropped wholesale when it grows past `ROUTER_PREFIX_NODE_CAP`.
+//!
 //! Wire protocol (one JSON object per line):
 //!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true,
 //!      "class":"interactive"|"batch","deadline_steps":N}
@@ -60,13 +71,21 @@
 //!        "workers":[{"active":..,"queued":..,"pool_utilization":..,
 //!                    "shard_free_blocks":..,"headroom_blocks":..,
 //!                    "lease_blocks":..,
+//!                    "prefix_hits":..,"prefix_misses":..,
+//!                    "prefix_blocks_saved":..,"prefix_forks":..,
+//!                    "prefix_owned_blocks":..,
 //!                    "completed":..,"cancelled":..,"evicted":..,
 //!                    "rejected_busy":..,"deadline_missed":..,
 //!                    "prefill_interleaved_rounds":..,"steps":..}, ...]}
 //!     `pool` is the shared KV block pool: cluster totals, the unleased
 //!     global free list, and each worker's shard reserve; `shard_free_
 //!     blocks`/`headroom_blocks`/`lease_blocks` give the same view from
-//!     inside each worker's lease.
+//!     inside each worker's lease. `prefix_hits`/`prefix_misses` count
+//!     admissions that did / did not map a cached prompt prefix,
+//!     `prefix_blocks_saved` the KV blocks served from the index instead
+//!     of re-prefilled, `prefix_forks` mid-block copy-on-write splits, and
+//!     `prefix_owned_blocks` blocks currently parked in the worker's index
+//!     (these also export as `pool.prefix.*` gauges via `metrics.rs`).
 //!
 //! Shutdown drains gracefully: in-flight and queued requests finish (new
 //! ones are rejected `busy`), then workers exit.
@@ -82,7 +101,7 @@ use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -90,9 +109,10 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::{EngineConfig, Manifest};
 use crate::engine::{Engine, GenOutput, Submission};
-use crate::kvcache::{PoolLease, SharedBlockPool};
+use crate::kvcache::{PoolLease, PrefixIndex, SharedBlockPool};
 use crate::runtime::Runtime;
 use crate::sched::{self, Priority, WorkerSnapshot};
+use crate::testkit::mock_tokens;
 use crate::tokenizer::StreamDecoder;
 use crate::util::json::{parse, Json};
 
@@ -157,7 +177,19 @@ struct Route {
     queued_depth: Arc<AtomicUsize>,
     /// generate requests the router has placed on this worker
     placed: Arc<AtomicU64>,
+    /// router-side affinity mirror: a counting `PrefixIndex` over pseudo-
+    /// tokens (`testkit::mock_tokens`) of every prompt placed here. The
+    /// router has no tokenizer, so this approximates which worker's REAL
+    /// index holds a prompt's prefix; `pick_worker` feeds the longest
+    /// match to `sched::place` as `prefix_blocks`.
+    prefix: Arc<Mutex<PrefixIndex>>,
 }
+
+/// Router mirror hygiene: the counting index holds no KV rows, but its
+/// node table still grows with distinct prompts; past this many live nodes
+/// the mirror is dropped wholesale (affinity is a heuristic — a cold
+/// restart only costs a few non-affine placements).
+const ROUTER_PREFIX_NODE_CAP: usize = 65_536;
 
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
@@ -205,6 +237,7 @@ impl Server {
                 inflight_batch: Arc::new(AtomicUsize::new(0)),
                 queued_depth: Arc::new(AtomicUsize::new(0)),
                 placed: Arc::new(AtomicU64::new(0)),
+                prefix: Arc::new(Mutex::new(PrefixIndex::counting(1))),
             };
             let artifacts = cfg.artifacts.clone();
             let mut ecfg = cfg.engine.clone();
@@ -277,14 +310,18 @@ fn acceptor_loop(listener: TcpListener, routes: Vec<Route>,
 }
 
 /// Placement policy (replaces the old least-inflight pick): score every
-/// worker by no-steal pool headroom, interactive/batch in-flight mix, and
-/// queued depth — weighted by the request's class and deadline slack — and
-/// route to the best. The block-need estimate uses the same bytes/4 prompt
-/// heuristic as the scheduler mock (the router has no tokenizer; admission
-/// re-validates against real token counts).
+/// worker by cached-prefix affinity, no-steal pool headroom, interactive/
+/// batch in-flight mix, and queued depth — weighted by the request's class
+/// and deadline slack — and route to the best. The block-need estimate
+/// uses the shared chars/4 token estimate (`sched::est_prompt_tokens`) and
+/// affinity uses the router's pseudo-token mirror (the router has no
+/// tokenizer; admission re-validates against real token counts). The
+/// chosen placement is interned back into the winner's mirror so the next
+/// same-prefix prompt scores toward the same worker.
 fn pick_worker(routes: &[Route], pool: &SharedBlockPool, queue_cap: usize,
                class: Priority, deadline_steps: Option<u64>, prompt: &str)
                -> usize {
+    let tokens = mock_tokens(prompt);
     let snaps: Vec<WorkerSnapshot> = routes
         .iter()
         .enumerate()
@@ -300,11 +337,20 @@ fn pick_worker(routes: &[Route], pool: &SharedBlockPool, queue_cap: usize,
                 // at-cap queue => the engine would answer a terminal busy;
                 // route around it while any neighbor has room
                 queue_full: queue_cap > 0 && queued >= queue_cap,
+                prefix_blocks: r.prefix.lock().unwrap()
+                    .lookup(&tokens).blocks,
             }
         })
         .collect();
-    let est_positions = (prompt.len() / 4).max(1);
-    sched::place(&snaps, class, pool.blocks_for(est_positions), deadline_steps)
+    let est_positions = sched::est_prompt_tokens(prompt);
+    let w = sched::place(&snaps, class, pool.blocks_for(est_positions),
+                         deadline_steps);
+    let mut idx = routes[w].prefix.lock().unwrap();
+    if idx.live_nodes() > ROUTER_PREFIX_NODE_CAP {
+        idx.drain();
+    }
+    let _ = idx.intern_from_cache(&tokens, None);
+    w
 }
 
 fn handle_conn(stream: TcpStream, routes: Vec<Route>,
@@ -605,6 +651,12 @@ fn error_frame(client_id: i64, msg: &str) -> String {
 
 fn worker_stats_json(engine: &Engine) -> String {
     let m = engine.metrics();
+    let prefix = {
+        let idx = engine.prefix_index();
+        let idx = idx.lock().unwrap();
+        (idx.hits(), idx.misses(), idx.blocks_saved(), idx.forks(),
+         idx.owned_blocks())
+    };
     Json::obj(vec![
         ("active", Json::num(engine.n_active() as f64)),
         ("queued", Json::num(engine.queue_len() as f64)),
@@ -617,6 +669,14 @@ fn worker_stats_json(engine: &Engine) -> String {
          Json::num(engine.pool().headroom_blocks() as f64)),
         ("lease_blocks",
          Json::num(engine.pool().lease_in_use_blocks() as f64)),
+        // prefix-sharing view: admissions that mapped a cached prefix,
+        // blocks served from the index instead of re-prefilled, mid-block
+        // COW forks, and blocks currently parked in the index
+        ("prefix_hits", Json::num(prefix.0 as f64)),
+        ("prefix_misses", Json::num(prefix.1 as f64)),
+        ("prefix_blocks_saved", Json::num(prefix.2 as f64)),
+        ("prefix_forks", Json::num(prefix.3 as f64)),
+        ("prefix_owned_blocks", Json::num(prefix.4 as f64)),
         ("steps", Json::num(m.counter("sched.steps") as f64)),
         ("completed", Json::num(m.counter("sched.completed") as f64)),
         ("cancelled", Json::num(m.counter("sched.cancelled") as f64)),
@@ -715,13 +775,31 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
     }
 }
 
+/// Return every block parked in the worker's prefix index to the shared
+/// pool. Index-owned blocks live OUTSIDE the lease's `allocated` count
+/// (`share_published` moved them out), so they must be handed back
+/// explicitly before the lease drops or the cluster loses capacity.
+fn drain_prefix_index(engine: &Engine) {
+    let freed = {
+        let idx = engine.prefix_index();
+        let mut idx = idx.lock().unwrap();
+        idx.drain()
+    };
+    if freed > 0 {
+        let lease = engine.pool();
+        lease.shared().give_back(lease.worker(), freed);
+    }
+}
+
 /// Worker: owns Runtime + Engine (leased on the process-wide block pool);
 /// admission-controlled continuous batching with token streaming. Requests
 /// flow `submit` → wait queue → slot → `step_ex` rounds; each round's
 /// accepted tokens become `tok` frames for streaming clients. Publishes its
 /// queue depth for the router's placement policy. On exit (drain or error)
-/// the engine drops, and with it the `PoolLease` — every block the worker
-/// held returns to the shared pool's global free list.
+/// the prefix index is drained first (cached-but-unreferenced blocks are
+/// index-owned, not lease-allocated, so the lease drop alone would strand
+/// them), then the engine drops, and with it the `PoolLease` — every block
+/// the worker held returns to the shared pool's global free list.
 fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
                rx: Receiver<WorkerMsg>, queued_depth: Arc<AtomicUsize>,
                shutdown: Arc<AtomicBool>) {
@@ -769,6 +847,7 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
                 while let Ok(msg) = rx.try_recv() {
                     handle_worker_msg(&mut engine, &mut pending, msg, true);
                 }
+                drain_prefix_index(&engine);
                 return; // graceful drain complete
             }
             // idle: block briefly for the next message
@@ -779,7 +858,10 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
                     handle_worker_msg(&mut engine, &mut pending, msg, draining);
                 }
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    drain_prefix_index(&engine);
+                    return;
+                }
             }
             continue;
         }

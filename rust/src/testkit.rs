@@ -19,7 +19,7 @@ use std::sync::Arc;
 use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
 use crate::engine::{Engine, GenOutput, GenStats, StepReport, Submission,
                     TokenDelta};
-use crate::kvcache::{PoolLease, SharedBlockPool};
+use crate::kvcache::{PoolLease, PrefixHit, PrefixIndex, SharedBlockPool};
 use crate::metrics::{EventLog, SchedEvent};
 use crate::sched::{self, AdmitRate, Priority, ReqMeta, SloPolicy,
                    WorkerSnapshot};
@@ -173,6 +173,11 @@ pub trait SchedBackend {
     fn queue_len(&self) -> usize;
     /// Canonical event-log rendering (`metrics::EventLog::render`).
     fn render_events(&self) -> String;
+    /// Aggregate prefix-sharing counters `(hits, misses, blocks_saved,
+    /// forks)`; zeros for backends without an index.
+    fn prefix_stats(&self) -> (u64, u64, u64, u64) {
+        (0, 0, 0, 0)
+    }
 }
 
 impl SchedBackend for Engine {
@@ -194,6 +199,11 @@ impl SchedBackend for Engine {
     }
     fn render_events(&self) -> String {
         Engine::events(self).render()
+    }
+    fn prefix_stats(&self) -> (u64, u64, u64, u64) {
+        let idx = self.prefix_index();
+        let idx = idx.lock().unwrap();
+        (idx.hits(), idx.misses(), idx.blocks_saved(), idx.forks())
     }
 }
 
@@ -238,6 +248,14 @@ pub struct SimReport {
     pub interleaved_rounds: usize,
     pub max_queue_depth: usize,
     pub steps: u64,
+    /// prefill chunk services across the run (one per slot per round) —
+    /// the basis of the warm-vs-cold "fewer prefill steps" reuse gate
+    pub prefill_steps: u64,
+    /// prefix-sharing counters aggregated across workers at run end
+    pub prefix_hits: u64,
+    pub prefix_misses: u64,
+    pub prefix_blocks_saved: u64,
+    pub prefix_forks: u64,
 }
 
 /// Drives a `SchedBackend` through a timed `Trace` under a virtual clock:
@@ -309,6 +327,7 @@ impl SchedulerSim {
             {
                 report.interleaved_rounds += 1;
             }
+            report.prefill_steps += step.prefilled.len() as u64;
             report.max_queue_depth = report.max_queue_depth.max(step.queue_depth);
             for d in &step.emitted {
                 *report.beta_hist.entry(d.tokens.len()).or_insert(0) += 1;
@@ -327,6 +346,11 @@ impl SchedulerSim {
             }
         }
         report.event_log = backend.render_events();
+        let (hits, misses, saved, forks) = backend.prefix_stats();
+        report.prefix_hits = hits;
+        report.prefix_misses = misses;
+        report.prefix_blocks_saved = saved;
+        report.prefix_forks = forks;
         Ok(report)
     }
 }
@@ -336,6 +360,13 @@ impl SchedulerSim {
 struct MockSeq {
     id: u64,
     prompt_len: usize,
+    /// pseudo-tokens of the prompt (`mock_tokens`) — the prefix-index key
+    tokens: Vec<i32>,
+    /// ids covered by this admission's (re-)prefill: prompt tokens plus
+    /// eviction-carryover produced tokens — what publish interns
+    prefill_ids: Vec<i32>,
+    /// deepest prefix-index node this sequence holds a ref on
+    prefix_ref: usize,
     max_new: usize,
     class: Priority,
     deadline_step: u64,
@@ -363,6 +394,7 @@ impl MockSeq {
 struct MockReq {
     id: u64,
     prompt_len: usize,
+    tokens: Vec<i32>,
     max_new: usize,
     class: Priority,
     deadline_step: u64,
@@ -387,8 +419,29 @@ impl MockReq {
 /// Deterministic "tokenized" prompt length used by `MockSched` and by
 /// `MockCluster`'s placement estimate (they must agree, exactly as the
 /// server's router estimate pairs with the engine's real tokenizer).
+/// Built on the shared router estimate (`sched::est_prompt_tokens`,
+/// character-based — PR 6 carried-over fix), clamped like before.
 pub fn mock_prompt_len(prompt: &str) -> usize {
-    (prompt.len() / 4).clamp(1, 64)
+    sched::est_prompt_tokens(prompt).min(64)
+}
+
+/// Deterministic pseudo-tokenization backing `mock_prompt_len`: one i32 per
+/// 4-char chunk (FNV-folded), same 64-token clamp. Prefix-stable — a prompt
+/// extending another by whole chunks shares its leading tokens — so the
+/// counting `PrefixIndex` models multi-turn prompt sharing without a real
+/// tokenizer.
+pub fn mock_tokens(prompt: &str) -> Vec<i32> {
+    let n = mock_prompt_len(prompt);
+    let chars: Vec<char> = prompt.chars().collect();
+    (0..n)
+        .map(|i| {
+            let mut h = 0x811c_9dc5u32;
+            for c in chars.iter().skip(i * 4).take(4) {
+                h = (h ^ *c as u32).wrapping_mul(0x0100_0193);
+            }
+            (h & 0x7fff_ffff) as i32
+        })
+        .collect()
 }
 
 /// Engine-shaped deterministic fake: same admission/queue/eviction policy
@@ -415,6 +468,15 @@ pub struct MockSched {
     last_plan: Option<DraftPlan>,
     /// observed admission rate (deadline-aware queued/busy estimates)
     admit_rate: AdmitRate,
+    /// counting-only radix prompt index (1-position blocks) — the same
+    /// `kvcache::PrefixIndex` the engine runs, minus the KV payload, so
+    /// sharing decisions replay identically
+    index: PrefixIndex,
+    /// prefix sharing toggle. Defaults OFF so the PR-2-era scenario
+    /// arithmetic (every admission re-prefills from position zero) is
+    /// preserved; `ctcdraft sim` switches it on (`--no-prefix-share` is the
+    /// cold baseline).
+    prefix_sharing: bool,
     step_no: u64,
     next_id: u64,
     /// id increment — cluster workers interleave id spaces (w+1, +workers)
@@ -457,6 +519,8 @@ impl MockSched {
             beta: None,
             last_plan: None,
             admit_rate: AdmitRate::default(),
+            index: PrefixIndex::counting(1),
+            prefix_sharing: false,
             step_no: 0,
             next_id: 1,
             id_stride: 1,
@@ -485,6 +549,18 @@ impl MockSched {
         let (paths, nodes, len) = MOCK_BETA_BASE;
         self.beta = Some(BetaController::new(policy, paths, nodes, len));
         self
+    }
+
+    /// Toggle prefix sharing (the radix prompt index mirroring the
+    /// engine's admission/publish/eviction choreography).
+    pub fn with_prefix_sharing(mut self, on: bool) -> Self {
+        self.prefix_sharing = on;
+        self
+    }
+
+    /// This worker's prefix index (sharing stats / affinity probes).
+    pub fn prefix_index(&self) -> &PrefixIndex {
+        &self.index
     }
 
     fn has_free_slot(&self) -> bool {
@@ -528,24 +604,52 @@ impl MockSched {
             .expect("admit_req requires a free slot");
         let id = req.id;
         let need = req.prompt_len + req.produced.len();
+        // longest cached prefix (mirrors Engine::admit_req): matched blocks
+        // stay index-owned and are excluded from the lease demand; the
+        // remaining (re-)prefill shrinks by the matched positions
+        let mut ids = req.tokens.clone();
+        ids.extend_from_slice(&req.produced);
+        let hit = if self.prefix_sharing {
+            self.index.lookup(&ids)
+        } else {
+            PrefixHit::MISS
+        };
+        self.pool.set_shared(slot, hit.blocks);
         // callers gate on can_fit(need); with refill + stealing, ensure then
-        // reaches everything the cluster has free
+        // reaches everything the cluster has free (the shared base only
+        // shrinks the demand further)
         self.pool
             .ensure(slot, need)
             .expect("mock admission gated on can_fit");
+        if self.prefix_sharing {
+            self.index.record_admit(&hit);
+            self.index.acquire(hit.node);
+            if hit.positions > 0 {
+                self.events.push(SchedEvent::Prefix {
+                    step: self.step_no,
+                    id,
+                    blocks: hit.blocks,
+                    fork: hit.fork_positions,
+                });
+            }
+        }
         let rng = match req.rng {
             Some(r) => r,
             None => self.rng.fork(id),
         };
-        // recompute-style: an evicted request re-prefills prompt+produced
+        // recompute-style: an evicted request re-prefills prompt+produced —
+        // minus the positions the index served
         let prefill_total = if self.policy.prefill_chunk == 0 {
             0
         } else {
-            need
+            need - hit.positions
         };
         self.slots[slot] = Some(MockSeq {
             id,
             prompt_len: req.prompt_len,
+            tokens: req.tokens,
+            prefill_ids: ids,
+            prefix_ref: hit.node,
             max_new: req.max_new,
             class: req.class,
             deadline_step: req.deadline_step,
@@ -559,7 +663,31 @@ impl MockSched {
         let waited = self.step_no.saturating_sub(req.enq_step);
         self.admit_rate.observe_admission(self.step_no, waited);
         self.events.push(SchedEvent::Admitted { step: self.step_no, id, waited });
+        if prefill_total == 0 {
+            // no chunked-prefill phase (prefill_chunk == 0): publish now,
+            // exactly where the engine would (prefill completion)
+            self.publish_slot(slot);
+        }
         id
+    }
+
+    /// Mirror of the engine's prefill-completion publish: intern the
+    /// prefilled ids (hash-consed with existing nodes), move the matched
+    /// blocks' accounting from the lease to the index, and swap the
+    /// sequence's ref onto the full published chain.
+    fn publish_slot(&mut self, slot: usize) {
+        if !self.prefix_sharing {
+            return;
+        }
+        let (ids, old_ref) = {
+            let seq = self.slots[slot].as_ref().expect("publish on empty slot");
+            (seq.prefill_ids.clone(), seq.prefix_ref)
+        };
+        let (deepest, created) = self.index.intern_from_cache(&ids, None);
+        self.index.release(old_ref);
+        self.index.acquire(deepest);
+        self.pool.share_published(slot, ids.len(), created);
+        self.slots[slot].as_mut().expect("publish slot").prefix_ref = deepest;
     }
 
     /// Mirrors `Engine::fill_slots`: SLO-policy admission order, skip-over
@@ -590,6 +718,15 @@ impl MockSched {
                     }
                     forced.push(out);
                     continue 'outer;
+                }
+                if !self.pool.can_fit(need) {
+                    // mirror Engine::fill_slots: reclaim unreferenced
+                    // interned prefixes before preempting or skipping
+                    let want = self.pool.blocks_for(need);
+                    let freed = self.index.evict_unreferenced(want);
+                    if freed > 0 {
+                        self.pool.shared().give_back(self.pool.worker(), freed);
+                    }
                 }
                 if self.pool.can_fit(need) {
                     let req = self.wait_queue.remove(i);
@@ -674,12 +811,14 @@ impl MockSched {
 
     fn evict_slot(&mut self, slot: usize) -> u64 {
         let seq = self.slots[slot].take().expect("victim is live");
+        self.index.release(seq.prefix_ref);
         self.pool.release(slot);
         let gen_len = seq.produced.len();
         let id = seq.id;
         self.wait_queue.push(MockReq {
             id,
             prompt_len: seq.prompt_len,
+            tokens: seq.tokens,
             max_new: seq.max_new,
             class: seq.class,
             deadline_step: seq.deadline_step,
@@ -738,6 +877,7 @@ impl SchedBackend for MockSched {
         let req = MockReq {
             id,
             prompt_len,
+            tokens: mock_tokens(prompt),
             max_new,
             class,
             deadline_step,
@@ -777,7 +917,8 @@ impl SchedBackend for MockSched {
             s.as_ref().map(|q| q.id == id).unwrap_or(false)
         });
         if let Some(slot) = slot {
-            self.slots[slot] = None;
+            let seq = self.slots[slot].take().expect("cancel slot");
+            self.index.release(seq.prefix_ref);
             self.pool.release(slot);
             self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
             return true;
@@ -823,6 +964,7 @@ impl SchedBackend for MockSched {
                 policy.urgency_cmp(&ma, &mb, now).then(a.cmp(&b))
             });
         }
+        let mut prefill_done: Vec<usize> = Vec::new();
         for b in prefill_order {
             if budget_left == 0 {
                 break;
@@ -833,10 +975,18 @@ impl SchedBackend for MockSched {
             budget_left = budget_left.saturating_sub(did);
             let (id, done, total) =
                 (seq.id, seq.prefill_total - seq.prefill_left, seq.prefill_total);
+            if seq.prefill_left == 0 {
+                prefill_done.push(b);
+            }
             report.prefilled.push((id, did));
             self.events.push(SchedEvent::Prefill {
                 step: self.step_no, id, done, total,
             });
+        }
+        // publish finished prefills into the index (engine: prefill_round
+        // completion) before this round's decode pass
+        for b in prefill_done {
+            self.publish_slot(b);
         }
 
         // one "round": every decode-ready seq accepts 1..=width tokens (β
@@ -908,6 +1058,7 @@ impl SchedBackend for MockSched {
                 .unwrap_or(false);
             if done {
                 let seq = self.slots[b].take().expect("done seq");
+                self.index.release(seq.prefix_ref);
                 self.pool.release(b);
                 let (out, miss) = self.finish_req(
                     seq.id, seq.prompt_len, seq.steps, seq.produced,
@@ -929,6 +1080,14 @@ impl SchedBackend for MockSched {
                 }
                 if self.pool.ensure(slot, need).is_ok() {
                     break;
+                }
+                // reclaim unreferenced interned prefixes before preempting
+                // a live sequence (mirrors Engine step 6)
+                let want = self.pool.blocks_for(need);
+                let freed = self.index.evict_unreferenced(want);
+                if freed > 0 {
+                    self.pool.shared().give_back(self.pool.worker(), freed);
+                    continue;
                 }
                 match self.evict_least_urgent() {
                     Some(id) => report.evicted.push(id),
@@ -952,6 +1111,11 @@ impl SchedBackend for MockSched {
 
     fn render_events(&self) -> String {
         self.events.render()
+    }
+
+    fn prefix_stats(&self) -> (u64, u64, u64, u64) {
+        (self.index.hits(), self.index.misses(), self.index.blocks_saved(),
+         self.index.forks())
     }
 }
 
@@ -1027,6 +1191,17 @@ impl MockCluster {
         self
     }
 
+    /// Toggle prefix sharing on every worker (each runs its own counting
+    /// index; the router reads them for cache-affinity placement).
+    pub fn with_prefix_sharing(mut self, on: bool) -> Self {
+        self.workers = self
+            .workers
+            .into_iter()
+            .map(|m| m.with_prefix_sharing(on))
+            .collect();
+        self
+    }
+
     pub fn pool(&self) -> &Arc<SharedBlockPool> {
         &self.pool
     }
@@ -1047,6 +1222,10 @@ impl MockCluster {
         assert!(self.workers[w].n_active() == 0
                     && self.workers[w].queue_len() == 0,
                 "drain_worker requires an idle worker");
+        // index-owned blocks sit outside the lease accounting; hand them
+        // back to the shard first so the shard drain sweeps everything
+        let cached = self.workers[w].index.drain();
+        self.pool.give_back(w, cached);
         self.pool.drain_worker(w)
     }
 
@@ -1065,6 +1244,7 @@ impl MockCluster {
                     inflight_batch: batch,
                     queued,
                     queue_full: m.queue_cap > 0 && queued >= m.queue_cap,
+                    prefix_blocks: 0,
                 }
             })
             .collect()
@@ -1074,7 +1254,15 @@ impl MockCluster {
 impl SchedBackend for MockCluster {
     fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
                      deadline_steps: Option<u64>) -> Result<Submission> {
-        let snaps = self.snapshots();
+        let mut snaps = self.snapshots();
+        // cache affinity: how much of this prompt each worker's prefix
+        // index already holds (the server probes engines the same way)
+        let tokens = mock_tokens(prompt);
+        for (w, m) in self.workers.iter().enumerate() {
+            if m.prefix_sharing {
+                snaps[w].prefix_blocks = m.index.lookup(&tokens).blocks;
+            }
+        }
         let need = self.pool.blocks_for(mock_prompt_len(prompt));
         let w = sched::place(&snaps, class, need, deadline_steps);
         let sub = self.workers[w].submit_tagged(prompt, max_new, class,
@@ -1126,6 +1314,15 @@ impl SchedBackend for MockCluster {
             s.push_str(&m.render_events());
         }
         s
+    }
+
+    fn prefix_stats(&self) -> (u64, u64, u64, u64) {
+        let mut agg = (0, 0, 0, 0);
+        for m in &self.workers {
+            let (h, mi, s, f) = m.prefix_stats();
+            agg = (agg.0 + h, agg.1 + mi, agg.2 + s, agg.3 + f);
+        }
+        agg
     }
 }
 

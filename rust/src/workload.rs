@@ -196,6 +196,52 @@ impl Trace {
         trace
     }
 
+    /// Multi-turn conversation trace (PR 6): `convs` interleaved
+    /// conversations of `turns` turns each. Turn t's prompt is the
+    /// conversation's first t+1 questions concatenated, so each turn's
+    /// prompt is a strict string prefix of the next — the shape prefix
+    /// sharing exists for. Turns are spaced `TURN_GAP_STEPS` apart (the
+    /// previous turn finishes and publishes its prefix into the index
+    /// before the follow-up arrives) and conversations are staggered a few
+    /// steps so the scheduler interleaves them; entries are stably sorted
+    /// by arrival so `due()`'s prefix walk holds. All-interactive with a
+    /// generous deadline (the trace measures cache reuse, not SLO
+    /// pressure). Deterministic in `seed`.
+    pub fn multiturn(convs: usize, turns: usize, max_new: usize, seed: u64)
+                     -> Trace {
+        const TURN_GAP_STEPS: u64 = 48;
+        const CONV_STAGGER_STEPS: u64 = 5;
+        let mut rng = Rng::new(seed ^ 0x4d55_4c54);
+        let mut entries = Vec::with_capacity(convs * turns);
+        for c in 0..convs {
+            let cat = *rng.choice(&CATEGORIES);
+            let mut history = String::new();
+            for t in 0..turns {
+                let q = gen_question(&mut rng, cat);
+                if t > 0 {
+                    history.push('\n');
+                }
+                history.push_str(&q.text);
+                let jitter = (max_new as f64 * (0.5 + rng.f64())) as usize;
+                entries.push(TraceEntry {
+                    question: Question {
+                        category: cat,
+                        text: history.clone(),
+                    },
+                    max_new: jitter.max(8),
+                    arrival_step: t as u64 * TURN_GAP_STEPS
+                        + c as u64 * CONV_STAGGER_STEPS,
+                    class: Priority::Interactive,
+                    deadline_steps: Some(512),
+                });
+            }
+        }
+        // interleave conversations on the shared clock; stable sort keeps
+        // same-step entries in conversation order for replayability
+        entries.sort_by_key(|e| e.arrival_step);
+        Trace { entries }
+    }
+
     /// Arrivals due at or before `step` that come after the first `taken`
     /// entries (entries are arrival-ordered, so this is a prefix walk).
     pub fn due(&self, taken: usize, step: u64) -> &[TraceEntry] {
@@ -289,6 +335,40 @@ mod tests {
         let plain = Trace::poisson_with_rate(mtbench(2, 0), 32, 2.0, 9);
         assert!(a.entries.iter().zip(&plain.entries)
             .all(|(x, y)| x.arrival_step == y.arrival_step));
+    }
+
+    #[test]
+    fn multiturn_prompts_are_prefix_chains() {
+        let t = Trace::multiturn(4, 3, 12, 7);
+        assert_eq!(t.entries.len(), 12);
+        // arrivals nondecreasing (due() contract)
+        assert!(t.entries.windows(2)
+            .all(|w| w[0].arrival_step <= w[1].arrival_step));
+        // conversation c's turn t arrives at t*48 + c*5 (c < 10, so the
+        // stagger offset uniquely identifies the conversation); within
+        // each, every prompt must be a strict string prefix of the next
+        for c in 0..4u64 {
+            let mut turns: Vec<&TraceEntry> = t.entries.iter()
+                .filter(|e| e.arrival_step >= c * 5
+                    && (e.arrival_step - c * 5) % 48 == 0)
+                .collect();
+            turns.sort_by_key(|e| e.arrival_step);
+            assert_eq!(turns.len(), 3);
+            for w in turns.windows(2) {
+                assert!(w[1].question.text.starts_with(&w[0].question.text));
+                assert!(w[1].question.text.len() > w[0].question.text.len());
+            }
+        }
+        // deterministic in seed
+        let a = Trace::multiturn(4, 3, 12, 7);
+        assert!(t.entries.iter().zip(&a.entries).all(|(x, y)| {
+            x.question.text == y.question.text
+                && x.arrival_step == y.arrival_step
+                && x.max_new == y.max_new
+        }));
+        let b = Trace::multiturn(4, 3, 12, 8);
+        assert!(t.entries.iter().zip(&b.entries)
+            .any(|(x, y)| x.question.text != y.question.text));
     }
 
     #[test]

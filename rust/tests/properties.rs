@@ -1,6 +1,7 @@
 //! Randomized property tests (testkit) over the coordinator's pure logic:
-//! CTC transform, lattice DP, token trees, JSON, tokenizer, kv-cache, and
-//! the SLO scheduling policy (admission order, aging, preemption).
+//! CTC transform, lattice DP, token trees, JSON, tokenizer, kv-cache (block
+//! pool + copy-on-write prefix index), and the SLO scheduling policy
+//! (admission order, aging, preemption).
 
 use std::cmp::Ordering;
 
@@ -734,6 +735,221 @@ fn prop_shared_pool_never_leaks_or_strands_capacity() {
         if pool.global_free_blocks() != total {
             return Err(format!(
                 "lease drop leaked: global {} of {total}",
+                pool.global_free_blocks()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_prefix_cow_never_leaks_or_strands() {
+    use ctcdraft::kvcache::{PoolLease, PrefixIndex, SeqCache, SharedBlockPool};
+    use std::sync::Arc;
+    // Model-based check of the copy-on-write prefix-sharing machinery: a
+    // KV-carrying radix index + shared pool + lease driven through random
+    // interleavings of admit-with-shared-prefix (lookup / set_shared /
+    // ensure / seed), publish (`intern_from_cache` + `share_published`),
+    // mid-block fork seeding, cancel/preempt/finish release, and
+    // unreferenced-cache eviction. Invariants: exact block accounting after
+    // every op (cluster free + lease-held + index-owned == total), seeded
+    // KV rows byte-identical to what the donor sequence published (COW
+    // reads are real reads, including the fork block's matched head),
+    // admission only fails when the cluster genuinely lacks blocks after
+    // reclaim, and a final release-everything + index drain + lease drop
+    // returns every block to the global free list.
+    const BP: usize = 4;
+    const LMAX: usize = 64;
+    // canonical KV row for (token, position) — any sequence that reaches
+    // position p writes the same row, so shared reads are checkable
+    fn row(t: i32, p: usize) -> f32 {
+        (t * 100 + p as i32) as f32
+    }
+    struct Slot {
+        ids: Vec<i32>,
+        node: usize,
+        published: bool,
+        cache: SeqCache,
+    }
+    Prop::new("prefix_cow").check(|rng| {
+        let max_slots = 1 + rng.below(4);
+        let total = 6 + rng.below(24); // blocks — tight enough to exhaust
+        let pool = Arc::new(SharedBlockPool::with_config(total * BP, BP, 1,
+                                                         2, total));
+        let mut lease = PoolLease::new(pool.clone(), 0, max_slots);
+        let mut index = PrefixIndex::new(BP, 1, 2);
+        // conversation stems: shared prefixes arise from common stems,
+        // mid-block forks from divergence of the random tails
+        let stems: Vec<Vec<i32>> = (0..3)
+            .map(|_| {
+                (0..2 + rng.below(20)).map(|_| rng.below(5) as i32).collect()
+            })
+            .collect();
+        let mut slots: Vec<Option<Slot>> =
+            (0..max_slots).map(|_| None).collect();
+        let mut ledger = vec![0usize; max_slots]; // lease-allocated model
+        let mut shared = vec![0usize; max_slots]; // shared-base model
+        let mut owned = 0usize; // index-owned model
+        for op in 0..250 {
+            match rng.below(10) {
+                // admit a request whose prompt shares a stem
+                0..=4 => {
+                    let Some(s) = slots.iter().position(|x| x.is_none())
+                    else {
+                        continue;
+                    };
+                    let mut ids = rng.choice(&stems).clone();
+                    let keep = (1 + rng.below(ids.len())).clamp(2, ids.len());
+                    ids.truncate(keep);
+                    for _ in 0..rng.below(9) {
+                        ids.push(rng.below(5) as i32);
+                    }
+                    let mut hit = index.lookup(&ids);
+                    let need = pool.blocks_for(ids.len());
+                    lease.set_shared(s, hit.blocks);
+                    let mut res = lease.ensure(s, ids.len());
+                    if res.is_err() {
+                        // engine reclaim path: evict unreferenced cached
+                        // prefixes, then retry the admission fresh. The
+                        // eviction may have dropped part of the matched
+                        // chain, so the lookup must re-run (the engine
+                        // reclaims in fill_slots BEFORE admit_req's
+                        // lookup, same ordering).
+                        let freed = index.evict_unreferenced(need);
+                        owned -= freed;
+                        pool.give_back(0, freed);
+                        hit = index.lookup(&ids);
+                        lease.set_shared(s, hit.blocks);
+                        res = lease.ensure(s, ids.len());
+                    }
+                    if res.is_err() {
+                        // failure is only legal when the cluster genuinely
+                        // lacks the blocks after reclaim (live refs pin the
+                        // rest) — otherwise capacity was stranded
+                        let held: usize = ledger.iter().sum();
+                        let free = total - held - owned;
+                        if need - hit.blocks <= free {
+                            return Err(format!(
+                                "op {op}: admission stranded — want {} \
+                                 free {free}", need - hit.blocks));
+                        }
+                        lease.set_shared(s, 0);
+                        continue;
+                    }
+                    ledger[s] = need - hit.blocks;
+                    shared[s] = hit.blocks;
+                    index.record_admit(&hit);
+                    index.acquire(hit.node);
+                    let mut cache = SeqCache::new(1, LMAX, 1, 2);
+                    if hit.positions > 0 {
+                        index.seed_cache(&hit, &mut cache);
+                    }
+                    // COW read check: every seeded position (full blocks
+                    // AND the fork head) matches the canonical rows
+                    for p in 0..hit.positions {
+                        let got = cache.k_data()[p * 2];
+                        if got != row(ids[p], p) {
+                            return Err(format!(
+                                "op {op}: seeded row {p} = {got}, expected \
+                                 {} (fork head at block {})",
+                                row(ids[p], p), hit.blocks));
+                        }
+                    }
+                    // instant prefill of the novel tail (the model checks
+                    // accounting, not compute timing)
+                    for p in hit.positions..ids.len() {
+                        let k = [row(ids[p], p), row(ids[p], p) + 0.25];
+                        let v = [row(ids[p], p) + 0.5, row(ids[p], p) + 0.75];
+                        cache
+                            .append_selected(&k, &v, 1, &[0])
+                            .map_err(|e| format!("op {op}: {e}"))?;
+                    }
+                    slots[s] = Some(Slot {
+                        ids,
+                        node: hit.node,
+                        published: false,
+                        cache,
+                    });
+                }
+                // publish: intern the prompt's full blocks into the index
+                5..=6 => {
+                    let s = rng.below(max_slots);
+                    let Some(st) = slots[s].as_mut() else {
+                        continue;
+                    };
+                    if st.published {
+                        continue;
+                    }
+                    let full = st.ids.len() / BP;
+                    if full > 0 {
+                        let (deepest, created) =
+                            index.intern_from_cache(&st.ids, Some(&st.cache));
+                        index.release(st.node);
+                        index.acquire(deepest);
+                        st.node = deepest;
+                        owned += created;
+                        lease.share_published(s, full, created);
+                        ledger[s] = pool.blocks_for(st.ids.len()) - full;
+                        shared[s] = full;
+                    }
+                    st.published = true;
+                }
+                // cancel / preempt / finish: identical release choreography
+                7..=8 => {
+                    let s = rng.below(max_slots);
+                    let Some(st) = slots[s].take() else {
+                        continue;
+                    };
+                    index.release(st.node);
+                    lease.release(s);
+                    ledger[s] = 0;
+                    shared[s] = 0;
+                }
+                // background pressure reclaim
+                _ => {
+                    let freed = index.evict_unreferenced(1 + rng.below(4));
+                    owned -= freed;
+                    pool.give_back(0, freed);
+                }
+            }
+            if index.owned_blocks() != owned {
+                return Err(format!(
+                    "op {op}: index owns {} blocks, model says {owned}",
+                    index.owned_blocks()));
+            }
+            let held: usize = ledger.iter().sum();
+            if pool.cluster_free_blocks() + held + owned != total {
+                return Err(format!(
+                    "op {op}: leak — free {} + held {held} + owned {owned} \
+                     != {total}", pool.cluster_free_blocks()));
+            }
+            for s in 0..max_slots {
+                if lease.allocated(s) != ledger[s]
+                    || lease.shared_blocks(s) != shared[s]
+                {
+                    return Err(format!(
+                        "op {op}: slot {s} ledger ({}, {}) != model \
+                         ({}, {})", lease.allocated(s),
+                        lease.shared_blocks(s), ledger[s], shared[s]));
+                }
+            }
+        }
+        // teardown mirrors worker exit: release every sequence, drain the
+        // index back to the pool, then drop the lease — every block home
+        for s in 0..max_slots {
+            if let Some(st) = slots[s].take() {
+                index.release(st.node);
+            }
+            lease.release(s);
+        }
+        let freed = index.drain();
+        pool.give_back(0, freed);
+        if index.owned_blocks() != 0 || index.live_nodes() != 0 {
+            return Err("drain left live nodes or owned blocks".into());
+        }
+        drop(lease);
+        if pool.global_free_blocks() != total {
+            return Err(format!(
+                "final drain leaked: global {} of {total}",
                 pool.global_free_blocks()));
         }
         Ok(())
