@@ -1,0 +1,14 @@
+use ctcdraft::kvcache::PrefixIndex;
+
+#[test]
+fn grow_then_lookup_terminates() {
+    let mut idx = PrefixIndex::counting(1);
+    // 40 distinct 1-token blocks -> 40 live nodes, crossing the 32-node
+    // grow threshold (buckets start at 64, grow when live*2 > 64)
+    for i in 0..40i32 {
+        idx.intern_from_cache(&[i, 1000 + i], None);
+    }
+    // a lookup that misses must terminate
+    let hit = idx.lookup(&[777, 778]);
+    assert_eq!(hit.blocks, 0);
+}
