@@ -11,8 +11,13 @@ cargo build --release
 # The full suite includes the SchedulerSim scenario suite
 # (rust/tests/scheduler_sim.rs: interleaved chunked prefill,
 # interactive-preempts-batch, deadline misses, head-blocking regression,
-# class-aware prefill ordering, adaptive-β replay) and the zero-allocation
-# hot-path gate (rust/tests/hotpath_alloc.rs).
+# class-aware prefill ordering, adaptive-β replay), the zero-allocation
+# hot-path gate (rust/tests/hotpath_alloc.rs), and the event-driven
+# frontend concurrency suite (rust/tests/server_integration.rs): under
+# CTCD_PROP_FAST=1 the C10k fan-in test runs as a 96-client smoke (500
+# clients in the full run), plus the slow-reader shed test and the
+# bounded-acceptor flood test — all against the artifact-free mock engine,
+# so they gate every CI run.
 CTCD_PROP_FAST=1 cargo test -q
 
 # Determinism audit: two replays of the same seeded trace must produce
@@ -108,3 +113,63 @@ assert ratio <= limit, (
 print(f"perf ratchet: OK (scratch/legacy mean ratio {ratio:.2f} <= {limit})")
 EOF
 echo "bench smoke: OK"
+
+# Shed-replay determinism: the seeded write-queue shed simulation must be
+# byte-identical across two invocations (the shed path — enqueue order,
+# stall schedule, shed decisions — carries no hidden nondeterminism), and
+# the scenario must actually shed at least one connection so the gate
+# exercises the condemn path rather than vacuously passing.
+ra="$(./target/release/ctcdraft shedreplay --seed 7 --conns 24 --cap 8 --rounds 64)"
+rb="$(./target/release/ctcdraft shedreplay --seed 7 --conns 24 --cap 8 --rounds 64)"
+if [ "$ra" != "$rb" ]; then
+  echo "FAIL: shed-replay is nondeterministic across identical seeded runs" >&2
+  diff <(printf '%s\n' "$ra") <(printf '%s\n' "$rb") >&2 || true
+  exit 1
+fi
+shed_count="$(printf '%s\n' "$ra" | sed -n 's/^total shed=\([0-9]*\).*/\1/p')"
+if [ -z "$shed_count" ] || [ "$shed_count" -eq 0 ]; then
+  echo "FAIL: shed-replay (seed 7, conns 24, cap 8) shed no connections — gate is vacuous" >&2
+  printf '%s\n' "$ra" >&2
+  exit 1
+fi
+echo "shed-replay determinism: OK ($shed_count sheds, byte-identical)"
+
+# Connection fan-in bench smoke: connbench spins up the mock-engine server
+# twice (4-client baseline, then the fan-in run) with identical slot counts
+# and emits BENCH_conn_fanin.json — the per-connection frontend overhead
+# artifact tracked across PRs.
+rm -f BENCH_conn_fanin.json
+./target/release/ctcdraft connbench --smoke >/dev/null
+test -s BENCH_conn_fanin.json || {
+  echo "FAIL: BENCH_conn_fanin.json missing or empty" >&2; exit 1;
+}
+python3 - <<'EOF'
+import json
+with open("BENCH_conn_fanin.json") as f:
+    doc = json.load(f)
+assert doc.get("bench") == "conn_fanin", doc.get("bench")
+results = doc["results"]
+names = {r["name"]: r for r in results}
+need = [n for n in names if n.startswith("conn_round(base")]
+assert need, f"missing baseline entry in {sorted(names)}"
+fan = [n for n in names if n.startswith("conn_round(fanin")]
+assert fan, f"missing fan-in entry in {sorted(names)}"
+assert "fanin_per_conn_overhead" in names, sorted(names)
+for r in results:
+    for key in ("name", "iters", "mean_s", "p50_s", "p95_s"):
+        assert key in r, f"missing {key} in {r}"
+
+# Per-connection overhead ceiling: the marginal cost one extra multiplexed
+# connection adds to a scheduler round. The driver's per-conn work is a
+# readiness probe + queue pump (microseconds); 100µs/conn is ~50x the
+# expected cost, generous enough for a loaded single-core CI box while
+# still catching O(n) blow-ups (a thread-per-conn or quadratic-scan
+# regression costs milliseconds per conn at smoke scale).
+overhead = names["fanin_per_conn_overhead"]["mean_s"]
+limit = 100e-6
+assert overhead <= limit, (
+    f"PER-CONN OVERHEAD FAIL: {overhead:.3e}s/conn exceeds {limit:.0e}s "
+    f"ceiling — frontend no longer scales with connection count")
+print(f"conn fan-in gate: OK (per-conn overhead {overhead*1e6:.2f}us <= {limit*1e6:.0f}us)")
+EOF
+echo "conn fan-in bench smoke: OK"

@@ -326,6 +326,66 @@ impl Default for EngineConfig {
     }
 }
 
+/// Event-driven server frontend knobs (`server.rs` connection drivers).
+#[derive(Debug, Clone)]
+pub struct FrontendConfig {
+    /// Connection-driver threads; 0 = one per available core.
+    pub io_threads: usize,
+    /// Bounded per-connection write queue, in frames. A connection whose
+    /// queue would exceed this (its reader stalled while frames kept
+    /// arriving) is SHED: closed, cancelled, counted in `conn.shed`.
+    pub conn_write_cap: usize,
+    /// Open-connection ceiling across all drivers; accepts past it are
+    /// rejected with a terminal `busy` frame and closed.
+    pub max_conns: usize,
+    /// Graceful-drain budget for `Server::stop()`: drivers keep relaying
+    /// in-flight frames and flushing write queues this long, then force-
+    /// close whatever is left.
+    pub drain_deadline_ms: u64,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            io_threads: 0,
+            conn_write_cap: 256,
+            max_conns: 4096,
+            drain_deadline_ms: 5000,
+        }
+    }
+}
+
+/// Artifact-free serving: workers run a deterministic mock engine (token
+/// streams are a pure function of the prompt, via `testkit::mock_tokens`)
+/// instead of loading a Runtime. This is what the C10k/concurrency suite
+/// and `ctcdraft connbench` drive: transport behavior at scale, with real
+/// shared-pool accounting, and no artifacts directory required.
+#[derive(Debug, Clone)]
+pub struct MockServeConfig {
+    /// batch slots per mock worker
+    pub slots: usize,
+    /// admit-queue bound (0 = unbounded)
+    pub queue_cap: usize,
+    /// shared KV pool positions, cluster-wide (granularity 1)
+    pub pool_positions: usize,
+    /// accepted tokens per sequence per round (a fixed mock β)
+    pub beta: usize,
+    /// per-round pacing sleep (µs); 0 = step as fast as possible
+    pub step_delay_us: u64,
+}
+
+impl Default for MockServeConfig {
+    fn default() -> Self {
+        MockServeConfig {
+            slots: 64,
+            queue_cap: 0,
+            pool_positions: 1 << 16,
+            beta: 4,
+            step_delay_us: 500,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

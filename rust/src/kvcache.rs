@@ -353,15 +353,33 @@ impl SharedBlockPool {
         }
         if got < want {
             // lease stealing: the cluster may still hold room parked in
-            // other workers' shards
-            for (s, shard) in self.shards.iter().enumerate() {
-                if s == worker {
-                    continue;
+            // other workers' shards. Victims are picked most-idle-first
+            // (largest shard reserve), not in index order: draining the
+            // fattest reserve usually covers the remainder in ONE steal,
+            // where an index-order scan shaves a few blocks off every
+            // low-index neighbor (one contended CAS + one `steals` count
+            // per shard touched). The scan is a racy snapshot — shards
+            // move underneath it — so each steal re-scans, and the pass
+            // budget bounds the loop when rescans keep losing races.
+            let mut passes = self.shards.len() * 2;
+            while got < want && passes > 0 {
+                passes -= 1;
+                let mut victim = usize::MAX;
+                let mut best = 0usize;
+                for (s, shard) in self.shards.iter().enumerate() {
+                    if s == worker {
+                        continue;
+                    }
+                    let free = shard.load(Ordering::Acquire);
+                    if free > best {
+                        best = free;
+                        victim = s;
+                    }
                 }
-                if got >= want {
-                    break;
+                if victim == usize::MAX {
+                    break; // every other shard is empty
                 }
-                let stolen = take_upto(shard, want - got);
+                let stolen = take_upto(&self.shards[victim], want - got);
                 if stolen > 0 {
                     self.steals.fetch_add(1, Ordering::Relaxed);
                     self.stolen_blocks.fetch_add(stolen as u64, Ordering::Relaxed);
@@ -1328,6 +1346,38 @@ mod tests {
         assert!(a.ensure(1, 5).is_err());
         assert!(pool.exhaustions() >= 1);
         assert_eq!(pool.cluster_in_use_blocks(), 6, "failed take leaked");
+    }
+
+    #[test]
+    fn steal_picks_most_idle_shard_first() {
+        // Skewed 4-shard pool: shards 1 and 2 hold a couple of blocks
+        // each, shard 3 holds the bulk. An index-order scan would shave
+        // shard 1, then shard 2, then shard 3 (three steal events) to
+        // cover an 8-block remainder; most-idle-first drains shard 3 in
+        // ONE steal and leaves the lean shards untouched.
+        let pool = Arc::new(SharedBlockPool::with_config(50, 1, 4, 1, 100));
+        assert!(pool.try_take(0, 50)); // drain the global free list
+        pool.give_back(1, 2);
+        pool.give_back(2, 2);
+        pool.give_back(3, 40);
+        assert_eq!(pool.global_free_blocks(), 0);
+        let steals_before = pool.steals();
+        assert!(pool.try_take(0, 8));
+        assert_eq!(pool.steals() - steals_before, 1,
+                   "most-idle-first must cover the want from one victim");
+        assert_eq!(pool.shard_free(3), 32, "bulk shard is the victim");
+        assert_eq!(pool.shard_free(1), 2, "lean shard untouched");
+        assert_eq!(pool.shard_free(2), 2, "lean shard untouched");
+        // remainder larger than any single shard: victims drain in
+        // most-idle order until covered, never failing while the cluster
+        // has room
+        let steals_before = pool.steals();
+        assert!(pool.try_take(0, 34));
+        assert!(pool.steals() - steals_before >= 2);
+        assert_eq!(pool.cluster_free_blocks(), 2);
+        // cluster genuinely out -> clean failure
+        assert!(!pool.try_take(0, 3));
+        assert_eq!(pool.cluster_free_blocks(), 2, "failed take leaked");
     }
 
     #[test]

@@ -11,7 +11,8 @@
 use anyhow::{bail, Result};
 
 use ctcdraft::adapt::BetaPolicy;
-use ctcdraft::config::{EngineConfig, Method};
+use ctcdraft::bench;
+use ctcdraft::config::{EngineConfig, FrontendConfig, Method, MockServeConfig};
 use ctcdraft::engine::Engine;
 use ctcdraft::metrics::RunSummary;
 use ctcdraft::runtime::Runtime;
@@ -36,6 +37,8 @@ fn main() {
         "client" => cmd_client(rest),
         "warmup" => cmd_warmup(rest),
         "sim" => cmd_sim(rest),
+        "connbench" => cmd_connbench(rest),
+        "shedreplay" => cmd_shedreplay(rest),
         "--help" | "-h" | "help" => {
             println!("{}", usage());
             Ok(())
@@ -61,7 +64,11 @@ fn usage() -> String {
      \x20 client --prompt <text>     query a running server\n\
      \x20 warmup                     precompile all graphs for a model\n\
      \x20 sim                        artifact-free scheduler-sim replay\n\
-     \x20                            (prints the canonical event log)\n\n\
+     \x20                            (prints the canonical event log)\n\
+     \x20 connbench                  connection fan-in overhead bench\n\
+     \x20                            (mock serving mode; BENCH_conn_fanin)\n\
+     \x20 shedreplay                 deterministic write-queue shed replay\n\
+     \x20                            (prints the canonical shed log)\n\n\
      run `ctcdraft <command> --help` for options"
         .to_string()
 }
@@ -230,13 +237,47 @@ fn cmd_eval(argv: &[String]) -> Result<()> {
 fn cmd_serve(argv: &[String]) -> Result<()> {
     let cli = engine_opts(Cli::new("ctcdraft serve", "start the TCP server"))
         .opt("addr", "listen address", Some("127.0.0.1:7700"))
-        .opt("workers", "engine worker threads", Some("1"));
+        .opt("workers", "engine worker threads", Some("1"))
+        .opt("io-threads",
+             "connection driver threads (0 = one per core); each multiplexes \
+              many non-blocking connections", Some("0"))
+        .opt("conn-write-cap",
+             "bounded per-connection write queue (frames); a client that \
+              stops reading past this is shed (connection closed, request \
+              cancelled)", Some("256"))
+        .opt("max-conns",
+             "open-connection ceiling; accepts past it get a terminal busy \
+              frame instead of a thread or a driver slot", Some("4096"))
+        .opt("drain-deadline-ms",
+             "graceful-stop bound on flushing connection write queues",
+             Some("5000"))
+        .flag("mock",
+              "serve the deterministic mock engine (no artifacts needed; \
+               token streams are a pure function of the prompt — the \
+               concurrency-test serving mode)")
+        .opt("mock-slots", "mock mode: batch slots per worker", Some("64"))
+        .opt("mock-step-delay-us", "mock mode: round pacing (µs)",
+             Some("500"));
     let a = parse_args(cli, argv)?;
+    let frontend = FrontendConfig {
+        io_threads: a.usize("io-threads", 0),
+        conn_write_cap: a.usize("conn-write-cap", 256),
+        max_conns: a.usize("max-conns", 4096),
+        drain_deadline_ms: a.u64("drain-deadline-ms", 5000),
+    };
+    let mock = a.flag("mock").then(|| MockServeConfig {
+        slots: a.usize("mock-slots", 64),
+        queue_cap: a.usize("queue-cap", 0),
+        step_delay_us: a.u64("mock-step-delay-us", 500),
+        ..MockServeConfig::default()
+    });
     let cfg = ServerConfig {
         addr: a.get_or("addr", "127.0.0.1:7700").to_string(),
         workers: a.usize("workers", 1),
         artifacts: artifacts_dir(&a),
         engine: build_engine_cfg(&a)?,
+        frontend,
+        mock,
     };
     let server = Server::start(cfg)?;
     println!("listening on {} — ctrl-c to stop", server.local_addr);
@@ -415,6 +456,125 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
             report.prefix_blocks_saved, report.prefix_forks
         );
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- connbench
+/// One measured round: a mock-mode server, `n` concurrent streaming
+/// clients, then the worker's per-round latency histogram out of `stats`.
+/// Returns (mean_s, p50_s, p95_s, rounds).
+fn fanin_round(n: usize, max_new: usize, io_threads: usize)
+               -> Result<(f64, f64, f64, usize)> {
+    let server = Server::start(ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 1,
+        artifacts: default_artifacts_dir(),
+        engine: EngineConfig::default(),
+        frontend: FrontendConfig {
+            io_threads,
+            conn_write_cap: 1024,
+            max_conns: n + 16,
+            ..FrontendConfig::default()
+        },
+        // step pacing off: rounds measure pure scheduling + fan-out work
+        mock: Some(MockServeConfig { step_delay_us: 0,
+                                     ..MockServeConfig::default() }),
+    })?;
+    let addr = server.local_addr.to_string();
+    let mut joins = Vec::new();
+    for i in 0..n {
+        let addr = addr.clone();
+        joins.push(std::thread::spawn(move || -> Result<()> {
+            let mut c = Client::connect(&addr)?;
+            let prompt = format!("connbench client {i} prompt payload");
+            let out = c.generate_stream(i as i64, &prompt, max_new, true,
+                                        |_| {})?;
+            match out {
+                ctcdraft::server::GenerateOutcome::Done(_) => Ok(()),
+                other => bail!("client {i}: unexpected outcome {other:?}"),
+            }
+        }));
+    }
+    for j in joins {
+        j.join().expect("client thread")?;
+    }
+    let stats = Client::connect(&addr)?.stats_detail()?;
+    server.stop();
+    let w0 = stats
+        .get("workers")
+        .as_arr()
+        .and_then(|ws| ws.first().cloned())
+        .ok_or_else(|| anyhow::anyhow!("stats missing workers[0]"))?;
+    let mean = w0.get("round_mean_us").as_f64().unwrap_or(0.0) * 1e-6;
+    let p50 = w0.get("round_p50_us").as_f64().unwrap_or(0.0) * 1e-6;
+    let p95 = w0.get("round_p95_us").as_f64().unwrap_or(0.0) * 1e-6;
+    let rounds = w0.get("steps").as_usize().unwrap_or(0);
+    Ok((mean, p50, p95, rounds))
+}
+
+/// Measure scheduler-round latency under a small baseline fan-in and a
+/// large one, and emit `BENCH_conn_fanin.json` with the per-connection
+/// overhead — the check.sh frontend gate: hundreds of multiplexed
+/// connections must not put more than a documented ceiling of extra time
+/// per connection on a worker's round.
+fn cmd_connbench(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("ctcdraft connbench",
+                       "connection fan-in overhead bench (mock mode)")
+        .opt("clients", "fan-in client count", Some("256"))
+        .opt("baseline", "baseline client count", Some("4"))
+        .opt("max-new", "tokens per request", Some("16"))
+        .opt("io-threads", "driver threads (0 = one per core)", Some("0"))
+        .flag("smoke", "reduced fan-in for the CI budget");
+    let a = parse_args(cli, argv)?;
+    let smoke = a.flag("smoke") || bench::smoke_mode();
+    let clients = if smoke { 64 } else { a.usize("clients", 256) };
+    let baseline = a.usize("baseline", 4).max(1);
+    let max_new = a.usize("max-new", 16);
+    let io_threads = a.usize("io-threads", 0);
+
+    let (bm, bp50, bp95, brounds) = fanin_round(baseline, max_new, io_threads)?;
+    let (fm, fp50, fp95, frounds) = fanin_round(clients, max_new, io_threads)?;
+    let overhead = (fm - bm).max(0.0) / clients as f64;
+    let mk = |name: &str, mean: f64, p50: f64, p95: f64, iters: usize| {
+        bench::BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: mean,
+            p50_s: p50,
+            p95_s: p95,
+            total_s: mean * iters as f64,
+        }
+    };
+    let results = vec![
+        mk(&format!("conn_round(base x{baseline})"), bm, bp50, bp95, brounds),
+        mk(&format!("conn_round(fanin x{clients})"), fm, fp50, fp95, frounds),
+        mk("fanin_per_conn_overhead", overhead, overhead, overhead, 1),
+    ];
+    bench::print_results("connection fan-in (mock serving mode)", &results);
+    bench::write_json("conn_fanin", &results)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------- shedreplay
+/// Seeded, socket-free replay of the bounded-write-queue shed state
+/// machine (`server::conn::shed_replay`): producers push frames, a mix of
+/// streaming / slow-reader / cancel-storm consumers drain them, and the
+/// canonical event log goes to stdout. Same flags MUST print the same
+/// bytes — check.sh diffs a double run as the shed determinism gate.
+fn cmd_shedreplay(argv: &[String]) -> Result<()> {
+    let cli = Cli::new("ctcdraft shedreplay",
+                       "deterministic write-queue shed replay")
+        .opt("seed", "scenario seed", Some("7"))
+        .opt("conns", "simulated connections", Some("24"))
+        .opt("cap", "write-queue cap (frames)", Some("8"))
+        .opt("rounds", "producer rounds", Some("64"));
+    let a = parse_args(cli, argv)?;
+    print!("{}", ctcdraft::server::conn::shed_replay(
+        a.u64("seed", 7),
+        a.usize("conns", 24),
+        a.usize("cap", 8),
+        a.usize("rounds", 64),
+    ));
     Ok(())
 }
 

@@ -5,6 +5,7 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use crate::sched::Priority;
 
@@ -190,6 +191,15 @@ impl Metrics {
         self.gauges.insert(name.to_string(), value);
     }
 
+    /// Raise a gauge to `value` if it is higher than the current reading —
+    /// high-water marks (e.g. `conn.write_q_hwm`) without a separate type.
+    pub fn set_gauge_max(&mut self, name: &str, value: f64) {
+        let e = self.gauges.entry(name.to_string()).or_insert(f64::MIN);
+        if value > *e {
+            *e = value;
+        }
+    }
+
     pub fn counter(&self, name: &str) -> u64 {
         self.counters.get(name).copied().unwrap_or(0)
     }
@@ -222,6 +232,95 @@ impl Metrics {
             "breakdown: base={bm:.1}% draft={dr:.1}% transform={tr:.1}% other={ot:.1}%\n"
         ));
         s
+    }
+}
+
+// ------------------------------------------------------ frontend gauges
+
+/// Connection-frontend gauges shared (lock-free) between the acceptor and
+/// every connection-driver thread of the event-driven server frontend.
+/// `Metrics` itself is single-owner (each engine worker holds its own);
+/// these counters cross threads, so they live in atomics and export into a
+/// `Metrics` registry — or the `stats` op — as the `conn.*` gauge family:
+/// `conn.open`, `conn.accepted`, `conn.shed`, `conn.rejected_max_conns`,
+/// `conn.write_q_hwm`.
+#[derive(Debug, Default)]
+pub struct ConnGauges {
+    /// connections currently registered with a driver
+    open: AtomicU64,
+    /// connections accepted since start (monotonic)
+    accepted: AtomicU64,
+    /// slow/stalled readers shed (write queue overflowed its cap)
+    shed: AtomicU64,
+    /// accepts rejected with `busy` because `--max-conns` was reached
+    rejected_max_conns: AtomicU64,
+    /// high-water mark of any connection's bounded write-queue depth
+    write_q_hwm: AtomicU64,
+}
+
+impl ConnGauges {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn on_accept(&self) {
+        self.accepted.fetch_add(1, Ordering::Relaxed);
+        self.open.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_close(&self) {
+        self.open.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    pub fn on_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn on_reject(&self) {
+        self.rejected_max_conns.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a write-queue depth observation (keeps the max).
+    pub fn note_write_q(&self, depth: usize) {
+        self.write_q_hwm.fetch_max(depth as u64, Ordering::Relaxed);
+    }
+
+    pub fn open(&self) -> u64 {
+        self.open.load(Ordering::Relaxed)
+    }
+    pub fn accepted(&self) -> u64 {
+        self.accepted.load(Ordering::Relaxed)
+    }
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+    pub fn rejected_max_conns(&self) -> u64 {
+        self.rejected_max_conns.load(Ordering::Relaxed)
+    }
+    pub fn write_q_hwm(&self) -> u64 {
+        self.write_q_hwm.load(Ordering::Relaxed)
+    }
+
+    /// The canonical `conn.*` gauge family, for the `stats` op and for
+    /// exporting into a `Metrics` registry.
+    pub fn snapshot(&self) -> Vec<(&'static str, f64)> {
+        vec![
+            ("conn.open", self.open() as f64),
+            ("conn.accepted", self.accepted() as f64),
+            ("conn.shed", self.shed() as f64),
+            ("conn.rejected_max_conns", self.rejected_max_conns() as f64),
+            ("conn.write_q_hwm", self.write_q_hwm() as f64),
+        ]
+    }
+
+    pub fn export_into(&self, m: &mut Metrics) {
+        for (name, v) in self.snapshot() {
+            if name == "conn.write_q_hwm" {
+                m.set_gauge_max(name, v);
+            } else {
+                m.set_gauge(name, v);
+            }
+        }
     }
 }
 
@@ -445,6 +544,31 @@ impl RunSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn conn_gauges_track_lifecycle_and_hwm() {
+        let g = ConnGauges::new();
+        g.on_accept();
+        g.on_accept();
+        g.on_close();
+        g.on_shed();
+        g.on_reject();
+        g.note_write_q(3);
+        g.note_write_q(9);
+        g.note_write_q(5);
+        assert_eq!(g.open(), 1);
+        assert_eq!(g.accepted(), 2);
+        assert_eq!(g.shed(), 1);
+        assert_eq!(g.rejected_max_conns(), 1);
+        assert_eq!(g.write_q_hwm(), 9, "hwm keeps the max observation");
+        let mut m = Metrics::default();
+        g.export_into(&mut m);
+        assert_eq!(m.gauge("conn.open"), 1.0);
+        assert_eq!(m.gauge("conn.write_q_hwm"), 9.0);
+        // hwm gauge never regresses even if a later snapshot reads lower
+        m.set_gauge_max("conn.write_q_hwm", 4.0);
+        assert_eq!(m.gauge("conn.write_q_hwm"), 9.0);
+    }
 
     #[test]
     fn breakdown_percentages_sum_to_100() {

@@ -1,115 +1,121 @@
-//! Threaded serving stack: TCP JSON-lines protocol, a headroom/class-aware
-//! router over a process-wide shared KV block pool, and engine worker
+//! Event-driven serving stack: TCP JSON-lines protocol, a headroom/class-
+//! aware router over a process-wide shared KV block pool, and engine worker
 //! threads running an admission-controlled continuous-batching scheduler
 //! (streaming, cancellation, bounded-queue backpressure).
 //!
+//! # Threading / IO architecture (PR 7)
+//!
 //! tokio is unavailable in the build image, and the `xla` wrapper types are
-//! not `Send` — so the architecture is: each worker thread *constructs its
-//! own* `Runtime` + `Engine` and owns them for its lifetime; requests and
-//! responses cross threads as plain strings over mpsc channels (the
-//! vllm-router shape, scaled to threads).
+//! not `Send` — so the stack is std-only threads, in three tiers:
 //!
-//! KV capacity is ONE `kvcache::SharedBlockPool` for the whole process:
-//! each worker engine holds a `PoolLease` (shard + global refill + lease
-//! stealing), so a worker preempts only when the *cluster* is out of
-//! blocks — capacity is never stranded on an idle neighbor, and the pool
-//! is sized `kv_pool_positions` total (0 = lmax × slots × workers).
-//! Placement (`pick_worker`) is no longer least-inflight: each generate is
-//! scored per worker by `sched::place` over (no-steal pool headroom,
-//! interactive/batch in-flight mix, queued depth), with the request's
-//! class and deadline slack as inputs. Decisions are counted per worker
-//! (`placements` in stats) and the per-shard pool gauges are exported
-//! through the `stats` op and `metrics.rs` (`pool.*` gauges).
+//! - **one acceptor**: non-blocking `accept`, round-robins each socket to a
+//!   connection driver. It never spawns per-connection threads; past
+//!   `--max-conns` open connections it answers a terminal `busy` frame and
+//!   closes (`conn.rejected_max_conns`). Thread count is therefore fixed:
+//!   `1 + io_threads + workers`, independent of client count.
+//! - **N connection drivers** (`--io-threads`, default one per core): each
+//!   multiplexes many *non-blocking* sockets through a small poll loop —
+//!   read sweep into a driver-shared scratch buffer, per-connection line
+//!   assembly (`conn::LineAssembler`), op dispatch, and a write sweep. All
+//!   outbound frames go through a **bounded per-connection write queue**
+//!   (`conn::WriteQueue`, `--conn-write-cap` frames): a stalled reader's
+//!   queue overflows and the connection is SHED — closed, its in-flight
+//!   request cancelled on the worker (slot + KV blocks freed via the
+//!   existing token-cancel path), `conn.shed` incremented. An enqueue never
+//!   blocks, so a slow client can never block a driver — and since workers
+//!   hand frames over mpsc channels (they never touch sockets), it can
+//!   never block a scheduler round either.
+//! - **W engine workers**: unchanged; each constructs and owns its
+//!   `Runtime` + `Engine` (leased on the shared `kvcache::SharedBlockPool`)
+//!   and exchanges plain strings with the drivers over mpsc channels.
 //!
-//! Cache affinity (PR 6): each worker engine keeps a copy-on-write prefix
-//! index (`kvcache::PrefixIndex`) so a prompt sharing a prefix with a
-//! finished sequence skips re-prefilling the shared blocks. The router
-//! cannot see worker token ids (it has no tokenizer), so it mirrors
-//! placements in a per-worker *counting* index over a cheap pseudo-
-//! tokenization of the prompt and feeds the longest-match as
-//! `WorkerSnapshot::prefix_blocks` — `sched::place` then prefers the
-//! worker already holding the prefix over a cold neighbor. The mirror is
-//! a heuristic (admission re-validates against real tokens); it is capped
-//! and dropped wholesale when it grows past `ROUTER_PREFIX_NODE_CAP`.
+//! Connection gauges (`conn.open`, `conn.accepted`, `conn.shed`,
+//! `conn.rejected_max_conns`, `conn.write_q_hwm` — `metrics::ConnGauges`)
+//! are exported through the `stats` op and `Metrics::set_gauge[_max]`.
 //!
-//! Wire protocol (one JSON object per line):
+//! Placement (`pick_worker`) scores each generate per worker by
+//! `sched::place` over (no-steal pool headroom, interactive/batch in-flight
+//! mix, queued depth, cached-prefix affinity via a router-side counting
+//! `PrefixIndex` mirror, capped at `ROUTER_PREFIX_NODE_CAP`).
+//!
+//! # Mock mode
+//!
+//! `ServerConfig::mock` swaps each worker's engine for a deterministic
+//! in-process mock (`config::MockServeConfig`): token streams are a pure
+//! function of the prompt, so one client's frames are byte-identical
+//! across runs regardless of co-tenants. The C10k / slow-reader / shed
+//! concurrency suite and `ctcdraft connbench` run entirely in this mode —
+//! real transport, real pool accounting, no artifacts needed.
+//!
+//! # Wire protocol (one JSON object per line)
+//!
 //!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true,
 //!      "class":"interactive"|"batch","deadline_steps":N}
 //!     `class` (default "interactive") and `deadline_steps` (relative, in
 //!     scheduler steps; default = the class's configured deadline) drive
-//!     SLO-aware admission: interactive requests and tight deadlines are
-//!     admitted first and may preempt strictly less urgent batch work.
-//!     Reply is a frame sequence on the same connection, terminated by one
-//!     terminal frame:
+//!     SLO-aware admission. Reply is a frame sequence on the same
+//!     connection, ended by ONE terminal frame:
 //!     ← {"type":"queued","id":7,"pos":n,"class":"...","est_start":s}
-//!        (admit-queue position under the SLO policy order, plus the
-//!        deadline-aware hint: estimated absolute scheduler step at which
-//!        the request reaches a slot, from the observed admission rate)
 //!     ← {"type":"tok","id":7,"text":"...","n":k}  (stream:true only; one
-//!        frame per scheduler round, `n` accepted tokens; text comes from a
-//!        stateful detokenizer, so UTF-8 split across rounds never yields
-//!        U+FFFD artifacts and the concatenated `tok` text equals the
+//!        frame per scheduler round; concatenated `tok` text equals the
 //!        `done` text)
 //!     ← {"type":"done","id":7,"text":"...","tokens":n,"steps":m,
 //!        "beta":x,"ms":t}                      (terminal)
-//!     ← {"type":"busy","id":7,"retry_after_steps":s}  (terminal; admit
-//!        queue at its cap — backpressure. `retry_after_steps` estimates
-//!        scheduler steps until a seat frees; absent when the server is
-//!        draining/shutting down rather than momentarily full)
-//!     ← {"type":"cancelled","id":7}            (terminal; cancelled from
-//!        another connection)
-//!     ← {"type":"error", "message":"..."}      (terminal)
+//!     ← {"type":"busy","id":7,"retry_after_steps":s}  (terminal;
+//!        backpressure — admit queue at cap, or draining when the hint is
+//!        absent)
+//!     ← {"type":"cancelled","id":7}            (terminal)
+//!     ← {"type":"error","message":"..."}       (terminal)
+//!     ← *shed-close* (no frame): the connection's bounded write queue
+//!        overflowed — the client stopped reading mid-stream — so the
+//!        server closes the socket outright and cancels the request. A
+//!        terminal frame is deliberately NOT queued: the reader is gone,
+//!        and the queue is already full. Observable as `conn.shed`.
 //!   → {"op":"cancel","id":7}
-//!     ← {"type":"cancel_result","id":7,"ok":true}  (ok=false: id unknown
-//!        or already finished)
+//!     ← {"type":"cancel_result","id":7,"ok":true}
 //!   → {"op":"ping"}            ← {"type":"pong"}
 //!   → {"op":"stats"}           ← {"type":"stats","inflight":[...],
-//!        "placements":[...],   (requests routed per worker, router-side)
+//!        "placements":[...],"io_threads":N,
+//!        "conn":{"open":..,"accepted":..,"shed":..,
+//!                "rejected_max_conns":..,"write_q_hwm":..},
 //!        "pool":{"total_blocks":..,"free_blocks":..,"global_free":..,
 //!                "shards":[...],"lease_refills":..,"lease_steals":..,
 //!                "stolen_blocks":..,"exhaustions":..},
-//!        "workers":[{"active":..,"queued":..,"pool_utilization":..,
-//!                    "shard_free_blocks":..,"headroom_blocks":..,
-//!                    "lease_blocks":..,
-//!                    "prefix_hits":..,"prefix_misses":..,
-//!                    "prefix_blocks_saved":..,"prefix_forks":..,
-//!                    "prefix_owned_blocks":..,
-//!                    "completed":..,"cancelled":..,"evicted":..,
-//!                    "rejected_busy":..,"deadline_missed":..,
-//!                    "prefill_interleaved_rounds":..,"steps":..}, ...]}
-//!     `pool` is the shared KV block pool: cluster totals, the unleased
-//!     global free list, and each worker's shard reserve; `shard_free_
-//!     blocks`/`headroom_blocks`/`lease_blocks` give the same view from
-//!     inside each worker's lease. `prefix_hits`/`prefix_misses` count
-//!     admissions that did / did not map a cached prompt prefix,
-//!     `prefix_blocks_saved` the KV blocks served from the index instead
-//!     of re-prefilled, `prefix_forks` mid-block copy-on-write splits, and
-//!     `prefix_owned_blocks` blocks currently parked in the worker's index
-//!     (these also export as `pool.prefix.*` gauges via `metrics.rs`).
+//!        "workers":[{..per-worker scheduler/prefix/pool detail..}, ...]}
+//!     (mock-mode worker entries carry `"mock":true` plus per-round
+//!     latency quantiles `round_mean_us`/`round_p50_us`/`round_p95_us` —
+//!     the C10k gate's signal that fan-in leaves rounds unaffected.)
 //!
 //! Shutdown drains gracefully: in-flight and queued requests finish (new
-//! ones are rejected `busy`), then workers exit.
+//! ones are rejected `busy`), drivers keep relaying frames and flushing
+//! write queues until quiescent or `--drain-deadline-ms` expires, then
+//! everything joins.
 //!
 //! Disconnect policy: a client that closes (or half-closes) its socket
 //! mid-request is treated as gone — its request is cancelled and the slot
 //! and KV blocks are freed. Keep the connection fully open until the
 //! terminal frame arrives.
 
-use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+pub mod conn;
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{EngineConfig, Manifest};
-use crate::engine::{Engine, GenOutput, Submission};
+use conn::{LineAssembler, Push, WriteQueue};
+
+use crate::config::{EngineConfig, FrontendConfig, Manifest, MockServeConfig};
+use crate::engine::{Engine, GenOutput, GenStats, Submission};
 use crate::kvcache::{PoolLease, PrefixIndex, SharedBlockPool};
+use crate::metrics::{ConnGauges, Histogram};
 use crate::runtime::Runtime;
 use crate::sched::{self, Priority, WorkerSnapshot};
 use crate::testkit::mock_tokens;
@@ -121,6 +127,11 @@ pub struct ServerConfig {
     pub workers: usize,
     pub artifacts: PathBuf,
     pub engine: EngineConfig,
+    /// Event-driven frontend knobs (driver count, write caps, conn ceiling).
+    pub frontend: FrontendConfig,
+    /// When set, workers run the deterministic mock engine instead of
+    /// loading artifacts — the concurrency suite's serving mode.
+    pub mock: Option<MockServeConfig>,
 }
 
 /// Server-unique request token (client ids are caller-chosen and may
@@ -144,7 +155,7 @@ enum WorkerMsg {
     Job(Job),
     /// Explicit client cancel: kills every request with this client id.
     Cancel { client_id: i64, ack: Sender<bool> },
-    /// Disconnect cleanup: kills exactly the request with this token.
+    /// Disconnect/shed cleanup: kills exactly the request with this token.
     CancelToken { token: u64, ack: Sender<bool> },
     Stats { resp: Sender<String> },
 }
@@ -166,8 +177,9 @@ struct WorkerHandle {
 
 /// Router-side view of one worker: its control channel plus the atomics
 /// the placement policy reads. `inflight`/per-class counters are tracked
-/// by the router (incremented at dispatch, decremented when the terminal
-/// frame is relayed); `queued_depth` is published by the worker loop.
+/// by the drivers (incremented at dispatch, decremented when the terminal
+/// frame is relayed or the conn is shed); `queued_depth` is published by
+/// the worker loop.
 #[derive(Clone)]
 struct Route {
     tx: Sender<WorkerMsg>,
@@ -191,40 +203,63 @@ struct Route {
 /// restart only costs a few non-affine placements).
 const ROUTER_PREFIX_NODE_CAP: usize = 65_536;
 
+/// Everything a connection driver needs, shared across drivers + acceptor.
+struct Frontend {
+    routes: Vec<Route>,
+    pool: Arc<SharedBlockPool>,
+    queue_cap: usize,
+    io_threads: usize,
+    gauges: Arc<ConnGauges>,
+}
+
 pub struct Server {
     pub local_addr: std::net::SocketAddr,
     shutdown: Arc<AtomicBool>,
     acceptor: Option<JoinHandle<()>>,
+    drivers: Vec<JoinHandle<()>>,
     workers: Vec<WorkerHandle>,
     pool: Arc<SharedBlockPool>,
+    gauges: Arc<ConnGauges>,
 }
 
 impl Server {
-    /// Bind, spawn workers + acceptor, return a handle. `addr` may use port
-    /// 0 to pick a free port (see `local_addr`).
+    /// Bind, spawn workers + drivers + acceptor, return a handle. `addr`
+    /// may use port 0 to pick a free port (see `local_addr`).
     ///
     /// Builds the ONE `SharedBlockPool` every worker leases from. Sizing
     /// comes from the manifest (read here, before any worker thread owns a
     /// runtime): `kv_pool_positions` cluster-wide when set, otherwise
-    /// `lmax × max_slots × workers` (no worker can ever exhaust it).
+    /// `lmax × max_slots × workers`. Mock mode skips the manifest and uses
+    /// `MockServeConfig::pool_positions` with 1-position blocks.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         listener.set_nonblocking(true)?;
         let local_addr = listener.local_addr()?;
         let shutdown = Arc::new(AtomicBool::new(false));
+        let gauges = Arc::new(ConnGauges::new());
 
         let n_workers = cfg.workers.max(1);
-        let manifest = Manifest::load(&cfg.artifacts)
-            .with_context(|| "loading manifest for pool sizing")?;
-        let max_slots =
-            *manifest.constants.batch_sizes.iter().max().unwrap_or(&1);
-        let pool_positions = if cfg.engine.kv_pool_positions > 0 {
-            cfg.engine.kv_pool_positions
-        } else {
-            manifest.constants.lmax * max_slots * n_workers
+        let (pool, max_slots, queue_cap) = match &cfg.mock {
+            Some(m) => {
+                let pool = Arc::new(SharedBlockPool::with_config(
+                    m.pool_positions, 1, n_workers, 0, 0));
+                (pool, m.slots.max(1), m.queue_cap)
+            }
+            None => {
+                let manifest = Manifest::load(&cfg.artifacts)
+                    .with_context(|| "loading manifest for pool sizing")?;
+                let max_slots =
+                    *manifest.constants.batch_sizes.iter().max().unwrap_or(&1);
+                let pool_positions = if cfg.engine.kv_pool_positions > 0 {
+                    cfg.engine.kv_pool_positions
+                } else {
+                    manifest.constants.lmax * max_slots * n_workers
+                };
+                (Arc::new(SharedBlockPool::new(pool_positions, n_workers)),
+                 max_slots, cfg.engine.queue_cap)
+            }
         };
-        let pool = Arc::new(SharedBlockPool::new(pool_positions, n_workers));
 
         let mut workers = Vec::new();
         let mut routes = Vec::new();
@@ -239,34 +274,77 @@ impl Server {
                 placed: Arc::new(AtomicU64::new(0)),
                 prefix: Arc::new(Mutex::new(PrefixIndex::counting(1))),
             };
-            let artifacts = cfg.artifacts.clone();
-            let mut ecfg = cfg.engine.clone();
-            ecfg.seed = ecfg.seed.wrapping_add(w as u64);
             let stop = shutdown.clone();
             let queued_depth = route.queued_depth.clone();
             let lease = PoolLease::new(pool.clone(), w, max_slots);
-            let join = std::thread::Builder::new()
-                .name(format!("engine-{w}"))
-                .spawn(move || {
-                    worker_loop(artifacts, ecfg, lease, rx, queued_depth, stop)
-                })
-                .expect("spawn worker");
+            let join = match &cfg.mock {
+                Some(m) => {
+                    let m = m.clone();
+                    std::thread::Builder::new()
+                        .name(format!("mock-{w}"))
+                        .spawn(move || {
+                            worker_loop_mock(m, lease, rx, queued_depth, stop)
+                        })
+                }
+                None => {
+                    let artifacts = cfg.artifacts.clone();
+                    let mut ecfg = cfg.engine.clone();
+                    ecfg.seed = ecfg.seed.wrapping_add(w as u64);
+                    std::thread::Builder::new()
+                        .name(format!("engine-{w}"))
+                        .spawn(move || {
+                            worker_loop(artifacts, ecfg, lease, rx,
+                                        queued_depth, stop)
+                        })
+                }
+            }
+            .expect("spawn worker");
             workers.push(WorkerHandle { tx, join });
             routes.push(route);
         }
 
+        let io_threads = if cfg.frontend.io_threads > 0 {
+            cfg.frontend.io_threads
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        };
+        let fe = Arc::new(Frontend {
+            routes,
+            pool: pool.clone(),
+            queue_cap,
+            io_threads,
+            gauges: gauges.clone(),
+        });
+        let write_cap = cfg.frontend.conn_write_cap.max(1);
+        let drain_deadline =
+            Duration::from_millis(cfg.frontend.drain_deadline_ms.max(1));
+        let mut drivers = Vec::new();
+        let mut regs = Vec::new();
+        for d in 0..io_threads {
+            let (rtx, rrx) = channel::<TcpStream>();
+            let fe_d = fe.clone();
+            let stop = shutdown.clone();
+            drivers.push(
+                std::thread::Builder::new()
+                    .name(format!("conn-driver-{d}"))
+                    .spawn(move || {
+                        driver_loop(fe_d, rrx, drain_deadline, write_cap, stop)
+                    })
+                    .expect("spawn driver"),
+            );
+            regs.push(rtx);
+        }
+
         let stop = shutdown.clone();
-        let acceptor_pool = pool.clone();
-        let queue_cap = cfg.engine.queue_cap;
+        let g = gauges.clone();
+        let max_conns = cfg.frontend.max_conns.max(1);
         let acceptor = std::thread::Builder::new()
             .name("acceptor".into())
-            .spawn(move || {
-                acceptor_loop(listener, routes, acceptor_pool, queue_cap, stop)
-            })
+            .spawn(move || acceptor_loop(listener, regs, g, max_conns, stop))
             .expect("spawn acceptor");
 
-        Ok(Server { local_addr, shutdown, acceptor: Some(acceptor), workers,
-                    pool })
+        Ok(Server { local_addr, shutdown, acceptor: Some(acceptor), drivers,
+                    workers, pool, gauges })
     }
 
     /// The process-wide KV block pool (tests inspect shard/steal state; a
@@ -275,12 +353,23 @@ impl Server {
         self.pool.clone()
     }
 
+    /// Frontend connection gauges (`conn.*`): accepted/open/shed/rejected
+    /// counts and the write-queue high-water mark.
+    pub fn gauges(&self) -> Arc<ConnGauges> {
+        self.gauges.clone()
+    }
+
     /// Graceful drain: stop accepting, let workers finish every in-flight
-    /// and queued request (new submissions get `busy`), then join them.
+    /// and queued request (new submissions get `busy`) while drivers keep
+    /// relaying frames and flushing bounded write queues up to the
+    /// configured drain deadline, then join everything.
     pub fn stop(mut self) {
         self.shutdown.store(true, Ordering::SeqCst);
         if let Some(a) = self.acceptor.take() {
             let _ = a.join();
+        }
+        for d in self.drivers.drain(..) {
+            let _ = d.join();
         }
         for w in self.workers.drain(..) {
             drop(w.tx);
@@ -289,20 +378,41 @@ impl Server {
     }
 }
 
-fn acceptor_loop(listener: TcpListener, routes: Vec<Route>,
-                 pool: Arc<SharedBlockPool>, queue_cap: usize,
+/// Accept loop: non-blocking accepts, each socket registered round-robin
+/// with a connection driver. NO per-connection threads — past `max_conns`
+/// open connections the client gets a best-effort terminal `busy` frame
+/// and is closed (counted in `conn.rejected_max_conns`).
+fn acceptor_loop(listener: TcpListener, regs: Vec<Sender<TcpStream>>,
+                 gauges: Arc<ConnGauges>, max_conns: usize,
                  shutdown: Arc<AtomicBool>) {
+    let mut next = 0usize;
     while !shutdown.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _)) => {
-                let routes = routes.clone();
-                let pool = pool.clone();
-                std::thread::spawn(move || {
-                    let _ = handle_conn(stream, routes, pool, queue_cap);
-                });
+                if gauges.open() >= max_conns as u64 {
+                    gauges.on_reject();
+                    // accepted sockets are blocking by default; bound the
+                    // courtesy write so a reject storm can't stall accepts
+                    let mut s = stream;
+                    let _ = s.set_write_timeout(
+                        Some(Duration::from_millis(50)));
+                    let _ = writeln!(s, "{}", simple_frame("busy", 0));
+                    continue; // drop closes
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let _ = stream.set_nodelay(true);
+                gauges.on_accept();
+                if regs[next % regs.len()].send(stream).is_err() {
+                    // driver gone: shutting down
+                    gauges.on_close();
+                    break;
+                }
+                next += 1;
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(5));
+            Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
             }
             Err(_) => break,
         }
@@ -353,207 +463,511 @@ fn pick_worker(routes: &[Route], pool: &SharedBlockPool, queue_cap: usize,
     w
 }
 
-fn handle_conn(stream: TcpStream, routes: Vec<Route>,
-               pool: Arc<SharedBlockPool>, queue_cap: usize) -> Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
+// ------------------------------------------------------------ conn driver
+
+/// The driver-side op a connection is waiting on. One op at a time per
+/// connection (requests pipeline in the line assembler behind it); every
+/// op is polled non-blockingly so one connection can never stall a driver.
+enum PendingOp {
+    /// A generate relayed from a worker's response channel until its
+    /// terminal frame (or shed / worker loss).
+    Generate {
+        client_id: i64,
+        token: u64,
+        worker: usize,
+        class: Priority,
+        rrx: Receiver<String>,
+    },
+    /// Cluster stats: static head prebuilt at dispatch, per-worker bodies
+    /// collected as they arrive (a wedged worker degrades to null at the
+    /// deadline instead of stalling the driver).
+    Stats {
+        head: Vec<(&'static str, Json)>,
+        rxs: Vec<Option<Receiver<String>>>,
+        parts: Vec<Option<Json>>,
+        deadline: Instant,
+    },
+    /// Fan-out cancel: acks collected as workers answer.
+    Cancel {
+        client_id: i64,
+        rxs: Vec<Option<Receiver<bool>>>,
+        ok: bool,
+        deadline: Instant,
+    },
+}
+
+/// One multiplexed connection owned by a driver thread.
+struct Conn {
+    stream: TcpStream,
+    lines: LineAssembler,
+    wq: WriteQueue,
+    op: Option<PendingOp>,
+    /// read side returned EOF: the client closed or half-closed
+    eof: bool,
+    /// close once the pending op completes and the write queue flushes
+    closing: bool,
+}
+
+/// Connection-driver loop: multiplexes registered sockets through read /
+/// poll / dispatch / write sweeps. Exits when shutdown is flagged (or the
+/// acceptor is gone) and every connection is quiescent — or the drain
+/// deadline expires, at which point stragglers are force-closed.
+fn driver_loop(fe: Arc<Frontend>, reg: Receiver<TcpStream>,
+               drain_deadline: Duration, write_cap: usize,
+               shutdown: Arc<AtomicBool>) {
+    let mut conns: Vec<Conn> = Vec::new();
+    // one read scratch per driver, shared by all its connections
+    let mut scratch = vec![0u8; 16 * 1024];
+    let mut reg_open = true;
+    let mut drain_until: Option<Instant> = None;
+    loop {
+        let mut progress = false;
+        while reg_open {
+            match reg.try_recv() {
+                Ok(stream) => {
+                    conns.push(Conn {
+                        stream,
+                        lines: LineAssembler::new(),
+                        wq: WriteQueue::new(write_cap),
+                        op: None,
+                        eof: false,
+                        closing: false,
+                    });
+                    progress = true;
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => reg_open = false,
+            }
         }
-        let req = match parse(&line) {
-            Ok(v) => v,
-            Err(e) => {
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("type", Json::str("error")),
-                    ("message", Json::str(format!("bad json: {e}"))),
-                ]).to_string())?;
-                continue;
+        let draining = !reg_open || shutdown.load(Ordering::SeqCst);
+        if draining && drain_until.is_none() {
+            drain_until = Some(Instant::now() + drain_deadline);
+        }
+
+        let mut i = 0;
+        while i < conns.len() {
+            if service_conn(&fe, &mut conns[i], &mut scratch, draining,
+                            &mut progress) {
+                i += 1;
+            } else {
+                let mut c = conns.swap_remove(i);
+                teardown(&fe, &mut c);
             }
-        };
-        match req.get("op").as_str() {
-            Some("ping") => {
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("type", Json::str("pong")),
-                ]).to_string())?;
+        }
+
+        if draining {
+            let expired =
+                drain_until.map(|d| Instant::now() >= d).unwrap_or(false);
+            let quiescent =
+                conns.iter().all(|c| c.op.is_none() && c.wq.is_empty());
+            if quiescent || expired {
+                for mut c in conns.drain(..) {
+                    teardown(&fe, &mut c);
+                }
+                return;
             }
-            Some("stats") => {
-                let loads: Vec<Json> = routes
-                    .iter()
-                    .map(|r| Json::num(r.inflight.load(Ordering::SeqCst) as f64))
-                    .collect();
-                let placements: Vec<Json> = routes
-                    .iter()
-                    .map(|r| Json::num(r.placed.load(Ordering::SeqCst) as f64))
-                    .collect();
-                // shared-pool view: cluster totals + per-shard reserves
-                let shards: Vec<Json> = (0..pool.workers())
-                    .map(|w| Json::num(pool.shard_free(w) as f64))
-                    .collect();
-                let pool_json = Json::obj(vec![
-                    ("total_blocks", Json::num(pool.total_blocks() as f64)),
-                    ("free_blocks",
-                     Json::num(pool.cluster_free_blocks() as f64)),
-                    ("global_free",
-                     Json::num(pool.global_free_blocks() as f64)),
-                    ("shards", Json::Arr(shards)),
-                    ("lease_refills", Json::num(pool.refills() as f64)),
-                    ("lease_steals", Json::num(pool.steals() as f64)),
-                    ("stolen_blocks", Json::num(pool.stolen_blocks() as f64)),
-                    ("exhaustions", Json::num(pool.exhaustions() as f64)),
-                ]);
-                // fan out first, then collect: total wait is bounded by the
-                // slowest worker (one in-flight step), not the sum; a wedged
-                // worker degrades its entry to null instead of stalling stats
-                let receivers: Vec<Option<Receiver<String>>> = routes
-                    .iter()
-                    .map(|r| {
-                        let (stx, srx) = channel::<String>();
-                        r.tx.send(WorkerMsg::Stats { resp: stx })
-                            .ok()
-                            .map(|_| srx)
-                    })
-                    .collect();
-                let per_worker: Vec<Json> = receivers
+        }
+        if !progress {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }
+}
+
+/// Remove-side cleanup for a connection leaving its driver: an unfinished
+/// generate is cancelled on its worker by token (fire-and-forget — the
+/// driver never blocks on the ack) and the router counters are released.
+fn teardown(fe: &Frontend, c: &mut Conn) {
+    if let Some(PendingOp::Generate { token, worker, class, .. }) =
+        c.op.take()
+    {
+        let (atx, _arx) = channel::<bool>();
+        let _ = fe.routes[worker]
+            .tx
+            .send(WorkerMsg::CancelToken { token, ack: atx });
+        finish_generate(fe, worker, class);
+    }
+    fe.gauges.on_close();
+}
+
+/// Release the router-side inflight accounting for a completed (or shed)
+/// generate.
+fn finish_generate(fe: &Frontend, worker: usize, class: Priority) {
+    let r = &fe.routes[worker];
+    r.inflight.fetch_sub(1, Ordering::SeqCst);
+    match class {
+        Priority::Interactive => {
+            r.inflight_interactive.fetch_sub(1, Ordering::SeqCst)
+        }
+        Priority::Batch => r.inflight_batch.fetch_sub(1, Ordering::SeqCst),
+    };
+}
+
+/// Queue an outbound frame on the connection's bounded write queue.
+/// Returns false when the queue overflowed: the connection was shed
+/// (`conn.shed`) and must be torn down by the caller.
+fn push_frame(fe: &Frontend, c: &mut Conn, frame: String) -> bool {
+    match c.wq.push(frame) {
+        Push::Queued => {
+            fe.gauges.note_write_q(c.wq.depth());
+            true
+        }
+        Push::Shed => {
+            fe.gauges.on_shed();
+            false
+        }
+    }
+}
+
+/// One scheduling round for one connection: read sweep, op poll, request
+/// dispatch, write sweep. Returns false when the connection must be torn
+/// down (dead socket, shed, or orderly close).
+fn service_conn(fe: &Frontend, c: &mut Conn, scratch: &mut [u8],
+                draining: bool, progress: &mut bool) -> bool {
+    // read sweep: pull whatever the socket has into the line assembler
+    if !c.eof && !c.closing {
+        loop {
+            match c.stream.read(scratch) {
+                Ok(0) => {
+                    c.eof = true;
+                    break;
+                }
+                Ok(n) => {
+                    c.lines.extend(&scratch[..n]);
+                    *progress = true;
+                }
+                Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => return false,
+            }
+        }
+        if c.lines.overflowed() {
+            let _ = push_frame(fe, c,
+                               error_frame(0, "request line too long"));
+            c.closing = true;
+        }
+    }
+    // advance the in-flight op (may shed the conn mid-stream)
+    if !poll_op(fe, c, progress) {
+        return false;
+    }
+    // dispatch buffered request lines — one op at a time, the rest wait
+    while c.op.is_none() && !c.closing {
+        let Some(line) = c.lines.next_line() else { break };
+        *progress = true;
+        if !dispatch_line(fe, c, &line, draining) {
+            return false;
+        }
+    }
+    if c.eof {
+        // orderly EOF = client gone: cancel an in-flight generate now
+        // (teardown does it); otherwise let the pending op + queued
+        // frames flush, then close
+        if matches!(c.op, Some(PendingOp::Generate { .. })) {
+            return false;
+        }
+        c.closing = true;
+    }
+    // write sweep: move queued frames to the socket until it would block
+    match c.wq.pump(&mut c.stream) {
+        Ok(n) if n > 0 => *progress = true,
+        Ok(_) => {}
+        Err(_) => return false,
+    }
+    !(c.closing && c.op.is_none() && c.wq.is_empty())
+}
+
+/// Advance a connection's pending op without blocking. Returns false when
+/// the connection was shed while relaying.
+fn poll_op(fe: &Frontend, c: &mut Conn, progress: &mut bool) -> bool {
+    let Some(op) = c.op.take() else { return true };
+    match op {
+        PendingOp::Generate { client_id, token, worker, class, rrx } => {
+            loop {
+                match rrx.try_recv() {
+                    Ok(line) => {
+                        *progress = true;
+                        let terminal = is_terminal_frame(&line);
+                        // a fast worker can outrun one pump sweep per
+                        // round; give the socket a chance to absorb the
+                        // backlog before condemning the client — only a
+                        // reader the KERNEL can't deliver to gets shed
+                        if c.wq.depth() >= c.wq.cap()
+                            && c.wq.pump(&mut c.stream).is_err()
+                        {
+                            c.op = Some(PendingOp::Generate {
+                                client_id, token, worker, class, rrx,
+                            });
+                            return false;
+                        }
+                        if !push_frame(fe, c, line) {
+                            // shed mid-stream: restore the op so teardown
+                            // cancels it on the worker and frees the slot
+                            c.op = Some(PendingOp::Generate {
+                                client_id, token, worker, class, rrx,
+                            });
+                            return false;
+                        }
+                        if terminal {
+                            finish_generate(fe, worker, class);
+                            return true;
+                        }
+                    }
+                    Err(TryRecvError::Empty) => {
+                        c.op = Some(PendingOp::Generate {
+                            client_id, token, worker, class, rrx,
+                        });
+                        return true;
+                    }
+                    Err(TryRecvError::Disconnected) => {
+                        // worker exited (shutdown race) before a terminal
+                        // frame; honor the one-terminal-frame contract
+                        finish_generate(fe, worker, class);
+                        return push_frame(fe, c,
+                                          simple_frame("busy", client_id));
+                    }
+                }
+            }
+        }
+        PendingOp::Stats { head, rxs, mut parts, deadline } => {
+            for (i, rx) in rxs.iter().enumerate() {
+                if parts[i].is_some() {
+                    continue;
+                }
+                match rx {
+                    None => parts[i] = Some(Json::Null),
+                    Some(r) => match r.try_recv() {
+                        Ok(s) => {
+                            parts[i] = Some(parse(&s).unwrap_or(Json::Null))
+                        }
+                        Err(TryRecvError::Empty) => {}
+                        Err(TryRecvError::Disconnected) => {
+                            parts[i] = Some(Json::Null)
+                        }
+                    },
+                }
+            }
+            if parts.iter().all(|p| p.is_some())
+                || Instant::now() >= deadline
+            {
+                *progress = true;
+                let workers: Vec<Json> = parts
                     .into_iter()
-                    .map(|srx| {
-                        srx.and_then(|rx| {
-                            rx.recv_timeout(Duration::from_secs(5)).ok()
-                        })
-                        .and_then(|s| parse(&s).ok())
-                        .unwrap_or(Json::Null)
-                    })
+                    .map(|p| p.unwrap_or(Json::Null))
                     .collect();
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("type", Json::str("stats")),
-                    ("inflight", Json::Arr(loads)),
-                    ("placements", Json::Arr(placements)),
-                    ("pool", pool_json),
-                    ("workers", Json::Arr(per_worker)),
-                ]).to_string())?;
+                let mut fields = head;
+                fields.push(("workers", Json::Arr(workers)));
+                return push_frame(fe, c, Json::obj(fields).to_string());
             }
-            Some("cancel") => {
-                let client_id = req.get("id").as_i64().unwrap_or(0);
-                // the router doesn't track request→worker placement, so the
-                // cancel fans out to every worker; client ids are caller-
-                // chosen and may collide, so all matches are cancelled.
-                // Send-all-then-collect (like stats): latency is bounded by
-                // the slowest worker's in-flight step, not the sum
-                let acks: Vec<Option<Receiver<bool>>> = routes
-                    .iter()
-                    .map(|r| {
-                        let (atx, arx) = channel::<bool>();
-                        r.tx.send(WorkerMsg::Cancel { client_id, ack: atx })
-                            .ok()
-                            .map(|_| arx)
-                    })
-                    .collect();
-                let ok = acks.into_iter().any(|arx| {
-                    arx.map(|rx| {
-                        rx.recv_timeout(Duration::from_secs(30)) == Ok(true)
-                    })
-                    .unwrap_or(false)
-                });
-                writeln!(writer, "{}", Json::obj(vec![
+            c.op = Some(PendingOp::Stats { head, rxs, parts, deadline });
+            true
+        }
+        PendingOp::Cancel { client_id, mut rxs, mut ok, deadline } => {
+            let mut waiting = false;
+            for slot in rxs.iter_mut() {
+                let Some(r) = slot else { continue };
+                match r.try_recv() {
+                    Ok(v) => {
+                        ok |= v;
+                        *slot = None;
+                    }
+                    Err(TryRecvError::Empty) => waiting = true,
+                    Err(TryRecvError::Disconnected) => *slot = None,
+                }
+            }
+            if !waiting || Instant::now() >= deadline {
+                *progress = true;
+                return push_frame(fe, c, Json::obj(vec![
                     ("type", Json::str("cancel_result")),
                     ("id", Json::num(client_id as f64)),
                     ("ok", Json::bool(ok)),
-                ]).to_string())?;
+                ]).to_string());
             }
-            Some("generate") => {
-                let client_id = req.get("id").as_i64().unwrap_or(0);
-                let prompt = req.get("prompt").as_str().unwrap_or("").to_string();
-                let max_new = req.get("max_new").as_usize().unwrap_or(64);
-                let stream_toks = req.get("stream").as_bool().unwrap_or(false);
-                let class = match req.get("class").as_str() {
-                    None => Priority::Interactive,
-                    Some(s) => match Priority::parse(s) {
-                        Ok(c) => c,
-                        Err(e) => {
-                            writeln!(writer, "{}",
-                                     error_frame(client_id, &format!("{e}")))?;
-                            continue;
-                        }
-                    },
-                };
-                let deadline = req.get("deadline_steps").as_usize()
-                    .map(|v| v as u64);
-                let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
-                let (rtx, rrx) = channel::<String>();
-                let w = pick_worker(&routes, &pool, queue_cap, class,
-                                    deadline, &prompt);
-                let route = &routes[w];
-                let tx = &route.tx;
-                let infl = &route.inflight;
-                let class_infl = match class {
-                    Priority::Interactive => &route.inflight_interactive,
-                    Priority::Batch => &route.inflight_batch,
-                };
-                route.placed.fetch_add(1, Ordering::SeqCst);
-                infl.fetch_add(1, Ordering::SeqCst);
-                class_infl.fetch_add(1, Ordering::SeqCst);
-                let sent = tx.send(WorkerMsg::Job(Job {
-                    client_id,
-                    token,
-                    prompt,
-                    max_new,
-                    stream: stream_toks,
-                    class,
-                    deadline,
-                    resp: rtx,
-                }));
-                if sent.is_err() {
-                    infl.fetch_sub(1, Ordering::SeqCst);
-                    class_infl.fetch_sub(1, Ordering::SeqCst);
-                    writeln!(writer, "{}", Json::obj(vec![
-                        ("type", Json::str("error")),
-                        ("message", Json::str("worker unavailable")),
-                    ]).to_string())?;
-                    continue;
-                }
-                // relay response frames until the worker drops the channel
-                // (it does so right after the terminal frame). Between
-                // frames, probe the socket so a vanished client is noticed
-                // even when no frame is due (non-streaming requests emit
-                // nothing until `done`) and its request gets cancelled
-                // instead of burning a slot for a dead connection.
-                let relay = relay_frames(&mut writer, rrx);
-                infl.fetch_sub(1, Ordering::SeqCst);
-                class_infl.fetch_sub(1, Ordering::SeqCst);
-                if relay.client_gone {
-                    // cancel only this connection's request — client ids
-                    // may collide across connections, tokens cannot
-                    let (atx, arx) = channel::<bool>();
-                    let cancel = WorkerMsg::CancelToken { token, ack: atx };
-                    if tx.send(cancel).is_ok() {
-                        let _ = arx.recv_timeout(Duration::from_secs(30));
-                    }
-                    return Ok(());
-                }
-                if !relay.terminated {
-                    // worker exited (shutdown race) before replying; honor
-                    // the one-terminal-frame-per-generate contract
-                    writeln!(writer, "{}", simple_frame("busy", client_id))?;
-                }
-            }
-            Some("shutdown") => return Ok(()),
-            _ => {
-                writeln!(writer, "{}", Json::obj(vec![
-                    ("type", Json::str("error")),
-                    ("message", Json::str("unknown op")),
-                ]).to_string())?;
-            }
+            c.op = Some(PendingOp::Cancel { client_id, rxs, ok, deadline });
+            true
         }
     }
-    Ok(())
 }
 
-struct RelayResult {
-    /// client socket died before the terminal frame
-    client_gone: bool,
-    /// a terminal frame (done/busy/cancelled/error) was relayed
-    terminated: bool,
+/// The static portion of a `stats` reply (everything except the per-worker
+/// bodies, which arrive asynchronously).
+fn stats_head(fe: &Frontend) -> Vec<(&'static str, Json)> {
+    let loads: Vec<Json> = fe.routes
+        .iter()
+        .map(|r| Json::num(r.inflight.load(Ordering::SeqCst) as f64))
+        .collect();
+    let placements: Vec<Json> = fe.routes
+        .iter()
+        .map(|r| Json::num(r.placed.load(Ordering::SeqCst) as f64))
+        .collect();
+    // shared-pool view: cluster totals + per-shard reserves
+    let shards: Vec<Json> = (0..fe.pool.workers())
+        .map(|w| Json::num(fe.pool.shard_free(w) as f64))
+        .collect();
+    let pool_json = Json::obj(vec![
+        ("total_blocks", Json::num(fe.pool.total_blocks() as f64)),
+        ("free_blocks", Json::num(fe.pool.cluster_free_blocks() as f64)),
+        ("global_free", Json::num(fe.pool.global_free_blocks() as f64)),
+        ("shards", Json::Arr(shards)),
+        ("lease_refills", Json::num(fe.pool.refills() as f64)),
+        ("lease_steals", Json::num(fe.pool.steals() as f64)),
+        ("stolen_blocks", Json::num(fe.pool.stolen_blocks() as f64)),
+        ("exhaustions", Json::num(fe.pool.exhaustions() as f64)),
+    ]);
+    let g = &fe.gauges;
+    let conn_json = Json::obj(vec![
+        ("open", Json::num(g.open() as f64)),
+        ("accepted", Json::num(g.accepted() as f64)),
+        ("shed", Json::num(g.shed() as f64)),
+        ("rejected_max_conns", Json::num(g.rejected_max_conns() as f64)),
+        ("write_q_hwm", Json::num(g.write_q_hwm() as f64)),
+    ]);
+    vec![
+        ("type", Json::str("stats")),
+        ("inflight", Json::Arr(loads)),
+        ("placements", Json::Arr(placements)),
+        ("io_threads", Json::num(fe.io_threads as f64)),
+        ("conn", conn_json),
+        ("pool", pool_json),
+    ]
+}
+
+/// Handle one request line. Immediate ops answer straight into the write
+/// queue; generate/stats/cancel become the connection's pending op.
+/// Returns false when the connection was shed while answering.
+fn dispatch_line(fe: &Frontend, c: &mut Conn, line: &str, draining: bool)
+                 -> bool {
+    if line.trim().is_empty() {
+        return true;
+    }
+    let req = match parse(line) {
+        Ok(v) => v,
+        Err(e) => {
+            return push_frame(fe, c, Json::obj(vec![
+                ("type", Json::str("error")),
+                ("message", Json::str(format!("bad json: {e}"))),
+            ]).to_string());
+        }
+    };
+    match req.get("op").as_str() {
+        Some("ping") => push_frame(fe, c, Json::obj(vec![
+            ("type", Json::str("pong")),
+        ]).to_string()),
+        Some("stats") => {
+            // fan out first, then collect non-blockingly: total wait is
+            // bounded by the slowest worker, and a wedged worker degrades
+            // its entry to null at the deadline instead of stalling stats
+            let head = stats_head(fe);
+            let rxs: Vec<Option<Receiver<String>>> = fe.routes
+                .iter()
+                .map(|r| {
+                    let (stx, srx) = channel::<String>();
+                    r.tx.send(WorkerMsg::Stats { resp: stx })
+                        .ok()
+                        .map(|_| srx)
+                })
+                .collect();
+            let parts: Vec<Option<Json>> = rxs
+                .iter()
+                .map(|rx| rx.is_none().then_some(Json::Null))
+                .collect();
+            c.op = Some(PendingOp::Stats {
+                head,
+                rxs,
+                parts,
+                deadline: Instant::now() + Duration::from_secs(5),
+            });
+            true
+        }
+        Some("cancel") => {
+            let client_id = req.get("id").as_i64().unwrap_or(0);
+            // the router doesn't track request→worker placement, so the
+            // cancel fans out to every worker; client ids are caller-
+            // chosen and may collide, so all matches are cancelled
+            let rxs: Vec<Option<Receiver<bool>>> = fe.routes
+                .iter()
+                .map(|r| {
+                    let (atx, arx) = channel::<bool>();
+                    r.tx.send(WorkerMsg::Cancel { client_id, ack: atx })
+                        .ok()
+                        .map(|_| arx)
+                })
+                .collect();
+            c.op = Some(PendingOp::Cancel {
+                client_id,
+                rxs,
+                ok: false,
+                deadline: Instant::now() + Duration::from_secs(30),
+            });
+            true
+        }
+        Some("generate") => {
+            let client_id = req.get("id").as_i64().unwrap_or(0);
+            if draining {
+                // no retry hint: the queue is not coming back
+                return push_frame(fe, c, simple_frame("busy", client_id));
+            }
+            let prompt =
+                req.get("prompt").as_str().unwrap_or("").to_string();
+            let max_new = req.get("max_new").as_usize().unwrap_or(64);
+            let stream_toks = req.get("stream").as_bool().unwrap_or(false);
+            let class = match req.get("class").as_str() {
+                None => Priority::Interactive,
+                Some(s) => match Priority::parse(s) {
+                    Ok(cl) => cl,
+                    Err(e) => {
+                        return push_frame(fe, c,
+                                          error_frame(client_id,
+                                                      &format!("{e}")));
+                    }
+                },
+            };
+            let deadline =
+                req.get("deadline_steps").as_usize().map(|v| v as u64);
+            let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+            let (rtx, rrx) = channel::<String>();
+            let w = pick_worker(&fe.routes, &fe.pool, fe.queue_cap, class,
+                                deadline, &prompt);
+            let route = &fe.routes[w];
+            route.placed.fetch_add(1, Ordering::SeqCst);
+            route.inflight.fetch_add(1, Ordering::SeqCst);
+            match class {
+                Priority::Interactive => route
+                    .inflight_interactive
+                    .fetch_add(1, Ordering::SeqCst),
+                Priority::Batch => {
+                    route.inflight_batch.fetch_add(1, Ordering::SeqCst)
+                }
+            };
+            let sent = route.tx.send(WorkerMsg::Job(Job {
+                client_id,
+                token,
+                prompt,
+                max_new,
+                stream: stream_toks,
+                class,
+                deadline,
+                resp: rtx,
+            }));
+            if sent.is_err() {
+                finish_generate(fe, w, class);
+                return push_frame(fe, c,
+                                  error_frame(client_id,
+                                              "worker unavailable"));
+            }
+            c.op = Some(PendingOp::Generate {
+                client_id, token, worker: w, class, rrx,
+            });
+            true
+        }
+        Some("shutdown") => {
+            c.closing = true;
+            true
+        }
+        _ => push_frame(fe, c, Json::obj(vec![
+            ("type", Json::str("error")),
+            ("message", Json::str("unknown op")),
+        ]).to_string()),
+    }
 }
 
 fn is_terminal_frame(line: &str) -> bool {
@@ -563,52 +977,6 @@ fn is_terminal_frame(line: &str) -> bool {
             matches!(t, "done" | "busy" | "cancelled" | "error")
         }))
         .unwrap_or(false)
-}
-
-/// Forward worker frames to the client, watching for a dead socket between
-/// frames. Liveness probing uses `peek` under a short SO_RCVTIMEO; the
-/// option is shared with the connection's reader, so it is restored before
-/// returning (the reader is idle during the relay — generate is the
-/// pending op).
-fn relay_frames(writer: &mut TcpStream, rrx: Receiver<String>) -> RelayResult {
-    let probe_timeout = Some(Duration::from_millis(20));
-    let mut res = RelayResult { client_gone: false, terminated: false };
-    loop {
-        match rrx.recv_timeout(Duration::from_millis(500)) {
-            Ok(line) => {
-                if writeln!(writer, "{line}").is_err() {
-                    res.client_gone = true;
-                    break;
-                }
-                if is_terminal_frame(&line) {
-                    res.terminated = true;
-                }
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                if writer.set_read_timeout(probe_timeout).is_err() {
-                    res.client_gone = true;
-                    break;
-                }
-                let mut byte = [0u8; 1];
-                match writer.peek(&mut byte) {
-                    Ok(0) => {
-                        res.client_gone = true; // orderly EOF: client closed
-                        break;
-                    }
-                    Ok(_) => {} // pipelined request waiting; client alive
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock
-                        || e.kind() == std::io::ErrorKind::TimedOut => {}
-                    Err(_) => {
-                        res.client_gone = true;
-                        break;
-                    }
-                }
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
-        }
-    }
-    let _ = writer.set_read_timeout(None);
-    res
 }
 
 fn done_frame(client_id: i64, out: &GenOutput) -> String {
@@ -648,6 +1016,8 @@ fn error_frame(client_id: i64, msg: &str) -> String {
         ("message", Json::str(msg)),
     ]).to_string()
 }
+
+// ----------------------------------------------------------- real workers
 
 fn worker_stats_json(engine: &Engine) -> String {
     let m = engine.metrics();
@@ -914,7 +1284,7 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
                             }
                         }
                         let _ = p.resp.send(done_frame(p.client_id, &out));
-                        // dropping `p.resp` ends the client's relay loop
+                        // dropping `p.resp` ends the client's relay
                     }
                 }
                 for id in orphaned {
@@ -937,6 +1307,349 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
                     let _ = p.resp.send(error_frame(p.client_id, &format!("{e:#}")));
                 }
             }
+        }
+    }
+}
+
+// ------------------------------------------------------------ mock workers
+
+/// Deterministic mock token stream: a pure function of the prompt (via
+/// `testkit::mock_tokens`, extended cyclically past its length), so one
+/// client's stream is byte-identical across runs no matter what other
+/// clients share the server — the slow-reader isolation test's bedrock.
+fn mock_stream_tokens(prompt: &str, max_new: usize) -> Vec<i32> {
+    let base = mock_tokens(prompt);
+    (0..max_new)
+        .map(|i| {
+            if base.is_empty() {
+                i as i32
+            } else {
+                base[i % base.len()].wrapping_add((i / base.len()) as i32)
+            }
+        })
+        .collect()
+}
+
+/// One admitted mock sequence: its full deterministic token stream and the
+/// emit cursor, plus the accumulated text so `done` equals the
+/// concatenated `tok` frames.
+struct MockSeq {
+    client_id: i64,
+    token: u64,
+    class: Priority,
+    stream: bool,
+    resp: Sender<String>,
+    toks: Vec<i32>,
+    emitted: usize,
+    prompt_positions: usize,
+    text: String,
+    rounds: usize,
+}
+
+/// Artifact-free worker engine for the concurrency suite and `connbench`:
+/// real slots, real `PoolLease` accounting (ensure/release per round, so
+/// shed-cancel block reclamation is exercised for real), deterministic
+/// prompt-derived token streams, and a per-round latency histogram — the
+/// C10k gate's evidence that client fan-in leaves rounds unaffected.
+struct MockWorker {
+    slots: Vec<Option<MockSeq>>,
+    queue: VecDeque<MockSeq>,
+    lease: PoolLease,
+    queue_cap: usize,
+    beta: usize,
+    completed: u64,
+    cancelled: u64,
+    rejected_busy: u64,
+    steps: u64,
+    round_lat: Histogram,
+}
+
+impl MockWorker {
+    fn new(m: &MockServeConfig, lease: PoolLease) -> MockWorker {
+        MockWorker {
+            slots: (0..m.slots.max(1)).map(|_| None).collect(),
+            queue: VecDeque::new(),
+            lease,
+            queue_cap: m.queue_cap,
+            beta: m.beta.max(1),
+            completed: 0,
+            cancelled: 0,
+            rejected_busy: 0,
+            steps: 0,
+            round_lat: Histogram::new(),
+        }
+    }
+
+    fn active(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    fn handle(&mut self, msg: WorkerMsg, draining: bool) {
+        match msg {
+            WorkerMsg::Job(job) => {
+                if draining {
+                    let _ = job.resp.send(simple_frame("busy", job.client_id));
+                    return;
+                }
+                let seq = MockSeq {
+                    client_id: job.client_id,
+                    token: job.token,
+                    class: job.class,
+                    stream: job.stream,
+                    resp: job.resp,
+                    toks: mock_stream_tokens(&job.prompt, job.max_new),
+                    emitted: 0,
+                    prompt_positions:
+                        sched::est_prompt_tokens(&job.prompt).max(1),
+                    text: String::new(),
+                    rounds: 0,
+                };
+                self.try_admit(seq);
+            }
+            WorkerMsg::Cancel { client_id, ack } => {
+                let _ = ack.send(self.cancel_client(client_id));
+            }
+            WorkerMsg::CancelToken { token, ack } => {
+                let _ = ack.send(self.cancel_token(token));
+            }
+            WorkerMsg::Stats { resp } => {
+                let _ = resp.send(self.stats_json());
+            }
+        }
+    }
+
+    fn try_admit(&mut self, seq: MockSeq) {
+        if let Some(idx) = self.slots.iter().position(|s| s.is_none()) {
+            if self.lease.ensure(idx, seq.prompt_positions).is_err() {
+                self.rejected_busy += 1;
+                let _ = seq.resp.send(busy_frame(seq.client_id, 1));
+                return;
+            }
+            self.slots[idx] = Some(seq);
+        } else if self.queue_cap == 0 || self.queue.len() < self.queue_cap {
+            let pos = self.queue.len();
+            let _ = seq.resp.send(Json::obj(vec![
+                ("type", Json::str("queued")),
+                ("id", Json::num(seq.client_id as f64)),
+                ("pos", Json::num(pos as f64)),
+                ("class", Json::str(seq.class.name())),
+                ("est_start",
+                 Json::num((self.steps + pos as u64 + 1) as f64)),
+            ]).to_string());
+            self.queue.push_back(seq);
+        } else {
+            self.rejected_busy += 1;
+            let hint = (self.queue.len() as u64).max(1);
+            let _ = seq.resp.send(busy_frame(seq.client_id, hint));
+        }
+    }
+
+    fn admit_waiting(&mut self) {
+        while let Some(idx) = self.slots.iter().position(|s| s.is_none()) {
+            let Some(seq) = self.queue.pop_front() else { break };
+            if self.lease.ensure(idx, seq.prompt_positions).is_err() {
+                self.queue.push_front(seq); // pool pressure: retry next round
+                break;
+            }
+            self.slots[idx] = Some(seq);
+        }
+    }
+
+    /// One scheduler round: admit from the wait queue, then emit up to β
+    /// tokens per active sequence (growing its lease to cover them, as the
+    /// real engine does position-by-position).
+    fn step(&mut self) {
+        let t0 = Instant::now();
+        self.admit_waiting();
+        for idx in 0..self.slots.len() {
+            let Some(seq) = self.slots[idx].as_mut() else { continue };
+            let want = self.beta.min(seq.toks.len() - seq.emitted);
+            if want > 0
+                && self.lease
+                    .ensure(idx, seq.prompt_positions + seq.emitted + want)
+                    .is_err()
+            {
+                continue; // pool pressure: stall this round, retry next
+            }
+            let text: String = seq.toks[seq.emitted..seq.emitted + want]
+                .iter()
+                .map(|t| format!(" m{t}"))
+                .collect();
+            seq.emitted += want;
+            seq.rounds += 1;
+            seq.text.push_str(&text);
+            let mut gone = false;
+            if seq.stream && want > 0 {
+                gone = seq.resp.send(Json::obj(vec![
+                    ("type", Json::str("tok")),
+                    ("id", Json::num(seq.client_id as f64)),
+                    ("text", Json::str(text)),
+                    ("n", Json::num(want as f64)),
+                ]).to_string()).is_err();
+            }
+            let finished = seq.emitted >= seq.toks.len();
+            if gone {
+                // receiver dropped: the conn was shed or closed — free the
+                // slot and its blocks, exactly like the real cancel path
+                self.slots[idx] = None;
+                self.lease.release(idx);
+                self.cancelled += 1;
+            } else if finished {
+                let seq = self.slots[idx].take().unwrap();
+                let out = GenOutput {
+                    id: seq.token,
+                    text: seq.text.clone(),
+                    token_ids: seq.toks.clone(),
+                    // wall_secs stays 0 so `done` frames are byte-stable
+                    // across runs (ms would be wall-clock noise)
+                    stats: GenStats {
+                        steps: seq.rounds,
+                        new_tokens: seq.toks.len(),
+                        ..Default::default()
+                    },
+                };
+                let _ = seq.resp.send(done_frame(seq.client_id, &out));
+                self.lease.release(idx);
+                self.completed += 1;
+            }
+        }
+        self.steps += 1;
+        self.round_lat.record_secs(t0.elapsed().as_secs_f64());
+    }
+
+    fn cancel_client(&mut self, client_id: i64) -> bool {
+        let mut ok = false;
+        for idx in 0..self.slots.len() {
+            let hit = self.slots[idx]
+                .as_ref()
+                .map(|s| s.client_id == client_id)
+                .unwrap_or(false);
+            if hit {
+                let seq = self.slots[idx].take().unwrap();
+                let _ = seq.resp.send(simple_frame("cancelled",
+                                                   seq.client_id));
+                self.lease.release(idx);
+                self.cancelled += 1;
+                ok = true;
+            }
+        }
+        let before = self.queue.len();
+        self.queue.retain(|s| {
+            if s.client_id == client_id {
+                let _ = s.resp.send(simple_frame("cancelled", s.client_id));
+                false
+            } else {
+                true
+            }
+        });
+        if self.queue.len() != before {
+            self.cancelled += (before - self.queue.len()) as u64;
+            ok = true;
+        }
+        ok
+    }
+
+    fn cancel_token(&mut self, token: u64) -> bool {
+        for idx in 0..self.slots.len() {
+            let hit = self.slots[idx]
+                .as_ref()
+                .map(|s| s.token == token)
+                .unwrap_or(false);
+            if hit {
+                self.slots[idx] = None; // client is gone; no frame to send
+                self.lease.release(idx);
+                self.cancelled += 1;
+                return true;
+            }
+        }
+        let before = self.queue.len();
+        self.queue.retain(|s| s.token != token);
+        if self.queue.len() != before {
+            self.cancelled += 1;
+            return true;
+        }
+        false
+    }
+
+    fn stats_json(&self) -> String {
+        Json::obj(vec![
+            ("mock", Json::bool(true)),
+            ("active", Json::num(self.active() as f64)),
+            ("queued", Json::num(self.queue.len() as f64)),
+            ("pool_utilization", Json::num(self.lease.utilization())),
+            ("shard_free_blocks",
+             Json::num(self.lease.shard_free_blocks() as f64)),
+            ("headroom_blocks",
+             Json::num(self.lease.headroom_blocks() as f64)),
+            ("lease_blocks",
+             Json::num(self.lease.lease_in_use_blocks() as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("cancelled", Json::num(self.cancelled as f64)),
+            ("rejected_busy", Json::num(self.rejected_busy as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            // per-round latency: the C10k gate compares these between a
+            // 4-client baseline and a 500-client fan-in
+            ("round_mean_us", Json::num(self.round_lat.mean_us())),
+            ("round_p50_us",
+             Json::num(self.round_lat.quantile_us(0.5) as f64)),
+            ("round_p95_us",
+             Json::num(self.round_lat.quantile_us(0.95) as f64)),
+            ("round_max_us", Json::num(self.round_lat.max_us() as f64)),
+        ]).to_string()
+    }
+}
+
+/// Mock-mode worker loop: same control-channel protocol and drain
+/// discipline as `worker_loop`, driving a `MockWorker` instead of a real
+/// engine. `step_delay_us` paces rounds so streaming clients see a steady
+/// frame cadence (and slow readers actually back up their write queues).
+fn worker_loop_mock(mcfg: MockServeConfig, lease: PoolLease,
+                    rx: Receiver<WorkerMsg>, queued_depth: Arc<AtomicUsize>,
+                    shutdown: Arc<AtomicBool>) {
+    let mut mw = MockWorker::new(&mcfg, lease);
+    loop {
+        let mut disconnected = false;
+        loop {
+            match rx.try_recv() {
+                Ok(msg) => {
+                    let draining = shutdown.load(Ordering::SeqCst);
+                    mw.handle(msg, draining);
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        let draining = disconnected || shutdown.load(Ordering::SeqCst);
+        queued_depth.store(mw.queue.len(), Ordering::SeqCst);
+
+        if mw.active() == 0 && mw.queue.is_empty() {
+            if draining {
+                while let Ok(msg) = rx.try_recv() {
+                    mw.handle(msg, true);
+                }
+                mw.lease.release_all();
+                return;
+            }
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(msg) => {
+                    let draining = shutdown.load(Ordering::SeqCst);
+                    mw.handle(msg, draining);
+                }
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                    mw.lease.release_all();
+                    return;
+                }
+            }
+            continue;
+        }
+
+        mw.step();
+        if mcfg.step_delay_us > 0 {
+            std::thread::sleep(Duration::from_micros(mcfg.step_delay_us));
         }
     }
 }
@@ -988,7 +1701,7 @@ impl Client {
     }
 
     fn roundtrip(&mut self, req: Json) -> Result<Json> {
-        writeln!(self.writer, "{}", req.to_string())?;
+        writeln!(self.writer, "{req}")?;
         self.read_frame()
     }
 
@@ -1044,7 +1757,7 @@ impl Client {
         if let Some(d) = deadline_steps {
             fields.push(("deadline_steps", Json::num(d as f64)));
         }
-        writeln!(self.writer, "{}", Json::obj(fields).to_string())?;
+        writeln!(self.writer, "{}", Json::obj(fields))?;
         loop {
             let v = self.read_frame()?;
             match v.get("type").as_str() {
@@ -1099,7 +1812,8 @@ impl Client {
     }
 
     /// Full stats object including per-worker scheduler detail
-    /// (`active`, `queued`, `pool_utilization`, counters).
+    /// (`active`, `queued`, `pool_utilization`, counters) and the
+    /// frontend's `conn` gauge block.
     pub fn stats_detail(&mut self) -> Result<Json> {
         let v = self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))?;
         if v.get("type").as_str() == Some("stats") {
@@ -1112,8 +1826,9 @@ impl Client {
 
 #[cfg(test)]
 mod tests {
-    // Full server round-trips (which need artifacts + a trained model) live
-    // in rust/tests/server_integration.rs; here we only test protocol bits.
+    // Full server round-trips live in rust/tests/server_integration.rs
+    // (mock-mode, so they run without artifacts); here we test protocol
+    // bits and the deterministic mock stream.
     use crate::util::json::{parse, Json};
 
     #[test]
@@ -1140,5 +1855,17 @@ mod tests {
         assert_eq!(err.get("type").as_str(), Some("error"));
         assert_eq!(err.get("id").as_i64(), Some(-3));
         assert_eq!(err.get("message").as_str(), Some("nope"));
+    }
+
+    #[test]
+    fn mock_stream_is_prompt_deterministic_and_prompt_sensitive() {
+        let a = super::mock_stream_tokens("solve 2+2 step by step", 40);
+        let b = super::mock_stream_tokens("solve 2+2 step by step", 40);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 40);
+        let c = super::mock_stream_tokens("a different prompt", 40);
+        assert_ne!(a, c);
+        // empty prompts still stream deterministically
+        assert_eq!(super::mock_stream_tokens("", 3), vec![0, 1, 2]);
     }
 }

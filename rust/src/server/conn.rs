@@ -1,0 +1,394 @@
+//! Connection lifecycle for the event-driven server frontend.
+//!
+//! A connection moves through accept → route → stream → drain/shed, always
+//! owned by exactly one driver thread and always non-blocking:
+//!
+//! - reads land in a driver-shared scratch buffer and are line-assembled
+//!   per connection (`LineAssembler`);
+//! - every outbound frame goes through a **bounded** per-connection
+//!   `WriteQueue`. `push` never blocks: when a stalled reader lets the
+//!   queue reach its cap, the push reports `Push::Shed` and the driver
+//!   closes the connection and cancels its in-flight request. A slow
+//!   client can therefore never wedge a driver — and since workers hand
+//!   frames over an mpsc channel (they never touch sockets), it can never
+//!   block a scheduler round either.
+//!
+//! The module is deliberately socket-free except for the `Write` bound on
+//! `WriteQueue::pump`, so the concurrency suite can drive the exact
+//! production shed logic with plain in-memory writers — including the
+//! seeded `shed_replay` scenario check.sh double-runs as a byte-
+//! determinism gate.
+
+use std::collections::VecDeque;
+use std::io::{self, Write};
+
+use crate::util::rng::Rng;
+use crate::workload::{behavior_mix, ClientBehavior};
+
+/// Outcome of a (non-blocking) `WriteQueue::push`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Push {
+    /// Frame queued; it will reach the socket as the client drains.
+    Queued,
+    /// Queue was at its cap — the connection must be shed. The frame is
+    /// dropped (its client has stopped reading; a terminal frame could
+    /// not reach it anyway).
+    Shed,
+}
+
+/// Bounded per-connection outbound frame queue with a partial-write
+/// cursor. Depth counts undelivered frames, including the one currently
+/// mid-write; the high-water mark feeds the `conn.write_q_hwm` gauge.
+#[derive(Debug)]
+pub struct WriteQueue {
+    cap: usize,
+    frames: VecDeque<String>,
+    /// bytes of the frame being written right now (newline included)
+    buf: Vec<u8>,
+    pos: usize,
+    hwm: usize,
+    shed: bool,
+}
+
+impl WriteQueue {
+    pub fn new(cap: usize) -> Self {
+        WriteQueue {
+            cap: cap.max(1),
+            frames: VecDeque::new(),
+            buf: Vec::new(),
+            pos: 0,
+            hwm: 0,
+            shed: false,
+        }
+    }
+
+    /// Undelivered frames (queued + the partially-written one).
+    pub fn depth(&self) -> usize {
+        self.frames.len() + usize::from(self.pos < self.buf.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.depth() == 0
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Deepest the queue has ever been.
+    pub fn hwm(&self) -> usize {
+        self.hwm
+    }
+
+    /// Whether this queue has overflowed (the connection is condemned).
+    pub fn shed(&self) -> bool {
+        self.shed
+    }
+
+    /// Enqueue a frame. NEVER blocks: at the cap the queue flips to shed
+    /// and the frame is dropped. Exactly the push that would exceed `cap`
+    /// sheds — `cap` frames always fit.
+    pub fn push(&mut self, frame: String) -> Push {
+        if self.shed || self.depth() >= self.cap {
+            self.shed = true;
+            return Push::Shed;
+        }
+        self.frames.push_back(frame);
+        self.hwm = self.hwm.max(self.depth());
+        Push::Queued
+    }
+
+    /// Move queued frames toward a non-blocking writer until it would
+    /// block or the queue empties. Returns bytes written; partial writes
+    /// leave a cursor that the next pump resumes from.
+    pub fn pump<W: Write>(&mut self, w: &mut W) -> io::Result<usize> {
+        let mut wrote = 0usize;
+        loop {
+            if self.pos >= self.buf.len() {
+                let Some(f) = self.frames.pop_front() else { break };
+                self.buf.clear();
+                self.pos = 0;
+                self.buf.extend_from_slice(f.as_bytes());
+                self.buf.push(b'\n');
+            }
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(io::ErrorKind::WriteZero,
+                                              "socket accepted 0 bytes"))
+                }
+                Ok(n) => {
+                    self.pos += n;
+                    wrote += n;
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(wrote)
+    }
+
+    /// Pop a whole undelivered frame (no byte-level delivery) — the
+    /// simulation/test path; production delivery goes through `pump`.
+    pub fn pop_frame(&mut self) -> Option<String> {
+        self.frames.pop_front()
+    }
+}
+
+/// A pipelined request that would grow a single line past this many bytes
+/// is a protocol violation (or an attack); the connection is closed.
+pub const MAX_LINE_BYTES: usize = 1 << 20;
+
+/// Per-connection line assembly over non-blocking reads: raw chunks from
+/// the driver's shared scratch buffer accumulate here until a `\n`
+/// completes a request line.
+#[derive(Debug, Default)]
+pub struct LineAssembler {
+    buf: Vec<u8>,
+    overflowed: bool,
+}
+
+impl LineAssembler {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn extend(&mut self, chunk: &[u8]) {
+        if self.buf.len() + chunk.len() > MAX_LINE_BYTES
+            && !chunk.contains(&b'\n')
+            && !self.buf.contains(&b'\n')
+        {
+            self.overflowed = true;
+            return;
+        }
+        self.buf.extend_from_slice(chunk);
+    }
+
+    /// An unterminated line outgrew `MAX_LINE_BYTES`.
+    pub fn overflowed(&self) -> bool {
+        self.overflowed
+    }
+
+    /// Next complete line (without the terminator; `\r\n` tolerated),
+    /// lossily decoded. `None` until a full line has arrived.
+    pub fn next_line(&mut self) -> Option<String> {
+        let nl = self.buf.iter().position(|&b| b == b'\n')?;
+        let mut line: Vec<u8> = self.buf.drain(..=nl).collect();
+        line.pop(); // '\n'
+        if line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        Some(String::from_utf8_lossy(&line).into_owned())
+    }
+
+    /// Bytes buffered without a terminator yet.
+    pub fn pending_bytes(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+// ------------------------------------------------------------ shed replay
+
+/// Seeded, fully deterministic shed-replay scenario: a virtual-time replay
+/// of N connections' bounded write queues under the mixed client behaviors
+/// from `workload::behavior_mix` (prompt streamers, slow readers, cancel
+/// storms). Producers enqueue 1–2 frames per round; consumers drain per
+/// behavior; slow readers overflow their cap and are shed exactly like a
+/// production driver would shed them.
+///
+/// The returned transcript is a pure function of the arguments —
+/// `check.sh` runs it twice through `ctcdraft shedreplay` and diffs the
+/// outputs as the frontend's byte-determinism gate (the transport
+/// counterpart of the scheduler-sim replay gate).
+pub fn shed_replay(seed: u64, conns: usize, cap: usize, rounds: usize)
+                   -> String {
+    use std::fmt::Write as _;
+
+    struct Sim {
+        wq: WriteQueue,
+        behavior: ClientBehavior,
+        read: usize,
+        produced: usize,
+        state: &'static str, // live | done | shed | cancelled
+    }
+
+    let behaviors = behavior_mix(conns, 0.25, 0.15, seed);
+    let mut sims: Vec<Sim> = behaviors
+        .iter()
+        .map(|&behavior| Sim {
+            wq: WriteQueue::new(cap),
+            behavior,
+            read: 0,
+            produced: 0,
+            state: "live",
+        })
+        .collect();
+    let mut rng = Rng::new(seed ^ 0xC0FF_EE);
+    let mut out = String::new();
+    writeln!(out, "shed-replay seed={seed} conns={conns} cap={cap} \
+                   rounds={rounds}")
+        .unwrap();
+
+    for t in 0..rounds {
+        for (i, s) in sims.iter_mut().enumerate() {
+            // the rng must be drawn in a fixed order regardless of state,
+            // or an early shed would shift every later conn's stream
+            let k = 1 + rng.below(2);
+            if s.state != "live" {
+                continue;
+            }
+            // producer: the worker emitted k frames this round
+            for _ in 0..k {
+                s.produced += 1;
+                let frame = format!("f{}", s.produced);
+                if s.wq.push(frame) == Push::Shed {
+                    s.state = "shed";
+                    writeln!(out, "t={t} conn={i} shed q={} hwm={}",
+                             s.wq.depth(), s.wq.hwm())
+                        .unwrap();
+                    break;
+                }
+            }
+            if s.state != "live" {
+                continue;
+            }
+            // consumer: drain per behavior
+            let budget = match s.behavior {
+                ClientBehavior::Streaming => usize::MAX,
+                ClientBehavior::SlowReader { read_frames } => {
+                    read_frames.saturating_sub(s.read)
+                }
+                ClientBehavior::CancelStorm { after_frames } => {
+                    after_frames.saturating_sub(s.read)
+                }
+            };
+            let mut drained = 0usize;
+            while drained < budget && s.wq.pop_frame().is_some() {
+                drained += 1;
+            }
+            s.read += drained;
+            if let ClientBehavior::CancelStorm { after_frames } = s.behavior {
+                if s.read >= after_frames {
+                    s.state = "cancelled";
+                    writeln!(out, "t={t} conn={i} cancel read={}", s.read)
+                        .unwrap();
+                }
+            }
+        }
+    }
+
+    let (mut shed, mut cancelled, mut hwm_max) = (0usize, 0usize, 0usize);
+    for (i, s) in sims.iter_mut().enumerate() {
+        if s.state == "live" {
+            s.state = "done";
+        }
+        if s.state == "shed" {
+            shed += 1;
+        }
+        if s.state == "cancelled" {
+            cancelled += 1;
+        }
+        hwm_max = hwm_max.max(s.wq.hwm());
+        writeln!(out, "end conn={i} behavior={} status={} produced={} \
+                       read={} hwm={}",
+                 s.behavior.name(), s.state, s.produced, s.read, s.wq.hwm())
+            .unwrap();
+    }
+    writeln!(out, "total shed={shed} cancelled={cancelled} hwm_max={hwm_max}")
+        .unwrap();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_queue_sheds_exactly_past_cap() {
+        let mut wq = WriteQueue::new(3);
+        assert_eq!(wq.push("a".into()), Push::Queued);
+        assert_eq!(wq.push("b".into()), Push::Queued);
+        assert_eq!(wq.push("c".into()), Push::Queued);
+        assert!(!wq.shed(), "cap frames must fit");
+        assert_eq!(wq.push("d".into()), Push::Shed, "cap+1 sheds");
+        assert!(wq.shed());
+        assert_eq!(wq.push("e".into()), Push::Shed, "shed is sticky");
+        assert_eq!(wq.hwm(), 3);
+    }
+
+    /// Writer that accepts at most `quota` bytes per call, then signals
+    /// WouldBlock — a socket whose kernel buffer keeps filling.
+    struct Throttled {
+        sink: Vec<u8>,
+        quota: usize,
+    }
+
+    impl Write for Throttled {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if self.quota == 0 {
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.quota);
+            self.sink.extend_from_slice(&buf[..n]);
+            self.quota = 0;
+            Ok(n)
+        }
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_queue_pump_resumes_partial_writes_in_order() {
+        let mut wq = WriteQueue::new(8);
+        wq.push("hello".into());
+        wq.push("world".into());
+        let mut w = Throttled { sink: Vec::new(), quota: 3 };
+        // byte-level dribble: 3 bytes per pump, mid-frame cursors carried
+        for _ in 0..10 {
+            w.quota = 3;
+            wq.pump(&mut w).unwrap();
+        }
+        assert!(wq.is_empty());
+        assert_eq!(String::from_utf8(w.sink).unwrap(), "hello\nworld\n");
+        assert_eq!(wq.hwm(), 2);
+    }
+
+    #[test]
+    fn write_queue_depth_counts_partial_frame() {
+        let mut wq = WriteQueue::new(4);
+        wq.push("abcdef".into());
+        let mut w = Throttled { sink: Vec::new(), quota: 2 };
+        wq.pump(&mut w).unwrap(); // 2 of 7 bytes out; frame still pending
+        assert_eq!(wq.depth(), 1, "mid-write frame still undelivered");
+        w.quota = 100;
+        wq.pump(&mut w).unwrap();
+        assert_eq!(wq.depth(), 0);
+    }
+
+    #[test]
+    fn line_assembler_carries_partials_and_crlf() {
+        let mut la = LineAssembler::new();
+        la.extend(b"{\"op\":\"pi");
+        assert_eq!(la.next_line(), None);
+        la.extend(b"ng\"}\r\n{\"op\":\"stats\"}\n{tail");
+        assert_eq!(la.next_line().as_deref(), Some("{\"op\":\"ping\"}"));
+        assert_eq!(la.next_line().as_deref(), Some("{\"op\":\"stats\"}"));
+        assert_eq!(la.next_line(), None);
+        assert_eq!(la.pending_bytes(), 5);
+        assert!(!la.overflowed());
+    }
+
+    #[test]
+    fn shed_replay_is_byte_deterministic_and_sheds() {
+        let a = shed_replay(7, 24, 8, 64);
+        let b = shed_replay(7, 24, 8, 64);
+        assert_eq!(a, b, "shed replay must be a pure function of its seed");
+        assert!(a.contains(" shed "), "scenario must actually shed:\n{a}");
+        assert!(a.contains("status=shed"));
+        assert!(a.contains("status=done"));
+        assert!(a.ends_with('\n'));
+        // a different seed reshuffles behaviors -> different transcript
+        assert_ne!(a, shed_replay(8, 24, 8, 64));
+    }
+}

@@ -253,9 +253,74 @@ impl Trace {
     }
 }
 
+/// How a synthetic client consumes its token stream — the transport-side
+/// counterpart of `Trace`'s arrival process. Used by the frontend
+/// concurrency suite and the seeded shed-replay scenario to exercise the
+/// bounded write queues with realistic misbehavior, not just well-behaved
+/// streamers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientBehavior {
+    /// Reads every frame promptly; its write queue never backs up.
+    Streaming,
+    /// Reads `read_frames` frames, then stops reading entirely — the
+    /// stalled-reader case the shed path exists for.
+    SlowReader { read_frames: usize },
+    /// Reads `after_frames` frames, then cancels its request mid-stream.
+    CancelStorm { after_frames: usize },
+}
+
+impl ClientBehavior {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClientBehavior::Streaming => "streaming",
+            ClientBehavior::SlowReader { .. } => "slow_reader",
+            ClientBehavior::CancelStorm { .. } => "cancel_storm",
+        }
+    }
+}
+
+/// Deterministic behavior assignment for `n` clients: roughly
+/// `slow_frac` slow readers and `cancel_frac` cancel storms, the rest
+/// well-behaved streamers, shuffled by `seed` so misbehavers are not
+/// clustered at one end of the connection id space.
+pub fn behavior_mix(n: usize, slow_frac: f64, cancel_frac: f64, seed: u64)
+                    -> Vec<ClientBehavior> {
+    let mut rng = Rng::new(seed ^ 0xBEAA_17ED);
+    let slow = ((n as f64) * slow_frac).round() as usize;
+    let cancel = (((n as f64) * cancel_frac).round() as usize)
+        .min(n.saturating_sub(slow));
+    let mut mix = Vec::with_capacity(n);
+    for _ in 0..slow {
+        mix.push(ClientBehavior::SlowReader { read_frames: rng.below(4) });
+    }
+    for _ in 0..cancel {
+        mix.push(ClientBehavior::CancelStorm { after_frames: 1 + rng.below(6) });
+    }
+    while mix.len() < n {
+        mix.push(ClientBehavior::Streaming);
+    }
+    rng.shuffle(&mut mix);
+    mix
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn behavior_mix_is_deterministic_with_requested_fractions() {
+        let a = behavior_mix(40, 0.25, 0.10, 9);
+        let b = behavior_mix(40, 0.25, 0.10, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 40);
+        let slow = a.iter().filter(|c| c.name() == "slow_reader").count();
+        let cancel = a.iter().filter(|c| c.name() == "cancel_storm").count();
+        assert_eq!(slow, 10);
+        assert_eq!(cancel, 4);
+        // shuffled: not all misbehavers clustered at the front
+        assert!(a[..14].iter().any(|c| c.name() == "streaming"));
+        assert_ne!(a, behavior_mix(40, 0.25, 0.10, 10));
+    }
 
     #[test]
     fn mtbench_shape() {

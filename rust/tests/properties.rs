@@ -956,6 +956,176 @@ fn prop_prefix_cow_never_leaks_or_strands() {
     });
 }
 
+/// Regression for the counting (router-mirror) index: interning 40
+/// distinct 1-token chains crosses the node-table grow threshold (buckets
+/// start at 64, grow when live*2 > 64); a missing lookup afterwards must
+/// still terminate. Lives here with the other PrefixIndex properties
+/// (formerly a standalone review-scratch test file).
+#[test]
+fn grow_then_lookup_terminates() {
+    use ctcdraft::kvcache::PrefixIndex;
+    let mut idx = PrefixIndex::counting(1);
+    for i in 0..40i32 {
+        idx.intern_from_cache(&[i, 1000 + i], None);
+    }
+    let hit = idx.lookup(&[777, 778]);
+    assert_eq!(hit.blocks, 0);
+}
+
+// ------------------------------------------------- frontend write queues
+
+#[test]
+fn prop_write_queue_sheds_never_blocks() {
+    use ctcdraft::kvcache::{PoolLease, SharedBlockPool, BLOCK_POSITIONS};
+    use ctcdraft::server::conn::{Push, WriteQueue};
+    use std::collections::VecDeque;
+    use std::sync::Arc;
+    // Model-based check of the bounded-write-queue shed contract under
+    // random enqueue/drain/stall interleavings, coupled to a shared-pool
+    // lease the way a production connection couples to its worker slot:
+    // - an enqueue NEVER blocks: `push` is a pure call answering Queued or
+    //   Shed, whatever the reader is doing (stalls only change WHICH);
+    // - shed fires exactly on the push that would exceed `cap` — `cap`
+    //   frames always fit, the cap+1'th condemns — and is sticky after;
+    // - delivered frames preserve FIFO order against a model queue;
+    // - every shed connection's cancel reaches the engine: the slot's
+    //   lease blocks are released, and the ledger returns to baseline —
+    //   cluster free == total, nothing leaked or stranded (the PR-6
+    //   no-leak/no-strand accounting style).
+    Prop::new("write_queue_shed").check(|rng| {
+        let n = 1 + rng.below(6);
+        let cap = 1 + rng.below(8);
+        // sized so `ensure` can never fail on pool pressure: worst case is
+        // every round op landing on one never-shed conn (300 ops × ≤5
+        // positions) plus each conn's prompt (≤48) and block rounding
+        let worst_positions =
+            300 * 5 + n * (48 + BLOCK_POSITIONS);
+        let pool = Arc::new(SharedBlockPool::new(worst_positions, 1));
+        let total = pool.total_blocks();
+        let mut lease = PoolLease::new(pool.clone(), 0, n);
+        struct C {
+            wq: WriteQueue,
+            model: VecDeque<String>,
+            stalled: bool,
+            active: bool,
+            positions: usize,
+        }
+        let mut conns: Vec<C> = (0..n)
+            .map(|_| C {
+                wq: WriteQueue::new(cap),
+                model: VecDeque::new(),
+                stalled: false,
+                active: false,
+                positions: 0,
+            })
+            .collect();
+        for op in 0..300 {
+            let i = rng.below(n);
+            let c = &mut conns[i];
+            match rng.below(8) {
+                // admit: the conn's request takes a slot + prompt blocks
+                0 if !c.active && !c.wq.shed() => {
+                    c.positions = 1 + rng.below(48);
+                    lease
+                        .ensure(i, c.positions)
+                        .map_err(|e| format!("op {op}: admit failed: {e}"))?;
+                    c.active = true;
+                }
+                // worker round: grow the lease, then enqueue a tok frame
+                1..=4 if c.active => {
+                    c.positions += 1 + rng.below(4);
+                    lease
+                        .ensure(i, c.positions)
+                        .map_err(|e| format!("op {op}: grow failed: {e}"))?;
+                    let was_shed = c.wq.shed();
+                    let depth = c.wq.depth();
+                    let frame = format!("f{op}");
+                    match c.wq.push(frame.clone()) {
+                        Push::Queued => {
+                            if was_shed || depth >= cap {
+                                return Err(format!(
+                                    "op {op}: queued past cap (depth \
+                                     {depth}, cap {cap}, shed {was_shed})"));
+                            }
+                            c.model.push_back(frame);
+                        }
+                        Push::Shed => {
+                            if !was_shed && depth < cap {
+                                return Err(format!(
+                                    "op {op}: shed below cap (depth {depth} \
+                                     < {cap})"));
+                            }
+                            // the driver tears the conn down: its cancel
+                            // reaches the engine, slot + blocks come back
+                            lease.release(i);
+                            c.active = false;
+                            c.positions = 0;
+                            c.model.clear();
+                        }
+                    }
+                }
+                // client drains: delivery must be FIFO vs the model (shed
+                // conns are closed — nobody drains them anymore)
+                5..=6 if !c.stalled && !c.wq.shed() => {
+                    for _ in 0..1 + rng.below(cap) {
+                        let Some(got) = c.wq.pop_frame() else { break };
+                        let want = c.model.pop_front().ok_or_else(|| {
+                            format!("op {op}: delivered unqueued frame {got}")
+                        })?;
+                        if got != want {
+                            return Err(format!(
+                                "op {op}: order broken: {got} != {want}"));
+                        }
+                    }
+                }
+                // reader stalls (or resumes): stalling can only ever lead
+                // to shed, never to a blocked push
+                _ => c.stalled = !c.stalled,
+            }
+            let held: usize = (0..n).map(|s| lease.allocated(s)).sum();
+            if pool.cluster_free_blocks() + held != total {
+                return Err(format!(
+                    "op {op}: leak — free {} + held {held} != {total}",
+                    pool.cluster_free_blocks()));
+            }
+        }
+        for (s, c) in conns.iter_mut().enumerate() {
+            if c.wq.hwm() > cap {
+                return Err(format!(
+                    "conn {s}: hwm {} exceeded cap {cap}", c.wq.hwm()));
+            }
+            if c.wq.shed() {
+                // sticky: a condemned queue never accepts again, and its
+                // cancel already returned the slot's blocks
+                if c.wq.push("post".into()) != Push::Shed {
+                    return Err(format!("conn {s}: shed not sticky"));
+                }
+                if lease.allocated(s) != 0 {
+                    return Err(format!(
+                        "conn {s}: shed but {} blocks still leased",
+                        lease.allocated(s)));
+                }
+            }
+        }
+        // close every conn: the ledger must return to baseline
+        for s in 0..n {
+            lease.release(s);
+        }
+        if pool.cluster_free_blocks() != total {
+            return Err(format!(
+                "teardown leaked: cluster free {} of {total}",
+                pool.cluster_free_blocks()));
+        }
+        drop(lease);
+        if pool.global_free_blocks() != total {
+            return Err(format!(
+                "lease drop stranded: global {} of {total}",
+                pool.global_free_blocks()));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_kvcache_append_preserves_earlier_rows() {
     use ctcdraft::kvcache::SeqCache;
