@@ -364,6 +364,16 @@ impl SharedBlockPool {
             let mut passes = self.shards.len() * 2;
             while got < want && passes > 0 {
                 passes -= 1;
+                // a give_back racing this scan may land (or spill) on the
+                // GLOBAL list after the refill above ran — re-pull it each
+                // pass so blocks returned mid-scan aren't misread as
+                // cluster exhaustion
+                let refilled = take_upto(&self.global_free, want - got);
+                if refilled > 0 {
+                    self.refills.fetch_add(1, Ordering::Relaxed);
+                    got += refilled;
+                    continue;
+                }
                 let mut victim = usize::MAX;
                 let mut best = 0usize;
                 for (s, shard) in self.shards.iter().enumerate() {
@@ -377,7 +387,7 @@ impl SharedBlockPool {
                     }
                 }
                 if victim == usize::MAX {
-                    break; // every other shard is empty
+                    break; // every other shard AND the global list are empty
                 }
                 let stolen = take_upto(&self.shards[victim], want - got);
                 if stolen > 0 {

@@ -16,7 +16,13 @@
 //! - **N connection drivers** (`--io-threads`, default one per core): each
 //!   multiplexes many *non-blocking* sockets through a small poll loop —
 //!   read sweep into a driver-shared scratch buffer, per-connection line
-//!   assembly (`conn::LineAssembler`), op dispatch, and a write sweep. All
+//!   assembly (`conn::LineAssembler`), op dispatch, and a write sweep.
+//!   Per-connection buffering is bounded on BOTH sides: reads stop once
+//!   `MAX_LINE_BYTES` are buffered (dispatch is one-op-at-a-time, so a
+//!   client pipelining requests behind a long generate is backpressured
+//!   via TCP, not buffered without bound) and each sweep is budgeted
+//!   (`READ_SWEEP_BUDGET` bytes, `RELAY_FRAME_BUDGET` frames) so one
+//!   busy connection can't starve its driver's co-tenants. All
 //!   outbound frames go through a **bounded per-connection write queue**
 //!   (`conn::WriteQueue`, `--conn-write-cap` frames): a stalled reader's
 //!   queue overflows and the connection is SHED — closed, its in-flight
@@ -391,12 +397,17 @@ fn acceptor_loop(listener: TcpListener, regs: Vec<Sender<TcpStream>>,
             Ok((stream, _)) => {
                 if gauges.open() >= max_conns as u64 {
                     gauges.on_reject();
-                    // accepted sockets are blocking by default; bound the
-                    // courtesy write so a reject storm can't stall accepts
+                    // the courtesy frame is strictly best-effort: ONE
+                    // non-blocking write (a fresh socket's empty send
+                    // buffer almost always takes it whole). A flood of
+                    // non-reading rejects must not serialize stalls in
+                    // the accept loop, so never wait on the socket.
                     let mut s = stream;
-                    let _ = s.set_write_timeout(
-                        Some(Duration::from_millis(50)));
-                    let _ = writeln!(s, "{}", simple_frame("busy", 0));
+                    if s.set_nonblocking(true).is_ok() {
+                        let frame =
+                            format!("{}\n", simple_frame("busy", 0));
+                        let _ = s.write(frame.as_bytes());
+                    }
                     continue; // drop closes
                 }
                 if stream.set_nonblocking(true).is_err() {
@@ -618,14 +629,25 @@ fn push_frame(fe: &Frontend, c: &mut Conn, frame: String) -> bool {
     }
 }
 
+/// Per-round ceiling on bytes read from one connection, so a sender whose
+/// data arrives as fast as the scratch reads drain it can't pin the driver
+/// in the inner read loop and delay its co-tenant connections.
+const READ_SWEEP_BUDGET: usize = 64 * 1024;
+
 /// One scheduling round for one connection: read sweep, op poll, request
 /// dispatch, write sweep. Returns false when the connection must be torn
 /// down (dead socket, shed, or orderly close).
 fn service_conn(fe: &Frontend, c: &mut Conn, scratch: &mut [u8],
                 draining: bool, progress: &mut bool) -> bool {
-    // read sweep: pull whatever the socket has into the line assembler
+    // read sweep: pull whatever the socket has into the line assembler.
+    // Stops at READ_SWEEP_BUDGET bytes per round (fairness across the
+    // driver's conns) and whenever MAX_LINE_BYTES are already buffered:
+    // dispatch is one-op-at-a-time, so a client that pipelines requests
+    // behind a long generate must be backpressured via TCP — not buffered
+    // without bound. Reads resume as dispatch drains the assembler.
     if !c.eof && !c.closing {
-        loop {
+        let mut budget = READ_SWEEP_BUDGET;
+        while budget > 0 && c.lines.pending_bytes() < conn::MAX_LINE_BYTES {
             match c.stream.read(scratch) {
                 Ok(0) => {
                     c.eof = true;
@@ -633,6 +655,7 @@ fn service_conn(fe: &Frontend, c: &mut Conn, scratch: &mut [u8],
                 }
                 Ok(n) => {
                     c.lines.extend(&scratch[..n]);
+                    budget = budget.saturating_sub(n);
                     *progress = true;
                 }
                 Err(ref e) if e.kind() == io::ErrorKind::WouldBlock => break,
@@ -676,13 +699,27 @@ fn service_conn(fe: &Frontend, c: &mut Conn, scratch: &mut [u8],
     !(c.closing && c.op.is_none() && c.wq.is_empty())
 }
 
+/// Per-round ceiling on frames relayed from one generate's worker channel,
+/// so a fast worker paired with a fast-draining socket can't keep one
+/// connection in the relay loop for its whole stream and starve co-tenant
+/// connections on the same driver; the op resumes next round.
+const RELAY_FRAME_BUDGET: usize = 64;
+
 /// Advance a connection's pending op without blocking. Returns false when
 /// the connection was shed while relaying.
 fn poll_op(fe: &Frontend, c: &mut Conn, progress: &mut bool) -> bool {
     let Some(op) = c.op.take() else { return true };
     match op {
         PendingOp::Generate { client_id, token, worker, class, rrx } => {
+            let mut budget = RELAY_FRAME_BUDGET;
             loop {
+                if budget == 0 {
+                    c.op = Some(PendingOp::Generate {
+                        client_id, token, worker, class, rrx,
+                    });
+                    return true;
+                }
+                budget -= 1;
                 match rrx.try_recv() {
                     Ok(line) => {
                         *progress = true;

@@ -145,6 +145,8 @@ pub const MAX_LINE_BYTES: usize = 1 << 20;
 #[derive(Debug, Default)]
 pub struct LineAssembler {
     buf: Vec<u8>,
+    /// bytes after the last `\n` in `buf` — the unterminated tail
+    tail: usize,
     overflowed: bool,
 }
 
@@ -154,17 +156,23 @@ impl LineAssembler {
     }
 
     pub fn extend(&mut self, chunk: &[u8]) {
-        if self.buf.len() + chunk.len() > MAX_LINE_BYTES
-            && !chunk.contains(&b'\n')
-            && !self.buf.contains(&b'\n')
-        {
+        if self.overflowed {
+            return;
+        }
+        match chunk.iter().rposition(|&b| b == b'\n') {
+            Some(nl) => self.tail = chunk.len() - nl - 1,
+            None => self.tail += chunk.len(),
+        }
+        if self.tail > MAX_LINE_BYTES {
             self.overflowed = true;
             return;
         }
         self.buf.extend_from_slice(chunk);
     }
 
-    /// An unterminated line outgrew `MAX_LINE_BYTES`.
+    /// An unterminated line outgrew `MAX_LINE_BYTES`. Complete pipelined
+    /// lines sitting in front of it don't excuse it — only the tail
+    /// counts, so the guard can't be disabled by keeping a `\n` buffered.
     pub fn overflowed(&self) -> bool {
         self.overflowed
     }
@@ -377,6 +385,34 @@ mod tests {
         assert_eq!(la.next_line(), None);
         assert_eq!(la.pending_bytes(), 5);
         assert!(!la.overflowed());
+    }
+
+    #[test]
+    fn line_overflow_fires_even_with_buffered_newlines() {
+        // regression: a complete pipelined line parked in the buffer (its
+        // '\n' included) must NOT disable the giant-line guard for the
+        // unterminated tail growing behind it
+        let mut la = LineAssembler::new();
+        la.extend(b"{\"op\":\"ping\"}\n");
+        let junk = vec![b'x'; 64 * 1024];
+        for _ in 0..=(MAX_LINE_BYTES / junk.len()) {
+            la.extend(&junk);
+        }
+        assert!(la.overflowed(), "tail past MAX_LINE_BYTES must overflow");
+        // the complete line in front is still dispatchable
+        assert_eq!(la.next_line().as_deref(), Some("{\"op\":\"ping\"}"));
+    }
+
+    #[test]
+    fn line_assembler_tail_resets_on_newline() {
+        let mut la = LineAssembler::new();
+        let half = vec![b'y'; MAX_LINE_BYTES / 2 + 1];
+        la.extend(&half);
+        la.extend(b"\n"); // line terminated: tail resets
+        la.extend(&half);
+        assert!(!la.overflowed(),
+                "terminated lines must not accumulate into the tail");
+        assert!(la.next_line().is_some());
     }
 
     #[test]
