@@ -76,6 +76,9 @@ pub struct BetaController {
     base_len: usize,
     /// EWMA of accepted tokens per sequence per decode round
     ewma: f64,
+    /// degradation-ladder override: speculation forced off (every plan is
+    /// the single-node plain-decode plan) regardless of policy
+    forced_plain: bool,
 }
 
 impl BetaController {
@@ -93,11 +96,25 @@ impl BetaController {
             base_len: base_len.max(1),
             // optimistic start: behave like Fixed until evidence arrives
             ewma: base_len.max(1) as f64,
+            forced_plain: false,
         }
     }
 
     pub fn policy(&self) -> BetaPolicy {
         self.policy
+    }
+
+    /// Degradation-ladder hook (`supervisor::Rung::NoSpec` and above):
+    /// while set, `plan` returns the single-node plain-decode plan — a
+    /// lossless fallback that sheds all draft/verify overhead under
+    /// pressure. The acceptance EWMA keeps updating so re-enabling
+    /// speculation resumes from current evidence.
+    pub fn force_plain(&mut self, on: bool) {
+        self.forced_plain = on;
+    }
+
+    pub fn is_forced_plain(&self) -> bool {
+        self.forced_plain
     }
 
     /// Current acceptance EWMA (tokens per sequence per round).
@@ -122,6 +139,12 @@ impl BetaController {
     ///   being accepted (EWMA), clamped to the trained target length;
     /// * beam width never exceeds what the node budget can hold.
     pub fn plan(&self, batch: usize) -> DraftPlan {
+        if self.forced_plain {
+            // one path, one level, root-only tree: pure autoregressive
+            // decode — the engine's tree builder degenerates to a single
+            // next-token verify, so correctness is unchanged
+            return DraftPlan { max_paths: 1, max_len: 1, tree_nodes: 1 };
+        }
         match self.policy {
             BetaPolicy::Fixed => DraftPlan {
                 max_paths: self.base_paths,
@@ -214,6 +237,23 @@ mod tests {
             }
             c.observe(5);
             assert!(c.plan(1).tree_nodes <= 1);
+        }
+    }
+
+    #[test]
+    fn force_plain_overrides_any_policy_and_is_reversible() {
+        for policy in [BetaPolicy::Fixed, BetaPolicy::Adaptive] {
+            let mut c = BetaController::new(policy, 16, 32, 6);
+            let before = c.plan(2);
+            c.force_plain(true);
+            assert!(c.is_forced_plain());
+            assert_eq!(c.plan(2),
+                       DraftPlan { max_paths: 1, max_len: 1, tree_nodes: 1 });
+            // evidence keeps flowing while degraded
+            c.observe(1);
+            c.force_plain(false);
+            assert_eq!(c.plan(2).tree_nodes, before.tree_nodes,
+                       "{policy:?}: leaving no-spec restores the budget");
         }
     }
 

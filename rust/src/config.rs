@@ -355,6 +355,40 @@ impl Default for FrontendConfig {
     }
 }
 
+/// Worker supervision + fault-tolerance knobs (`supervisor.rs`): panic
+/// isolation with capped-backoff restarts, the round watchdog, and the
+/// router's failover retry budget. Timings here are wall-clock for the
+/// real server; the sim uses virtual-step analogues so replays stay
+/// byte-for-byte deterministic.
+#[derive(Debug, Clone)]
+pub struct SupervisorConfig {
+    /// run worker loops under `catch_unwind` with supervised restarts; off
+    /// reproduces the legacy die-with-the-process behavior
+    pub enabled: bool,
+    /// restart backoff base (ms), doubled per consecutive restart
+    pub backoff_base_ms: u64,
+    /// restart backoff cap (ms)
+    pub backoff_cap_ms: u64,
+    /// round watchdog: wall ms a busy worker's heartbeat may stagnate
+    /// before it is condemned like a crash; 0 disables the watchdog
+    pub watchdog_ms: u64,
+    /// failover budget: times one generate may be resubmitted to a
+    /// surviving worker after its worker crashed (client sees `retrying`)
+    pub retry_budget: u32,
+}
+
+impl Default for SupervisorConfig {
+    fn default() -> Self {
+        SupervisorConfig {
+            enabled: true,
+            backoff_base_ms: 50,
+            backoff_cap_ms: 2_000,
+            watchdog_ms: 0,
+            retry_budget: 2,
+        }
+    }
+}
+
 /// Artifact-free serving: workers run a deterministic mock engine (token
 /// streams are a pure function of the prompt, via `testkit::mock_tokens`)
 /// instead of loading a Runtime. This is what the C10k/concurrency suite
@@ -372,6 +406,10 @@ pub struct MockServeConfig {
     pub beta: usize,
     /// per-round pacing sleep (µs); 0 = step as fast as possible
     pub step_delay_us: u64,
+    /// seeded fault injection (`workload::FaultPlan::seeded`): mock
+    /// workers panic/stall on schedule so supervision and failover are
+    /// exercised over the real transport. None = no faults (default).
+    pub fault_seed: Option<u64>,
 }
 
 impl Default for MockServeConfig {
@@ -382,6 +420,7 @@ impl Default for MockServeConfig {
             pool_positions: 1 << 16,
             beta: 4,
             step_delay_us: 500,
+            fault_seed: None,
         }
     }
 }

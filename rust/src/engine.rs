@@ -72,6 +72,7 @@ use crate::kvcache::{PoolLease, PrefixIndex, SeqCache, NO_NODE};
 use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
                      StageBreakdown};
 use crate::sched::{AdmitRate, Priority, ReqMeta};
+use crate::supervisor::lock_unpoisoned;
 
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
@@ -673,6 +674,14 @@ impl Engine {
         self.cfg.queue_cap = cap;
     }
 
+    /// Degradation-ladder hook (`supervisor::Rung::NoSpec` and above):
+    /// force (or release) plain autoregressive decode. Lossless — the β
+    /// controller returns the single-node plan and the tree verify
+    /// degenerates to one next-token check per sequence.
+    pub fn set_force_plain(&mut self, on: bool) {
+        self.beta.force_plain(on);
+    }
+
     /// Scheduler event log (admissions/evictions/completions, step-stamped).
     pub fn events(&self) -> &EventLog {
         &self.events
@@ -794,7 +803,13 @@ impl Engine {
             s.as_ref().map(|q| q.id == id).unwrap_or(false)
         });
         if let Some(slot) = slot {
-            let seq = self.slots[slot].take().expect("cancel slot");
+            // the scan above saw the id here, so an empty slot now is a
+            // slot-state invariant violation — count it and report the
+            // cancel as a miss instead of tearing the worker down
+            let Some(seq) = self.slots[slot].take() else {
+                self.metrics.inc("sched.invariant_violations", 1);
+                return false;
+            };
             self.release_prefix(seq.prefix_ref);
             self.pool.release(slot);
             self.events.push(SchedEvent::Cancelled { step: self.step_no, id });
@@ -808,7 +823,7 @@ impl Engine {
     /// slot-teardown path (cancel / evict / reap). No-op for `NO_NODE`.
     fn release_prefix(&mut self, node: usize) {
         if node != NO_NODE {
-            self.index.lock().unwrap().release(node);
+            lock_unpoisoned(&self.index).release(node);
         }
     }
 
@@ -878,7 +893,7 @@ impl Engine {
         // (`set_shared`); their KV rows are seeded into the fresh cache
         // below so prefill resumes a drafter-window back from the first
         // novel position instead of at token zero.
-        let hit = self.index.lock().unwrap().lookup(&ids);
+        let hit = lock_unpoisoned(&self.index).lookup(&ids);
         self.pool.set_shared(slot, hit.blocks);
         if self.pool.ensure(slot, prefill_len).is_err() {
             self.pool.set_shared(slot, 0);
@@ -896,7 +911,7 @@ impl Engine {
         let mut cache =
             SeqCache::new(self.layers, self.lmax, self.heads, self.head_dim);
         {
-            let mut idx = self.index.lock().unwrap();
+            let mut idx = lock_unpoisoned(&self.index);
             idx.record_admit(&hit);
             // the seq ref on the deepest matched node pins its whole chain
             // (hash-cons child refs) against eviction while we read it
@@ -1004,7 +1019,7 @@ impl Engine {
                     // preempting (or skipping) a sequence
                     let want = self.pool.blocks_for(prefill_len);
                     let freed =
-                        self.index.lock().unwrap().evict_unreferenced(want);
+                        lock_unpoisoned(&self.index).evict_unreferenced(want);
                     if freed > 0 {
                         self.pool.shared().give_back(self.pool.worker(), freed);
                     }
@@ -1050,8 +1065,9 @@ impl Engine {
                             if self.pool.can_fit(prefill_len) {
                                 break;
                             }
-                            let vid = self.evict(running[v].0);
-                            rep.evicted.push(vid);
+                            if let Some(vid) = self.evict(running[v].0) {
+                                rep.evicted.push(vid);
+                            }
                         }
                         let req = self.wait_queue.remove(i);
                         match self.admit_req(req)? {
@@ -1134,8 +1150,14 @@ impl Engine {
     /// prompt+generated and decoding resumes losslessly (recompute-style
     /// preemption). A sequence evicted mid-prefill restarts its prefill
     /// from scratch on re-admission.
-    fn evict(&mut self, slot: usize) -> u64 {
-        let mut seq = self.slots[slot].take().expect("evict empty slot");
+    fn evict(&mut self, slot: usize) -> Option<u64> {
+        // every caller just computed this slot as occupied; an empty slot
+        // here is a bookkeeping bug, but one a serving worker survives —
+        // count it and decline the eviction
+        let Some(mut seq) = self.slots[slot].take() else {
+            self.metrics.inc("sched.invariant_violations", 1);
+            return None;
+        };
         self.release_prefix(seq.prefix_ref);
         self.pool.release(slot);
         seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
@@ -1159,7 +1181,7 @@ impl Engine {
         self.scratch.synced[slot] = 0;
         self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
         self.metrics.inc("sched.evicted", 1);
-        id
+        Some(id)
     }
 
     /// Preempt a running sequence by id back to the wait queue (recompute-
@@ -1169,10 +1191,7 @@ impl Engine {
             s.as_ref().map(|q| q.id == id).unwrap_or(false)
         });
         match slot {
-            Some(s) => {
-                self.evict(s);
-                true
-            }
+            Some(s) => self.evict(s).is_some(),
             None => false,
         }
     }
@@ -1183,12 +1202,24 @@ impl Engine {
     /// tokens done in total, prefill total).
     fn prefill_round(&mut self, slot: usize, allowed: usize)
                      -> Result<(u64, usize, usize, usize)> {
-        let mut seq = self.slots[slot].take().expect("prefill on empty slot");
+        // the caller's prefill_order snapshot said this slot is mid-prefill;
+        // an empty slot or a missing PrefillState here is a slot-state
+        // invariant violation — count it and skip the round (all-zero
+        // return, filtered by the caller) rather than panic the worker
+        let Some(mut seq) = self.slots[slot].take() else {
+            self.metrics.inc("sched.invariant_violations", 1);
+            return Ok((0, 0, 0, 0));
+        };
         let n = self.prefill_n;
         let m = self.lmax + n;
-        let (mut done, total) = {
-            let st = seq.prefill.as_ref().expect("prefill_round without state");
-            (st.done, st.ids.len())
+        let (mut done, total) = match seq.prefill.as_ref() {
+            Some(st) => (st.done, st.ids.len()),
+            None => {
+                self.metrics.inc("sched.invariant_violations", 1);
+                let id = seq.id;
+                self.slots[slot] = Some(seq);
+                return Ok((id, 0, 0, 0));
+            }
         };
         // single-sequence gather buffers, synced incrementally while this
         // slot keeps prefilling (only fresh cache rows are copied per chunk)
@@ -1287,7 +1318,7 @@ impl Engine {
                 let full = st.ids.len() / bp;
                 if full > 0 {
                     let (deepest, created) = {
-                        let mut idx = self.index.lock().unwrap();
+                        let mut idx = lock_unpoisoned(&self.index);
                         let r = idx.intern_from_cache(&st.ids, Some(&seq.cache));
                         // swap the seq ref from the admission-time node to
                         // the full published chain
@@ -1412,9 +1443,17 @@ impl Engine {
             let slo = self.cfg.slo;
             let now = self.step_no;
             self.scratch.prefill_order.sort_unstable_by(|&a, &b| {
-                let ma = slots[a].as_ref().expect("prefill slot").meta();
-                let mb = slots[b].as_ref().expect("prefill slot").meta();
-                slo.urgency_cmp(&ma, &mb, now).then(a.cmp(&b))
+                // slots were snapshotted as occupied two statements ago; a
+                // comparator cannot bump the violation counter, so an empty
+                // slot just sorts last (and prefill_round counts it)
+                match (slots[a].as_ref(), slots[b].as_ref()) {
+                    (Some(qa), Some(qb)) => slo
+                        .urgency_cmp(&qa.meta(), &qb.meta(), now)
+                        .then(a.cmp(&b)),
+                    (Some(_), None) => std::cmp::Ordering::Less,
+                    (None, Some(_)) => std::cmp::Ordering::Greater,
+                    (None, None) => a.cmp(&b),
+                }
             });
         }
         for idx in 0..self.scratch.prefill_order.len() {
@@ -1423,6 +1462,9 @@ impl Engine {
             }
             let b = self.scratch.prefill_order[idx];
             let (id, did, done, total) = self.prefill_round(b, budget_left)?;
+            if did == 0 && total == 0 {
+                continue; // invariant violation counted inside prefill_round
+            }
             budget_left = budget_left.saturating_sub(did);
             report.prefilled.push((id, did));
             self.events.push(SchedEvent::Prefill {
@@ -1653,7 +1695,10 @@ impl Engine {
         for b in 0..self.slots.len() {
             let done = self.slots[b].as_ref().map(|s| s.done).unwrap_or(false);
             if done {
-                let mut seq = self.slots[b].take().unwrap();
+                let Some(mut seq) = self.slots[b].take() else {
+                    self.metrics.inc("sched.invariant_violations", 1);
+                    continue;
+                };
                 self.release_prefix(seq.prefix_ref);
                 self.pool.release(b);
                 seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
@@ -1686,7 +1731,7 @@ impl Engine {
                 // a live sequence (see fill_slots)
                 let want = self.pool.blocks_for(need_len);
                 let freed =
-                    self.index.lock().unwrap().evict_unreferenced(want);
+                    lock_unpoisoned(&self.index).evict_unreferenced(want);
                 if freed > 0 {
                     self.pool.shared().give_back(self.pool.worker(), freed);
                     continue;
@@ -1700,14 +1745,18 @@ impl Engine {
                     .collect();
                 let metas: Vec<ReqMeta> =
                     running.iter().map(|(_, m)| m.clone()).collect();
-                let victim = running[self
-                    .cfg
-                    .slo
-                    .pick_victim(&metas, now)
-                    .expect("pool pressure implies a live sequence")]
-                    .0;
-                let vid = self.evict(victim);
-                report.evicted.push(vid);
+                // pool pressure with no live sequence (or an un-evictable
+                // victim) would be an accounting bug — count it and stop
+                // resolving instead of wedging the worker in this loop
+                let Some(v) = self.cfg.slo.pick_victim(&metas, now) else {
+                    self.metrics.inc("sched.invariant_violations", 1);
+                    break;
+                };
+                let victim = running[v].0;
+                match self.evict(victim) {
+                    Some(vid) => report.evicted.push(vid),
+                    None => break,
+                }
                 if victim == slot {
                     break;
                 }
@@ -1761,7 +1810,7 @@ impl Engine {
             .set_gauge("pool.exhaustions", shared.exhaustions() as f64);
         // prefix-sharing visibility (radix prompt index, PR 6)
         let (p_hits, p_misses, p_saved, p_forks, p_owned) = {
-            let idx = self.index.lock().unwrap();
+            let idx = lock_unpoisoned(&self.index);
             (idx.hits(), idx.misses(), idx.blocks_saved(), idx.forks(),
              idx.owned_blocks())
         };

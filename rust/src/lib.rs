@@ -29,6 +29,7 @@ pub mod metrics;
 pub mod runtime;
 pub mod sched;
 pub mod server;
+pub mod supervisor;
 pub mod testkit;
 pub mod tokenizer;
 pub mod tree;

@@ -12,15 +12,17 @@ use anyhow::{bail, Result};
 
 use ctcdraft::adapt::BetaPolicy;
 use ctcdraft::bench;
-use ctcdraft::config::{EngineConfig, FrontendConfig, Method, MockServeConfig};
+use ctcdraft::config::{EngineConfig, FrontendConfig, Method, MockServeConfig,
+                       SupervisorConfig};
 use ctcdraft::engine::Engine;
 use ctcdraft::metrics::RunSummary;
 use ctcdraft::runtime::Runtime;
 use ctcdraft::sched::{Priority, SloPolicy};
 use ctcdraft::server::{Client, Server, ServerConfig};
+use ctcdraft::supervisor::LadderConfig;
 use ctcdraft::testkit::{MockCluster, MockSched, SchedulerSim, SimOptions};
 use ctcdraft::util::cli::Cli;
-use ctcdraft::workload::Trace;
+use ctcdraft::workload::{FaultPlan, Trace};
 use ctcdraft::{default_artifacts_dir, workload};
 
 fn main() {
@@ -257,7 +259,17 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
                concurrency-test serving mode)")
         .opt("mock-slots", "mock mode: batch slots per worker", Some("64"))
         .opt("mock-step-delay-us", "mock mode: round pacing (µs)",
-             Some("500"));
+             Some("500"))
+        .opt("mock-fault-seed",
+             "mock mode: seeded worker fault injection (panics + stalls) to \
+              exercise supervision, failover and the `retrying` wire frame",
+             None)
+        .opt("watchdog-ms",
+             "round watchdog: wall-clock ms a worker heartbeat may stagnate \
+              before placement routes around it (0 = off)", Some("0"))
+        .opt("retry-budget",
+             "worker-loss failovers per request before a terminal busy",
+             Some("2"));
     let a = parse_args(cli, argv)?;
     let frontend = FrontendConfig {
         io_threads: a.usize("io-threads", 0),
@@ -269,6 +281,7 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         slots: a.usize("mock-slots", 64),
         queue_cap: a.usize("queue-cap", 0),
         step_delay_us: a.u64("mock-step-delay-us", 500),
+        fault_seed: a.get("mock-fault-seed").and_then(|v| v.parse().ok()),
         ..MockServeConfig::default()
     });
     let cfg = ServerConfig {
@@ -278,6 +291,11 @@ fn cmd_serve(argv: &[String]) -> Result<()> {
         engine: build_engine_cfg(&a)?,
         frontend,
         mock,
+        supervisor: SupervisorConfig {
+            watchdog_ms: a.u64("watchdog-ms", 0),
+            retry_budget: a.usize("retry-budget", 2) as u32,
+            ..SupervisorConfig::default()
+        },
     };
     let server = Server::start(cfg)?;
     println!("listening on {} — ctrl-c to stop", server.local_addr);
@@ -381,6 +399,11 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
              "β analog for the mock: fixed | adaptive (batch-adaptive \
               accepted-token range via adapt::BetaController)", Some("fixed"))
         .opt("cancel-prob", "per-request cancellation probability", Some("0"))
+        .opt("faults",
+             "seeded fault plan: worker panics, step stalls, pool spikes and \
+              conn errors injected at exact virtual steps (chaos gate; \
+              forces the cluster backend and arms the degradation ladder)",
+             None)
         .flag("no-prefix-share",
               "disable the prefix-sharing KV cache (cold baseline; \
                check.sh diffs its prefill_steps against the warm run)")
@@ -413,15 +436,26 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
     };
     let beta = BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?;
     let share = !a.flag("no-prefix-share");
+    let workers = a.usize("workers", 1);
+    // A fault plan is injected through the cluster backend (it owns the
+    // supervision machinery), so `--faults` forces MockCluster even for a
+    // single worker. Fault-free runs keep the legacy backend choice and
+    // their byte-identical event logs.
+    let fault_plan = a
+        .get("faults")
+        .map(|v| v.parse::<u64>())
+        .transpose()?
+        .map(|fs| FaultPlan::seeded(fs, workers.max(1), 32));
+    let faults_on = fault_plan.is_some();
     let sim = SchedulerSim::new(SimOptions {
         cancel_prob: a.f64("cancel-prob", 0.0),
         seed,
+        faults: fault_plan,
         ..Default::default()
     });
-    let workers = a.usize("workers", 1);
-    let report = if workers > 1 {
+    let report = if workers > 1 || faults_on {
         let mut backend = MockCluster::new(
-            workers,
+            workers.max(1),
             a.usize("slots", 4),
             a.usize("queue-cap", 8),
             a.usize("pool", 256),
@@ -430,6 +464,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .with_policy(policy)
         .with_beta(beta)
         .with_prefix_sharing(share);
+        if faults_on {
+            backend = backend.with_ladder(LadderConfig::default());
+        }
         sim.run(&mut backend, &trace)?
     } else {
         let mut backend = MockSched::new(
@@ -448,12 +485,14 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         eprintln!(
             "steps={} finished={} evictions={} busy={} deadline_misses={} \
              interleaved_rounds={} max_queue_depth={} prefill_steps={} \
-             prefix_hits={} prefix_misses={} prefix_saved={} prefix_forks={}",
+             prefix_hits={} prefix_misses={} prefix_saved={} prefix_forks={} \
+             faults_injected={} failovers={} failed_streams={}",
             report.steps, report.finished.len(), report.evictions,
             report.busy_rejections, report.deadline_misses,
             report.interleaved_rounds, report.max_queue_depth,
             report.prefill_steps, report.prefix_hits, report.prefix_misses,
-            report.prefix_blocks_saved, report.prefix_forks
+            report.prefix_blocks_saved, report.prefix_forks,
+            report.faults_injected, report.failovers, report.failed_streams
         );
     }
     Ok(())
@@ -479,6 +518,7 @@ fn fanin_round(n: usize, max_new: usize, io_threads: usize)
         // step pacing off: rounds measure pure scheduling + fan-out work
         mock: Some(MockServeConfig { step_delay_us: 0,
                                      ..MockServeConfig::default() }),
+        supervisor: SupervisorConfig::default(),
     })?;
     let addr = server.local_addr.to_string();
     let mut joins = Vec::new();
@@ -567,13 +607,18 @@ fn cmd_shedreplay(argv: &[String]) -> Result<()> {
         .opt("seed", "scenario seed", Some("7"))
         .opt("conns", "simulated connections", Some("24"))
         .opt("cap", "write-queue cap (frames)", Some("8"))
-        .opt("rounds", "producer rounds", Some("64"));
+        .opt("rounds", "producer rounds", Some("64"))
+        .opt("flaky-frac",
+             "share of clients that drop mid-stream and reconnect-and-retry \
+              (replay-from-prompt semantics, the client half of failover)",
+             Some("0"));
     let a = parse_args(cli, argv)?;
-    print!("{}", ctcdraft::server::conn::shed_replay(
+    print!("{}", ctcdraft::server::conn::shed_replay_flaky(
         a.u64("seed", 7),
         a.usize("conns", 24),
         a.usize("cap", 8),
         a.usize("rounds", 64),
+        a.f64("flaky-frac", 0.0),
     ));
     Ok(())
 }

@@ -365,6 +365,21 @@ pub enum SchedEvent {
     /// diverging block (copy-on-write). Logged only on a hit, so cold
     /// traffic does not flood the log; replays make reuse auditable.
     Prefix { step: u64, id: u64, blocks: usize, fork: usize },
+    /// A fault fired on `worker` (injected by a seeded `FaultPlan`, or a
+    /// real panic/stall detected by the supervisor): `kind` is one of
+    /// `panic`, `stall`, `pool_spike`, `conn_error`.
+    Fault { step: u64, worker: usize, kind: &'static str },
+    /// The supervisor recovered `worker` after a crash/condemnation:
+    /// `requeued` in-flight requests were collected for failover and
+    /// `freed` blocks (lease + index-owned) returned to the shared pool.
+    Recover { step: u64, worker: usize, requeued: usize, freed: usize },
+    /// Request `id` was resubmitted from crashed worker `from` to healthy
+    /// worker `to`, replaying from the prompt.
+    Failover { step: u64, id: u64, from: usize, to: usize },
+    /// The degradation ladder moved `worker` to a new rung (`healthy`,
+    /// `no-spec`, `admit-pause`, `shed`), driven by pool pressure and the
+    /// deadline-miss rate; deterministic in sim replays.
+    Degrade { step: u64, worker: usize, rung: &'static str },
 }
 
 impl fmt::Display for SchedEvent {
@@ -404,6 +419,19 @@ impl fmt::Display for SchedEvent {
             }
             SchedEvent::Prefix { step, id, blocks, fork } => {
                 write!(f, "t={step} prefix id={id} blocks={blocks} fork={fork}")
+            }
+            SchedEvent::Fault { step, worker, kind } => {
+                write!(f, "t={step} fault worker={worker} kind={kind}")
+            }
+            SchedEvent::Recover { step, worker, requeued, freed } => {
+                write!(f, "t={step} recover worker={worker} \
+                           requeued={requeued} freed={freed}")
+            }
+            SchedEvent::Failover { step, id, from, to } => {
+                write!(f, "t={step} failover id={id} from={from} to={to}")
+            }
+            SchedEvent::Degrade { step, worker, rung } => {
+                write!(f, "t={step} degrade worker={worker} rung={rung}")
             }
         }
     }
@@ -670,11 +698,19 @@ mod tests {
             log.push(SchedEvent::Completed { step: 5, id: 2, steps: 3, tokens: 7 });
             log.push(SchedEvent::Placed { step: 6, id: 3, worker: 1 });
             log.push(SchedEvent::Prefix { step: 6, id: 3, blocks: 2, fork: 5 });
+            log.push(SchedEvent::Fault { step: 7, worker: 0, kind: "panic" });
+            log.push(SchedEvent::Recover {
+                step: 8, worker: 0, requeued: 2, freed: 12,
+            });
+            log.push(SchedEvent::Failover { step: 8, id: 3, from: 0, to: 1 });
+            log.push(SchedEvent::Degrade {
+                step: 9, worker: 1, rung: "no-spec",
+            });
             log
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.render(), b.render());
-        assert_eq!(a.len(), 11);
+        assert_eq!(a.len(), 15);
         assert!(a.render().contains("t=6 place id=3 worker=1"));
         assert!(a.render().contains("t=6 prefix id=3 blocks=2 fork=5"));
         assert!(a.render().contains("t=4 beta batch=2 paths=8 nodes=16 depth=5"));
@@ -683,5 +719,9 @@ mod tests {
         assert!(a.render().contains("t=2 prefill id=2 done=32/96"));
         assert!(a.render().contains("t=5 deadline-miss id=2 late=3"));
         assert!(a.render().contains("t=5 done id=2 steps=3 tokens=7"));
+        assert!(a.render().contains("t=7 fault worker=0 kind=panic"));
+        assert!(a.render().contains("t=8 recover worker=0 requeued=2 freed=12"));
+        assert!(a.render().contains("t=8 failover id=3 from=0 to=1"));
+        assert!(a.render().contains("t=9 degrade worker=1 rung=no-spec"));
     }
 }

@@ -218,12 +218,22 @@ pub struct WorkerSnapshot {
     /// fields. Cache affinity: routing to the holder skips that much
     /// prefill and allocates that many fewer pool blocks.
     pub prefix_blocks: usize,
+    /// supervisor verdict: the worker crashed (restart pending) or was
+    /// condemned by the round watchdog. Routing here would strand the
+    /// request until recovery, so it takes the heaviest penalty of all —
+    /// above even the queue-full gate (a full queue still answers; a dead
+    /// worker does not).
+    pub unhealthy: bool,
 }
 
 /// Placement score for one worker (lower = better). Deterministic integer
 /// arithmetic so cluster replays are byte-for-byte reproducible.
 ///
 /// Terms, in rough order of weight:
+/// * **health gate** — a crashed or watchdog-condemned worker cannot make
+///   progress at all; it is scored effectively out of contention (still
+///   not a hard exclusion: when EVERY worker is unhealthy the request
+///   must land somewhere, and it will be failed over on recovery).
 /// * **queue-full gate** — a worker whose admit queue is at its cap will
 ///   answer with a terminal `busy`; routing there while a neighbor has
 ///   room turns backpressure into a spurious rejection, so it takes the
@@ -250,7 +260,8 @@ pub struct WorkerSnapshot {
 ///   worker so pool capacity is never stranded on a loaded neighbor.
 pub fn placement_score(s: &WorkerSnapshot, class: Priority,
                        need_blocks: usize, urgent: bool) -> i64 {
-    let mut score: i64 = if s.queue_full { 10_000_000 } else { 0 };
+    let mut score: i64 = if s.unhealthy { 100_000_000 } else { 0 };
+    score += if s.queue_full { 10_000_000 } else { 0 };
     let effective_need = need_blocks.saturating_sub(s.prefix_blocks);
     score += if s.headroom_blocks < effective_need { 100_000 } else { 0 };
     score -= 1_000 * s.prefix_blocks.min(64) as i64;
@@ -430,7 +441,22 @@ mod tests {
             queued: q,
             queue_full: false,
             prefix_blocks: 0,
+            unhealthy: false,
         }
+    }
+
+    #[test]
+    fn placement_routes_around_unhealthy_workers() {
+        // worker 0 is ideal on every other axis but crashed/condemned;
+        // even a queue-full survivor beats it
+        let dead = WorkerSnapshot { unhealthy: true, ..snap(64, 0, 0, 0) };
+        let full = WorkerSnapshot { queue_full: true, ..snap(8, 5, 5, 4) };
+        assert_eq!(place(&[dead, full], Priority::Interactive, 1, None), 1);
+        // all workers unhealthy: normal scoring decides (the request must
+        // land somewhere and will fail over once a worker recovers)
+        let d0 = WorkerSnapshot { unhealthy: true, ..snap(64, 0, 0, 0) };
+        let d1 = WorkerSnapshot { unhealthy: true, ..snap(8, 5, 5, 4) };
+        assert_eq!(place(&[d0, d1], Priority::Interactive, 1, None), 0);
     }
 
     #[test]

@@ -101,6 +101,54 @@
 //! mid-request is treated as gone — its request is cancelled and the slot
 //! and KV blocks are freed. Keep the connection fully open until the
 //! terminal frame arrives.
+//!
+//! # Failure modes & degradation ladder (PR 8)
+//!
+//! Every worker thread runs under `supervisor::isolate`
+//! (`catch_unwind`), supervised by `supervised_worker`:
+//!
+//! - **Worker panic.** The engine unwinds; `PoolLease::drop` returns its
+//!   lease-held blocks and shard reserve to the `SharedBlockPool` during
+//!   the unwind. The supervisor then runs the *conservation sweep* for
+//!   the two things the unwind cannot reach: prefix-index-owned blocks
+//!   (outside the lease ledger — drained via the index `Arc` registered
+//!   at engine construction, with poison-tolerant locking) and the
+//!   router's affinity mirror (drained so placement stops steering
+//!   prefixes at a now-empty cache). The worker is condemned in
+//!   `WorkerHealth`, restarted on a fresh lease after a capped
+//!   exponential backoff (`SupervisorConfig::backoff_base_ms/_cap_ms`),
+//!   then revived.
+//! - **Request failover.** A crashed worker drops the response senders of
+//!   its in-flight generates; each owning driver observes the worker loss
+//!   (`TryRecvError::Disconnected` before a terminal frame), emits a
+//!   NON-terminal `{"type":"retrying","id":..,"attempt":n}` frame, and
+//!   resubmits the request *from the prompt* to a surviving worker after
+//!   a short token-jittered backoff (`PendingOp::Retry`). A `retrying`
+//!   frame resets the stream: previously received `tok` text must be
+//!   discarded — the frames that follow restart from the beginning. At
+//!   most `SupervisorConfig::retry_budget` resubmissions; past the budget
+//!   (or while draining) the client gets a terminal `busy`. Either way a
+//!   client sees exactly one terminal frame — never a silent hang.
+//! - **Wedged worker (round watchdog).** Workers heartbeat once per loop
+//!   turn (`WorkerHealth::beat`); with `SupervisorConfig::watchdog_ms`
+//!   set, `pick_worker` treats a heartbeat stagnant past that wall
+//!   deadline exactly like a crash for placement (`WorkerSnapshot::
+//!   unhealthy` — routed around while any neighbor is live; the check is
+//!   transient, so a worker that resumes beating is routable again with
+//!   no supervisor involvement).
+//! - **Degradation ladder.** Under sustained pool pressure the cluster
+//!   walks healthy → speculation-off → admission-paused → shed
+//!   (`supervisor::DegradeLadder`; β forced to plain decode via
+//!   `Engine::set_force_plain`). The ladder runs on the *virtual step
+//!   clock* in the deterministic sim (`testkit::MockCluster::
+//!   with_ladder`, `ctcdraft sim --faults`), which is where its policy is
+//!   proven replay-identical; the serving stack's pressure relief remains
+//!   admission control + shedding (busy frames, write-queue shed).
+//!
+//! Fault injection for the mock server: `MockServeConfig::fault_seed`
+//! arms a seeded `workload::FaultPlan` per worker — scheduled panics
+//! exercise the whole supervise→drain→failover→restart path over the
+//! real transport (`tests/server_integration.rs`).
 
 pub mod conn;
 
@@ -118,15 +166,18 @@ use anyhow::{anyhow, Context, Result};
 
 use conn::{LineAssembler, Push, WriteQueue};
 
-use crate::config::{EngineConfig, FrontendConfig, Manifest, MockServeConfig};
+use crate::config::{EngineConfig, FrontendConfig, Manifest, MockServeConfig,
+                    SupervisorConfig};
 use crate::engine::{Engine, GenOutput, GenStats, Submission};
 use crate::kvcache::{PoolLease, PrefixIndex, SharedBlockPool};
 use crate::metrics::{ConnGauges, Histogram};
 use crate::runtime::Runtime;
 use crate::sched::{self, Priority, WorkerSnapshot};
+use crate::supervisor::{self, lock_unpoisoned, WorkerHealth};
 use crate::testkit::mock_tokens;
 use crate::tokenizer::StreamDecoder;
 use crate::util::json::{parse, Json};
+use crate::workload::{FaultKind, FaultPlan};
 
 pub struct ServerConfig {
     pub addr: String,
@@ -138,6 +189,10 @@ pub struct ServerConfig {
     /// When set, workers run the deterministic mock engine instead of
     /// loading artifacts — the concurrency suite's serving mode.
     pub mock: Option<MockServeConfig>,
+    /// Supervision knobs: panic isolation + restart backoff, the round
+    /// watchdog deadline, and the request-failover retry budget (see the
+    /// module's "Failure modes" section).
+    pub supervisor: SupervisorConfig,
 }
 
 /// Server-unique request token (client ids are caller-chosen and may
@@ -201,6 +256,10 @@ struct Route {
     /// index holds a prompt's prefix; `pick_worker` feeds the longest
     /// match to `sched::place` as `prefix_blocks`.
     prefix: Arc<Mutex<PrefixIndex>>,
+    /// crash/stall view shared with the worker's supervisor: feeds
+    /// `WorkerSnapshot::unhealthy` so placement routes around dead or
+    /// wedged workers while they recover
+    health: Arc<WorkerHealth>,
 }
 
 /// Router mirror hygiene: the counting index holds no KV rows, but its
@@ -216,6 +275,10 @@ struct Frontend {
     queue_cap: usize,
     io_threads: usize,
     gauges: Arc<ConnGauges>,
+    /// worker-loss failover budget per generate (`retrying` frames)
+    retry_budget: u32,
+    /// round-watchdog wall deadline (ms); 0 disables the wedge check
+    watchdog_ms: u64,
 }
 
 pub struct Server {
@@ -279,32 +342,35 @@ impl Server {
                 queued_depth: Arc::new(AtomicUsize::new(0)),
                 placed: Arc::new(AtomicU64::new(0)),
                 prefix: Arc::new(Mutex::new(PrefixIndex::counting(1))),
+                health: Arc::new(WorkerHealth::new()),
             };
             let stop = shutdown.clone();
             let queued_depth = route.queued_depth.clone();
-            let lease = PoolLease::new(pool.clone(), w, max_slots);
-            let join = match &cfg.mock {
-                Some(m) => {
-                    let m = m.clone();
-                    std::thread::Builder::new()
-                        .name(format!("mock-{w}"))
-                        .spawn(move || {
-                            worker_loop_mock(m, lease, rx, queued_depth, stop)
-                        })
-                }
+            let health = route.health.clone();
+            let mirror = route.prefix.clone();
+            let pool_w = pool.clone();
+            let scfg = cfg.supervisor.clone();
+            let kind = match &cfg.mock {
+                Some(m) => WorkerKind::Mock(m.clone()),
                 None => {
-                    let artifacts = cfg.artifacts.clone();
                     let mut ecfg = cfg.engine.clone();
                     ecfg.seed = ecfg.seed.wrapping_add(w as u64);
-                    std::thread::Builder::new()
-                        .name(format!("engine-{w}"))
-                        .spawn(move || {
-                            worker_loop(artifacts, ecfg, lease, rx,
-                                        queued_depth, stop)
-                        })
+                    WorkerKind::Real { artifacts: cfg.artifacts.clone(),
+                                       ecfg }
                 }
-            }
-            .expect("spawn worker");
+            };
+            let name = match &kind {
+                WorkerKind::Mock(_) => format!("mock-{w}"),
+                WorkerKind::Real { .. } => format!("engine-{w}"),
+            };
+            let join = std::thread::Builder::new()
+                .name(name)
+                .spawn(move || {
+                    supervised_worker(w, max_slots, scfg, kind, pool_w,
+                                      health, mirror, rx, queued_depth,
+                                      stop)
+                })
+                .expect("spawn worker");
             workers.push(WorkerHandle { tx, join });
             routes.push(route);
         }
@@ -320,6 +386,8 @@ impl Server {
             queue_cap,
             io_threads,
             gauges: gauges.clone(),
+            retry_budget: cfg.supervisor.retry_budget,
+            watchdog_ms: cfg.supervisor.watchdog_ms,
         });
         let write_cap = cfg.frontend.conn_write_cap.max(1);
         let drain_deadline =
@@ -439,17 +507,28 @@ fn acceptor_loop(listener: TcpListener, regs: Vec<Sender<TcpStream>>,
 /// tokenizer; admission re-validates against real token counts). The
 /// chosen placement is interned back into the winner's mirror so the next
 /// same-prefix prompt scores toward the same worker.
-fn pick_worker(routes: &[Route], pool: &SharedBlockPool, queue_cap: usize,
-               class: Priority, deadline_steps: Option<u64>, prompt: &str)
-               -> usize {
+///
+/// Crashed workers (condemned in `WorkerHealth`, mid-restart) and wedged
+/// ones (heartbeat stagnant past the watchdog deadline) snapshot as
+/// `unhealthy` — `sched::place` routes around them while any neighbor is
+/// live, and falls back to normal scoring when the whole cluster is down.
+fn pick_worker(fe: &Frontend, class: Priority, deadline_steps: Option<u64>,
+               prompt: &str) -> usize {
     let tokens = mock_tokens(prompt);
-    let snaps: Vec<WorkerSnapshot> = routes
+    let now = epoch_ms();
+    let snaps: Vec<WorkerSnapshot> = fe.routes
         .iter()
         .enumerate()
         .map(|(w, r)| {
             let queued = r.queued_depth.load(Ordering::SeqCst);
+            // the wedge check is transient (recomputed per placement, no
+            // state mutated): a worker that resumes beating becomes
+            // routable again without supervisor involvement
+            let wedged = fe.watchdog_ms > 0
+                && r.health.is_stalled(r.health.heartbeat_seq(), now,
+                                       fe.watchdog_ms);
             WorkerSnapshot {
-                headroom_blocks: pool.headroom(w),
+                headroom_blocks: fe.pool.headroom(w),
                 inflight_interactive: r
                     .inflight_interactive
                     .load(Ordering::SeqCst),
@@ -457,21 +536,32 @@ fn pick_worker(routes: &[Route], pool: &SharedBlockPool, queue_cap: usize,
                 queued,
                 // at-cap queue => the engine would answer a terminal busy;
                 // route around it while any neighbor has room
-                queue_full: queue_cap > 0 && queued >= queue_cap,
-                prefix_blocks: r.prefix.lock().unwrap()
+                queue_full: fe.queue_cap > 0 && queued >= fe.queue_cap,
+                unhealthy: !r.health.is_healthy() || wedged,
+                prefix_blocks: lock_unpoisoned(&r.prefix)
                     .lookup(&tokens).blocks,
             }
         })
         .collect();
     let est_positions = sched::est_prompt_tokens(prompt);
-    let w = sched::place(&snaps, class, pool.blocks_for(est_positions),
+    let w = sched::place(&snaps, class, fe.pool.blocks_for(est_positions),
                          deadline_steps);
-    let mut idx = routes[w].prefix.lock().unwrap();
+    let mut idx = lock_unpoisoned(&fe.routes[w].prefix);
     if idx.live_nodes() > ROUTER_PREFIX_NODE_CAP {
         idx.drain();
     }
     let _ = idx.intern_from_cache(&tokens, None);
     w
+}
+
+/// Wall-clock heartbeat stamp (ms since the UNIX epoch). Serving-stack
+/// only — the sim's watchdog runs on the virtual step clock, never wall
+/// time.
+fn epoch_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
 }
 
 // ------------------------------------------------------------ conn driver
@@ -483,12 +573,14 @@ enum PendingOp {
     /// A generate relayed from a worker's response channel until its
     /// terminal frame (or shed / worker loss).
     Generate {
-        client_id: i64,
         token: u64,
         worker: usize,
-        class: Priority,
         rrx: Receiver<String>,
+        ctx: GenCtx,
     },
+    /// Worker-loss failover parked until its jittered backoff expires,
+    /// then re-dispatched from the prompt onto a surviving worker.
+    Retry { at: Instant, ctx: GenCtx },
     /// Cluster stats: static head prebuilt at dispatch, per-worker bodies
     /// collected as they arrive (a wedged worker degrades to null at the
     /// deadline instead of stalling the driver).
@@ -505,6 +597,21 @@ enum PendingOp {
         ok: bool,
         deadline: Instant,
     },
+}
+
+/// Everything needed to (re)dispatch one generate. Kept with the pending
+/// op so worker loss can replay the request from the prompt on a
+/// surviving worker, bounded by `SupervisorConfig::retry_budget`.
+#[derive(Clone)]
+struct GenCtx {
+    client_id: i64,
+    prompt: String,
+    max_new: usize,
+    stream: bool,
+    class: Priority,
+    deadline: Option<u64>,
+    /// failover resubmissions so far (0 on first dispatch)
+    attempts: u32,
 }
 
 /// One multiplexed connection owned by a driver thread.
@@ -588,15 +695,17 @@ fn driver_loop(fe: Arc<Frontend>, reg: Receiver<TcpStream>,
 /// generate is cancelled on its worker by token (fire-and-forget — the
 /// driver never blocks on the ack) and the router counters are released.
 fn teardown(fe: &Frontend, c: &mut Conn) {
-    if let Some(PendingOp::Generate { token, worker, class, .. }) =
+    if let Some(PendingOp::Generate { token, worker, ctx, .. }) =
         c.op.take()
     {
         let (atx, _arx) = channel::<bool>();
         let _ = fe.routes[worker]
             .tx
             .send(WorkerMsg::CancelToken { token, ack: atx });
-        finish_generate(fe, worker, class);
+        finish_generate(fe, worker, ctx.class);
     }
+    // a parked Retry holds no worker-side state and no inflight
+    // accounting (released at worker loss) — dropping it is the cleanup
     fe.gauges.on_close();
 }
 
@@ -670,7 +779,7 @@ fn service_conn(fe: &Frontend, c: &mut Conn, scratch: &mut [u8],
         }
     }
     // advance the in-flight op (may shed the conn mid-stream)
-    if !poll_op(fe, c, progress) {
+    if !poll_op(fe, c, draining, progress) {
         return false;
     }
     // dispatch buffered request lines — one op at a time, the rest wait
@@ -683,9 +792,11 @@ fn service_conn(fe: &Frontend, c: &mut Conn, scratch: &mut [u8],
     }
     if c.eof {
         // orderly EOF = client gone: cancel an in-flight generate now
-        // (teardown does it); otherwise let the pending op + queued
-        // frames flush, then close
-        if matches!(c.op, Some(PendingOp::Generate { .. })) {
+        // (teardown does it) and abandon a parked failover retry rather
+        // than replaying for a dead client; otherwise let the pending op
+        // + queued frames flush, then close
+        if matches!(c.op, Some(PendingOp::Generate { .. }
+                               | PendingOp::Retry { .. })) {
             return false;
         }
         c.closing = true;
@@ -707,15 +818,16 @@ const RELAY_FRAME_BUDGET: usize = 64;
 
 /// Advance a connection's pending op without blocking. Returns false when
 /// the connection was shed while relaying.
-fn poll_op(fe: &Frontend, c: &mut Conn, progress: &mut bool) -> bool {
+fn poll_op(fe: &Frontend, c: &mut Conn, draining: bool,
+           progress: &mut bool) -> bool {
     let Some(op) = c.op.take() else { return true };
     match op {
-        PendingOp::Generate { client_id, token, worker, class, rrx } => {
+        PendingOp::Generate { token, worker, rrx, ctx } => {
             let mut budget = RELAY_FRAME_BUDGET;
             loop {
                 if budget == 0 {
                     c.op = Some(PendingOp::Generate {
-                        client_id, token, worker, class, rrx,
+                        token, worker, rrx, ctx,
                     });
                     return true;
                 }
@@ -732,7 +844,7 @@ fn poll_op(fe: &Frontend, c: &mut Conn, progress: &mut bool) -> bool {
                             && c.wq.pump(&mut c.stream).is_err()
                         {
                             c.op = Some(PendingOp::Generate {
-                                client_id, token, worker, class, rrx,
+                                token, worker, rrx, ctx,
                             });
                             return false;
                         }
@@ -740,30 +852,69 @@ fn poll_op(fe: &Frontend, c: &mut Conn, progress: &mut bool) -> bool {
                             // shed mid-stream: restore the op so teardown
                             // cancels it on the worker and frees the slot
                             c.op = Some(PendingOp::Generate {
-                                client_id, token, worker, class, rrx,
+                                token, worker, rrx, ctx,
                             });
                             return false;
                         }
                         if terminal {
-                            finish_generate(fe, worker, class);
+                            finish_generate(fe, worker, ctx.class);
                             return true;
                         }
                     }
                     Err(TryRecvError::Empty) => {
                         c.op = Some(PendingOp::Generate {
-                            client_id, token, worker, class, rrx,
+                            token, worker, rrx, ctx,
                         });
                         return true;
                     }
                     Err(TryRecvError::Disconnected) => {
-                        // worker exited (shutdown race) before a terminal
-                        // frame; honor the one-terminal-frame contract
-                        finish_generate(fe, worker, class);
-                        return push_frame(fe, c,
-                                          simple_frame("busy", client_id));
+                        // worker lost (panic, restart, or shutdown race)
+                        // before a terminal frame
+                        finish_generate(fe, worker, ctx.class);
+                        if draining || ctx.attempts >= fe.retry_budget {
+                            // out of failover budget (or the cluster is
+                            // going away): honor the one-terminal-frame
+                            // contract exactly as before supervision
+                            return push_frame(
+                                fe, c, simple_frame("busy", ctx.client_id));
+                        }
+                        // failover: NON-terminal `retrying`, then replay
+                        // from the prompt on a surviving worker once the
+                        // backoff expires (token-keyed jitter so a mass
+                        // failover doesn't thundering-herd one survivor)
+                        let ctx = GenCtx { attempts: ctx.attempts + 1,
+                                           ..ctx };
+                        if !push_frame(fe, c,
+                                       retrying_frame(ctx.client_id,
+                                                      ctx.attempts)) {
+                            return false;
+                        }
+                        let delay = supervisor::backoff_ms(
+                            (ctx.attempts - 1) as u64, 5, 80) + token % 7;
+                        c.op = Some(PendingOp::Retry {
+                            at: Instant::now()
+                                + Duration::from_millis(delay),
+                            ctx,
+                        });
+                        return true;
                     }
                 }
             }
+        }
+        PendingOp::Retry { at, ctx } => {
+            if draining {
+                // shutdown began while parked: the queue isn't coming
+                // back, so terminate cleanly instead of re-dispatching
+                *progress = true;
+                return push_frame(fe, c,
+                                  simple_frame("busy", ctx.client_id));
+            }
+            if Instant::now() < at {
+                c.op = Some(PendingOp::Retry { at, ctx });
+                return true;
+            }
+            *progress = true;
+            start_generate(fe, c, ctx)
         }
         PendingOp::Stats { head, rxs, mut parts, deadline } => {
             for (i, rx) in rxs.iter().enumerate() {
@@ -960,41 +1111,15 @@ fn dispatch_line(fe: &Frontend, c: &mut Conn, line: &str, draining: bool)
             };
             let deadline =
                 req.get("deadline_steps").as_usize().map(|v| v as u64);
-            let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
-            let (rtx, rrx) = channel::<String>();
-            let w = pick_worker(&fe.routes, &fe.pool, fe.queue_cap, class,
-                                deadline, &prompt);
-            let route = &fe.routes[w];
-            route.placed.fetch_add(1, Ordering::SeqCst);
-            route.inflight.fetch_add(1, Ordering::SeqCst);
-            match class {
-                Priority::Interactive => route
-                    .inflight_interactive
-                    .fetch_add(1, Ordering::SeqCst),
-                Priority::Batch => {
-                    route.inflight_batch.fetch_add(1, Ordering::SeqCst)
-                }
-            };
-            let sent = route.tx.send(WorkerMsg::Job(Job {
+            start_generate(fe, c, GenCtx {
                 client_id,
-                token,
                 prompt,
                 max_new,
                 stream: stream_toks,
                 class,
                 deadline,
-                resp: rtx,
-            }));
-            if sent.is_err() {
-                finish_generate(fe, w, class);
-                return push_frame(fe, c,
-                                  error_frame(client_id,
-                                              "worker unavailable"));
-            }
-            c.op = Some(PendingOp::Generate {
-                client_id, token, worker: w, class, rrx,
-            });
-            true
+                attempts: 0,
+            })
         }
         Some("shutdown") => {
             c.closing = true;
@@ -1005,6 +1130,43 @@ fn dispatch_line(fe: &Frontend, c: &mut Conn, line: &str, draining: bool)
             ("message", Json::str("unknown op")),
         ]).to_string()),
     }
+}
+
+/// Dispatch (or failover-redispatch) a generate onto the best worker and
+/// park it as the connection's pending op. Returns false when the
+/// connection was shed while answering.
+fn start_generate(fe: &Frontend, c: &mut Conn, ctx: GenCtx) -> bool {
+    let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+    let (rtx, rrx) = channel::<String>();
+    let w = pick_worker(fe, ctx.class, ctx.deadline, &ctx.prompt);
+    let route = &fe.routes[w];
+    route.placed.fetch_add(1, Ordering::SeqCst);
+    route.inflight.fetch_add(1, Ordering::SeqCst);
+    match ctx.class {
+        Priority::Interactive => route
+            .inflight_interactive
+            .fetch_add(1, Ordering::SeqCst),
+        Priority::Batch => {
+            route.inflight_batch.fetch_add(1, Ordering::SeqCst)
+        }
+    };
+    let sent = route.tx.send(WorkerMsg::Job(Job {
+        client_id: ctx.client_id,
+        token,
+        prompt: ctx.prompt.clone(),
+        max_new: ctx.max_new,
+        stream: ctx.stream,
+        class: ctx.class,
+        deadline: ctx.deadline,
+        resp: rtx,
+    }));
+    if sent.is_err() {
+        finish_generate(fe, w, ctx.class);
+        return push_frame(fe, c,
+                          error_frame(ctx.client_id, "worker unavailable"));
+    }
+    c.op = Some(PendingOp::Generate { token, worker: w, rrx, ctx });
+    true
 }
 
 fn is_terminal_frame(line: &str) -> bool {
@@ -1046,6 +1208,19 @@ fn busy_frame(client_id: i64, retry_after_steps: u64) -> String {
     ]).to_string()
 }
 
+/// NON-terminal failover notice: the request's worker died before the
+/// terminal frame and the router is resubmitting it to a survivor. The
+/// stream resets — `tok` text received before this frame must be
+/// discarded; the frames that follow replay from the beginning. Never
+/// matched by `is_terminal_frame`.
+fn retrying_frame(client_id: i64, attempt: u32) -> String {
+    Json::obj(vec![
+        ("type", Json::str("retrying")),
+        ("id", Json::num(client_id as f64)),
+        ("attempt", Json::num(attempt as f64)),
+    ]).to_string()
+}
+
 fn error_frame(client_id: i64, msg: &str) -> String {
     Json::obj(vec![
         ("type", Json::str("error")),
@@ -1060,7 +1235,7 @@ fn worker_stats_json(engine: &Engine) -> String {
     let m = engine.metrics();
     let prefix = {
         let idx = engine.prefix_index();
-        let idx = idx.lock().unwrap();
+        let idx = lock_unpoisoned(&idx);
         (idx.hits(), idx.misses(), idx.blocks_saved(), idx.forks(),
          idx.owned_blocks())
     };
@@ -1189,12 +1364,108 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
 fn drain_prefix_index(engine: &Engine) {
     let freed = {
         let idx = engine.prefix_index();
-        let mut idx = idx.lock().unwrap();
+        let mut idx = lock_unpoisoned(&idx);
         idx.drain()
     };
     if freed > 0 {
         let lease = engine.pool();
         lease.shared().give_back(lease.worker(), freed);
+    }
+}
+
+/// What a supervised worker slot runs: a real engine (artifacts + config)
+/// or the deterministic mock. Owned by the supervisor so a restart can
+/// rebuild the worker from scratch.
+enum WorkerKind {
+    Real { artifacts: PathBuf, ecfg: EngineConfig },
+    Mock(MockServeConfig),
+}
+
+/// Cross-restart fault-injection state for one mock worker: the seeded
+/// plan plus how many of its events have already fired. Lives with the
+/// supervisor, not the worker — a restarted incarnation must not replay
+/// an already-taken panic and crash-loop forever.
+struct MockFaults {
+    plan: FaultPlan,
+    taken: AtomicUsize,
+}
+
+/// Supervision shim for one worker thread — the crash loop:
+///
+/// 1. run the worker body under `supervisor::isolate`;
+/// 2. on panic: condemn the worker in `WorkerHealth` (the router routes
+///    around it; drivers holding its in-flight generates observe worker
+///    loss and fail over), then run the conservation sweep — the unwound
+///    `PoolLease::drop` already returned lease-held blocks and the shard
+///    reserve, so what remains is the prefix index (index-owned blocks
+///    live outside the lease ledger; drained via the `Arc` the worker
+///    registered at engine construction) and the router's affinity
+///    mirror (drained so placement stops steering prefixes at a
+///    now-empty cache);
+/// 3. sleep out a capped exponential backoff and restart the worker on a
+///    fresh lease — or exit when supervision is disabled or the server
+///    is shutting down.
+///
+/// A clean return from the worker body is a graceful drain: supervision
+/// ends with it.
+fn supervised_worker(w: usize, max_slots: usize, scfg: SupervisorConfig,
+                     kind: WorkerKind, pool: Arc<SharedBlockPool>,
+                     health: Arc<WorkerHealth>,
+                     mirror: Arc<Mutex<PrefixIndex>>,
+                     rx: Receiver<WorkerMsg>,
+                     queued_depth: Arc<AtomicUsize>,
+                     shutdown: Arc<AtomicBool>) {
+    let mock_faults = match &kind {
+        WorkerKind::Mock(m) => m.fault_seed.map(|s| MockFaults {
+            plan: FaultPlan::seeded(s.wrapping_add(w as u64), 1, 64),
+            taken: AtomicUsize::new(0),
+        }),
+        WorkerKind::Real { .. } => None,
+    };
+    loop {
+        let index_slot: Mutex<Option<Arc<Mutex<PrefixIndex>>>> =
+            Mutex::new(None);
+        let result = supervisor::isolate(|| match &kind {
+            WorkerKind::Real { artifacts, ecfg } => worker_loop(
+                artifacts.clone(), ecfg.clone(),
+                PoolLease::new(pool.clone(), w, max_slots), &rx,
+                &queued_depth, &shutdown, &health, &index_slot),
+            WorkerKind::Mock(m) => worker_loop_mock(
+                m.clone(), PoolLease::new(pool.clone(), w, max_slots),
+                &rx, &queued_depth, &shutdown, &health,
+                mock_faults.as_ref()),
+        });
+        match result {
+            Ok(()) => return,
+            Err(_) => {
+                health.condemn();
+                let crashes = health.note_panic();
+                // conservation sweep (module doc, "Failure modes"):
+                // return index-owned blocks, park nothing in the shard,
+                // and clear the router's stale affinity toward us
+                if let Some(idx) = lock_unpoisoned(&index_slot).take() {
+                    let freed = lock_unpoisoned(&idx).drain();
+                    if freed > 0 {
+                        pool.give_back(w, freed);
+                    }
+                }
+                pool.drain_worker(w);
+                lock_unpoisoned(&mirror).drain();
+                if !scfg.enabled || shutdown.load(Ordering::SeqCst) {
+                    eprintln!("worker {w}: panic #{crashes}; supervision \
+                               off or draining — not restarting");
+                    return;
+                }
+                let restarts = health.restarts();
+                eprintln!("worker {w}: panic #{crashes}; restarting \
+                           (backoff #{restarts})");
+                std::thread::sleep(Duration::from_millis(
+                    supervisor::backoff_ms(restarts, scfg.backoff_base_ms,
+                                           scfg.backoff_cap_ms)));
+                health.note_restart();
+                health.revive();
+            }
+        }
     }
 }
 
@@ -1207,9 +1478,15 @@ fn drain_prefix_index(engine: &Engine) {
 /// index-owned, not lease-allocated, so the lease drop alone would strand
 /// them), then the engine drops, and with it the `PoolLease` — every block
 /// the worker held returns to the shared pool's global free list.
+///
+/// Runs under `supervised_worker`'s panic isolation: the engine's prefix
+/// index is registered in `index_slot` right after construction so a
+/// panic unwind cannot strand index-owned blocks, and `health` is beaten
+/// once per loop turn for the router's round watchdog.
 fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
-               rx: Receiver<WorkerMsg>, queued_depth: Arc<AtomicUsize>,
-               shutdown: Arc<AtomicBool>) {
+               rx: &Receiver<WorkerMsg>, queued_depth: &AtomicUsize,
+               shutdown: &AtomicBool, health: &WorkerHealth,
+               index_slot: &Mutex<Option<Arc<Mutex<PrefixIndex>>>>) {
     let rt = match Runtime::load(&artifacts) {
         Ok(rt) => rt,
         Err(e) => {
@@ -1224,9 +1501,13 @@ fn worker_loop(artifacts: PathBuf, ecfg: EngineConfig, lease: PoolLease,
             return;
         }
     };
+    *lock_unpoisoned(index_slot) = Some(engine.prefix_index());
     let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut seq = health.heartbeat_seq();
 
     loop {
+        seq += 1;
+        health.beat(seq, epoch_ms());
         // drain the control channel: admit jobs, fire cancels, answer stats
         let mut disconnected = false;
         loop {
@@ -1640,11 +1921,51 @@ impl MockWorker {
 /// discipline as `worker_loop`, driving a `MockWorker` instead of a real
 /// engine. `step_delay_us` paces rounds so streaming clients see a steady
 /// frame cadence (and slow readers actually back up their write queues).
+///
+/// With `MockServeConfig::fault_seed` set, the supervisor arms a seeded
+/// `FaultPlan` keyed to this worker's heartbeat sequence (which persists
+/// across restarts): scheduled panics drive the supervise → drain →
+/// failover → restart path over the real transport; scheduled stalls
+/// wedge the loop so the router's wall watchdog sees a stagnant
+/// heartbeat.
 fn worker_loop_mock(mcfg: MockServeConfig, lease: PoolLease,
-                    rx: Receiver<WorkerMsg>, queued_depth: Arc<AtomicUsize>,
-                    shutdown: Arc<AtomicBool>) {
+                    rx: &Receiver<WorkerMsg>, queued_depth: &AtomicUsize,
+                    shutdown: &AtomicBool, health: &WorkerHealth,
+                    faults: Option<&MockFaults>) {
     let mut mw = MockWorker::new(&mcfg, lease);
+    let mut seq = health.heartbeat_seq();
     loop {
+        seq += 1;
+        health.beat(seq, epoch_ms());
+        if let Some(f) = faults {
+            let start = f.taken.load(Ordering::SeqCst);
+            let due = f.plan.due(start, seq);
+            if !due.is_empty() {
+                // mark taken BEFORE acting: a panic below must not
+                // replay after the supervisor restarts this incarnation
+                f.taken.store(start + due.len(), Ordering::SeqCst);
+                for ev in due {
+                    match ev.kind {
+                        FaultKind::WorkerPanic { .. } => {
+                            panic!("injected fault: worker panic");
+                        }
+                        FaultKind::StepStall { steps, .. } => {
+                            // wedge: the heartbeat stagnates while the
+                            // thread sleeps, so a watchdog-armed router
+                            // routes around this worker until it resumes
+                            std::thread::sleep(Duration::from_micros(
+                                mcfg.step_delay_us.max(100)
+                                    * steps.max(1) * 4));
+                        }
+                        // sim-only shapes: conn errors are injected by
+                        // flaky clients at the transport, and pool
+                        // spikes only exist on the virtual step clock
+                        FaultKind::PoolSpike { .. }
+                        | FaultKind::ConnError => {}
+                    }
+                }
+            }
+        }
         let mut disconnected = false;
         loop {
             match rx.try_recv() {
@@ -1799,6 +2120,11 @@ impl Client {
             let v = self.read_frame()?;
             match v.get("type").as_str() {
                 Some("queued") => continue,
+                // worker-loss failover: the server replays the request on
+                // a survivor and the stream restarts from the beginning —
+                // callers accumulating `tok` text must reset on this
+                // frame (the final `done` text is always authoritative)
+                Some("retrying") => continue,
                 Some("tok") => on_tok(v.get("text").as_str().unwrap_or("")),
                 Some("done") => {
                     return Ok(GenerateOutcome::Done(GenerateReply {

@@ -23,7 +23,7 @@ use std::collections::VecDeque;
 use std::io::{self, Write};
 
 use crate::util::rng::Rng;
-use crate::workload::{behavior_mix, ClientBehavior};
+use crate::workload::{behavior_mix_flaky, ClientBehavior};
 
 /// Outcome of a (non-blocking) `WriteQueue::push`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -210,6 +210,20 @@ impl LineAssembler {
 /// counterpart of the scheduler-sim replay gate).
 pub fn shed_replay(seed: u64, conns: usize, cap: usize, rounds: usize)
                    -> String {
+    shed_replay_flaky(seed, conns, cap, rounds, 0.0)
+}
+
+/// `shed_replay` plus a `flaky_frac` share of mid-stream
+/// disconnect-and-retry clients (`ClientBehavior::Flaky`): after
+/// `drop_after` frames the client vanishes — the server side cancels its
+/// request and reclaims the queue, exactly the shed/cancel path — then
+/// reconnects and retries from the prompt on a fresh stream (queue,
+/// producer and read cursors reset), the transport analogue of the
+/// server's worker-loss failover replay. With `flaky_frac == 0` the RNG
+/// draw order matches the legacy mix, so seeded transcripts double-run
+/// byte-identically either way.
+pub fn shed_replay_flaky(seed: u64, conns: usize, cap: usize, rounds: usize,
+                         flaky_frac: f64) -> String {
     use std::fmt::Write as _;
 
     struct Sim {
@@ -217,10 +231,14 @@ pub fn shed_replay(seed: u64, conns: usize, cap: usize, rounds: usize)
         behavior: ClientBehavior,
         read: usize,
         produced: usize,
+        /// write-queue high-water mark from before a flaky reconnect
+        /// replaced the queue (a reconnect must not erase the evidence)
+        hwm_peak: usize,
+        retried: bool,
         state: &'static str, // live | done | shed | cancelled
     }
 
-    let behaviors = behavior_mix(conns, 0.25, 0.15, seed);
+    let behaviors = behavior_mix_flaky(conns, 0.25, 0.15, flaky_frac, seed);
     let mut sims: Vec<Sim> = behaviors
         .iter()
         .map(|&behavior| Sim {
@@ -228,6 +246,8 @@ pub fn shed_replay(seed: u64, conns: usize, cap: usize, rounds: usize)
             behavior,
             read: 0,
             produced: 0,
+            hwm_peak: 0,
+            retried: false,
             state: "live",
         })
         .collect();
@@ -269,6 +289,15 @@ pub fn shed_replay(seed: u64, conns: usize, cap: usize, rounds: usize)
                 ClientBehavior::CancelStorm { after_frames } => {
                     after_frames.saturating_sub(s.read)
                 }
+                // reads promptly until the drop point; a reconnected
+                // retry streams freely
+                ClientBehavior::Flaky { drop_after } => {
+                    if s.retried {
+                        usize::MAX
+                    } else {
+                        drop_after.saturating_sub(s.read)
+                    }
+                }
             };
             let mut drained = 0usize;
             while drained < budget && s.wq.pop_frame().is_some() {
@@ -282,10 +311,28 @@ pub fn shed_replay(seed: u64, conns: usize, cap: usize, rounds: usize)
                         .unwrap();
                 }
             }
+            if let ClientBehavior::Flaky { drop_after } = s.behavior {
+                if !s.retried && s.read >= drop_after {
+                    // mid-stream disconnect: the server cancels the
+                    // request and reclaims the queue; the client
+                    // reconnects and retries from the prompt — a fresh
+                    // stream, like the server's worker-loss failover
+                    s.retried = true;
+                    writeln!(out,
+                             "t={t} conn={i} flaky-drop read={} produced={}",
+                             s.read, s.produced)
+                        .unwrap();
+                    s.hwm_peak = s.hwm_peak.max(s.wq.hwm());
+                    s.wq = WriteQueue::new(cap);
+                    s.read = 0;
+                    s.produced = 0;
+                }
+            }
         }
     }
 
     let (mut shed, mut cancelled, mut hwm_max) = (0usize, 0usize, 0usize);
+    let mut flaky_retries = 0usize;
     for (i, s) in sims.iter_mut().enumerate() {
         if s.state == "live" {
             s.state = "done";
@@ -296,13 +343,18 @@ pub fn shed_replay(seed: u64, conns: usize, cap: usize, rounds: usize)
         if s.state == "cancelled" {
             cancelled += 1;
         }
-        hwm_max = hwm_max.max(s.wq.hwm());
+        if s.retried {
+            flaky_retries += 1;
+        }
+        let hwm = s.hwm_peak.max(s.wq.hwm());
+        hwm_max = hwm_max.max(hwm);
         writeln!(out, "end conn={i} behavior={} status={} produced={} \
-                       read={} hwm={}",
-                 s.behavior.name(), s.state, s.produced, s.read, s.wq.hwm())
+                       read={} hwm={hwm}",
+                 s.behavior.name(), s.state, s.produced, s.read)
             .unwrap();
     }
-    writeln!(out, "total shed={shed} cancelled={cancelled} hwm_max={hwm_max}")
+    writeln!(out, "total shed={shed} cancelled={cancelled} \
+                   hwm_max={hwm_max} flaky_retries={flaky_retries}")
         .unwrap();
     out
 }
@@ -426,5 +478,21 @@ mod tests {
         assert!(a.ends_with('\n'));
         // a different seed reshuffles behaviors -> different transcript
         assert_ne!(a, shed_replay(8, 24, 8, 64));
+    }
+
+    #[test]
+    fn shed_replay_flaky_drops_retry_and_stay_deterministic() {
+        let a = shed_replay_flaky(7, 24, 8, 64, 0.25);
+        let b = shed_replay_flaky(7, 24, 8, 64, 0.25);
+        assert_eq!(a, b, "flaky replay must be a pure function of its seed");
+        assert!(a.contains("flaky-drop"),
+                "flaky clients must disconnect mid-stream:\n{a}");
+        assert!(a.contains("behavior=flaky"));
+        assert!(!a.contains("flaky_retries=0"));
+        // flaky_frac == 0 must reproduce the legacy mix exactly: no
+        // flaky clients, no drops, same RNG draw order as before
+        let legacy = shed_replay(7, 24, 8, 64);
+        assert!(!legacy.contains("flaky-drop"));
+        assert!(legacy.contains("flaky_retries=0"));
     }
 }

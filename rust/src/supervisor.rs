@@ -1,0 +1,428 @@
+//! Worker supervision primitives: panic isolation, poison-tolerant
+//! locking, per-worker health + heartbeats for the round watchdog, capped
+//! exponential restart backoff, and the deterministic graceful-degradation
+//! ladder.
+//!
+//! Everything here is deliberately split from the things it supervises:
+//! the ladder and watchdog are pure integer state machines on the
+//! scheduler's virtual step clock (so `ctcdraft sim --faults` replays
+//! byte-for-byte), while `WorkerHealth` is the lock-free atomics view the
+//! real server's router and supervisor threads share. The server composes
+//! these (`server::worker_loop` runs under [`isolate`], the supervisor
+//! drains the crashed worker's lease + prefix index back to the
+//! `SharedBlockPool`, marks [`WorkerHealth`] unhealthy so `sched::place`
+//! routes around it, and restarts after [`backoff_ms`]); the sim composes
+//! the same machines inside `testkit::MockCluster`, so every failure mode
+//! is reproduced deterministically in CI.
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+// ------------------------------------------------------- panic isolation
+
+/// Run `f` with panics caught instead of unwinding into the caller.
+///
+/// `AssertUnwindSafe` is sound here because every caller treats the closure
+/// state as *condemned* on `Err`: the worker's engine (and its `PoolLease`,
+/// whose `Drop` ran during the unwind) is discarded and rebuilt from
+/// scratch, and shared structures it may have left inconsistent (the
+/// prefix index) are drained via [`lock_unpoisoned`] before reuse.
+pub fn isolate<R>(f: impl FnOnce() -> R) -> std::thread::Result<R> {
+    panic::catch_unwind(AssertUnwindSafe(f))
+}
+
+/// Poison-tolerant mutex acquisition: a panic on another thread while it
+/// held the lock must not cascade into permanent unavailability of the
+/// shared structure. The data is taken as-is — callers that can observe a
+/// torn invariant (the prefix index after a mid-publish panic) follow up
+/// with a consistency sweep (`PrefixIndex::drain`) rather than trusting it.
+pub fn lock_unpoisoned<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+// ------------------------------------------------------- restart backoff
+
+/// Capped exponential restart backoff (in whatever unit the caller's clock
+/// uses): 1, 2, 4, ... doubling per consecutive restart, saturating at
+/// `cap`. Deterministic — the sim charges it in virtual steps, the server
+/// in milliseconds via [`backoff_ms`].
+pub fn backoff(restarts: u64, cap: u64) -> u64 {
+    let cap = cap.max(1);
+    if restarts >= 63 {
+        return cap;
+    }
+    (1u64 << restarts).min(cap)
+}
+
+/// Restart delay for the real server: `base_ms << restarts`, capped.
+pub fn backoff_ms(restarts: u64, base_ms: u64, cap_ms: u64) -> u64 {
+    backoff(restarts, (cap_ms / base_ms.max(1)).max(1)) * base_ms.max(1)
+}
+
+// ------------------------------------------------------- worker health
+
+/// Lock-free health record for one worker, shared between the worker
+/// thread (heartbeats), the supervisor (condemn/revive/restart counts) and
+/// the router (`is_healthy` feeds `WorkerSnapshot::unhealthy`).
+#[derive(Debug, Default)]
+pub struct WorkerHealth {
+    /// false from the moment a crash/condemnation is detected until the
+    /// supervisor finishes recovery; the router routes around it
+    unhealthy: AtomicBool,
+    /// step sequence number of the last completed scheduler round
+    heartbeat_seq: AtomicU64,
+    /// wall-clock stamp (ms, caller-supplied epoch) of the last heartbeat
+    heartbeat_ms: AtomicU64,
+    restarts: AtomicU64,
+    panics: AtomicU64,
+}
+
+impl WorkerHealth {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Worker-side heartbeat: called once per completed scheduler round
+    /// with the round's sequence number and a wall stamp.
+    pub fn beat(&self, seq: u64, now_ms: u64) {
+        self.heartbeat_seq.store(seq, Ordering::Release);
+        self.heartbeat_ms.store(now_ms, Ordering::Release);
+    }
+
+    /// Watchdog verdict: the heartbeat has not advanced past `seen_seq`
+    /// and `deadline_ms` of wall time have elapsed since the last beat —
+    /// the worker is wedged (stuck runtime call, livelock) and must be
+    /// treated exactly like a crash.
+    pub fn is_stalled(&self, seen_seq: u64, now_ms: u64,
+                      deadline_ms: u64) -> bool {
+        self.heartbeat_seq.load(Ordering::Acquire) == seen_seq
+            && now_ms.saturating_sub(self.heartbeat_ms.load(Ordering::Acquire))
+                >= deadline_ms
+    }
+
+    pub fn heartbeat_seq(&self) -> u64 {
+        self.heartbeat_seq.load(Ordering::Acquire)
+    }
+
+    /// Mark the worker dead (crash detected or watchdog condemnation).
+    pub fn condemn(&self) {
+        self.unhealthy.store(true, Ordering::Release);
+    }
+
+    /// Recovery complete: the worker is routable again.
+    pub fn revive(&self) {
+        self.unhealthy.store(false, Ordering::Release);
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        !self.unhealthy.load(Ordering::Acquire)
+    }
+
+    pub fn note_panic(&self) -> u64 {
+        self.panics.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    pub fn note_restart(&self) -> u64 {
+        self.restarts.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    pub fn restarts(&self) -> u64 {
+        self.restarts.load(Ordering::Acquire)
+    }
+
+    pub fn panics(&self) -> u64 {
+        self.panics.load(Ordering::Acquire)
+    }
+}
+
+// -------------------------------------------------------- round watchdog
+
+/// Deterministic step-sequence watchdog for the sim: a worker whose step
+/// counter fails to advance for `limit` consecutive observations is
+/// condemned — a stall must be indistinguishable from a crash. The real
+/// server uses [`WorkerHealth::is_stalled`] (same idea on wall time).
+#[derive(Debug, Clone)]
+pub struct StepWatchdog {
+    last_seq: u64,
+    stagnant: u64,
+    limit: u64,
+}
+
+impl StepWatchdog {
+    /// `limit` = consecutive no-progress observations before condemnation
+    /// (min 1).
+    pub fn new(limit: u64) -> Self {
+        StepWatchdog { last_seq: 0, stagnant: 0, limit: limit.max(1) }
+    }
+
+    /// Observe the worker's current step sequence number; returns true on
+    /// the observation that condemns it.
+    pub fn observe(&mut self, seq: u64) -> bool {
+        if seq != self.last_seq {
+            self.last_seq = seq;
+            self.stagnant = 0;
+            return false;
+        }
+        self.stagnant += 1;
+        self.stagnant == self.limit
+    }
+
+    /// Reset after recovery so the restarted worker gets a fresh window.
+    pub fn reset(&mut self, seq: u64) {
+        self.last_seq = seq;
+        self.stagnant = 0;
+    }
+}
+
+// -------------------------------------------------- degradation ladder
+
+/// Rung of the graceful-degradation ladder, in escalation order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rung {
+    /// full speculative decoding
+    Healthy,
+    /// β forced to plain autoregressive decode (speculation off) — always
+    /// a valid lossless fallback, it just trades speed for pool pressure
+    NoSpec,
+    /// new admissions answered `busy`; in-flight work keeps draining
+    AdmitPause,
+    /// shed queued batch work too; only already-running sequences finish
+    Shed,
+}
+
+impl Rung {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rung::Healthy => "healthy",
+            Rung::NoSpec => "no-spec",
+            Rung::AdmitPause => "admit-pause",
+            Rung::Shed => "shed",
+        }
+    }
+
+    fn up(&self) -> Rung {
+        match self {
+            Rung::Healthy => Rung::NoSpec,
+            Rung::NoSpec => Rung::AdmitPause,
+            _ => Rung::Shed,
+        }
+    }
+
+    fn down(&self) -> Rung {
+        match self {
+            Rung::Shed => Rung::AdmitPause,
+            Rung::AdmitPause => Rung::NoSpec,
+            _ => Rung::Healthy,
+        }
+    }
+}
+
+/// Thresholds driving the ladder. All integer (utilization in per-mille)
+/// so transitions are exactly reproducible in replays.
+#[derive(Debug, Clone, Copy)]
+pub struct LadderConfig {
+    /// pool utilization (per-mille of blocks in use) at/above which a
+    /// round counts as *hot*
+    pub hot_util_pm: u64,
+    /// deadline misses within a round that make it hot regardless of pool
+    pub hot_misses: u64,
+    /// consecutive hot rounds to escalate one rung
+    pub escalate_after: u64,
+    /// consecutive cool rounds to de-escalate one rung
+    pub recover_after: u64,
+}
+
+impl Default for LadderConfig {
+    fn default() -> Self {
+        LadderConfig {
+            hot_util_pm: 900,
+            hot_misses: 1,
+            escalate_after: 4,
+            recover_after: 8,
+        }
+    }
+}
+
+/// Pure deterministic ladder state machine: feed it one observation per
+/// scheduler round; it answers with the rung transition to log (if any).
+/// Escalation needs `escalate_after` *consecutive* hot rounds, recovery
+/// `recover_after` consecutive cool ones, so the ladder neither flaps on a
+/// single spike nor recovers into the middle of sustained pressure.
+#[derive(Debug, Clone)]
+pub struct DegradeLadder {
+    rung: Rung,
+    hot_streak: u64,
+    cool_streak: u64,
+    cfg: LadderConfig,
+}
+
+impl DegradeLadder {
+    pub fn new(cfg: LadderConfig) -> Self {
+        DegradeLadder { rung: Rung::Healthy, hot_streak: 0, cool_streak: 0, cfg }
+    }
+
+    pub fn rung(&self) -> Rung {
+        self.rung
+    }
+
+    /// One observation: pool utilization in per-mille and the round's
+    /// deadline misses. Returns `Some((from, to))` when the rung changed.
+    pub fn observe(&mut self, util_pm: u64, misses: u64)
+                   -> Option<(Rung, Rung)> {
+        let hot = util_pm >= self.cfg.hot_util_pm
+            || (self.cfg.hot_misses > 0 && misses >= self.cfg.hot_misses);
+        if hot {
+            self.hot_streak += 1;
+            self.cool_streak = 0;
+        } else {
+            self.cool_streak += 1;
+            self.hot_streak = 0;
+        }
+        if hot && self.hot_streak >= self.cfg.escalate_after.max(1)
+            && self.rung != Rung::Shed
+        {
+            let from = self.rung;
+            self.rung = self.rung.up();
+            self.hot_streak = 0;
+            return Some((from, self.rung));
+        }
+        if !hot && self.cool_streak >= self.cfg.recover_after.max(1)
+            && self.rung != Rung::Healthy
+        {
+            let from = self.rung;
+            self.rung = self.rung.down();
+            self.cool_streak = 0;
+            return Some((from, self.rung));
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    #[test]
+    fn isolate_catches_panics_and_returns_values() {
+        assert_eq!(isolate(|| 41 + 1).ok(), Some(42));
+        assert!(isolate(|| panic!("boom")).is_err());
+        // the catching thread is untouched and can keep supervising
+        assert_eq!(isolate(|| "still alive").ok(), Some("still alive"));
+    }
+
+    #[test]
+    fn lock_unpoisoned_recovers_a_poisoned_mutex() {
+        let m = Mutex::new(7usize);
+        // poison it: panic while holding the guard, on this thread, caught
+        let _ = isolate(|| {
+            let _g = m.lock().unwrap();
+            panic!("die holding the lock");
+        });
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        assert_eq!(*lock_unpoisoned(&m), 7);
+        *lock_unpoisoned(&m) = 9;
+        assert_eq!(*lock_unpoisoned(&m), 9);
+    }
+
+    #[test]
+    fn backoff_doubles_and_caps() {
+        assert_eq!(backoff(0, 8), 1);
+        assert_eq!(backoff(1, 8), 2);
+        assert_eq!(backoff(2, 8), 4);
+        assert_eq!(backoff(3, 8), 8);
+        assert_eq!(backoff(10, 8), 8);
+        assert_eq!(backoff(200, 8), 8, "huge restart counts must not shift-overflow");
+        assert_eq!(backoff_ms(2, 50, 1_000), 200);
+        assert_eq!(backoff_ms(30, 50, 1_000), 1_000);
+    }
+
+    #[test]
+    fn worker_health_heartbeat_and_condemnation() {
+        let h = WorkerHealth::new();
+        assert!(h.is_healthy());
+        h.beat(3, 1_000);
+        assert!(!h.is_stalled(3, 1_050, 100), "deadline not yet elapsed");
+        assert!(h.is_stalled(3, 1_200, 100), "stagnant past the deadline");
+        h.beat(4, 1_150);
+        assert!(!h.is_stalled(3, 1_200, 100), "progress clears the stall");
+        h.condemn();
+        assert!(!h.is_healthy());
+        assert_eq!(h.note_panic(), 1);
+        assert_eq!(h.note_restart(), 1);
+        h.revive();
+        assert!(h.is_healthy());
+        assert_eq!(h.restarts(), 1);
+    }
+
+    #[test]
+    fn step_watchdog_condemns_after_limit_stagnant_observations() {
+        let mut w = StepWatchdog::new(3);
+        assert!(!w.observe(1));
+        assert!(!w.observe(2)); // progressing
+        assert!(!w.observe(2));
+        assert!(!w.observe(2));
+        assert!(w.observe(2), "third stagnant observation condemns");
+        assert!(!w.observe(2), "condemnation fires exactly once");
+        w.reset(2);
+        assert!(!w.observe(2));
+        assert!(!w.observe(3), "fresh window after reset");
+    }
+
+    #[test]
+    fn ladder_escalates_on_sustained_pressure_and_recovers() {
+        let cfg = LadderConfig {
+            hot_util_pm: 900,
+            hot_misses: 1,
+            escalate_after: 2,
+            recover_after: 3,
+        };
+        let mut l = DegradeLadder::new(cfg);
+        // one hot round is not enough (no flapping on a spike)
+        assert_eq!(l.observe(950, 0), None);
+        assert_eq!(l.observe(950, 0), Some((Rung::Healthy, Rung::NoSpec)));
+        // misses alone count as hot even with a cool pool
+        assert_eq!(l.observe(100, 2), None);
+        assert_eq!(l.observe(100, 3), Some((Rung::NoSpec, Rung::AdmitPause)));
+        assert_eq!(l.observe(950, 1), None);
+        assert_eq!(l.observe(950, 1), Some((Rung::AdmitPause, Rung::Shed)));
+        // already at the top: stays put
+        assert_eq!(l.observe(950, 1), None);
+        assert_eq!(l.observe(950, 1), None);
+        assert_eq!(l.rung(), Rung::Shed);
+        // recovery: one rung per `recover_after` consecutive cool rounds
+        assert_eq!(l.observe(100, 0), None);
+        assert_eq!(l.observe(100, 0), None);
+        assert_eq!(l.observe(100, 0), Some((Rung::Shed, Rung::AdmitPause)));
+        // a hot round resets the cool streak
+        assert_eq!(l.observe(100, 0), None);
+        assert_eq!(l.observe(950, 0), None);
+        assert_eq!(l.observe(100, 0), None);
+        assert_eq!(l.observe(100, 0), None);
+        assert_eq!(l.observe(100, 0),
+                   Some((Rung::AdmitPause, Rung::NoSpec)));
+    }
+
+    #[test]
+    fn ladder_is_deterministic_across_replays() {
+        let run = || {
+            let mut l = DegradeLadder::new(LadderConfig::default());
+            let mut transitions = Vec::new();
+            for step in 0..200u64 {
+                let util = if (50..120).contains(&step) { 950 } else { 300 };
+                let misses = u64::from(step % 37 == 0 && step > 60);
+                if let Some((a, b)) = l.observe(util, misses) {
+                    transitions.push((step, a.name(), b.name()));
+                }
+            }
+            transitions
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b);
+        assert!(!a.is_empty(), "the pressure window must move the ladder");
+    }
+}

@@ -23,8 +23,9 @@ use crate::kvcache::{PoolLease, PrefixHit, PrefixIndex, SharedBlockPool};
 use crate::metrics::{EventLog, SchedEvent};
 use crate::sched::{self, AdmitRate, Priority, ReqMeta, SloPolicy,
                    WorkerSnapshot};
+use crate::supervisor::{self, DegradeLadder, LadderConfig, Rung, StepWatchdog};
 use crate::util::rng::Rng;
-use crate::workload::Trace;
+use crate::workload::{FaultKind, FaultPlan, Trace};
 
 /// Byte/call-counting allocator shim for the zero-allocation hot-path
 /// tests. A test binary opts in by registering it:
@@ -178,6 +179,17 @@ pub trait SchedBackend {
     fn prefix_stats(&self) -> (u64, u64, u64, u64) {
         (0, 0, 0, 0)
     }
+    /// Apply one injected chaos fault. Returns whether the fault actually
+    /// took effect (a panic aimed at an already-dead worker no-ops).
+    /// Backends without fault support ignore every injection.
+    fn inject_fault(&mut self, _kind: &FaultKind) -> bool {
+        false
+    }
+    /// Chaos counters `(faults_applied, failovers, failed_streams)`;
+    /// zeros for backends without fault support.
+    fn fault_stats(&self) -> (usize, usize, usize) {
+        (0, 0, 0)
+    }
 }
 
 impl SchedBackend for Engine {
@@ -202,7 +214,7 @@ impl SchedBackend for Engine {
     }
     fn prefix_stats(&self) -> (u64, u64, u64, u64) {
         let idx = self.prefix_index();
-        let idx = idx.lock().unwrap();
+        let idx = supervisor::lock_unpoisoned(&idx);
         (idx.hits(), idx.misses(), idx.blocks_saved(), idx.forks())
     }
 }
@@ -218,11 +230,20 @@ pub struct SimOptions {
     /// seed for the sim's own randomness (cancel plan) — independent of the
     /// backend's seed
     pub seed: u64,
+    /// seeded chaos schedule (worker panics, step stalls, pool spikes,
+    /// conn errors) fired on the virtual step clock; `None` = no faults
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { max_steps: 10_000, cancel_prob: 0.0, cancel_after: 2, seed: 0 }
+        SimOptions {
+            max_steps: 10_000,
+            cancel_prob: 0.0,
+            cancel_after: 2,
+            seed: 0,
+            faults: None,
+        }
     }
 }
 
@@ -256,6 +277,14 @@ pub struct SimReport {
     pub prefix_misses: u64,
     pub prefix_blocks_saved: u64,
     pub prefix_forks: u64,
+    /// chaos faults the backend actually applied (an injection can no-op,
+    /// e.g. a panic scheduled for a worker that is already down)
+    pub faults_injected: usize,
+    /// rescued requests re-placed onto a surviving worker after a crash
+    pub failovers: usize,
+    /// rescued requests dropped after exhausting the failover retry
+    /// budget — the chaos gate asserts this stays zero
+    pub failed_streams: usize,
 }
 
 /// Drives a `SchedBackend` through a timed `Trace` under a virtual clock:
@@ -275,8 +304,19 @@ impl SchedulerSim {
         let mut cancel_rng = Rng::new(self.opts.seed ^ 0x5C4E_D01E);
         let mut pending_cancels: Vec<(u64, u64)> = Vec::new(); // (fire, id)
         let mut taken = 0usize;
+        let mut faults_taken = 0usize;
         let mut clock = 0u64;
         loop {
+            // chaos faults due on this tick fire before arrivals so this
+            // step's placement decisions already see the failure
+            if let Some(plan) = &self.opts.faults {
+                let due = plan.due(faults_taken, clock);
+                faults_taken += due.len();
+                for ev in due.to_vec() {
+                    backend.inject_fault(&ev.kind);
+                }
+            }
+
             // arrivals due on this tick
             let due = trace.due(taken, clock);
             let n_due = due.len();
@@ -351,6 +391,10 @@ impl SchedulerSim {
         report.prefix_misses = misses;
         report.prefix_blocks_saved = saved;
         report.prefix_forks = forks;
+        let (applied, failovers, failed) = backend.fault_stats();
+        report.faults_injected = applied;
+        report.failovers = failovers;
+        report.failed_streams = failed;
         Ok(report)
     }
 }
@@ -846,6 +890,80 @@ impl MockSched {
         let v = self.policy.pick_victim(&metas, now)?;
         Some(self.evict_slot(running[v].0))
     }
+
+    /// Panic model: the worker dies mid-round. Live and queued requests
+    /// are rescued for failover (they replay from the prompt elsewhere),
+    /// the prefix index is drained, and the whole lease is released —
+    /// exactly the teardown the server's supervisor performs after
+    /// `catch_unwind`, so the shared-pool conservation invariant holds
+    /// across crashes. Returns `(rescued, blocks swept back to global)`.
+    fn crash(&mut self) -> (Vec<MockReq>, usize) {
+        let mut rescued = Vec::new();
+        for slot in self.slots.iter_mut() {
+            if let Some(seq) = slot.take() {
+                rescued.push(MockReq {
+                    id: seq.id,
+                    prompt_len: seq.prompt_len,
+                    tokens: seq.tokens,
+                    max_new: seq.max_new,
+                    class: seq.class,
+                    deadline_step: seq.deadline_step,
+                    submit_step: seq.submit_step,
+                    produced: Vec::new(),
+                    steps: 0,
+                    rng: None,
+                    enq_step: self.step_no,
+                });
+            }
+        }
+        for mut r in self.wait_queue.drain(..) {
+            r.produced.clear();
+            r.steps = 0;
+            r.rng = None;
+            rescued.push(r);
+        }
+        rescued.sort_by_key(|r| r.id);
+        // index-owned blocks sit outside the lease accounting: hand them
+        // back through the shard so the drain below sweeps everything the
+        // worker ever held (drain() also clears every live ref the dead
+        // sequences still counted)
+        let cached = self.index.drain();
+        self.pool.shared().give_back(self.pool.worker(), cached);
+        self.pool.release_all();
+        let freed = self.pool.shared().drain_worker(self.pool.worker());
+        (rescued, freed)
+    }
+
+    /// Failover intake for a request rescued from a crashed worker: keeps
+    /// the original id, class, and deadline (it replays from the prompt).
+    /// The caller has already verified the queue has room.
+    fn accept_failover(&mut self, mut req: MockReq) {
+        req.enq_step = self.step_no;
+        let id = req.id;
+        if self.wait_queue.is_empty()
+            && self.has_free_slot()
+            && self.pool.can_fit(req.prompt_len)
+        {
+            self.admit_req(req);
+            return;
+        }
+        self.wait_queue.push(req);
+        let pos = self
+            .policy_order()
+            .iter()
+            .position(|&i| self.wait_queue[i].id == id)
+            .unwrap_or(self.wait_queue.len() - 1);
+        self.events.push(SchedEvent::Queued { step: self.step_no, id, pos });
+    }
+
+    /// Degradation-ladder hook: force (or release) plain decode on the β
+    /// controller, when one is installed. A plan change shows up in the
+    /// event log as the usual `beta` line.
+    pub fn set_force_plain(&mut self, on: bool) {
+        if let Some(beta) = self.beta.as_mut() {
+            beta.force_plain(on);
+        }
+    }
 }
 
 impl SchedBackend for MockSched {
@@ -1135,6 +1253,72 @@ pub struct MockCluster {
     placements: Vec<u64>,
     events: EventLog,
     step_no: u64,
+    /// per-worker chaos/supervision state (down/stall windows, watchdog,
+    /// restart count) — all zeros until a fault is injected
+    faults: Vec<FaultState>,
+    /// requests rescued from crashed workers, awaiting re-placement
+    orphans: Vec<Orphan>,
+    /// blocks held out of the pool by an injected exhaustion spike
+    spikes: Vec<Spike>,
+    /// cluster-wide graceful-degradation ladder (None = disabled)
+    ladder: Option<DegradeLadder>,
+    /// ladder ≥ admit-pause: new submissions bounce with `Busy`
+    admit_paused: bool,
+    faults_applied: usize,
+    failovers: usize,
+    failed_streams: usize,
+}
+
+/// Stagnant step-watchdog observations before a wedged worker is condemned
+/// (injected stalls run ≥3 steps, so every stall is caught).
+const WATCHDOG_STALL_OBS: u64 = 3;
+
+/// Re-placement attempts a rescued request gets before it counts as a
+/// failed stream. Attempts are only burned when a healthy worker bounced
+/// the request (full queue) — waiting out an all-workers-down window is
+/// free, since restarts are guaranteed by the backoff schedule.
+const FAILOVER_RETRY_BUDGET: u32 = 16;
+
+/// Per-worker supervision state inside `MockCluster`.
+struct FaultState {
+    /// worker is dead (crashed, pre-restart) while `step_no < down_until`
+    down_until: u64,
+    /// `step_ex` is wedged while `step_no < stall_until`
+    stall_until: u64,
+    /// capped-exponential restart counter (`supervisor::backoff`)
+    restarts: u64,
+    /// step-sequence heartbeat: bumps only when `step_ex` makes progress
+    seq: u64,
+    watchdog: StepWatchdog,
+    /// rescued-request / freed-block counts from the last crash, reported
+    /// in the `recover` event when the worker comes back
+    requeued: usize,
+    freed: usize,
+}
+
+impl FaultState {
+    fn new() -> FaultState {
+        FaultState {
+            down_until: 0,
+            stall_until: 0,
+            restarts: 0,
+            seq: 0,
+            watchdog: StepWatchdog::new(WATCHDOG_STALL_OBS),
+            requeued: 0,
+            freed: 0,
+        }
+    }
+}
+
+struct Orphan {
+    req: MockReq,
+    from: usize,
+    attempts: u32,
+}
+
+struct Spike {
+    release_at: u64,
+    blocks: usize,
 }
 
 impl MockCluster {
@@ -1168,7 +1352,24 @@ impl MockCluster {
             pool,
             events: EventLog::default(),
             step_no: 0,
+            faults: (0..n).map(|_| FaultState::new()).collect(),
+            orphans: Vec::new(),
+            spikes: Vec::new(),
+            ladder: None,
+            admit_paused: false,
+            faults_applied: 0,
+            failovers: 0,
+            failed_streams: 0,
         }
+    }
+
+    /// Enable the graceful-degradation ladder: pool pressure and per-step
+    /// deadline misses drive healthy → no-spec → admit-pause → shed, each
+    /// transition logged as a `degrade` event. Off by default so fault-free
+    /// replays are bit-identical to previous releases.
+    pub fn with_ladder(mut self, cfg: LadderConfig) -> Self {
+        self.ladder = Some(DegradeLadder::new(cfg));
+        self
     }
 
     /// Apply an SLO policy to every worker.
@@ -1230,7 +1431,7 @@ impl MockCluster {
     }
 
     /// Router-visible load snapshot per worker: no-steal pool headroom,
-    /// class mix of occupied slots, and queue depth.
+    /// class mix of occupied slots, queue depth, and liveness.
     fn snapshots(&self) -> Vec<WorkerSnapshot> {
         self.workers
             .iter()
@@ -1245,15 +1446,102 @@ impl MockCluster {
                     queued,
                     queue_full: m.queue_cap > 0 && queued >= m.queue_cap,
                     prefix_blocks: 0,
+                    unhealthy: self.is_unhealthy(w),
                 }
             })
             .collect()
+    }
+
+    /// Down (crashed, pre-restart) or wedged — either way the router must
+    /// route around it.
+    fn is_unhealthy(&self, w: usize) -> bool {
+        self.faults[w].down_until > self.step_no
+            || self.faults[w].stall_until > self.step_no
+    }
+
+    /// Kill worker `w` now: rescue its requests into the failover queue,
+    /// sweep its lease and index back to the shared pool, and schedule a
+    /// restart after a capped-exponential backoff.
+    fn crash_worker(&mut self, w: usize, kind: &'static str) {
+        let (rescued, freed) = self.workers[w].crash();
+        let f = &mut self.faults[w];
+        f.requeued = rescued.len();
+        f.freed = freed;
+        f.down_until = self.step_no + supervisor::backoff(f.restarts, 8);
+        f.stall_until = 0;
+        f.restarts += 1;
+        self.events.push(SchedEvent::Fault { step: self.step_no, worker: w, kind });
+        self.orphans.extend(
+            rescued.into_iter().map(|req| Orphan { req, from: w, attempts: 0 }));
+    }
+
+    /// Lowest live request id across the cluster (slots then queues) and
+    /// the worker holding it — the deterministic victim for an injected
+    /// client connection error.
+    fn lowest_live(&self) -> Option<(usize, u64)> {
+        let mut best: Option<(usize, u64)> = None;
+        for (w, m) in self.workers.iter().enumerate() {
+            for s in m.slots.iter().flatten() {
+                if best.map(|(_, id)| s.id < id).unwrap_or(true) {
+                    best = Some((w, s.id));
+                }
+            }
+            for r in &m.wait_queue {
+                if best.map(|(_, id)| r.id < id).unwrap_or(true) {
+                    best = Some((w, r.id));
+                }
+            }
+        }
+        best
+    }
+
+    /// Re-place rescued requests onto healthy workers. A bounce off a full
+    /// healthy queue burns one retry attempt; an all-workers-down window
+    /// costs nothing (the backoff schedule guarantees a restart).
+    fn retry_orphans(&mut self) {
+        if self.orphans.is_empty() {
+            return;
+        }
+        let snaps = self.snapshots();
+        for mut o in std::mem::take(&mut self.orphans) {
+            let need = self.pool.blocks_for(o.req.prompt_len);
+            let w = sched::place(&snaps, o.req.class, need, None);
+            if snaps[w].unhealthy {
+                self.orphans.push(o);
+                continue;
+            }
+            let target = &mut self.workers[w];
+            if target.queue_cap > 0
+                && target.wait_queue.len() >= target.queue_cap
+            {
+                o.attempts += 1;
+                if o.attempts > FAILOVER_RETRY_BUDGET {
+                    self.failed_streams += 1;
+                } else {
+                    self.orphans.push(o);
+                }
+                continue;
+            }
+            let id = o.req.id;
+            target.accept_failover(o.req);
+            self.failovers += 1;
+            self.events.push(SchedEvent::Failover {
+                step: self.step_no,
+                id,
+                from: o.from,
+                to: w,
+            });
+        }
     }
 }
 
 impl SchedBackend for MockCluster {
     fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
                      deadline_steps: Option<u64>) -> Result<Submission> {
+        if self.admit_paused {
+            // degradation ladder at admit-pause or shed: bounce new work
+            return Ok(Submission::Busy { retry_after_steps: 8 });
+        }
         let mut snaps = self.snapshots();
         // cache affinity: how much of this prompt each worker's prefix
         // index already holds (the server probes engines the same way)
@@ -1265,6 +1553,11 @@ impl SchedBackend for MockCluster {
         }
         let need = self.pool.blocks_for(mock_prompt_len(prompt));
         let w = sched::place(&snaps, class, need, deadline_steps);
+        if snaps[w].unhealthy {
+            // every worker is down or wedged — a real router has nobody
+            // to hand the bytes to, so the client sees busy-with-retry
+            return Ok(Submission::Busy { retry_after_steps: 8 });
+        }
         let sub = self.workers[w].submit_tagged(prompt, max_new, class,
                                                 deadline_steps)?;
         self.placements[w] += 1;
@@ -1285,8 +1578,66 @@ impl SchedBackend for MockCluster {
     fn step_ex(&mut self) -> Result<StepReport> {
         self.step_no += 1;
         let mut report = StepReport { step: self.step_no, ..Default::default() };
-        for m in &mut self.workers {
-            let r = m.step_ex()?;
+
+        // injected pool-exhaustion spikes give their blocks back on expiry
+        let now = self.step_no;
+        let pool = self.pool.clone();
+        self.spikes.retain(|s| {
+            if s.release_at <= now {
+                pool.give_back(0, s.blocks);
+                false
+            } else {
+                true
+            }
+        });
+
+        // supervision: restart workers whose backoff expired (logged as a
+        // `recover` event carrying the crash-time rescue/free counts), and
+        // clear stall windows that ran out before the watchdog fired
+        for w in 0..self.workers.len() {
+            let f = &mut self.faults[w];
+            if f.down_until != 0 && f.down_until <= now {
+                f.down_until = 0;
+                let seq = f.seq;
+                f.watchdog.reset(seq);
+                self.events.push(SchedEvent::Recover {
+                    step: now,
+                    worker: w,
+                    requeued: f.requeued,
+                    freed: f.freed,
+                });
+            }
+            if f.stall_until != 0 && f.stall_until <= now {
+                f.stall_until = 0;
+            }
+        }
+
+        // failover: rescued requests re-place before workers step so a
+        // survivor can admit them this round
+        self.retry_orphans();
+
+        let mut condemned: Vec<usize> = Vec::new();
+        for w in 0..self.workers.len() {
+            let f = &mut self.faults[w];
+            if f.down_until > now {
+                continue; // dead until restart
+            }
+            if f.stall_until > now {
+                // wedged step_ex: no progress, heartbeat stays stagnant —
+                // the watchdog condemns after WATCHDOG_STALL_OBS misses,
+                // making a stall indistinguishable from a crash
+                let seq = f.seq;
+                if f.watchdog.observe(seq) {
+                    condemned.push(w);
+                }
+                report.queue_depth += self.workers[w].queue_len();
+                continue;
+            }
+            let r = self.workers[w].step_ex()?;
+            let f = &mut self.faults[w];
+            f.seq += 1;
+            let seq = f.seq;
+            f.watchdog.reset(seq);
             report.admitted.extend(r.admitted);
             report.emitted.extend(r.emitted);
             report.finished.extend(r.finished);
@@ -1295,7 +1646,31 @@ impl SchedBackend for MockCluster {
             report.deadline_missed.extend(r.deadline_missed);
             report.queue_depth += r.queue_depth;
         }
+        for w in condemned {
+            self.crash_worker(w, "watchdog");
+        }
+        report.queue_depth += self.orphans.len();
         report.pool_utilization = self.pool.utilization();
+
+        // graceful-degradation ladder: pool pressure + this step's
+        // deadline misses drive rung transitions, which force/release
+        // plain decode on every worker and gate admission
+        if let Some(ladder) = self.ladder.as_mut() {
+            let util_pm = (report.pool_utilization * 1000.0) as u64;
+            let misses = report.deadline_missed.len() as u64;
+            if let Some((_, to)) = ladder.observe(util_pm, misses) {
+                self.events.push(SchedEvent::Degrade {
+                    step: self.step_no,
+                    worker: 0,
+                    rung: to.name(),
+                });
+                let plain = to >= Rung::NoSpec;
+                for m in &mut self.workers {
+                    m.set_force_plain(plain);
+                }
+                self.admit_paused = to >= Rung::AdmitPause;
+            }
+        }
         Ok(report)
     }
 
@@ -1304,7 +1679,10 @@ impl SchedBackend for MockCluster {
     }
 
     fn queue_len(&self) -> usize {
-        self.workers.iter().map(|m| m.queue_len()).sum()
+        // rescued requests awaiting re-placement still count as queued —
+        // the sim must not declare the cluster drained while they exist
+        self.workers.iter().map(|m| m.queue_len()).sum::<usize>()
+            + self.orphans.len()
     }
 
     fn render_events(&self) -> String {
@@ -1323,6 +1701,77 @@ impl SchedBackend for MockCluster {
             agg = (agg.0 + h, agg.1 + mi, agg.2 + s, agg.3 + f);
         }
         agg
+    }
+
+    fn inject_fault(&mut self, kind: &FaultKind) -> bool {
+        let n = self.workers.len();
+        let applied = match *kind {
+            FaultKind::WorkerPanic { worker } => {
+                let w = worker % n;
+                if self.is_unhealthy(w) {
+                    false // already dead or wedged: the panic is moot
+                } else {
+                    self.crash_worker(w, "panic");
+                    true
+                }
+            }
+            FaultKind::StepStall { worker, steps } => {
+                let w = worker % n;
+                if self.is_unhealthy(w) {
+                    false
+                } else {
+                    self.faults[w].stall_until = self.step_no + steps.max(1);
+                    self.events.push(SchedEvent::Fault {
+                        step: self.step_no,
+                        worker: w,
+                        kind: "stall",
+                    });
+                    true
+                }
+            }
+            FaultKind::PoolSpike { blocks, hold_steps } => {
+                // all-or-nothing grab through worker 0's shard; a pool too
+                // tight to supply the spike means the exhaustion pressure
+                // already exists and the injection no-ops
+                if blocks > 0 && self.pool.try_take(0, blocks) {
+                    self.spikes.push(Spike {
+                        release_at: self.step_no + hold_steps.max(1),
+                        blocks,
+                    });
+                    self.events.push(SchedEvent::Fault {
+                        step: self.step_no,
+                        worker: 0,
+                        kind: "pool_spike",
+                    });
+                    true
+                } else {
+                    false
+                }
+            }
+            FaultKind::ConnError => {
+                // a client connection dying mid-stream cancels its request;
+                // the lowest live id is the deterministic victim
+                if let Some((w, id)) = self.lowest_live() {
+                    self.events.push(SchedEvent::Fault {
+                        step: self.step_no,
+                        worker: w,
+                        kind: "conn_error",
+                    });
+                    self.workers[w].cancel(id);
+                    true
+                } else {
+                    false
+                }
+            }
+        };
+        if applied {
+            self.faults_applied += 1;
+        }
+        applied
+    }
+
+    fn fault_stats(&self) -> (usize, usize, usize) {
+        (self.faults_applied, self.failovers, self.failed_streams)
     }
 }
 

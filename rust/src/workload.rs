@@ -267,6 +267,12 @@ pub enum ClientBehavior {
     SlowReader { read_frames: usize },
     /// Reads `after_frames` frames, then cancels its request mid-stream.
     CancelStorm { after_frames: usize },
+    /// Reads `drop_after` frames, then disconnects mid-stream (its request
+    /// is cancelled like any vanished client), reconnects, and retries the
+    /// same request from scratch — the client-side mirror of server-side
+    /// failover. Exercises the shed/cancel reclamation path and the
+    /// retry path together.
+    Flaky { drop_after: usize },
 }
 
 impl ClientBehavior {
@@ -275,6 +281,7 @@ impl ClientBehavior {
             ClientBehavior::Streaming => "streaming",
             ClientBehavior::SlowReader { .. } => "slow_reader",
             ClientBehavior::CancelStorm { .. } => "cancel_storm",
+            ClientBehavior::Flaky { .. } => "flaky",
         }
     }
 }
@@ -285,10 +292,20 @@ impl ClientBehavior {
 /// clustered at one end of the connection id space.
 pub fn behavior_mix(n: usize, slow_frac: f64, cancel_frac: f64, seed: u64)
                     -> Vec<ClientBehavior> {
+    behavior_mix_flaky(n, slow_frac, cancel_frac, 0.0, seed)
+}
+
+/// `behavior_mix` plus a `flaky_frac` share of mid-stream disconnect-and-
+/// retry clients. With `flaky_frac == 0` the RNG draw order is identical
+/// to `behavior_mix`, so existing seeded transcripts are byte-stable.
+pub fn behavior_mix_flaky(n: usize, slow_frac: f64, cancel_frac: f64,
+                          flaky_frac: f64, seed: u64) -> Vec<ClientBehavior> {
     let mut rng = Rng::new(seed ^ 0xBEAA_17ED);
     let slow = ((n as f64) * slow_frac).round() as usize;
     let cancel = (((n as f64) * cancel_frac).round() as usize)
         .min(n.saturating_sub(slow));
+    let flaky = (((n as f64) * flaky_frac).round() as usize)
+        .min(n.saturating_sub(slow + cancel));
     let mut mix = Vec::with_capacity(n);
     for _ in 0..slow {
         mix.push(ClientBehavior::SlowReader { read_frames: rng.below(4) });
@@ -296,11 +313,130 @@ pub fn behavior_mix(n: usize, slow_frac: f64, cancel_frac: f64, seed: u64)
     for _ in 0..cancel {
         mix.push(ClientBehavior::CancelStorm { after_frames: 1 + rng.below(6) });
     }
+    for _ in 0..flaky {
+        mix.push(ClientBehavior::Flaky { drop_after: 1 + rng.below(4) });
+    }
     while mix.len() < n {
         mix.push(ClientBehavior::Streaming);
     }
     rng.shuffle(&mut mix);
     mix
+}
+
+// ---------------------------------------------------------- fault plans
+
+/// One injectable failure, scheduled at an exact virtual step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Worker panics mid-round: its engine unwinds, the supervisor must
+    /// drain its lease + index and fail its requests over.
+    WorkerPanic { worker: usize },
+    /// Worker's step wedges for `steps` rounds: the round watchdog must
+    /// condemn it exactly like a crash.
+    StepStall { worker: usize, steps: u64 },
+    /// Transient pool-exhaustion spike: `blocks` vanish from the shared
+    /// pool for `hold_steps` rounds (feeds the degradation ladder).
+    PoolSpike { blocks: usize, hold_steps: u64 },
+    /// A client connection drops mid-stream: its request is cancelled
+    /// (the sim's stand-in for a conn I/O error).
+    ConnError,
+}
+
+impl FaultKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::WorkerPanic { .. } => "panic",
+            FaultKind::StepStall { .. } => "stall",
+            FaultKind::PoolSpike { .. } => "pool_spike",
+            FaultKind::ConnError => "conn_error",
+        }
+    }
+}
+
+/// A fault due at virtual step `step`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultEvent {
+    pub step: u64,
+    pub kind: FaultKind,
+}
+
+/// A seeded, replayable schedule of faults on the scheduler's virtual step
+/// clock — the failure-mode counterpart of `Trace`. Entries are step-
+/// ordered so `due()` is the same prefix walk as `Trace::due`.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Seeded chaos schedule over `horizon` virtual steps against
+    /// `workers` workers. Always contains at least one worker panic and
+    /// one step stall (the chaos gate's contract), plus a seeded mix of
+    /// pool spikes and connection errors. Deterministic in `seed`.
+    pub fn seeded(seed: u64, workers: usize, horizon: u64) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA17_5EED);
+        let workers = workers.max(1);
+        let horizon = horizon.max(32);
+        let jitter = |rng: &mut Rng, base: u64| {
+            base + rng.below((horizon / 8).max(2) as usize) as u64
+        };
+        let mut events = vec![
+            FaultEvent {
+                step: jitter(&mut rng, horizon / 4),
+                kind: FaultKind::WorkerPanic { worker: rng.below(workers) },
+            },
+            FaultEvent {
+                step: jitter(&mut rng, horizon / 2),
+                kind: FaultKind::StepStall {
+                    worker: rng.below(workers),
+                    steps: 3 + rng.below(4) as u64,
+                },
+            },
+            FaultEvent {
+                step: jitter(&mut rng, horizon / 8),
+                kind: FaultKind::PoolSpike {
+                    blocks: 8 + rng.below(25),
+                    hold_steps: 4 + rng.below(8) as u64,
+                },
+            },
+            FaultEvent {
+                step: jitter(&mut rng, (horizon * 3) / 8),
+                kind: FaultKind::ConnError,
+            },
+        ];
+        if workers > 1 {
+            // second panic on a multi-worker cluster so failover is
+            // exercised in both directions
+            events.push(FaultEvent {
+                step: jitter(&mut rng, (horizon * 5) / 8),
+                kind: FaultKind::WorkerPanic { worker: rng.below(workers) },
+            });
+        }
+        events.sort_by_key(|e| e.step);
+        FaultPlan { events }
+    }
+
+    /// Faults due at or before `step` after the first `taken` entries
+    /// (step-ordered prefix walk, mirroring `Trace::due`).
+    pub fn due(&self, taken: usize, step: u64) -> &[FaultEvent] {
+        let mut end = taken;
+        while end < self.events.len() && self.events[end].step <= step {
+            end += 1;
+        }
+        &self.events[taken..end]
+    }
+
+    pub fn panics(&self) -> usize {
+        self.events.iter()
+            .filter(|e| matches!(e.kind, FaultKind::WorkerPanic { .. }))
+            .count()
+    }
+
+    pub fn stalls(&self) -> usize {
+        self.events.iter()
+            .filter(|e| matches!(e.kind, FaultKind::StepStall { .. }))
+            .count()
+    }
 }
 
 #[cfg(test)]
@@ -320,6 +456,55 @@ mod tests {
         // shuffled: not all misbehavers clustered at the front
         assert!(a[..14].iter().any(|c| c.name() == "streaming"));
         assert_ne!(a, behavior_mix(40, 0.25, 0.10, 10));
+    }
+
+    #[test]
+    fn behavior_mix_flaky_adds_retriers_without_shifting_legacy_mix() {
+        // flaky_frac = 0 must be byte-identical to behavior_mix (the
+        // shedreplay transcripts in check.sh depend on it)
+        assert_eq!(behavior_mix_flaky(40, 0.25, 0.10, 0.0, 9),
+                   behavior_mix(40, 0.25, 0.10, 9));
+        let a = behavior_mix_flaky(40, 0.25, 0.10, 0.15, 9);
+        let b = behavior_mix_flaky(40, 0.25, 0.10, 0.15, 9);
+        assert_eq!(a, b);
+        assert_eq!(a.iter().filter(|c| c.name() == "flaky").count(), 6);
+        assert_eq!(a.iter().filter(|c| c.name() == "slow_reader").count(), 10);
+        assert!(a.iter().all(|c| match c {
+            ClientBehavior::Flaky { drop_after } => *drop_after >= 1,
+            _ => true,
+        }));
+    }
+
+    #[test]
+    fn fault_plan_is_seeded_and_guarantees_panic_plus_stall() {
+        let a = FaultPlan::seeded(7, 2, 256);
+        let b = FaultPlan::seeded(7, 2, 256);
+        assert_eq!(a.events, b.events);
+        assert!(a.panics() >= 1, "chaos gate needs at least one panic");
+        assert!(a.stalls() >= 1, "chaos gate needs at least one stall");
+        assert!(a.events.windows(2).all(|w| w[0].step <= w[1].step),
+                "events must be step-ordered for due()");
+        assert_ne!(a.events, FaultPlan::seeded(8, 2, 256).events);
+        // single-worker plans target worker 0 only
+        let solo = FaultPlan::seeded(7, 1, 256);
+        assert!(solo.events.iter().all(|e| match e.kind {
+            FaultKind::WorkerPanic { worker }
+            | FaultKind::StepStall { worker, .. } => worker == 0,
+            _ => true,
+        }));
+    }
+
+    #[test]
+    fn fault_plan_due_walks_prefix() {
+        let p = FaultPlan::seeded(3, 2, 128);
+        let last = p.events.last().unwrap().step;
+        assert_eq!(p.due(0, last).len(), p.events.len());
+        assert!(p.due(p.events.len(), last + 50).is_empty());
+        let mut taken = 0;
+        for step in 0..=last {
+            taken += p.due(taken, step).len();
+        }
+        assert_eq!(taken, p.events.len(), "stepwise walk visits every fault once");
     }
 
     #[test]

@@ -1126,6 +1126,95 @@ fn prop_write_queue_sheds_never_blocks() {
     });
 }
 
+// --------------------------------------------- crash-recovery conservation
+
+#[test]
+fn prop_crash_never_leaks_blocks() {
+    use ctcdraft::testkit::{MockCluster, SchedBackend};
+    use ctcdraft::workload::FaultKind;
+    // Model-based check of the supervision tentpole's core guarantee:
+    // block conservation survives CRASHES. Random interleavings of
+    // admit (some prompts repeat → prefix publish/share), worker panic
+    // (crash → rescue → lease + index sweep back to the shared pool),
+    // step (decode, supervised restart after backoff, orphan failover)
+    // over a MockCluster must keep the exact ledger
+    //     cluster_free + Σ lease_in_use + Σ index_owned == total
+    // after EVERY operation — a crashed worker's blocks are swept, never
+    // stranded — and once the cluster drains, no slot is left occupied.
+    Prop::new("crash_conservation").check(|rng| {
+        let workers = 1 + rng.below(3);
+        let slots = 1 + rng.below(3);
+        let pool_positions = 1 << (10 + rng.below(3));
+        let mut cluster = MockCluster::new(
+            workers, slots, 4, pool_positions, rng.next_u64())
+            .with_prefix_sharing(rng.bool(0.5));
+        let total = cluster.pool().total_blocks();
+        let ledger = |c: &MockCluster, what: &str| -> Result<(), String> {
+            // per-lease holdings are the per-slot allocations (queued and
+            // orphaned requests hold no blocks; shard reserves are free)
+            let leased: usize = (0..workers)
+                .map(|w| {
+                    (0..slots)
+                        .map(|s| c.worker(w).pool().allocated(s))
+                        .sum::<usize>()
+                })
+                .sum();
+            let indexed: usize = (0..workers)
+                .map(|w| c.worker(w).prefix_index().owned_blocks())
+                .sum();
+            let free = c.pool().cluster_free_blocks();
+            if free + leased + indexed != total {
+                return Err(format!(
+                    "{what}: leak — free {free} + leased {leased} + \
+                     indexed {indexed} != {total}"));
+            }
+            Ok(())
+        };
+        let mut prompts = 0usize;
+        for op in 0..120 {
+            let roll = rng.below(100);
+            if roll < 45 {
+                // admit; 40% reuse an earlier prompt so publish/share and
+                // the crash sweep meet over the same index nodes
+                let p = if prompts > 0 && rng.bool(0.4) {
+                    rng.below(prompts)
+                } else {
+                    prompts += 1;
+                    prompts - 1
+                };
+                let prompt = format!(
+                    "chaos question {p} {}", "word ".repeat(1 + p % 7));
+                let _ = cluster
+                    .submit_tagged(&prompt, 1 + rng.below(12),
+                                   Priority::Interactive, None)
+                    .map_err(|e| format!("op {op}: submit: {e}"))?;
+            } else if roll < 58 {
+                cluster.inject_fault(
+                    &FaultKind::WorkerPanic { worker: rng.below(workers) });
+            } else {
+                cluster.step_ex().map_err(|e| format!("op {op}: step: {e}"))?;
+            }
+            ledger(&cluster, &format!("op {op}"))?;
+        }
+        // drain: restarts are on a capped backoff and orphan failover burns
+        // a bounded retry budget, so a few hundred steps always settle it
+        for i in 0..400 {
+            if cluster.n_active() == 0 && cluster.queue_len() == 0 {
+                break;
+            }
+            cluster.step_ex().map_err(|e| format!("drain {i}: {e}"))?;
+            ledger(&cluster, &format!("drain {i}"))?;
+        }
+        if cluster.n_active() != 0 || cluster.queue_len() != 0 {
+            return Err(format!(
+                "stranded slots: {} active + {} queued after drain",
+                cluster.n_active(), cluster.queue_len()));
+        }
+        ledger(&cluster, "post-drain")?;
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_kvcache_append_preserves_earlier_rows() {
     use ctcdraft::kvcache::SeqCache;

@@ -642,6 +642,140 @@ fn cluster_sim_replays_byte_for_byte() {
     assert_eq!(a.busy_rejections, b.busy_rejections);
 }
 
+/// Chaos replay determinism: the same seeded `FaultPlan` (worker panics,
+/// step stalls, pool spikes, conn errors on the virtual step clock) over
+/// the same trace must produce byte-identical event logs — crash rescue,
+/// supervised restart, orphan failover and ladder transitions all run on
+/// seeded state. And the chaos must be SURVIVED: at least the guaranteed
+/// panic + one more fault apply, a crashed worker recovers, and no client
+/// stream is lost to the injected failures.
+#[test]
+fn fault_injected_cluster_replays_byte_for_byte_and_survives() {
+    use ctcdraft::supervisor::LadderConfig;
+    use ctcdraft::workload::FaultPlan;
+    let run = || {
+        let trace = Trace::poisson_with_classes(
+            workload::mtbench(3, 23), 24, 1.5, 23, 0.5, 64, 512);
+        let mut backend = MockCluster::new(2, 4, 8, 512, 23)
+            .with_ladder(LadderConfig::default());
+        SchedulerSim::new(SimOptions {
+            seed: 23,
+            faults: Some(FaultPlan::seeded(23, 2, 32)),
+            ..Default::default()
+        })
+        .run(&mut backend, &trace)
+        .expect("chaos sim")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.event_log, b.event_log,
+               "fault replay not reproducible from seed");
+    assert_eq!(a.per_request_steps, b.per_request_steps);
+    assert_eq!(a.faults_injected, b.faults_injected);
+    assert_eq!(a.failovers, b.failovers);
+    assert!(a.event_log.contains("kind=panic"),
+            "plan's guaranteed worker panic never applied");
+    assert!(a.event_log.contains("recover worker="),
+            "crashed worker never recovered");
+    assert!(a.faults_injected >= 2,
+            "only {} faults applied", a.faults_injected);
+    assert_eq!(a.failed_streams, 0,
+               "chaos lost {} client streams", a.failed_streams);
+    assert!(!a.finished.is_empty(), "nothing finished under chaos");
+}
+
+/// Round watchdog: a wedged `step_ex` (injected stall, heartbeat seq
+/// stagnant) is condemned after `WATCHDOG_STALL_OBS` observations and
+/// handled exactly like a crash — requests rescued and failed over, lease
+/// swept, worker restarted after backoff — so a stall is indistinguishable
+/// from a panic and every request still completes.
+#[test]
+fn watchdog_condemns_wedged_worker_and_fails_over() {
+    use ctcdraft::workload::FaultKind;
+    let mut c = MockCluster::new(2, 2, 8, 100_000, 3);
+    for i in 0..6 {
+        let prompt = format!("wedge question {i} {}", "w ".repeat(20));
+        c.submit_tagged(&prompt, 16, Priority::Interactive, None)
+            .expect("submit");
+    }
+    for _ in 0..2 {
+        c.step_ex().expect("warm step");
+    }
+    // both workers should be loaded so the wedge strands real requests
+    assert!(c.worker(0).n_active() > 0 && c.worker(1).n_active() > 0,
+            "placement failed to spread load");
+    assert!(c.inject_fault(&FaultKind::StepStall { worker: 0, steps: 50 }),
+            "stall injection refused");
+    for _ in 0..100 {
+        c.step_ex().expect("step");
+        if c.n_active() == 0 && c.queue_len() == 0 {
+            break;
+        }
+    }
+    let log = c.render_events();
+    assert!(log.contains("fault worker=0 kind=stall"), "stall not logged");
+    assert!(log.contains("fault worker=0 kind=watchdog"),
+            "watchdog never condemned the wedged worker:\n{log}");
+    assert!(log.contains("recover worker=0"),
+            "condemned worker never restarted:\n{log}");
+    assert!(log.contains("failover id="),
+            "stranded requests were never failed over:\n{log}");
+    assert_eq!(c.n_active() + c.queue_len(), 0,
+               "cluster never drained after the wedge");
+    let (_, failovers, failed) = c.fault_stats();
+    assert!(failovers >= 1);
+    assert_eq!(failed, 0, "wedge lost {failed} client streams");
+}
+
+/// Degradation ladder: sustained pool pressure escalates healthy →
+/// no-spec (β forced to plain decode on every worker) → admit-pause
+/// (new submissions bounce busy), and sustained cool rounds walk it back
+/// down — every transition logged as a `degrade` event.
+#[test]
+fn degradation_ladder_escalates_and_recovers() {
+    use ctcdraft::supervisor::LadderConfig;
+    use ctcdraft::workload::FaultKind;
+    let mut c = MockCluster::new(1, 4, 0, 256, 5).with_ladder(LadderConfig {
+        hot_util_pm: 400,
+        hot_misses: 0, // pool pressure only: misses never count as hot
+        escalate_after: 2,
+        recover_after: 3,
+    });
+    // a spike holding most of the pool makes every round hot
+    assert!(c.inject_fault(&FaultKind::PoolSpike {
+        blocks: c.pool().total_blocks() - 2,
+        hold_steps: 10,
+    }));
+    for _ in 0..6 {
+        c.step_ex().expect("hot step");
+    }
+    let log = c.render_events();
+    assert!(log.contains("degrade worker=0 rung=no-spec"),
+            "ladder never left healthy:\n{log}");
+    assert!(log.contains("rung=admit-pause"),
+            "sustained pressure never paused admission:\n{log}");
+    // admission is bounced while paused
+    match c.submit_tagged("paused probe", 4, Priority::Interactive, None)
+        .expect("submit")
+    {
+        Submission::Busy { .. } => {}
+        other => panic!("admit-pause accepted work: {other:?}"),
+    }
+    // spike expiry cools the pool; the ladder must walk back to healthy
+    for _ in 0..20 {
+        c.step_ex().expect("cool step");
+    }
+    let log = c.render_events();
+    assert!(log.contains("rung=healthy"),
+            "ladder never recovered after the pressure lifted:\n{log}");
+    match c.submit_tagged("recovered probe", 4, Priority::Interactive, None)
+        .expect("submit")
+    {
+        Submission::Busy { .. } => panic!("recovered ladder still bouncing"),
+        _ => {}
+    }
+}
+
 /// Deadline-aware admission hints: `Queued` carries a future estimated
 /// start step that deepens with queue position, `Busy` carries a retry
 /// hint — both deterministic.

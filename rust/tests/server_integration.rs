@@ -9,7 +9,8 @@
 use std::io::{BufRead, BufReader, Write};
 use std::time::{Duration, Instant};
 
-use ctcdraft::config::{EngineConfig, FrontendConfig, Method, MockServeConfig};
+use ctcdraft::config::{EngineConfig, FrontendConfig, Method, MockServeConfig,
+                       SupervisorConfig};
 use ctcdraft::sched::Priority;
 use ctcdraft::server::{Client, GenerateOutcome, Server, ServerConfig};
 use ctcdraft::util::json::{parse, Json};
@@ -27,6 +28,7 @@ fn start_server_with(workers: usize, engine: EngineConfig) -> Option<Server> {
             engine,
             frontend: FrontendConfig::default(),
             mock: None,
+            supervisor: SupervisorConfig::default(),
         })
         .expect("server start"),
     )
@@ -43,6 +45,7 @@ fn start_mock_server(workers: usize, frontend: FrontendConfig,
         engine: EngineConfig::default(),
         frontend,
         mock: Some(mock),
+        supervisor: SupervisorConfig::default(),
     })
     .expect("mock server start")
 }
@@ -825,6 +828,93 @@ fn acceptor_bounds_threads_and_rejects_past_max_conns() {
              {threads_during} for {flood} conns");
     drop(socks);
     server.stop();
+}
+
+/// Supervision tentpole, end to end over real sockets: a seeded fault
+/// plan panics the single mock worker mid-stream. The supervisor must
+/// condemn it, sweep its lease + prefix index back to the shared pool,
+/// and restart it; the router must resubmit the orphaned request after a
+/// `retrying` frame, replaying from the prompt — so the client sees
+/// `retrying` followed by a clean, complete stream (tok frames after the
+/// last `retrying` concatenate exactly to the `done` text) and never a
+/// hang, an error, or a silent truncation. After stop, the pool ledger is
+/// fully free: the crash leaked nothing.
+#[test]
+fn worker_panic_triggers_failover_and_clean_stream() {
+    let _serial = concurrency_lock();
+    let server = start_mock_server(
+        1,
+        FrontendConfig::default(),
+        MockServeConfig {
+            slots: 4,
+            queue_cap: 0,
+            step_delay_us: 500,
+            // plan's guaranteed panic fires at heartbeat seq ~16-24; idle
+            // turns are 20ms, so a promptly-submitted long stream is
+            // always in flight when it hits
+            fault_seed: Some(40),
+            ..MockServeConfig::default()
+        },
+    );
+    let addr = server.local_addr.to_string();
+    let pool = server.pool();
+    let total = pool.total_blocks();
+
+    let mut s = std::net::TcpStream::connect(&addr).expect("connect");
+    let mut r = BufReader::new(s.try_clone().unwrap());
+    writeln!(
+        s,
+        "{{\"op\":\"generate\",\"id\":31,\"prompt\":\"failover victim\",\
+         \"max_new\":600,\"stream\":true}}"
+    )
+    .unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+
+    let mut retrying = 0usize;
+    let mut streamed = String::new(); // resets on every retrying frame
+    let mut streamed_n = 0usize;
+    let done;
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "stream hung/closed without a terminal");
+        let v = parse(line.trim()).expect("frame json");
+        assert_eq!(v.get("id").as_i64(), Some(31), "foreign frame: {line}");
+        match v.get("type").as_str() {
+            Some("queued") => {}
+            Some("retrying") => {
+                retrying += 1;
+                assert!(v.get("attempt").as_usize().unwrap_or(0) >= 1);
+                // failover replays from the prompt: the stream resets
+                streamed.clear();
+                streamed_n = 0;
+            }
+            Some("tok") => {
+                streamed.push_str(v.get("text").as_str().unwrap_or(""));
+                streamed_n += v.get("n").as_usize().unwrap_or(0);
+            }
+            Some("done") => {
+                done = v;
+                break;
+            }
+            other => panic!("unexpected frame {other:?}: {line}"),
+        }
+    }
+    assert!(retrying >= 1,
+            "worker panic never surfaced as a retrying frame");
+    assert_eq!(streamed, done.get("text").as_str().unwrap_or("?"),
+               "post-failover tok frames do not rebuild the done text");
+    assert_eq!(Some(streamed_n), done.get("tokens").as_usize(),
+               "post-failover token counts disagree with done");
+
+    // the supervisor restarted the worker: it serves fresh work cleanly
+    let mut c = Client::connect(&addr).expect("connect");
+    let reply = c.generate(32, "post recovery prompt", 8)
+        .expect("post-recovery generate");
+    assert_eq!(reply.tokens, 8);
+    server.stop();
+    assert_eq!(pool.global_free_blocks(), total,
+               "worker crash + failover leaked pool blocks");
 }
 
 /// Mock-mode sanity: the deterministic mock engine speaks the full
