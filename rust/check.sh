@@ -277,3 +277,101 @@ if [ -z "$flaky_retries" ] || [ "$flaky_retries" -eq 0 ]; then
   exit 1
 fi
 echo "flaky shed-replay determinism: OK ($flaky_retries reconnect-and-retries, byte-identical)"
+
+# Multi-tenant scenario gates: every library scenario must double-replay
+# byte-identically on BOTH the single-worker mock and the two-worker
+# cluster — tenant interning, token-bucket refill, WFQ ordering, and the
+# per-tenant degradation ladders all run on the virtual-step clock, so any
+# hidden nondeterminism in the tenant layer diffs here.
+for sc in diurnal agentic longctx noisy_neighbor cancel_storm; do
+  for workers in 1 2; do
+    sa="$(./target/release/ctcdraft sim --seed 7 --workers "$workers" --scenario "$sc")"
+    sb="$(./target/release/ctcdraft sim --seed 7 --workers "$workers" --scenario "$sc")"
+    if [ "$sa" != "$sb" ]; then
+      echo "FAIL: scenario $sc (workers $workers) replay is nondeterministic" >&2
+      diff <(printf '%s\n' "$sa") <(printf '%s\n' "$sb") >&2 || true
+      exit 1
+    fi
+  done
+done
+echo "scenario replay determinism (5 scenarios, 1 + 2 workers): OK"
+
+# Isolation gate: in noisy_neighbor the flooding batch tenant must be
+# throttled by its OWN token bucket (busy > 0) and degraded by its OWN
+# ladder (tenant-scoped, before the cluster ladder) while the interactive
+# victim keeps admitting (never paused) and a bounded deadline-miss rate.
+# This is the co-tenant blast-radius contract the PR exists for.
+./target/release/ctcdraft sim --seed 7 --scenario noisy_neighbor \
+  --summary >nn.log 2>nn.sum
+if ! grep -q "tenant-degrade name=noisy" nn.log; then
+  echo "FAIL: noisy_neighbor never tenant-degraded the flooding tenant" >&2
+  exit 1
+fi
+# a transient no-spec tick on the victim during an all-victim pool pileup
+# is tolerated; cutting off victim ADMISSION is not
+if grep "tenant-degrade name=tenant-a" nn.log | grep -q "rung=admit-pause"; then
+  echo "FAIL: noisy_neighbor admit-paused the VICTIM tenant — isolation leaked" >&2
+  grep "tenant-degrade" nn.log >&2
+  exit 1
+fi
+victim_line="$(grep '^tenant=tenant-a ' nn.sum || true)"
+noisy_line="$(grep '^tenant=noisy ' nn.sum || true)"
+if [ -z "$victim_line" ] || [ -z "$noisy_line" ]; then
+  echo "FAIL: noisy_neighbor summary is missing per-tenant rollup lines" >&2
+  cat nn.sum >&2
+  exit 1
+fi
+noisy_busy="$(field "$noisy_line" busy)"
+if [ -z "$noisy_busy" ] || [ "$noisy_busy" -eq 0 ]; then
+  echo "FAIL: flooding tenant was never bounced (busy=0) — bucket is vacuous" >&2
+  echo "$noisy_line" >&2
+  exit 1
+fi
+victim_finished="$(field "$victim_line" finished)"
+if [ -z "$victim_finished" ] || [ "$victim_finished" -eq 0 ]; then
+  echo "FAIL: victim tenant finished nothing under the flood" >&2
+  echo "$victim_line" >&2
+  exit 1
+fi
+victim_miss="$(field "$victim_line" miss_rate)"
+if ! awk -v m="$victim_miss" 'BEGIN { exit !(m <= 0.25) }'; then
+  echo "FAIL: victim miss rate $victim_miss > 0.25 under the noisy flood" >&2
+  echo "$victim_line" >&2
+  exit 1
+fi
+rm -f nn.log nn.sum
+echo "noisy-neighbor isolation gate: OK (victim miss_rate=$victim_miss, noisy bounced $noisy_busy times, degradation scoped to offender)"
+
+# Scenario bench smoke: scenbench replays the whole library and leaves a
+# well-formed BENCH_scenarios.json behind (the cross-PR multi-tenant QoS
+# artifact: per-scenario throughput/miss/TTFT plus per-tenant rollups).
+rm -f BENCH_scenarios.json
+./target/release/ctcdraft scenbench --smoke >/dev/null 2>&1
+test -s BENCH_scenarios.json || {
+  echo "FAIL: BENCH_scenarios.json missing or empty" >&2; exit 1;
+}
+python3 - <<'EOF2'
+import json
+with open("BENCH_scenarios.json") as f:
+    doc = json.load(f)
+assert doc.get("bench") == "scenarios", doc.get("bench")
+results = doc["results"]
+names = [r["name"] for r in results]
+need = ["diurnal", "agentic", "longctx", "noisy_neighbor", "cancel_storm"]
+assert names == need, f"scenario set drifted: {names}"
+for r in results:
+    for key in ("steps", "finished", "deadline_misses", "miss_rate",
+                "ttft_mean_steps", "throughput_tokens_per_step"):
+        assert key in r, f"{r['name']}: missing {key}"
+    assert r["finished"] > 0, f"{r['name']}: nothing finished"
+    assert 0.0 <= r["miss_rate"] <= 1.0, (r["name"], r["miss_rate"])
+    tenants = r["tenants"]
+    assert tenants, f"{r['name']}: no per-tenant rollups"
+    for tname, t in tenants.items():
+        assert t["submitted"] > 0, f"{r['name']}/{tname}: submitted=0"
+        assert t["finished"] + t["busy"] <= t["submitted"], (
+            f"{r['name']}/{tname}: finished+busy exceeds submitted")
+print("BENCH_scenarios.json: OK (%d scenarios, per-tenant rollups present)"
+      % len(results))
+EOF2
+echo "scenario bench smoke: OK"

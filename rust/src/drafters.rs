@@ -258,24 +258,39 @@ fn active_count(src: &dyn DraftSource) -> usize {
     (0..src.batch()).filter(|&i| src.ctx(i).is_some()).count()
 }
 
-/// Pack hidden windows into `[gb, W, D]` + win_len `[gb]` tensors. The
-/// tensor build is the XLA boundary — the one place the draft stage still
-/// allocates (literal buffers are owned by the runtime call).
-fn pack_windows(rt: &Runtime, model: &str, src: &dyn DraftSource,
-                gb: usize) -> Result<(Tensor, Tensor)> {
+/// Pack hidden windows into `[gb, W, D]` + win_len `[gb]` argument
+/// literals, staged through the runtime's pinned-literal pool buffers —
+/// the draft stage no longer allocates a fresh window `Vec` per round;
+/// the only per-round copy left is the one inside literal construction,
+/// which the PJRT API owns.
+fn pack_windows_into(rt: &Runtime, model: &str, src: &dyn DraftSource,
+                     gb: usize, args: &mut Vec<xla::Literal>,
+                     stage_f: &mut Vec<f32>, stage_i: &mut Vec<i32>)
+                     -> Result<()> {
+    use crate::runtime::tensor::{literal_f32, literal_i32};
     let c = &rt.manifest.constants;
     let d = rt.manifest.model(model)?.config.d_model;
     let w = c.hidden_win;
-    let mut win = vec![0f32; gb * w * d];
-    let mut win_len = vec![1i32; gb]; // padded slots: pretend 1 valid row
+    let (fl, il) = (gb * w * d, gb);
+    if stage_f.len() < fl {
+        stage_f.resize(fl, 0.0);
+    }
+    if stage_i.len() < il {
+        stage_i.resize(il, 0);
+    }
+    stage_f[..fl].fill(0.0);
+    stage_i[..il].fill(1); // padded slots: pretend 1 valid row
     for i in 0..src.batch().min(gb) {
         if let Some(ctx) = src.ctx(i) {
             debug_assert_eq!(ctx.hidden_window.len(), w * d);
-            win[i * w * d..(i + 1) * w * d].copy_from_slice(ctx.hidden_window);
-            win_len[i] = ctx.win_len.max(1) as i32;
+            stage_f[i * w * d..(i + 1) * w * d]
+                .copy_from_slice(ctx.hidden_window);
+            stage_i[i] = ctx.win_len.max(1) as i32;
         }
     }
-    Ok((Tensor::from_f32(&[gb, w, d], win), Tensor::from_i32(&[gb], win_len)))
+    args.push(literal_f32(&[gb, w, d], &stage_f[..fl])?);
+    args.push(literal_i32(&[gb], &stage_i[..il])?);
+    Ok(())
 }
 
 fn pack_hidden(rt: &Runtime, model: &str, src: &dyn DraftSource,
@@ -430,10 +445,13 @@ impl Drafter for CtcDrafter {
             return Ok(());
         }
         let gb = rt.manifest.pick_batch(src.batch());
-        let (win, win_len) = pack_windows(rt, model, src, gb)?;
 
         let t0 = std::time::Instant::now();
-        let graph_out = rt.run_draft(model, "ctc", gb, &[win, win_len])?;
+        // pooled call: window packing stages into the runtime's pinned
+        // buffers, so graph_secs now covers pack + literal build + execute
+        let graph_out = rt.run_draft_pooled(model, "ctc", gb, |args, sf, si| {
+            pack_windows_into(rt, model, src, gb, args, sf, si)
+        })?;
         timing.graph_secs += t0.elapsed().as_secs_f64();
 
         let slot_logp = graph_out[0].f32_data()?;

@@ -50,10 +50,13 @@
 //! last round. In steady state the host *compute* stages of a decode round
 //! — draft → CTC transform → tree build → token/pos/bias assembly →
 //! acceptance → KV commit/gather — perform zero heap allocations (asserted
-//! by `rust/tests/hotpath_alloc.rs` over exactly those stages). Documented
-//! exceptions that still allocate: the XLA literal boundary
-//! (`build_step_lits`, drafter tensor packing — buffers are owned by the
-//! graph call) and the per-round *outputs* handed to callers (stream
+//! by `rust/tests/hotpath_alloc.rs` over exactly those stages). The XLA
+//! boundary is pooled too: step/draft graph calls go through the runtime's
+//! pinned-literal pool (`run_step_pooled` / `run_draft_pooled` —
+//! `build_step_lits_into` and the drafter's window packing stage into
+//! capacity-retaining scratch), leaving the PJRT-owned host→literal copy
+//! as the only per-round cost there. Documented exceptions that still
+//! allocate: the per-round *outputs* handed to callers (stream
 //! `TokenDelta`s, `gen_ids`/stats growth, the `StepReport` itself).
 //! Tree width/depth per round comes from `adapt::BetaController`
 //! (`--beta-policy fixed|adaptive`): large batches shrink trees (verify
@@ -71,8 +74,9 @@ use crate::drafters::{make_drafter, DraftCtx, DraftSource, DraftTiming,
 use crate::kvcache::{PoolLease, PrefixIndex, SeqCache, NO_NODE};
 use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
                      StageBreakdown};
-use crate::sched::{AdmitRate, Priority, ReqMeta};
-use crate::supervisor::lock_unpoisoned;
+use crate::sched::{AdmitRate, FairQueue, Priority, ReqMeta, TenantSpec,
+                   TenantTable, DEFAULT_TENANT};
+use crate::supervisor::{lock_unpoisoned, DegradeLadder, LadderConfig, Rung};
 
 use crate::runtime::Runtime;
 use crate::tokenizer::Tokenizer;
@@ -191,11 +195,13 @@ struct QueuedReq {
     rng: Option<Rng>,
     /// step this entry (re-)entered the queue — basis of the wait metric
     enq_step: u64,
+    /// interned tenant id (0 = default, never throttled)
+    tenant: u32,
 }
 
 impl QueuedReq {
     fn fresh(id: u64, prompt_ids: Vec<i32>, max_new: usize, class: Priority,
-             deadline_step: u64, step: u64) -> Self {
+             deadline_step: u64, step: u64, tenant: u32) -> Self {
         QueuedReq {
             id,
             prompt_ids,
@@ -207,6 +213,7 @@ impl QueuedReq {
             stats: GenStats::default(),
             rng: None,
             enq_step: step,
+            tenant,
         }
     }
 
@@ -216,6 +223,7 @@ impl QueuedReq {
             class: self.class,
             deadline_step: self.deadline_step,
             enq_step: self.submit_step,
+            tenant: self.tenant,
         }
     }
 }
@@ -251,6 +259,8 @@ struct Seq {
     t_admit: Instant,
     done: bool,
     rng: Rng,
+    /// interned tenant id (0 = default)
+    tenant: u32,
 }
 
 impl Seq {
@@ -260,6 +270,7 @@ impl Seq {
             class: self.class,
             deadline_step: self.deadline_step,
             enq_step: self.submit_step,
+            tenant: self.tenant,
         }
     }
 }
@@ -396,6 +407,19 @@ pub struct Engine {
     scratch: HotScratch,
     /// observed admission rate — deadline-aware `queued`/`busy` estimates
     admit_rate: AdmitRate,
+    /// tenant specs + token-bucket ledger (slot 0 = default, unlimited);
+    /// requests without a tenant tag intern to the default and the whole
+    /// multi-tenant layer is byte-inert until `set_tenants` installs specs
+    tenants: TenantTable,
+    /// weighted-fair virtual-time credit per (class, tenant) — degenerates
+    /// to the plain SLO admission order while only one tenant exists
+    fair: FairQueue,
+    /// per-tenant degradation ladders (configured tenants only): an over-
+    /// budget tenant walks no-spec → admit-pause ALONE, before the server's
+    /// cluster-wide ladder reacts
+    tenant_ladders: std::collections::BTreeMap<u32, DegradeLadder>,
+    /// tenants that missed a deadline THIS step (ladder observe scratch)
+    miss_tenants: Vec<u32>,
     /// β-aware batching controller (ROADMAP: per-step tree width adapted to
     /// batch size and the acceptance EWMA)
     beta: BetaController,
@@ -504,6 +528,10 @@ impl Engine {
                                      c.ctc_target_u.max(1), c.tree_n,
                                      c.vocab_size),
             admit_rate: AdmitRate::default(),
+            tenants: TenantTable::default(),
+            fair: FairQueue::default(),
+            tenant_ladders: std::collections::BTreeMap::new(),
+            miss_tenants: Vec::new(),
             beta: BetaController::new(cfg.beta_policy, cfg.max_paths,
                                       c.tree_n, c.ctc_target_u),
             last_plan: None,
@@ -645,15 +673,15 @@ impl Engine {
     }
 
     /// Queue indices sorted by the SLO admission policy (class, slack,
-    /// submission step, id) at the current virtual step.
+    /// submission step, id) at the current virtual step, interleaved
+    /// across tenants by weighted-fair virtual time WITHIN each effective
+    /// class. With a single tenant this is exactly the plain SLO order.
     fn policy_order(&self) -> Vec<usize> {
         let now = self.step_no;
-        let mut order: Vec<usize> = (0..self.wait_queue.len()).collect();
-        order.sort_by(|&a, &b| {
-            self.cfg.slo.admit_cmp(
-                &self.wait_queue[a].meta(), &self.wait_queue[b].meta(), now)
-        });
-        order
+        let metas: Vec<ReqMeta> =
+            self.wait_queue.iter().map(|r| r.meta()).collect();
+        self.fair
+            .order(&self.cfg.slo, &metas, now, |t| self.tenants.weight(t))
     }
 
     /// Ids of sequences currently occupying batch slots.
@@ -680,6 +708,42 @@ impl Engine {
     /// degenerates to one next-token check per sequence.
     pub fn set_force_plain(&mut self, on: bool) {
         self.beta.force_plain(on);
+    }
+
+    /// Install tenant specs (WFQ weights, token buckets, KV-pool share
+    /// caps) and arm a private degradation ladder per configured tenant.
+    /// Without this call every request maps to the unlimited default
+    /// tenant and scheduling is byte-identical to the single-tenant engine.
+    pub fn set_tenants(&mut self, specs: &[TenantSpec]) {
+        for spec in specs {
+            let t = self.tenants.configure(spec.clone());
+            self.tenant_ladders
+                .insert(t, DegradeLadder::new(LadderConfig::default()));
+        }
+    }
+
+    /// Tenant table (stats surface: names, weights, bucket ledger).
+    pub fn tenant_table(&self) -> &TenantTable {
+        &self.tenants
+    }
+
+    /// Token-bucket ledger `(offered, granted, denied)` for a tenant name;
+    /// zeros for unknown tenants.
+    pub fn tenant_ledger(&self, name: &str) -> (u64, u64, u64) {
+        match self.tenants.id(name) {
+            Some(t) => self.tenants.ledger(t),
+            None => (0, 0, 0),
+        }
+    }
+
+    /// Current degradation rung of a tenant's PRIVATE ladder (`Healthy`
+    /// for unknown or un-laddered tenants).
+    pub fn tenant_rung(&self, name: &str) -> Rung {
+        self.tenants
+            .id(name)
+            .and_then(|t| self.tenant_ladders.get(&t))
+            .map(|l| l.rung())
+            .unwrap_or(Rung::Healthy)
     }
 
     /// Scheduler event log (admissions/evictions/completions, step-stamped).
@@ -736,6 +800,36 @@ impl Engine {
     pub fn submit_tagged(&mut self, prompt: &str, max_new: usize,
                          class: Priority, deadline_steps: Option<u64>)
                          -> Result<Submission> {
+        self.submit_tenant(prompt, max_new, class, deadline_steps, None)
+    }
+
+    /// Tenant-tagged admission: per-tenant token-bucket admission (and the
+    /// tenant's private degradation ladder) gate IN FRONT of the SLO queue
+    /// admission. `None`/unknown tenant names intern to the default
+    /// (unlimited) tenant, so untagged traffic is byte-identical to
+    /// `submit_tagged` before multi-tenancy existed.
+    pub fn submit_tenant(&mut self, prompt: &str, max_new: usize,
+                         class: Priority, deadline_steps: Option<u64>,
+                         tenant: Option<&str>) -> Result<Submission> {
+        let t = self.tenants.intern(tenant);
+        // per-tenant degradation at admit-pause or worse: bounce THIS
+        // tenant's new work while co-tenants keep submitting
+        if self
+            .tenant_ladders
+            .get(&t)
+            .map(|l| l.rung() >= Rung::AdmitPause)
+            .unwrap_or(false)
+        {
+            self.metrics.inc("tenant.rejected_paused", 1);
+            return Ok(Submission::Busy { retry_after_steps: 8 });
+        }
+        // token-bucket admission on the virtual step clock (deterministic
+        // across replays); the ledger conserves offered = granted + denied
+        if !self.tenants.admit(t, self.step_no) {
+            self.metrics.inc("tenant.rejected_bucket", 1);
+            let hint = self.tenants.retry_hint(t, self.step_no);
+            return Ok(Submission::Busy { retry_after_steps: hint });
+        }
         if self.cfg.queue_cap > 0 && self.wait_queue.len() >= self.cfg.queue_cap {
             self.metrics.inc("sched.rejected_busy", 1);
             return Ok(Submission::Busy {
@@ -765,7 +859,7 @@ impl Engine {
         self.metrics
             .inc(&format!("sched.submitted.{}", class.name()), 1);
         let req = QueuedReq::fresh(id, ids, max_new, class, deadline_step,
-                                   self.step_no);
+                                   self.step_no, t);
         // gate on the budget-trimmed prefill length (what admit_req will
         // actually allocate), matching fill_slots
         if self.wait_queue.is_empty()
@@ -847,7 +941,8 @@ impl Engine {
         self.metrics
             .inc(&format!("sched.submitted.{}", class.name()), 1);
         match self.admit_req(QueuedReq::fresh(id, ids, max_new, class,
-                                              deadline_step, self.step_no))? {
+                                              deadline_step, self.step_no,
+                                              DEFAULT_TENANT))? {
             Some(sid) => Ok(sid),
             None => {
                 // this path does not gate on can_fit, so with a private
@@ -939,6 +1034,14 @@ impl Engine {
                 fork: hit.fork_positions,
             });
         }
+        // weighted-fair accounting: advance the admitted tenant's virtual-
+        // time credit by quantum/weight within its effective class, so a
+        // flooding tenant's next candidate sorts behind lighter co-tenants
+        self.fair.charge(
+            self.cfg.slo.effective_class(&req.meta(), self.step_no),
+            req.tenant,
+            self.tenants.weight(req.tenant),
+        );
         let rng = match req.rng {
             Some(r) => r,
             None => self.rng.fork(id),
@@ -962,6 +1065,7 @@ impl Engine {
             t_admit: Instant::now(),
             done: false,
             rng,
+            tenant: req.tenant,
         };
         self.slots[slot] = Some(seq);
         // new occupant: its cache shares nothing with what the batch
@@ -1006,9 +1110,11 @@ impl Engine {
                     .max(1);
                 if self.pool.blocks_for(prefill_len) > self.pool.total_blocks() {
                     let req = self.wait_queue.remove(i);
+                    let tn = req.tenant;
                     let (out, missed) = self.finish_queued(req);
                     if missed {
                         rep.missed.push(out.id);
+                        self.miss_tenants.push(tn);
                     }
                     rep.forced.push(out);
                     continue 'outer;
@@ -1176,6 +1282,7 @@ impl Engine {
             // re-admitted sequence resume sampling exactly where it stopped
             rng: Some(seq.rng.clone()),
             enq_step: self.step_no,
+            tenant: seq.tenant,
         };
         self.wait_queue.push(req);
         self.scratch.synced[slot] = 0;
@@ -1269,12 +1376,14 @@ impl Engine {
                                           &mut self.scratch.prefill_v, 0, 1,
                                           from);
             self.scratch.prefill_synced = (slot, cache_len);
-            let args = build_step_lits(
-                &self.scratch.prefill_k, &self.scratch.prefill_v, self.layers,
-                1, self.lmax, self.heads, self.head_dim, n,
-                &self.scratch.tokens, &self.scratch.pos, &self.scratch.bias)?;
             let t0 = Instant::now();
-            let out = self.rt.run_step_lits(&self.cfg.model, 1, n, &args)?;
+            let out = self.rt.run_step_pooled(&self.cfg.model, 1, n, |args| {
+                build_step_lits_into(
+                    args, &self.scratch.prefill_k, &self.scratch.prefill_v,
+                    self.layers, 1, self.lmax, self.heads, self.head_dim, n,
+                    &self.scratch.tokens, &self.scratch.pos,
+                    &self.scratch.bias)
+            })?;
             seq.stats.breakdown.base_model_secs += t0.elapsed().as_secs_f64();
             seq.stats.device_breakdown.base_model_secs +=
                 self.device_step_secs(1, clen, cache_len);
@@ -1414,6 +1523,7 @@ impl Engine {
     pub fn step_ex(&mut self) -> Result<StepReport> {
         let t_round = Instant::now();
         self.step_no += 1;
+        self.miss_tenants.clear();
         let mut report = StepReport { step: self.step_no, ..Default::default() };
         let fill = self.fill_slots()?;
         report.admitted = fill.admitted;
@@ -1485,6 +1595,7 @@ impl Engine {
         if n_active == 0 {
             report.queue_depth = self.wait_queue.len();
             report.pool_utilization = self.pool.utilization();
+            self.observe_tenant_ladders();
             self.record_step_gauges(&report);
             return Ok(report);
         }
@@ -1500,6 +1611,27 @@ impl Engine {
             let src = SlotSource { slots: &self.slots, gb };
             self.drafter.draft(&self.rt, &self.cfg.model, &src, plan,
                                &mut timing, &mut self.scratch.paths[..gb])?;
+        }
+        // per-tenant no-spec (degradation rung `NoSpec` or worse): drop a
+        // degraded tenant's drafted candidates so its tree degenerates to
+        // the lone base token — plain autoregressive decode for THAT tenant
+        // — while co-tenants keep full speculation. Lossless: acceptance
+        // over a single-node tree emits exactly the verified base token.
+        if !self.tenant_ladders.is_empty() {
+            for b in 0..gb {
+                let Some(seq) = self.slots.get(b).and_then(|s| s.as_ref())
+                else {
+                    continue;
+                };
+                if self
+                    .tenant_ladders
+                    .get(&seq.tenant)
+                    .map(|l| l.rung() >= Rung::NoSpec)
+                    .unwrap_or(false)
+                {
+                    self.scratch.paths[b].clear();
+                }
+            }
         }
 
         // --- 2. candidates -> token trees + verify-graph inputs, all into
@@ -1568,12 +1700,13 @@ impl Engine {
         // --- 3. verify (one base-model pass over all trees); the KV gather
         // is incremental — only rows appended since last round move
         self.sync_batch_cache(gb);
-        let args = build_step_lits(
-            &self.scratch.batch_k, &self.scratch.batch_v, self.layers, gb,
-            self.lmax, self.heads, self.head_dim, n, &self.scratch.tokens,
-            &self.scratch.pos, &self.scratch.bias)?;
         let t_v = Instant::now();
-        let out = self.rt.run_step_lits(&self.cfg.model, gb, n, &args)?;
+        let out = self.rt.run_step_pooled(&self.cfg.model, gb, n, |args| {
+            build_step_lits_into(
+                args, &self.scratch.batch_k, &self.scratch.batch_v,
+                self.layers, gb, self.lmax, self.heads, self.head_dim, n,
+                &self.scratch.tokens, &self.scratch.pos, &self.scratch.bias)
+        })?;
         let verify_secs = t_v.elapsed().as_secs_f64();
 
         let logits = out[0].f32_data()?;
@@ -1704,6 +1837,7 @@ impl Engine {
                 seq.stats.wall_secs += seq.t_admit.elapsed().as_secs_f64();
                 if self.note_deadline(seq.id, seq.class, seq.deadline_step) {
                     report.deadline_missed.push(seq.id);
+                    self.miss_tenants.push(seq.tenant);
                 }
                 self.events.push(SchedEvent::Completed {
                     step: self.step_no,
@@ -1765,8 +1899,55 @@ impl Engine {
 
         report.queue_depth = self.wait_queue.len();
         report.pool_utilization = self.pool.utilization();
+        self.observe_tenant_ladders();
         self.record_step_gauges(&report);
         Ok(report)
+    }
+
+    /// Per-tenant degradation: each configured tenant's KV pressure against
+    /// its OWN pool-share cap, plus its deadline misses this step, drive its
+    /// private `DegradeLadder`. An over-budget tenant therefore walks
+    /// no-spec → admit-pause alone — the blast radius of a hot tenant stays
+    /// inside that tenant — long before any cluster-wide ladder reacts to
+    /// aggregate pool utilization. Transitions are step-stamped `Tenant`
+    /// events, so degradation replays byte-for-byte.
+    fn observe_tenant_ladders(&mut self) {
+        if self.tenant_ladders.is_empty() {
+            return;
+        }
+        let total = self.pool.total_blocks();
+        let mut held: std::collections::BTreeMap<u32, usize> =
+            std::collections::BTreeMap::new();
+        for (b, s) in self.slots.iter().enumerate() {
+            if let Some(seq) = s.as_ref() {
+                *held.entry(seq.tenant).or_insert(0) +=
+                    self.pool.allocated(b);
+            }
+        }
+        let ids: Vec<u32> = self.tenant_ladders.keys().copied().collect();
+        for t in ids {
+            let share = self.tenants.spec(t).pool_share_pm;
+            let cap = (total * share as usize / 1000).max(1);
+            let util_pm =
+                (held.get(&t).copied().unwrap_or(0) * 1000 / cap) as u64;
+            let misses =
+                self.miss_tenants.iter().filter(|&&m| m == t).count() as u64;
+            let moved = self
+                .tenant_ladders
+                .get_mut(&t)
+                .map(|l| l.observe(util_pm, misses))
+                .unwrap_or(None);
+            if let Some((_, to)) = moved {
+                let tenant = self.tenants.name(t).to_string();
+                self.metrics.inc("tenant.degrade_transitions", 1);
+                self.events.push(SchedEvent::Tenant {
+                    step: self.step_no,
+                    worker: 0,
+                    tenant,
+                    rung: to.name(),
+                });
+            }
+        }
     }
 
     fn record_step_gauges(&mut self, report: &StepReport) {
@@ -1823,6 +2004,30 @@ impl Engine {
         self.metrics
             .set_gauge("sched.admit_gap_steps",
                        self.admit_rate.steps_per_admission());
+        // per-tenant visibility — gated on a non-default tenant existing,
+        // so single-tenant runs keep a byte-identical metrics surface
+        if self.tenants.has_non_default() {
+            for t in self.tenants.ids() {
+                let name = self.tenants.name(t).to_string();
+                let (offered, granted, denied) = self.tenants.ledger(t);
+                self.metrics
+                    .set_gauge(&format!("tenant.{name}.offered"),
+                               offered as f64);
+                self.metrics
+                    .set_gauge(&format!("tenant.{name}.granted"),
+                               granted as f64);
+                self.metrics
+                    .set_gauge(&format!("tenant.{name}.denied"),
+                               denied as f64);
+                let rung = self
+                    .tenant_ladders
+                    .get(&t)
+                    .map(|l| l.rung() as u8 as f64)
+                    .unwrap_or(0.0);
+                self.metrics
+                    .set_gauge(&format!("tenant.{name}.rung"), rung);
+            }
+        }
     }
 
     fn finish(&self, seq: Seq) -> GenOutput {
@@ -1863,22 +2068,23 @@ impl Engine {
     }
 }
 
-/// Build the 5 step-graph argument literals from borrowed buffers.
+/// Build the 5 step-graph argument literals from borrowed buffers into the
+/// runtime's pinned-literal pool vec (cleared by `run_step_pooled`, its
+/// capacity survives rounds — no per-round `Vec` at the boundary).
 #[allow(clippy::too_many_arguments)]
-fn build_step_lits(sk: &[f32], sv: &[f32], layers: usize, gb: usize,
-                   lmax: usize, heads: usize, head_dim: usize, n: usize,
-                   tokens: &[i32], pos: &[i32], bias: &[f32])
-                   -> Result<Vec<xla::Literal>> {
+fn build_step_lits_into(args: &mut Vec<xla::Literal>, sk: &[f32], sv: &[f32],
+                        layers: usize, gb: usize, lmax: usize, heads: usize,
+                        head_dim: usize, n: usize, tokens: &[i32],
+                        pos: &[i32], bias: &[f32]) -> Result<()> {
     use crate::runtime::tensor::{literal_f32, literal_i32};
     let cache_elems = layers * gb * lmax * heads * head_dim;
     let cache_shape = [layers, gb, lmax, heads, head_dim];
-    Ok(vec![
-        literal_f32(&cache_shape, &sk[..cache_elems])?,
-        literal_f32(&cache_shape, &sv[..cache_elems])?,
-        literal_i32(&[gb, n], tokens)?,
-        literal_i32(&[gb, n], pos)?,
-        literal_f32(&[gb, n, lmax + n], bias)?,
-    ])
+    args.push(literal_f32(&cache_shape, &sk[..cache_elems])?);
+    args.push(literal_f32(&cache_shape, &sv[..cache_elems])?);
+    args.push(literal_i32(&[gb, n], tokens)?);
+    args.push(literal_i32(&[gb, n], pos)?);
+    args.push(literal_f32(&[gb, n, lmax + n], bias)?);
+    Ok(())
 }
 
 fn self_push_window(seq: &mut Seq, h: &[f32], win: usize, d: usize) {

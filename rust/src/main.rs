@@ -39,6 +39,7 @@ fn main() {
         "client" => cmd_client(rest),
         "warmup" => cmd_warmup(rest),
         "sim" => cmd_sim(rest),
+        "scenbench" => cmd_scenbench(rest),
         "connbench" => cmd_connbench(rest),
         "shedreplay" => cmd_shedreplay(rest),
         "--help" | "-h" | "help" => {
@@ -66,7 +67,10 @@ fn usage() -> String {
      \x20 client --prompt <text>     query a running server\n\
      \x20 warmup                     precompile all graphs for a model\n\
      \x20 sim                        artifact-free scheduler-sim replay\n\
-     \x20                            (prints the canonical event log)\n\
+     \x20                            (prints the canonical event log; \
+     --scenario runs the library)\n\
+     \x20 scenbench                  run every library scenario through the\n\
+     \x20                            sim (BENCH_scenarios.json)\n\
      \x20 connbench                  connection fan-in overhead bench\n\
      \x20                            (mock serving mode; BENCH_conn_fanin)\n\
      \x20 shedreplay                 deterministic write-queue shed replay\n\
@@ -383,6 +387,11 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
              "workload shape: poisson (class-tagged MT-bench arrivals) | \
               multiturn (prefix-chained conversations for the prefix-\
               sharing cache)", Some("poisson"))
+        .opt("scenario",
+             "named scenario from the workload library (overrides --trace \
+              and installs the scenario's tenant specs — token buckets, WFQ \
+              weights, pool-share caps): diurnal | agentic | longctx | \
+              noisy_neighbor | cancel_storm", None)
         .opt("requests", "questions per MT-bench category (poisson)",
              Some("2"))
         .opt("convs", "concurrent conversations (multiturn)", Some("6"))
@@ -416,23 +425,45 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         batch_aging_steps: a.u64("batch-aging", 64),
         prefill_chunk: a.usize("prefill-chunk", 8),
     };
-    let trace = match a.get_or("trace", "poisson") {
-        "poisson" => Trace::poisson_with_classes(
-            workload::mtbench(a.usize("requests", 2), seed),
-            a.usize("max-new", 24),
-            a.f64("mean-gap", 1.5),
-            seed,
-            a.f64("batch-frac", 0.5),
-            policy.interactive_deadline,
-            policy.batch_deadline,
-        ),
-        "multiturn" => Trace::multiturn(
-            a.usize("convs", 6),
-            a.usize("turns", 3),
-            a.usize("max-new", 24),
-            seed,
-        ),
-        other => bail!("unknown --trace {other} (poisson | multiturn)"),
+    // --scenario overrides --trace: the library scenario brings its own
+    // trace, tenant specs (buckets / weights / pool shares) and cancel
+    // probability; the explicit --cancel-prob flag still wins when set
+    let scenario = a
+        .get("scenario")
+        .map(|name| {
+            workload::scenario(name, seed).ok_or_else(|| {
+                anyhow::anyhow!("unknown --scenario {name} ({})",
+                                workload::SCENARIOS.join(" | "))
+            })
+        })
+        .transpose()?;
+    let (trace, tenants, cancel_prob) = match scenario {
+        Some(sc) => {
+            let user_cp = a.f64("cancel-prob", 0.0);
+            let cp = if user_cp > 0.0 { user_cp } else { sc.cancel_prob };
+            (sc.trace, sc.tenants, cp)
+        }
+        None => {
+            let trace = match a.get_or("trace", "poisson") {
+                "poisson" => Trace::poisson_with_classes(
+                    workload::mtbench(a.usize("requests", 2), seed),
+                    a.usize("max-new", 24),
+                    a.f64("mean-gap", 1.5),
+                    seed,
+                    a.f64("batch-frac", 0.5),
+                    policy.interactive_deadline,
+                    policy.batch_deadline,
+                ),
+                "multiturn" => Trace::multiturn(
+                    a.usize("convs", 6),
+                    a.usize("turns", 3),
+                    a.usize("max-new", 24),
+                    seed,
+                ),
+                other => bail!("unknown --trace {other} (poisson | multiturn)"),
+            };
+            (trace, Vec::new(), a.f64("cancel-prob", 0.0))
+        }
     };
     let beta = BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?;
     let share = !a.flag("no-prefix-share");
@@ -448,7 +479,7 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .map(|fs| FaultPlan::seeded(fs, workers.max(1), 32));
     let faults_on = fault_plan.is_some();
     let sim = SchedulerSim::new(SimOptions {
-        cancel_prob: a.f64("cancel-prob", 0.0),
+        cancel_prob,
         seed,
         faults: fault_plan,
         ..Default::default()
@@ -464,6 +495,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .with_policy(policy)
         .with_beta(beta)
         .with_prefix_sharing(share);
+        if !tenants.is_empty() {
+            backend = backend.with_tenants(&tenants);
+        }
         if faults_on {
             backend = backend.with_ladder(LadderConfig::default());
         }
@@ -478,6 +512,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .with_policy(policy)
         .with_beta(beta)
         .with_prefix_sharing(share);
+        if !tenants.is_empty() {
+            backend = backend.with_tenants(&tenants);
+        }
         sim.run(&mut backend, &trace)?
     };
     print!("{}", report.event_log);
@@ -494,7 +531,139 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
             report.prefix_blocks_saved, report.prefix_forks,
             report.faults_injected, report.failovers, report.failed_streams
         );
+        // per-tenant breakdown (only tagged traces populate it); the
+        // noisy_neighbor check.sh gate parses these lines for the
+        // co-tenant miss-rate bound
+        for (name, t) in &report.tenants {
+            eprintln!(
+                "tenant={name} submitted={} finished={} busy={} misses={} \
+                 miss_rate={:.4} ttft_mean={:.2} wait_mean={:.2} tokens={}",
+                t.submitted, t.finished, t.busy, t.deadline_misses,
+                t.miss_rate(), t.ttft_mean(), t.wait_mean(), t.tokens
+            );
+        }
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------- scenbench
+/// Run every scenario in the workload library (`workload::SCENARIOS`)
+/// through the scheduler sim and emit `BENCH_scenarios.json`: per-scenario
+/// deadline-miss rate, mean TTFT, throughput, and the per-tenant
+/// admission/latency breakdown. Fully seeded — same flags produce the
+/// same JSON bytes, so check.sh can smoke-validate the artifact.
+fn cmd_scenbench(argv: &[String]) -> Result<()> {
+    use ctcdraft::util::json::Json;
+    let cli = Cli::new("ctcdraft scenbench",
+                       "run the scenario library through the sim")
+        .opt("seed", "scenario + backend seed", Some("7"))
+        .opt("workers", "mock workers over one shared pool", Some("1"))
+        .opt("slots", "batch slots", Some("4"))
+        .opt("queue-cap", "admit-queue bound (0 = unbounded)", Some("8"))
+        .opt("pool", "shared KV pool positions (cluster-wide)", Some("256"))
+        .flag("smoke", "accepted for CI symmetry (scenarios are CI-sized)");
+    let a = parse_args(cli, argv)?;
+    let seed = a.u64("seed", 7);
+    let workers = a.usize("workers", 1);
+    let policy = SloPolicy {
+        interactive_deadline: 32,
+        batch_deadline: 256,
+        batch_aging_steps: 64,
+        prefill_chunk: 8,
+    };
+    let mut results = Vec::new();
+    for name in workload::SCENARIOS {
+        let sc = workload::scenario(name, seed)
+            .ok_or_else(|| anyhow::anyhow!("scenario {name} missing"))?;
+        let sim = SchedulerSim::new(SimOptions {
+            cancel_prob: sc.cancel_prob,
+            seed,
+            ..Default::default()
+        });
+        let report = if workers > 1 {
+            let mut backend = MockCluster::new(
+                workers,
+                a.usize("slots", 4),
+                a.usize("queue-cap", 8),
+                a.usize("pool", 256),
+                seed,
+            )
+            .with_policy(policy)
+            .with_tenants(&sc.tenants);
+            sim.run(&mut backend, &sc.trace)?
+        } else {
+            let mut backend = MockSched::new(
+                a.usize("slots", 4),
+                a.usize("queue-cap", 8),
+                a.usize("pool", 256),
+                seed,
+            )
+            .with_policy(policy)
+            .with_tenants(&sc.tenants);
+            sim.run(&mut backend, &sc.trace)?
+        };
+        let tokens: usize =
+            report.finished.iter().map(|o| o.token_ids.len()).sum();
+        let finished = report.finished.len();
+        let miss_rate = if finished == 0 {
+            0.0
+        } else {
+            report.deadline_misses as f64 / finished as f64
+        };
+        let (ttft_sum, ttft_n) = report.tenants.values().fold(
+            (0u64, 0usize),
+            |(s, n), t| (s + t.ttft_sum_steps, n + t.ttft_count),
+        );
+        let ttft_mean =
+            if ttft_n == 0 { 0.0 } else { ttft_sum as f64 / ttft_n as f64 };
+        let throughput = if report.steps == 0 {
+            0.0
+        } else {
+            tokens as f64 / report.steps as f64
+        };
+        let tenants: std::collections::BTreeMap<String, Json> = report
+            .tenants
+            .iter()
+            .map(|(tn, t)| {
+                (tn.clone(), Json::obj(vec![
+                    ("submitted", Json::num(t.submitted as f64)),
+                    ("finished", Json::num(t.finished as f64)),
+                    ("busy", Json::num(t.busy as f64)),
+                    ("deadline_misses", Json::num(t.deadline_misses as f64)),
+                    ("miss_rate", Json::num(t.miss_rate())),
+                    ("ttft_mean_steps", Json::num(t.ttft_mean())),
+                    ("wait_mean_steps", Json::num(t.wait_mean())),
+                    ("tokens", Json::num(t.tokens as f64)),
+                ]))
+            })
+            .collect();
+        eprintln!(
+            "scenario={name} steps={} finished={finished} busy={} \
+             misses={} miss_rate={miss_rate:.4} ttft_mean={ttft_mean:.2} \
+             tok_per_step={throughput:.3}",
+            report.steps, report.busy_rejections, report.deadline_misses
+        );
+        results.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("steps", Json::num(report.steps as f64)),
+            ("finished", Json::num(finished as f64)),
+            ("busy", Json::num(report.busy_rejections as f64)),
+            ("deadline_misses", Json::num(report.deadline_misses as f64)),
+            ("miss_rate", Json::num(miss_rate)),
+            ("ttft_mean_steps", Json::num(ttft_mean)),
+            ("throughput_tokens_per_step", Json::num(throughput)),
+            ("tenants", Json::Obj(tenants)),
+        ]));
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("scenarios")),
+        ("seed", Json::num(seed as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_scenarios.json";
+    std::fs::write(path, format!("{doc}\n"))?;
+    eprintln!("wrote {path}");
     Ok(())
 }
 

@@ -380,6 +380,11 @@ pub enum SchedEvent {
     /// `no-spec`, `admit-pause`, `shed`), driven by pool pressure and the
     /// deadline-miss rate; deterministic in sim replays.
     Degrade { step: u64, worker: usize, rung: &'static str },
+    /// A PER-TENANT degradation ladder moved tenant `tenant` to a new rung
+    /// on `worker`, driven by that tenant's pool-share utilization and
+    /// deadline misses — the over-budget tenant degrades alone (no-spec,
+    /// then admit-pause) before the cluster-wide ladder has to move.
+    Tenant { step: u64, worker: usize, tenant: String, rung: &'static str },
 }
 
 impl fmt::Display for SchedEvent {
@@ -432,6 +437,10 @@ impl fmt::Display for SchedEvent {
             }
             SchedEvent::Degrade { step, worker, rung } => {
                 write!(f, "t={step} degrade worker={worker} rung={rung}")
+            }
+            SchedEvent::Tenant { step, worker, tenant, rung } => {
+                write!(f, "t={step} tenant-degrade name={tenant} \
+                           worker={worker} rung={rung}")
             }
         }
     }
@@ -706,11 +715,14 @@ mod tests {
             log.push(SchedEvent::Degrade {
                 step: 9, worker: 1, rung: "no-spec",
             });
+            log.push(SchedEvent::Tenant {
+                step: 10, worker: 1, tenant: "noisy".into(), rung: "admit-pause",
+            });
             log
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.render(), b.render());
-        assert_eq!(a.len(), 15);
+        assert_eq!(a.len(), 16);
         assert!(a.render().contains("t=6 place id=3 worker=1"));
         assert!(a.render().contains("t=6 prefix id=3 blocks=2 fork=5"));
         assert!(a.render().contains("t=4 beta batch=2 paths=8 nodes=16 depth=5"));
@@ -723,5 +735,7 @@ mod tests {
         assert!(a.render().contains("t=8 recover worker=0 requeued=2 freed=12"));
         assert!(a.render().contains("t=8 failover id=3 from=0 to=1"));
         assert!(a.render().contains("t=9 degrade worker=1 rung=no-spec"));
+        assert!(a.render().contains(
+            "t=10 tenant-degrade name=noisy worker=1 rung=admit-pause"));
     }
 }

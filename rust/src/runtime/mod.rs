@@ -31,6 +31,44 @@ pub struct Runtime {
     host_weights: RefCell<HashMap<String, Rc<BTreeMap<String, Tensor>>>>,
     /// execution counters (perf accounting)
     pub stats: RefCell<RuntimeStats>,
+    /// pinned-literal pool: reusable argument/staging scratch for the
+    /// per-round graph calls (`run_step_pooled` / `run_draft_pooled`)
+    pin: RefCell<LitPool>,
+}
+
+/// Reusable scratch for the XLA call boundary. Holds the argument
+/// literals of the round in flight, the borrowed-pointer table handed to
+/// PJRT (weights + args), and host staging buffers that callers pack
+/// graph inputs into. All four keep their capacity across rounds, so a
+/// steady-state step does no host `Vec` growth at the boundary — the only
+/// remaining per-round cost is the one host→literal copy inside
+/// `xla::Literal` construction, which the PJRT API owns.
+#[derive(Default)]
+pub struct LitPool {
+    /// argument literals for the round in flight (cleared, capacity kept)
+    args: Vec<xla::Literal>,
+    /// borrowed-arg table for `execute` (weights first, then `args`)
+    refs: Vec<*const xla::Literal>,
+    stage_f32: Vec<f32>,
+    stage_i32: Vec<i32>,
+}
+
+impl LitPool {
+    /// Borrow the staging buffers at the requested lengths, grown (never
+    /// shrunk) and reset to the padding values callers rely on (f32 rows
+    /// zeroed, i32 slots zeroed). Steady state: no allocation.
+    pub fn stage(&mut self, f32_len: usize, i32_len: usize)
+                 -> (&mut [f32], &mut [i32]) {
+        if self.stage_f32.len() < f32_len {
+            self.stage_f32.resize(f32_len, 0.0);
+        }
+        if self.stage_i32.len() < i32_len {
+            self.stage_i32.resize(i32_len, 0);
+        }
+        self.stage_f32[..f32_len].fill(0.0);
+        self.stage_i32[..i32_len].fill(0);
+        (&mut self.stage_f32[..f32_len], &mut self.stage_i32[..i32_len])
+    }
 }
 
 #[derive(Debug, Default, Clone)]
@@ -52,6 +90,7 @@ impl Runtime {
             weights: RefCell::new(HashMap::new()),
             host_weights: RefCell::new(HashMap::new()),
             stats: RefCell::new(RuntimeStats::default()),
+            pin: RefCell::new(LitPool::default()),
         })
     }
 
@@ -150,10 +189,18 @@ impl Runtime {
 
     fn execute(&self, file: &str, args: &[&xla::Literal]) -> Result<Vec<Tensor>> {
         let exe = self.executable(file)?;
+        self.execute_prepared(file, &exe, args)
+    }
+
+    /// The shared tail of every graph call: run a compiled executable over
+    /// an already-assembled borrowed-arg table, untuple, count. Does NOT
+    /// touch `self.pin` — the pooled entry points hold its borrow across
+    /// this call.
+    fn execute_prepared(&self, file: &str, exe: &xla::PjRtLoadedExecutable,
+                        args: &[&xla::Literal]) -> Result<Vec<Tensor>> {
         let t0 = std::time::Instant::now();
-        let borrowed: Vec<&xla::Literal> = args.to_vec();
         let result = exe
-            .execute::<&xla::Literal>(&borrowed)
+            .execute::<&xla::Literal>(args)
             .map_err(|e| anyhow!("executing {file}: {e:?}"))?;
         let lit = result[0][0]
             .to_literal_sync()
@@ -198,6 +245,42 @@ impl Runtime {
         self.execute(&g.file, &all)
     }
 
+    /// Pool-backed twin of [`run_step_lits`] for the engine hot path.
+    /// `build` packs the round's argument literals into the pinned pool's
+    /// (cleared, capacity-retaining) args vec; the borrowed-arg table is
+    /// likewise assembled in reusable scratch, so the call builds no fresh
+    /// host `Vec`s per round.
+    pub fn run_step_pooled<F>(&self, model: &str, batch: usize, n: usize,
+                              build: F) -> Result<Vec<Tensor>>
+    where
+        F: FnOnce(&mut Vec<xla::Literal>) -> Result<()>,
+    {
+        let gname = format!("step_b{batch}_n{n}");
+        let meta = self.manifest.model(model)?;
+        let g = meta
+            .graphs
+            .get(&gname)
+            .ok_or_else(|| anyhow!("model {model} has no graph {gname}"))?;
+        let w = self.base_weights(model)?;
+        let exe = self.executable(&g.file)?;
+        let mut pin = self.pin.borrow_mut();
+        let LitPool { args, refs, .. } = &mut *pin;
+        args.clear();
+        build(args)?;
+        refs.clear();
+        refs.extend(w.iter().map(|l| l as *const xla::Literal));
+        refs.extend(args.iter().map(|l| l as *const xla::Literal));
+        // SAFETY: `&xla::Literal` and `*const xla::Literal` share one
+        // layout, and every pointer derives from a borrow (`w`, `args`)
+        // that outlives the call below; `refs` is not mutated again until
+        // the next round re-enters a pooled entry point.
+        let borrowed: &[&xla::Literal] = unsafe {
+            std::mem::transmute::<&[*const xla::Literal], &[&xla::Literal]>(
+                refs.as_slice())
+        };
+        self.execute_prepared(&g.file, &exe, borrowed)
+    }
+
     /// Run a draft-head graph. `head` ∈ {ctc, medusa, hydra}; extra args per
     /// manifest (window/hidden/base_tok...). The base `emb` is injected
     /// between head weights and runtime args, as the graphs expect.
@@ -225,6 +308,47 @@ impl Runtime {
         all.push(&bw[emb_idx]);
         all.extend(arg_lits.iter());
         self.execute(&g.file, &all)
+    }
+
+    /// Pool-backed twin of [`run_draft`] for the CTC drafter hot path.
+    /// `build` receives the pool's cleared args vec plus its f32/i32
+    /// staging buffers (see [`LitPool::stage`]-style reuse) and packs the
+    /// head's runtime arguments; weight/emb refs and the borrowed-arg
+    /// table come from reusable scratch.
+    pub fn run_draft_pooled<F>(&self, model: &str, head: &str, batch: usize,
+                               build: F) -> Result<Vec<Tensor>>
+    where
+        F: FnOnce(&mut Vec<xla::Literal>, &mut Vec<f32>, &mut Vec<i32>)
+            -> Result<()>,
+    {
+        let gname = format!("draft_{head}_b{batch}");
+        let meta = self.manifest.model(model)?;
+        let g = meta
+            .graphs
+            .get(&gname)
+            .ok_or_else(|| anyhow!("model {model} has no graph {gname}"))?;
+        let hw = self.head_weights(model, head)?;
+        let bw = self.base_weights(model)?;
+        let emb_idx = meta
+            .weight_order
+            .iter()
+            .position(|n| n == "emb")
+            .ok_or_else(|| anyhow!("model {model} has no 'emb' weight"))?;
+        let exe = self.executable(&g.file)?;
+        let mut pin = self.pin.borrow_mut();
+        let LitPool { args, refs, stage_f32, stage_i32 } = &mut *pin;
+        args.clear();
+        build(args, stage_f32, stage_i32)?;
+        refs.clear();
+        refs.extend(hw.iter().map(|l| l as *const xla::Literal));
+        refs.push(&bw[emb_idx] as *const xla::Literal);
+        refs.extend(args.iter().map(|l| l as *const xla::Literal));
+        // SAFETY: see `run_step_pooled` — same layout + lifetime argument.
+        let borrowed: &[&xla::Literal] = unsafe {
+            std::mem::transmute::<&[*const xla::Literal], &[&xla::Literal]>(
+                refs.as_slice())
+        };
+        self.execute_prepared(&g.file, &exe, borrowed)
     }
 
     /// Run a standalone kernel artifact (e.g. ctc_score_b16).

@@ -2,8 +2,12 @@
 //! the scheduler's virtual step clock, the comparators that drive
 //! admission order and preemption-victim choice, the cross-worker
 //! *placement* policy (`WorkerSnapshot`/`place`) the router runs over the
-//! shared KV block pool, and the admission-rate model (`AdmitRate`) behind
-//! deadline-aware `queued`/`busy` responses.
+//! shared KV block pool, the admission-rate model (`AdmitRate`) behind
+//! deadline-aware `queued`/`busy` responses, and the multi-tenant
+//! isolation layer: deterministic per-tenant token buckets
+//! (`TokenBucket`/`TenantTable`) gating admission ahead of the SLO queue,
+//! and weighted fair queuing across tenants inside each class
+//! (`FairQueue`).
 //!
 //! This module is the single source of truth for policy decisions — the
 //! real `Engine`/`Server` and the artifact-free `testkit::MockSched`/
@@ -70,6 +74,9 @@ pub struct ReqMeta {
     pub deadline_step: u64,
     /// step of the ORIGINAL submission (survives evictions; feeds aging)
     pub enq_step: u64,
+    /// interned tenant id ([`DEFAULT_TENANT`] for untagged requests);
+    /// feeds weighted fair queuing *within* a class, never across classes
+    pub tenant: u32,
 }
 
 impl ReqMeta {
@@ -357,12 +364,339 @@ impl AdmitRate {
     }
 }
 
+// ------------------------------------------------- multi-tenant isolation
+
+/// Interned id of the implicit tenant every untagged request belongs to.
+/// It has weight 1, an unlimited token bucket, and no pool-share cap, so a
+/// deployment that never names a tenant behaves exactly like the
+/// single-tenant scheduler it replaces.
+pub const DEFAULT_TENANT: u32 = 0;
+
+/// Virtual service quantum charged per admission in [`FairQueue`]'s
+/// virtual-time arithmetic (divided by the tenant's weight). Pure integer
+/// so replays are byte-for-byte reproducible.
+pub const WFQ_QUANTUM: u64 = 1_000_000;
+
+/// Deterministic token bucket on the scheduler's VIRTUAL step clock:
+/// `burst` tokens of headroom, refilled at `rate_milli` milli-tokens per
+/// step (1000 milli-tokens buy one admission). Refill happens lazily at
+/// the step of the next `try_take`, so identical submission/step schedules
+/// produce identical grant/deny decisions — the sim double-replay gate
+/// covers bucket denials like every other scheduling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TokenBucket {
+    unlimited: bool,
+    burst_milli: u64,
+    rate_milli: u64,
+    level_milli: u64,
+    last_step: u64,
+}
+
+impl TokenBucket {
+    /// Bucket holding at most `burst` whole tokens, refilling at
+    /// `rate_milli` milli-tokens per virtual step. Starts full.
+    pub fn new(burst: u32, rate_milli: u64) -> TokenBucket {
+        let burst_milli = u64::from(burst.max(1)) * 1000;
+        TokenBucket {
+            unlimited: false,
+            burst_milli,
+            rate_milli,
+            level_milli: burst_milli,
+            last_step: 0,
+        }
+    }
+
+    /// The default tenant's bucket: every request is granted.
+    pub fn unlimited() -> TokenBucket {
+        TokenBucket {
+            unlimited: true,
+            burst_milli: 0,
+            rate_milli: 0,
+            level_milli: 0,
+            last_step: 0,
+        }
+    }
+
+    pub fn is_unlimited(&self) -> bool {
+        self.unlimited
+    }
+
+    fn refill(&mut self, now: u64) {
+        let elapsed = now.saturating_sub(self.last_step);
+        self.level_milli = self
+            .level_milli
+            .saturating_add(elapsed.saturating_mul(self.rate_milli))
+            .min(self.burst_milli);
+        self.last_step = self.last_step.max(now);
+    }
+
+    /// Spend one admission (1000 milli-tokens) at virtual step `now`.
+    pub fn try_take(&mut self, now: u64) -> bool {
+        if self.unlimited {
+            return true;
+        }
+        self.refill(now);
+        if self.level_milli >= 1000 {
+            self.level_milli -= 1000;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Whole tokens currently available (after a refill to `now`).
+    pub fn level(&mut self, now: u64) -> u64 {
+        if self.unlimited {
+            return u64::MAX;
+        }
+        self.refill(now);
+        self.level_milli / 1000
+    }
+
+    /// Steps until a denied caller plausibly holds a full token again.
+    pub fn retry_hint(&mut self, now: u64) -> u64 {
+        if self.unlimited {
+            return 1;
+        }
+        self.refill(now);
+        if self.level_milli >= 1000 {
+            return 1;
+        }
+        let deficit = 1000 - self.level_milli;
+        if self.rate_milli == 0 {
+            return u64::MAX;
+        }
+        deficit.div_ceil(self.rate_milli).max(1)
+    }
+}
+
+/// Per-tenant policy: WFQ weight, admission token bucket, and the share of
+/// the worker's KV pool the tenant may hold before its private degradation
+/// ladder starts observing it as hot.
+#[derive(Debug, Clone)]
+pub struct TenantSpec {
+    pub name: String,
+    /// weighted-fair-queuing weight inside each class (≥ 1)
+    pub weight: u32,
+    pub bucket: TokenBucket,
+    /// per-mille of the pool this tenant may hold; 1000 = uncapped
+    pub pool_share_pm: u32,
+}
+
+impl TenantSpec {
+    /// An uncapped, unweighted, unthrottled tenant.
+    pub fn open(name: &str) -> TenantSpec {
+        TenantSpec {
+            name: name.to_string(),
+            weight: 1,
+            bucket: TokenBucket::unlimited(),
+            pool_share_pm: 1000,
+        }
+    }
+}
+
+/// Interning table of tenant specs plus the bucket-admission ledger. Slot 0
+/// is always the default tenant. The ledger counts every bucket decision so
+/// the conservation property `granted + denied == offered` is checkable per
+/// tenant in tests and surfaced through stats.
+#[derive(Debug, Clone)]
+pub struct TenantTable {
+    specs: Vec<TenantSpec>,
+    by_name: std::collections::BTreeMap<String, u32>,
+    offered: Vec<u64>,
+    granted: Vec<u64>,
+    denied: Vec<u64>,
+}
+
+impl Default for TenantTable {
+    fn default() -> Self {
+        let mut t = TenantTable {
+            specs: Vec::new(),
+            by_name: std::collections::BTreeMap::new(),
+            offered: Vec::new(),
+            granted: Vec::new(),
+            denied: Vec::new(),
+        };
+        t.configure(TenantSpec::open("default"));
+        t
+    }
+}
+
+impl TenantTable {
+    pub fn new() -> TenantTable {
+        TenantTable::default()
+    }
+
+    /// Install or replace a tenant spec; returns its interned id.
+    pub fn configure(&mut self, spec: TenantSpec) -> u32 {
+        if let Some(&id) = self.by_name.get(&spec.name) {
+            self.specs[id as usize] = spec;
+            return id;
+        }
+        let id = self.specs.len() as u32;
+        self.by_name.insert(spec.name.clone(), id);
+        self.specs.push(spec);
+        self.offered.push(0);
+        self.granted.push(0);
+        self.denied.push(0);
+        id
+    }
+
+    /// Resolve a wire-level tenant tag to an id; unknown names are interned
+    /// with an open spec (isolation is opt-in per tenant), `None` maps to
+    /// the default tenant.
+    pub fn intern(&mut self, name: Option<&str>) -> u32 {
+        match name {
+            None => DEFAULT_TENANT,
+            Some(n) => match self.by_name.get(n) {
+                Some(&id) => id,
+                None => self.configure(TenantSpec::open(n)),
+            },
+        }
+    }
+
+    pub fn id(&self, name: &str) -> Option<u32> {
+        self.by_name.get(name).copied()
+    }
+
+    pub fn name(&self, id: u32) -> &str {
+        &self.specs[id as usize].name
+    }
+
+    pub fn spec(&self, id: u32) -> &TenantSpec {
+        &self.specs[id as usize]
+    }
+
+    pub fn weight(&self, id: u32) -> u32 {
+        self.specs[id as usize].weight
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false // slot 0 always exists
+    }
+
+    /// True once any tenant beyond the implicit default is registered —
+    /// the gate for emitting per-tenant gauges/stats so single-tenant
+    /// deployments keep byte-identical output.
+    pub fn has_non_default(&self) -> bool {
+        self.specs.len() > 1
+    }
+
+    /// Ids of every registered tenant, in interning order.
+    pub fn ids(&self) -> impl Iterator<Item = u32> {
+        0..self.specs.len() as u32
+    }
+
+    /// Bucket-admission decision for one request at virtual step `now`,
+    /// recorded in the conservation ledger.
+    pub fn admit(&mut self, id: u32, now: u64) -> bool {
+        self.offered[id as usize] += 1;
+        if self.specs[id as usize].bucket.try_take(now) {
+            self.granted[id as usize] += 1;
+            true
+        } else {
+            self.denied[id as usize] += 1;
+            false
+        }
+    }
+
+    /// Retry hint for a bucket-denied request of tenant `id`.
+    pub fn retry_hint(&mut self, id: u32, now: u64) -> u64 {
+        self.specs[id as usize].bucket.retry_hint(now)
+    }
+
+    /// `(offered, granted, denied)` bucket ledger for tenant `id`.
+    pub fn ledger(&self, id: u32) -> (u64, u64, u64) {
+        let i = id as usize;
+        (self.offered[i], self.granted[i], self.denied[i])
+    }
+}
+
+/// Weighted fair queuing across tenants INSIDE each priority class, by
+/// virtual service time: each admission charges the tenant
+/// `WFQ_QUANTUM / weight`, and queued requests are ordered by the virtual
+/// finish time they would have if admitted next. Between classes nothing
+/// changes — interactive still strictly precedes batch (aging included);
+/// within a class a heavy tenant's backlog interleaves with light tenants
+/// in proportion to weight instead of monopolizing admission order.
+///
+/// With a single tenant the keys are `base + i·quantum` in `admit_cmp`
+/// order, so the sort degenerates EXACTLY to the pre-tenant admission
+/// order — byte-identical replays for every untagged workload.
+#[derive(Debug, Clone, Default)]
+pub struct FairQueue {
+    /// virtual finish time of the last admission per (class rank, tenant)
+    credit: std::collections::BTreeMap<(u8, u32), u64>,
+    /// per-class virtual clock: the start time of the latest admission
+    vtime: [u64; 2],
+}
+
+impl FairQueue {
+    pub fn new() -> FairQueue {
+        FairQueue::default()
+    }
+
+    /// Charge one admission of `tenant` in class `class` (as effective at
+    /// admission time) against its virtual-time credit.
+    pub fn charge(&mut self, class: Priority, tenant: u32, weight: u32) {
+        let r = class.rank();
+        let v = self.vtime[r as usize];
+        let c = self.credit.entry((r, tenant)).or_insert(0);
+        let start = (*c).max(v);
+        *c = start + WFQ_QUANTUM / u64::from(weight.max(1));
+        self.vtime[r as usize] = start;
+    }
+
+    /// Admission order over `metas`: indices sorted by (effective class,
+    /// virtual finish time, `admit_cmp`). `weight_of` maps tenant id →
+    /// WFQ weight.
+    pub fn order(&self, policy: &SloPolicy, metas: &[ReqMeta], now: u64,
+                 weight_of: impl Fn(u32) -> u32) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..metas.len()).collect();
+        idx.sort_by(|&a, &b| policy.admit_cmp(&metas[a], &metas[b], now));
+        // walk in admit_cmp order so the i-th queued request of a tenant
+        // gets the i-th stride past that tenant's credit. Keys are START
+        // tags (start-time fair queuing): the head of an idle tenant's
+        // backlog keys at `max(credit, vtime)` itself, so it overtakes a
+        // flooder whose credit has run ahead of the class clock instead of
+        // tying with it forever.
+        let mut pos: std::collections::BTreeMap<(u8, u32), u64> =
+            std::collections::BTreeMap::new();
+        let mut keyed: Vec<(u8, u64, usize)> = idx
+            .iter()
+            .map(|&i| {
+                let m = &metas[i];
+                let r = policy.effective_class(m, now).rank();
+                let p = pos.entry((r, m.tenant)).or_insert(0);
+                let j = *p;
+                *p += 1;
+                let base = self
+                    .credit
+                    .get(&(r, m.tenant))
+                    .copied()
+                    .unwrap_or(0)
+                    .max(self.vtime[r as usize]);
+                let stride = WFQ_QUANTUM / u64::from(weight_of(m.tenant).max(1));
+                (r, base.saturating_add(j * stride), i)
+            })
+            .collect();
+        // stable sort: equal (rank, key) keep admit_cmp order
+        keyed.sort_by(|x, y| (x.0, x.1).cmp(&(y.0, y.1)));
+        keyed.into_iter().map(|(_, _, i)| i).collect()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn meta(id: u64, class: Priority, deadline: u64, enq: u64) -> ReqMeta {
-        ReqMeta { id, class, deadline_step: deadline, enq_step: enq }
+        ReqMeta { id, class, deadline_step: deadline, enq_step: enq,
+                  tenant: DEFAULT_TENANT }
     }
 
     #[test]
@@ -593,5 +927,171 @@ mod tests {
         w.observe_admission(501, 499);
         assert!(w.steps_per_admission() > 100.0,
                 "real contention must raise the estimate");
+    }
+
+    #[test]
+    fn token_bucket_burst_drains_then_denies() {
+        let mut b = TokenBucket::new(4, 500); // burst 4, 0.5 tokens/step
+        // the full burst is spendable back-to-back at one step...
+        for i in 0..4 {
+            assert!(b.try_take(10), "burst token {i} must be granted");
+        }
+        // ...and the very next request at the same step is denied
+        assert!(!b.try_take(10));
+        assert_eq!(b.level(10), 0);
+        // the retry hint points at the first step holding a whole token
+        assert_eq!(b.retry_hint(10), 2);
+        assert!(!b.try_take(11), "half a token is not a token");
+        assert!(b.try_take(12));
+    }
+
+    #[test]
+    fn token_bucket_converges_to_sustained_rate() {
+        // over a long horizon the grant count converges to rate × steps
+        // plus the initial burst, regardless of how greedily it is polled
+        let mut b = TokenBucket::new(8, 250); // 0.25 tokens/step
+        let mut granted = 0u64;
+        for step in 0..4000u64 {
+            while b.try_take(step) {
+                granted += 1;
+            }
+        }
+        let expected = 8 + (3999 * 250) / 1000;
+        assert!(granted.abs_diff(expected) <= 1,
+                "granted {granted} vs sustained-rate expectation {expected}");
+    }
+
+    #[test]
+    fn token_bucket_refill_is_deterministic_across_replays() {
+        // identical virtual-step schedules must produce identical
+        // grant/deny streams — bucket decisions are replayed by the sim
+        let schedule: Vec<u64> =
+            (0..200).map(|i| (i * 7 + i * i / 3) % 509).collect();
+        let run = || {
+            let mut b = TokenBucket::new(3, 333);
+            let mut sorted = schedule.clone();
+            sorted.sort_unstable();
+            sorted.iter().map(|&s| b.try_take(s)).collect::<Vec<bool>>()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b);
+        assert!(a.iter().any(|&g| g) && a.iter().any(|&g| !g),
+                "schedule must exercise both grant and deny paths");
+    }
+
+    #[test]
+    fn tenant_table_interns_and_conserves_ledger() {
+        let mut t = TenantTable::new();
+        assert_eq!(t.intern(None), DEFAULT_TENANT);
+        assert_eq!(t.name(DEFAULT_TENANT), "default");
+        assert!(!t.has_non_default());
+        let noisy = t.configure(TenantSpec {
+            name: "noisy".into(),
+            weight: 1,
+            bucket: TokenBucket::new(2, 100),
+            pool_share_pm: 400,
+        });
+        assert!(t.has_non_default());
+        assert_eq!(t.intern(Some("noisy")), noisy);
+        // unknown tags intern as open tenants rather than erroring
+        let adhoc = t.intern(Some("walk-in"));
+        assert!(t.spec(adhoc).bucket.is_unlimited());
+        // ledger conservation: granted + denied == offered
+        for step in 0..50u64 {
+            t.admit(noisy, step / 4);
+            t.admit(DEFAULT_TENANT, step);
+        }
+        let (off, grant, deny) = t.ledger(noisy);
+        assert_eq!(off, 50);
+        assert_eq!(grant + deny, off);
+        assert!(deny > 0, "a 0.1/step bucket must deny a 50-request burst");
+        let (d_off, d_grant, d_deny) = t.ledger(DEFAULT_TENANT);
+        assert_eq!((d_off, d_grant, d_deny), (50, 50, 0));
+    }
+
+    #[test]
+    fn fair_queue_degenerates_to_admit_cmp_for_a_single_tenant() {
+        let pol = SloPolicy::default();
+        let fq = FairQueue::new();
+        let metas = vec![
+            meta(7, Priority::Batch, 2000, 4),
+            meta(2, Priority::Interactive, 90, 1),
+            meta(3, Priority::Interactive, 30, 2),
+            meta(5, Priority::Batch, 900, 3),
+            meta(1, Priority::Interactive, 90, 0),
+        ];
+        let mut want: Vec<usize> = (0..metas.len()).collect();
+        want.sort_by(|&a, &b| pol.admit_cmp(&metas[a], &metas[b], 10));
+        assert_eq!(fq.order(&pol, &metas, 10, |_| 1), want);
+        // still exact after arbitrary charges against the lone tenant
+        let mut charged = FairQueue::new();
+        for _ in 0..17 {
+            charged.charge(Priority::Interactive, DEFAULT_TENANT, 1);
+            charged.charge(Priority::Batch, DEFAULT_TENANT, 1);
+        }
+        assert_eq!(charged.order(&pol, &metas, 10, |_| 1), want);
+    }
+
+    #[test]
+    fn fair_queue_interleaves_tenants_by_weight_within_a_class() {
+        let pol = SloPolicy::default();
+        let mut fq = FairQueue::new();
+        // tenant 1 queued 6 requests first (lower enq/id), tenant 2 only 3;
+        // strict admit_cmp would drain all of tenant 1 before tenant 2
+        let mut metas = Vec::new();
+        for i in 0..6u64 {
+            metas.push(ReqMeta { id: i, class: Priority::Interactive,
+                                 deadline_step: 500, enq_step: i, tenant: 1 });
+        }
+        for i in 0..3u64 {
+            metas.push(ReqMeta { id: 100 + i, class: Priority::Interactive,
+                                 deadline_step: 500, enq_step: 50 + i,
+                                 tenant: 2 });
+        }
+        let order = fq.order(&pol, &metas, 60, |_| 1);
+        let tenants: Vec<u32> = order.iter().map(|&i| metas[i].tenant).collect();
+        // equal weights: the head of tenant 2's backlog must not sit behind
+        // all six of tenant 1's requests
+        let first_t2 = tenants.iter().position(|&t| t == 2).unwrap();
+        assert!(first_t2 <= 2,
+                "co-tenant starved behind a flood: order {tenants:?}");
+        // a 2× weight admits ~2 tenant-1 requests per tenant-2 request;
+        // charge admissions as they happen and watch the interleave
+        let mut admitted = Vec::new();
+        let mut remaining = metas.clone();
+        while !remaining.is_empty() {
+            let o = fq.order(&pol, &remaining, 60,
+                             |t| if t == 1 { 2 } else { 1 });
+            let next = remaining.remove(o[0]);
+            fq.charge(Priority::Interactive, next.tenant, if next.tenant == 1 { 2 } else { 1 });
+            admitted.push(next.tenant);
+        }
+        // within the first 5 admissions both tenants appear, and the 2×
+        // weight gives tenant 1 roughly two admissions per tenant-2 one
+        assert!(admitted[..5].contains(&1) && admitted[..5].contains(&2),
+                "weighted interleave missing: {admitted:?}");
+        let t1_first6 = admitted[..6].iter().filter(|&&t| t == 1).count();
+        assert!((3..=5).contains(&t1_first6),
+                "weight-2 tenant should take ~4 of the first 6: {admitted:?}");
+    }
+
+    #[test]
+    fn fair_queue_never_reorders_across_classes() {
+        let pol = SloPolicy::default();
+        let mut fq = FairQueue::new();
+        // bury tenant 2 in interactive credit; its BATCH request must still
+        // sort behind every interactive request of any tenant
+        for _ in 0..5 {
+            fq.charge(Priority::Interactive, 1, 1);
+        }
+        let metas = vec![
+            ReqMeta { id: 1, class: Priority::Batch, deadline_step: 4000,
+                      enq_step: 0, tenant: 2 },
+            ReqMeta { id: 2, class: Priority::Interactive, deadline_step: 400,
+                      enq_step: 5, tenant: 1 },
+        ];
+        let order = fq.order(&pol, &metas, 10, |_| 1);
+        assert_eq!(order, vec![1, 0],
+                   "interactive must precede batch regardless of credit");
     }
 }

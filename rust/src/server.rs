@@ -56,10 +56,18 @@
 //! # Wire protocol (one JSON object per line)
 //!
 //!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true,
-//!      "class":"interactive"|"batch","deadline_steps":N}
+//!      "class":"interactive"|"batch","deadline_steps":N,
+//!      "tenant":"name"}
 //!     `class` (default "interactive") and `deadline_steps` (relative, in
 //!     scheduler steps; default = the class's configured deadline) drive
-//!     SLO-aware admission. Reply is a frame sequence on the same
+//!     SLO-aware admission. `tenant` (optional, PR 9) names the paying
+//!     tenant: per-tenant token-bucket admission and weighted fair queuing
+//!     apply on the worker, and a bucket denial answers a terminal `busy`
+//!     with the bucket's refill hint. An absent tag maps to the default
+//!     tenant and an unconfigured name is interned with an open spec
+//!     (both: unlimited bucket, weight 1 — isolation is opt-in per
+//!     tenant), so the untagged protocol is byte-identical to PR 8.
+//!     Reply is a frame sequence on the same
 //!     connection, ended by ONE terminal frame:
 //!     ← {"type":"queued","id":7,"pos":n,"class":"...","est_start":s}
 //!     ← {"type":"tok","id":7,"text":"...","n":k}  (stream:true only; one
@@ -91,6 +99,15 @@
 //!     (mock-mode worker entries carry `"mock":true` plus per-round
 //!     latency quantiles `round_mean_us`/`round_p50_us`/`round_p95_us` —
 //!     the C10k gate's signal that fan-in leaves rounds unaffected.)
+//!     Once any request named a non-default tenant, each real-engine
+//!     worker entry also carries a per-tenant breakdown:
+//!        "tenants":{"<name>":{"offered":..,"granted":..,"denied":..,
+//!                             "weight":..,"rung":"healthy"|"no-spec"|
+//!                             "admit-pause"|"shed"}, ...}
+//!     where offered/granted/denied is the tenant's token-bucket ledger
+//!     (offered == granted + denied always) and `rung` is the tenant's
+//!     PRIVATE degradation ladder position. Untagged deployments omit the
+//!     key entirely, keeping the stats shape byte-identical to PR 8.
 //!
 //! Shutdown drains gracefully: in-flight and queued requests finish (new
 //! ones are rejected `busy`), drivers keep relaying frames and flushing
@@ -209,6 +226,9 @@ struct Job {
     /// SLO tags: priority class + optional relative deadline (steps)
     class: Priority,
     deadline: Option<u64>,
+    /// tenant tag (PR 9): bucket admission + WFQ on the worker; `None`
+    /// maps to the unlimited default tenant
+    tenant: Option<String>,
     resp: Sender<String>,
 }
 
@@ -610,6 +630,8 @@ struct GenCtx {
     stream: bool,
     class: Priority,
     deadline: Option<u64>,
+    /// tenant tag carried through failover redispatch
+    tenant: Option<String>,
     /// failover resubmissions so far (0 on first dispatch)
     attempts: u32,
 }
@@ -1111,6 +1133,8 @@ fn dispatch_line(fe: &Frontend, c: &mut Conn, line: &str, draining: bool)
             };
             let deadline =
                 req.get("deadline_steps").as_usize().map(|v| v as u64);
+            let tenant =
+                req.get("tenant").as_str().map(|s| s.to_string());
             start_generate(fe, c, GenCtx {
                 client_id,
                 prompt,
@@ -1118,6 +1142,7 @@ fn dispatch_line(fe: &Frontend, c: &mut Conn, line: &str, draining: bool)
                 stream: stream_toks,
                 class,
                 deadline,
+                tenant,
                 attempts: 0,
             })
         }
@@ -1158,6 +1183,7 @@ fn start_generate(fe: &Frontend, c: &mut Conn, ctx: GenCtx) -> bool {
         stream: ctx.stream,
         class: ctx.class,
         deadline: ctx.deadline,
+        tenant: ctx.tenant.clone(),
         resp: rtx,
     }));
     if sent.is_err() {
@@ -1239,7 +1265,7 @@ fn worker_stats_json(engine: &Engine) -> String {
         (idx.hits(), idx.misses(), idx.blocks_saved(), idx.forks(),
          idx.owned_blocks())
     };
-    Json::obj(vec![
+    let mut fields = vec![
         ("active", Json::num(engine.n_active() as f64)),
         ("queued", Json::num(engine.queue_len() as f64)),
         ("pool_utilization", Json::num(engine.pool_utilization())),
@@ -1267,7 +1293,31 @@ fn worker_stats_json(engine: &Engine) -> String {
         ("deadline_missed", Json::num(m.counter("sched.deadline_missed") as f64)),
         ("prefill_interleaved_rounds",
          Json::num(m.counter("sched.prefill_interleaved_rounds") as f64)),
-    ]).to_string()
+    ];
+    // per-tenant breakdown (PR 9): bucket ledger + WFQ weight + private
+    // degradation rung per tenant. Emitted only once a non-default tenant
+    // exists, so untagged deployments keep the PR-8 stats shape unchanged.
+    let tt = engine.tenant_table();
+    if tt.has_non_default() {
+        let tenants: std::collections::BTreeMap<String, Json> = tt
+            .ids()
+            .map(|t| {
+                let name = tt.name(t).to_string();
+                let (offered, granted, denied) = tt.ledger(t);
+                let entry = Json::obj(vec![
+                    ("offered", Json::num(offered as f64)),
+                    ("granted", Json::num(granted as f64)),
+                    ("denied", Json::num(denied as f64)),
+                    ("weight", Json::num(tt.weight(t) as f64)),
+                    ("rung",
+                     Json::str(engine.tenant_rung(&name).name())),
+                ]);
+                (name, entry)
+            })
+            .collect();
+        fields.push(("tenants", Json::Obj(tenants)));
+    }
+    Json::obj(fields).to_string()
 }
 
 fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
@@ -1279,8 +1329,9 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
                 return;
             }
             let prompt = engine.format_prompt(&job.prompt);
-            match engine.submit_tagged(&prompt, job.max_new, job.class,
-                                       job.deadline) {
+            match engine.submit_tenant(&prompt, job.max_new, job.class,
+                                       job.deadline,
+                                       job.tenant.as_deref()) {
                 Ok(Submission::Admitted(id)) => {
                     pending.insert(id, Pending {
                         client_id: job.client_id,

@@ -21,8 +21,9 @@ use crate::engine::{Engine, GenOutput, GenStats, StepReport, Submission,
                     TokenDelta};
 use crate::kvcache::{PoolLease, PrefixHit, PrefixIndex, SharedBlockPool};
 use crate::metrics::{EventLog, SchedEvent};
-use crate::sched::{self, AdmitRate, Priority, ReqMeta, SloPolicy,
-                   WorkerSnapshot};
+use crate::sched::{self, AdmitRate, FairQueue, Priority, ReqMeta, SloPolicy,
+                   TenantSpec, TenantTable, TokenBucket, WorkerSnapshot,
+                   DEFAULT_TENANT};
 use crate::supervisor::{self, DegradeLadder, LadderConfig, Rung, StepWatchdog};
 use crate::util::rng::Rng;
 use crate::workload::{FaultKind, FaultPlan, Trace};
@@ -168,6 +169,15 @@ pub trait SchedBackend {
     fn submit(&mut self, prompt: &str, max_new: usize) -> Result<Submission> {
         self.submit_tagged(prompt, max_new, Priority::Interactive, None)
     }
+    /// Tenant-tagged submit: `tenant` names the paying tenant (`None` = the
+    /// default tenant, which is never throttled). Backends without tenant
+    /// support drop the tag and behave exactly like `submit_tagged`.
+    fn submit_tenant(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>, tenant: Option<&str>)
+                     -> Result<Submission> {
+        let _ = tenant;
+        self.submit_tagged(prompt, max_new, class, deadline_steps)
+    }
     fn cancel(&mut self, id: u64) -> bool;
     fn step_ex(&mut self) -> Result<StepReport>;
     fn n_active(&self) -> usize;
@@ -196,6 +206,12 @@ impl SchedBackend for Engine {
     fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
                      deadline_steps: Option<u64>) -> Result<Submission> {
         Engine::submit_tagged(self, prompt, max_new, class, deadline_steps)
+    }
+    fn submit_tenant(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>, tenant: Option<&str>)
+                     -> Result<Submission> {
+        Engine::submit_tenant(self, prompt, max_new, class, deadline_steps,
+                              tenant)
     }
     fn cancel(&mut self, id: u64) -> bool {
         Engine::cancel(self, id)
@@ -285,6 +301,56 @@ pub struct SimReport {
     /// rescued requests dropped after exhausting the failover retry
     /// budget — the chaos gate asserts this stays zero
     pub failed_streams: usize,
+    /// per-tenant rollups keyed by tenant name; only trace entries that
+    /// carried a tenant tag contribute (tenant-less traces leave it empty)
+    pub tenants: BTreeMap<String, TenantSummary>,
+}
+
+/// Per-tenant slice of a sim run: admission outcomes, SLO misses, and the
+/// latency aggregates (TTFT, queue wait) the scenario bench reports.
+#[derive(Debug, Default, Clone)]
+pub struct TenantSummary {
+    /// trace entries offered for this tenant (admitted + queued + bounced)
+    pub submitted: usize,
+    pub finished: usize,
+    /// admission-layer bounces: token bucket, queue cap, or admit-pause
+    pub busy: usize,
+    pub deadline_misses: usize,
+    /// tokens emitted across this tenant's finished requests
+    pub tokens: usize,
+    pub ttft_sum_steps: u64,
+    pub ttft_count: usize,
+    pub wait_sum_steps: u64,
+    pub wait_count: usize,
+}
+
+impl TenantSummary {
+    /// Deadline misses over finished requests (0.0 when nothing finished).
+    pub fn miss_rate(&self) -> f64 {
+        if self.finished == 0 {
+            0.0
+        } else {
+            self.deadline_misses as f64 / self.finished as f64
+        }
+    }
+
+    /// Mean virtual steps from submission to the first emitted token.
+    pub fn ttft_mean(&self) -> f64 {
+        if self.ttft_count == 0 {
+            0.0
+        } else {
+            self.ttft_sum_steps as f64 / self.ttft_count as f64
+        }
+    }
+
+    /// Mean virtual steps spent queued before first admission.
+    pub fn wait_mean(&self) -> f64 {
+        if self.wait_count == 0 {
+            0.0
+        } else {
+            self.wait_sum_steps as f64 / self.wait_count as f64
+        }
+    }
 }
 
 /// Drives a `SchedBackend` through a timed `Trace` under a virtual clock:
@@ -303,6 +369,10 @@ impl SchedulerSim {
         let mut report = SimReport::default();
         let mut cancel_rng = Rng::new(self.opts.seed ^ 0x5C4E_D01E);
         let mut pending_cancels: Vec<(u64, u64)> = Vec::new(); // (fire, id)
+        // live-id → (tenant name, submit clock, ttft recorded, wait
+        // recorded) for the per-tenant rollups; only tagged entries enter
+        let mut tenant_of: BTreeMap<u64, (String, u64, bool, bool)> =
+            BTreeMap::new();
         let mut taken = 0usize;
         let mut faults_taken = 0usize;
         let mut clock = 0u64;
@@ -322,24 +392,46 @@ impl SchedulerSim {
             let n_due = due.len();
             for entry in due.to_vec() {
                 let wants_cancel = cancel_rng.bool(self.opts.cancel_prob);
-                match backend.submit_tagged(&entry.question.text, entry.max_new,
-                                            entry.class, entry.deadline_steps)? {
+                match backend.submit_tenant(&entry.question.text,
+                                            entry.max_new, entry.class,
+                                            entry.deadline_steps,
+                                            entry.tenant.as_deref())? {
                     Submission::Admitted(id) => {
                         // direct admissions never pass through fill_slots,
                         // so record them here to keep the order complete
                         report.admission_order.push(id);
+                        if let Some(name) = entry.tenant.clone() {
+                            let t = report.tenants
+                                .entry(name.clone()).or_default();
+                            t.submitted += 1;
+                            t.wait_count += 1; // admitted instantly
+                            tenant_of.insert(id, (name, clock, false, true));
+                        }
                         if wants_cancel {
                             pending_cancels
                                 .push((clock + self.opts.cancel_after, id));
                         }
                     }
                     Submission::Queued { id, .. } => {
+                        if let Some(name) = entry.tenant.clone() {
+                            report.tenants
+                                .entry(name.clone()).or_default()
+                                .submitted += 1;
+                            tenant_of.insert(id, (name, clock, false, false));
+                        }
                         if wants_cancel {
                             pending_cancels
                                 .push((clock + self.opts.cancel_after, id));
                         }
                     }
-                    Submission::Busy { .. } => report.busy_rejections += 1,
+                    Submission::Busy { .. } => {
+                        if let Some(name) = entry.tenant.clone() {
+                            let t = report.tenants.entry(name).or_default();
+                            t.submitted += 1;
+                            t.busy += 1;
+                        }
+                        report.busy_rejections += 1;
+                    }
                 }
             }
             taken += n_due;
@@ -362,6 +454,22 @@ impl SchedulerSim {
             report.admission_order.extend(&step.admitted);
             report.evictions += step.evicted.len();
             report.deadline_misses += step.deadline_missed.len();
+            for id in &step.admitted {
+                if let Some(t) = tenant_of.get_mut(id) {
+                    if !t.3 {
+                        t.3 = true;
+                        let s = report.tenants.entry(t.0.clone()).or_default();
+                        s.wait_sum_steps += clock.saturating_sub(t.1);
+                        s.wait_count += 1;
+                    }
+                }
+            }
+            for id in &step.deadline_missed {
+                if let Some((name, ..)) = tenant_of.get(id) {
+                    report.tenants.entry(name.clone()).or_default()
+                        .deadline_misses += 1;
+                }
+            }
             if !step.prefilled.is_empty()
                 && step.emitted.iter().any(|d| !d.tokens.is_empty())
             {
@@ -371,8 +479,24 @@ impl SchedulerSim {
             report.max_queue_depth = report.max_queue_depth.max(step.queue_depth);
             for d in &step.emitted {
                 *report.beta_hist.entry(d.tokens.len()).or_insert(0) += 1;
+                if d.tokens.is_empty() {
+                    continue;
+                }
+                if let Some(t) = tenant_of.get_mut(&d.id) {
+                    if !t.2 {
+                        t.2 = true;
+                        let s = report.tenants.entry(t.0.clone()).or_default();
+                        s.ttft_sum_steps += clock.saturating_sub(t.1);
+                        s.ttft_count += 1;
+                    }
+                }
             }
             for out in step.finished {
+                if let Some((name, ..)) = tenant_of.get(&out.id) {
+                    let s = report.tenants.entry(name.clone()).or_default();
+                    s.finished += 1;
+                    s.tokens += out.token_ids.len();
+                }
                 report.per_request_steps.insert(out.id, out.stats.steps);
                 report.finished.push(out);
             }
@@ -422,6 +546,8 @@ struct MockSeq {
     produced: Vec<i32>,
     steps: usize,
     rng: Rng,
+    /// interned tenant id (slot 0 = the default tenant)
+    tenant: u32,
 }
 
 impl MockSeq {
@@ -431,6 +557,7 @@ impl MockSeq {
             class: self.class,
             deadline_step: self.deadline_step,
             enq_step: self.submit_step,
+            tenant: self.tenant,
         }
     }
 }
@@ -447,6 +574,8 @@ struct MockReq {
     steps: usize,
     rng: Option<Rng>,
     enq_step: u64,
+    /// interned tenant id (slot 0 = the default tenant)
+    tenant: u32,
 }
 
 impl MockReq {
@@ -456,6 +585,7 @@ impl MockReq {
             class: self.class,
             deadline_step: self.deadline_step,
             enq_step: self.submit_step,
+            tenant: self.tenant,
         }
     }
 }
@@ -527,6 +657,20 @@ pub struct MockSched {
     id_stride: u64,
     rng: Rng,
     events: EventLog,
+    /// tenant specs + bucket-admission ledger (slot 0 = default tenant)
+    tenants: TenantTable,
+    /// weighted-fair virtual-time credit across tenants within each class
+    fair: FairQueue,
+    /// per-tenant degradation ladders (configured tenants only): an
+    /// over-budget tenant walks no-spec → admit-pause ALONE, before any
+    /// cluster-wide ladder moves
+    tenant_ladders: BTreeMap<u32, DegradeLadder>,
+    ladder_cfg: LadderConfig,
+    /// tenants of this step's deadline misses (per-tenant ladder input);
+    /// cleared at the top of every step
+    miss_tenants: Vec<u32>,
+    /// worker index stamped on `tenant` events (cluster: `with_ids` start-1)
+    worker_no: usize,
 }
 
 /// Static budget the mock's β controller is built around. `with_beta`
@@ -570,6 +714,12 @@ impl MockSched {
             id_stride: 1,
             rng: Rng::new(seed),
             events: EventLog::default(),
+            tenants: TenantTable::default(),
+            fair: FairQueue::default(),
+            tenant_ladders: BTreeMap::new(),
+            ladder_cfg: LadderConfig::default(),
+            miss_tenants: Vec::new(),
+            worker_no: 0,
         }
     }
 
@@ -584,7 +734,42 @@ impl MockSched {
     pub fn with_ids(mut self, start: u64, stride: u64) -> Self {
         self.next_id = start.max(1);
         self.id_stride = stride.max(1);
+        self.worker_no = (start.max(1) - 1) as usize;
         self
+    }
+
+    /// Install tenant specs (WFQ weights, token buckets, pool-share caps)
+    /// and arm a private degradation ladder per configured tenant: when a
+    /// tenant runs over its pool share or misses deadlines, ITS ladder
+    /// walks healthy → no-spec → admit-pause while everyone else — and the
+    /// cluster-wide ladder — stays put. Off by default, so tenant-less
+    /// replays are byte-identical to previous releases.
+    pub fn with_tenants(mut self, specs: &[TenantSpec]) -> Self {
+        for spec in specs {
+            let t = self.tenants.configure(spec.clone());
+            self.tenant_ladders
+                .insert(t, DegradeLadder::new(self.ladder_cfg));
+        }
+        self
+    }
+
+    /// Bucket-admission ledger `(offered, granted, denied)` for a tenant
+    /// name; zeros for tenants this worker has never seen.
+    pub fn tenant_ledger(&self, name: &str) -> (u64, u64, u64) {
+        match self.tenants.id(name) {
+            Some(t) => self.tenants.ledger(t),
+            None => (0, 0, 0),
+        }
+    }
+
+    /// Current degradation rung for a tenant name (`Healthy` for unknown
+    /// or un-laddered tenants).
+    pub fn tenant_rung(&self, name: &str) -> Rung {
+        self.tenants
+            .id(name)
+            .and_then(|t| self.tenant_ladders.get(&t))
+            .map(|l| l.rung())
+            .unwrap_or(Rung::Healthy)
     }
 
     /// Install a β controller (the same `adapt::BetaController` the engine
@@ -629,15 +814,15 @@ impl MockSched {
         &self.pool
     }
 
-    /// Queue indices in SLO admission order (mirrors `Engine::policy_order`).
+    /// Queue indices in SLO admission order (mirrors `Engine::policy_order`):
+    /// weighted-fair across tenants inside each class, exactly `admit_cmp`
+    /// when only the default tenant exists.
     fn policy_order(&self) -> Vec<usize> {
         let now = self.step_no;
-        let mut order: Vec<usize> = (0..self.wait_queue.len()).collect();
-        order.sort_by(|&a, &b| {
-            self.policy.admit_cmp(
-                &self.wait_queue[a].meta(), &self.wait_queue[b].meta(), now)
-        });
-        order
+        let metas: Vec<ReqMeta> =
+            self.wait_queue.iter().map(|r| r.meta()).collect();
+        self.fair
+            .order(&self.policy, &metas, now, |t| self.tenants.weight(t))
     }
 
     fn admit_req(&mut self, req: MockReq) -> u64 {
@@ -677,6 +862,12 @@ impl MockSched {
                 });
             }
         }
+        // weighted-fair accounting: the admitted tenant's virtual-time
+        // credit advances by quantum/weight within its effective class
+        self.fair.charge(
+            self.policy.effective_class(&req.meta(), self.step_no),
+            req.tenant,
+            self.tenants.weight(req.tenant));
         let rng = match req.rng {
             Some(r) => r,
             None => self.rng.fork(id),
@@ -703,6 +894,7 @@ impl MockSched {
             produced: req.produced,
             steps: req.steps,
             rng,
+            tenant: req.tenant,
         });
         let waited = self.step_no.saturating_sub(req.enq_step);
         self.admit_rate.observe_admission(self.step_no, waited);
@@ -759,6 +951,7 @@ impl MockSched {
                         req.class, req.deadline_step);
                     if miss {
                         missed.push(out.id);
+                        self.miss_tenants.push(req.tenant);
                     }
                     forced.push(out);
                     continue 'outer;
@@ -871,6 +1064,7 @@ impl MockSched {
             steps: seq.steps,
             rng: Some(seq.rng),
             enq_step: self.step_no,
+            tenant: seq.tenant,
         });
         self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
         id
@@ -913,6 +1107,7 @@ impl MockSched {
                     steps: 0,
                     rng: None,
                     enq_step: self.step_no,
+                    tenant: seq.tenant,
                 });
             }
         }
@@ -969,6 +1164,32 @@ impl MockSched {
 impl SchedBackend for MockSched {
     fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
                      deadline_steps: Option<u64>) -> Result<Submission> {
+        self.submit_tenant(prompt, max_new, class, deadline_steps, None)
+    }
+
+    fn submit_tenant(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>, tenant: Option<&str>)
+                     -> Result<Submission> {
+        let t = self.tenants.intern(tenant);
+        // per-tenant degradation at admit-pause or worse bounces THIS
+        // tenant's new work while every other tenant keeps submitting
+        if self
+            .tenant_ladders
+            .get(&t)
+            .map(|l| l.rung() >= Rung::AdmitPause)
+            .unwrap_or(false)
+        {
+            return Ok(Submission::Busy { retry_after_steps: 8 });
+        }
+        // token-bucket admission runs in FRONT of the SLO queue-cap check:
+        // a flooding tenant is throttled before it can fill the queue (the
+        // default tenant's bucket is unlimited, so untagged submissions
+        // never see this)
+        if !self.tenants.admit(t, self.step_no) {
+            return Ok(Submission::Busy {
+                retry_after_steps: self.tenants.retry_hint(t, self.step_no),
+            });
+        }
         if self.queue_cap > 0 && self.wait_queue.len() >= self.queue_cap {
             return Ok(Submission::Busy {
                 retry_after_steps: self
@@ -1004,6 +1225,7 @@ impl SchedBackend for MockSched {
             steps: 0,
             rng: None,
             enq_step: self.step_no,
+            tenant: t,
         };
         if self.wait_queue.is_empty()
             && self.has_free_slot()
@@ -1046,6 +1268,7 @@ impl SchedBackend for MockSched {
 
     fn step_ex(&mut self) -> Result<StepReport> {
         self.step_no += 1;
+        self.miss_tenants.clear();
         let mut report = StepReport { step: self.step_no, ..Default::default() };
         let (admitted, forced, evicted, missed) = self.fill_slots();
         report.admitted = admitted;
@@ -1140,7 +1363,16 @@ impl SchedBackend for MockSched {
             if seq.prefill_left > 0 {
                 continue;
             }
-            let k = (1 + seq.rng.below(width))
+            let draw = 1 + seq.rng.below(width);
+            // per-tenant no-spec: a degraded tenant decodes plain — one
+            // token per round — while its co-tenants keep full speculation;
+            // the RNG draw still happens so recovery replays identically
+            let nospec = self
+                .tenant_ladders
+                .get(&seq.tenant)
+                .map(|l| l.rung() >= Rung::NoSpec)
+                .unwrap_or(false);
+            let k = (if nospec { 1 } else { draw })
                 .min(seq.max_new - seq.produced.len());
             let mut delta = TokenDelta { id: seq.id, tokens: Vec::new() };
             for _ in 0..k {
@@ -1183,6 +1415,7 @@ impl SchedBackend for MockSched {
                     seq.class, seq.deadline_step);
                 if miss {
                     report.deadline_missed.push(out.id);
+                    self.miss_tenants.push(seq.tenant);
                 }
                 report.finished.push(out);
             }
@@ -1210,6 +1443,48 @@ impl SchedBackend for MockSched {
                 match self.evict_least_urgent() {
                     Some(id) => report.evicted.push(id),
                     None => break,
+                }
+            }
+        }
+
+        // per-tenant degradation: each configured tenant's pool pressure
+        // (blocks held vs its share cap) plus its deadline misses this
+        // step drive ITS private ladder — an over-budget tenant walks
+        // no-spec → admit-pause alone, before any cluster-wide ladder
+        // (MockCluster's, observed after the workers step) reacts
+        if !self.tenant_ladders.is_empty() {
+            let total = self.pool.total_blocks();
+            let mut held: BTreeMap<u32, usize> = BTreeMap::new();
+            for (b, s) in self.slots.iter().enumerate() {
+                if let Some(seq) = s {
+                    *held.entry(seq.tenant).or_insert(0) +=
+                        self.pool.allocated(b);
+                }
+            }
+            let ids: Vec<u32> = self.tenant_ladders.keys().copied().collect();
+            for t in ids {
+                let share = self.tenants.spec(t).pool_share_pm;
+                let cap = (total * share as usize / 1000).max(1);
+                let util_pm =
+                    (held.get(&t).copied().unwrap_or(0) * 1000 / cap) as u64;
+                let misses = self
+                    .miss_tenants
+                    .iter()
+                    .filter(|&&m| m == t)
+                    .count() as u64;
+                let changed = self
+                    .tenant_ladders
+                    .get_mut(&t)
+                    .expect("laddered tenant")
+                    .observe(util_pm, misses);
+                if let Some((_, to)) = changed {
+                    let tenant = self.tenants.name(t).to_string();
+                    self.events.push(SchedEvent::Tenant {
+                        step: self.step_no,
+                        worker: self.worker_no,
+                        tenant,
+                        rung: to.name(),
+                    });
                 }
             }
         }
@@ -1267,6 +1542,10 @@ pub struct MockCluster {
     faults_applied: usize,
     failovers: usize,
     failed_streams: usize,
+    /// router-level tenant admission: the token buckets charge ONCE, at
+    /// the front door (workers get weights/share caps but unlimited
+    /// buckets, so per-worker copies can't multiply the sustained rate)
+    tenants: TenantTable,
 }
 
 /// Stagnant step-watchdog observations before a wedged worker is condemned
@@ -1360,6 +1639,41 @@ impl MockCluster {
             faults_applied: 0,
             failovers: 0,
             failed_streams: 0,
+            tenants: TenantTable::default(),
+        }
+    }
+
+    /// Install tenant specs cluster-wide. The router keeps the token
+    /// buckets (admission charges once, at the front door); every worker
+    /// gets the weights, pool-share caps, and a private per-tenant ladder —
+    /// with unlimited buckets, so N workers can't multiply a tenant's
+    /// sustained rate by N.
+    pub fn with_tenants(mut self, specs: &[TenantSpec]) -> Self {
+        for spec in specs {
+            self.tenants.configure(spec.clone());
+        }
+        let worker_specs: Vec<TenantSpec> = specs
+            .iter()
+            .map(|s| {
+                let mut s = s.clone();
+                s.bucket = TokenBucket::unlimited();
+                s
+            })
+            .collect();
+        self.workers = self
+            .workers
+            .into_iter()
+            .map(|m| m.with_tenants(&worker_specs))
+            .collect();
+        self
+    }
+
+    /// Router-level bucket ledger `(offered, granted, denied)` for a
+    /// tenant name; zeros for unknown tenants.
+    pub fn tenant_ledger(&self, name: &str) -> (u64, u64, u64) {
+        match self.tenants.id(name) {
+            Some(t) => self.tenants.ledger(t),
+            None => (0, 0, 0),
         }
     }
 
@@ -1538,6 +1852,21 @@ impl MockCluster {
 impl SchedBackend for MockCluster {
     fn submit_tagged(&mut self, prompt: &str, max_new: usize, class: Priority,
                      deadline_steps: Option<u64>) -> Result<Submission> {
+        self.submit_tenant(prompt, max_new, class, deadline_steps, None)
+    }
+
+    fn submit_tenant(&mut self, prompt: &str, max_new: usize, class: Priority,
+                     deadline_steps: Option<u64>, tenant: Option<&str>)
+                     -> Result<Submission> {
+        // router-level token bucket: a flooding tenant is throttled at the
+        // front door, before placement burns any routing work (the default
+        // tenant's bucket is unlimited — untagged traffic never sees this)
+        let t = self.tenants.intern(tenant);
+        if !self.tenants.admit(t, self.step_no) {
+            return Ok(Submission::Busy {
+                retry_after_steps: self.tenants.retry_hint(t, self.step_no),
+            });
+        }
         if self.admit_paused {
             // degradation ladder at admit-pause or shed: bounce new work
             return Ok(Submission::Busy { retry_after_steps: 8 });
@@ -1558,8 +1887,8 @@ impl SchedBackend for MockCluster {
             // to hand the bytes to, so the client sees busy-with-retry
             return Ok(Submission::Busy { retry_after_steps: 8 });
         }
-        let sub = self.workers[w].submit_tagged(prompt, max_new, class,
-                                                deadline_steps)?;
+        let sub = self.workers[w].submit_tenant(prompt, max_new, class,
+                                                deadline_steps, tenant)?;
         self.placements[w] += 1;
         let id = match &sub {
             Submission::Admitted(id) => *id,

@@ -6,7 +6,7 @@
 //! but in-distribution. That substitution (DESIGN.md §2) is what lets the
 //! paper's per-category acceptance-rate structure (Fig 2) reproduce.
 
-use crate::sched::Priority;
+use crate::sched::{Priority, TenantSpec, TokenBucket};
 use crate::util::rng::Rng;
 
 pub const CATEGORIES: [&str; 8] = [
@@ -128,6 +128,8 @@ pub struct TraceEntry {
     pub class: Priority,
     /// relative deadline in scheduler steps; None = the class default
     pub deadline_steps: Option<u64>,
+    /// tenant tag; None = the default tenant (pre-tenant behavior)
+    pub tenant: Option<String>,
 }
 
 /// A recorded trace of timed requests — replayable load for the server
@@ -159,6 +161,7 @@ impl Trace {
                     arrival_step: clock as u64,
                     class: Priority::Interactive,
                     deadline_steps: None,
+                    tenant: None,
                 }
             })
             .collect();
@@ -233,6 +236,7 @@ impl Trace {
                         + c as u64 * CONV_STAGGER_STEPS,
                     class: Priority::Interactive,
                     deadline_steps: Some(512),
+                    tenant: None,
                 });
             }
         }
@@ -250,6 +254,24 @@ impl Trace {
             end += 1;
         }
         &self.entries[taken..end]
+    }
+
+    /// Tag every entry with a tenant name.
+    pub fn tagged(mut self, tenant: &str) -> Trace {
+        for e in &mut self.entries {
+            e.tenant = Some(tenant.to_string());
+        }
+        self
+    }
+
+    /// Merge several traces onto one shared arrival clock. The sort is
+    /// stable, so same-step entries keep input-trace order and the merge is
+    /// deterministic (the `due()` prefix-walk contract holds).
+    pub fn merge(traces: Vec<Trace>) -> Trace {
+        let mut entries: Vec<TraceEntry> =
+            traces.into_iter().flat_map(|t| t.entries).collect();
+        entries.sort_by_key(|e| e.arrival_step);
+        Trace { entries }
     }
 }
 
@@ -436,6 +458,186 @@ impl FaultPlan {
         self.events.iter()
             .filter(|e| matches!(e.kind, FaultKind::StepStall { .. }))
             .count()
+    }
+}
+
+// ----------------------------------------------------- scenario library
+
+/// Names of every library scenario, runnable via
+/// `ctcdraft sim --scenario <name>`.
+pub const SCENARIOS: [&str; 5] =
+    ["diurnal", "agentic", "longctx", "noisy_neighbor", "cancel_storm"];
+
+/// A named, seeded, replayable load shape: the trace plus the tenant
+/// policy and sim knobs it is meant to run under. Each library scenario is
+/// deterministic in `seed` (per-scenario XORed sub-seeds, so scenarios
+/// never share an RNG stream), which is what lets check.sh double-replay
+/// them byte-for-byte.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub name: &'static str,
+    pub trace: Trace,
+    /// tenant specs to install before replay (weights, buckets, pool caps)
+    pub tenants: Vec<TenantSpec>,
+    /// per-request mid-stream cancellation probability for the sim
+    pub cancel_prob: f64,
+}
+
+/// Build a library scenario by name. `None` for unknown names.
+pub fn scenario(name: &str, seed: u64) -> Option<Scenario> {
+    match name {
+        // Diurnal traffic: one web tenant alternating rush-hour bursts
+        // (mean gap 0.8 steps) with quiet troughs (mean gap 5) — the shape
+        // that punishes admission policies tuned to a flat arrival rate.
+        "diurnal" => {
+            let s = seed ^ 0xD158_AA77;
+            let mut rng = Rng::new(s);
+            let qs = mtbench(6, s);
+            let mut clock = 0f64;
+            let entries = qs
+                .into_iter()
+                .enumerate()
+                .map(|(i, q)| {
+                    let mean = if (i / 12) % 2 == 0 { 0.8 } else { 5.0 };
+                    let gap = -(1.0 - rng.f64()).ln() * mean;
+                    clock += gap;
+                    let jitter = (16.0 * (0.5 + rng.f64())) as usize;
+                    TraceEntry {
+                        question: q,
+                        max_new: jitter.max(8),
+                        arrival_step: clock as u64,
+                        class: Priority::Interactive,
+                        deadline_steps: Some(192),
+                        tenant: Some("web".into()),
+                    }
+                })
+                .collect();
+            Some(Scenario {
+                name: "diurnal",
+                trace: Trace { entries },
+                tenants: vec![TenantSpec::open("web")],
+                cancel_prob: 0.0,
+            })
+        }
+        // Agentic loop: one tool-calling tenant firing many short
+        // completions back-to-back, throttled by a modest token bucket —
+        // sustained rate matters here, not burst.
+        "agentic" => {
+            let s = seed ^ 0xA6E4_7100;
+            let mut trace = Trace::poisson_with_rate(
+                gsm8k(60, s), 8, 0.5, s).tagged("agent");
+            for e in &mut trace.entries {
+                e.deadline_steps = Some(96);
+            }
+            Some(Scenario {
+                name: "agentic",
+                trace,
+                tenants: vec![TenantSpec {
+                    name: "agent".into(),
+                    weight: 2,
+                    bucket: TokenBucket::new(8, 2000),
+                    pool_share_pm: 1000,
+                }],
+                cancel_prob: 0.0,
+            })
+        }
+        // Long-context summarization: few, large, batch-class requests
+        // from a pool-capped tenant — the KV-pressure shape.
+        "longctx" => {
+            let s = seed ^ 0x10C0_57E7;
+            let mut rng = Rng::new(s);
+            let qs = mtbench(4, s);
+            let mut clock = 0f64;
+            let entries = qs
+                .chunks(2)
+                .map(|pair| {
+                    let text = pair
+                        .iter()
+                        .map(|q| q.text.as_str())
+                        .collect::<Vec<_>>()
+                        .join(" Then: ");
+                    let gap = -(1.0 - rng.f64()).ln() * 8.0;
+                    clock += gap;
+                    TraceEntry {
+                        question: Question {
+                            category: "extraction",
+                            text: format!("Summarize: {text}"),
+                        },
+                        max_new: 40,
+                        arrival_step: clock as u64,
+                        class: Priority::Batch,
+                        deadline_steps: Some(1024),
+                        tenant: Some("research".into()),
+                    }
+                })
+                .collect();
+            Some(Scenario {
+                name: "longctx",
+                trace: Trace { entries },
+                tenants: vec![TenantSpec {
+                    name: "research".into(),
+                    weight: 1,
+                    bucket: TokenBucket::unlimited(),
+                    pool_share_pm: 700,
+                }],
+                cancel_prob: 0.0,
+            })
+        }
+        // The isolation centerpiece: a flooding batch tenant (tight
+        // bucket, pool cap, weight 1) against a steady interactive victim
+        // (weight 4, unthrottled). The property test and the check.sh gate
+        // assert the victim's miss rate stays bounded.
+        "noisy_neighbor" => {
+            let s = seed ^ 0x4015_EBAD;
+            let mut victim = Trace::poisson_with_rate(
+                mtbench(3, s), 12, 4.0, s).tagged("tenant-a");
+            for e in &mut victim.entries {
+                e.deadline_steps = Some(192);
+            }
+            let mut noisy = Trace::poisson_with_rate(
+                gsm8k(80, s.wrapping_add(1)), 16, 0.25,
+                s.wrapping_add(1)).tagged("noisy");
+            for e in &mut noisy.entries {
+                e.class = Priority::Batch;
+                e.deadline_steps = Some(2048);
+            }
+            Some(Scenario {
+                name: "noisy_neighbor",
+                trace: Trace::merge(vec![victim, noisy]),
+                tenants: vec![
+                    TenantSpec {
+                        name: "tenant-a".into(),
+                        weight: 4,
+                        bucket: TokenBucket::unlimited(),
+                        pool_share_pm: 1000,
+                    },
+                    TenantSpec {
+                        name: "noisy".into(),
+                        weight: 1,
+                        bucket: TokenBucket::new(4, 500),
+                        pool_share_pm: 400,
+                    },
+                ],
+                cancel_prob: 0.0,
+            })
+        }
+        // Adversarial cancellation: an interactive flood where a third of
+        // streams cancel mid-flight — exercises reclamation under churn.
+        "cancel_storm" => {
+            let s = seed ^ 0xCA4C_5702;
+            let mut trace = Trace::poisson_with_rate(
+                mtbench(6, s), 16, 0.75, s).tagged("flashy");
+            for e in &mut trace.entries {
+                e.deadline_steps = Some(128);
+            }
+            Some(Scenario {
+                name: "cancel_storm",
+                trace,
+                tenants: vec![TenantSpec::open("flashy")],
+                cancel_prob: 0.35,
+            })
+        }
+        _ => None,
     }
 }
 
@@ -633,5 +835,59 @@ mod tests {
         let mid = t.entries[t.entries.len() / 2].arrival_step;
         assert!(t.due(0, mid).len() <= t.entries.len());
         assert!(!t.due(0, mid).is_empty());
+    }
+
+    #[test]
+    fn scenario_library_is_named_seeded_and_replayable() {
+        for name in SCENARIOS {
+            let a = scenario(name, 7).expect(name);
+            let b = scenario(name, 7).expect(name);
+            assert_eq!(a.name, name);
+            assert!(!a.trace.entries.is_empty(), "{name}: empty trace");
+            assert!(!a.tenants.is_empty(), "{name}: no tenant policy");
+            // replayable: identical trace + tags from the same seed
+            assert_eq!(a.trace.entries.len(), b.trace.entries.len());
+            assert!(a.trace.entries.iter().zip(&b.trace.entries).all(|(x, y)| {
+                x.arrival_step == y.arrival_step
+                    && x.question.text == y.question.text
+                    && x.max_new == y.max_new
+                    && x.class == y.class
+                    && x.tenant == y.tenant
+            }), "{name}: double build diverged");
+            // arrival-ordered (due() contract), every entry tenant-tagged
+            assert!(a.trace.entries.windows(2)
+                .all(|w| w[0].arrival_step <= w[1].arrival_step),
+                "{name}: arrivals not monotone");
+            assert!(a.trace.entries.iter().all(|e| e.tenant.is_some()),
+                    "{name}: untagged entry");
+            // a different seed moves the schedule
+            let c = scenario(name, 8).expect(name);
+            assert!(a.trace.entries.iter().zip(&c.trace.entries).any(|(x, y)| {
+                x.arrival_step != y.arrival_step
+                    || x.question.text != y.question.text
+            }), "{name}: seed is ignored");
+        }
+        assert!(scenario("no_such_scenario", 7).is_none());
+    }
+
+    #[test]
+    fn noisy_neighbor_pits_a_throttled_flood_against_a_weighted_victim() {
+        let s = scenario("noisy_neighbor", 11).unwrap();
+        assert_eq!(s.tenants.len(), 2);
+        let noisy = s.tenants.iter().find(|t| t.name == "noisy").unwrap();
+        let victim = s.tenants.iter().find(|t| t.name == "tenant-a").unwrap();
+        assert!(!noisy.bucket.is_unlimited(), "flood must be rate-limited");
+        assert!(noisy.pool_share_pm < 1000, "flood must be pool-capped");
+        assert!(victim.bucket.is_unlimited());
+        assert!(victim.weight > noisy.weight);
+        let n_noisy = s.trace.entries.iter()
+            .filter(|e| e.tenant.as_deref() == Some("noisy")).count();
+        let n_victim = s.trace.entries.iter()
+            .filter(|e| e.tenant.as_deref() == Some("tenant-a")).count();
+        assert!(n_noisy >= 3 * n_victim,
+                "flood should dominate offered load: {n_noisy} vs {n_victim}");
+        // cancel_storm is the only canceling scenario in the library
+        assert!(scenario("cancel_storm", 11).unwrap().cancel_prob > 0.0);
+        assert_eq!(s.cancel_prob, 0.0);
     }
 }

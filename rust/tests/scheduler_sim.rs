@@ -288,6 +288,7 @@ fn deadline_misses_are_accounted() {
             arrival_step: 0,
             class: Priority::Interactive,
             deadline_steps: Some(4),
+            tenant: None,
         })
         .collect();
     let trace = Trace { entries };
@@ -321,13 +322,17 @@ fn small_interactive_requests_pass_a_pool_blocked_batch_head() {
     };
     let entries = vec![
         TraceEntry { question: q(80, 'a'), max_new: 12, arrival_step: 0,
-                     class: Priority::Interactive, deadline_steps: Some(500) },
+                     class: Priority::Interactive, deadline_steps: Some(500),
+                     tenant: None },
         TraceEntry { question: q(144, 'b'), max_new: 8, arrival_step: 1,
-                     class: Priority::Batch, deadline_steps: Some(2000) },
+                     class: Priority::Batch, deadline_steps: Some(2000),
+                     tenant: None },
         TraceEntry { question: q(16, 'c'), max_new: 8, arrival_step: 2,
-                     class: Priority::Interactive, deadline_steps: Some(500) },
+                     class: Priority::Interactive, deadline_steps: Some(500),
+                     tenant: None },
         TraceEntry { question: q(16, 'd'), max_new: 8, arrival_step: 3,
-                     class: Priority::Interactive, deadline_steps: Some(500) },
+                     class: Priority::Interactive, deadline_steps: Some(500),
+                     tenant: None },
     ];
     let trace = Trace { entries };
     let run = || {
@@ -890,4 +895,80 @@ fn engine_backed_sim_is_deterministic_with_adaptive_beta() {
     assert_eq!(a.per_request_steps, b.per_request_steps);
     assert!(a.event_log.contains(" beta batch="),
             "adaptive engine runs must log their β plans");
+}
+
+// ---------------------------------------------------------------- scenarios
+
+/// Every library scenario replays byte-for-byte from its seed on both the
+/// single-worker and cluster backends, populates the per-tenant rollups
+/// for every tenant its spec declares, and conserves each tenant's bucket
+/// ledger (granted + denied == offered) — the scenario library is only
+/// useful as a regression surface if all of that is deterministic.
+#[test]
+fn scenario_library_replays_deterministically_with_tenant_rollups() {
+    for name in workload::SCENARIOS {
+        let sc = workload::scenario(name, 7).expect(name);
+        assert_eq!(sc.name, name);
+        assert!(!sc.trace.entries.is_empty(), "{name}: empty trace");
+        assert!(!sc.tenants.is_empty(), "{name}: no tenant specs");
+        let run = |workers: usize| {
+            let sc = workload::scenario(name, 7).expect(name);
+            let sim = SchedulerSim::new(SimOptions {
+                cancel_prob: sc.cancel_prob,
+                seed: 7,
+                ..Default::default()
+            });
+            if workers > 1 {
+                let mut be = MockCluster::new(workers, 4, 8, 256, 7)
+                    .with_tenants(&sc.tenants);
+                sim.run(&mut be, &sc.trace).expect(name)
+            } else {
+                let mut be = MockSched::new(4, 8, 256, 7)
+                    .with_tenants(&sc.tenants);
+                sim.run(&mut be, &sc.trace).expect(name)
+            }
+        };
+        for workers in [1usize, 2] {
+            let a = run(workers);
+            let b = run(workers);
+            assert!(!a.event_log.is_empty(), "{name}/{workers}w: empty log");
+            assert_eq!(a.event_log, b.event_log,
+                       "{name}/{workers}w: scenario replay not byte-stable");
+            assert_eq!(a.deadline_misses, b.deadline_misses);
+            for spec in &sc.tenants {
+                let t = a.tenants.get(&spec.name).unwrap_or_else(|| {
+                    panic!("{name}/{workers}w: no rollup for tenant {}",
+                           spec.name)
+                });
+                assert!(t.submitted > 0,
+                        "{name}/{workers}w: tenant {} never submitted",
+                        spec.name);
+            }
+        }
+    }
+}
+
+/// Tenant-less traces replay byte-identically whether or not the backend
+/// was built through the tenant-aware path — the PR-9 backward-compat
+/// contract: untagged workloads cannot tell the tenant layer exists.
+#[test]
+fn untagged_traces_ignore_the_tenant_layer() {
+    use ctcdraft::sched::TenantSpec;
+    let trace = Trace::poisson_with_rate(workload::mtbench(2, 23), 16, 1.0, 23);
+    let run = |tenants: bool| {
+        let mut be = MockSched::new(2, 4, 4096, 23);
+        if tenants {
+            // configured-but-unused tenants must not perturb the schedule
+            be = be.with_tenants(&[TenantSpec::open("idle")]);
+        }
+        SchedulerSim::new(SimOptions { seed: 23, ..Default::default() })
+            .run(&mut be, &trace)
+            .expect("sim run")
+    };
+    let plain = run(false);
+    let tenanted = run(true);
+    assert_eq!(plain.event_log, tenanted.event_log,
+               "an idle tenant table changed an untagged schedule");
+    assert!(plain.tenants.is_empty(),
+            "untagged trace grew tenant rollups");
 }
