@@ -375,3 +375,83 @@ print("BENCH_scenarios.json: OK (%d scenarios, per-tenant rollups present)"
       % len(results))
 EOF2
 echo "scenario bench smoke: OK"
+
+# Speculation-policy gate: with the drafter portfolio under
+# --spec-policy auto, the mixed spec trace (copy-heavy + chat +
+# rejection-heavy tenants) must (a) double-replay byte-identically on
+# both the single-worker mock and the cluster, (b) record online
+# drafter switches in the canonical log, and (c) demonstrably demote a
+# rejection-heavy sequence all the way to no-speculation (a
+# drafter-switch event landing on to=none). Default-config runs must
+# stay policy-silent: no drafter-switch events, byte-compatible with
+# the pre-portfolio log shape.
+for workers in 1 2; do
+  a="$(./target/release/ctcdraft sim --seed 7 --workers "$workers" --trace spec_mixed --spec-policy auto --drafter-portfolio ctc,lookup,none)"
+  b="$(./target/release/ctcdraft sim --seed 7 --workers "$workers" --trace spec_mixed --spec-policy auto --drafter-portfolio ctc,lookup,none)"
+  if [ "$a" != "$b" ]; then
+    echo "FAIL: --spec-policy auto replay (workers $workers) is nondeterministic" >&2
+    diff <(printf '%s\n' "$a") <(printf '%s\n' "$b") >&2 || true
+    exit 1
+  fi
+  if ! printf '%s\n' "$a" | grep -q " drafter-switch id="; then
+    echo "FAIL: auto policy run (workers $workers) recorded no drafter switches" >&2
+    exit 1
+  fi
+  if ! printf '%s\n' "$a" | grep -q " drafter-switch id=.* to=none"; then
+    echo "FAIL: rejection-heavy tenant never demoted to no-speculation (workers $workers)" >&2
+    printf '%s\n' "$a" | grep " drafter-switch id=" >&2 || true
+    exit 1
+  fi
+done
+if ./target/release/ctcdraft sim --seed 7 --trace spec_mixed | grep -q "drafter-switch"; then
+  echo "FAIL: default (fixed-policy) run emitted drafter-switch events" >&2
+  exit 1
+fi
+echo "spec-policy auto gate: OK (replays byte-identical on 1 + 2 workers, rejection-heavy demotes to none, defaults policy-silent)"
+
+# Portfolio bench: specbench runs spec_mixed once under the auto policy
+# and once pinned to each portfolio member, and leaves a well-formed
+# BENCH_portfolio.json behind. The portfolio-wins invariant — auto
+# matches or beats every single-drafter run on accepted-tokens/step —
+# is the gate on the online selector actually earning its keep.
+rm -f BENCH_portfolio.json
+./target/release/ctcdraft specbench --smoke >/dev/null 2>&1
+test -s BENCH_portfolio.json || {
+  echo "FAIL: BENCH_portfolio.json missing or empty" >&2; exit 1;
+}
+python3 - <<'EOF3'
+import json
+with open("BENCH_portfolio.json") as f:
+    doc = json.load(f)
+assert doc.get("bench") == "portfolio", doc.get("bench")
+assert doc.get("trace") == "spec_mixed", doc.get("trace")
+assert doc.get("portfolio"), "empty portfolio"
+results = doc["results"]
+assert results and results[0]["name"] == "portfolio(auto)", \
+    [r["name"] for r in results]
+singles = [r for r in results[1:]]
+assert singles, "no single-drafter baselines"
+assert [r["name"] for r in singles] == \
+    ["single(%s)" % k for k in doc["portfolio"]], \
+    [r["name"] for r in singles]
+for r in results:
+    for key in ("name", "mode", "kinds", "steps", "finished", "tokens",
+                "accepted_tokens_per_step", "switches"):
+        assert key in r, f"{r.get('name')}: missing {key}"
+    assert r["finished"] > 0, f"{r['name']}: nothing finished"
+    assert r["steps"] > 0, f"{r['name']}: zero steps"
+auto = results[0]
+assert auto["mode"] == "auto", auto["mode"]
+assert auto["switches"] > 0, "auto policy never switched drafters"
+for r in singles:
+    assert r["mode"] == "fixed", (r["name"], r["mode"])
+    assert r["switches"] == 0, (r["name"], r["switches"])
+best = max(r["accepted_tokens_per_step"] for r in singles)
+assert auto["accepted_tokens_per_step"] >= best - 1e-9, (
+    "portfolio loses to a single drafter: auto=%.3f best_single=%.3f"
+    % (auto["accepted_tokens_per_step"], best))
+print("BENCH_portfolio.json: OK (auto %.3f acc-tok/step >= best single "
+      "%.3f, %d switches)"
+      % (auto["accepted_tokens_per_step"], best, auto["switches"]))
+EOF3
+echo "portfolio bench gate: OK"

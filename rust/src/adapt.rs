@@ -15,8 +15,19 @@
 //! no clocks, no RNG — so scheduler replays with `--beta-policy adaptive`
 //! stay byte-for-byte deterministic (the chosen plan is additionally
 //! recorded in the scheduler event log whenever it changes).
+//!
+//! `SpecPolicy` (PR 10) extends the controller into a per-slot drafter
+//! portfolio policy: each sequence carries a `SpecState` with per-drafter
+//! acceptance EWMAs, and under `--spec-policy auto` the policy re-selects
+//! the slot's drafter online (score = acceptance EWMA − draft cost, with
+//! dwell + hysteresis so one noisy round cannot thrash the choice). Like
+//! the β controller it is pure arithmetic on observed counts, so drafter
+//! switches replay byte-for-byte and are logged as `DrafterSwitch` sched
+//! events.
 
 use anyhow::{bail, Result};
+
+use crate::drafters::DrafterKind;
 
 /// Which β policy the engine runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -167,6 +178,291 @@ impl BetaController {
     }
 }
 
+// ================================================================ SpecPolicy
+/// How the per-slot drafter choice is made.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpecMode {
+    /// Every slot runs the portfolio's primary drafter (the engine-config
+    /// method) — byte-for-byte today's behavior.
+    Fixed,
+    /// Per-slot online selection from the acceptance EWMAs (see
+    /// `SpecPolicy::observe`).
+    Auto,
+    /// Speculation off: every slot plain-decodes (`DrafterKind::None`).
+    Off,
+}
+
+impl SpecMode {
+    pub fn parse(s: &str) -> Result<SpecMode> {
+        Ok(match s {
+            "fixed" => SpecMode::Fixed,
+            "auto" => SpecMode::Auto,
+            "off" => SpecMode::Off,
+            other => bail!("unknown spec policy '{other}' (fixed|auto|off)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpecMode::Fixed => "fixed",
+            SpecMode::Auto => "auto",
+            SpecMode::Off => "off",
+        }
+    }
+}
+
+/// Rounds a slot must dwell on its current drafter before the policy may
+/// switch it again — one switch per dwell window bounds thrash.
+pub const SPEC_MIN_DWELL: u32 = 6;
+
+/// A challenger must beat the incumbent's score by this margin (accepted
+/// tokens/round) to take the slot — hysteresis against EWMA noise.
+pub const SPEC_HYST: f64 = 0.1;
+
+/// Per-slot EWMA smoothing — faster than the global `EWMA_ALPHA` so the
+/// choice adapts within one sequence's lifetime.
+const SLOT_ALPHA: f64 = 0.2;
+
+/// Per-sequence speculation state: the slot's current drafter, per-drafter
+/// acceptance evidence, and the dwell counter. Fixed-size (indexed by
+/// `DrafterKind`) so it lives inline in the slot with zero allocation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpecState {
+    cur: DrafterKind,
+    /// per-kind EWMA of accepted tokens per round; untried speculative
+    /// kinds start optimistic (≈ base_len + 1) so each gets explored
+    ewma: [f64; DrafterKind::COUNT],
+    dwell: u32,
+    /// per-request drafter pin (wire `drafter` field)
+    pinned: Option<DrafterKind>,
+    /// per-request mode override (wire `spec` field: auto | off)
+    mode: Option<SpecMode>,
+}
+
+impl SpecState {
+    /// The kind the online selector currently favors (pre pin/off/force
+    /// overrides — see `SpecPolicy::resolve`).
+    pub fn current(&self) -> DrafterKind {
+        self.cur
+    }
+
+    pub fn pinned(&self) -> Option<DrafterKind> {
+        self.pinned
+    }
+
+    pub fn mode_override(&self) -> Option<SpecMode> {
+        self.mode
+    }
+
+    /// Acceptance EWMA for one kind (tests / gauges).
+    pub fn kind_ewma(&self, k: DrafterKind) -> f64 {
+        self.ewma[k.idx()]
+    }
+}
+
+/// The drafter-portfolio policy: owns the β controller plus the portfolio
+/// composition, per-kind global acceptance telemetry, and the per-slot
+/// selection rule. Pure arithmetic on observed counts — no clocks, no RNG
+/// — so `MockSched`/`MockCluster` run the identical object and sim replays
+/// stay byte-stable.
+#[derive(Debug, Clone)]
+pub struct SpecPolicy {
+    beta: BetaController,
+    mode: SpecMode,
+    /// portfolio composition; `kinds[0]` is the primary (engine-config
+    /// method) and the Fixed-mode choice
+    kinds: Vec<DrafterKind>,
+    primary: DrafterKind,
+    /// optimistic EWMA start for untried speculative kinds
+    optimistic: f64,
+    /// global per-kind telemetry (sched.spec.* gauges)
+    kind_rounds: [u64; DrafterKind::COUNT],
+    kind_accepted: [u64; DrafterKind::COUNT],
+    kind_ewma: [f64; DrafterKind::COUNT],
+    switches: u64,
+}
+
+impl SpecPolicy {
+    /// `kinds[0]` must be the primary drafter (the engine-config method);
+    /// an empty portfolio degenerates to plain decode.
+    pub fn new(beta: BetaController, mode: SpecMode,
+               kinds: Vec<DrafterKind>) -> SpecPolicy {
+        let primary = kinds.first().copied().unwrap_or(DrafterKind::None);
+        let optimistic = (beta.base_len + 1) as f64;
+        let mut kind_ewma = [1.0; DrafterKind::COUNT];
+        for &k in &kinds {
+            if k.is_speculative() {
+                kind_ewma[k.idx()] = optimistic;
+            }
+        }
+        SpecPolicy {
+            beta,
+            mode,
+            kinds,
+            primary,
+            optimistic,
+            kind_rounds: [0; DrafterKind::COUNT],
+            kind_accepted: [0; DrafterKind::COUNT],
+            kind_ewma,
+            switches: 0,
+        }
+    }
+
+    pub fn mode(&self) -> SpecMode {
+        self.mode
+    }
+
+    pub fn kinds(&self) -> &[DrafterKind] {
+        &self.kinds
+    }
+
+    pub fn primary(&self) -> DrafterKind {
+        self.primary
+    }
+
+    pub fn contains(&self, k: DrafterKind) -> bool {
+        k == DrafterKind::None || self.kinds.contains(&k)
+    }
+
+    /// Re-point the selection domain at a new portfolio composition
+    /// (engine `set_method`): primary and kinds change, β evidence and
+    /// per-kind telemetry are kept — matching the old behavior where a
+    /// method swap rebuilt the drafter but not the controller.
+    pub fn set_portfolio(&mut self, kinds: Vec<DrafterKind>) {
+        self.primary = kinds.first().copied().unwrap_or(DrafterKind::None);
+        self.kinds = kinds;
+    }
+
+    // β-controller delegation — existing call sites keep working.
+    pub fn policy(&self) -> BetaPolicy {
+        self.beta.policy()
+    }
+
+    pub fn plan(&self, batch: usize) -> DraftPlan {
+        self.beta.plan(batch)
+    }
+
+    pub fn force_plain(&mut self, on: bool) {
+        self.beta.force_plain(on);
+    }
+
+    pub fn is_forced_plain(&self) -> bool {
+        self.beta.is_forced_plain()
+    }
+
+    pub fn ewma_accept(&self) -> f64 {
+        self.beta.ewma_accept()
+    }
+
+    /// Fresh per-slot state for an admitted sequence. `pinned`/`mode` are
+    /// the request's wire overrides (None = engine defaults).
+    pub fn new_state(&self, pinned: Option<DrafterKind>,
+                     mode: Option<SpecMode>) -> SpecState {
+        let mut ewma = [1.0; DrafterKind::COUNT];
+        for &k in &self.kinds {
+            if k.is_speculative() {
+                ewma[k.idx()] = self.optimistic;
+            }
+        }
+        SpecState {
+            cur: pinned.unwrap_or(self.primary),
+            ewma,
+            dwell: 0,
+            pinned,
+            mode,
+        }
+    }
+
+    fn effective_mode(&self, state: &SpecState) -> SpecMode {
+        state.mode.unwrap_or(self.mode)
+    }
+
+    /// score = how many tokens/round the kind is worth net of its draft
+    /// cost; higher wins the slot
+    fn score(&self, state: &SpecState, k: DrafterKind) -> f64 {
+        state.ewma[k.idx()] - k.draft_cost()
+    }
+
+    /// The drafter this slot runs THIS round, after every override:
+    /// degradation-ladder force-plain and mode `off` shed all speculation,
+    /// a wire pin wins over learning, `fixed` always runs the primary.
+    pub fn resolve(&self, state: &SpecState) -> DrafterKind {
+        if self.beta.is_forced_plain() {
+            return DrafterKind::None;
+        }
+        match self.effective_mode(state) {
+            SpecMode::Off => DrafterKind::None,
+            SpecMode::Fixed => state.pinned.unwrap_or(self.primary),
+            SpecMode::Auto => state.pinned.unwrap_or(state.cur),
+        }
+    }
+
+    /// Record one sequence's accepted-token count for a decode round
+    /// (feeds the global β EWMA too) and, under `auto`, re-select the
+    /// slot's drafter. Returns `Some((from, to))` when the slot switched —
+    /// the caller logs it as a `DrafterSwitch` sched event.
+    pub fn observe(&mut self, state: &mut SpecState,
+                   accepted: usize) -> Option<(DrafterKind, DrafterKind)> {
+        self.beta.observe(accepted);
+        let ran = self.resolve(state);
+        let i = ran.idx();
+        state.ewma[i] =
+            (1.0 - SLOT_ALPHA) * state.ewma[i] + SLOT_ALPHA * accepted as f64;
+        self.kind_rounds[i] += 1;
+        self.kind_accepted[i] += accepted as u64;
+        self.kind_ewma[i] = (1.0 - EWMA_ALPHA) * self.kind_ewma[i]
+            + EWMA_ALPHA * accepted as f64;
+        state.dwell = state.dwell.saturating_add(1);
+        if self.effective_mode(state) != SpecMode::Auto
+            || state.pinned.is_some()
+            || self.beta.is_forced_plain()
+            || state.dwell < SPEC_MIN_DWELL
+        {
+            return None;
+        }
+        let cur_score = self.score(state, state.cur);
+        let mut best = state.cur;
+        let mut best_score = cur_score;
+        for &k in &self.kinds {
+            if k == state.cur {
+                continue;
+            }
+            let s = self.score(state, k);
+            // strict > keeps ties on the earlier (portfolio-order) kind —
+            // total and deterministic
+            if s > best_score {
+                best = k;
+                best_score = s;
+            }
+        }
+        if best != state.cur && best_score > cur_score + SPEC_HYST {
+            let from = state.cur;
+            state.cur = best;
+            state.dwell = 0;
+            self.switches += 1;
+            return Some((from, best));
+        }
+        None
+    }
+
+    // Telemetry for the sched.spec.* gauges.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    pub fn kind_rounds(&self, k: DrafterKind) -> u64 {
+        self.kind_rounds[k.idx()]
+    }
+
+    pub fn kind_accepted(&self, k: DrafterKind) -> u64 {
+        self.kind_accepted[k.idx()]
+    }
+
+    pub fn kind_ewma(&self, k: DrafterKind) -> f64 {
+        self.kind_ewma[k.idx()]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -269,5 +565,141 @@ mod tests {
             plans
         };
         assert_eq!(run(), run());
+    }
+
+    // ------------------------------------------------------- SpecPolicy
+    fn auto_policy() -> SpecPolicy {
+        SpecPolicy::new(
+            BetaController::new(BetaPolicy::Fixed, 16, 32, 6),
+            SpecMode::Auto,
+            vec![DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::None],
+        )
+    }
+
+    #[test]
+    fn spec_mode_parse_roundtrip() {
+        for m in [SpecMode::Fixed, SpecMode::Auto, SpecMode::Off] {
+            assert_eq!(SpecMode::parse(m.name()).unwrap(), m);
+        }
+        assert!(SpecMode::parse("adaptive").is_err());
+    }
+
+    #[test]
+    fn fixed_mode_never_switches_and_resolves_primary() {
+        let mut p = SpecPolicy::new(
+            BetaController::new(BetaPolicy::Fixed, 16, 32, 6),
+            SpecMode::Fixed,
+            vec![DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::None],
+        );
+        let mut s = p.new_state(None, None);
+        for _ in 0..200 {
+            assert_eq!(p.resolve(&s), DrafterKind::Ctc);
+            assert!(p.observe(&mut s, 0).is_none());
+        }
+        assert_eq!(p.switches(), 0);
+        assert_eq!(p.resolve(&s), DrafterKind::Ctc);
+    }
+
+    #[test]
+    fn rejection_heavy_auto_demotes_to_none() {
+        let mut p = auto_policy();
+        let mut s = p.new_state(None, None);
+        let mut trail = Vec::new();
+        // every drafter only ever yields the mandatory 1 token/round: the
+        // slot must explore, give up on speculation, and settle on None
+        for _ in 0..200 {
+            if let Some(sw) = p.observe(&mut s, 1) {
+                trail.push(sw);
+            }
+        }
+        assert_eq!(p.resolve(&s), DrafterKind::None, "trail: {trail:?}");
+        assert!(trail.last().unwrap().1 == DrafterKind::None);
+        // settled: no switch in the tail of the run
+        let mut tail = 0;
+        for _ in 0..100 {
+            if p.observe(&mut s, 1).is_some() {
+                tail += 1;
+            }
+        }
+        assert_eq!(tail, 0, "None must be terminal under flat rejection");
+    }
+
+    #[test]
+    fn copy_heavy_auto_migrates_to_lookup_and_chat_keeps_ctc() {
+        // copy-heavy: lookup is worth ~4.5 tokens/round, ctc ~2.5
+        let mut p = auto_policy();
+        let mut s = p.new_state(None, None);
+        for _ in 0..200 {
+            let accepted =
+                if p.resolve(&s) == DrafterKind::Lookup { 4 } else { 2 };
+            p.observe(&mut s, accepted);
+        }
+        assert_eq!(p.resolve(&s), DrafterKind::Lookup);
+
+        // chat: ctc is worth ~2.5, lookup ~1 — the slot must come home
+        let mut p = auto_policy();
+        let mut s = p.new_state(None, None);
+        for _ in 0..200 {
+            let accepted =
+                if p.resolve(&s) == DrafterKind::Ctc { 3 } else { 1 };
+            p.observe(&mut s, accepted);
+        }
+        assert_eq!(p.resolve(&s), DrafterKind::Ctc);
+    }
+
+    #[test]
+    fn dwell_bounds_switch_rate() {
+        let mut p = auto_policy();
+        let mut s = p.new_state(None, None);
+        let rounds = 300u32;
+        for i in 0..rounds {
+            // adversarial alternating evidence tries to thrash the choice
+            p.observe(&mut s, if i % 2 == 0 { 6 } else { 0 });
+        }
+        assert!(p.switches() <= (rounds / SPEC_MIN_DWELL) as u64,
+                "switches {} exceed one per dwell window", p.switches());
+    }
+
+    #[test]
+    fn pin_and_off_overrides_win() {
+        let mut p = auto_policy();
+        let mut pinned = p.new_state(Some(DrafterKind::Lookup), None);
+        for _ in 0..100 {
+            assert_eq!(p.resolve(&pinned), DrafterKind::Lookup);
+            assert!(p.observe(&mut pinned, 0).is_none(),
+                    "a pinned slot never switches");
+        }
+        let mut off = p.new_state(None, Some(SpecMode::Off));
+        assert_eq!(p.resolve(&off), DrafterKind::None);
+        assert!(p.observe(&mut off, 5).is_none());
+        // ladder force-plain sheds speculation for every slot
+        let auto = p.new_state(None, None);
+        p.force_plain(true);
+        assert_eq!(p.resolve(&auto), DrafterKind::None);
+        p.force_plain(false);
+        assert_eq!(p.resolve(&auto), DrafterKind::Ctc);
+    }
+
+    #[test]
+    fn switch_sequences_are_deterministic() {
+        let run = || {
+            let mut p = auto_policy();
+            let mut s = p.new_state(None, None);
+            let mut switches = Vec::new();
+            for i in 0..400usize {
+                let accepted = match p.resolve(&s) {
+                    DrafterKind::Lookup => (i / 60) % 5,
+                    DrafterKind::Ctc => 2,
+                    _ => 1,
+                };
+                if let Some(sw) = p.observe(&mut s, accepted) {
+                    switches.push((i, sw));
+                }
+            }
+            switches
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(!a.is_empty(), "the drive pattern must actually switch");
     }
 }

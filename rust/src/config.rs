@@ -9,7 +9,8 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::adapt::BetaPolicy;
+use crate::adapt::{BetaPolicy, SpecMode};
+use crate::drafters::DrafterKind;
 use crate::sched::SloPolicy;
 use crate::util::json::{parse, Json};
 
@@ -277,6 +278,15 @@ pub struct EngineConfig {
     /// `adaptive` = per-round width/depth from batch size + acceptance
     /// EWMA (see `adapt::BetaController`).
     pub beta_policy: BetaPolicy,
+    /// Drafter portfolio available to the speculation policy, in
+    /// preference order. Empty = single-drafter portfolio derived from
+    /// `method` (today's behavior, byte-for-byte).
+    pub drafter_portfolio: Vec<DrafterKind>,
+    /// Per-slot speculation policy: `fixed` pins every slot to the
+    /// portfolio's primary drafter (default, byte-compatible), `auto`
+    /// re-selects per slot from the acceptance EWMA with hysteresis,
+    /// `off` disables speculation entirely (see `adapt::SpecPolicy`).
+    pub spec_mode: SpecMode,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -322,6 +332,8 @@ impl Default for EngineConfig {
             queue_cap: 0,
             slo: SloPolicy::default(),
             beta_policy: BetaPolicy::Fixed,
+            drafter_portfolio: Vec::new(),
+            spec_mode: SpecMode::Fixed,
         }
     }
 }

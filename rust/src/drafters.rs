@@ -1,24 +1,44 @@
-//! Draft-model frontends: CTC-drafter plus the Medusa / Hydra / vanilla
-//! baselines, behind one `Drafter` trait the engine drives.
+//! Draft-model frontends: the drafter **portfolio** — CTC drafter, the
+//! near-free n-gram/prompt-lookup drafter, and the Medusa / Hydra /
+//! vanilla baselines — behind one `Drafter` trait the engine drives
+//! per-slot.
 //!
-//! Each drafter turns the AOT draft-graph outputs into a set of candidate
-//! continuation paths (tokens *after* the current base token) with scores;
-//! the engine merges them into a token tree and verifies in one base-model
-//! pass. Timing of graph execution vs host-side transform is reported
-//! separately so Fig-3's breakdown can be reproduced.
+//! Each drafter turns its inputs into a set of candidate continuation
+//! paths (tokens *after* the current base token) with scores; the engine
+//! merges them into a token tree and verifies in one base-model pass.
+//! Timing of graph execution vs host-side transform is reported separately
+//! so Fig-3's breakdown can be reproduced.
 //!
-//! Hot-path contract (PR 3): drafters read per-sequence state through the
-//! borrowing `DraftSource` view (no hidden-window clones) and write
-//! candidates into caller-owned `PathSet` arenas, so the steady-state
-//! draft→transform stage performs no heap allocation on the default CTC
-//! path (the XLA tensor/literal boundary is the documented exception). The
-//! per-round tree width/depth comes in as a `DraftPlan` from the engine's
-//! `adapt::BetaController`.
+//! ## Portfolio contract (PR 10)
+//!
+//! A worker constructs one `Portfolio` (a `DrafterKind → Box<dyn Drafter>`
+//! registry) at startup; the drafter for a slot is then a *scheduled,
+//! per-sequence* choice made every round by `adapt::SpecPolicy` from the
+//! slot's per-kind acceptance EWMAs. Selection is score-based
+//! (`EWMA − draft_cost`) with a dwell floor (`adapt::SPEC_MIN_DWELL`
+//! rounds between switches) and a hysteresis margin (`adapt::SPEC_HYST`
+//! accepted-tokens/round) so one noisy round cannot thrash the choice; a
+//! rejection-heavy slot demotes to `DrafterKind::None` (plain decode) and
+//! stops paying draft cost, a copy-heavy slot escapes CTC latency via the
+//! lookup drafter. Every switch is logged as a `DrafterSwitch` sched
+//! event, so replays stay byte-deterministic.
+//!
+//! ## `Drafter::draft` hot-path contract
+//!
+//! The **caller** clears all per-slot `PathSet` arenas before dispatch and
+//! hands each drafter a `DraftSource` masked to the slots assigned to it
+//! (`KindMaskedSource`); a drafter must write **only** slots where
+//! `src.ctx(i)` is `Some`, leave other slots untouched (another portfolio
+//! member may have filled them), leave each written set sorted by score
+//! descending, and perform **no heap allocation in steady state** on the
+//! default paths (the XLA tensor/literal boundary is the documented
+//! exception; Medusa/Hydra baselines are exempt). Per-round width/depth
+//! arrives as a `DraftPlan` from the engine's β controller.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::adapt::DraftPlan;
-use crate::config::EngineConfig;
+use crate::config::{EngineConfig, Method};
 use crate::ctc;
 use crate::runtime::tensor::Tensor;
 use crate::runtime::Runtime;
@@ -158,35 +178,40 @@ pub struct DraftCtx<'a> {
     /// hidden state of the newest accepted token `[D]`
     pub last_hidden: &'a [f32],
     pub base_token: i32,
+    /// prompt token ids (lookup drafter's copy source)
+    pub prompt: &'a [i32],
+    /// generated history so far, newest (= `base_token`) last
+    pub gen: &'a [i32],
 }
 
 /// Borrowing view over the decode batch: `batch()` is the padded graph
 /// batch size, `ctx(i)` is None for inactive/mid-prefill slots. Implemented
-/// by the engine over its slot array and by owned test fixtures.
+/// by the engine over its slot array and by borrowing test fixtures.
 pub trait DraftSource {
     fn batch(&self) -> usize;
     fn ctx(&self, slot: usize) -> Option<DraftCtx<'_>>;
 }
 
-/// Owned context (tests and harnesses that have no engine slots).
-pub struct OwnedDraftCtx {
-    pub hidden_window: Vec<f32>,
-    pub win_len: usize,
-    pub last_hidden: Vec<f32>,
-    pub base_token: i32,
+/// `DraftSource` filtered to the slots the per-slot policy assigned to one
+/// portfolio member: `ctx(i)` is `Some` only where `kinds[i] == want`, so
+/// each drafter in the dispatch loop sees exactly its own slots and the
+/// others' `PathSet`s stay untouched.
+pub struct KindMaskedSource<'a> {
+    pub inner: &'a dyn DraftSource,
+    pub kinds: &'a [DrafterKind],
+    pub want: DrafterKind,
 }
 
-impl DraftSource for [Option<OwnedDraftCtx>] {
+impl DraftSource for KindMaskedSource<'_> {
     fn batch(&self) -> usize {
-        self.len()
+        self.inner.batch()
     }
     fn ctx(&self, slot: usize) -> Option<DraftCtx<'_>> {
-        self[slot].as_ref().map(|c| DraftCtx {
-            hidden_window: &c.hidden_window,
-            win_len: c.win_len,
-            last_hidden: &c.last_hidden,
-            base_token: c.base_token,
-        })
+        if self.kinds.get(slot).copied() == Some(self.want) {
+            self.inner.ctx(slot)
+        } else {
+            None
+        }
     }
 }
 
@@ -202,23 +227,199 @@ pub struct DraftTiming {
 pub trait Drafter {
     fn name(&self) -> &'static str;
 
-    /// Produce candidate paths for each slot of `src` into `out[slot]`
-    /// (one `PathSet` per slot; the callee clears each and leaves it sorted
-    /// by score descending — empty for inactive slots / vanilla). `plan`
-    /// carries the β-controller's per-round width/depth budget.
+    /// Produce candidate paths into `out[slot]` for every slot of `src`
+    /// with a `Some` ctx. Contract (see module header): the caller has
+    /// already cleared every `PathSet`; write only your own (ctx-present)
+    /// slots, leave them sorted by score descending, and allocate nothing
+    /// in steady state. `plan` carries the β-controller's per-round
+    /// width/depth budget.
     fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
              plan: DraftPlan, timing: &mut DraftTiming,
              out: &mut [PathSet]) -> Result<()>;
 }
 
-pub fn make_drafter(cfg: &EngineConfig) -> Box<dyn Drafter> {
-    use crate::config::Method::*;
-    match cfg.method {
-        Vanilla => Box::new(VanillaDrafter),
-        Ctc => Box::new(CtcDrafter::new(cfg.slot_topk, cfg.ctc_transform)),
-        Medusa => Box::new(MedusaDrafter { head_topk: cfg.slot_topk }),
-        Hydra => Box::new(HydraDrafter),
+// ============================================================== DrafterKind
+/// Every drafter the portfolio can schedule. `None` is policy-only: no
+/// `Drafter` object exists for it — the engine simply leaves the slot's
+/// `PathSet` empty, which the verify path treats as plain decode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DrafterKind {
+    Ctc,
+    Lookup,
+    Vanilla,
+    Medusa,
+    Hydra,
+    None,
+}
+
+impl DrafterKind {
+    pub const COUNT: usize = 6;
+    pub const ALL: [DrafterKind; DrafterKind::COUNT] = [
+        DrafterKind::Ctc,
+        DrafterKind::Lookup,
+        DrafterKind::Vanilla,
+        DrafterKind::Medusa,
+        DrafterKind::Hydra,
+        DrafterKind::None,
+    ];
+
+    /// Dense index for per-kind state arrays.
+    pub fn idx(self) -> usize {
+        self as usize
     }
+
+    pub fn parse(s: &str) -> Result<DrafterKind> {
+        Ok(match s {
+            "ctc" => DrafterKind::Ctc,
+            "lookup" => DrafterKind::Lookup,
+            "vanilla" => DrafterKind::Vanilla,
+            "medusa" => DrafterKind::Medusa,
+            "hydra" => DrafterKind::Hydra,
+            "none" => DrafterKind::None,
+            other => bail!(
+                "unknown drafter '{other}' (ctc|lookup|vanilla|medusa|hydra|none)"
+            ),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DrafterKind::Ctc => "ctc",
+            DrafterKind::Lookup => "lookup",
+            DrafterKind::Vanilla => "vanilla",
+            DrafterKind::Medusa => "medusa",
+            DrafterKind::Hydra => "hydra",
+            DrafterKind::None => "none",
+        }
+    }
+
+    /// The kind the engine-config `Method` maps to (portfolio primary).
+    pub fn from_method(m: Method) -> DrafterKind {
+        match m {
+            Method::Vanilla => DrafterKind::Vanilla,
+            Method::Ctc => DrafterKind::Ctc,
+            Method::Medusa => DrafterKind::Medusa,
+            Method::Hydra => DrafterKind::Hydra,
+        }
+    }
+
+    /// Per-round draft overhead in accepted-token units — what a kind must
+    /// earn above plain decode before it is worth scheduling. Model-backed
+    /// drafters pay a graph execution (~half a token of round budget); the
+    /// lookup drafter is a host-side scan (near-free, but kept strictly
+    /// above `adapt::SPEC_HYST` so a slot whose lookups stop paying off
+    /// still demotes to `None`); vanilla/none draft nothing.
+    pub fn draft_cost(self) -> f64 {
+        match self {
+            DrafterKind::Ctc | DrafterKind::Medusa | DrafterKind::Hydra => 0.5,
+            DrafterKind::Lookup => 0.15,
+            DrafterKind::Vanilla | DrafterKind::None => 0.0,
+        }
+    }
+
+    /// Whether the kind actually proposes candidate paths (false for the
+    /// plain-decode kinds, whose acceptance is always exactly 1).
+    pub fn is_speculative(self) -> bool {
+        !matches!(self, DrafterKind::Vanilla | DrafterKind::None)
+    }
+}
+
+// ================================================================ Portfolio
+/// The worker's drafter registry: one instance per registered kind,
+/// constructed once at engine startup. Dispatch iterates `entry_mut` with
+/// a `KindMaskedSource` per member; `DrafterKind::None` participates in
+/// selection but owns no entry.
+pub struct Portfolio {
+    entries: Vec<(DrafterKind, Box<dyn Drafter>)>,
+    kinds: Vec<DrafterKind>,
+    primary: DrafterKind,
+}
+
+impl Portfolio {
+    /// Build from an ordered kind list; `kinds[0]` is the primary (the
+    /// Fixed-mode choice). Duplicates are dropped, order kept.
+    pub fn from_kinds(cfg: &EngineConfig, kinds: &[DrafterKind]) -> Portfolio {
+        let mut uniq: Vec<DrafterKind> = Vec::new();
+        for &k in kinds {
+            if !uniq.contains(&k) {
+                uniq.push(k);
+            }
+        }
+        if uniq.is_empty() {
+            uniq.push(DrafterKind::None);
+        }
+        let entries = uniq
+            .iter()
+            .filter_map(|&k| Self::instantiate(cfg, k).map(|d| (k, d)))
+            .collect();
+        Portfolio { entries, primary: uniq[0], kinds: uniq }
+    }
+
+    /// Single-member portfolio for the engine-config method — the
+    /// byte-compat default (exactly the pre-portfolio single-drafter
+    /// construction).
+    pub fn single(cfg: &EngineConfig) -> Portfolio {
+        Portfolio::from_kinds(cfg, &[DrafterKind::from_method(cfg.method)])
+    }
+
+    fn instantiate(cfg: &EngineConfig,
+                   kind: DrafterKind) -> Option<Box<dyn Drafter>> {
+        match kind {
+            DrafterKind::Ctc => Some(Box::new(
+                CtcDrafter::new(cfg.slot_topk, cfg.ctc_transform))),
+            DrafterKind::Lookup => Some(Box::new(LookupDrafter::new())),
+            DrafterKind::Vanilla => Some(Box::new(VanillaDrafter)),
+            DrafterKind::Medusa => {
+                Some(Box::new(MedusaDrafter { head_topk: cfg.slot_topk }))
+            }
+            DrafterKind::Hydra => Some(Box::new(HydraDrafter)),
+            DrafterKind::None => None,
+        }
+    }
+
+    /// Registered drafter count (excludes `None`).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entry_mut(&mut self, i: usize) -> (DrafterKind, &mut dyn Drafter) {
+        let (k, d) = &mut self.entries[i];
+        (*k, d.as_mut())
+    }
+
+    /// All member kinds in portfolio order (primary first; includes `None`
+    /// when registered) — the `SpecPolicy` selection domain.
+    pub fn kinds(&self) -> &[DrafterKind] {
+        &self.kinds
+    }
+
+    pub fn primary(&self) -> DrafterKind {
+        self.primary
+    }
+
+    /// Whether a per-request pin on `k` is servable: `None` always is (it
+    /// needs no drafter object), anything else must be registered.
+    pub fn contains(&self, k: DrafterKind) -> bool {
+        k == DrafterKind::None || self.kinds.contains(&k)
+    }
+}
+
+/// Parse a `--drafter-portfolio` comma list (e.g. `"ctc,lookup,none"`).
+pub fn parse_portfolio(s: &str) -> Result<Vec<DrafterKind>> {
+    let kinds = s
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(DrafterKind::parse)
+        .collect::<Result<Vec<_>>>()?;
+    if kinds.is_empty() {
+        bail!("empty drafter portfolio");
+    }
+    Ok(kinds)
 }
 
 // ----------------------------------------------------------------- helpers
@@ -306,7 +507,8 @@ fn pack_hidden(rt: &Runtime, model: &str, src: &dyn DraftSource,
 }
 
 // ================================================================ vanilla
-/// No speculation: the engine decodes one token per step.
+/// No speculation: the engine decodes one token per step. The caller has
+/// already cleared the arenas, so there is nothing to do.
 pub struct VanillaDrafter;
 
 impl Drafter for VanillaDrafter {
@@ -315,10 +517,121 @@ impl Drafter for VanillaDrafter {
     }
     fn draft(&mut self, _rt: &Runtime, _model: &str, _src: &dyn DraftSource,
              _plan: DraftPlan, _timing: &mut DraftTiming,
-             out: &mut [PathSet]) -> Result<()> {
-        for o in out.iter_mut() {
-            o.clear();
+             _out: &mut [PathSet]) -> Result<()> {
+        Ok(())
+    }
+}
+
+// ================================================================= lookup
+/// N-gram prompt-lookup drafter ("Draft & Verify"-style self-speculation):
+/// match the newest `n ≤ ngram_max` tokens of the history (prompt +
+/// generated) against an earlier occurrence and propose the tokens that
+/// followed it. A pure host-side scan — no draft graph, no allocation —
+/// which wins on copy-heavy output (summarization, extraction, quoting)
+/// where the continuation literally appears in the context.
+pub struct LookupDrafter {
+    /// longest suffix n-gram tried first (falls back to shorter matches)
+    pub ngram_max: usize,
+}
+
+impl LookupDrafter {
+    pub fn new() -> LookupDrafter {
+        LookupDrafter { ngram_max: 3 }
+    }
+}
+
+impl Default for LookupDrafter {
+    fn default() -> Self {
+        LookupDrafter::new()
+    }
+}
+
+/// The lookup scan, as a pure function so tests (and the zero-alloc gate)
+/// can drive it without a `Runtime`: treat `prompt ++ gen` as one logical
+/// history, try suffix n-grams longest-first, and for each earlier match
+/// push the continuation into `out` (score = match length, recency breaks
+/// ties; duplicates skipped). Writes at most `max_paths` paths of up to
+/// `max_len` tokens and leaves `out` sorted by score descending. Zero
+/// allocation once `out`'s capacity is warm.
+pub fn lookup_into(prompt: &[i32], gen: &[i32], ngram_max: usize,
+                   max_paths: usize, max_len: usize, out: &mut PathSet) {
+    let lp = prompt.len();
+    let ll = lp + gen.len();
+    let at = |i: usize| if i < lp { prompt[i] } else { gen[i - lp] };
+    if ll < 2 || max_paths == 0 || max_len == 0 {
+        return;
+    }
+    let nmax = ngram_max.min(ll - 1).max(1);
+    'ngram: for n in (1..=nmax).rev() {
+        // suffix = history[ll-n..]; scan match starts newest-first,
+        // excluding the suffix's own position
+        let mut p = ll - n;
+        while p > 0 {
+            p -= 1;
+            let mut hit = true;
+            for j in 0..n {
+                if at(p + j) != at(ll - n + j) {
+                    hit = false;
+                    break;
+                }
+            }
+            if !hit {
+                continue;
+            }
+            let start = p + n;
+            let len = max_len.min(ll - start);
+            if len == 0 {
+                continue;
+            }
+            // skip continuations already proposed by a longer/newer match
+            let mut dup = false;
+            'cand: for e in 0..out.len() {
+                let t = out.tokens(e);
+                if t.len() != len {
+                    continue;
+                }
+                for (j, &tj) in t.iter().enumerate() {
+                    if tj != at(start + j) {
+                        continue 'cand;
+                    }
+                }
+                dup = true;
+                break;
+            }
+            if dup {
+                continue;
+            }
+            // longer matches score higher; among equals, more recent wins
+            let score = n as f32 + p as f32 / (ll as f32 + 1.0);
+            out.push(&[], score);
+            let i = out.len() - 1;
+            for j in 0..len {
+                out.append_token(i, at(start + j));
+            }
+            if out.len() >= max_paths {
+                break 'ngram;
+            }
         }
+    }
+    out.sort_by_score_desc();
+}
+
+impl Drafter for LookupDrafter {
+    fn name(&self) -> &'static str {
+        "lookup"
+    }
+
+    fn draft(&mut self, _rt: &Runtime, _model: &str, src: &dyn DraftSource,
+             plan: DraftPlan, timing: &mut DraftTiming,
+             out: &mut [PathSet]) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        for i in 0..src.batch().min(out.len()) {
+            if let Some(ctx) = src.ctx(i) {
+                lookup_into(ctx.prompt, ctx.gen, self.ngram_max,
+                            plan.max_paths, plan.max_len, &mut out[i]);
+            }
+        }
+        timing.transform_secs += t0.elapsed().as_secs_f64();
         Ok(())
     }
 }
@@ -438,9 +751,6 @@ impl Drafter for CtcDrafter {
     fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
              plan: DraftPlan, timing: &mut DraftTiming,
              out: &mut [PathSet]) -> Result<()> {
-        for o in out.iter_mut() {
-            o.clear();
-        }
         if active_count(src) == 0 {
             return Ok(());
         }
@@ -500,9 +810,6 @@ impl Drafter for MedusaDrafter {
     fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
              plan: DraftPlan, timing: &mut DraftTiming,
              out: &mut [PathSet]) -> Result<()> {
-        for o in out.iter_mut() {
-            o.clear();
-        }
         if active_count(src) == 0 {
             return Ok(());
         }
@@ -575,9 +882,6 @@ impl Drafter for HydraDrafter {
     fn draft(&mut self, rt: &Runtime, model: &str, src: &dyn DraftSource,
              plan: DraftPlan, timing: &mut DraftTiming,
              out: &mut [PathSet]) -> Result<()> {
-        for o in out.iter_mut() {
-            o.clear();
-        }
         if active_count(src) == 0 {
             return Ok(());
         }
@@ -745,21 +1049,239 @@ mod tests {
         assert_eq!(out.iter_sorted().next().unwrap().0, &[2, 0, pad, 1]);
     }
 
+    /// Borrowing test fixture: per-slot owned buffers exposed through the
+    /// one `DraftCtx` path the engine uses.
+    struct FixtureSlot {
+        hidden_window: Vec<f32>,
+        win_len: usize,
+        last_hidden: Vec<f32>,
+        base_token: i32,
+        prompt: Vec<i32>,
+        gen: Vec<i32>,
+    }
+
+    struct FixtureSource {
+        slots: Vec<Option<FixtureSlot>>,
+    }
+
+    impl DraftSource for FixtureSource {
+        fn batch(&self) -> usize {
+            self.slots.len()
+        }
+        fn ctx(&self, slot: usize) -> Option<DraftCtx<'_>> {
+            self.slots[slot].as_ref().map(|c| DraftCtx {
+                hidden_window: &c.hidden_window,
+                win_len: c.win_len,
+                last_hidden: &c.last_hidden,
+                base_token: c.base_token,
+                prompt: &c.prompt,
+                gen: &c.gen,
+            })
+        }
+    }
+
+    fn fixture_slot(base: i32, prompt: &[i32], gen: &[i32]) -> FixtureSlot {
+        FixtureSlot {
+            hidden_window: vec![0.0; 4],
+            win_len: 2,
+            last_hidden: vec![0.0; 2],
+            base_token: base,
+            prompt: prompt.to_vec(),
+            gen: gen.to_vec(),
+        }
+    }
+
     #[test]
-    fn owned_source_exposes_ctxs() {
-        let src: Vec<Option<OwnedDraftCtx>> = vec![
-            None,
-            Some(OwnedDraftCtx {
-                hidden_window: vec![0.0; 4],
-                win_len: 2,
-                last_hidden: vec![0.0; 2],
-                base_token: 5,
-            }),
-        ];
-        let src: &[Option<OwnedDraftCtx>] = &src;
+    fn borrowing_source_exposes_ctxs() {
+        let src = FixtureSource {
+            slots: vec![None, Some(fixture_slot(5, &[1, 2], &[3, 5]))],
+        };
         assert_eq!(src.batch(), 2);
         assert!(src.ctx(0).is_none());
-        assert_eq!(src.ctx(1).unwrap().base_token, 5);
-        assert_eq!(active_count(src), 1);
+        let ctx = src.ctx(1).unwrap();
+        assert_eq!(ctx.base_token, 5);
+        assert_eq!(ctx.prompt, &[1, 2]);
+        assert_eq!(ctx.gen, &[3, 5]);
+        assert_eq!(active_count(&src), 1);
+    }
+
+    #[test]
+    fn kind_masked_source_filters_slots() {
+        let src = FixtureSource {
+            slots: vec![
+                Some(fixture_slot(1, &[1], &[1])),
+                Some(fixture_slot(2, &[2], &[2])),
+                None,
+            ],
+        };
+        let kinds = [DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::Ctc];
+        let masked = KindMaskedSource {
+            inner: &src,
+            kinds: &kinds,
+            want: DrafterKind::Lookup,
+        };
+        assert_eq!(masked.batch(), 3);
+        assert!(masked.ctx(0).is_none(), "slot assigned to ctc is hidden");
+        assert_eq!(masked.ctx(1).unwrap().base_token, 2);
+        assert!(masked.ctx(2).is_none(), "inactive slot stays inactive");
+        assert_eq!(active_count(&masked), 1);
+    }
+
+    #[test]
+    fn drafter_kind_parse_roundtrip_and_indexing() {
+        for (i, k) in DrafterKind::ALL.iter().enumerate() {
+            assert_eq!(DrafterKind::parse(k.name()).unwrap(), *k);
+            assert_eq!(k.idx(), i);
+        }
+        assert!(DrafterKind::parse("ngram").is_err());
+        assert!(DrafterKind::Lookup.draft_cost()
+                    > crate::adapt::SPEC_HYST,
+                "lookup cost must exceed the hysteresis margin or a \
+                 dead-lookup slot can never demote to none");
+        assert!(!DrafterKind::None.is_speculative());
+        assert!(!DrafterKind::Vanilla.is_speculative());
+        assert!(DrafterKind::Ctc.is_speculative());
+    }
+
+    #[test]
+    fn portfolio_registry_dedupes_and_skips_none() {
+        let cfg = EngineConfig::default();
+        let mut p = Portfolio::from_kinds(
+            &cfg,
+            &[DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::Ctc,
+              DrafterKind::None],
+        );
+        assert_eq!(p.kinds(),
+                   &[DrafterKind::Ctc, DrafterKind::Lookup,
+                     DrafterKind::None]);
+        assert_eq!(p.primary(), DrafterKind::Ctc);
+        assert_eq!(p.len(), 2, "None owns no drafter object");
+        assert_eq!(p.entry_mut(0).0, DrafterKind::Ctc);
+        assert_eq!(p.entry_mut(1).0, DrafterKind::Lookup);
+        assert!(p.contains(DrafterKind::Lookup));
+        assert!(p.contains(DrafterKind::None), "None pins always servable");
+        assert!(!p.contains(DrafterKind::Medusa));
+
+        let single = Portfolio::single(&cfg);
+        assert_eq!(single.kinds(), &[DrafterKind::Ctc]);
+        assert_eq!(single.len(), 1);
+
+        assert_eq!(parse_portfolio("ctc, lookup,none").unwrap(),
+                   vec![DrafterKind::Ctc, DrafterKind::Lookup,
+                        DrafterKind::None]);
+        assert!(parse_portfolio("").is_err());
+        assert!(parse_portfolio("ctc,bogus").is_err());
+    }
+
+    #[test]
+    fn lookup_prompt_copy_hit_proposes_the_continuation() {
+        // history: prompt [10 11 12 13 14], gen [10 11] — suffix [10 11]
+        // matches the prompt start, continuation is [12 13 14]
+        let mut out = PathSet::new();
+        lookup_into(&[10, 11, 12, 13, 14], &[10, 11], 3, 4, 3, &mut out);
+        assert!(!out.is_empty(), "copy-heavy history must produce a draft");
+        let (best, score) = out.iter_sorted().next().unwrap();
+        assert_eq!(best, &[12, 13, 14]);
+        assert!(score >= 2.0, "2-gram match scores at least 2: {score}");
+    }
+
+    #[test]
+    fn lookup_prefers_longest_and_most_recent_match() {
+        // suffix [7 8] occurs twice; the most recent occurrence (followed
+        // by 99) must outrank the older one (followed by 50)
+        let hist = [7, 8, 50, 1, 7, 8, 99, 2, 7, 8];
+        let mut out = PathSet::new();
+        lookup_into(&hist, &[], 3, 8, 2, &mut out);
+        let paths: Vec<Vec<i32>> =
+            out.iter_sorted().map(|(t, _)| t.to_vec()).collect();
+        assert_eq!(paths[0][0], 99, "recent match first: {paths:?}");
+        assert!(paths.iter().any(|p| p[0] == 50), "older match still offered");
+    }
+
+    #[test]
+    fn lookup_no_match_leaves_the_slot_empty() {
+        let mut out = PathSet::new();
+        lookup_into(&[1, 2, 3, 4], &[9], 3, 4, 4, &mut out);
+        assert!(out.is_empty(), "no suffix recurrence ⇒ plain decode");
+        // degenerate histories never panic or propose
+        lookup_into(&[], &[], 3, 4, 4, &mut out);
+        assert!(out.is_empty());
+        lookup_into(&[5], &[], 3, 4, 4, &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn lookup_respects_budget_and_dedupes() {
+        // heavily repetitive history: every n-gram recurs many times
+        let hist: Vec<i32> = (0..40).map(|i| i % 4).collect();
+        let mut out = PathSet::new();
+        lookup_into(&hist, &[], 3, 3, 4, &mut out);
+        assert!(out.len() <= 3, "max_paths budget violated: {}", out.len());
+        for i in 0..out.len() {
+            assert!(out.tokens(i).len() <= 4, "max_len budget violated");
+            for j in 0..i {
+                assert_ne!(out.tokens(i), out.tokens(j), "duplicate path");
+            }
+        }
+    }
+
+    #[test]
+    fn lookup_utf8_boundary_bytes_survive_roundtrip() {
+        // byte-level token ids over multi-byte UTF-8: continuations must be
+        // exact byte runs of the history — a draft that split a multi-byte
+        // sequence would corrupt the decoded text on acceptance
+        let text = "héllo wörld — héllo wö";
+        let bytes: Vec<i32> = text.bytes().map(|b| b as i32).collect();
+        let mut out = PathSet::new();
+        lookup_into(&bytes, &[], 3, 4, 6, &mut out);
+        assert!(!out.is_empty(), "repeated multi-byte prefix must match");
+        let hist_bytes: Vec<u8> = bytes.iter().map(|&b| b as u8).collect();
+        let (best, _) = out.iter_sorted().next().unwrap();
+        let cont: Vec<u8> = best.iter().map(|&b| b as u8).collect();
+        // the continuation is a verbatim byte run of the history (no
+        // reordering or interior corruption across code-point boundaries) —
+        assert!(hist_bytes
+                    .windows(cont.len())
+                    .any(|w| w == cont.as_slice()),
+                "continuation is not a verbatim history run");
+        // — and it continues the matched suffix exactly as the text did:
+        // after "wö" comes "rld — ", so the draft starts with "rld "
+        assert_eq!(&cont[..4], b"rld ");
+        // a byte-replay draft may END mid code point (the streaming
+        // detokenizer buffers incomplete tails) but must never contain an
+        // INVALID interior sequence
+        if let Err(e) = std::str::from_utf8(&cont) {
+            assert!(e.error_len().is_none(),
+                    "draft contains invalid (non-tail) UTF-8: {e}");
+        }
+    }
+
+    #[test]
+    fn lookup_drafter_writes_only_masked_slots() {
+        let src = FixtureSource {
+            slots: vec![
+                Some(fixture_slot(11, &[10, 11, 12, 13], &[10, 11])),
+                Some(fixture_slot(11, &[10, 11, 12, 13], &[10, 11])),
+            ],
+        };
+        let kinds = [DrafterKind::Lookup, DrafterKind::Ctc];
+        let masked = KindMaskedSource {
+            inner: &src,
+            kinds: &kinds,
+            want: DrafterKind::Lookup,
+        };
+        let mut out = vec![PathSet::new(), PathSet::new()];
+        let plan = DraftPlan { max_paths: 4, max_len: 2, tree_nodes: 8 };
+        // lookup needs no Runtime: drive the pure helper through the
+        // masked source exactly as the engine dispatch loop does
+        let d = LookupDrafter::new();
+        for i in 0..masked.batch() {
+            if let Some(ctx) = masked.ctx(i) {
+                lookup_into(ctx.prompt, ctx.gen, d.ngram_max,
+                            plan.max_paths, plan.max_len, &mut out[i]);
+            }
+        }
+        assert!(!out[0].is_empty(), "masked-in slot drafted");
+        assert!(out[1].is_empty(), "masked-out slot untouched");
     }
 }

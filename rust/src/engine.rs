@@ -67,10 +67,11 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
+use crate::adapt::{BetaController, BetaPolicy, DraftPlan, SpecMode,
+                   SpecPolicy, SpecState};
 use crate::config::{EngineConfig, Method};
-use crate::drafters::{make_drafter, DraftCtx, DraftSource, DraftTiming,
-                      Drafter, PathSet};
+use crate::drafters::{DraftCtx, DraftSource, DraftTiming, Drafter,
+                      DrafterKind, KindMaskedSource, PathSet, Portfolio};
 use crate::kvcache::{PoolLease, PrefixIndex, SeqCache, NO_NODE};
 use crate::metrics::{DeviceModel, EventLog, Metrics, RunSummary, SchedEvent,
                      StageBreakdown};
@@ -197,6 +198,13 @@ struct QueuedReq {
     enq_step: u64,
     /// interned tenant id (0 = default, never throttled)
     tenant: u32,
+    /// per-request drafter pin (wire `drafter` field)
+    spec_pin: Option<DrafterKind>,
+    /// per-request spec-mode override (wire `spec` field)
+    spec_mode: Option<SpecMode>,
+    /// per-slot speculation state carried across evictions, so a
+    /// re-admitted sequence resumes its learned drafter choice
+    spec: Option<SpecState>,
 }
 
 impl QueuedReq {
@@ -214,6 +222,9 @@ impl QueuedReq {
             rng: None,
             enq_step: step,
             tenant,
+            spec_pin: None,
+            spec_mode: None,
+            spec: None,
         }
     }
 
@@ -261,6 +272,9 @@ struct Seq {
     rng: Rng,
     /// interned tenant id (0 = default)
     tenant: u32,
+    /// per-slot speculation state (drafter choice + per-kind acceptance
+    /// EWMAs) driven by `adapt::SpecPolicy`
+    spec: SpecState,
 }
 
 impl Seq {
@@ -295,6 +309,8 @@ impl DraftSource for SlotSource<'_> {
                 win_len: seq.win_len,
                 last_hidden: &seq.last_hidden,
                 base_token: seq.base_token,
+                prompt: &seq.prompt_ids,
+                gen: &seq.gen_ids,
             })
     }
 }
@@ -344,6 +360,8 @@ struct HotScratch {
     prefill_synced: (usize, usize),
     /// prefilling slot indices in class-aware service order
     prefill_order: Vec<usize>,
+    /// per-slot drafter kind resolved this round (portfolio dispatch mask)
+    kinds: Vec<DrafterKind>,
 }
 
 impl HotScratch {
@@ -370,6 +388,7 @@ impl HotScratch {
             prefill_v: Vec::new(),
             prefill_synced: (usize::MAX, 0),
             prefill_order: Vec::with_capacity(max_slots),
+            kinds: vec![DrafterKind::None; max_slots],
         }
     }
 }
@@ -378,7 +397,10 @@ pub struct Engine {
     rt: Runtime,
     pub cfg: EngineConfig,
     tok: Tokenizer,
-    drafter: Box<dyn Drafter>,
+    /// drafter registry (one instance per portfolio kind, built once);
+    /// per-slot dispatch masks each member to the slots the policy
+    /// assigned it
+    portfolio: Portfolio,
     slots: Vec<Option<Seq>>,
     /// this worker's lease on the (possibly process-wide) KV block pool:
     /// per-slot allocation ledger over `kvcache::SharedBlockPool`. Capacity
@@ -420,9 +442,13 @@ pub struct Engine {
     tenant_ladders: std::collections::BTreeMap<u32, DegradeLadder>,
     /// tenants that missed a deadline THIS step (ladder observe scratch)
     miss_tenants: Vec<u32>,
-    /// β-aware batching controller (ROADMAP: per-step tree width adapted to
-    /// batch size and the acceptance EWMA)
-    beta: BetaController,
+    /// speculation policy: the β-aware batching controller extended with
+    /// the per-slot drafter-portfolio selection (ROADMAP item 4)
+    spec: SpecPolicy,
+    /// whether the spec surface (gauges) is live — true once the config
+    /// is non-default or any request carried a pin/mode override, so
+    /// default-config runs keep a byte-identical metrics surface
+    spec_surfaced: bool,
     /// last emitted β plan (event-log dedupe)
     last_plan: Option<DraftPlan>,
     /// exported verify widths per graph batch size (n > 1, ascending) —
@@ -479,7 +505,15 @@ impl Engine {
             bail!("pool lease covers {} slots but the engine runs {max_slots}",
                   lease.max_slots());
         }
-        let drafter = make_drafter(&cfg);
+        let portfolio_kinds: Vec<DrafterKind> =
+            if cfg.drafter_portfolio.is_empty() {
+                vec![DrafterKind::from_method(cfg.method)]
+            } else {
+                cfg.drafter_portfolio.clone()
+            };
+        let portfolio = Portfolio::from_kinds(&cfg, &portfolio_kinds);
+        let spec_surfaced = cfg.spec_mode != SpecMode::Fixed
+            || !cfg.drafter_portfolio.is_empty();
         let rng = Rng::new(cfg.seed);
         // byte sizes for the device-time model (forces weight load)
         rt.base_weights(&cfg.model)?;
@@ -532,8 +566,12 @@ impl Engine {
             fair: FairQueue::default(),
             tenant_ladders: std::collections::BTreeMap::new(),
             miss_tenants: Vec::new(),
-            beta: BetaController::new(cfg.beta_policy, cfg.max_paths,
-                                      c.tree_n, c.ctc_target_u),
+            spec: SpecPolicy::new(
+                BetaController::new(cfg.beta_policy, cfg.max_paths,
+                                    c.tree_n, c.ctc_target_u),
+                cfg.spec_mode,
+                portfolio.kinds().to_vec()),
+            spec_surfaced,
             last_plan: None,
             verify_ns,
             layers: mcfg.layers,
@@ -548,7 +586,7 @@ impl Engine {
             rt,
             cfg,
             tok,
-            drafter,
+            portfolio,
         })
     }
 
@@ -562,7 +600,15 @@ impl Engine {
     pub fn set_method(&mut self, method: Method, ctc_transform: bool) {
         self.cfg.method = method;
         self.cfg.ctc_transform = ctc_transform;
-        self.drafter = make_drafter(&self.cfg);
+        let kinds: Vec<DrafterKind> = if self.cfg.drafter_portfolio.is_empty() {
+            vec![DrafterKind::from_method(method)]
+        } else {
+            self.cfg.drafter_portfolio.clone()
+        };
+        self.portfolio = Portfolio::from_kinds(&self.cfg, &kinds);
+        // selection domain follows the new method; β evidence is kept (the
+        // old code likewise preserved the controller across method swaps)
+        self.spec.set_portfolio(self.portfolio.kinds().to_vec());
         self.head_weight_bytes = match method {
             Method::Vanilla => 0.0,
             m => {
@@ -707,7 +753,30 @@ impl Engine {
     /// controller returns the single-node plan and the tree verify
     /// degenerates to one next-token check per sequence.
     pub fn set_force_plain(&mut self, on: bool) {
-        self.beta.force_plain(on);
+        self.spec.force_plain(on);
+    }
+
+    /// The speculation policy (portfolio telemetry, per-kind EWMAs).
+    pub fn spec_policy(&self) -> &SpecPolicy {
+        &self.spec
+    }
+
+    /// Whether the speculation surface (gauges, per-slot stats) is live:
+    /// true once the config is non-default or any request carried a
+    /// drafter pin / mode override. Default-config deployments stay
+    /// byte-identical to the pre-portfolio stats shape.
+    pub fn spec_surfaced(&self) -> bool {
+        self.spec_surfaced
+    }
+
+    /// Active sequences with the drafter kind each would run this round
+    /// (after pins/overrides) — the `stats` op's per-slot view.
+    pub fn slot_drafters(&self) -> Vec<(u64, &'static str)> {
+        self.slots
+            .iter()
+            .flatten()
+            .map(|s| (s.id, self.spec.resolve(&s.spec).name()))
+            .collect()
     }
 
     /// Install tenant specs (WFQ weights, token buckets, KV-pool share
@@ -811,6 +880,30 @@ impl Engine {
     pub fn submit_tenant(&mut self, prompt: &str, max_new: usize,
                          class: Priority, deadline_steps: Option<u64>,
                          tenant: Option<&str>) -> Result<Submission> {
+        self.submit_spec(prompt, max_new, class, deadline_steps, tenant,
+                         None, None)
+    }
+
+    /// Full-surface admission: tenant tag plus the per-request speculation
+    /// overrides (wire `drafter` pin and `spec` mode). `None`s make this
+    /// byte-identical to `submit_tenant`. A pin on a kind the portfolio
+    /// cannot serve is an error (the server returns it as a request error).
+    #[allow(clippy::too_many_arguments)]
+    pub fn submit_spec(&mut self, prompt: &str, max_new: usize,
+                       class: Priority, deadline_steps: Option<u64>,
+                       tenant: Option<&str>, drafter: Option<DrafterKind>,
+                       spec: Option<SpecMode>) -> Result<Submission> {
+        if let Some(k) = drafter {
+            if !self.portfolio.contains(k) {
+                bail!("drafter '{}' not in this worker's portfolio",
+                      k.name());
+            }
+        }
+        if drafter.is_some() || spec.is_some() {
+            // per-request overrides light up the spec surface even under a
+            // default config
+            self.spec_surfaced = true;
+        }
         let t = self.tenants.intern(tenant);
         // per-tenant degradation at admit-pause or worse: bounce THIS
         // tenant's new work while co-tenants keep submitting
@@ -858,8 +951,10 @@ impl Engine {
         self.metrics.inc("sched.submitted", 1);
         self.metrics
             .inc(&format!("sched.submitted.{}", class.name()), 1);
-        let req = QueuedReq::fresh(id, ids, max_new, class, deadline_step,
-                                   self.step_no, t);
+        let mut req = QueuedReq::fresh(id, ids, max_new, class, deadline_step,
+                                       self.step_no, t);
+        req.spec_pin = drafter;
+        req.spec_mode = spec;
         // gate on the budget-trimmed prefill length (what admit_req will
         // actually allocate), matching fill_slots
         if self.wait_queue.is_empty()
@@ -970,7 +1065,7 @@ impl Engine {
     /// worker won the race for them. The request is requeued (not failed):
     /// cross-worker contention is a scheduling condition, never an error
     /// that should tear down the step.
-    fn admit_req(&mut self, req: QueuedReq) -> Result<Option<u64>> {
+    fn admit_req(&mut self, mut req: QueuedReq) -> Result<Option<u64>> {
         let slot = self
             .slots
             .iter()
@@ -1046,6 +1141,12 @@ impl Engine {
             Some(r) => r,
             None => self.rng.fork(id),
         };
+        // evicted sequences resume their learned drafter choice; fresh
+        // ones start from the policy default (with any wire overrides)
+        let spec = match req.spec.take() {
+            Some(s) => s,
+            None => self.spec.new_state(req.spec_pin, req.spec_mode),
+        };
         let seq = Seq {
             id,
             prompt_ids: req.prompt_ids,
@@ -1066,6 +1167,7 @@ impl Engine {
             done: false,
             rng,
             tenant: req.tenant,
+            spec,
         };
         self.slots[slot] = Some(seq);
         // new occupant: its cache shares nothing with what the batch
@@ -1283,6 +1385,10 @@ impl Engine {
             rng: Some(seq.rng.clone()),
             enq_step: self.step_no,
             tenant: seq.tenant,
+            spec_pin: seq.spec.pinned(),
+            spec_mode: seq.spec.mode_override(),
+            // carried so re-admission resumes the learned drafter choice
+            spec: Some(seq.spec.clone()),
         };
         self.wait_queue.push(req);
         self.scratch.synced[slot] = 0;
@@ -1603,14 +1709,34 @@ impl Engine {
 
         // --- 1. draft (β plan decides this round's width/depth budget;
         // belt-and-braces: the verify graphs hold at most tree_n nodes)
-        let mut plan = self.beta.plan(n_active);
+        let mut plan = self.spec.plan(n_active);
         plan.tree_nodes = plan.tree_nodes.min(self.tree_n.max(1));
         self.note_beta_plan(n_active, plan);
         let mut timing = DraftTiming::default();
         {
+            // portfolio contract: the ENGINE clears every arena, then each
+            // member drafts only the slots the per-slot policy assigned it
+            // (masked source) — zero allocation, no cross-member clobber
+            let HotScratch { paths, kinds, .. } = &mut self.scratch;
+            for ps in paths[..gb].iter_mut() {
+                ps.clear();
+            }
+            for (b, k) in kinds[..gb].iter_mut().enumerate() {
+                *k = match self.slots.get(b).and_then(|s| s.as_ref()) {
+                    Some(seq) if seq.prefill.is_none() => {
+                        self.spec.resolve(&seq.spec)
+                    }
+                    _ => DrafterKind::None,
+                };
+            }
             let src = SlotSource { slots: &self.slots, gb };
-            self.drafter.draft(&self.rt, &self.cfg.model, &src, plan,
-                               &mut timing, &mut self.scratch.paths[..gb])?;
+            let kinds = &kinds[..gb];
+            for i in 0..self.portfolio.len() {
+                let (want, drafter) = self.portfolio.entry_mut(i);
+                let masked = KindMaskedSource { inner: &src, kinds, want };
+                drafter.draft(&self.rt, &self.cfg.model, &masked, plan,
+                              &mut timing, &mut paths[..gb])?;
+            }
         }
         // per-tenant no-spec (degradation rung `NoSpec` or worse): drop a
         // degraded tenant's drafted candidates so its tree degenerates to
@@ -1660,7 +1786,7 @@ impl Engine {
         }
         let n = if max_nodes <= 1 {
             1 // pure decode round (vanilla, or no usable drafts)
-        } else if self.beta.policy() == BetaPolicy::Fixed {
+        } else if self.spec.policy() == BetaPolicy::Fixed {
             self.tree_n
         } else {
             self.pick_verify_n(gb, max_nodes)
@@ -1790,7 +1916,19 @@ impl Engine {
             }
             report.emitted.push(delta);
             seq.base_token = next_base;
-            self.beta.observe(accepted.len());
+            // feed the acceptance evidence to the policy; under `auto` it
+            // may re-select this slot's drafter — every switch is a
+            // step-stamped event so replays stay byte-deterministic
+            if let Some((from, to)) =
+                self.spec.observe(&mut seq.spec, accepted.len())
+            {
+                self.events.push(SchedEvent::DrafterSwitch {
+                    step: self.step_no,
+                    id: seq.id,
+                    from: from.name(),
+                    to: to.name(),
+                });
+            }
 
             seq.stats.steps += 1;
             seq.stats.new_tokens += accepted.len();
@@ -1973,7 +2111,25 @@ impl Engine {
             .set_gauge("sched.pool_utilization", report.pool_utilization);
         self.metrics.set_gauge("sched.active", self.n_active() as f64);
         self.metrics
-            .set_gauge("sched.beta.ewma_accept", self.beta.ewma_accept());
+            .set_gauge("sched.beta.ewma_accept", self.spec.ewma_accept());
+        // speculation-policy visibility — gated like the tenant gauges, so
+        // default-config runs keep a byte-identical metrics surface
+        if self.spec_surfaced {
+            self.metrics
+                .set_gauge("sched.spec.switches", self.spec.switches() as f64);
+            for &k in self.spec.kinds() {
+                let name = k.name();
+                self.metrics.set_gauge(
+                    &format!("sched.spec.rounds.{name}"),
+                    self.spec.kind_rounds(k) as f64);
+                self.metrics.set_gauge(
+                    &format!("sched.spec.accepted.{name}"),
+                    self.spec.kind_accepted(k) as f64);
+                self.metrics.set_gauge(
+                    &format!("sched.spec.ewma.{name}"),
+                    self.spec.kind_ewma(k));
+            }
+        }
         // shared-pool lease visibility: this worker's shard, its no-steal
         // headroom, and the cluster-wide free/steal counters
         let shared = self.pool.shared();
@@ -2179,6 +2335,7 @@ mod tests {
         assert_eq!(s.synced.len(), 4);
         assert_eq!(s.synced_gb, 0);
         assert!(s.weights.capacity() >= 512);
+        assert_eq!(s.kinds, vec![DrafterKind::None; 4]);
     }
 
     #[test]

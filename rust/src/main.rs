@@ -10,10 +10,11 @@
 
 use anyhow::{bail, Result};
 
-use ctcdraft::adapt::BetaPolicy;
+use ctcdraft::adapt::{BetaPolicy, SpecMode};
 use ctcdraft::bench;
 use ctcdraft::config::{EngineConfig, FrontendConfig, Method, MockServeConfig,
                        SupervisorConfig};
+use ctcdraft::drafters::{parse_portfolio, DrafterKind};
 use ctcdraft::engine::Engine;
 use ctcdraft::metrics::RunSummary;
 use ctcdraft::runtime::Runtime;
@@ -40,6 +41,7 @@ fn main() {
         "warmup" => cmd_warmup(rest),
         "sim" => cmd_sim(rest),
         "scenbench" => cmd_scenbench(rest),
+        "specbench" => cmd_specbench(rest),
         "connbench" => cmd_connbench(rest),
         "shedreplay" => cmd_shedreplay(rest),
         "--help" | "-h" | "help" => {
@@ -71,6 +73,8 @@ fn usage() -> String {
      --scenario runs the library)\n\
      \x20 scenbench                  run every library scenario through the\n\
      \x20                            sim (BENCH_scenarios.json)\n\
+     \x20 specbench                  portfolio-vs-single-drafter sim bench\n\
+     \x20                            on spec_mixed (BENCH_portfolio.json)\n\
      \x20 connbench                  connection fan-in overhead bench\n\
      \x20                            (mock serving mode; BENCH_conn_fanin)\n\
      \x20 shedreplay                 deterministic write-queue shed replay\n\
@@ -105,6 +109,16 @@ fn engine_opts(cli: Cli) -> Cli {
              "tree-width policy: fixed (paper static budget) | adaptive \
               (β-aware: width/depth from batch size + acceptance EWMA)",
              Some("fixed"))
+        .opt("drafter-portfolio",
+             "comma list of drafters every worker instantiates \
+              (ctc|lookup|vanilla|medusa|hydra|none); the first is the \
+              primary. Empty = just --method (byte-compatible default)",
+             None)
+        .opt("spec-policy",
+             "per-slot drafter selection: fixed (every slot runs the \
+              primary) | auto (online per-sequence selection from \
+              acceptance EWMAs with hysteresis) | off (plain decode)",
+             Some("fixed"))
         .flag("no-ctc-transform", "disable the CTC transform (ablation)")
 }
 
@@ -129,6 +143,11 @@ fn build_engine_cfg(a: &ctcdraft::util::cli::Args) -> Result<EngineConfig> {
         kv_pool_positions: a.usize("kv-pool", 0),
         slo: build_slo(a),
         beta_policy: BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?,
+        drafter_portfolio: match a.get("drafter-portfolio") {
+            Some(s) => parse_portfolio(s)?,
+            None => Vec::new(),
+        },
+        spec_mode: SpecMode::parse(a.get_or("spec-policy", "fixed"))?,
         ..EngineConfig::default()
     })
 }
@@ -386,7 +405,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .opt("trace",
              "workload shape: poisson (class-tagged MT-bench arrivals) | \
               multiturn (prefix-chained conversations for the prefix-\
-              sharing cache)", Some("poisson"))
+              sharing cache) | spec_mixed (copy-heavy + chat + rejection-\
+              heavy tenants for the drafter-portfolio policy)",
+             Some("poisson"))
         .opt("scenario",
              "named scenario from the workload library (overrides --trace \
               and installs the scenario's tenant specs — token buckets, WFQ \
@@ -407,6 +428,15 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .opt("beta-policy",
              "β analog for the mock: fixed | adaptive (batch-adaptive \
               accepted-token range via adapt::BetaController)", Some("fixed"))
+        .opt("spec-policy",
+             "per-slot drafter selection (the production adapt::SpecPolicy \
+              over the mock's profile-modeled acceptance): fixed | auto | \
+              off. Non-fixed installs the portfolio and logs \
+              drafter-switch events", Some("fixed"))
+        .opt("drafter-portfolio",
+             "comma list of drafter kinds for the mock portfolio (first = \
+              primary); defaults to ctc,lookup,none when --spec-policy is \
+              not fixed", None)
         .opt("cancel-prob", "per-request cancellation probability", Some("0"))
         .opt("faults",
              "seeded fault plan: worker panics, step stalls, pool spikes and \
@@ -460,12 +490,27 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
                     a.usize("max-new", 24),
                     seed,
                 ),
-                other => bail!("unknown --trace {other} (poisson | multiturn)"),
+                "spec_mixed" => workload::spec_mixed(seed),
+                other => bail!("unknown --trace {other} \
+                                (poisson | multiturn | spec_mixed)"),
             };
             (trace, Vec::new(), a.f64("cancel-prob", 0.0))
         }
     };
     let beta = BetaPolicy::parse(a.get_or("beta-policy", "fixed"))?;
+    // drafter-portfolio policy: installed only when asked for, so default
+    // replays stay byte-identical to previous releases
+    let spec_mode = SpecMode::parse(a.get_or("spec-policy", "fixed"))?;
+    let spec_kinds = a.get("drafter-portfolio")
+        .map(|s| parse_portfolio(s))
+        .transpose()?;
+    let spec = if spec_kinds.is_some() || spec_mode != SpecMode::Fixed {
+        Some((spec_mode, spec_kinds.unwrap_or_else(|| vec![
+            DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::None,
+        ])))
+    } else {
+        None
+    };
     let share = !a.flag("no-prefix-share");
     let workers = a.usize("workers", 1);
     // A fault plan is injected through the cluster backend (it owns the
@@ -495,6 +540,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .with_policy(policy)
         .with_beta(beta)
         .with_prefix_sharing(share);
+        if let Some((mode, kinds)) = &spec {
+            backend = backend.with_spec(*mode, kinds);
+        }
         if !tenants.is_empty() {
             backend = backend.with_tenants(&tenants);
         }
@@ -512,6 +560,9 @@ fn cmd_sim(argv: &[String]) -> Result<()> {
         .with_policy(policy)
         .with_beta(beta)
         .with_prefix_sharing(share);
+        if let Some((mode, kinds)) = &spec {
+            backend = backend.with_spec(*mode, kinds);
+        }
         if !tenants.is_empty() {
             backend = backend.with_tenants(&tenants);
         }
@@ -662,6 +713,99 @@ fn cmd_scenbench(argv: &[String]) -> Result<()> {
         ("results", Json::Arr(results)),
     ]);
     let path = "BENCH_scenarios.json";
+    std::fs::write(path, format!("{doc}\n"))?;
+    eprintln!("wrote {path}");
+    Ok(())
+}
+
+// ---------------------------------------------------------------- specbench
+/// Run the `spec_mixed` workload through the scheduler sim once with the
+/// drafter portfolio in `auto` and once pinned to each portfolio member as
+/// a fixed single drafter, and emit `BENCH_portfolio.json`. The
+/// portfolio-wins invariant — the auto policy's accepted-tokens/step
+/// matches or beats every single-drafter run — is check.sh's gate on the
+/// online selector. Fully seeded: same flags produce the same JSON bytes.
+fn cmd_specbench(argv: &[String]) -> Result<()> {
+    use ctcdraft::util::json::Json;
+    let cli = Cli::new("ctcdraft specbench",
+                       "portfolio vs single-drafter sim bench")
+        .opt("seed", "trace + backend seed", Some("7"))
+        .opt("slots", "batch slots", Some("4"))
+        .opt("queue-cap", "admit-queue bound (0 = unbounded)", Some("0"))
+        .opt("pool", "KV pool positions", Some("256"))
+        .opt("drafter-portfolio",
+             "comma list of drafter kinds (first = primary)",
+             Some("ctc,lookup,none"))
+        .flag("smoke", "accepted for CI symmetry (the sim is CI-sized)");
+    let a = parse_args(cli, argv)?;
+    let seed = a.u64("seed", 7);
+    let kinds = parse_portfolio(a.get_or("drafter-portfolio",
+                                         "ctc,lookup,none"))?;
+    let policy = SloPolicy {
+        interactive_deadline: 32,
+        batch_deadline: 256,
+        batch_aging_steps: 64,
+        prefill_chunk: 8,
+    };
+    let trace = workload::spec_mixed(seed);
+    let run = |name: String, mode: SpecMode, ks: &[DrafterKind]|
+               -> Result<Json> {
+        let sim = SchedulerSim::new(SimOptions {
+            seed,
+            ..Default::default()
+        });
+        let mut backend = MockSched::new(
+            a.usize("slots", 4),
+            a.usize("queue-cap", 0),
+            a.usize("pool", 256),
+            seed,
+        )
+        .with_policy(policy)
+        .with_spec(mode, ks);
+        let report = sim.run(&mut backend, &trace)?;
+        let tokens: usize =
+            report.finished.iter().map(|o| o.token_ids.len()).sum();
+        let per_step = if report.steps == 0 {
+            0.0
+        } else {
+            tokens as f64 / report.steps as f64
+        };
+        let switches = backend
+            .spec_policy()
+            .map(|p| p.switches())
+            .unwrap_or(0);
+        eprintln!(
+            "run={name} steps={} finished={} tokens={tokens} \
+             accepted_per_step={per_step:.3} switches={switches}",
+            report.steps, report.finished.len()
+        );
+        Ok(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("mode", Json::str(mode.name())),
+            ("kinds", Json::Arr(
+                ks.iter().map(|k| Json::str(k.name())).collect())),
+            ("steps", Json::num(report.steps as f64)),
+            ("finished", Json::num(report.finished.len() as f64)),
+            ("tokens", Json::num(tokens as f64)),
+            ("accepted_tokens_per_step", Json::num(per_step)),
+            ("switches", Json::num(switches as f64)),
+        ]))
+    };
+    let mut results =
+        vec![run("portfolio(auto)".to_string(), SpecMode::Auto, &kinds)?];
+    for &k in &kinds {
+        results.push(run(format!("single({})", k.name()),
+                         SpecMode::Fixed, &[k])?);
+    }
+    let doc = Json::obj(vec![
+        ("bench", Json::str("portfolio")),
+        ("trace", Json::str("spec_mixed")),
+        ("seed", Json::num(seed as f64)),
+        ("portfolio", Json::Arr(
+            kinds.iter().map(|k| Json::str(k.name())).collect())),
+        ("results", Json::Arr(results)),
+    ]);
+    let path = "BENCH_portfolio.json";
     std::fs::write(path, format!("{doc}\n"))?;
     eprintln!("wrote {path}");
     Ok(())

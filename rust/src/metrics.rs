@@ -385,6 +385,12 @@ pub enum SchedEvent {
     /// deadline misses — the over-budget tenant degrades alone (no-spec,
     /// then admit-pause) before the cluster-wide ladder has to move.
     Tenant { step: u64, worker: usize, tenant: String, rung: &'static str },
+    /// The per-slot speculation policy switched sequence `id`'s drafter
+    /// (`from` → `to`, `DrafterKind` names). Logged only on an actual
+    /// switch, so `--spec-policy auto` replays stay auditable without
+    /// flooding the log; the selection is pure arithmetic on accepted-token
+    /// counts, so the switch sequence is byte-deterministic.
+    DrafterSwitch { step: u64, id: u64, from: &'static str, to: &'static str },
 }
 
 impl fmt::Display for SchedEvent {
@@ -441,6 +447,9 @@ impl fmt::Display for SchedEvent {
             SchedEvent::Tenant { step, worker, tenant, rung } => {
                 write!(f, "t={step} tenant-degrade name={tenant} \
                            worker={worker} rung={rung}")
+            }
+            SchedEvent::DrafterSwitch { step, id, from, to } => {
+                write!(f, "t={step} drafter-switch id={id} from={from} to={to}")
             }
         }
     }
@@ -718,11 +727,14 @@ mod tests {
             log.push(SchedEvent::Tenant {
                 step: 10, worker: 1, tenant: "noisy".into(), rung: "admit-pause",
             });
+            log.push(SchedEvent::DrafterSwitch {
+                step: 11, id: 2, from: "ctc", to: "none",
+            });
             log
         };
         let (a, b) = (mk(), mk());
         assert_eq!(a.render(), b.render());
-        assert_eq!(a.len(), 16);
+        assert_eq!(a.len(), 17);
         assert!(a.render().contains("t=6 place id=3 worker=1"));
         assert!(a.render().contains("t=6 prefix id=3 blocks=2 fork=5"));
         assert!(a.render().contains("t=4 beta batch=2 paths=8 nodes=16 depth=5"));
@@ -737,5 +749,7 @@ mod tests {
         assert!(a.render().contains("t=9 degrade worker=1 rung=no-spec"));
         assert!(a.render().contains(
             "t=10 tenant-degrade name=noisy worker=1 rung=admit-pause"));
+        assert!(a.render().contains(
+            "t=11 drafter-switch id=2 from=ctc to=none"));
     }
 }

@@ -57,7 +57,7 @@
 //!
 //!   → {"op":"generate","id":7,"prompt":"...","max_new":64,"stream":true,
 //!      "class":"interactive"|"batch","deadline_steps":N,
-//!      "tenant":"name"}
+//!      "tenant":"name","drafter":"kind","spec":"auto"|"off"}
 //!     `class` (default "interactive") and `deadline_steps` (relative, in
 //!     scheduler steps; default = the class's configured deadline) drive
 //!     SLO-aware admission. `tenant` (optional, PR 9) names the paying
@@ -67,6 +67,13 @@
 //!     tenant and an unconfigured name is interned with an open spec
 //!     (both: unlimited bucket, weight 1 — isolation is opt-in per
 //!     tenant), so the untagged protocol is byte-identical to PR 8.
+//!     `drafter` (optional, PR 10) pins this request to one drafter kind
+//!     (`ctc|lookup|vanilla|medusa|hydra|none`); a pin outside the
+//!     worker's configured portfolio answers a terminal `error`. `spec`
+//!     (optional) overrides the speculation policy per request: `auto`
+//!     (online drafter selection from per-sequence acceptance) or `off`
+//!     (plain decode). Both absent = the server's configured policy, so
+//!     the PR-9 protocol is unchanged byte-for-byte.
 //!     Reply is a frame sequence on the same
 //!     connection, ended by ONE terminal frame:
 //!     ← {"type":"queued","id":7,"pos":n,"class":"...","est_start":s}
@@ -108,6 +115,12 @@
 //!     (offered == granted + denied always) and `rung` is the tenant's
 //!     PRIVATE degradation ladder position. Untagged deployments omit the
 //!     key entirely, keeping the stats shape byte-identical to PR 8.
+//!     Once the speculation surface is live (non-default portfolio/policy
+//!     config, or any request carried a `drafter`/`spec` override), each
+//!     real-engine worker entry also carries the per-slot drafter view:
+//!        "slot_drafters":[{"id":N,"drafter":"ctc"|"lookup"|...}, ...]
+//!     — which drafter each active sequence would run this round, after
+//!     pins and policy overrides. Default deployments omit the key.
 //!
 //! Shutdown drains gracefully: in-flight and queued requests finish (new
 //! ones are rejected `busy`), drivers keep relaying frames and flushing
@@ -183,8 +196,10 @@ use anyhow::{anyhow, Context, Result};
 
 use conn::{LineAssembler, Push, WriteQueue};
 
+use crate::adapt::SpecMode;
 use crate::config::{EngineConfig, FrontendConfig, Manifest, MockServeConfig,
                     SupervisorConfig};
+use crate::drafters::DrafterKind;
 use crate::engine::{Engine, GenOutput, GenStats, Submission};
 use crate::kvcache::{PoolLease, PrefixIndex, SharedBlockPool};
 use crate::metrics::{ConnGauges, Histogram};
@@ -229,6 +244,12 @@ struct Job {
     /// tenant tag (PR 9): bucket admission + WFQ on the worker; `None`
     /// maps to the unlimited default tenant
     tenant: Option<String>,
+    /// drafter pin (PR 10): `Some` nails this request to one kind; must
+    /// be in the worker's portfolio or submission errors
+    drafter: Option<DrafterKind>,
+    /// per-request speculation-policy override (PR 10): auto/off; `None`
+    /// inherits the worker's configured mode
+    spec: Option<SpecMode>,
     resp: Sender<String>,
 }
 
@@ -632,6 +653,10 @@ struct GenCtx {
     deadline: Option<u64>,
     /// tenant tag carried through failover redispatch
     tenant: Option<String>,
+    /// drafter pin + speculation override (PR 10), carried through
+    /// failover redispatch like the tenant tag
+    drafter: Option<DrafterKind>,
+    spec: Option<SpecMode>,
     /// failover resubmissions so far (0 on first dispatch)
     attempts: u32,
 }
@@ -1135,6 +1160,28 @@ fn dispatch_line(fe: &Frontend, c: &mut Conn, line: &str, draining: bool)
                 req.get("deadline_steps").as_usize().map(|v| v as u64);
             let tenant =
                 req.get("tenant").as_str().map(|s| s.to_string());
+            let drafter = match req.get("drafter").as_str() {
+                None => None,
+                Some(s) => match DrafterKind::parse(s) {
+                    Ok(k) => Some(k),
+                    Err(e) => {
+                        return push_frame(fe, c,
+                                          error_frame(client_id,
+                                                      &format!("{e}")));
+                    }
+                },
+            };
+            let spec = match req.get("spec").as_str() {
+                None => None,
+                Some(s) => match SpecMode::parse(s) {
+                    Ok(m) => Some(m),
+                    Err(e) => {
+                        return push_frame(fe, c,
+                                          error_frame(client_id,
+                                                      &format!("{e}")));
+                    }
+                },
+            };
             start_generate(fe, c, GenCtx {
                 client_id,
                 prompt,
@@ -1143,6 +1190,8 @@ fn dispatch_line(fe: &Frontend, c: &mut Conn, line: &str, draining: bool)
                 class,
                 deadline,
                 tenant,
+                drafter,
+                spec,
                 attempts: 0,
             })
         }
@@ -1184,6 +1233,8 @@ fn start_generate(fe: &Frontend, c: &mut Conn, ctx: GenCtx) -> bool {
         class: ctx.class,
         deadline: ctx.deadline,
         tenant: ctx.tenant.clone(),
+        drafter: ctx.drafter,
+        spec: ctx.spec,
         resp: rtx,
     }));
     if sent.is_err() {
@@ -1317,6 +1368,22 @@ fn worker_stats_json(engine: &Engine) -> String {
             .collect();
         fields.push(("tenants", Json::Obj(tenants)));
     }
+    // per-slot speculation view (PR 10): the drafter each active sequence
+    // would run this round, after pins and policy overrides. Gated like
+    // the tenant breakdown — emitted only once the spec surface is live
+    // (non-default portfolio/policy config or a request-level override) —
+    // so default deployments keep the prior stats shape unchanged.
+    if engine.spec_surfaced() {
+        let slots: Vec<Json> = engine
+            .slot_drafters()
+            .into_iter()
+            .map(|(id, kind)| Json::obj(vec![
+                ("id", Json::num(id as f64)),
+                ("drafter", Json::str(kind)),
+            ]))
+            .collect();
+        fields.push(("slot_drafters", Json::Arr(slots)));
+    }
     Json::obj(fields).to_string()
 }
 
@@ -1329,9 +1396,9 @@ fn handle_worker_msg(engine: &mut Engine, pending: &mut HashMap<u64, Pending>,
                 return;
             }
             let prompt = engine.format_prompt(&job.prompt);
-            match engine.submit_tenant(&prompt, job.max_new, job.class,
-                                       job.deadline,
-                                       job.tenant.as_deref()) {
+            match engine.submit_spec(&prompt, job.max_new, job.class,
+                                     job.deadline, job.tenant.as_deref(),
+                                     job.drafter, job.spec) {
                 Ok(Submission::Admitted(id)) => {
                     pending.insert(id, Pending {
                         client_id: job.client_id,
@@ -2253,11 +2320,22 @@ mod tests {
             ("prompt", Json::str("hello")),
             ("max_new", Json::num(16.0)),
             ("stream", Json::bool(true)),
+            ("drafter", Json::str("lookup")),
+            ("spec", Json::str("auto")),
         ]);
         let v = parse(&req.to_string()).unwrap();
         assert_eq!(v.get("op").as_str(), Some("generate"));
         assert_eq!(v.get("max_new").as_usize(), Some(16));
         assert_eq!(v.get("stream").as_bool(), Some(true));
+        // PR 10 wire fields round-trip and parse to the typed enums
+        use crate::adapt::SpecMode;
+        use crate::drafters::DrafterKind;
+        let pin = DrafterKind::parse(v.get("drafter").as_str().unwrap());
+        assert_eq!(pin.unwrap(), DrafterKind::Lookup);
+        let mode = SpecMode::parse(v.get("spec").as_str().unwrap());
+        assert_eq!(mode.unwrap(), SpecMode::Auto);
+        assert!(DrafterKind::parse("warp-drive").is_err());
+        assert!(SpecMode::parse("sometimes").is_err());
     }
 
     #[test]

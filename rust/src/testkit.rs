@@ -16,7 +16,9 @@ use anyhow::Result;
 
 use std::sync::Arc;
 
-use crate::adapt::{BetaController, BetaPolicy, DraftPlan};
+use crate::adapt::{BetaController, BetaPolicy, DraftPlan, SpecMode,
+                   SpecPolicy, SpecState};
+use crate::drafters::DrafterKind;
 use crate::engine::{Engine, GenOutput, GenStats, StepReport, Submission,
                     TokenDelta};
 use crate::kvcache::{PoolLease, PrefixHit, PrefixIndex, SharedBlockPool};
@@ -525,6 +527,52 @@ impl SchedulerSim {
 
 // ------------------------------------------------------ mock backend
 
+/// Workload shape a mock sequence emulates when a `SpecPolicy` is
+/// installed (`with_spec`). The profile decides how many tokens each
+/// drafter kind gets accepted per round, so the online selector has a
+/// real signal to learn from: copy-heavy output rewards the lookup
+/// drafter, chat rewards the model drafters, and rejection-heavy output
+/// rewards nobody (plain decode is optimal). Without a spec policy the
+/// profile is inert and the legacy 1..=width draw runs unchanged.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MockProfile {
+    CopyHeavy,
+    Chat,
+    RejectionHeavy,
+}
+
+/// Profile from the tenant tag: names containing `copy` model prompt-echo
+/// workloads, `reject`/`adversar` model adversarial output that defeats
+/// every drafter, everything else (including untagged) is chat.
+pub fn mock_profile(tenant: Option<&str>) -> MockProfile {
+    match tenant {
+        Some(n) if n.contains("copy") => MockProfile::CopyHeavy,
+        Some(n) if n.contains("reject") || n.contains("adversar") => {
+            MockProfile::RejectionHeavy
+        }
+        _ => MockProfile::Chat,
+    }
+}
+
+/// Seeded accepted-tokens draw for one decode round of `profile` under
+/// drafter `kind` — the mock's stand-in for draft/verify agreement.
+/// Non-speculative kinds always accept exactly the one base-model token.
+fn mock_accept(profile: MockProfile, kind: DrafterKind,
+               rng: &mut Rng) -> usize {
+    if !kind.is_speculative() {
+        return 1;
+    }
+    match (profile, kind) {
+        (MockProfile::CopyHeavy, DrafterKind::Lookup) => 3 + rng.below(4),
+        (MockProfile::CopyHeavy, _) => 2 + rng.below(2),
+        (MockProfile::Chat, DrafterKind::Lookup) => {
+            1 + usize::from(rng.below(5) == 0)
+        }
+        (MockProfile::Chat, _) => 2 + rng.below(2),
+        (MockProfile::RejectionHeavy, _) => 1,
+    }
+}
+
 struct MockSeq {
     id: u64,
     prompt_len: usize,
@@ -548,6 +596,10 @@ struct MockSeq {
     rng: Rng,
     /// interned tenant id (slot 0 = the default tenant)
     tenant: u32,
+    /// workload shape for the spec-policy acceptance model
+    profile: MockProfile,
+    /// per-slot drafter-selection state (`Some` iff a policy is installed)
+    spec: Option<SpecState>,
 }
 
 impl MockSeq {
@@ -576,6 +628,11 @@ struct MockReq {
     enq_step: u64,
     /// interned tenant id (slot 0 = the default tenant)
     tenant: u32,
+    /// workload shape for the spec-policy acceptance model
+    profile: MockProfile,
+    /// eviction-carryover drafter-selection state (learning survives a
+    /// preemption, exactly like the engine's `QueuedReq::spec`)
+    spec: Option<SpecState>,
 }
 
 impl MockReq {
@@ -639,6 +696,12 @@ pub struct MockSched {
     /// fixed 1..=4 draw — so `--beta-policy adaptive` replays exercise the
     /// exact production controller, deterministically, without artifacts
     beta: Option<BetaController>,
+    /// drafter-portfolio policy (`with_spec`): the exact production
+    /// `adapt::SpecPolicy` the engine runs, owning the β controller —
+    /// per-slot drafter selection replays deterministically without
+    /// artifacts. Mutually exclusive with `beta` (`with_spec` absorbs an
+    /// installed controller).
+    spec: Option<SpecPolicy>,
     last_plan: Option<DraftPlan>,
     /// observed admission rate (deadline-aware queued/busy estimates)
     admit_rate: AdmitRate,
@@ -705,6 +768,7 @@ impl MockSched {
             pool: lease,
             policy: SloPolicy::default(),
             beta: None,
+            spec: None,
             last_plan: None,
             admit_rate: AdmitRate::default(),
             index: PrefixIndex::counting(1),
@@ -778,6 +842,26 @@ impl MockSched {
         let (paths, nodes, len) = MOCK_BETA_BASE;
         self.beta = Some(BetaController::new(policy, paths, nodes, len));
         self
+    }
+
+    /// Install a drafter-portfolio policy (the same `adapt::SpecPolicy`
+    /// the engine runs): per-slot drafter selection with acceptance
+    /// modeled by each sequence's `MockProfile`. Absorbs a previously
+    /// installed β controller (`with_beta`), else builds one on the mock's
+    /// static budget. `kinds[0]` is the primary (Fixed-mode) drafter.
+    pub fn with_spec(mut self, mode: SpecMode,
+                     kinds: &[DrafterKind]) -> Self {
+        let (paths, nodes, len) = MOCK_BETA_BASE;
+        let beta = self.beta.take().unwrap_or_else(|| {
+            BetaController::new(BetaPolicy::Fixed, paths, nodes, len)
+        });
+        self.spec = Some(SpecPolicy::new(beta, mode, kinds.to_vec()));
+        self
+    }
+
+    /// The installed spec policy, if any (switch-count assertions).
+    pub fn spec_policy(&self) -> Option<&SpecPolicy> {
+        self.spec.as_ref()
     }
 
     /// Toggle prefix sharing (the radix prompt index mirroring the
@@ -872,6 +956,12 @@ impl MockSched {
             Some(r) => r,
             None => self.rng.fork(id),
         };
+        // per-slot drafter state: eviction carryover when present, else a
+        // fresh state from the policy (mirrors Engine::admit_req)
+        let spec = match req.spec {
+            Some(s) => Some(s),
+            None => self.spec.as_ref().map(|p| p.new_state(None, None)),
+        };
         // recompute-style: an evicted request re-prefills prompt+produced —
         // minus the positions the index served
         let prefill_total = if self.policy.prefill_chunk == 0 {
@@ -895,6 +985,8 @@ impl MockSched {
             steps: req.steps,
             rng,
             tenant: req.tenant,
+            profile: req.profile,
+            spec,
         });
         let waited = self.step_no.saturating_sub(req.enq_step);
         self.admit_rate.observe_admission(self.step_no, waited);
@@ -1065,6 +1157,8 @@ impl MockSched {
             rng: Some(seq.rng),
             enq_step: self.step_no,
             tenant: seq.tenant,
+            profile: seq.profile,
+            spec: seq.spec,
         });
         self.events.push(SchedEvent::Evicted { step: self.step_no, id, gen_len });
         id
@@ -1108,6 +1202,10 @@ impl MockSched {
                     rng: None,
                     enq_step: self.step_no,
                     tenant: seq.tenant,
+                    profile: seq.profile,
+                    // failover replays from the prompt on another worker:
+                    // drafter-selection evidence resets with the tokens
+                    spec: None,
                 });
             }
         }
@@ -1115,6 +1213,7 @@ impl MockSched {
             r.produced.clear();
             r.steps = 0;
             r.rng = None;
+            r.spec = None;
             rescued.push(r);
         }
         rescued.sort_by_key(|r| r.id);
@@ -1155,6 +1254,9 @@ impl MockSched {
     /// controller, when one is installed. A plan change shows up in the
     /// event log as the usual `beta` line.
     pub fn set_force_plain(&mut self, on: bool) {
+        if let Some(spec) = self.spec.as_mut() {
+            spec.force_plain(on);
+        }
         if let Some(beta) = self.beta.as_mut() {
             beta.force_plain(on);
         }
@@ -1226,6 +1328,8 @@ impl SchedBackend for MockSched {
             rng: None,
             enq_step: self.step_no,
             tenant: t,
+            profile: mock_profile(tenant),
+            spec: None,
         };
         if self.wait_queue.is_empty()
             && self.has_free_slot()
@@ -1340,10 +1444,17 @@ impl SchedBackend for MockSched {
             .flatten()
             .filter(|s| s.prefill_left == 0)
             .count();
-        let width = match (decode_ready, self.beta.as_ref()) {
-            (0, _) | (_, None) => 4,
-            (batch, Some(beta)) => {
-                let plan = beta.plan(batch);
+        let plan = match decode_ready {
+            0 => None,
+            batch => match (&self.spec, &self.beta) {
+                (Some(p), _) => Some((batch, p.plan(batch))),
+                (None, Some(b)) => Some((batch, b.plan(batch))),
+                (None, None) => None,
+            },
+        };
+        let width = match plan {
+            None => 4,
+            Some((batch, plan)) => {
                 if self.last_plan != Some(plan) {
                     self.events.push(SchedEvent::Beta {
                         step: self.step_no,
@@ -1363,17 +1474,47 @@ impl SchedBackend for MockSched {
             if seq.prefill_left > 0 {
                 continue;
             }
-            let draw = 1 + seq.rng.below(width);
             // per-tenant no-spec: a degraded tenant decodes plain — one
-            // token per round — while its co-tenants keep full speculation;
-            // the RNG draw still happens so recovery replays identically
+            // token per round — while its co-tenants keep full speculation
             let nospec = self
                 .tenant_ladders
                 .get(&seq.tenant)
                 .map(|l| l.rung() >= Rung::NoSpec)
                 .unwrap_or(false);
-            let k = (if nospec { 1 } else { draw })
-                .min(seq.max_new - seq.produced.len());
+            let k = if let Some(pol) = self.spec.as_mut() {
+                // portfolio path: resolve the slot's drafter, draw the
+                // profile-modeled acceptance, and feed the round back
+                // through the production policy — which may switch the
+                // slot's drafter, logged exactly like the engine
+                let st = seq
+                    .spec
+                    .get_or_insert_with(|| pol.new_state(None, None));
+                let kind = if nospec {
+                    DrafterKind::None
+                } else {
+                    pol.resolve(st)
+                };
+                let drawn = mock_accept(seq.profile, kind, &mut seq.rng);
+                let k = drawn
+                    .min(width)
+                    .max(1)
+                    .min(seq.max_new - seq.produced.len());
+                if let Some((from, to)) = pol.observe(st, k) {
+                    self.events.push(SchedEvent::DrafterSwitch {
+                        step: self.step_no,
+                        id: seq.id,
+                        from: from.name(),
+                        to: to.name(),
+                    });
+                }
+                k
+            } else {
+                // legacy draw — the RNG advances even under per-tenant
+                // no-spec so recovery replays identically
+                let draw = 1 + seq.rng.below(width);
+                (if nospec { 1 } else { draw })
+                    .min(seq.max_new - seq.produced.len())
+            };
             let mut delta = TokenDelta { id: seq.id, tokens: Vec::new() };
             for _ in 0..k {
                 let tok = seq.rng.below(1000) as i32;
@@ -1702,6 +1843,19 @@ impl MockCluster {
             .workers
             .into_iter()
             .map(|m| m.with_beta(policy))
+            .collect();
+        self
+    }
+
+    /// Install the drafter-portfolio policy on every worker (each runs a
+    /// private `adapt::SpecPolicy` over the same portfolio, exactly like
+    /// per-engine policies in the real cluster).
+    pub fn with_spec(mut self, mode: SpecMode,
+                     kinds: &[DrafterKind]) -> Self {
+        self.workers = self
+            .workers
+            .into_iter()
+            .map(|m| m.with_spec(mode, kinds))
             .collect();
         self
     }

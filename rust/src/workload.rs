@@ -641,6 +641,36 @@ pub fn scenario(name: &str, seed: u64) -> Option<Scenario> {
     }
 }
 
+// ------------------------------------------------- speculation workload
+
+/// Mixed speculation workload for the drafter-portfolio policy: three
+/// tenants whose names drive `testkit::mock_profile` — `copybot`
+/// (prompt-echo output that rewards the lookup drafter), `chat` (model-
+/// drafter friendly), and `rejector` (adversarial output that defeats
+/// every drafter, where plain decode wins). Budgets are clamped into
+/// [48, 64] tokens so the online selector has room to converge within one
+/// sequence, and deadlines are generous — this trace measures speculation
+/// quality, not SLO pressure. Standalone (NOT in `SCENARIOS`; the frozen
+/// library list is gated by check.sh): run via
+/// `ctcdraft sim --trace spec_mixed` or `ctcdraft specbench`.
+pub fn spec_mixed(seed: u64) -> Trace {
+    let s = seed ^ 0x5BEC_317E;
+    let copy = Trace::poisson_with_rate(mtbench(2, s), 56, 3.0, s)
+        .tagged("copybot");
+    let chat = Trace::poisson_with_rate(
+        mtbench(2, s.wrapping_add(1)), 56, 3.0, s.wrapping_add(1))
+        .tagged("chat");
+    let reject = Trace::poisson_with_rate(
+        gsm8k(12, s.wrapping_add(2)), 56, 4.0, s.wrapping_add(2))
+        .tagged("rejector");
+    let mut trace = Trace::merge(vec![copy, chat, reject]);
+    for e in &mut trace.entries {
+        e.max_new = e.max_new.clamp(48, 64);
+        e.deadline_steps = Some(4096);
+    }
+    trace
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -868,6 +898,34 @@ mod tests {
             }), "{name}: seed is ignored");
         }
         assert!(scenario("no_such_scenario", 7).is_none());
+    }
+
+    #[test]
+    fn spec_mixed_covers_all_three_profiles_with_room_to_converge() {
+        let a = spec_mixed(7);
+        let b = spec_mixed(7);
+        assert!(a.entries.iter().zip(&b.entries).all(|(x, y)| {
+            x.arrival_step == y.arrival_step
+                && x.question.text == y.question.text
+                && x.max_new == y.max_new
+                && x.tenant == y.tenant
+        }), "spec_mixed double build diverged");
+        assert!(a.entries.windows(2)
+            .all(|w| w[0].arrival_step <= w[1].arrival_step));
+        for t in ["copybot", "chat", "rejector"] {
+            assert!(a.entries.iter()
+                        .any(|e| e.tenant.as_deref() == Some(t)),
+                    "missing tenant {t}");
+        }
+        // every sequence gets enough rounds for the selector's dwell
+        // windows (rejection-heavy needs ~35 plain rounds to demote)
+        assert!(a.entries.iter()
+            .all(|e| (48..=64).contains(&e.max_new)));
+        assert!(spec_mixed(8).entries.iter().zip(&a.entries)
+            .any(|(x, y)| x.arrival_step != y.arrival_step
+                || x.question.text != y.question.text));
+        // not part of the frozen scenario library
+        assert!(!SCENARIOS.contains(&"spec_mixed"));
     }
 
     #[test]

@@ -41,6 +41,14 @@
 //! outside the Rust allocator's jurisdiction, so their one host→literal
 //! copy per call remains the documented boundary cost.
 //!
+//! PR 10 extends it to the drafter portfolio: a steady-state lookup-
+//! drafter round (suffix n-gram search over prompt+generated history into
+//! the PathSet arena via `drafters::lookup_into`) plus the per-slot
+//! speculation-policy arithmetic (`SpecPolicy::resolve`/`observe`,
+//! including an actual hysteresis-crossing drafter switch) must also be
+//! allocation-free — drafter selection is pure f64 scoring over
+//! fixed-size per-sequence state, never a heap structure.
+//!
 //! This binary holds exactly one #[test]: the allocation counters are
 //! process-global, so a concurrently running test would pollute the
 //! measurement.
@@ -281,6 +289,61 @@ fn steady_state_host_round_allocates_zero_bytes() {
     std::hint::black_box(fsink);
     assert_eq!(used.calls, 0,
                "steady-state literal staging made {} allocation calls \
+                ({} bytes)", used.calls, used.bytes);
+    assert_eq!(used.bytes, 0);
+
+    // --- speculation-policy gate (PR 10): a steady-state lookup-drafter
+    // round (suffix n-gram search over prompt+gen into a warm PathSet
+    // arena) plus the full per-slot policy step — resolve the slot's
+    // drafter, observe the round's acceptance, re-select under dwell +
+    // hysteresis — is pure integer/f64 work over pre-owned scratch and
+    // must allocate nothing, even across actual drafter SWITCHES. The
+    // observed acceptance alternates generous/starved phases so the
+    // per-kind scores really cross the hysteresis band (and demote to
+    // no-speculation) inside the measured region.
+    use ctcdraft::adapt::{BetaController, BetaPolicy, SpecMode, SpecPolicy,
+                          SpecState};
+    use ctcdraft::drafters::{lookup_into, DrafterKind};
+    fn spec_round(policy: &mut SpecPolicy, state: &mut SpecState,
+                  prompt: &[i32], gen: &[i32], out: &mut PathSet,
+                  r: usize) -> usize {
+        out.clear();
+        lookup_into(prompt, gen, 3, 8, 6, out);
+        let kind = policy.resolve(state);
+        let accepted = if (r / 40) % 2 == 0 { 5 } else { 1 };
+        let switched =
+            usize::from(policy.observe(state, accepted).is_some());
+        // low byte: data sink; bit 8: switch marker for the caller
+        (out.len() + kind.idx()) | (switched << 8)
+    }
+    let lk_prompt: Vec<i32> = (0..96).map(|i| (i * 7 % 23) as i32).collect();
+    let lk_gen: Vec<i32> = (0..48).map(|i| (i * 7 % 23) as i32).collect();
+    let mut lk_out = PathSet::with_capacity(8, 6);
+    let mut policy = SpecPolicy::new(
+        BetaController::new(BetaPolicy::Fixed, 7, 8, 8),
+        SpecMode::Auto,
+        vec![DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::None]);
+    let mut state = policy.new_state(None, None);
+    let mut ssink = 0usize;
+    for r in 0..8 {
+        ssink ^= spec_round(&mut policy, &mut state, &lk_prompt, &lk_gen,
+                            &mut lk_out, r) & 0xff;
+    }
+    let start = alloc::snapshot();
+    let mut switches = 0usize;
+    for r in 8..208 {
+        let v = spec_round(&mut policy, &mut state, &lk_prompt, &lk_gen,
+                           &mut lk_out, r);
+        switches += v >> 8;
+        ssink ^= v & 0xff;
+    }
+    let used = alloc::delta(start);
+    std::hint::black_box(ssink);
+    assert!(!lk_out.is_empty(), "lookup drafter found no n-gram match");
+    assert!(switches >= 1,
+            "policy never crossed hysteresis in the measured region");
+    assert_eq!(used.calls, 0,
+               "lookup round + policy switch made {} allocation calls \
                 ({} bytes)", used.calls, used.bytes);
     assert_eq!(used.bytes, 0);
 }

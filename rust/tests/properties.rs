@@ -1353,6 +1353,69 @@ fn prop_noisy_tenant_never_starves() {
     });
 }
 
+/// PR-10 tentpole property: the speculation policy is pure arithmetic on
+/// observed per-sequence acceptance — no clocks, no extra RNG draws — so
+/// the same seed and trace must replay the exact same drafter-switch
+/// sequence (and the whole event log), twice in a row, on both the
+/// single-worker backend and the 2-worker shared-pool cluster.
+#[test]
+fn prop_policy_switch_deterministic() {
+    use ctcdraft::adapt::SpecMode;
+    use ctcdraft::drafters::DrafterKind;
+    use ctcdraft::testkit::{MockCluster, MockSched, SchedulerSim,
+                            SimOptions};
+    use ctcdraft::workload;
+    Prop::new("policy_switch_determinism").check(|rng| {
+        let seed = rng.next_u64();
+        let slots = 2 + rng.below(3);
+        let workers = 1 + rng.below(2);
+        let kinds =
+            [DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::None];
+        let run = || {
+            let trace = workload::spec_mixed(seed);
+            let sim = SchedulerSim::new(SimOptions {
+                seed,
+                ..Default::default()
+            });
+            if workers > 1 {
+                let mut be =
+                    MockCluster::new(workers, slots, 0, 100_000, seed)
+                        .with_spec(SpecMode::Auto, &kinds);
+                sim.run(&mut be, &trace).map_err(|e| e.to_string())
+            } else {
+                let mut be = MockSched::new(slots, 0, 100_000, seed)
+                    .with_spec(SpecMode::Auto, &kinds);
+                sim.run(&mut be, &trace).map_err(|e| e.to_string())
+            }
+        };
+        let (a, b) = (run()?, run()?);
+        if a.event_log != b.event_log {
+            return Err(format!(
+                "event logs diverged: seed={seed} slots={slots} \
+                 workers={workers}"));
+        }
+        let switches = |log: &str| -> Vec<String> {
+            log.lines()
+                .filter(|l| l.contains(" drafter-switch id="))
+                .map(String::from)
+                .collect()
+        };
+        let (sa, sb) = (switches(&a.event_log), switches(&b.event_log));
+        if sa != sb {
+            return Err(format!(
+                "switch sequences diverged: seed={seed} workers={workers}"));
+        }
+        // every spec_mixed sequence outlives the dwell gate, so the auto
+        // policy must re-select at least once per run
+        if sa.is_empty() {
+            return Err(format!(
+                "auto policy never switched: seed={seed} slots={slots} \
+                 workers={workers}"));
+        }
+        Ok(())
+    });
+}
+
 #[test]
 fn prop_kvcache_append_preserves_earlier_rows() {
     use ctcdraft::kvcache::SeqCache;

@@ -440,6 +440,76 @@ fn adaptive_beta_mock_replays_and_differs_from_fixed() {
     assert!(f.beta_hist.keys().all(|&k| k <= 8));
 }
 
+/// Speculation-policy tentpole scenario (PR 10): under `--spec-policy
+/// auto` over a mixed trace, the rejection-heavy tenant's sequences must
+/// demote all the way to no-speculation — observable as `drafter-switch`
+/// events ending at `to=none` in the canonical log — while the whole
+/// schedule stays byte-for-byte replayable. A backend without the policy
+/// must keep the legacy (PR 9) schedule: no switch events, different log.
+#[test]
+fn spec_auto_demotes_rejection_heavy_to_none_and_replays() {
+    use ctcdraft::adapt::SpecMode;
+    use ctcdraft::drafters::DrafterKind;
+    let kinds =
+        [DrafterKind::Ctc, DrafterKind::Lookup, DrafterKind::None];
+    let mk = |spec: bool| {
+        let trace = workload::spec_mixed(41);
+        let mut backend = MockSched::new(4, 0, 100_000, 41);
+        if spec {
+            backend = backend.with_spec(SpecMode::Auto, &kinds);
+        }
+        SchedulerSim::new(SimOptions { seed: 41, ..Default::default() })
+            .run(&mut backend, &trace)
+            .expect("sim run")
+    };
+    let a = mk(true);
+    let b = mk(true);
+    assert!(!a.event_log.is_empty());
+    assert_eq!(a.event_log, b.event_log,
+               "spec-policy sim must replay byte-for-byte");
+    assert_eq!(a.per_request_steps, b.per_request_steps);
+    assert!(a.event_log.contains(" drafter-switch id="),
+            "auto policy never re-selected a drafter:\n{}", a.event_log);
+    assert!(a.event_log.contains(" to=none"),
+            "rejection-heavy sequences never demoted to no-speculation:\n{}",
+            a.event_log);
+    // per-sequence policy: at least one sequence must ALSO settle on the
+    // lookup drafter (the copy-heavy tenant), proving choices diverge
+    // across slots rather than moving in lockstep
+    assert!(a.event_log.contains(" to=lookup"),
+            "no sequence ever selected the lookup drafter:\n{}", a.event_log);
+    let plain = mk(false);
+    assert!(!plain.event_log.contains("drafter-switch"),
+            "a backend without the policy logged drafter switches");
+    assert_ne!(a.event_log, plain.event_log,
+               "the auto policy must actually change the schedule");
+}
+
+/// PR-10 backward-compat contract, in the style of the untagged-tenant
+/// test below: a backend that never opts into the speculation policy
+/// replays the exact legacy schedule — same RNG draw sequence, no
+/// `drafter-switch` events, no spec state — even on a trace whose tenant
+/// names would drive the policy hard if it were installed.
+#[test]
+fn spec_less_backends_keep_the_legacy_schedule() {
+    let trace = workload::spec_mixed(43);
+    let run = || {
+        let mut be = MockSched::new(2, 4, 4096, 43);
+        SchedulerSim::new(SimOptions { seed: 43, ..Default::default() })
+            .run(&mut be, &trace)
+            .expect("sim run")
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.event_log, b.event_log);
+    assert!(!a.event_log.contains("drafter-switch"),
+            "spec-less backend grew policy events");
+    // the legacy mock draw is 1 + rng.below(4) without a β controller:
+    // the histogram must stay inside that envelope (the policy's profile-
+    // shaped draws reach 6)
+    assert!(a.beta_hist.keys().all(|&k| (1..=4).contains(&k)));
+}
+
 /// Randomized determinism over class-tagged traces with chunked prefill,
 /// aging, and cancellations — any config must replay identically.
 #[test]
